@@ -1,0 +1,95 @@
+//! Tour of xGR's design space on the cluster-scale simulator: walks the
+//! Fig 18 ablation axes (filtering, graph dispatch, multi-stream,
+//! overlap) plus beam width and hardware profile, printing the latency
+//! impact of each choice.
+//!
+//!     cargo run --release --example ablation_tour [-- --rps 150 --requests 1500]
+
+use xgr::config::{HardwareProfile, ModelSpec, ServingConfig};
+use xgr::metrics::{Row, Table};
+use xgr::simulator::{calibrate, simulate, DesConfig, EngineKind};
+use xgr::util::cli::Args;
+use xgr::workload::AmazonLike;
+
+fn main() {
+    let args = Args::from_env();
+    let rps = args.f64_or("rps", 150.0);
+    let n = args.usize_or("requests", 1500);
+    let model = ModelSpec::onerec_0_1b();
+    let hw = HardwareProfile::ascend_910b();
+    let bw = args.usize_or("bw", 128);
+    let host = calibrate::calibrate(bw, bw, model.vocab.min(2048), 1);
+    let trace = AmazonLike::for_seq_bucket(model.seq).generate_lengths(n, rps, 42);
+
+    let mk = |f: &dyn Fn(&mut ServingConfig)| {
+        let mut serving = ServingConfig::default();
+        serving.beam_width = bw;
+        serving.top_k = bw;
+        f(&mut serving);
+        DesConfig {
+            hw: hw.clone(),
+            model: model.clone(),
+            serving,
+            engine: EngineKind::Xgr,
+            host,
+        }
+    };
+
+    let variants: Vec<(&str, DesConfig)> = vec![
+        ("full xGR", mk(&|_| {})),
+        ("- multi_stream", mk(&|s| s.features.multi_stream = false)),
+        ("- graph_dispatch", mk(&|s| s.features.graph_dispatch = false)),
+        ("- overlap", mk(&|s| s.features.overlap = false)),
+        ("- valid_filter", mk(&|s| s.features.valid_filter = false)),
+        ("baseline sched", mk(&|s| {
+            s.features.multi_stream = false;
+            s.features.graph_dispatch = false;
+            s.features.overlap = false;
+        })),
+    ];
+
+    let mut table = Table::new(format!(
+        "ablation tour — {} on {}, BW={bw}, {:.0} rps",
+        model.name, hw.name, rps
+    ));
+    for (name, cfg) in variants {
+        let r = simulate(&trace, &cfg);
+        table.push(
+            Row::new(name)
+                .col("mean_ms", r.mean_ms())
+                .col("p99_ms", r.p99_ms())
+                .col("thru_rps", r.throughput_rps())
+                .col("batches", r.batches as f64)
+                .col("peak_kv_gb", r.peak_kv_bytes as f64 / 1e9),
+        );
+    }
+    table.emit();
+
+    // beam-width sweep at fixed load, xGR vs the baselines
+    let mut table2 = Table::new("beam-width sweep (same load)");
+    for bw in [128usize, 256, 512] {
+        for engine in
+            [EngineKind::Xgr, EngineKind::XllmLike, EngineKind::VllmLike]
+        {
+            let host = calibrate::analytic(bw, bw, model.vocab);
+            let mut serving = ServingConfig::default();
+            serving.beam_width = bw;
+            serving.top_k = bw;
+            let cfg = DesConfig {
+                hw: hw.clone(),
+                model: model.clone(),
+                serving,
+                engine,
+                host,
+            };
+            let r = simulate(&trace, &cfg);
+            table2.push(
+                Row::new(format!("{}@bw{}", engine.name(), bw))
+                    .col("mean_ms", r.mean_ms())
+                    .col("p99_ms", r.p99_ms())
+                    .col("slo_ok", if r.meets_slo(200.0) { 1.0 } else { 0.0 }),
+            );
+        }
+    }
+    table2.emit();
+}

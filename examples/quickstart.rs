@@ -1,0 +1,89 @@
+//! Quickstart: serve a handful of recommendation requests end-to-end.
+//!
+//! Uses the real AOT-compiled onerec-tiny model when `artifacts/` exists
+//! (run `make artifacts` once), otherwise falls back to the mock executor
+//! so the example always runs.
+//!
+//!     cargo run --release --example quickstart
+
+use std::sync::Arc;
+use std::time::Duration;
+use xgr::config::{ModelSpec, ServingConfig};
+use xgr::coordinator::{Coordinator, EngineConfig, ExecutorFactory, RecRequest};
+use xgr::itemspace::{Catalog, ItemTrie};
+use xgr::runtime::{Manifest, MockExecutor, PjrtEngine};
+use xgr::util::{fmt_ns, now_ns};
+
+fn main() -> xgr::Result<()> {
+    // 1. model: real artifacts if present, mock otherwise
+    let artifacts = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    let (spec, factory): (ModelSpec, ExecutorFactory) =
+        match Manifest::load(&artifacts, "onerec-tiny") {
+            Ok(m) => {
+                println!("using real HLO artifacts from {artifacts}");
+                let dir = artifacts.clone();
+                (m.model, Arc::new(move || {
+                    Ok(Box::new(PjrtEngine::load(&dir, "onerec-tiny", "decode")?) as _)
+                }))
+            }
+            Err(_) => {
+                println!("artifacts not found — using the mock executor");
+                let mut s = ModelSpec::onerec_tiny();
+                s.vocab = 256;
+                let s2 = s.clone();
+                (s, Arc::new(move || Ok(Box::new(MockExecutor::new(s2.clone())) as _)))
+            }
+        };
+
+    // 2. item space: a synthetic semantic-ID catalog + validity trie
+    let catalog = Catalog::generate(spec.vocab as u32, spec.vocab * 8, 1);
+    let trie = Arc::new(ItemTrie::build(&catalog));
+    println!(
+        "catalog: {} items over vocab {} (density {:.2e})",
+        catalog.len(),
+        spec.vocab,
+        catalog.density()
+    );
+
+    // 3. start the three-tier coordinator (2 streams)
+    let mut serving = ServingConfig::default();
+    serving.num_streams = 2;
+    let coord =
+        Coordinator::start(&serving, EngineConfig::default(), trie.clone(), factory)?;
+
+    // 4. submit a few "user history" prompts built from real catalog items
+    let mut rng = xgr::util::rng::Pcg::new(42);
+    for id in 0..5u64 {
+        let n_items = 4 + id as usize;
+        let mut tokens = Vec::new();
+        for _ in 0..n_items {
+            tokens.extend_from_slice(&catalog.sample_item(&mut rng));
+        }
+        coord
+            .submit_blocking(RecRequest { id, tokens, arrival_ns: now_ns() })
+            .ok();
+    }
+
+    // 5. collect recommendations
+    for _ in 0..5 {
+        let r = coord
+            .recv_timeout(Duration::from_secs(30))
+            .expect("response");
+        println!(
+            "request {} ({}): top items:",
+            r.id,
+            fmt_ns(r.latency_ns)
+        );
+        for (item, score) in r.items.iter().take(3) {
+            println!(
+                "    {:?} score={score:.3} valid={}",
+                item,
+                trie.contains(*item)
+            );
+        }
+        assert_eq!(r.valid_items, r.items.len(), "filtering guarantees validity");
+    }
+    coord.shutdown();
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,94 @@
+//! Baseline comparison on a bursty JD-like trace (real engines, tiny
+//! model): xGR vs the vLLM-like and xLLM-like baseline configurations of
+//! the same coordinator, printing one table row each.
+//!
+//!     cargo run --release --example trace_replay [-- --requests 80 --rps 40 --mock]
+
+use std::sync::Arc;
+use xgr::baselines;
+use xgr::config::{ModelSpec, ServingConfig};
+use xgr::coordinator::{Coordinator, EngineConfig, ExecutorFactory};
+use xgr::itemspace::{Catalog, ItemTrie};
+use xgr::metrics::{Row, Table};
+use xgr::runtime::{Manifest, MockExecutor, PjrtEngine};
+use xgr::server::replay_trace;
+use xgr::util::cli::Args;
+use xgr::workload::JdTraceLike;
+
+fn main() -> xgr::Result<()> {
+    let args = Args::from_env();
+    let artifacts = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    let n = args.usize_or("requests", 80);
+    let rps = args.f64_or("rps", 40.0);
+    let use_mock = args.flag("mock")
+        || Manifest::load(&artifacts, "onerec-tiny").is_err();
+
+    let spec = if use_mock {
+        let mut s = ModelSpec::onerec_tiny();
+        s.vocab = 256;
+        s
+    } else {
+        Manifest::load(&artifacts, "onerec-tiny")?.model
+    };
+    let catalog = Catalog::generate(spec.vocab as u32, spec.vocab * 8, 7);
+    let trie = Arc::new(ItemTrie::build(&catalog));
+    let trace = JdTraceLike::for_seq_bucket(spec.seq).generate(&catalog, n, rps, 7);
+    println!(
+        "JD-like bursty trace: {} requests, mean {:.1} rps (engine = {})",
+        trace.len(),
+        trace.offered_rps(),
+        if use_mock { "mock" } else { "pjrt" }
+    );
+
+    let factory = |decode_tag: &str| -> ExecutorFactory {
+        if use_mock {
+            let s = spec.clone();
+            Arc::new(move || Ok(Box::new(MockExecutor::new(s.clone())) as _))
+        } else {
+            let dir = artifacts.clone();
+            let tag = decode_tag.to_string();
+            Arc::new(move || {
+                Ok(Box::new(PjrtEngine::load(&dir, "onerec-tiny", &tag)?) as _)
+            })
+        }
+    };
+
+    let base = ServingConfig::default();
+    let systems: Vec<(&str, ServingConfig, EngineConfig, &str)> = vec![
+        ("xGR", base.clone(), EngineConfig::default(), "decode"),
+        (
+            "vLLM-like",
+            baselines::vllm_like_serving(&base),
+            baselines::vllm_like_engine_config(),
+            "decode_paged",
+        ),
+        (
+            "xLLM-like",
+            baselines::xllm_like_serving(&base),
+            baselines::xllm_like_engine_config(),
+            "decode_paged",
+        ),
+    ];
+
+    let mut table = Table::new("trace_replay: JD-like burst, real engines");
+    for (name, serving, engine_cfg, tag) in systems {
+        let coord = Coordinator::start(
+            &serving,
+            engine_cfg,
+            trie.clone(),
+            factory(tag),
+        )?;
+        let r = replay_trace(&coord, &trace, 1.0);
+        coord.shutdown();
+        table.push(
+            Row::new(name)
+                .col("completed", r.completed as f64)
+                .col("mean_ms", r.latency.mean() / 1e6)
+                .col("p99_ms", r.latency.p99() as f64 / 1e6)
+                .col("thru_rps", r.throughput_rps())
+                .col("valid_pct", 100.0 * r.valid_items as f64 / r.total_items.max(1) as f64),
+        );
+    }
+    table.emit();
+    Ok(())
+}

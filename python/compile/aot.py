@@ -1,0 +1,168 @@
+"""AOT lowering: JAX model -> HLO *text* artifacts + manifest.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which the xla crate's bundled
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Emits, per model config:
+  artifacts/<name>_prefill.hlo.txt
+  artifacts/<name>_decode.hlo.txt          (staged xattention kernel)
+  artifacts/<name>_decode_paged.hlo.txt    (paged-structured baseline kernel)
+plus artifacts/manifest.json describing every artifact's I/O signature so
+the Rust runtime can marshal literals without hardcoding shapes.
+
+Run via `make artifacts` (no-op if artifacts are newer than the sources).
+Python never runs on the request path.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+CONFIGS = {"onerec-tiny": M.TINY, "onerec-small": M.SMALL}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    # print_large_constants: the model weights are closed-over constants;
+    # the default printer elides them as `constant({...})`, which the text
+    # parser on the Rust side cannot round-trip.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def spec(shape, dtype="f32"):
+    return {"shape": list(shape), "dtype": dtype}
+
+
+def lower_config(cfg: M.ModelConfig, outdir: str, with_paged: bool):
+    """Lower prefill + decode for one model config; return manifest entries."""
+    l, s, h, dh = cfg.n_layers, cfg.seq, cfg.n_heads, cfg.d_head
+    bw, nd, v = cfg.beam_width, cfg.num_decode, cfg.vocab
+    kv_shared = jax.ShapeDtypeStruct((l, s, h, dh), jnp.float32)
+    kv_uns = jax.ShapeDtypeStruct((l, bw, nd, h, dh), jnp.float32)
+    i32 = jnp.int32
+    tok_s = jax.ShapeDtypeStruct((s,), i32)
+    tok_bw = jax.ShapeDtypeStruct((bw,), i32)
+    scalar = jax.ShapeDtypeStruct((), i32)
+
+    entries = {}
+
+    def emit(tag, fn, args, inputs, outputs):
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{cfg.name}_{tag}.hlo.txt"
+        path = os.path.join(outdir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        entries[tag] = {
+            "file": fname,
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+            "inputs": inputs,
+            "outputs": outputs,
+        }
+        print(f"  {fname}: {len(text) / 1e6:.1f} MB HLO text")
+
+    prefill_fn, decode_fn = M.make_fns(cfg, kernel="xattention")
+    _, decode_paged_fn = M.make_fns(cfg, kernel="paged")
+
+    emit("prefill", prefill_fn, (tok_s, scalar),
+         inputs=[spec((s,), "i32"), spec((), "i32")],
+         outputs=[spec((v,)), spec((l, s, h, dh)), spec((l, s, h, dh))])
+
+    dec_args = (tok_bw, scalar, scalar, kv_shared, kv_shared, kv_uns, kv_uns)
+    dec_in = [spec((bw,), "i32"), spec((), "i32"), spec((), "i32"),
+              spec((l, s, h, dh)), spec((l, s, h, dh)),
+              spec((l, bw, nd, h, dh)), spec((l, bw, nd, h, dh))]
+    dec_out = [spec((bw, v)), spec((l, bw, nd, h, dh)), spec((l, bw, nd, h, dh))]
+    emit("decode", decode_fn, dec_args, dec_in, dec_out)
+    if with_paged:
+        emit("decode_paged", decode_paged_fn, dec_args, dec_in, dec_out)
+
+    return {
+        "config": {
+            "name": cfg.name, "vocab": v, "d_model": cfg.d_model,
+            "n_layers": l, "n_heads": h, "d_head": dh, "d_ff": cfg.d_ff,
+            "seq": s, "beam_width": bw, "num_decode": nd,
+            "tile": cfg.tile, "params": cfg.params,
+        },
+        "artifacts": entries,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="output directory for HLO artifacts")
+    ap.add_argument("--models", default="onerec-tiny",
+                    help="comma-separated config names (%s)" % ",".join(CONFIGS))
+    ap.add_argument("--paged-baseline", action="store_true", default=True)
+    ap.add_argument("--no-paged-baseline", dest="paged_baseline",
+                    action="store_false")
+    args = ap.parse_args()
+
+    outdir = args.out
+    os.makedirs(outdir, exist_ok=True)
+    manifest = {"format": "hlo-text-v1", "models": {}}
+    for name in args.models.split(","):
+        name = name.strip()
+        if name not in CONFIGS:
+            sys.exit(f"unknown model config {name!r}; have {list(CONFIGS)}")
+        print(f"lowering {name} ...")
+        manifest["models"][name] = lower_config(
+            CONFIGS[name], outdir, args.paged_baseline)
+
+    mpath = os.path.join(outdir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+
+    # golden numerics: the Rust integration test replays this exact greedy
+    # rollout through the PJRT engine and compares logits cross-language
+    first = args.models.split(",")[0].strip()
+    write_golden(CONFIGS[first], outdir)
+
+
+def write_golden(cfg: M.ModelConfig, outdir: str):
+    import numpy as np
+    rng = np.random.default_rng(7)
+    length = 100
+    toks = np.zeros(cfg.seq, np.int32)
+    toks[:length] = rng.integers(0, cfg.vocab, size=length)
+    outs = M.reference_generate(cfg, jnp.asarray(toks), jnp.int32(length))
+    golden = {
+        "model": cfg.name,
+        "prompt": [int(t) for t in toks[:length]],
+        "length": length,
+        # prefill logits head + per-step logits head for beam 0, plus the
+        # greedy argmax tokens per step (the replay rule)
+        "prefill_logits_head": [float(x) for x in outs[0][:8]],
+        "steps": [
+            {
+                "beam0_logits_head": [float(x) for x in o[0, :8]],
+                "argmax_tokens": [int(t) for t in o.argmax(axis=-1)],
+            }
+            for o in outs[1:]
+        ],
+        "seed_tokens": [
+            int(t) for t in np.argsort(-outs[0])[: cfg.beam_width]
+        ],
+    }
+    gpath = os.path.join(outdir, f"{cfg.name}_golden.json")
+    with open(gpath, "w") as f:
+        json.dump(golden, f, indent=2)
+    print(f"wrote {gpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""Baseline beam-attention kernel with PagedAttention-style structure.
+
+Numerically identical to ``xattention.xattention`` but *structurally* the
+way vLLM's PagedAttention treats a beam batch: every beam is an
+independent sequence, so the grid iterates (beam, head, tile) and the
+shared prompt prefix is re-fetched from HBM for every beam. This is the
+redundant-load behaviour Figs 3/17 of the paper profile; we lower it too
+so kernel-level comparisons (bench fig03/fig17 and the pytest equivalence
+suite) run the exact baseline structure, not a strawman.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_TILE = 64
+
+
+def _paged_kernel(q_ref, ks_ref, vs_ref, ku_ref, vu_ref, ms_ref, mu_ref,
+                  o_ref, acc_ref, m_ref, l_ref, *, nt_shared, sm_scale):
+    """One (beam, head, tile) grid step — single-beam flash attention."""
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0, :]  # [D]
+
+    @pl.when(t < nt_shared)
+    def _shared_tile():
+        k = ks_ref[:, 0, :]                       # [TS, D] — re-read per beam!
+        v = vs_ref[:, 0, :]
+        s = jnp.dot(k, q, preferred_element_type=jnp.float32) * sm_scale
+        s = s + ms_ref[...]                       # [TS]
+        m_prev = m_ref[0, 0]
+        m_new = jnp.maximum(m_prev, s.max())
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_ref[0, 0] = l_ref[0, 0] * alpha + p.sum()
+        acc_ref[0, :] = acc_ref[0, :] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[0, 0] = m_new
+
+    @pl.when(t == nt_shared)
+    def _own_tokens_and_merge():
+        ku = ku_ref[0, :, 0, :]                   # [ND, D]
+        vu = vu_ref[0, :, 0, :]
+        s = jnp.dot(ku, q, preferred_element_type=jnp.float32) * sm_scale
+        s = s + mu_ref[...]
+        m_prev = m_ref[0, 0]
+        m_new = jnp.maximum(m_prev, s.max())
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_new = l_ref[0, 0] * alpha + p.sum()
+        acc = acc_ref[0, :] * alpha + jnp.dot(
+            p, vu, preferred_element_type=jnp.float32)
+        o_ref[0, 0, :] = (acc / l_new).astype(o_ref.dtype)
+
+
+def paged_attention(q, k_shared, v_shared, k_unshared, v_unshared,
+                    shared_mask, unshared_mask, *, tile=DEFAULT_TILE,
+                    sm_scale=None, interpret=True):
+    """Per-beam-independent beam attention (the vLLM-structured baseline)."""
+    bw, h, d = q.shape
+    s = k_shared.shape[0]
+    nd = k_unshared.shape[1]
+    if s % tile != 0:
+        raise ValueError(f"S={s} must be a multiple of tile={tile}")
+    nt_shared = s // tile
+    if sm_scale is None:
+        sm_scale = 1.0 / (d ** 0.5)
+
+    grid = (bw, h, nt_shared + 1)
+    kernel = functools.partial(_paged_kernel, nt_shared=nt_shared,
+                               sm_scale=sm_scale)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, d), lambda b, hh, t: (b, hh, 0)),       # q
+            pl.BlockSpec((tile, 1, d),
+                         lambda b, hh, t, _n=nt_shared: (jnp.minimum(t, _n - 1), hh, 0)),
+            pl.BlockSpec((tile, 1, d),
+                         lambda b, hh, t, _n=nt_shared: (jnp.minimum(t, _n - 1), hh, 0)),
+            pl.BlockSpec((1, nd, 1, d), lambda b, hh, t: (b, 0, hh, 0)),
+            pl.BlockSpec((1, nd, 1, d), lambda b, hh, t: (b, 0, hh, 0)),
+            pl.BlockSpec((tile,),
+                         lambda b, hh, t, _n=nt_shared: (jnp.minimum(t, _n - 1),)),
+            pl.BlockSpec((nd,), lambda b, hh, t: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda b, hh, t: (b, hh, 0)),
+        out_shape=jax.ShapeDtypeStruct((bw, h, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, d), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k_shared, v_shared, k_unshared, v_unshared,
+      shared_mask, unshared_mask)

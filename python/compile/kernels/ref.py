@@ -1,0 +1,100 @@
+"""Pure-jnp correctness oracles for the xGR attention kernels.
+
+The reference implements exactly the math the paper's xAttention computes:
+for each beam ``b``, attention of the beam's query against the
+concatenation of (a) the *shared* prompt-prefix KV (identical for all
+beams) and (b) the beam's own *unshared* decode KV (one entry per past
+decode phase, of which only ``valid_len`` are populated).
+
+Shapes (single request; batching is handled one level up in model.py):
+  q           [BW, H, D]      query of the current decode step, per beam
+  k_shared    [S,  H, D]      prompt KV written once at prefill
+  v_shared    [S,  H, D]
+  k_unshared  [BW, ND, H, D]  per-beam decode KV (token granularity)
+  v_unshared  [BW, ND, H, D]
+  shared_mask [S]             additive mask, 0 for valid, -inf for padding
+  unshared_mask [ND]          additive mask, 0 for steps < valid_len
+
+Returns o [BW, H, D].
+"""
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def beam_attention_ref(q, k_shared, v_shared, k_unshared, v_unshared,
+                       shared_mask, unshared_mask, sm_scale=None):
+    """Oracle: materialize the full per-beam KV and do plain softmax attention."""
+    bw, h, d = q.shape
+    s = k_shared.shape[0]
+    if sm_scale is None:
+        sm_scale = 1.0 / (d ** 0.5)
+
+    # [BW, H, S] scores against the shared prefix
+    scores_s = jnp.einsum("bhd,shd->bhs", q, k_shared) * sm_scale
+    scores_s = scores_s + shared_mask[None, None, :]
+    # [BW, H, ND] scores against the beam's own decode KV
+    scores_u = jnp.einsum("bhd,bnhd->bhn", q, k_unshared) * sm_scale
+    scores_u = scores_u + unshared_mask[None, None, :]
+
+    scores = jnp.concatenate([scores_s, scores_u], axis=-1)  # [BW, H, S+ND]
+    p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    p_s, p_u = p[..., :s], p[..., s:]
+
+    o = jnp.einsum("bhs,shd->bhd", p_s, v_shared)
+    o = o + jnp.einsum("bhn,bnhd->bhd", p_u, v_unshared)
+    return o
+
+
+def staged_attention_ref(q, k_shared, v_shared, k_unshared, v_unshared,
+                         shared_mask, unshared_mask, sm_scale=None):
+    """Second oracle mirroring the paper's *staged* formulation (Sec 5.2):
+
+    compute shared-stage and unshared-stage local statistics independently,
+    then merge with OnlineSoftmax. Numerically equivalent to
+    beam_attention_ref; used to validate the merge algebra itself.
+    """
+    bw, h, d = q.shape
+    if sm_scale is None:
+        sm_scale = 1.0 / (d ** 0.5)
+
+    # ---- shared stage: local (max, sum, weighted value) over prefix
+    scores_s = jnp.einsum("bhd,shd->bhs", q, k_shared) * sm_scale
+    scores_s = scores_s + shared_mask[None, None, :]
+    m_s = scores_s.max(axis=-1)                              # [BW, H]
+    e_s = jnp.exp(scores_s - m_s[..., None])
+    l_s = e_s.sum(axis=-1)                                   # [BW, H]
+    acc_s = jnp.einsum("bhs,shd->bhd", e_s, v_shared)        # unnormalized
+
+    # ---- unshared stage
+    scores_u = jnp.einsum("bhd,bnhd->bhn", q, k_unshared) * sm_scale
+    scores_u = scores_u + unshared_mask[None, None, :]
+    m_u = scores_u.max(axis=-1)
+    e_u = jnp.exp(scores_u - m_u[..., None])
+    l_u = e_u.sum(axis=-1)
+    acc_u = jnp.einsum("bhn,bnhd->bhd", e_u, v_unshared)
+
+    # ---- merge stage (OnlineSoftmax)
+    m = jnp.maximum(m_s, m_u)
+    a_s = jnp.exp(m_s - m)
+    a_u = jnp.exp(m_u - m)
+    l = l_s * a_s + l_u * a_u
+    o = (acc_s * a_s[..., None] + acc_u * a_u[..., None]) / l[..., None]
+    return o
+
+
+def prefill_attention_ref(x_q, x_k, x_v, causal_mask, sm_scale=None):
+    """Plain causal self-attention oracle for the prefill phase.
+
+    x_q/x_k/x_v: [S, H, D]; causal_mask: [S, S] additive.
+    """
+    s, h, d = x_q.shape
+    if sm_scale is None:
+        sm_scale = 1.0 / (d ** 0.5)
+    scores = jnp.einsum("qhd,khd->hqk", x_q, x_k) * sm_scale
+    scores = scores + causal_mask[None, :, :]
+    p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("hqk,khd->qhd", p, x_v)

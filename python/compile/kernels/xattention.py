@@ -1,0 +1,174 @@
+"""xAttention — the paper's staged beam-attention Pallas kernel (Sec 5).
+
+The paper's core operator insight: under wide beam search every beam shares
+the identical prompt prefix, so the prefix KV should be loaded from HBM
+*once* and reused across all BW beams, while the per-beam decode KV is a
+small dense ``[BW, ND]`` token-granularity buffer. The computation is
+split into three stages (shared, unshared, merge) glued by OnlineSoftmax.
+
+TPU adaptation of the paper's Ascend/CUDA design (DESIGN.md
+§Hardware-Adaptation):
+
+  * grid axis 0 = head, grid axis 1 = KV tile  ≙  the paper's CG partition;
+  * ``q @ k_tile.T`` / ``p @ v_tile`` batchmatmuls target the MXU ≙ MCU
+    (Cube / TensorCore);
+  * the running (max, sum) OnlineSoftmax update is VPU work ≙ VCU;
+  * VMEM scratch (acc, m, l) ≙ the explicitly-managed scratchpad the paper
+    stages local statistics in;
+  * the shared-KV BlockSpec loads each prefix tile ONCE per (head, tile)
+    and broadcasts it across the whole beam dimension — this is the
+    paper's "load shared cache once" property, expressed as an HBM→VMEM
+    schedule instead of a threadblock assignment.
+
+The final grid step performs the unshared stage and the merge, mirroring
+the paper's pipelined merge CG that consumes the partial statistics.
+
+interpret=True everywhere: CPU PJRT cannot run Mosaic custom-calls; the
+lowered HLO is portable and is what ``aot.py`` bakes into the artifacts.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_TILE = 64
+
+
+def _xattn_kernel(q_ref, ks_ref, vs_ref, ku_ref, vu_ref, ms_ref, mu_ref,
+                  o_ref, acc_ref, m_ref, l_ref, *, nt_shared, sm_scale):
+    """One (head, tile) grid step of the staged beam attention.
+
+    Refs (blocks):
+      q_ref  [BW, 1, D]     ks_ref/vs_ref [TS, 1, D]
+      ku_ref/vu_ref [BW, ND, 1, D]
+      ms_ref [TS]  mu_ref [ND]       additive masks
+      o_ref  [BW, 1, D]
+      scratch: acc_ref [BW, D], m_ref [BW, 1], l_ref [BW, 1]
+    """
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[:, 0, :]  # [BW, D]
+
+    @pl.when(t < nt_shared)
+    def _shared_stage():
+        # ---- shared stage: one prefix tile, loaded once, reused by all
+        # BW beams (MXU batchmatmul over the beam dimension).
+        k = ks_ref[:, 0, :]                      # [TS, D]
+        v = vs_ref[:, 0, :]                      # [TS, D]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * sm_scale
+        s = s + ms_ref[...][None, :]             # [BW, TS]
+        # OnlineSoftmax running update (VPU work).
+        m_prev = m_ref[:, 0]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_ref[:, 0] = l_ref[:, 0] * alpha + p.sum(axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[:, 0] = m_new
+
+    @pl.when(t == nt_shared)
+    def _unshared_and_merge():
+        # ---- unshared stage: the dense [BW, ND] decode KV, one entry per
+        # past decode phase. Per-beam dot products (no prefix reload).
+        ku = ku_ref[:, :, 0, :]                  # [BW, ND, D]
+        vu = vu_ref[:, :, 0, :]                  # [BW, ND, D]
+        s = jnp.sum(q[:, None, :] * ku, axis=-1) * sm_scale
+        s = s + mu_ref[...][None, :]             # [BW, ND]
+        m_prev = m_ref[:, 0]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l_ref[:, 0] * alpha + p.sum(axis=-1)
+        acc = acc_ref[...] * alpha[:, None] + jnp.sum(
+            p[:, :, None] * vu, axis=1)
+        # ---- merge stage: normalize and write out (post-processing).
+        o_ref[:, 0, :] = (acc / l_new[:, None]).astype(o_ref.dtype)
+
+
+def xattention(q, k_shared, v_shared, k_unshared, v_unshared,
+               shared_mask, unshared_mask, *, tile=DEFAULT_TILE,
+               sm_scale=None, interpret=True):
+    """Staged shared/unshared beam attention.
+
+    Args match kernels.ref.beam_attention_ref. ``tile`` is the shared-KV
+    tile length (the BlockSpec HBM→VMEM schedule granularity); S must be a
+    multiple of ``tile`` (model.py pads the prompt to the bucket length).
+    """
+    bw, h, d = q.shape
+    s = k_shared.shape[0]
+    nd = k_unshared.shape[1]
+    if s % tile != 0:
+        raise ValueError(f"S={s} must be a multiple of tile={tile}")
+    nt_shared = s // tile
+    if sm_scale is None:
+        sm_scale = 1.0 / (d ** 0.5)
+
+    grid = (h, nt_shared + 1)  # last step: unshared stage + merge
+    kernel = functools.partial(_xattn_kernel, nt_shared=nt_shared,
+                               sm_scale=sm_scale)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bw, 1, d), lambda hh, t: (0, hh, 0)),        # q
+            pl.BlockSpec((tile, 1, d),
+                         lambda hh, t, _n=nt_shared: (jnp.minimum(t, _n - 1), hh, 0)),  # k_shared
+            pl.BlockSpec((tile, 1, d),
+                         lambda hh, t, _n=nt_shared: (jnp.minimum(t, _n - 1), hh, 0)),  # v_shared
+            pl.BlockSpec((bw, nd, 1, d), lambda hh, t: (0, 0, hh, 0)),  # k_unshared
+            pl.BlockSpec((bw, nd, 1, d), lambda hh, t: (0, 0, hh, 0)),  # v_unshared
+            pl.BlockSpec((tile,),
+                         lambda hh, t, _n=nt_shared: (jnp.minimum(t, _n - 1),)),  # shared_mask
+            pl.BlockSpec((nd,), lambda hh, t: (0,)),                    # unshared_mask
+        ],
+        out_specs=pl.BlockSpec((bw, 1, d), lambda hh, t: (0, hh, 0)),
+        out_shape=jax.ShapeDtypeStruct((bw, h, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bw, d), jnp.float32),   # acc
+            pltpu.VMEM((bw, 1), jnp.float32),   # running max
+            pltpu.VMEM((bw, 1), jnp.float32),   # running sum
+        ],
+        interpret=interpret,
+    )(q, k_shared, v_shared, k_unshared, v_unshared,
+      shared_mask, unshared_mask)
+
+
+def vmem_bytes(bw, h, d, nd, tile, itemsize=4):
+    """Static VMEM footprint estimate of one grid step (DESIGN.md §Perf).
+
+    Counts the resident blocks: q + one shared tile (K and V) + the whole
+    unshared KV + masks + output + scratch. Used by the perf notes and the
+    simulator's occupancy model; heads are streamed so H does not appear.
+    """
+    q = bw * d * itemsize
+    kv_tile = 2 * tile * d * itemsize
+    kv_unshared = 2 * bw * nd * d * itemsize
+    masks = (tile + nd) * itemsize
+    out = bw * d * itemsize
+    scratch = (bw * d + 2 * bw) * 4
+    return q + kv_tile + kv_unshared + masks + out + scratch
+
+
+def hbm_bytes_moved(bw, s, h, d, nd, itemsize=4):
+    """Bytes of KV traffic per decode step for xAttention vs a paged kernel.
+
+    xAttention: the shared prefix is read once (S·H·D·2) plus the dense
+    unshared buffer (BW·ND·H·D·2). A beam-oblivious paged kernel instead
+    reads the prefix once PER BEAM: BW·(S+ND)·H·D·2. The ratio of these
+    two is the paper's Fig 3 headroom.
+    """
+    xattn = 2 * (s + bw * nd) * h * d * itemsize
+    paged = 2 * bw * (s + nd) * h * d * itemsize
+    return xattn, paged

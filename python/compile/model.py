@@ -1,0 +1,258 @@
+"""L2 — the GR transformer (OneRec-style decoder-only model) in JAX.
+
+The model implements the paper's generative-recommendation workload: a
+user-history token sequence (semantic item IDs) is prefilled once, then
+exactly ``ND = 3`` decode phases each produce one token ID (TID); the TID
+triplet is the recommended item (Sec 5: "one prefill phase and three
+decode phases").
+
+Two entry points are AOT-lowered per shape bucket (see aot.py):
+
+  prefill(tokens [S] i32, length () i32)
+      -> (logits [V] f32, k_shared [L,S,H,Dh] f32, v_shared [L,S,H,Dh] f32)
+
+  decode(tokens [BW] i32, length () i32, step () i32,
+         k_shared, v_shared, k_uns [L,BW,ND,H,Dh], v_uns [L,BW,ND,H,Dh])
+      -> (logits [BW,V] f32, k_uns', v_uns')
+
+Decode writes the current token's K/V into the *unshared* cache at
+position ``step`` (token granularity, sized exactly BW×ND — the paper's
+separated-cache contract) and runs the staged xattention kernel over
+(shared prefix, unshared buffer). Beam selection, item masking and the
+in-place beam reorder of the unshared cache all live in the Rust L3 — the
+model only turns tokens into logits.
+
+Weights are deterministically initialized (seeded) and closed over, so
+they fold into the HLO artifact as constants: the Rust runtime needs no
+separate weight file. There is no public GR checkpoint loadable offline;
+DESIGN.md records this substitution.
+"""
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .kernels import xattention as xa
+from .kernels import paged_ref as pr
+from .kernels.ref import NEG_INF
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static architecture + bucket description (one HLO artifact each)."""
+    name: str = "onerec-tiny"
+    vocab: int = 512          # semantic-ID vocabulary per level
+    d_model: int = 128
+    n_layers: int = 2
+    n_heads: int = 4
+    d_head: int = 32
+    d_ff: int = 256
+    seq: int = 128            # prompt bucket length (padded)
+    beam_width: int = 8
+    num_decode: int = 3       # ND — TID triplet
+    tile: int = 64            # shared-KV tile for the Pallas kernel
+    seed: int = 1234
+
+    @property
+    def params(self):
+        c = self
+        per_layer = 4 * c.d_model * c.n_heads * c.d_head \
+            + 3 * c.d_model * c.d_ff + 2 * c.d_model
+        return c.vocab * c.d_model * 2 + c.n_layers * per_layer + c.d_model
+
+
+TINY = ModelConfig()
+SMALL = ModelConfig(name="onerec-small", vocab=1024, d_model=256, n_layers=4,
+                    seq=256, beam_width=16, d_ff=512)
+
+
+# --------------------------------------------------------------------------
+# weights
+# --------------------------------------------------------------------------
+
+def init_weights(cfg: ModelConfig):
+    """Deterministic (seeded) init; returned as a pytree of jnp arrays."""
+    rng = np.random.default_rng(cfg.seed)
+
+    def mat(*shape, scale=None):
+        scale = scale or (1.0 / np.sqrt(shape[0]))
+        return jnp.asarray(rng.normal(0.0, scale, size=shape), jnp.float32)
+
+    layers = []
+    for _ in range(cfg.n_layers):
+        layers.append(dict(
+            wq=mat(cfg.d_model, cfg.n_heads * cfg.d_head),
+            wk=mat(cfg.d_model, cfg.n_heads * cfg.d_head),
+            wv=mat(cfg.d_model, cfg.n_heads * cfg.d_head),
+            wo=mat(cfg.n_heads * cfg.d_head, cfg.d_model),
+            w_gate=mat(cfg.d_model, cfg.d_ff),
+            w_up=mat(cfg.d_model, cfg.d_ff),
+            w_down=mat(cfg.d_ff, cfg.d_model),
+            ln1=jnp.ones((cfg.d_model,), jnp.float32),
+            ln2=jnp.ones((cfg.d_model,), jnp.float32),
+        ))
+    return dict(
+        tok_emb=mat(cfg.vocab, cfg.d_model, scale=0.02),
+        w_out=mat(cfg.d_model, cfg.vocab),
+        ln_f=jnp.ones((cfg.d_model,), jnp.float32),
+        layers=layers,
+    )
+
+
+# --------------------------------------------------------------------------
+# building blocks
+# --------------------------------------------------------------------------
+
+def rmsnorm(x, g, eps=1e-6):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps) * g
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    return (jax.nn.silu(x @ w_gate) * (x @ w_up)) @ w_down
+
+
+def rope(x, positions, base=10000.0):
+    """Rotary embedding. x: [..., H, Dh]; positions: x.shape[:-2]."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = base ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None, None].astype(jnp.float32) * freqs  # [..., 1, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _split_heads(x, h, dh):
+    return x.reshape(x.shape[:-1] + (h, dh))
+
+
+# --------------------------------------------------------------------------
+# prefill
+# --------------------------------------------------------------------------
+
+def prefill(w, cfg: ModelConfig, tokens, length):
+    """Encode the padded user-history prompt; emit last-token logits + KV.
+
+    tokens [S] int32 (padded with 0 beyond `length`), length () int32.
+    """
+    s = cfg.seq
+    pos = jnp.arange(s)
+    x = w["tok_emb"][tokens]                                 # [S, d]
+    valid = pos < length                                     # [S]
+    # causal + padding mask, additive
+    causal = jnp.where(pos[None, :] <= pos[:, None], 0.0, NEG_INF)
+    pad = jnp.where(valid[None, :], 0.0, NEG_INF)
+    attn_mask = causal + pad                                 # [S, S]
+
+    ks_all, vs_all = [], []
+    for lw in w["layers"]:
+        xin = rmsnorm(x, lw["ln1"])
+        q = _split_heads(xin @ lw["wq"], cfg.n_heads, cfg.d_head)
+        k = _split_heads(xin @ lw["wk"], cfg.n_heads, cfg.d_head)
+        v = _split_heads(xin @ lw["wv"], cfg.n_heads, cfg.d_head)
+        q = rope(q, pos)
+        k = rope(k, pos)
+        scores = jnp.einsum("qhd,khd->hqk", q, k) / np.sqrt(cfg.d_head)
+        scores = scores + attn_mask[None, :, :]
+        p = jax.nn.softmax(scores, axis=-1)
+        o = jnp.einsum("hqk,khd->qhd", p, v).reshape(s, -1)
+        x = x + o @ lw["wo"]
+        x = x + swiglu(rmsnorm(x, lw["ln2"]), lw["w_gate"], lw["w_up"], lw["w_down"])
+        ks_all.append(k)
+        vs_all.append(v)
+
+    x = rmsnorm(x, w["ln_f"])
+    last = x[jnp.maximum(length - 1, 0)]                     # [d]
+    logits = last @ w["w_out"]                               # [V]
+    k_shared = jnp.stack(ks_all)                             # [L, S, H, Dh]
+    v_shared = jnp.stack(vs_all)
+    return logits, k_shared, v_shared
+
+
+# --------------------------------------------------------------------------
+# decode
+# --------------------------------------------------------------------------
+
+def decode(w, cfg: ModelConfig, tokens, length, step,
+           k_shared, v_shared, k_uns, v_uns, *, kernel="xattention"):
+    """One decode phase over all BW beams of one request.
+
+    tokens [BW] i32 — the token chosen for each beam at this step.
+    step () i32    — decode-phase index in [0, ND).
+    k_uns/v_uns [L, BW, ND, H, Dh] — separated unshared cache; the new
+    token's K/V is written in place at position `step` (token granularity,
+    no block alignment or copies — the paper's Sec 5.1 contract).
+    """
+    bw, nd = cfg.beam_width, cfg.num_decode
+    pos = length + step                                      # () scalar
+    x = w["tok_emb"][tokens]                                 # [BW, d]
+    shared_mask = jnp.where(jnp.arange(cfg.seq) < length, 0.0, NEG_INF)
+    uns_mask = jnp.where(jnp.arange(nd) <= step, 0.0, NEG_INF)
+    attn = xa.xattention if kernel == "xattention" else pr.paged_attention
+
+    new_k_layers, new_v_layers = [], []
+    for li, lw in enumerate(w["layers"]):
+        xin = rmsnorm(x, lw["ln1"])
+        q = _split_heads(xin @ lw["wq"], cfg.n_heads, cfg.d_head)  # [BW,H,Dh]
+        k = _split_heads(xin @ lw["wk"], cfg.n_heads, cfg.d_head)
+        v = _split_heads(xin @ lw["wv"], cfg.n_heads, cfg.d_head)
+        posv = jnp.full((bw,), pos)
+        q = rope(q, posv)
+        k = rope(k, posv)
+        # in-place (functional) write of the step's K/V at token granularity
+        k_l = jax.lax.dynamic_update_slice(
+            k_uns[li], k[:, None, :, :], (0, step, 0, 0))
+        v_l = jax.lax.dynamic_update_slice(
+            v_uns[li], v[:, None, :, :], (0, step, 0, 0))
+        o = attn(q, k_shared[li], v_shared[li], k_l, v_l,
+                 shared_mask, uns_mask, tile=cfg.tile)
+        x = x + o.reshape(bw, -1) @ lw["wo"]
+        x = x + swiglu(rmsnorm(x, lw["ln2"]), lw["w_gate"], lw["w_up"], lw["w_down"])
+        new_k_layers.append(k_l)
+        new_v_layers.append(v_l)
+
+    x = rmsnorm(x, w["ln_f"])
+    logits = x @ w["w_out"]                                  # [BW, V]
+    return logits, jnp.stack(new_k_layers), jnp.stack(new_v_layers)
+
+
+# --------------------------------------------------------------------------
+# helpers for lowering + python-side tests
+# --------------------------------------------------------------------------
+
+def make_fns(cfg: ModelConfig, kernel="xattention"):
+    """Bind weights; return (prefill_fn, decode_fn) ready for jit/lowering."""
+    w = init_weights(cfg)
+
+    def prefill_fn(tokens, length):
+        return prefill(w, cfg, tokens, length)
+
+    def decode_fn(tokens, length, step, k_shared, v_shared, k_uns, v_uns):
+        return decode(w, cfg, tokens, length, step,
+                      k_shared, v_shared, k_uns, v_uns, kernel=kernel)
+
+    return prefill_fn, decode_fn
+
+
+def reference_generate(cfg: ModelConfig, tokens, length, kernel="xattention"):
+    """Full-python greedy beam rollout: the numerics oracle for the Rust
+    e2e path. Returns [prefill_logits, step0_logits, step1_logits, ...]
+    as numpy arrays, expanding each step's beams with argmax (Rust replays
+    the same expansion rule in its integration test)."""
+    bw = cfg.beam_width
+    prefill_fn, decode_fn = make_fns(cfg, kernel=kernel)
+    logits0, ks, vs = prefill_fn(tokens, length)
+    shape = (cfg.n_layers, bw, cfg.num_decode, cfg.n_heads, cfg.d_head)
+    k_uns = jnp.zeros(shape, jnp.float32)
+    v_uns = jnp.zeros(shape, jnp.float32)
+    top = jnp.argsort(-logits0)[:bw].astype(jnp.int32)
+    out = [np.asarray(logits0)]
+    toks = top
+    for step in range(cfg.num_decode):
+        logits, k_uns, v_uns = decode_fn(
+            toks, length, jnp.int32(step), ks, vs, k_uns, v_uns)
+        out.append(np.asarray(logits))
+        toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return out

@@ -1,0 +1,77 @@
+"""AOT lowering invariants: HLO text artifacts must be self-contained and
+re-parsable (constants included, signatures as the manifest declares)."""
+
+import json
+import os
+import re
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+ARTIFACTS = os.path.join(ROOT, "artifacts")
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    path = os.path.join(ARTIFACTS, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("run `make artifacts` first")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_manifest_lists_every_file(manifest):
+    for model in manifest["models"].values():
+        for entry in model["artifacts"].values():
+            assert os.path.exists(os.path.join(ARTIFACTS, entry["file"]))
+
+
+def test_no_elided_constants(manifest):
+    """`constant({...})` means print_large_constants was off — the Rust
+    text parser would silently load a weightless model."""
+    for model in manifest["models"].values():
+        for entry in model["artifacts"].values():
+            with open(os.path.join(ARTIFACTS, entry["file"])) as f:
+                text = f.read()
+            assert "constant({...})" not in text, entry["file"]
+
+
+def test_entry_signature_matches_manifest(manifest):
+    dt = {"f32": "f32", "i32": "s32"}
+    for model in manifest["models"].values():
+        for entry in model["artifacts"].values():
+            with open(os.path.join(ARTIFACTS, entry["file"])) as f:
+                text = f.read()
+            # parameters inside subcomputations repeat; only ENTRY counts
+            entry_text = text[text.index("ENTRY"):]
+            params = re.findall(
+                r"= (\w+)\[([\d,]*)\][^ ]* parameter\((\d+)\)", entry_text)
+            by_idx = {}
+            for ty, dims, idx in params:
+                by_idx[int(idx)] = (ty, dims)
+            assert len(by_idx) == len(entry["inputs"]), entry["file"]
+            for i, spec in enumerate(entry["inputs"]):
+                ty, dims = by_idx[i]
+                want = dt[spec["dtype"]]
+                assert ty == want, (entry["file"], i, ty, want)
+                got = [int(x) for x in dims.split(",") if x]
+                assert got == spec["shape"], (entry["file"], i, got)
+
+
+def test_num_decode_is_three(manifest):
+    """The GR contract: a TID triplet — exactly 3 decode phases."""
+    for model in manifest["models"].values():
+        assert model["config"]["num_decode"] == 3
+
+
+def test_artifacts_have_no_custom_calls(manifest):
+    """interpret=True pallas must lower to plain HLO — a Mosaic
+    custom-call would be unloadable by the CPU PJRT client."""
+    for model in manifest["models"].values():
+        for entry in model["artifacts"].values():
+            with open(os.path.join(ARTIFACTS, entry["file"])) as f:
+                text = f.read()
+            assert "custom-call" not in text or "mosaic" not in text.lower(), \
+                entry["file"]

@@ -1,0 +1,164 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes/dtypes per the repro contract: the staged
+xattention kernel and the paged-structured baseline must agree with
+``ref.beam_attention_ref`` for every (BW, H, D, S, ND, valid lengths)
+combination, and the staged-softmax algebra must be exact.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels import xattention as xa
+from compile.kernels import paged_ref as pr
+
+ATOL = 2e-5
+
+
+def make_case(rng, bw, h, d, s, nd, slen, ulen, dtype=np.float32):
+    q = jnp.asarray(rng.normal(size=(bw, h, d)), dtype)
+    ks = jnp.asarray(rng.normal(size=(s, h, d)), dtype)
+    vs = jnp.asarray(rng.normal(size=(s, h, d)), dtype)
+    ku = jnp.asarray(rng.normal(size=(bw, nd, h, d)), dtype)
+    vu = jnp.asarray(rng.normal(size=(bw, nd, h, d)), dtype)
+    ms = jnp.where(jnp.arange(s) < slen, 0.0, ref.NEG_INF).astype(jnp.float32)
+    mu = jnp.where(jnp.arange(nd) < ulen, 0.0, ref.NEG_INF).astype(jnp.float32)
+    return q, ks, vs, ku, vu, ms, mu
+
+
+class TestStagedAlgebra:
+    """The OnlineSoftmax merge (Sec 5.2) is exactly the plain softmax."""
+
+    def test_matches_flat_softmax(self):
+        rng = np.random.default_rng(0)
+        args = make_case(rng, 8, 2, 16, 64, 3, 50, 2)
+        a = ref.beam_attention_ref(*args)
+        b = ref.staged_attention_ref(*args)
+        np.testing.assert_allclose(a, b, atol=1e-6)
+
+    @given(slen=st.integers(1, 64), ulen=st.integers(1, 3),
+           seed=st.integers(0, 2**16))
+    @settings(max_examples=25, deadline=None)
+    def test_merge_any_valid_lengths(self, slen, ulen, seed):
+        rng = np.random.default_rng(seed)
+        args = make_case(rng, 4, 2, 8, 64, 3, slen, ulen)
+        np.testing.assert_allclose(
+            ref.beam_attention_ref(*args), ref.staged_attention_ref(*args),
+            atol=1e-6)
+
+    def test_extreme_scores_stable(self):
+        """Large score magnitudes must not overflow the merge."""
+        rng = np.random.default_rng(3)
+        q, ks, vs, ku, vu, ms, mu = make_case(rng, 4, 1, 8, 64, 3, 64, 3)
+        q = q * 100.0
+        a = ref.beam_attention_ref(q, ks, vs, ku, vu, ms, mu)
+        b = ref.staged_attention_ref(q, ks, vs, ku, vu, ms, mu)
+        assert np.isfinite(np.asarray(a)).all()
+        np.testing.assert_allclose(a, b, atol=1e-5)
+
+
+class TestXAttentionKernel:
+    def test_basic(self):
+        rng = np.random.default_rng(1)
+        args = make_case(rng, 8, 4, 32, 128, 3, 100, 2)
+        o = xa.xattention(*args, tile=64)
+        np.testing.assert_allclose(o, ref.beam_attention_ref(*args), atol=ATOL)
+
+    @given(bw=st.sampled_from([1, 2, 4, 8, 16]),
+           h=st.sampled_from([1, 2, 4]),
+           d=st.sampled_from([8, 16, 32]),
+           nt=st.integers(1, 4),
+           tile=st.sampled_from([32, 64]),
+           seed=st.integers(0, 2**16))
+    @settings(max_examples=20, deadline=None)
+    def test_shape_sweep(self, bw, h, d, nt, tile, seed):
+        s = nt * tile
+        rng = np.random.default_rng(seed)
+        slen = int(rng.integers(1, s + 1))
+        ulen = int(rng.integers(1, 4))
+        args = make_case(rng, bw, h, d, s, 3, slen, ulen)
+        o = xa.xattention(*args, tile=tile)
+        np.testing.assert_allclose(o, ref.beam_attention_ref(*args), atol=ATOL)
+
+    def test_single_valid_token(self):
+        """Degenerate prefix of length 1: softmax over ~1 element."""
+        rng = np.random.default_rng(7)
+        args = make_case(rng, 4, 2, 16, 64, 3, 1, 1)
+        o = xa.xattention(*args, tile=64)
+        np.testing.assert_allclose(o, ref.beam_attention_ref(*args), atol=ATOL)
+
+    def test_all_unshared_masked_out(self):
+        """ulen = 1 means only step-0 KV is visible (first decode phase)."""
+        rng = np.random.default_rng(8)
+        q, ks, vs, ku, vu, ms, mu = make_case(rng, 4, 2, 16, 64, 3, 64, 1)
+        # garbage in masked unshared slots must not leak into the output
+        ku = ku.at[:, 1:].set(1e6)
+        vu = vu.at[:, 1:].set(-1e6)
+        o = xa.xattention(q, ks, vs, ku, vu, ms, mu, tile=64)
+        o_ref = ref.beam_attention_ref(q, ks, vs, ku, vu, ms, mu)
+        np.testing.assert_allclose(o, o_ref, atol=ATOL)
+        assert np.isfinite(np.asarray(o)).all()
+
+    def test_tile_must_divide_seq(self):
+        rng = np.random.default_rng(9)
+        args = make_case(rng, 4, 2, 16, 96, 3, 96, 3)
+        with pytest.raises(ValueError):
+            xa.xattention(*args, tile=64)
+
+    def test_beams_with_identical_unshared_agree(self):
+        """Two beams with identical decode KV must produce identical rows
+        (the shared stage is beam-invariant by construction)."""
+        rng = np.random.default_rng(10)
+        q, ks, vs, ku, vu, ms, mu = make_case(rng, 4, 2, 16, 64, 3, 64, 3)
+        q = q.at[1].set(q[0])
+        ku = ku.at[1].set(ku[0])
+        vu = vu.at[1].set(vu[0])
+        o = np.asarray(xa.xattention(q, ks, vs, ku, vu, ms, mu, tile=64))
+        np.testing.assert_allclose(o[0], o[1], atol=1e-6)
+
+
+class TestPagedBaselineKernel:
+    def test_matches_oracle(self):
+        rng = np.random.default_rng(2)
+        args = make_case(rng, 8, 4, 32, 128, 3, 77, 3)
+        o = pr.paged_attention(*args, tile=64)
+        np.testing.assert_allclose(o, ref.beam_attention_ref(*args), atol=ATOL)
+
+    def test_matches_xattention(self):
+        """Baseline and xAttention are the same math, different schedule."""
+        rng = np.random.default_rng(4)
+        args = make_case(rng, 8, 2, 16, 128, 3, 128, 2)
+        a = xa.xattention(*args, tile=64)
+        b = pr.paged_attention(*args, tile=64)
+        np.testing.assert_allclose(a, b, atol=ATOL)
+
+    @given(seed=st.integers(0, 2**16))
+    @settings(max_examples=8, deadline=None)
+    def test_random_sweep(self, seed):
+        rng = np.random.default_rng(seed)
+        slen = int(rng.integers(1, 65))
+        args = make_case(rng, 4, 2, 16, 64, 3, slen, 3)
+        o = pr.paged_attention(*args, tile=32)
+        np.testing.assert_allclose(o, ref.beam_attention_ref(*args), atol=ATOL)
+
+
+class TestTrafficModel:
+    """The analytical HBM-traffic model used by the simulator must respect
+    the paper's core claim: xattention traffic is ~flat in BW while paged
+    traffic grows linearly."""
+
+    def test_traffic_ratio_grows_with_bw(self):
+        prev = 0.0
+        for bw in (8, 32, 128, 512):
+            x, p = xa.hbm_bytes_moved(bw, s=1024, h=8, d=64, nd=3)
+            ratio = p / x
+            assert ratio > prev
+            prev = ratio
+        assert prev > 100  # at BW=512 the redundancy factor is huge
+
+    def test_vmem_fits_typical_tpu(self):
+        # BW=128, D=128, ND=3, tile=512 must sit far below 16 MiB VMEM
+        assert xa.vmem_bytes(128, 8, 128, 3, 512) < 4 * 2**20

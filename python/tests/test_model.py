@@ -1,0 +1,136 @@
+"""L2 correctness: model shapes, KV-cache contract, kernel interchangeability."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+
+CFG = M.ModelConfig(name="test-nano", vocab=64, d_model=32, n_layers=2,
+                    n_heads=2, d_head=16, d_ff=64, seq=64, beam_width=4,
+                    num_decode=3, tile=32)
+
+
+@pytest.fixture(scope="module")
+def fns():
+    return M.make_fns(CFG)
+
+
+def prompt(rng, length):
+    toks = np.zeros(CFG.seq, np.int32)
+    toks[:length] = rng.integers(0, CFG.vocab, size=length)
+    return jnp.asarray(toks), jnp.int32(length)
+
+
+class TestPrefill:
+    def test_shapes(self, fns):
+        prefill_fn, _ = fns
+        rng = np.random.default_rng(0)
+        logits, ks, vs = prefill_fn(*prompt(rng, 40))
+        assert logits.shape == (CFG.vocab,)
+        assert ks.shape == (CFG.n_layers, CFG.seq, CFG.n_heads, CFG.d_head)
+        assert vs.shape == ks.shape
+        assert np.isfinite(np.asarray(logits)).all()
+
+    def test_padding_invariance(self, fns):
+        """Tokens beyond `length` must not influence the logits — this is
+        what lets the runtime bucket-pad prompts."""
+        prefill_fn, _ = fns
+        rng = np.random.default_rng(1)
+        toks, ln = prompt(rng, 30)
+        l1, _, _ = prefill_fn(toks, ln)
+        toks2 = toks.at[30:].set(7)  # garbage in the pad region
+        l2, _, _ = prefill_fn(toks2, ln)
+        np.testing.assert_allclose(l1, l2, atol=1e-5)
+
+    def test_length_sensitivity(self, fns):
+        """Changing the last valid token must change the logits."""
+        prefill_fn, _ = fns
+        rng = np.random.default_rng(2)
+        toks, ln = prompt(rng, 30)
+        l1, _, _ = prefill_fn(toks, ln)
+        toks2 = toks.at[29].set((int(toks[29]) + 1) % CFG.vocab)
+        l2, _, _ = prefill_fn(toks2, ln)
+        assert np.abs(np.asarray(l1) - np.asarray(l2)).max() > 1e-4
+
+
+class TestDecode:
+    def _roll(self, fns, rng, length, steps=None):
+        prefill_fn, decode_fn = fns
+        toks, ln = prompt(rng, length)
+        logits0, ks, vs = prefill_fn(toks, ln)
+        shape = (CFG.n_layers, CFG.beam_width, CFG.num_decode,
+                 CFG.n_heads, CFG.d_head)
+        k_uns = jnp.zeros(shape, jnp.float32)
+        v_uns = jnp.zeros(shape, jnp.float32)
+        beams = jnp.argsort(-logits0)[:CFG.beam_width].astype(jnp.int32)
+        outs = []
+        for step in range(steps or CFG.num_decode):
+            logits, k_uns, v_uns = decode_fn(
+                beams, ln, jnp.int32(step), ks, vs, k_uns, v_uns)
+            outs.append(np.asarray(logits))
+            beams = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return outs, np.asarray(k_uns), np.asarray(v_uns)
+
+    def test_shapes_and_cache_fill(self, fns):
+        rng = np.random.default_rng(3)
+        outs, k_uns, _ = self._roll(fns, rng, 40)
+        assert all(o.shape == (CFG.beam_width, CFG.vocab) for o in outs)
+        # after ND steps every unshared slot must have been written
+        assert (np.abs(k_uns).sum(axis=(0, 3, 4)) > 0).all()
+
+    def test_unshared_cache_is_exactly_bw_x_nd(self, fns):
+        """The separated-cache contract: no block rounding, no spare slots."""
+        rng = np.random.default_rng(4)
+        _, k_uns, v_uns = self._roll(fns, rng, 40)
+        assert k_uns.shape[1:3] == (CFG.beam_width, CFG.num_decode)
+        assert v_uns.shape[1:3] == (CFG.beam_width, CFG.num_decode)
+
+    def test_beam_isolation(self, fns):
+        """Changing one beam's token must not change other beams' logits
+        (beams only share the read-only prefix)."""
+        prefill_fn, decode_fn = fns
+        rng = np.random.default_rng(5)
+        toks, ln = prompt(rng, 40)
+        logits0, ks, vs = prefill_fn(toks, ln)
+        shape = (CFG.n_layers, CFG.beam_width, CFG.num_decode,
+                 CFG.n_heads, CFG.d_head)
+        zk = jnp.zeros(shape, jnp.float32)
+        beams = jnp.argsort(-logits0)[:CFG.beam_width].astype(jnp.int32)
+        l1, _, _ = decode_fn(beams, ln, jnp.int32(0), ks, vs, zk, zk)
+        beams2 = beams.at[0].set((int(beams[0]) + 1) % CFG.vocab)
+        l2, _, _ = decode_fn(beams2, ln, jnp.int32(0), ks, vs, zk, zk)
+        np.testing.assert_allclose(l1[1:], l2[1:], atol=1e-5)
+        assert np.abs(np.asarray(l1[0]) - np.asarray(l2[0])).max() > 1e-4
+
+    def test_paged_kernel_equivalent(self):
+        """decode(kernel=paged) == decode(kernel=xattention): both HLO
+        artifact variants implement identical model semantics."""
+        rng = np.random.default_rng(6)
+        a, _, _ = self._roll(M.make_fns(CFG, kernel="xattention"), rng, 33)
+        rng = np.random.default_rng(6)
+        b, _, _ = self._roll(M.make_fns(CFG, kernel="paged"), rng, 33)
+        for x, y in zip(a, b):
+            np.testing.assert_allclose(x, y, atol=5e-4)
+
+    @given(length=st.integers(1, 64))
+    @settings(max_examples=10, deadline=None)
+    def test_any_prompt_length(self, fns, length):
+        rng = np.random.default_rng(length)
+        outs, _, _ = self._roll(fns, rng, length, steps=1)
+        assert np.isfinite(outs[0]).all()
+
+
+class TestConfig:
+    def test_param_count_formula(self):
+        w = M.init_weights(CFG)
+        n = sum(int(np.prod(p.shape)) for p in
+                [w["tok_emb"], w["w_out"], w["ln_f"]])
+        for lw in w["layers"]:
+            n += sum(int(np.prod(p.shape)) for p in lw.values())
+        assert n == CFG.params
+
+    def test_tiny_is_lowerable_bucket(self):
+        assert M.TINY.seq % M.TINY.tile == 0
+        assert M.SMALL.seq % M.SMALL.tile == 0

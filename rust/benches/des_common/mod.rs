@@ -1,0 +1,94 @@
+//! Shared helpers for the DES-backed figure benches (13/14/15/16/18/19).
+
+use xgr::config::{HardwareProfile, ModelSpec, ServingConfig};
+use xgr::metrics::{Row, Table};
+use xgr::simulator::{calibrate, simulate, DesConfig, DesResult, EngineKind};
+use xgr::workload::{AmazonLike, JdTraceLike, Trace};
+
+pub fn make_trace(dataset: &str, seq: usize, n: usize, rps: f64, seed: u64) -> Trace {
+    match dataset {
+        "jd" => JdTraceLike::for_seq_bucket(seq).generate_lengths(n, rps, seed),
+        _ => AmazonLike::for_seq_bucket(seq).generate_lengths(n, rps, seed),
+    }
+}
+
+pub fn des_run(
+    hw: &HardwareProfile,
+    model: &ModelSpec,
+    engine: EngineKind,
+    bw: usize,
+    trace: &Trace,
+) -> DesResult {
+    let mut serving = ServingConfig::default();
+    serving.beam_width = bw;
+    serving.top_k = bw;
+    let cfg = DesConfig {
+        hw: hw.clone(),
+        model: model.clone(),
+        serving,
+        engine,
+        host: calibrate::analytic(bw, bw, model.vocab),
+    };
+    simulate(trace, &cfg)
+}
+
+/// Sweep RPS for several engines; emit the latency table and return each
+/// engine's max SLO-compliant throughput (the paper's headline metric).
+pub fn rps_sweep(
+    title: &str,
+    hw: &HardwareProfile,
+    model: &ModelSpec,
+    dataset: &str,
+    engines: &[EngineKind],
+    bw: usize,
+    rps_list: &[usize],
+    n: usize,
+    slo_ms: f64,
+) -> Vec<(EngineKind, f64)> {
+    let mut table = Table::new(title.to_string());
+    let mut best = Vec::new();
+    for &engine in engines {
+        let mut max_ok = 0.0f64;
+        for &rps in rps_list {
+            let trace = make_trace(dataset, model.seq, n, rps as f64, 42);
+            let r = des_run(hw, model, engine, bw, &trace);
+            if r.meets_slo(slo_ms) {
+                max_ok = max_ok.max(r.throughput_rps());
+            }
+            table.push(
+                Row::new(format!("{}@rps{rps}", engine.name()))
+                    .col("mean_ms", r.mean_ms())
+                    .col("p99_ms", r.p99_ms())
+                    .col("thru_rps", r.throughput_rps())
+                    .col("slo_ok", if r.meets_slo(slo_ms) { 1.0 } else { 0.0 }),
+            );
+        }
+        best.push((engine, max_ok));
+    }
+    table.emit();
+    best
+}
+
+/// Print the headline throughput ratio of xGR vs the best baseline.
+pub fn headline(best: &[(EngineKind, f64)]) {
+    let xgr = best
+        .iter()
+        .find(|(e, _)| *e == EngineKind::Xgr)
+        .map(|(_, t)| *t)
+        .unwrap_or(0.0);
+    let base = best
+        .iter()
+        .filter(|(e, _)| *e != EngineKind::Xgr)
+        .map(|(_, t)| *t)
+        .fold(0.0f64, f64::max);
+    if base > 0.0 {
+        println!(
+            "SLO-constrained throughput: xGR {xgr:.0} rps vs best baseline {base:.0} rps → {:.2}× (paper: ≥3.49×)\n",
+            xgr / base
+        );
+    } else {
+        println!(
+            "SLO-constrained throughput: xGR {xgr:.0} rps; baselines met the SLO at no tested RPS\n"
+        );
+    }
+}

@@ -1,0 +1,54 @@
+//! Fig 13 — end-to-end latency vs RPS, Qwen3 family on the Ascend
+//! profile, Amazon-Review-like and JD-like datasets.
+//!
+//! Paper shape: baselines hit the 200 ms P99 wall at a fraction of xGR's
+//! sustainable RPS; xGR's latency curve stays smooth; the gap widens with
+//! beam width and model size. Headline: ≥3.49× SLO-constrained
+//! throughput.
+
+#[path = "des_common/mod.rs"]
+mod des_common;
+
+use des_common::{headline, rps_sweep};
+use xgr::config::{HardwareProfile, ModelSpec};
+use xgr::simulator::EngineKind;
+
+fn main() {
+    let hw = HardwareProfile::ascend_910b();
+    let engines =
+        [EngineKind::Xgr, EngineKind::XllmLike, EngineKind::VllmLike];
+    let n = 1500;
+    for dataset in ["amazon", "jd"] {
+        for model_name in ["qwen3-0.6b", "qwen3-1.7b", "qwen3-4b"] {
+            let model = ModelSpec::by_name(model_name).unwrap();
+            let best = rps_sweep(
+                &format!("fig13: {model_name} / {dataset} / BW=128 (Ascend)"),
+                &hw,
+                &model,
+                dataset,
+                &engines,
+                128,
+                &[5, 10, 25, 50, 100, 200, 400, 800],
+                n,
+                200.0,
+            );
+            headline(&best);
+        }
+    }
+    // beam-width sensitivity at one scale (paper: gap widens with BW)
+    let model = ModelSpec::qwen3_0_6b();
+    for bw in [256usize, 512] {
+        let best = rps_sweep(
+            &format!("fig13: qwen3-0.6b / amazon / BW={bw}"),
+            &hw,
+            &model,
+            "amazon",
+            &engines,
+            bw,
+            &[5, 10, 25, 50, 100, 200, 400],
+            n,
+            200.0,
+        );
+        headline(&best);
+    }
+}

@@ -1,0 +1,50 @@
+//! Fig 14 — end-to-end latency vs RPS, OneRec family on the Ascend
+//! profile. vLLM does not natively support OneRec (paper Sec 9.2), so
+//! the comparison is xGR vs xLLM-like, over both datasets and the model
+//! scale grid.
+
+#[path = "des_common/mod.rs"]
+mod des_common;
+
+use des_common::{headline, rps_sweep};
+use xgr::config::{HardwareProfile, ModelSpec};
+use xgr::simulator::EngineKind;
+
+fn main() {
+    let hw = HardwareProfile::ascend_910b();
+    let engines = [EngineKind::Xgr, EngineKind::XllmLike];
+    let n = 1500;
+    for dataset in ["amazon", "jd"] {
+        for model_name in ["onerec-0.1b", "onerec-1b", "onerec-3b"] {
+            let model = ModelSpec::by_name(model_name).unwrap();
+            let best = rps_sweep(
+                &format!("fig14: {model_name} / {dataset} / BW=128 (Ascend)"),
+                &hw,
+                &model,
+                dataset,
+                &engines,
+                128,
+                &[5, 10, 25, 50, 100, 200, 400, 800, 1600],
+                n,
+                200.0,
+            );
+            headline(&best);
+        }
+    }
+    // small model + big beams: host overheads dominate (paper Sec 2.2.3 #3)
+    let model = ModelSpec::onerec_0_1b();
+    for bw in [256usize, 512] {
+        let best = rps_sweep(
+            &format!("fig14: onerec-0.1b / amazon / BW={bw}"),
+            &hw,
+            &model,
+            "amazon",
+            &engines,
+            bw,
+            &[10, 25, 50, 100, 200, 400, 800],
+            n,
+            200.0,
+        );
+        headline(&best);
+    }
+}

@@ -1,0 +1,107 @@
+//! §Perf microbenchmarks — the L3 hot-path components, measured on this
+//! machine. These are the numbers the DES calibration feeds back into
+//! the figure benches, and the before/after source for EXPERIMENTS.md
+//! §Perf.
+
+use xgr::beam::{BeamSelector, NaiveBeam, Selection, XBeam};
+use xgr::itemspace::{Catalog, ItemTrie, MaskWorkspace};
+use xgr::kvcache::inplace;
+use xgr::metrics::{Histogram, Row, Table};
+use xgr::util::now_ns;
+use xgr::util::rng::Pcg;
+
+fn time_us<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    f(); // warmup
+    let t0 = now_ns();
+    for _ in 0..reps {
+        f();
+    }
+    (now_ns() - t0) as f64 / 1e3 / reps as f64
+}
+
+fn main() {
+    let mut rng = Pcg::new(1);
+
+    // ---- beam selection: xbeam vs naive across (BW, V) ----
+    let mut t = Table::new("perf: beam selection per decode step (us)");
+    for (bw, v) in [(64usize, 1024usize), (128, 8192), (256, 8192), (512, 8192)] {
+        let logits: Vec<f32> =
+            (0..bw * v).map(|_| (rng.f32() - 0.5) * 8.0).collect();
+        let scores = vec![0.0f32; bw];
+        let mut out = Selection::with_capacity(bw);
+        let mut xb = XBeam::new(bw, bw, v);
+        let x_us = time_us(8, || xb.step(&logits, v, &scores, bw, bw, &mut out));
+        let mut nv = NaiveBeam::new();
+        let n_us = time_us(4, || nv.step(&logits, v, &scores, bw, bw, &mut out));
+        t.push(
+            Row::new(format!("BW={bw} V={v}"))
+                .col("xbeam_us", x_us)
+                .col("naive_us", n_us)
+                .col("speedup", n_us / x_us)
+                .col("skip_ratio", xb.skip_ratio()),
+        );
+    }
+    t.emit();
+
+    // ---- mask preparation: dense step-0 vs sparse updates ----
+    let mut t = Table::new("perf: mask preparation per request (us)");
+    for (vocab, items, bw) in [(2048u32, 20_000usize, 128usize), (8192, 100_000, 128)] {
+        let catalog = Catalog::generate(vocab, items, 3);
+        let trie = ItemTrie::build(&catalog);
+        let mut ws = MaskWorkspace::new(&trie, bw);
+        let dense = time_us(8, || ws.set_step0());
+        let roots = trie.valid_roots().to_vec();
+        let prefixes: Vec<Vec<u32>> = (0..bw)
+            .map(|_| vec![roots[rng.below(roots.len() as u64) as usize]])
+            .collect();
+        let sparse = time_us(8, || ws.update_sparse(&trie, &prefixes));
+        t.push(
+            Row::new(format!("V={vocab} items={items}"))
+                .col("dense_us", dense)
+                .col("sparse_us", sparse)
+                .col("dense_over_sparse", dense / sparse),
+        );
+    }
+    t.emit();
+
+    // ---- in-place KV reorder vs double-buffer gather ----
+    let mut t = Table::new("perf: unshared-KV beam reorder (us, BW rows)");
+    for (bw, row_len) in [(128usize, 768usize), (512, 768), (512, 3072)] {
+        let parents: Vec<usize> =
+            (0..bw).map(|_| rng.below(bw as u64) as usize).collect();
+        let mut buf: Vec<f32> = (0..bw * row_len).map(|_| rng.f32()).collect();
+        let mut temp = Vec::new();
+        let inplace_us = time_us(16, || {
+            inplace::reorder_rows(&mut buf, row_len, &parents, &mut temp);
+        });
+        // double-buffer gather comparator (allocates + moves everything)
+        let gather_us = time_us(16, || {
+            let mut out = vec![0f32; buf.len()];
+            for (dst, &src) in parents.iter().enumerate() {
+                out[dst * row_len..(dst + 1) * row_len]
+                    .copy_from_slice(&buf[src * row_len..(src + 1) * row_len]);
+            }
+            std::hint::black_box(&out);
+        });
+        let (_, stats) = inplace::plan_moves(&parents);
+        t.push(
+            Row::new(format!("BW={bw} row={row_len}"))
+                .col("inplace_us", inplace_us)
+                .col("gather2buf_us", gather_us)
+                .col("moves", stats.copies as f64)
+                .col("temps", stats.temp_saves as f64),
+        );
+    }
+    t.emit();
+
+    // ---- metrics hot path ----
+    let mut t = Table::new("perf: metrics hot path");
+    let mut h = Histogram::new();
+    let rec_ns = time_us(1000, || {
+        for i in 0..1000u64 {
+            h.record(1000 + i * 37);
+        }
+    }) / 1000.0 * 1000.0; // ns per record
+    t.push(Row::new("histogram.record").col("ns_per_op", rec_ns));
+    t.emit();
+}

@@ -1,0 +1,19 @@
+//! Baseline engine assemblies.
+//!
+//! The paper compares against vLLM (PagedAttention, no GR awareness) and
+//! xLLM (industrial engine, paged KV, graph dispatch). We reproduce both
+//! at two levels:
+//!
+//! * **real mode** — configurations of the in-process [`crate::coordinator::Engine`]
+//!   (naive full-sort selection, no state pooling, paged-baseline decode
+//!   kernel artifact) served through the same coordinator, so tiny-model
+//!   benches compare real implementations;
+//! * **simulated mode** — [`crate::simulator::EngineKind`] variants with
+//!   paged KV accounting, host-side beam + filtering with hard syncs, and
+//!   their own launch/stream policies, for cluster-scale figures.
+
+pub mod vllm_like;
+pub mod xllm_like;
+
+pub use vllm_like::{vllm_like_engine_config, vllm_like_features, vllm_like_serving};
+pub use xllm_like::{xllm_like_engine_config, xllm_like_features, xllm_like_serving};

@@ -1,0 +1,65 @@
+//! vLLM-like baseline (real mode).
+//!
+//! What "vLLM serving a GR model" does differently from xGR, expressed
+//! as engine knobs + serving features:
+//!
+//! * naive full-sort beam selection with fresh allocations per step;
+//! * no state pooling;
+//! * no graph dispatch, no host/device overlap, single stream;
+//! * decode runs the `decode_paged` artifact (per-beam prefix reload
+//!   structure) when the PJRT executor is used.
+
+use crate::config::{Features, ServingConfig};
+use crate::coordinator::{EngineConfig, SelectorKind};
+
+/// Engine knobs for the vLLM-like baseline.
+pub fn vllm_like_engine_config() -> EngineConfig {
+    EngineConfig {
+        selector: SelectorKind::Naive,
+        top_k: 0,
+        valid_filter: true, // it must still filter; it just pays more
+        pooling: false,
+        bos_token: 0,
+    }
+}
+
+/// Serving features a vLLM-like deployment has (for apples-to-apples
+/// coordinator comparisons).
+pub fn vllm_like_features() -> Features {
+    Features {
+        valid_filter: true,
+        graph_dispatch: false,
+        multi_stream: false,
+        overlap: false,
+    }
+}
+
+/// Full serving config override.
+pub fn vllm_like_serving(base: &ServingConfig) -> ServingConfig {
+    let mut s = base.clone();
+    s.features = vllm_like_features();
+    s.num_streams = 1;
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baseline_disables_xgr_features() {
+        let f = vllm_like_features();
+        assert!(!f.graph_dispatch && !f.multi_stream && !f.overlap);
+        assert!(f.valid_filter);
+        let e = vllm_like_engine_config();
+        assert_eq!(e.selector, SelectorKind::Naive);
+        assert!(!e.pooling);
+    }
+
+    #[test]
+    fn serving_override_forces_single_stream() {
+        let s = vllm_like_serving(&ServingConfig::default());
+        assert_eq!(s.num_streams, 1);
+        s.validate().unwrap();
+    }
+}

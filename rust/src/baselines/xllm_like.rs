@@ -1,0 +1,54 @@
+//! xLLM-like baseline (real mode): an industrial engine — graph dispatch
+//! and dual-stream execution ARE present — but no GR-specific treatment:
+//! paged KV semantics, naive full-sort beam selection, no shared-prefix
+//! kernel, no state pooling, no mask/forward overlap.
+
+use crate::config::{Features, ServingConfig};
+use crate::coordinator::{EngineConfig, SelectorKind};
+
+pub fn xllm_like_engine_config() -> EngineConfig {
+    EngineConfig {
+        selector: SelectorKind::Naive,
+        top_k: 0,
+        valid_filter: true,
+        pooling: false,
+        bos_token: 0,
+    }
+}
+
+pub fn xllm_like_features() -> Features {
+    Features {
+        valid_filter: true,
+        graph_dispatch: true,
+        multi_stream: true,
+        overlap: false,
+    }
+}
+
+pub fn xllm_like_serving(base: &ServingConfig) -> ServingConfig {
+    let mut s = base.clone();
+    s.features = xllm_like_features();
+    s.num_streams = 2; // the paper: xLLM employs dual-stream parallelism
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xllm_has_graph_but_not_overlap() {
+        let f = xllm_like_features();
+        assert!(f.graph_dispatch);
+        assert!(f.multi_stream);
+        assert!(!f.overlap);
+        assert_eq!(xllm_like_serving(&ServingConfig::default()).num_streams, 2);
+    }
+
+    #[test]
+    fn engine_is_naive_like_vllm() {
+        let e = xllm_like_engine_config();
+        assert_eq!(e.selector, SelectorKind::Naive);
+        assert!(!e.pooling);
+    }
+}

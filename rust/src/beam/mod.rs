@@ -1,0 +1,23 @@
+//! Beam search over the item space — xBeam (paper Sec 6).
+//!
+//! Each decode phase: per-beam logits are masked (valid-path constraint),
+//! turned into log-probabilities, expanded to per-beam Top-K candidates,
+//! and reduced to the global Top-BW. The paper's observations:
+//!
+//! * the reduction is a *partial* sort: a bounded min-heap plus per-beam
+//!   descending candidate order allows **early termination** per beam
+//!   (Sec 6.2) — implemented in [`xbeam::XBeam`];
+//! * BW is fixed, so all data structures can be allocated once and
+//!   reused across steps and requests (Sec 6.3) — [`pool::StatePool`];
+//! * the naive comparator — full sort of the BW×K pool with fresh
+//!   allocations — is [`naive::NaiveBeam`], used by the baseline engines
+//!   and benches.
+
+pub mod types;
+pub mod naive;
+pub mod xbeam;
+pub mod pool;
+
+pub use naive::NaiveBeam;
+pub use types::{BeamSelector, Selection, SelectorStats};
+pub use xbeam::XBeam;

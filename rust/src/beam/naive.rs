@@ -1,0 +1,130 @@
+//! The naive beam-selection baseline: per-beam full-vocab sort for Top-K,
+//! then a **full sort of the aggregated BW×K pool**, with fresh
+//! allocations every step — exactly the implementation the paper calls
+//! "highly time-consuming" (Sec 6). Used by the vLLM/xLLM-like baseline
+//! engines and as the correctness oracle for XBeam.
+
+use super::types::{log_softmax_row, BeamSelector, Selection, SelectorStats};
+
+#[derive(Default)]
+pub struct NaiveBeam {
+    stats: SelectorStats,
+}
+
+impl NaiveBeam {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl BeamSelector for NaiveBeam {
+    fn step(
+        &mut self,
+        logits: &[f32],
+        vocab: usize,
+        beam_scores: &[f32],
+        k: usize,
+        bw: usize,
+        out: &mut Selection,
+    ) {
+        let n_beams = beam_scores.len();
+        assert_eq!(logits.len(), n_beams * vocab);
+        // fresh allocations every step — the behaviour Sec 6.3 removes
+        let mut pool: Vec<(f32, usize, u32)> = Vec::new();
+        self.stats.allocations += 1;
+        for b in 0..n_beams {
+            let mut row = logits[b * vocab..(b + 1) * vocab].to_vec();
+            self.stats.allocations += 1;
+            log_softmax_row(&mut row);
+            // full sort of the vocab to find top-k
+            let mut idx: Vec<u32> = (0..vocab as u32).collect();
+            self.stats.allocations += 1;
+            idx.sort_by(|&a, &b2| {
+                row[b2 as usize].partial_cmp(&row[a as usize]).unwrap()
+            });
+            for &t in idx.iter().take(k) {
+                let lp = row[t as usize];
+                if lp.is_finite() && lp > -1.0e29 {
+                    pool.push((beam_scores[b] + lp, b, t));
+                }
+            }
+        }
+        self.stats.candidates_seen += pool.len() as u64;
+        // full sort of the aggregated pool
+        pool.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        out.clear();
+        for &(score, beam, tok) in pool.iter().take(bw) {
+            out.parents.push(beam);
+            out.tokens.push(tok);
+            out.scores.push(score);
+        }
+    }
+
+    fn stats(&self) -> SelectorStats {
+        self.stats
+    }
+
+    fn name(&self) -> &'static str {
+        "naive(full-sort)"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn picks_global_top_bw() {
+        // 2 beams, vocab 4; craft logits so the winners are known
+        let logits = vec![
+            10.0, 0.0, 0.0, 0.0, // beam 0: token 0 dominant
+            0.0, 0.0, 9.0, 8.9, // beam 1: tokens 2,3 dominant
+        ];
+        let mut sel = NaiveBeam::new();
+        let mut out = Selection::default();
+        sel.step(&logits, 4, &[0.0, 0.0], 2, 3, &mut out);
+        assert_eq!(out.len(), 3);
+        // beam 0 token 0 has the sharpest distribution → highest log-prob
+        assert_eq!((out.parents[0], out.tokens[0]), (0, 0));
+        // next two from beam 1
+        assert_eq!(out.parents[1], 1);
+        assert_eq!(out.parents[2], 1);
+    }
+
+    #[test]
+    fn beam_scores_shift_ranking() {
+        let logits = vec![
+            1.0, 0.0, // beam 0
+            1.0, 0.0, // beam 1 — identical rows
+        ];
+        let mut sel = NaiveBeam::new();
+        let mut out = Selection::default();
+        // beam 1 carries a big head start
+        sel.step(&logits, 2, &[0.0, 5.0], 1, 2, &mut out);
+        assert_eq!(out.parents[0], 1);
+        assert_eq!(out.parents[1], 0);
+    }
+
+    #[test]
+    fn masked_tokens_never_selected() {
+        let m = -1.0e30f32;
+        let logits = vec![
+            m, 2.0, m, 1.0, // only tokens 1 and 3 valid
+        ];
+        let mut sel = NaiveBeam::new();
+        let mut out = Selection::default();
+        sel.step(&logits, 4, &[0.0], 4, 4, &mut out);
+        assert_eq!(out.len(), 2, "only the 2 valid tokens can be chosen");
+        assert!(out.tokens.iter().all(|&t| t == 1 || t == 3));
+    }
+
+    #[test]
+    fn fully_masked_input_yields_empty() {
+        let m = -1.0e30f32;
+        let logits = vec![m; 8];
+        let mut sel = NaiveBeam::new();
+        let mut out = Selection::default();
+        sel.step(&logits, 4, &[0.0, 0.0], 2, 4, &mut out);
+        assert!(out.is_empty());
+    }
+}

@@ -1,0 +1,192 @@
+//! Request-state pooling (paper Sec 6.3).
+//!
+//! Beam search continuously retires old sequences and creates new ones;
+//! allocating/deallocating the associated state per request is measurable
+//! overhead at thousands of QPS. Since BW and ND are deployment
+//! constants, every request needs an identically-shaped state object —
+//! a free list suffices: `take()` pops a recycled object (cleared, not
+//! reallocated), `give()` returns it.
+
+/// Per-request beam state: prefixes, scores, and the selection scratch.
+#[derive(Debug)]
+pub struct BeamState {
+    pub bw: usize,
+    pub nd: usize,
+    /// flat [BW, ND] token prefixes; column count = tokens decoded so far
+    pub prefixes: Vec<u32>,
+    pub prefix_len: usize,
+    pub scores: Vec<f32>,
+    /// parent map of the last selection (for the KV reorder)
+    pub parents: Vec<usize>,
+}
+
+impl BeamState {
+    fn new(bw: usize, nd: usize) -> Self {
+        BeamState {
+            bw,
+            nd,
+            prefixes: vec![0; bw * nd],
+            prefix_len: 0,
+            scores: vec![0.0; bw],
+            parents: (0..bw).collect(),
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.prefixes.iter_mut().for_each(|x| *x = 0);
+        self.prefix_len = 0;
+        self.scores.iter_mut().for_each(|x| *x = 0.0);
+        for (i, p) in self.parents.iter_mut().enumerate() {
+            *p = i;
+        }
+    }
+
+    /// Prefix of beam `b` decoded so far.
+    pub fn prefix(&self, b: usize) -> &[u32] {
+        &self.prefixes[b * self.nd..b * self.nd + self.prefix_len]
+    }
+
+    /// Apply a selection: reorder prefixes by parent and append tokens.
+    pub fn apply_selection(
+        &mut self,
+        parents: &[usize],
+        tokens: &[u32],
+        scores: &[f32],
+        temp: &mut Vec<u32>,
+    ) {
+        assert!(parents.len() <= self.bw);
+        // gather prefixes by parent into temp, then write back (prefix
+        // rows are tiny — ND tokens — a gather beats the in-place planner
+        // here; the in-place path is for the big KV rows)
+        temp.clear();
+        for &p in parents {
+            temp.extend_from_slice(&self.prefixes[p * self.nd..(p + 1) * self.nd]);
+        }
+        let n = parents.len();
+        self.prefixes[..n * self.nd].copy_from_slice(&temp[..n * self.nd]);
+        for (b, (&t, &s)) in tokens.iter().zip(scores).enumerate() {
+            self.prefixes[b * self.nd + self.prefix_len] = t;
+            self.scores[b] = s;
+        }
+        self.parents[..n].copy_from_slice(parents);
+        self.prefix_len += 1;
+    }
+
+    /// Finished item IDs (only meaningful once prefix_len == nd == 3).
+    pub fn items(&self) -> Vec<[u32; 3]> {
+        assert_eq!(self.nd, 3);
+        (0..self.bw)
+            .map(|b| {
+                let p = &self.prefixes[b * 3..b * 3 + 3];
+                [p[0], p[1], p[2]]
+            })
+            .collect()
+    }
+}
+
+/// A free-list pool of `BeamState`s with fixed shape.
+pub struct StatePool {
+    bw: usize,
+    nd: usize,
+    free: Vec<BeamState>,
+    pub created: u64,
+    pub reused: u64,
+}
+
+impl StatePool {
+    pub fn new(bw: usize, nd: usize) -> Self {
+        StatePool { bw, nd, free: Vec::new(), created: 0, reused: 0 }
+    }
+
+    /// Pre-populate (done at startup, off the request path).
+    pub fn warm(&mut self, n: usize) {
+        for _ in 0..n {
+            self.free.push(BeamState::new(self.bw, self.nd));
+            self.created += 1;
+        }
+    }
+
+    pub fn take(&mut self) -> BeamState {
+        match self.free.pop() {
+            Some(mut s) => {
+                s.reset();
+                self.reused += 1;
+                s
+            }
+            None => {
+                self.created += 1;
+                BeamState::new(self.bw, self.nd)
+            }
+        }
+    }
+
+    pub fn give(&mut self, s: BeamState) {
+        debug_assert_eq!(s.bw, self.bw);
+        debug_assert_eq!(s.nd, self.nd);
+        self.free.push(s);
+    }
+
+    pub fn available(&self) -> usize {
+        self.free.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn selection_builds_prefixes() {
+        let mut s = BeamState::new(4, 3);
+        let mut temp = Vec::new();
+        // step 0: all from virtual parent rows (identity)
+        s.apply_selection(&[0, 0, 0, 0], &[5, 6, 7, 8], &[0.0; 4], &mut temp);
+        assert_eq!(s.prefix(0), &[5]);
+        assert_eq!(s.prefix(3), &[8]);
+        // step 1: beam 2 continues from old beam 3, others from 0
+        s.apply_selection(&[0, 0, 3, 1], &[10, 11, 12, 13], &[0.0; 4], &mut temp);
+        assert_eq!(s.prefix(0), &[5, 10]);
+        assert_eq!(s.prefix(2), &[8, 12]);
+        assert_eq!(s.prefix(3), &[6, 13]);
+        // step 2
+        s.apply_selection(&[2, 2, 0, 1], &[1, 2, 3, 4], &[0.5; 4], &mut temp);
+        assert_eq!(s.items()[0], [8, 12, 1]);
+        assert_eq!(s.items()[2], [5, 10, 3]);
+    }
+
+    #[test]
+    fn pool_reuses_without_allocating_new() {
+        let mut p = StatePool::new(8, 3);
+        p.warm(2);
+        assert_eq!(p.created, 2);
+        let a = p.take();
+        let b = p.take();
+        assert_eq!(p.reused, 2);
+        p.give(a);
+        p.give(b);
+        let _c = p.take();
+        assert_eq!(p.created, 2, "no new allocations after warmup");
+        assert_eq!(p.reused, 3);
+    }
+
+    #[test]
+    fn pool_grows_on_demand() {
+        let mut p = StatePool::new(4, 3);
+        let a = p.take();
+        assert_eq!(p.created, 1);
+        p.give(a);
+        assert_eq!(p.available(), 1);
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut p = StatePool::new(2, 3);
+        let mut s = p.take();
+        let mut temp = Vec::new();
+        s.apply_selection(&[0, 1], &[1, 2], &[1.0, 2.0], &mut temp);
+        p.give(s);
+        let s2 = p.take();
+        assert_eq!(s2.prefix_len, 0);
+        assert_eq!(s2.scores, vec![0.0, 0.0]);
+    }
+}

@@ -1,0 +1,162 @@
+//! Shared beam-search types and numeric helpers.
+
+/// Result of one beam-selection step: the new top-BW beams.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Selection {
+    /// parent beam index of each new beam (drives the KV reorder)
+    pub parents: Vec<usize>,
+    /// token chosen for each new beam
+    pub tokens: Vec<u32>,
+    /// cumulative log-probability of each new beam
+    pub scores: Vec<f32>,
+}
+
+impl Selection {
+    pub fn with_capacity(bw: usize) -> Self {
+        Selection {
+            parents: Vec::with_capacity(bw),
+            tokens: Vec::with_capacity(bw),
+            scores: Vec::with_capacity(bw),
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.parents.clear();
+        self.tokens.clear();
+        self.scores.clear();
+    }
+
+    pub fn len(&self) -> usize {
+        self.parents.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.parents.is_empty()
+    }
+}
+
+/// Work counters for comparing selector implementations (Fig 18 inputs
+/// and the §Perf iteration log).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SelectorStats {
+    /// candidates examined by the global reduction
+    pub candidates_seen: u64,
+    /// candidates skipped by early termination
+    pub candidates_skipped: u64,
+    /// heap offers that were admitted
+    pub heap_admits: u64,
+    /// buffer (re)allocations performed
+    pub allocations: u64,
+}
+
+/// A beam-selection strategy.
+pub trait BeamSelector {
+    /// Reduce masked per-beam logits to the next top-BW beams.
+    ///
+    /// * `logits` — row-major `[n_beams, vocab]`, already masked.
+    /// * `beam_scores` — cumulative log-prob of each current beam.
+    /// * `k` — per-beam Top-K expansion width.
+    /// * `out` — overwritten with the new selection (size = min(BW,
+    ///   admissible candidates); fully-masked beams contribute none).
+    fn step(
+        &mut self,
+        logits: &[f32],
+        vocab: usize,
+        beam_scores: &[f32],
+        k: usize,
+        bw: usize,
+        out: &mut Selection,
+    );
+
+    fn stats(&self) -> SelectorStats;
+
+    fn name(&self) -> &'static str;
+}
+
+/// In-place log-softmax of one logits row; returns (max, logsumexp) so
+/// callers can audit numerics. Masked (-inf) entries stay -inf.
+pub fn log_softmax_row(row: &mut [f32]) -> (f32, f32) {
+    let mut max = f32::NEG_INFINITY;
+    for &x in row.iter() {
+        if x > max {
+            max = x;
+        }
+    }
+    if !max.is_finite() || max <= -1.0e29 {
+        // everything masked (NEG_INF is a large finite sentinel): leave
+        // the row poisoned rather than normalizing garbage
+        return (max, 0.0);
+    }
+    let mut sum = 0.0f32;
+    for &x in row.iter() {
+        let e = (x - max).exp();
+        sum += e;
+    }
+    let lse = sum.ln();
+    for x in row.iter_mut() {
+        *x = *x - max - lse;
+    }
+    (max, lse)
+}
+
+/// Seed the initial beams from a single (masked) prefill-logits row:
+/// top-`bw` tokens by log-probability. Returns (tokens, scores).
+pub fn seed_beams(logits: &mut [f32], bw: usize) -> (Vec<u32>, Vec<f32>) {
+    log_softmax_row(logits);
+    let mut idx: Vec<u32> = (0..logits.len() as u32).collect();
+    let n = logits.len();
+    let bw = bw.min(n);
+    idx.select_nth_unstable_by(bw.saturating_sub(1), |&a, &b| {
+        logits[b as usize].partial_cmp(&logits[a as usize]).unwrap()
+    });
+    let mut top: Vec<u32> = idx[..bw].to_vec();
+    top.sort_by(|&a, &b| logits[b as usize].partial_cmp(&logits[a as usize]).unwrap());
+    let scores: Vec<f32> = top.iter().map(|&t| logits[t as usize]).collect();
+    (top, scores)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_softmax_sums_to_one() {
+        let mut row = vec![1.0f32, 2.0, 3.0, 4.0];
+        log_softmax_row(&mut row);
+        let sum: f32 = row.iter().map(|x| x.exp()).sum();
+        assert!((sum - 1.0).abs() < 1e-5, "sum {sum}");
+        assert!(row.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn log_softmax_respects_mask() {
+        let mut row = vec![1.0f32, -1.0e30, 3.0];
+        log_softmax_row(&mut row);
+        assert!(row[1] < -1e20);
+        let sum: f32 = [row[0], row[2]].iter().map(|x| x.exp()).sum();
+        assert!((sum - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn log_softmax_fully_masked_row_is_stable() {
+        let mut row = vec![-1.0e30f32; 4];
+        log_softmax_row(&mut row);
+        assert!(row.iter().all(|x| *x < -1e20));
+        assert!(row.iter().all(|x| !x.is_nan()));
+    }
+
+    #[test]
+    fn seed_beams_picks_top() {
+        let mut logits = vec![0.0f32, 5.0, 1.0, 4.0, 2.0];
+        let (toks, scores) = seed_beams(&mut logits, 3);
+        assert_eq!(toks, vec![1, 3, 4]);
+        assert!(scores.windows(2).all(|w| w[0] >= w[1]));
+    }
+
+    #[test]
+    fn seed_beams_handles_bw_bigger_than_vocab() {
+        let mut logits = vec![1.0f32, 0.0];
+        let (toks, _) = seed_beams(&mut logits, 8);
+        assert_eq!(toks.len(), 2);
+    }
+}

@@ -1,0 +1,151 @@
+//! Hardware profiles for the accelerator simulator.
+//!
+//! The paper's unified abstraction (Table 1): core groups (CGs) each with a
+//! matrix compute unit (MCU: Cube / TensorCore) and a vector compute unit
+//! (VCU: Vector Unit / CUDA core), an explicitly-managed scratchpad, a
+//! shared L2, and HBM. Profiles below approximate an Ascend-910B-class NPU
+//! and an H800 GPU with public ballpark figures — absolute numbers only
+//! anchor the simulator's scale; the figures compare *systems on the same
+//! profile*, so shapes are profile-invariant.
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct HardwareProfile {
+    pub name: String,
+    /// number of core groups (AI cores / SMs)
+    pub num_cgs: usize,
+    /// matrix-unit FLOP/s per CG (dense bf16)
+    pub mcu_flops_per_cg: f64,
+    /// vector-unit FLOP/s per CG (f32)
+    pub vcu_flops_per_cg: f64,
+    /// HBM bandwidth, bytes/s
+    pub hbm_bps: f64,
+    /// L2 bandwidth, bytes/s (shared)
+    pub l2_bps: f64,
+    /// L2 capacity, bytes — re-reads of data resident in L2 are served at
+    /// `l2_bps` instead of HBM speed
+    pub l2_bytes: u64,
+    /// scratchpad bytes per CG (unified buffer / shared memory)
+    pub scratchpad_bytes: u64,
+    /// device memory capacity, bytes
+    pub mem_bytes: u64,
+    /// host->device bandwidth, bytes/s (PCIe / HCCS)
+    pub h2d_bps: f64,
+    /// per-kernel launch overhead, seconds
+    pub launch_overhead_s: f64,
+    /// per-graph launch overhead, seconds (amortizes many kernels)
+    pub graph_launch_overhead_s: f64,
+    /// host-side scheduling cost per kernel submitted individually, s
+    pub host_dispatch_s: f64,
+}
+
+impl HardwareProfile {
+    /// Ascend-910B-class NPU (the paper's primary platform).
+    pub fn ascend_910b() -> Self {
+        HardwareProfile {
+            name: "ascend-910b".into(),
+            num_cgs: 24,
+            mcu_flops_per_cg: 320e12 / 24.0,
+            vcu_flops_per_cg: 7.5e12 / 24.0,
+            hbm_bps: 1.6e12,
+            l2_bps: 6.4e12,
+            l2_bytes: 192 * 1024 * 1024,
+            scratchpad_bytes: 192 * 1024,
+            mem_bytes: 64 * (1u64 << 30),
+            h2d_bps: 56e9, // HCCS
+            launch_overhead_s: 12e-6,
+            graph_launch_overhead_s: 30e-6, // once per captured phase graph
+            host_dispatch_s: 6e-6,
+        }
+    }
+
+    /// NVIDIA H800 (the portability cluster, Sec 9.6).
+    pub fn h800() -> Self {
+        HardwareProfile {
+            name: "h800".into(),
+            num_cgs: 114,
+            mcu_flops_per_cg: 990e12 / 114.0, // bf16 tensor core, no sparsity
+            vcu_flops_per_cg: 67e12 / 114.0,
+            hbm_bps: 3.35e12,
+            l2_bps: 12e12,
+            l2_bytes: 50 * 1024 * 1024,
+            scratchpad_bytes: 228 * 1024,
+            mem_bytes: 80 * (1u64 << 30),
+            h2d_bps: 64e9, // PCIe Gen5 x16
+            launch_overhead_s: 8e-6,
+            graph_launch_overhead_s: 20e-6,
+            host_dispatch_s: 4e-6,
+        }
+    }
+
+    pub fn by_name(name: &str) -> anyhow::Result<Self> {
+        match name {
+            "ascend-910b" | "ascend" | "npu" => Ok(Self::ascend_910b()),
+            "h800" | "gpu" => Ok(Self::h800()),
+            _ => Err(anyhow::anyhow!("unknown hardware profile {name:?}")),
+        }
+    }
+
+    /// Aggregate matrix throughput.
+    pub fn mcu_flops(&self) -> f64 {
+        self.mcu_flops_per_cg * self.num_cgs as f64
+    }
+
+    /// Aggregate vector throughput.
+    pub fn vcu_flops(&self) -> f64 {
+        self.vcu_flops_per_cg * self.num_cgs as f64
+    }
+
+    /// Roofline time for a kernel: max of compute time and memory time,
+    /// on a subset of `cgs` core groups.
+    pub fn roofline_s(&self, flops: f64, bytes: f64, cgs: usize) -> f64 {
+        let cgs = cgs.clamp(1, self.num_cgs);
+        let compute = flops / (self.mcu_flops_per_cg * cgs as f64);
+        let memory = bytes / self.bw_share(cgs);
+        compute.max(memory)
+    }
+
+    /// Effective HBM bandwidth available to a `cgs`-CG subset. DMA
+    /// engines oversubscribe the fair share: a streaming stage on a few
+    /// CGs can draw up to ~3× its proportional slice (bounded by peak).
+    pub fn bw_share(&self, cgs: usize) -> f64 {
+        let frac = cgs.clamp(1, self.num_cgs) as f64 / self.num_cgs as f64;
+        self.hbm_bps * (3.0 * frac).min(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve() {
+        assert_eq!(HardwareProfile::by_name("npu").unwrap().name, "ascend-910b");
+        assert_eq!(HardwareProfile::by_name("gpu").unwrap().name, "h800");
+        assert!(HardwareProfile::by_name("tpu-v9").is_err());
+    }
+
+    #[test]
+    fn h800_outclasses_ascend() {
+        let a = HardwareProfile::ascend_910b();
+        let h = HardwareProfile::h800();
+        assert!(h.mcu_flops() > a.mcu_flops());
+        assert!(h.hbm_bps > a.hbm_bps);
+    }
+
+    #[test]
+    fn roofline_regimes() {
+        let hw = HardwareProfile::ascend_910b();
+        // tiny-compute huge-bytes => memory bound: time ~ bytes/bw
+        let t_mem = hw.roofline_s(1e6, 1e9, hw.num_cgs);
+        assert!((t_mem - 1e9 / hw.hbm_bps).abs() / t_mem < 1e-6);
+        // huge-compute tiny-bytes => compute bound
+        let t_cmp = hw.roofline_s(1e15, 1e3, hw.num_cgs);
+        assert!((t_cmp - 1e15 / hw.mcu_flops()).abs() / t_cmp < 1e-6);
+    }
+
+    #[test]
+    fn fewer_cgs_is_slower() {
+        let hw = HardwareProfile::ascend_910b();
+        assert!(hw.roofline_s(1e12, 1e8, 4) > hw.roofline_s(1e12, 1e8, 24));
+    }
+}

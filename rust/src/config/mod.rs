@@ -1,0 +1,12 @@
+//! Configuration: model specs, serving parameters and hardware profiles.
+//!
+//! Everything is constructible from presets (the paper's evaluated grid)
+//! or from a JSON config file (`xgr serve --config path.json`).
+
+pub mod model;
+pub mod serving;
+pub mod hardware;
+
+pub use hardware::HardwareProfile;
+pub use model::ModelSpec;
+pub use serving::{Features, ServingConfig};

@@ -1,0 +1,260 @@
+//! Model architecture specs.
+//!
+//! Two families, matching the paper's evaluation (Sec 9.1): Qwen3-shaped
+//! dense decoders (0.6B/1.7B/4B) and OneRec-shaped GR models (0.1B/1B/3B).
+//! The `onerec-tiny` spec is the one actually AOT-compiled to HLO and run
+//! end-to-end on the CPU PJRT client; the paper-scale specs drive the
+//! accelerator simulator's cost model.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelSpec {
+    pub name: String,
+    /// semantic-ID vocabulary per level (item tokens)
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub d_ff: usize,
+    /// prompt bucket length (prompts are padded up to this)
+    pub seq: usize,
+    /// default beam width (overridable per experiment)
+    pub beam_width: usize,
+    /// decode phases — 3 in GR (TID triplet)
+    pub num_decode: usize,
+    /// bytes per element of activations/KV (f32=4, bf16=2)
+    pub dtype_bytes: usize,
+}
+
+impl ModelSpec {
+    /// Parameter count (embeddings + per-layer attention/MLP + final norm).
+    pub fn params(&self) -> u64 {
+        let d = self.d_model as u64;
+        let hd = (self.n_heads * self.d_head) as u64;
+        let ff = self.d_ff as u64;
+        let v = self.vocab as u64;
+        let per_layer = 4 * d * hd + 3 * d * ff + 2 * d;
+        2 * v * d + self.n_layers as u64 * per_layer + d
+    }
+
+    /// KV-cache bytes for one token position, all layers (K and V).
+    pub fn kv_bytes_per_token(&self) -> u64 {
+        (2 * self.n_layers * self.n_heads * self.d_head * self.dtype_bytes) as u64
+    }
+
+    /// FLOPs of one forward pass over `tokens` positions attending to a
+    /// context of `ctx` tokens (2·params·tokens matmul + attention term).
+    pub fn flops_forward(&self, tokens: u64, ctx: u64) -> u64 {
+        let attn = 4 * tokens * ctx
+            * (self.n_layers * self.n_heads * self.d_head) as u64;
+        2 * self.params() * tokens + attn
+    }
+
+    // ---------------- presets (paper Sec 9.1 grid) ----------------
+
+    pub fn onerec_tiny() -> Self {
+        // must stay in sync with python/compile/model.py TINY
+        ModelSpec {
+            name: "onerec-tiny".into(),
+            vocab: 512,
+            d_model: 128,
+            n_layers: 2,
+            n_heads: 4,
+            d_head: 32,
+            d_ff: 256,
+            seq: 128,
+            beam_width: 8,
+            num_decode: 3,
+            dtype_bytes: 4,
+        }
+    }
+
+    pub fn onerec_0_1b() -> Self {
+        ModelSpec {
+            name: "onerec-0.1b".into(),
+            vocab: 8192,
+            d_model: 768,
+            n_layers: 12,
+            n_heads: 12,
+            d_head: 64,
+            d_ff: 3072,
+            seq: 1024,
+            beam_width: 128,
+            num_decode: 3,
+            dtype_bytes: 2,
+        }
+    }
+
+    pub fn onerec_1b() -> Self {
+        ModelSpec {
+            name: "onerec-1b".into(),
+            vocab: 8192,
+            d_model: 2048,
+            n_layers: 16,
+            n_heads: 16,
+            d_head: 128,
+            d_ff: 8192,
+            seq: 1024,
+            beam_width: 128,
+            num_decode: 3,
+            dtype_bytes: 2,
+        }
+    }
+
+    pub fn onerec_3b() -> Self {
+        ModelSpec {
+            name: "onerec-3b".into(),
+            vocab: 8192,
+            d_model: 3072,
+            n_layers: 24,
+            n_heads: 24,
+            d_head: 128,
+            d_ff: 12288,
+            seq: 1024,
+            beam_width: 128,
+            num_decode: 3,
+            dtype_bytes: 2,
+        }
+    }
+
+    pub fn qwen3_0_6b() -> Self {
+        ModelSpec {
+            name: "qwen3-0.6b".into(),
+            vocab: 16384, // semantic-ID head; LM vocab replaced for GR
+            d_model: 1024,
+            n_layers: 28,
+            n_heads: 16,
+            d_head: 128,
+            d_ff: 3072,
+            seq: 1024,
+            beam_width: 128,
+            num_decode: 3,
+            dtype_bytes: 2,
+        }
+    }
+
+    pub fn qwen3_1_7b() -> Self {
+        ModelSpec {
+            name: "qwen3-1.7b".into(),
+            vocab: 16384,
+            d_model: 2048,
+            n_layers: 28,
+            n_heads: 16,
+            d_head: 128,
+            d_ff: 6144,
+            seq: 1024,
+            beam_width: 128,
+            num_decode: 3,
+            dtype_bytes: 2,
+        }
+    }
+
+    pub fn qwen3_4b() -> Self {
+        ModelSpec {
+            name: "qwen3-4b".into(),
+            vocab: 16384,
+            d_model: 2560,
+            n_layers: 36,
+            n_heads: 32,
+            d_head: 128,
+            d_ff: 9728,
+            seq: 1024,
+            beam_width: 128,
+            num_decode: 3,
+            dtype_bytes: 2,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Result<Self> {
+        Ok(match name {
+            "onerec-tiny" => Self::onerec_tiny(),
+            "onerec-0.1b" => Self::onerec_0_1b(),
+            "onerec-1b" => Self::onerec_1b(),
+            "onerec-3b" => Self::onerec_3b(),
+            "qwen3-0.6b" => Self::qwen3_0_6b(),
+            "qwen3-1.7b" => Self::qwen3_1_7b(),
+            "qwen3-4b" => Self::qwen3_4b(),
+            _ => return Err(anyhow!("unknown model spec {name:?}")),
+        })
+    }
+
+    /// Build from a manifest.json `config` object (the AOT-compiled truth).
+    pub fn from_manifest(j: &Json) -> Result<Self> {
+        let g = |k: &str| -> Result<usize> {
+            j.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("manifest config missing {k}"))
+        };
+        Ok(ModelSpec {
+            name: j
+                .get("name")
+                .and_then(Json::as_str)
+                .unwrap_or("manifest-model")
+                .to_string(),
+            vocab: g("vocab")?,
+            d_model: g("d_model")?,
+            n_layers: g("n_layers")?,
+            n_heads: g("n_heads")?,
+            d_head: g("d_head")?,
+            d_ff: g("d_ff")?,
+            seq: g("seq")?,
+            beam_width: g("beam_width")?,
+            num_decode: g("num_decode")?,
+            dtype_bytes: 4, // artifacts are f32
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_counts_are_plausible() {
+        // names promise rough scales
+        let close = |got: u64, want: f64| {
+            let g = got as f64;
+            g > want * 0.4 && g < want * 2.5
+        };
+        assert!(close(ModelSpec::onerec_0_1b().params(), 1e8));
+        assert!(close(ModelSpec::onerec_1b().params(), 1e9));
+        assert!(close(ModelSpec::onerec_3b().params(), 3e9));
+        assert!(close(ModelSpec::qwen3_0_6b().params(), 6e8));
+        assert!(close(ModelSpec::qwen3_1_7b().params(), 1.7e9));
+        assert!(close(ModelSpec::qwen3_4b().params(), 4e9));
+    }
+
+    #[test]
+    fn tiny_matches_python_model() {
+        // python/compile/model.py printed params: 459392
+        assert_eq!(ModelSpec::onerec_tiny().params(), 459392);
+    }
+
+    #[test]
+    fn kv_bytes_formula() {
+        let m = ModelSpec::onerec_tiny();
+        // 2 (K,V) * 2 layers * 4 heads * 32 dh * 4 bytes = 2048
+        assert_eq!(m.kv_bytes_per_token(), 2048);
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for n in [
+            "onerec-tiny", "onerec-0.1b", "onerec-1b", "onerec-3b",
+            "qwen3-0.6b", "qwen3-1.7b", "qwen3-4b",
+        ] {
+            assert_eq!(ModelSpec::by_name(n).unwrap().name, n);
+        }
+        assert!(ModelSpec::by_name("gpt-5").is_err());
+    }
+
+    #[test]
+    fn flops_grow_with_context() {
+        let m = ModelSpec::onerec_0_1b();
+        assert!(m.flops_forward(1, 2048) > m.flops_forward(1, 128));
+        assert!(m.flops_forward(128, 1024) > m.flops_forward(1, 1024));
+    }
+}

@@ -1,0 +1,161 @@
+//! Serving parameters: SLO, batching policy, beam-search sizes, and the
+//! feature toggles used by the Fig 18 scheduling ablation.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+
+/// Feature toggles for xSchedule (each is one ablation axis in Fig 18).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Features {
+    /// device-resident valid-item filtering (xBeam masks); when off the
+    /// engine emits unfiltered candidates and invalid items surface.
+    pub valid_filter: bool,
+    /// capture per-phase device ops into a graph, submitted once
+    pub graph_dispatch: bool,
+    /// concurrent per-batch streams over the accelerator
+    pub multi_stream: bool,
+    /// host/device overlap (mask-gen ∥ forward, H2D ∥ attention)
+    pub overlap: bool,
+}
+
+impl Features {
+    pub fn all_on() -> Self {
+        Features { valid_filter: true, graph_dispatch: true, multi_stream: true, overlap: true }
+    }
+
+    /// The Fig 18 ablation baseline: xAttention+xBeam present but no
+    /// scheduling optimizations.
+    pub fn baseline() -> Self {
+        Features { valid_filter: true, graph_dispatch: false, multi_stream: false, overlap: false }
+    }
+}
+
+/// The full serving configuration.
+#[derive(Clone, Debug)]
+pub struct ServingConfig {
+    /// latency SLO (the paper's P99 constraint), in milliseconds
+    pub slo_ms: f64,
+    /// beam width BW
+    pub beam_width: usize,
+    /// per-beam Top-K candidate expansion
+    pub top_k: usize,
+    /// dynamic batching: max total prompt tokens per batch
+    pub max_batch_tokens: usize,
+    /// dynamic batching: max requests per batch
+    pub max_batch_requests: usize,
+    /// batching wait quota in microseconds (dispatch when exceeded)
+    pub batch_wait_us: u64,
+    /// number of device streams (engine workers)
+    pub num_streams: usize,
+    /// admission queue depth (reject beyond this)
+    pub queue_depth: usize,
+    pub features: Features,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig {
+            slo_ms: 200.0,
+            beam_width: 128,
+            top_k: 128,
+            max_batch_tokens: 16 * 1024,
+            max_batch_requests: 64,
+            batch_wait_us: 2_000,
+            num_streams: 4,
+            queue_depth: 4096,
+            features: Features::all_on(),
+        }
+    }
+}
+
+impl ServingConfig {
+    /// Parse from a JSON object; unknown keys are rejected so typos in
+    /// experiment configs fail loudly.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut c = ServingConfig::default();
+        let obj = j.as_obj().ok_or_else(|| anyhow!("config must be an object"))?;
+        for (k, v) in obj {
+            match k.as_str() {
+                "slo_ms" => c.slo_ms = v.as_f64().ok_or_else(|| anyhow!("slo_ms"))?,
+                "beam_width" => c.beam_width = v.as_usize().ok_or_else(|| anyhow!("beam_width"))?,
+                "top_k" => c.top_k = v.as_usize().ok_or_else(|| anyhow!("top_k"))?,
+                "max_batch_tokens" => c.max_batch_tokens = v.as_usize().ok_or_else(|| anyhow!("max_batch_tokens"))?,
+                "max_batch_requests" => c.max_batch_requests = v.as_usize().ok_or_else(|| anyhow!("max_batch_requests"))?,
+                "batch_wait_us" => c.batch_wait_us = v.as_f64().ok_or_else(|| anyhow!("batch_wait_us"))? as u64,
+                "num_streams" => c.num_streams = v.as_usize().ok_or_else(|| anyhow!("num_streams"))?,
+                "queue_depth" => c.queue_depth = v.as_usize().ok_or_else(|| anyhow!("queue_depth"))?,
+                "valid_filter" => c.features.valid_filter = v.as_bool().ok_or_else(|| anyhow!("valid_filter"))?,
+                "graph_dispatch" => c.features.graph_dispatch = v.as_bool().ok_or_else(|| anyhow!("graph_dispatch"))?,
+                "multi_stream" => c.features.multi_stream = v.as_bool().ok_or_else(|| anyhow!("multi_stream"))?,
+                "overlap" => c.features.overlap = v.as_bool().ok_or_else(|| anyhow!("overlap"))?,
+                other => return Err(anyhow!("unknown config key {other:?}")),
+            }
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.beam_width == 0 || self.top_k == 0 {
+            return Err(anyhow!("beam_width and top_k must be positive"));
+        }
+        if self.num_streams == 0 {
+            return Err(anyhow!("num_streams must be >= 1"));
+        }
+        if self.slo_ms <= 0.0 {
+            return Err(anyhow!("slo_ms must be positive"));
+        }
+        if self.max_batch_requests == 0 || self.max_batch_tokens == 0 {
+            return Err(anyhow!("batch limits must be positive"));
+        }
+        Ok(())
+    }
+
+    pub fn slo_ns(&self) -> u64 {
+        (self.slo_ms * 1e6) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        ServingConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_overrides() {
+        let j = Json::parse(
+            r#"{"slo_ms": 100, "beam_width": 512, "multi_stream": false}"#,
+        )
+        .unwrap();
+        let c = ServingConfig::from_json(&j).unwrap();
+        assert_eq!(c.slo_ms, 100.0);
+        assert_eq!(c.beam_width, 512);
+        assert!(!c.features.multi_stream);
+        assert!(c.features.graph_dispatch); // untouched default
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let j = Json::parse(r#"{"slo_msx": 100}"#).unwrap();
+        assert!(ServingConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn invalid_values_rejected() {
+        let j = Json::parse(r#"{"beam_width": 0}"#).unwrap();
+        assert!(ServingConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"slo_ms": -5}"#).unwrap();
+        assert!(ServingConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn ablation_presets() {
+        assert!(Features::all_on().multi_stream);
+        assert!(!Features::baseline().graph_dispatch);
+        assert!(Features::baseline().valid_filter);
+    }
+}

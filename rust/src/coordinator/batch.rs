@@ -1,0 +1,190 @@
+//! Dynamic batching (paper Sec 7): aggregate queued requests into batches
+//! bounded by *token capacity* (request sizes vary over two orders of
+//! magnitude, so counting requests is meaningless) and dispatch
+//! immediately once the oldest request's waiting delay reaches the SLO
+//! quota.
+
+use super::RecRequest;
+use std::collections::VecDeque;
+
+/// A formed batch.
+#[derive(Debug, Default)]
+pub struct Batch {
+    pub requests: Vec<RecRequest>,
+    pub total_tokens: usize,
+}
+
+/// Token-capacity batcher with an SLO wait quota.
+pub struct Batcher {
+    max_tokens: usize,
+    max_requests: usize,
+    wait_quota_ns: u64,
+    queue: VecDeque<RecRequest>,
+    queued_tokens: usize,
+}
+
+impl Batcher {
+    pub fn new(max_tokens: usize, max_requests: usize, wait_quota_ns: u64) -> Self {
+        Batcher {
+            max_tokens,
+            max_requests,
+            wait_quota_ns,
+            queue: VecDeque::new(),
+            queued_tokens: 0,
+        }
+    }
+
+    pub fn push(&mut self, r: RecRequest) {
+        self.queued_tokens += r.tokens.len();
+        self.queue.push_back(r);
+    }
+
+    pub fn queued_requests(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn queued_tokens(&self) -> usize {
+        self.queued_tokens
+    }
+
+    /// Would a batch taken now be dispatched, at time `now_ns`?
+    /// True when the token/request budget is full OR the oldest request
+    /// has waited past the quota.
+    pub fn should_dispatch(&self, now_ns: u64) -> bool {
+        if self.queue.is_empty() {
+            return false;
+        }
+        if self.budget_full() {
+            return true;
+        }
+        let oldest = self.queue.front().unwrap().arrival_ns;
+        now_ns.saturating_sub(oldest) >= self.wait_quota_ns
+    }
+
+    fn budget_full(&self) -> bool {
+        if self.queue.len() >= self.max_requests {
+            return true;
+        }
+        // enough tokens queued that the head batch is full
+        let mut tokens = 0;
+        for (i, r) in self.queue.iter().enumerate() {
+            if i >= self.max_requests {
+                return true;
+            }
+            tokens += r.tokens.len().max(1);
+            if tokens >= self.max_tokens {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Remove and return the next batch (greedy head-of-line within the
+    /// token/request budget). Returns None if the queue is empty.
+    pub fn take_batch(&mut self) -> Option<Batch> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let mut b = Batch::default();
+        while let Some(front) = self.queue.front() {
+            let l = front.tokens.len().max(1);
+            if !b.requests.is_empty()
+                && (b.requests.len() + 1 > self.max_requests
+                    || b.total_tokens + l > self.max_tokens)
+            {
+                break;
+            }
+            let r = self.queue.pop_front().unwrap();
+            self.queued_tokens -= r.tokens.len();
+            b.total_tokens += l;
+            b.requests.push(r);
+        }
+        Some(b)
+    }
+
+    /// Time (ns) of the oldest queued arrival (for quota timers).
+    pub fn oldest_arrival(&self) -> Option<u64> {
+        self.queue.front().map(|r| r.arrival_ns)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, tokens: usize, arrival: u64) -> RecRequest {
+        RecRequest { id, tokens: vec![1; tokens], arrival_ns: arrival }
+    }
+
+    #[test]
+    fn batches_respect_token_budget() {
+        let mut b = Batcher::new(100, 10, 1_000_000);
+        for i in 0..5 {
+            b.push(req(i, 30, 0));
+        }
+        let batch = b.take_batch().unwrap();
+        assert_eq!(batch.requests.len(), 3); // 30+30+30 ≤ 100, +30 > 100
+        assert_eq!(batch.total_tokens, 90);
+        assert_eq!(b.queued_requests(), 2);
+    }
+
+    #[test]
+    fn batches_respect_request_budget() {
+        let mut b = Batcher::new(10_000, 2, 1_000_000);
+        for i in 0..5 {
+            b.push(req(i, 10, 0));
+        }
+        assert_eq!(b.take_batch().unwrap().requests.len(), 2);
+    }
+
+    #[test]
+    fn oversized_request_still_ships_alone() {
+        let mut b = Batcher::new(100, 10, 0);
+        b.push(req(0, 500, 0));
+        let batch = b.take_batch().unwrap();
+        assert_eq!(batch.requests.len(), 1);
+        assert_eq!(batch.total_tokens, 500);
+    }
+
+    #[test]
+    fn quota_triggers_dispatch() {
+        let mut b = Batcher::new(1_000_000, 100, 2_000_000); // 2ms quota
+        b.push(req(0, 10, 1_000_000));
+        assert!(!b.should_dispatch(1_500_000), "under quota, under budget");
+        assert!(b.should_dispatch(3_100_000), "quota exceeded");
+    }
+
+    #[test]
+    fn budget_full_triggers_dispatch_immediately() {
+        let mut b = Batcher::new(50, 100, u64::MAX);
+        b.push(req(0, 30, 0));
+        assert!(!b.should_dispatch(0));
+        b.push(req(1, 30, 0));
+        assert!(b.should_dispatch(0));
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut b = Batcher::new(1000, 2, 0);
+        for i in 0..4 {
+            b.push(req(i, 10, i));
+        }
+        let ids: Vec<u64> =
+            b.take_batch().unwrap().requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1]);
+        let ids: Vec<u64> =
+            b.take_batch().unwrap().requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![2, 3]);
+    }
+
+    #[test]
+    fn token_accounting_consistent() {
+        let mut b = Batcher::new(100, 10, 0);
+        b.push(req(0, 40, 0));
+        b.push(req(1, 40, 0));
+        assert_eq!(b.queued_tokens(), 80);
+        b.take_batch();
+        assert_eq!(b.queued_tokens(), 0);
+        assert!(b.take_batch().is_none());
+    }
+}

@@ -1,0 +1,423 @@
+//! The engine tier: one prefill + three (beam search + decode)
+//! combinations per request (paper Sec 7, Fig 12).
+//!
+//! Decode-phase protocol (GR semantics): after the history prompt is
+//! prefilled, phase 0 feeds a BOS token and selects the top-BW first
+//! tokens (t0) from the masked logits; phase 1 feeds each beam's t0 and
+//! selects (t0, t1) pairs; phase 2 completes the TID triplets. Before
+//! each decode the unshared KV is reordered in place by the previous
+//! selection's parent map (the engine passes `parents` down to the
+//! executor, which applies the direct-index schedule).
+//!
+//! The engine is deliberately *configurable into a baseline*: selector
+//! (xBeam vs naive full-sort), filtering on/off, state pooling on/off —
+//! the baselines/ module builds vLLM/xLLM-like engines from these knobs,
+//! so the real-mode benches compare implementations inside one harness.
+
+use super::{RecRequest, RecResponse};
+use crate::beam::pool::StatePool;
+use crate::beam::{BeamSelector, NaiveBeam, Selection, XBeam};
+use crate::itemspace::{ItemTrie, MaskWorkspace};
+use crate::kvcache::{KvManager, SeparatedKv};
+use crate::metrics::Counters;
+use crate::runtime::ModelExecutor;
+use crate::util::now_ns;
+use crate::Result;
+use std::sync::Arc;
+
+/// Beam-selection strategy choice.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SelectorKind {
+    XBeam,
+    Naive,
+}
+
+/// Engine knobs (the ablation axes).
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    pub selector: SelectorKind,
+    pub top_k: usize,
+    /// valid-path masking on/off (Fig 5 / Fig 18)
+    pub valid_filter: bool,
+    /// beam-state pooling (Sec 6.3) on/off
+    pub pooling: bool,
+    /// BOS token fed at decode phase 0
+    pub bos_token: u32,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            selector: SelectorKind::XBeam,
+            top_k: 0, // 0 → use beam width
+            valid_filter: true,
+            pooling: true,
+            bos_token: 0,
+        }
+    }
+}
+
+/// Output of one request (pre-latency; the scheduler stamps timing).
+#[derive(Clone, Debug)]
+pub struct EngineOutput {
+    pub id: u64,
+    pub items: Vec<([u32; 3], f32)>,
+    pub valid_items: usize,
+}
+
+/// A single-stream engine bound to one executor.
+pub struct Engine {
+    exec: Box<dyn ModelExecutor>,
+    trie: Arc<ItemTrie>,
+    cfg: EngineConfig,
+    masks: MaskWorkspace,
+    xbeam: XBeam,
+    naive: NaiveBeam,
+    pool: StatePool,
+    kv: SeparatedKv,
+    sel: Selection,
+    prefix_scratch: Vec<Vec<u32>>,
+    temp_u32: Vec<u32>,
+    logits_scratch: Vec<f32>,
+    pub counters: Counters,
+}
+
+impl Engine {
+    pub fn new(
+        exec: Box<dyn ModelExecutor>,
+        trie: Arc<ItemTrie>,
+        cfg: EngineConfig,
+    ) -> Self {
+        let spec = exec.spec().clone();
+        let bw = spec.beam_width;
+        let k = if cfg.top_k == 0 { bw } else { cfg.top_k };
+        assert_eq!(
+            trie.vocab as usize, spec.vocab,
+            "trie vocab must match model vocab"
+        );
+        let mut pool = StatePool::new(bw, spec.num_decode);
+        if cfg.pooling {
+            pool.warm(8);
+        }
+        Engine {
+            masks: MaskWorkspace::new(&trie, bw),
+            xbeam: XBeam::new(bw, k, spec.vocab),
+            naive: NaiveBeam::new(),
+            pool,
+            kv: SeparatedKv::new(spec.kv_bytes_per_token()),
+            sel: Selection::with_capacity(bw),
+            prefix_scratch: vec![Vec::with_capacity(3); bw],
+            temp_u32: Vec::new(),
+            logits_scratch: Vec::new(),
+            trie,
+            cfg,
+            exec,
+            counters: Counters::new(),
+        }
+    }
+
+    pub fn spec(&self) -> &crate::config::ModelSpec {
+        self.exec.spec()
+    }
+
+    pub fn kv_manager(&self) -> &SeparatedKv {
+        &self.kv
+    }
+
+    /// Serve one request end-to-end; `stream` is a label for the response.
+    pub fn process(&mut self, req: &RecRequest, stream: usize) -> Result<RecResponse> {
+        let t0 = now_ns();
+        let out = self.run_request(req)?;
+        Counters::inc(&self.counters.requests_done);
+        Ok(RecResponse {
+            id: out.id,
+            items: out.items,
+            latency_ns: now_ns().saturating_sub(req.arrival_ns.min(t0)),
+            valid_items: out.valid_items,
+            stream,
+        })
+    }
+
+    /// The core request pipeline.
+    pub fn run_request(&mut self, req: &RecRequest) -> Result<EngineOutput> {
+        let spec = self.exec.spec().clone();
+        let bw = spec.beam_width;
+        let nd = spec.num_decode;
+        let v = spec.vocab;
+        let k = if self.cfg.top_k == 0 { bw } else { self.cfg.top_k };
+
+        // truncate over-long prompts to the bucket (keep most recent)
+        let tokens: &[u32] = if req.tokens.len() > spec.seq {
+            &req.tokens[req.tokens.len() - spec.seq..]
+        } else {
+            &req.tokens
+        };
+
+        // ---- prefill ----
+        let (slot, _prompt_logits) = self.exec.prefill(tokens)?;
+        let kvh = self.kv.alloc(tokens.len(), bw, nd);
+        Counters::add(&self.counters.prefill_tokens, tokens.len() as u64);
+
+        // ---- beam state (pooled, Sec 6.3) ----
+        let mut state = if self.cfg.pooling {
+            self.pool.take()
+        } else {
+            let mut p = StatePool::new(bw, nd);
+            p.take()
+        };
+
+        let mut result: Result<EngineOutput> = (|| {
+            // device-resident filtering (the xGR path): selection walks
+            // the trie-valid token lists directly — no per-beam mask rows
+            // are materialized at all. The naive/baseline path filters
+            // the host way: dense/sparse mask rows added onto logits.
+            let device_filter =
+                self.cfg.valid_filter && self.cfg.selector == SelectorKind::XBeam;
+            let mut beam_tokens = vec![self.cfg.bos_token; bw];
+            for step in 0..nd {
+                // host-side mask preparation (baseline path only). Step 0
+                // needs no per-beam rows (all beams share the empty
+                // prefix; the dense root mask is applied to one row).
+                if self.cfg.valid_filter && !device_filter && step > 0 {
+                    for b in 0..bw {
+                        self.prefix_scratch[b].clear();
+                        self.prefix_scratch[b].extend_from_slice(state.prefix(b));
+                    }
+                    self.masks.update_sparse(&self.trie, &self.prefix_scratch);
+                }
+                if device_filter && step > 0 {
+                    for b in 0..bw {
+                        self.prefix_scratch[b].clear();
+                        self.prefix_scratch[b].extend_from_slice(state.prefix(b));
+                    }
+                }
+                // decode forward (applies the in-place KV reorder by the
+                // previous selection's parents)
+                let logits =
+                    self.exec.decode(slot, step, &beam_tokens, &state.parents)?;
+                Counters::inc(&self.counters.decode_steps);
+                self.kv.decode_step(kvh, step, &state.parents);
+
+                // masking + selection
+                self.logits_scratch.clear();
+                if step == 0 {
+                    // all beams share the BOS state: expand from row 0
+                    self.logits_scratch.extend_from_slice(&logits[..v]);
+                    let scores = [0.0f32];
+                    if device_filter {
+                        let lists = [self.trie.valid_roots()];
+                        self.xbeam.step_valid(
+                            &self.logits_scratch, v, &scores, &lists, k, bw,
+                            &mut self.sel,
+                        );
+                    } else {
+                        if self.cfg.valid_filter {
+                            self.masks.apply_root(&mut self.logits_scratch);
+                        }
+                        self.select(&scores, v, k, bw);
+                    }
+                } else {
+                    self.logits_scratch.extend_from_slice(&logits);
+                    let scores = state.scores.clone();
+                    if device_filter {
+                        let lists: Vec<&[u32]> = (0..bw)
+                            .map(|b| self.trie.valid_next(&self.prefix_scratch[b]))
+                            .collect();
+                        self.xbeam.step_valid(
+                            &self.logits_scratch, v, &scores, &lists, k, bw,
+                            &mut self.sel,
+                        );
+                    } else {
+                        if self.cfg.valid_filter {
+                            for b in 0..bw {
+                                self.masks.apply(
+                                    b,
+                                    &mut self.logits_scratch[b * v..(b + 1) * v],
+                                );
+                            }
+                        }
+                        self.select(&scores, v, k, bw);
+                    }
+                }
+                if self.sel.is_empty() {
+                    // fully masked — no valid continuation (can only
+                    // happen with filtering off catalogs; fail soft)
+                    break;
+                }
+                // pad selection up to BW by repeating the best candidate
+                // (keeps executor shapes static, mirrors real engines)
+                while self.sel.len() < bw {
+                    let i = self.sel.len() % self.sel.parents.len().max(1);
+                    self.sel.parents.push(self.sel.parents[i]);
+                    self.sel.tokens.push(self.sel.tokens[i]);
+                    self.sel.scores.push(f32::NEG_INFINITY);
+                }
+                state.apply_selection(
+                    &self.sel.parents,
+                    &self.sel.tokens,
+                    &self.sel.scores,
+                    &mut self.temp_u32,
+                );
+                beam_tokens.copy_from_slice(&self.sel.tokens);
+            }
+
+            // ---- collect items ----
+            let mut items: Vec<([u32; 3], f32)> = Vec::with_capacity(bw);
+            if state.prefix_len == nd {
+                for (b, item) in state.items().into_iter().enumerate() {
+                    if state.scores[b].is_finite() {
+                        items.push((item, state.scores[b]));
+                    }
+                }
+            }
+            items.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+            items.dedup_by_key(|x| x.0);
+            let valid_items =
+                items.iter().filter(|(it, _)| self.trie.contains(*it)).count();
+            Ok(EngineOutput { id: req.id, items, valid_items })
+        })();
+
+        // ---- cleanup (always) ----
+        self.exec.release(slot);
+        self.kv.free(kvh);
+        if self.cfg.pooling {
+            self.pool.give(state);
+        }
+        if let Ok(out) = &mut result {
+            let _ = out;
+        }
+        result
+    }
+
+    fn select(&mut self, scores: &[f32], v: usize, k: usize, bw: usize) {
+        match self.cfg.selector {
+            SelectorKind::XBeam => self.xbeam.step(
+                &self.logits_scratch,
+                v,
+                scores,
+                k,
+                bw,
+                &mut self.sel,
+            ),
+            SelectorKind::Naive => self.naive.step(
+                &self.logits_scratch,
+                v,
+                scores,
+                k,
+                bw,
+                &mut self.sel,
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelSpec;
+    use crate::itemspace::Catalog;
+    use crate::runtime::MockExecutor;
+
+    fn setup(filter: bool, selector: SelectorKind) -> (Engine, Catalog) {
+        let mut spec = ModelSpec::onerec_tiny();
+        spec.vocab = 64;
+        spec.beam_width = 8;
+        spec.seq = 48;
+        let catalog = Catalog::generate(64, 600, 5);
+        let trie = Arc::new(ItemTrie::build(&catalog));
+        let cfg = EngineConfig {
+            selector,
+            valid_filter: filter,
+            ..Default::default()
+        };
+        let e = Engine::new(Box::new(MockExecutor::new(spec)), trie, cfg);
+        (e, catalog)
+    }
+
+    fn req(id: u64, toks: Vec<u32>) -> RecRequest {
+        RecRequest { id, tokens: toks, arrival_ns: now_ns() }
+    }
+
+    #[test]
+    fn filtered_requests_return_only_valid_items() {
+        let (mut e, _c) = setup(true, SelectorKind::XBeam);
+        for i in 0..5 {
+            let out = e.run_request(&req(i, vec![1, 2, 3, (i as u32) % 60])).unwrap();
+            assert!(!out.items.is_empty());
+            assert_eq!(
+                out.valid_items,
+                out.items.len(),
+                "filtering must yield 100% valid items"
+            );
+            // scores sorted descending
+            assert!(out.items.windows(2).all(|w| w[0].1 >= w[1].1));
+        }
+    }
+
+    #[test]
+    fn unfiltered_requests_hallucinate_items() {
+        let (mut e, _c) = setup(false, SelectorKind::XBeam);
+        let mut total = 0usize;
+        let mut valid = 0usize;
+        for i in 0..20 {
+            let out = e.run_request(&req(i, vec![2, 3, i as u32 % 60])).unwrap();
+            total += out.items.len();
+            valid += out.valid_items;
+        }
+        assert!(total > 0);
+        let invalid_frac = 1.0 - valid as f64 / total as f64;
+        // the paper's Fig 5: ~50% invalid without filtering; on a sparse
+        // synthetic catalog it's at least substantial
+        assert!(
+            invalid_frac > 0.2,
+            "expected substantial hallucination, got {invalid_frac}"
+        );
+    }
+
+    #[test]
+    fn xbeam_and_naive_agree_on_items() {
+        let (mut a, _) = setup(true, SelectorKind::XBeam);
+        let (mut b, _) = setup(true, SelectorKind::Naive);
+        for i in 0..5 {
+            let r = req(i, vec![7, 9, 11, (i as u32) % 50]);
+            let oa = a.run_request(&r).unwrap();
+            let ob = b.run_request(&r).unwrap();
+            let ia: Vec<[u32; 3]> = oa.items.iter().map(|x| x.0).collect();
+            let ib: Vec<[u32; 3]> = ob.items.iter().map(|x| x.0).collect();
+            assert_eq!(ia, ib, "selectors must agree (request {i})");
+        }
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let (mut a, _) = setup(true, SelectorKind::XBeam);
+        let r = req(0, vec![4, 5, 6]);
+        let o1 = a.run_request(&r).unwrap();
+        let o2 = a.run_request(&r).unwrap();
+        assert_eq!(o1.items, o2.items);
+    }
+
+    #[test]
+    fn no_slot_leaks() {
+        let (mut e, _) = setup(true, SelectorKind::XBeam);
+        for i in 0..10 {
+            e.run_request(&req(i, vec![1, 2])).unwrap();
+        }
+        assert_eq!(e.exec.live_slots(), 0);
+        assert_eq!(e.kv.current_bytes(), 0);
+    }
+
+    #[test]
+    fn long_prompts_are_truncated_to_bucket() {
+        let (mut e, _) = setup(true, SelectorKind::XBeam);
+        let out = e.run_request(&req(0, vec![3; 500])).unwrap();
+        assert!(!out.items.is_empty());
+    }
+
+    #[test]
+    fn empty_prompt_errors_cleanly() {
+        let (mut e, _) = setup(true, SelectorKind::XBeam);
+        assert!(e.run_request(&req(0, vec![])).is_err());
+        assert_eq!(e.exec.live_slots(), 0, "no leak on error");
+    }
+}

@@ -1,0 +1,48 @@
+//! xSchedule — the three-tier serving pipeline (paper Sec 7 / Fig 12).
+//!
+//! * **Scheduler** ([`scheduler`]) — host-side: admission, resource
+//!   pre-allocation, dynamic batching (token capacity + SLO wait quota),
+//!   dispatch to engine streams.
+//! * **Engine** ([`engine`]) — executes one prefill followed by three
+//!   tightly-coupled (beam search + decode) combinations per request,
+//!   with valid-path masking, early-termination selection, state pooling
+//!   and the in-place unshared-KV reorder.
+//! * **Worker** ([`worker`]) — one OS thread per stream, each owning its
+//!   executor; batches are assigned to idle streams by load
+//!   (multi-stream). [`overlap`] provides the host/device overlap lane
+//!   (mask generation concurrent with the forward pass).
+
+pub mod batch;
+pub mod engine;
+pub mod graph;
+pub mod overlap;
+pub mod scheduler;
+pub mod worker;
+
+pub use batch::{Batch, Batcher};
+pub use engine::{Engine, EngineConfig, EngineOutput, SelectorKind};
+pub use scheduler::{Coordinator, ExecutorFactory};
+
+/// An inbound recommendation request.
+#[derive(Clone, Debug)]
+pub struct RecRequest {
+    pub id: u64,
+    /// user-history prompt tokens (semantic item IDs)
+    pub tokens: Vec<u32>,
+    /// arrival timestamp (util::now_ns clock)
+    pub arrival_ns: u64,
+}
+
+/// A served response: the recommended items with scores.
+#[derive(Clone, Debug)]
+pub struct RecResponse {
+    pub id: u64,
+    /// (item triplet, cumulative log-prob), best first
+    pub items: Vec<([u32; 3], f32)>,
+    /// end-to-end latency
+    pub latency_ns: u64,
+    /// items that exist in the catalog (== items.len() when filtering on)
+    pub valid_items: usize,
+    /// which stream served it
+    pub stream: usize,
+}

@@ -1,0 +1,284 @@
+//! Scheduler tier + the public `Coordinator` handle.
+//!
+//! The scheduler thread owns admission (queue-depth backpressure) and the
+//! dynamic batcher; formed batches flow through a bounded channel to the
+//! worker pool (idle-stream pull). `Coordinator` is the process-wide
+//! serving object: `submit` requests, `recv` responses, `shutdown` to
+//! drain.
+
+use super::batch::Batcher;
+use super::engine::EngineConfig;
+use super::worker::Workers;
+use super::{Batch, RecRequest, RecResponse};
+use crate::config::ServingConfig;
+use crate::itemspace::ItemTrie;
+use crate::metrics::Counters;
+use crate::runtime::ModelExecutor;
+use crate::util::now_ns;
+use crate::util::pool::Channel;
+use crate::Result;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Builds one executor per worker thread (called inside the thread; the
+/// executor itself need not be Send).
+pub type ExecutorFactory =
+    Arc<dyn Fn() -> Result<Box<dyn ModelExecutor>> + Send + Sync>;
+
+pub struct Coordinator {
+    inbox: Channel<RecRequest>,
+    responses: Channel<RecResponse>,
+    scheduler: Option<JoinHandle<()>>,
+    workers: Option<Workers>,
+    pub counters: Arc<Counters>,
+}
+
+impl Coordinator {
+    /// Start the three-tier pipeline.
+    pub fn start(
+        serving: &ServingConfig,
+        engine_cfg: EngineConfig,
+        trie: Arc<ItemTrie>,
+        factory: ExecutorFactory,
+    ) -> Result<Self> {
+        serving.validate()?;
+        let num_streams = if serving.features.multi_stream {
+            serving.num_streams
+        } else {
+            1
+        };
+        let counters = Arc::new(Counters::new());
+        let inbox: Channel<RecRequest> = Channel::bounded(serving.queue_depth);
+        let batches: Channel<Batch> = Channel::bounded(num_streams * 2);
+        let responses: Channel<RecResponse> =
+            Channel::bounded(serving.queue_depth.max(64));
+
+        let workers = Workers::spawn(
+            num_streams,
+            factory,
+            trie,
+            engine_cfg,
+            batches.clone(),
+            responses.clone(),
+            counters.clone(),
+        );
+
+        let scheduler = {
+            let inbox = inbox.clone();
+            let batches = batches.clone();
+            let counters = counters.clone();
+            let mut batcher = Batcher::new(
+                serving.max_batch_tokens,
+                serving.max_batch_requests,
+                serving.batch_wait_us * 1_000,
+            );
+            let quota = Duration::from_micros(serving.batch_wait_us.max(100));
+            std::thread::Builder::new()
+                .name("xgr-scheduler".into())
+                .spawn(move || {
+                    loop {
+                        // admission: pull what's available, at most quota wait
+                        match inbox.recv_timeout(quota) {
+                            Some(r) => {
+                                Counters::inc(&counters.requests_in);
+                                batcher.push(r);
+                                // opportunistically drain the rest
+                                for r in inbox.drain() {
+                                    Counters::inc(&counters.requests_in);
+                                    batcher.push(r);
+                                }
+                            }
+                            None => {
+                                if inbox.is_closed() && inbox.is_empty() {
+                                    // drain remaining queue then stop
+                                    while let Some(b) = batcher.take_batch() {
+                                        if batches.send(b).is_err() {
+                                            break;
+                                        }
+                                        Counters::inc(&counters.graph_dispatches);
+                                    }
+                                    batches.close();
+                                    return;
+                                }
+                            }
+                        }
+                        // dispatch policy: budget full or quota exceeded
+                        while batcher.should_dispatch(now_ns()) {
+                            let Some(b) = batcher.take_batch() else { break };
+                            Counters::inc(&counters.graph_dispatches);
+                            if batches.send(b).is_err() {
+                                return;
+                            }
+                        }
+                    }
+                })
+                .expect("spawn scheduler")
+        };
+
+        Ok(Coordinator {
+            inbox,
+            responses,
+            scheduler: Some(scheduler),
+            workers: Some(workers),
+            counters,
+        })
+    }
+
+    /// Submit a request; Err(req) when the admission queue is full or the
+    /// coordinator is shutting down (the caller counts rejects).
+    pub fn submit(&self, req: RecRequest) -> std::result::Result<(), RecRequest> {
+        self.inbox.try_send(req)
+    }
+
+    /// Blocking submit (used by closed-loop drivers).
+    pub fn submit_blocking(&self, req: RecRequest) -> std::result::Result<(), RecRequest> {
+        self.inbox.send(req)
+    }
+
+    /// Receive the next response, waiting up to `dur`.
+    pub fn recv_timeout(&self, dur: Duration) -> Option<RecResponse> {
+        self.responses.recv_timeout(dur)
+    }
+
+    /// Drain: close admission, wait for workers, return leftover responses.
+    pub fn shutdown(mut self) -> Vec<RecResponse> {
+        self.inbox.close();
+        if let Some(s) = self.scheduler.take() {
+            let _ = s.join();
+        }
+        if let Some(w) = self.workers.take() {
+            w.join();
+        }
+        self.responses.close();
+        let mut out = Vec::new();
+        while let Some(r) = self.responses.recv() {
+            out.push(r);
+        }
+        out
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.inbox.close();
+        if let Some(s) = self.scheduler.take() {
+            let _ = s.join();
+        }
+        if let Some(w) = self.workers.take() {
+            w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelSpec;
+    use crate::itemspace::Catalog;
+    use crate::runtime::MockExecutor;
+
+    fn setup(streams: usize) -> (Coordinator, usize) {
+        let mut spec = ModelSpec::onerec_tiny();
+        spec.vocab = 64;
+        spec.beam_width = 4;
+        let catalog = Catalog::generate(64, 400, 2);
+        let trie = Arc::new(ItemTrie::build(&catalog));
+        let mut serving = ServingConfig::default();
+        serving.num_streams = streams;
+        serving.batch_wait_us = 200;
+        serving.max_batch_requests = 4;
+        let factory: ExecutorFactory = {
+            let spec = spec.clone();
+            Arc::new(move || Ok(Box::new(MockExecutor::new(spec.clone())) as _))
+        };
+        let c = Coordinator::start(
+            &serving,
+            EngineConfig::default(),
+            trie,
+            factory,
+        )
+        .unwrap();
+        (c, 4)
+    }
+
+    #[test]
+    fn serves_submitted_requests() {
+        let (c, _) = setup(2);
+        for i in 0..20u64 {
+            c.submit(RecRequest {
+                id: i,
+                tokens: vec![1, 2, (i % 60) as u32],
+                arrival_ns: now_ns(),
+            })
+            .unwrap();
+        }
+        let mut got = std::collections::HashSet::new();
+        while got.len() < 20 {
+            let r = c
+                .recv_timeout(Duration::from_secs(10))
+                .expect("response timed out");
+            assert!(!r.items.is_empty());
+            assert!(got.insert(r.id), "duplicate response {}", r.id);
+        }
+        let rest = c.shutdown();
+        assert!(rest.is_empty());
+    }
+
+    #[test]
+    fn multi_stream_uses_multiple_workers() {
+        let (c, _) = setup(3);
+        for i in 0..30u64 {
+            c.submit_blocking(RecRequest {
+                id: i,
+                tokens: vec![3, 4, (i % 50) as u32],
+                arrival_ns: now_ns(),
+            })
+            .unwrap();
+        }
+        let mut streams = std::collections::HashSet::new();
+        for _ in 0..30 {
+            let r = c.recv_timeout(Duration::from_secs(10)).unwrap();
+            streams.insert(r.stream);
+        }
+        // with 30 requests and tiny batches, >1 stream should get work
+        assert!(streams.len() > 1, "streams used: {streams:?}");
+        c.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_cleanly() {
+        let (c, _) = setup(1);
+        for i in 0..5u64 {
+            c.submit_blocking(RecRequest {
+                id: i,
+                tokens: vec![5, 6],
+                arrival_ns: now_ns(),
+            })
+            .unwrap();
+        }
+        let rest = c.shutdown();
+        // everything not picked up during the run is returned at shutdown
+        assert!(rest.len() <= 5);
+    }
+
+    #[test]
+    fn counters_track_flow() {
+        let (c, _) = setup(2);
+        for i in 0..8u64 {
+            c.submit_blocking(RecRequest {
+                id: i,
+                tokens: vec![1, (i % 40) as u32],
+                arrival_ns: now_ns(),
+            })
+            .unwrap();
+        }
+        for _ in 0..8 {
+            c.recv_timeout(Duration::from_secs(10)).unwrap();
+        }
+        assert_eq!(Counters::get(&c.counters.requests_in), 8);
+        assert_eq!(Counters::get(&c.counters.requests_done), 8);
+        assert!(Counters::get(&c.counters.batches) >= 1);
+        c.shutdown();
+    }
+}

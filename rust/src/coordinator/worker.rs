@@ -1,0 +1,141 @@
+//! Worker tier: one OS thread per device stream, each owning a full
+//! engine (executor + masks + selector + pools). Idle workers pull the
+//! next batch from a shared queue — the paper's "batches dynamically
+//! assigned to idle streams based on real-time load".
+
+use super::engine::{Engine, EngineConfig};
+use super::scheduler::ExecutorFactory;
+use super::{Batch, RecResponse};
+use crate::itemspace::ItemTrie;
+use crate::metrics::Counters;
+use crate::util::pool::Channel;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+pub struct Workers {
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl Workers {
+    #[allow(clippy::too_many_arguments)]
+    pub fn spawn(
+        n: usize,
+        factory: ExecutorFactory,
+        trie: Arc<ItemTrie>,
+        engine_cfg: EngineConfig,
+        batches: Channel<Batch>,
+        responses: Channel<RecResponse>,
+        counters: Arc<Counters>,
+    ) -> Workers {
+        let handles = (0..n)
+            .map(|stream| {
+                let factory = factory.clone();
+                let trie = trie.clone();
+                let engine_cfg = engine_cfg.clone();
+                let batches = batches.clone();
+                let responses = responses.clone();
+                let counters = counters.clone();
+                std::thread::Builder::new()
+                    .name(format!("xgr-worker-{stream}"))
+                    .spawn(move || {
+                        // the executor is created INSIDE the worker thread
+                        // (PJRT handles are not Send)
+                        let exec = match factory() {
+                            Ok(e) => e,
+                            Err(e) => {
+                                eprintln!("worker {stream}: executor init failed: {e:#}");
+                                return;
+                            }
+                        };
+                        let mut engine = Engine::new(exec, trie, engine_cfg);
+                        while let Some(batch) = batches.recv() {
+                            Counters::inc(&counters.batches);
+                            for req in &batch.requests {
+                                match engine.process(req, stream) {
+                                    Ok(resp) => {
+                                        Counters::inc(&counters.requests_done);
+                                        if responses.send(resp).is_err() {
+                                            return;
+                                        }
+                                    }
+                                    Err(e) => {
+                                        eprintln!(
+                                            "worker {stream}: request {} failed: {e:#}",
+                                            req.id
+                                        );
+                                        Counters::inc(&counters.requests_rejected);
+                                    }
+                                }
+                            }
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        Workers { handles }
+    }
+
+    pub fn join(self) {
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelSpec;
+    use crate::coordinator::RecRequest;
+    use crate::itemspace::Catalog;
+    use crate::runtime::MockExecutor;
+    use crate::util::now_ns;
+
+    #[test]
+    fn workers_drain_batches_and_respond() {
+        let mut spec = ModelSpec::onerec_tiny();
+        spec.vocab = 64;
+        spec.beam_width = 4;
+        let catalog = Catalog::generate(64, 400, 1);
+        let trie = Arc::new(ItemTrie::build(&catalog));
+        let factory: ExecutorFactory = {
+            let spec = spec.clone();
+            Arc::new(move || Ok(Box::new(MockExecutor::new(spec.clone())) as _))
+        };
+        let batches: Channel<Batch> = Channel::bounded(8);
+        let responses: Channel<RecResponse> = Channel::bounded(64);
+        let counters = Arc::new(Counters::new());
+        let w = Workers::spawn(
+            2,
+            factory,
+            trie,
+            EngineConfig::default(),
+            batches.clone(),
+            responses.clone(),
+            counters.clone(),
+        );
+        for b in 0..4 {
+            let reqs = (0..3)
+                .map(|i| RecRequest {
+                    id: b * 10 + i,
+                    tokens: vec![1, 2, 3 + i as u32],
+                    arrival_ns: now_ns(),
+                })
+                .collect();
+            batches
+                .send(Batch { requests: reqs, total_tokens: 9 })
+                .unwrap();
+        }
+        batches.close();
+        w.join();
+        responses.close();
+        let mut got = 0;
+        while let Some(r) = responses.recv() {
+            assert!(!r.items.is_empty());
+            got += 1;
+        }
+        assert_eq!(got, 12);
+        assert_eq!(Counters::get(&counters.requests_done), 12);
+        assert_eq!(Counters::get(&counters.batches), 4);
+    }
+}

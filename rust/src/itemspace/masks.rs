@@ -1,0 +1,271 @@
+//! Logit masks for the valid-path constraint (Sec 6.1).
+//!
+//! The paper's dilemma: computing masks on demand is slow, pre-storing
+//! all per-prefix dense masks is enormous. xBeam's answer, reproduced
+//! here:
+//!
+//! * the **step-0 mask is dense and pre-generated** at load time (every
+//!   beam shares the empty prefix, so one row serves all beams);
+//! * later steps use **sparse in-place updates**: each beam row remembers
+//!   which positions it un-masked last time, re-poisons exactly those,
+//!   then un-masks the (few) valid children of its new prefix. Cost is
+//!   O(valid degree), never O(vocab), and the `[BW, V]` buffer is
+//!   allocated once and reused for the whole request (Sec 6.3).
+
+use super::trie::ItemTrie;
+
+pub const NEG_INF: f32 = -1.0e30;
+
+/// Counters for the mask layer (feeds the Fig 18 filter-overhead ablation).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct MaskStats {
+    pub dense_copies: u64,
+    pub sparse_updates: u64,
+    /// positions touched by sparse updates (re-poison + un-mask)
+    pub positions_touched: u64,
+}
+
+/// A reusable `[BW, V]` additive-mask workspace.
+pub struct MaskWorkspace {
+    bw: usize,
+    vocab: usize,
+    /// row-major [BW, V]; NEG_INF = invalid, 0.0 = valid
+    buf: Vec<f32>,
+    /// per-row positions currently un-masked (for sparse re-poisoning)
+    open: Vec<Vec<u32>>,
+    /// the dense pre-generated step-0 row
+    root_row: Vec<f32>,
+    root_open: Vec<u32>,
+    pub stats: MaskStats,
+}
+
+impl MaskWorkspace {
+    /// Build from the trie; pre-generates the dense root mask (load-time
+    /// work, off the request path).
+    pub fn new(trie: &ItemTrie, bw: usize) -> Self {
+        let vocab = trie.vocab as usize;
+        let mut root_row = vec![NEG_INF; vocab];
+        for &t in trie.valid_roots() {
+            root_row[t as usize] = 0.0;
+        }
+        MaskWorkspace {
+            bw,
+            vocab,
+            buf: vec![NEG_INF; bw * vocab],
+            open: vec![Vec::new(); bw],
+            root_row: root_row.clone(),
+            root_open: trie.valid_roots().to_vec(),
+            stats: MaskStats::default(),
+        }
+    }
+
+    pub fn beam_width(&self) -> usize {
+        self.bw
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    /// One beam's mask row.
+    #[inline]
+    pub fn row(&self, beam: usize) -> &[f32] {
+        &self.buf[beam * self.vocab..(beam + 1) * self.vocab]
+    }
+
+    /// Prepare masks for decode step 0: every row becomes the dense
+    /// pre-generated root mask (bulk copy, no trie walk).
+    pub fn set_step0(&mut self) {
+        for b in 0..self.bw {
+            let row = &mut self.buf[b * self.vocab..(b + 1) * self.vocab];
+            row.copy_from_slice(&self.root_row);
+            self.open[b].clear();
+            self.open[b].extend_from_slice(&self.root_open);
+        }
+        self.stats.dense_copies += self.bw as u64;
+    }
+
+    /// Sparse in-place update for step 1/2: re-poison the previously open
+    /// positions of each row, then open the valid children of the beam's
+    /// current prefix.
+    pub fn update_sparse(&mut self, trie: &ItemTrie, prefixes: &[Vec<u32>]) {
+        assert_eq!(prefixes.len(), self.bw);
+        for b in 0..self.bw {
+            let row = &mut self.buf[b * self.vocab..(b + 1) * self.vocab];
+            for &p in &self.open[b] {
+                row[p as usize] = NEG_INF;
+            }
+            self.stats.positions_touched += self.open[b].len() as u64;
+            self.open[b].clear();
+            let valid = trie.valid_next(&prefixes[b]);
+            for &t in valid {
+                row[t as usize] = 0.0;
+            }
+            self.open[b].extend_from_slice(valid);
+            self.stats.positions_touched += valid.len() as u64;
+            self.stats.sparse_updates += 1;
+        }
+    }
+
+    /// Apply the dense pre-generated root mask directly (step 0: every
+    /// beam shares the empty prefix, and the engine expands from a single
+    /// row — no need to materialize BW copies).
+    #[inline]
+    pub fn apply_root(&self, logits: &mut [f32]) {
+        debug_assert_eq!(logits.len(), self.vocab);
+        for (l, m) in logits.iter_mut().zip(&self.root_row) {
+            *l += m;
+        }
+    }
+
+    /// Valid positions of the root mask (sorted).
+    pub fn root_open(&self) -> &[u32] {
+        &self.root_open
+    }
+
+    /// Apply row `beam` onto a logits slice (element-wise add — exactly
+    /// how the paper injects the constraint before Softmax).
+    #[inline]
+    pub fn apply(&self, beam: usize, logits: &mut [f32]) {
+        debug_assert_eq!(logits.len(), self.vocab);
+        let row = self.row(beam);
+        for (l, m) in logits.iter_mut().zip(row) {
+            *l += m;
+        }
+    }
+
+    /// Resident bytes of the workspace (memory accounting).
+    pub fn resident_bytes(&self) -> u64 {
+        (self.buf.len() * 4
+            + self.root_row.len() * 4
+            + self.root_open.len() * 4
+            + self.open.iter().map(|v| v.capacity() * 4).sum::<usize>())
+            as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::itemspace::catalog::Catalog;
+    use crate::util::rng::Pcg;
+
+    fn setup(bw: usize) -> (Catalog, ItemTrie, MaskWorkspace) {
+        let c = Catalog::generate(48, 800, 21);
+        let t = ItemTrie::build(&c);
+        let w = MaskWorkspace::new(&t, bw);
+        (c, t, w)
+    }
+
+    #[test]
+    fn step0_rows_match_trie_roots() {
+        let (_, t, mut w) = setup(4);
+        w.set_step0();
+        for b in 0..4 {
+            let row = w.row(b);
+            for v in 0..48u32 {
+                let valid = t.valid_roots().binary_search(&v).is_ok();
+                assert_eq!(row[v as usize] == 0.0, valid, "b={b} v={v}");
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_update_matches_dense_rebuild() {
+        let (_, t, mut w) = setup(6);
+        let mut rng = Pcg::new(5);
+        w.set_step0();
+        // step 1: random valid prefixes of length 1
+        let roots = t.valid_roots().to_vec();
+        let prefixes: Vec<Vec<u32>> = (0..6)
+            .map(|_| vec![roots[rng.below(roots.len() as u64) as usize]])
+            .collect();
+        w.update_sparse(&t, &prefixes);
+        for (b, pre) in prefixes.iter().enumerate() {
+            let valid = t.valid_next(pre);
+            let row = w.row(b);
+            for v in 0..48u32 {
+                let want = valid.binary_search(&v).is_ok();
+                assert_eq!(row[v as usize] == 0.0, want, "b={b} v={v}");
+            }
+        }
+        // step 2: extend each prefix with one of its valid children
+        let prefixes2: Vec<Vec<u32>> = prefixes
+            .iter()
+            .map(|p| {
+                let ch = t.valid_next(p);
+                let mut p2 = p.clone();
+                p2.push(ch[rng.below(ch.len() as u64) as usize]);
+                p2
+            })
+            .collect();
+        w.update_sparse(&t, &prefixes2);
+        for (b, pre) in prefixes2.iter().enumerate() {
+            let valid = t.valid_next(pre);
+            let row = w.row(b);
+            for v in 0..48u32 {
+                let want = valid.binary_search(&v).is_ok();
+                assert_eq!(row[v as usize] == 0.0, want, "b={b} v={v}");
+            }
+        }
+    }
+
+    #[test]
+    fn apply_poisons_invalid_logits() {
+        let (_, t, mut w) = setup(2);
+        w.set_step0();
+        let mut logits = vec![1.0f32; 48];
+        w.apply(0, &mut logits);
+        for v in 0..48u32 {
+            let valid = t.valid_roots().binary_search(&v).is_ok();
+            if valid {
+                assert_eq!(logits[v as usize], 1.0);
+            } else {
+                assert!(logits[v as usize] < -1e29);
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_touch_count_is_degree_not_vocab() {
+        let (_, t, mut w) = setup(8);
+        w.set_step0();
+        let before = w.stats.positions_touched;
+        let prefixes: Vec<Vec<u32>> =
+            (0..8).map(|_| vec![t.valid_roots()[0]]).collect();
+        w.update_sparse(&t, &prefixes);
+        let touched = w.stats.positions_touched - before;
+        let degree = t.valid_next(&[t.valid_roots()[0]]).len() as u64;
+        let roots = t.valid_roots().len() as u64;
+        // per row: re-poison `roots` + open `degree`; always < 2*vocab rows
+        assert_eq!(touched, 8 * (roots + degree));
+        assert!(touched < 8 * 2 * 48);
+    }
+
+    #[test]
+    fn invalid_prefix_masks_everything() {
+        let (_, t, mut w) = setup(1);
+        w.set_step0();
+        w.update_sparse(&t, &[vec![1000]]);
+        assert!(w.row(0).iter().all(|&x| x < -1e29));
+    }
+
+    #[test]
+    fn reuse_does_not_grow_buffer() {
+        let (_, t, mut w) = setup(4);
+        let bytes0 = w.resident_bytes();
+        for _ in 0..5 {
+            w.set_step0();
+            let pre: Vec<Vec<u32>> =
+                (0..4).map(|_| vec![t.valid_roots()[0]]).collect();
+            w.update_sparse(&t, &pre);
+        }
+        // open lists may grow to degree once, then stabilize
+        let bytes1 = w.resident_bytes();
+        w.set_step0();
+        let pre: Vec<Vec<u32>> = (0..4).map(|_| vec![t.valid_roots()[0]]).collect();
+        w.update_sparse(&t, &pre);
+        assert_eq!(w.resident_bytes(), bytes1);
+        assert!(bytes1 < bytes0 * 2);
+    }
+}

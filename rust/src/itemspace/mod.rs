@@ -1,0 +1,17 @@
+//! The item-space substrate: semantic-ID catalogs, the valid-path trie,
+//! and the mask machinery behind xBeam's valid-path constraint (Sec 6.1).
+//!
+//! In GR every item is named by a token-ID triplet (TID³). The token
+//! combination space is `vocab³`, but only a tiny fraction corresponds to
+//! real items — without filtering, ~50% of generated sequences are
+//! hallucinated (paper Fig 5). The trie answers "which next tokens keep
+//! the prefix valid" in O(degree); the mask layer turns that into
+//! additive logit masks with the paper's dense/sparse storage split.
+
+pub mod catalog;
+pub mod trie;
+pub mod masks;
+
+pub use catalog::{Catalog, ItemId};
+pub use masks::{MaskStats, MaskWorkspace, NEG_INF};
+pub use trie::ItemTrie;

@@ -1,0 +1,218 @@
+//! The valid-path trie over TID triplets (xBeam Sec 6.1).
+//!
+//! Three levels: root → level-1 nodes (keyed by t0) → level-2 nodes
+//! (keyed by t1) → leaf token sets (valid t2). Storage is flat and
+//! sorted-array based: child lookup is a binary search, and the *sorted
+//! valid-token slices* feed the sparse mask updates without allocation.
+
+use super::catalog::{Catalog, ItemId};
+
+#[derive(Debug)]
+struct Node {
+    /// sorted child tokens
+    tokens: Vec<u32>,
+    /// for depth<2: index of the child node per token (parallel to tokens)
+    children: Vec<u32>,
+}
+
+/// An immutable trie built once at model-load time (paper: the dense
+/// first-step mask is "pre-generated during model loading").
+#[derive(Debug)]
+pub struct ItemTrie {
+    pub vocab: u32,
+    root: Node,
+    level1: Vec<Node>,
+    /// level-2 nodes only hold leaf token lists
+    level2: Vec<Vec<u32>>,
+    n_items: usize,
+}
+
+impl ItemTrie {
+    pub fn build(catalog: &Catalog) -> Self {
+        let mut items: Vec<ItemId> = catalog.items.clone();
+        items.sort_unstable();
+        items.dedup();
+
+        let mut root = Node { tokens: Vec::new(), children: Vec::new() };
+        let mut level1: Vec<Node> = Vec::new();
+        let mut level2: Vec<Vec<u32>> = Vec::new();
+
+        for it in &items {
+            let [t0, t1, t2] = *it;
+            // level 0
+            if root.tokens.last() != Some(&t0) {
+                root.tokens.push(t0);
+                root.children.push(level1.len() as u32);
+                level1.push(Node { tokens: Vec::new(), children: Vec::new() });
+            }
+            let n1 = *root.children.last().unwrap() as usize;
+            // level 1
+            if level1[n1].tokens.last() != Some(&t1) {
+                level1[n1].tokens.push(t1);
+                level1[n1].children.push(level2.len() as u32);
+                level2.push(Vec::new());
+            }
+            let n2 = *level1[n1].children.last().unwrap() as usize;
+            // level 2 (leaf)
+            if level2[n2].last() != Some(&t2) {
+                level2[n2].push(t2);
+            }
+        }
+
+        ItemTrie { vocab: catalog.vocab, root, level1, level2, n_items: items.len() }
+    }
+
+    pub fn n_items(&self) -> usize {
+        self.n_items
+    }
+
+    /// Valid first tokens (sorted). Backs the *dense pre-generated* mask.
+    pub fn valid_roots(&self) -> &[u32] {
+        &self.root.tokens
+    }
+
+    /// Valid second tokens after `t0` (sorted); empty if t0 is invalid.
+    pub fn valid_after1(&self, t0: u32) -> &[u32] {
+        match self.root.tokens.binary_search(&t0) {
+            Ok(i) => &self.level1[self.root.children[i] as usize].tokens,
+            Err(_) => &[],
+        }
+    }
+
+    /// Valid third tokens after `(t0, t1)` (sorted).
+    pub fn valid_after2(&self, t0: u32, t1: u32) -> &[u32] {
+        let Ok(i) = self.root.tokens.binary_search(&t0) else { return &[] };
+        let n1 = &self.level1[self.root.children[i] as usize];
+        match n1.tokens.binary_search(&t1) {
+            Ok(j) => &self.level2[n1.children[j] as usize],
+            Err(_) => &[],
+        }
+    }
+
+    /// Is the full triplet a real item?
+    pub fn contains(&self, id: ItemId) -> bool {
+        self.valid_after2(id[0], id[1]).binary_search(&id[2]).is_ok()
+    }
+
+    /// Valid continuations given a decode-step prefix:
+    /// step 0 → roots; step 1 → after1(prefix[0]); step 2 → after2(..).
+    pub fn valid_next(&self, prefix: &[u32]) -> &[u32] {
+        match prefix.len() {
+            0 => self.valid_roots(),
+            1 => self.valid_after1(prefix[0]),
+            2 => self.valid_after2(prefix[0], prefix[1]),
+            _ => &[],
+        }
+    }
+
+    /// Approximate resident bytes (memory accounting for Fig 4/15 — the
+    /// paper contrasts this against pre-storing per-prefix dense masks).
+    pub fn resident_bytes(&self) -> u64 {
+        let node = |n: &Node| (n.tokens.len() * 4 + n.children.len() * 4) as u64;
+        let mut b = node(&self.root);
+        for n in &self.level1 {
+            b += node(n);
+        }
+        for l in &self.level2 {
+            b += (l.len() * 4) as u64;
+        }
+        b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn small() -> (Catalog, ItemTrie) {
+        let c = Catalog::generate(32, 500, 11);
+        let t = ItemTrie::build(&c);
+        (c, t)
+    }
+
+    #[test]
+    fn contains_every_catalog_item() {
+        let (c, t) = small();
+        for it in &c.items {
+            assert!(t.contains(*it), "{it:?} missing");
+        }
+        assert_eq!(t.n_items(), 500);
+    }
+
+    #[test]
+    fn rejects_random_noncatalog_triplets() {
+        let (c, t) = small();
+        let set: std::collections::HashSet<ItemId> =
+            c.items.iter().copied().collect();
+        let mut rng = Pcg::new(3);
+        let mut checked = 0;
+        while checked < 1000 {
+            let id = [
+                rng.below(32) as u32,
+                rng.below(32) as u32,
+                rng.below(32) as u32,
+            ];
+            if !set.contains(&id) {
+                assert!(!t.contains(id), "{id:?} wrongly valid");
+                checked += 1;
+            }
+        }
+    }
+
+    #[test]
+    fn children_are_sorted_and_consistent() {
+        let (_, t) = small();
+        assert!(t.valid_roots().windows(2).all(|w| w[0] < w[1]));
+        for &t0 in t.valid_roots() {
+            let l1 = t.valid_after1(t0);
+            assert!(!l1.is_empty());
+            assert!(l1.windows(2).all(|w| w[0] < w[1]));
+            for &t1 in l1 {
+                let l2 = t.valid_after2(t0, t1);
+                assert!(!l2.is_empty());
+                assert!(l2.windows(2).all(|w| w[0] < w[1]));
+            }
+        }
+    }
+
+    #[test]
+    fn invalid_prefixes_have_no_children() {
+        let (_, t) = small();
+        // vocab is 32; token 1000 can't be valid
+        assert!(t.valid_after1(1000).is_empty());
+        assert!(t.valid_after2(1000, 0).is_empty());
+    }
+
+    #[test]
+    fn valid_next_dispatches_by_depth() {
+        let (_, t) = small();
+        assert_eq!(t.valid_next(&[]), t.valid_roots());
+        let t0 = t.valid_roots()[0];
+        assert_eq!(t.valid_next(&[t0]), t.valid_after1(t0));
+        let t1 = t.valid_after1(t0)[0];
+        assert_eq!(t.valid_next(&[t0, t1]), t.valid_after2(t0, t1));
+        assert!(t.valid_next(&[1, 2, 3]).is_empty());
+    }
+
+    #[test]
+    fn item_count_equals_leaf_sum() {
+        let (_, t) = small();
+        let mut leaves = 0;
+        for &t0 in t.valid_roots() {
+            for &t1 in t.valid_after1(t0) {
+                leaves += t.valid_after2(t0, t1).len();
+            }
+        }
+        assert_eq!(leaves, t.n_items());
+    }
+
+    #[test]
+    fn resident_bytes_reasonable() {
+        let (_, t) = small();
+        let b = t.resident_bytes();
+        // at least 4 bytes per item leaf, far less than dense 32^2 masks
+        assert!(b >= 500 * 4);
+        assert!(b < 200_000);
+    }
+}

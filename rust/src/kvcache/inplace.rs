@@ -1,0 +1,299 @@
+//! In-place beam reordering of the unshared cache (paper Fig 8).
+//!
+//! After beam selection, new beam `i` continues from old beam
+//! `parents[i]`: the rows of the `[BW, row_len]` unshared-cache buffer
+//! must be permuted/duplicated *in place* (a second buffer would double
+//! the cache and the copy traffic). Naively applying writes in one
+//! direction overwrites rows that are still pending reads.
+//!
+//! The paper tags each write with a **direct index** (+1 upward / −1
+//! downward) and executes upward writes first in downward order, then the
+//! rest upward. That schedule is exactly a dependency-safe ordering of the
+//! *acyclic* cases; fan-out (one parent, many children) and cycles
+//! (i↔j swaps) also occur in real beam selections, so [`plan_moves`]
+//! computes the general schedule: dependency-ordered direct copies, plus
+//! a single temp row when (and only when) a cycle must be broken. The
+//! property test checks the plan against a gather into a fresh buffer for
+//! arbitrary parent maps.
+
+/// One scheduled operation over row indices.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Move {
+    /// dst ← src (direct, safe at this point of the schedule)
+    Copy { src: usize, dst: usize },
+    /// temp ← src (break a cycle)
+    SaveTemp { src: usize },
+    /// dst ← temp
+    RestoreTemp { dst: usize },
+}
+
+/// Plan statistics (feeds the bench that compares against double-buffering).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PlanStats {
+    pub copies: usize,
+    pub temp_saves: usize,
+    /// writes satisfied by the paper's pure two-direction schedule
+    pub directional: usize,
+}
+
+/// Compute a safe in-place schedule realizing `new[i] = old[parents[i]]`.
+pub fn plan_moves(parents: &[usize]) -> (Vec<Move>, PlanStats) {
+    let n = parents.len();
+    let mut stats = PlanStats::default();
+    // pending_reads[r] = how many not-yet-executed writes read row r
+    let mut pending_reads = vec![0usize; n];
+    for (dst, &src) in parents.iter().enumerate() {
+        assert!(src < n, "parent {src} out of range {n}");
+        if src != dst {
+            pending_reads[src] += 1;
+        }
+    }
+    let mut moves = Vec::with_capacity(n + 2);
+    let mut done = vec![false; n];
+    // rows that are self-moves are trivially done
+    for (dst, &src) in parents.iter().enumerate() {
+        if src == dst {
+            done[dst] = true;
+        }
+    }
+    // Kahn-style: a write (dst ← src) is executable once nothing still
+    // needs to read `dst`.
+    let total = parents.iter().enumerate().filter(|&(d, &s)| s != d).count();
+    let mut ready: Vec<usize> = (0..n)
+        .filter(|&d| !done[d] && pending_reads[d] == 0)
+        .collect();
+    let mut executed = 0usize;
+    while executed < total {
+        while let Some(dst) = ready.pop() {
+            if done[dst] {
+                continue;
+            }
+            let src = parents[dst];
+            moves.push(Move::Copy { src, dst });
+            stats.copies += 1;
+            if src > dst || src < dst {
+                stats.directional += 1;
+            }
+            done[dst] = true;
+            executed += 1;
+            pending_reads[src] -= 1;
+            if pending_reads[src] == 0 && !done[src] {
+                ready.push(src);
+            }
+        }
+        // anything left forms disjoint cycles: every remaining dst has
+        // pending_reads[dst] == 1 and src != dst. Break one cycle.
+        if let Some(start) = (0..n).find(|&d| !done[d]) {
+            moves.push(Move::SaveTemp { src: start });
+            stats.temp_saves += 1;
+            // walk the cycle: start ← p(start) ← p(p(start)) … until the
+            // source would be `start` again, which now lives in temp.
+            let mut dst = start;
+            loop {
+                let src = parents[dst];
+                if src == start {
+                    moves.push(Move::RestoreTemp { dst });
+                    done[dst] = true;
+                    executed += 1;
+                    break;
+                }
+                moves.push(Move::Copy { src, dst });
+                stats.copies += 1;
+                done[dst] = true;
+                executed += 1;
+                pending_reads[src] -= 1;
+                dst = src;
+            }
+            // rows freed by the cycle may unblock fan-out readers
+            for d in 0..n {
+                if !done[d] && pending_reads[d] == 0 {
+                    ready.push(d);
+                }
+            }
+        }
+    }
+    (moves, stats)
+}
+
+/// Apply a schedule to a flat `[n_rows, row_len]` buffer.
+pub fn apply_moves<T: Copy>(buf: &mut [T], row_len: usize, moves: &[Move], temp: &mut Vec<T>) {
+    for m in moves {
+        match *m {
+            Move::Copy { src, dst } => {
+                let (a, b) = (src * row_len, dst * row_len);
+                if a == b {
+                    continue;
+                }
+                // split_at_mut dance for disjoint row copy
+                if a < b {
+                    let (lo, hi) = buf.split_at_mut(b);
+                    hi[..row_len].copy_from_slice(&lo[a..a + row_len]);
+                } else {
+                    let (lo, hi) = buf.split_at_mut(a);
+                    lo[b..b + row_len].copy_from_slice(&hi[..row_len]);
+                }
+            }
+            Move::SaveTemp { src } => {
+                temp.clear();
+                temp.extend_from_slice(&buf[src * row_len..(src + 1) * row_len]);
+            }
+            Move::RestoreTemp { dst } => {
+                buf[dst * row_len..(dst + 1) * row_len].copy_from_slice(temp);
+            }
+        }
+    }
+}
+
+/// Convenience: plan + apply in one call (the engine's hot-path entry).
+pub fn reorder_rows<T: Copy>(
+    buf: &mut [T],
+    row_len: usize,
+    parents: &[usize],
+    temp: &mut Vec<T>,
+) -> PlanStats {
+    let (moves, stats) = plan_moves(parents);
+    apply_moves(buf, row_len, &moves, temp);
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Pcg;
+
+    fn gather_ref(buf: &[u32], row_len: usize, parents: &[usize]) -> Vec<u32> {
+        let mut out = vec![0; buf.len()];
+        for (dst, &src) in parents.iter().enumerate() {
+            out[dst * row_len..(dst + 1) * row_len]
+                .copy_from_slice(&buf[src * row_len..(src + 1) * row_len]);
+        }
+        out
+    }
+
+    fn run_case(parents: &[usize], row_len: usize) {
+        let n = parents.len();
+        let mut buf: Vec<u32> = (0..n * row_len).map(|x| x as u32).collect();
+        let want = gather_ref(&buf, row_len, parents);
+        let mut temp = Vec::new();
+        reorder_rows(&mut buf, row_len, parents, &mut temp);
+        assert_eq!(buf, want, "parents {parents:?}");
+    }
+
+    #[test]
+    fn identity_is_noop() {
+        let parents: Vec<usize> = (0..8).collect();
+        let (moves, stats) = plan_moves(&parents);
+        assert!(moves.is_empty());
+        assert_eq!(stats.copies, 0);
+        run_case(&parents, 4);
+    }
+
+    #[test]
+    fn pure_upward_and_downward() {
+        run_case(&[1, 2, 3, 3], 4); // shifts up + fanout
+        run_case(&[0, 0, 1, 2], 4); // shifts down + fanout
+    }
+
+    #[test]
+    fn swap_needs_temp() {
+        let (_, stats) = plan_moves(&[1, 0]);
+        assert_eq!(stats.temp_saves, 1);
+        run_case(&[1, 0], 3);
+    }
+
+    #[test]
+    fn rotation_cycles() {
+        run_case(&[1, 2, 0], 4);
+        run_case(&[3, 0, 1, 2], 4);
+        run_case(&[1, 0, 3, 2], 4); // two disjoint swaps
+    }
+
+    #[test]
+    fn fanout_through_conflict() {
+        // the case that breaks naive direction-only scheduling:
+        // dst0 ← src2 (upward) and dst1 ← src0 (downward): row0 must be
+        // read by write1 before write0 clobbers it.
+        run_case(&[2, 0, 2], 4);
+    }
+
+    #[test]
+    fn all_from_one_parent() {
+        run_case(&[0, 0, 0, 0], 4);
+        run_case(&[3, 3, 3, 3], 4);
+    }
+
+    #[test]
+    fn property_matches_gather_for_random_parent_maps() {
+        prop::check("inplace-reorder-vs-gather", 300, |rng: &mut Pcg| {
+            let n = rng.range(1, 64) as usize;
+            let row_len = rng.range(1, 16) as usize;
+            let parents: Vec<usize> =
+                (0..n).map(|_| rng.below(n as u64) as usize).collect();
+            let mut buf: Vec<u32> =
+                (0..n * row_len).map(|_| rng.next_u32()).collect();
+            let want = gather_ref(&buf, row_len, &parents);
+            let mut temp = Vec::new();
+            reorder_rows(&mut buf, row_len, &parents, &mut temp);
+            crate::prop_assert!(buf == want, "mismatch for parents {parents:?}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_permutations_use_at_most_cycles_temps() {
+        prop::check("inplace-temp-bound", 200, |rng: &mut Pcg| {
+            let n = rng.range(2, 64) as usize;
+            let parents = rng.permutation(n);
+            let (_, stats) = plan_moves(&parents);
+            // #temps ≤ #cycles ≤ n/2
+            crate::prop_assert!(
+                stats.temp_saves <= n / 2,
+                "too many temps: {} for n={n}",
+                stats.temp_saves
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn schedule_never_reads_clobbered_rows() {
+        // simulation proof: replay the plan tracking row versions
+        prop::check("inplace-no-stale-reads", 200, |rng: &mut Pcg| {
+            let n = rng.range(1, 48) as usize;
+            let parents: Vec<usize> =
+                (0..n).map(|_| rng.below(n as u64) as usize).collect();
+            let (moves, _) = plan_moves(&parents);
+            // version[r] = original row id the physical row currently holds
+            let mut version: Vec<usize> = (0..n).collect();
+            let mut temp_version = usize::MAX;
+            for m in &moves {
+                match *m {
+                    Move::Copy { src, dst } => {
+                        crate::prop_assert!(
+                            version[src] == parents[dst],
+                            "write {dst}←{src} reads stale row"
+                        );
+                        version[dst] = version[src];
+                    }
+                    Move::SaveTemp { src } => temp_version = version[src],
+                    Move::RestoreTemp { dst } => {
+                        crate::prop_assert!(
+                            temp_version == parents[dst],
+                            "temp restore mismatch"
+                        );
+                        version[dst] = temp_version;
+                    }
+                }
+            }
+            for (dst, &src) in parents.iter().enumerate() {
+                crate::prop_assert!(
+                    version[dst] == src,
+                    "row {dst} ends with {} want {src}",
+                    version[dst]
+                );
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,41 @@
+//! # xGR — Efficient Generative Recommendation Serving at Scale
+//!
+//! A from-scratch reproduction of the xGR serving system (Sun, Liu, Zhang
+//! et al., 2025). Generative recommendation (GR) serves recommendations by
+//! running an LLM-style model over a long user-history prompt and decoding
+//! a fixed, short output (a 3-token semantic item ID) under very wide beam
+//! search, with a strict P99 ≤ 200 ms SLO at thousands of QPS.
+//!
+//! The crate is the **L3 coordinator** of a three-layer stack:
+//!
+//! * L1 — Pallas kernels (`python/compile/kernels/`): the staged
+//!   shared/unshared beam-attention operator (xAttention).
+//! * L2 — JAX model (`python/compile/model.py`): the GR transformer,
+//!   AOT-lowered to HLO-text artifacts at build time.
+//! * L3 — this crate: request routing, dynamic batching, separated KV-cache
+//!   management, xBeam search (early-termination sort + item masks),
+//!   xSchedule (three-tier pipeline with host/device overlap, graph
+//!   dispatch, multi-stream), plus every substrate the paper depends on
+//!   (item space, workload generators, an accelerator simulator, baseline
+//!   engines) — Python is never on the request path.
+//!
+//! See `DESIGN.md` for the full system inventory and experiment index.
+
+pub mod util;
+pub mod config;
+pub mod metrics;
+pub mod itemspace;
+pub mod workload;
+pub mod kvcache;
+pub mod beam;
+pub mod simulator;
+pub mod runtime;
+pub mod coordinator;
+pub mod baselines;
+pub mod server;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// The number of decode phases in GR: a token-ID triplet names an item.
+pub const NUM_DECODE: usize = 3;

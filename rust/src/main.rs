@@ -1,0 +1,304 @@
+//! xGR command-line entry point.
+//!
+//! Subcommands:
+//!   serve     start the TCP serving front-end on real HLO artifacts
+//!   replay    replay a synthetic trace through the real engine, report latency
+//!   simulate  run the discrete-event simulator at cluster scale
+//!   info      print model specs / hardware profiles / catalog stats
+//!
+//! Examples:
+//!   xgr serve --artifacts artifacts --model onerec-tiny --addr 127.0.0.1:7878
+//!   xgr replay --requests 200 --rps 40 --dataset amazon --engine xgr
+//!   xgr simulate --model onerec-0.1b --hw ascend --engine xgr,vllm --rps 50,100,200
+
+use std::sync::Arc;
+
+use xgr::baselines;
+use xgr::config::{HardwareProfile, ModelSpec, ServingConfig};
+use xgr::coordinator::{Coordinator, EngineConfig, ExecutorFactory};
+use xgr::itemspace::{Catalog, ItemTrie};
+use xgr::metrics::{Row, Table};
+use xgr::runtime::{MockExecutor, PjrtEngine};
+use xgr::server::{replay_trace, TcpServer};
+use xgr::simulator::{calibrate, simulate, DesConfig, EngineKind};
+use xgr::util::cli::Args;
+use xgr::util::fmt_bytes;
+use xgr::workload::{AmazonLike, JdTraceLike};
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let code = match cmd {
+        "serve" => cmd_serve(&args),
+        "replay" => cmd_replay(&args),
+        "simulate" => cmd_simulate(&args),
+        "info" => cmd_info(&args),
+        _ => {
+            print_help();
+            0
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!(
+        "xgr — generative recommendation serving (paper reproduction)\n\n\
+         USAGE: xgr <serve|replay|simulate|info> [flags]\n\n\
+         serve    --artifacts DIR --model NAME --addr HOST:PORT [--engine xgr|vllm|xllm]\n\
+         replay   --requests N --rps R [--dataset amazon|jd] [--engine xgr|vllm|xllm]\n\
+         \u{20}        [--artifacts DIR | --mock] [--streams N] [--seed S]\n\
+         simulate --model SPEC --hw ascend|h800 --engine xgr,vllm,xllm,tree\n\
+         \u{20}        --rps LIST [--bw N] [--requests N] [--dataset amazon|jd]\n\
+         info     [--model SPEC]"
+    );
+}
+
+fn engine_cfg_for(name: &str) -> EngineConfig {
+    match name {
+        "vllm" => baselines::vllm_like_engine_config(),
+        "xllm" => baselines::xllm_like_engine_config(),
+        _ => EngineConfig::default(),
+    }
+}
+
+fn serving_for(name: &str, base: &ServingConfig) -> ServingConfig {
+    match name {
+        "vllm" => baselines::vllm_like_serving(base),
+        "xllm" => baselines::xllm_like_serving(base),
+        _ => base.clone(),
+    }
+}
+
+fn build_factory(args: &Args, engine: &str, spec: &ModelSpec) -> ExecutorFactory {
+    if args.flag("mock") {
+        let spec = spec.clone();
+        Arc::new(move || Ok(Box::new(MockExecutor::new(spec.clone())) as _))
+    } else {
+        let dir = args.str_or("artifacts", "artifacts");
+        let model = args.str_or("model", "onerec-tiny");
+        let decode_tag = if engine == "xgr" { "decode" } else { "decode_paged" };
+        let tag = decode_tag.to_string();
+        Arc::new(move || Ok(Box::new(PjrtEngine::load(&dir, &model, &tag)?) as _))
+    }
+}
+
+fn load_spec(args: &Args) -> ModelSpec {
+    if args.flag("mock") {
+        let mut spec = ModelSpec::onerec_tiny();
+        spec.vocab = 256;
+        spec.beam_width = args.usize_or("bw", 8);
+        spec
+    } else {
+        let dir = args.str_or("artifacts", "artifacts");
+        let model = args.str_or("model", "onerec-tiny");
+        match xgr::runtime::Manifest::load(&dir, &model) {
+            Ok(m) => m.model,
+            Err(e) => {
+                eprintln!("error: {e:#}");
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let engine = args.str_or("engine", "xgr");
+    let spec = load_spec(args);
+    let catalog =
+        Catalog::generate(spec.vocab as u32, spec.vocab * 8, args.u64_or("seed", 1));
+    let trie = Arc::new(ItemTrie::build(&catalog));
+    let mut serving = ServingConfig::default();
+    serving.num_streams = args.usize_or("streams", 2);
+    let serving = serving_for(&engine, &serving);
+    let factory = build_factory(args, &engine, &spec);
+    let coord = match Coordinator::start(
+        &serving,
+        engine_cfg_for(&engine),
+        trie,
+        factory,
+    ) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            return 2;
+        }
+    };
+    let addr = args.str_or("addr", "127.0.0.1:7878");
+    let server = match TcpServer::bind(&addr) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            return 2;
+        }
+    };
+    println!(
+        "xgr serving {} ({} params) on {} — engine={engine}, {} streams",
+        spec.name,
+        spec.params(),
+        server.local_addr(),
+        serving.num_streams,
+    );
+    println!("protocol: REC <tok,tok,...> | PING | QUIT");
+    server.serve(&coord);
+    coord.shutdown();
+    0
+}
+
+fn cmd_replay(args: &Args) -> i32 {
+    let engine = args.str_or("engine", "xgr");
+    let spec = load_spec(args);
+    let n = args.usize_or("requests", 100);
+    let rps = args.f64_or("rps", 20.0);
+    let seed = args.u64_or("seed", 42);
+    let catalog =
+        Catalog::generate(spec.vocab as u32, spec.vocab * 8, seed);
+    let trie = Arc::new(ItemTrie::build(&catalog));
+    let trace = match args.str_or("dataset", "amazon").as_str() {
+        "jd" => JdTraceLike::for_seq_bucket(spec.seq).generate(&catalog, n, rps, seed),
+        _ => AmazonLike::for_seq_bucket(spec.seq).generate(&catalog, n, rps, seed),
+    };
+    let mut serving = ServingConfig::default();
+    serving.num_streams = args.usize_or("streams", 2);
+    serving.batch_wait_us = args.u64_or("batch-wait-us", 1000);
+    let serving = serving_for(&engine, &serving);
+    let factory = build_factory(args, &engine, &spec);
+    let coord = match Coordinator::start(
+        &serving,
+        engine_cfg_for(&engine),
+        trie,
+        factory,
+    ) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            return 2;
+        }
+    };
+    println!(
+        "replaying {} requests at {:.1} rps through {} ({} streams, engine={engine})",
+        trace.len(),
+        trace.offered_rps(),
+        spec.name,
+        serving.num_streams
+    );
+    let report = replay_trace(&coord, &trace, args.f64_or("speedup", 1.0));
+    println!("{}", report.summary());
+    coord.shutdown();
+    0
+}
+
+fn cmd_simulate(args: &Args) -> i32 {
+    let hw = match HardwareProfile::by_name(&args.str_or("hw", "ascend")) {
+        Ok(h) => h,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            return 2;
+        }
+    };
+    let model = match ModelSpec::by_name(&args.str_or("model", "onerec-0.1b")) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            return 2;
+        }
+    };
+    let bw = args.usize_or("bw", 128);
+    let n = args.usize_or("requests", 2000);
+    let engines: Vec<EngineKind> = args
+        .str_or("engine", "xgr,vllm,xllm")
+        .split(',')
+        .filter_map(|e| match e.trim() {
+            "xgr" => Some(EngineKind::Xgr),
+            "vllm" => Some(EngineKind::VllmLike),
+            "xllm" => Some(EngineKind::XllmLike),
+            "tree" => Some(EngineKind::TreeLike),
+            other => {
+                eprintln!("warning: unknown engine {other:?}");
+                None
+            }
+        })
+        .collect();
+    let rps_list = args.usize_list_or("rps", &[50, 100, 200, 400]);
+    let host = calibrate::analytic(bw, bw, model.vocab);
+    let mut table = Table::new(format!(
+        "simulate {} on {} (BW={bw}, {n} requests)",
+        model.name, hw.name
+    ));
+    for engine in engines {
+        for &rps in &rps_list {
+            let trace = match args.str_or("dataset", "amazon").as_str() {
+                "jd" => JdTraceLike::for_seq_bucket(model.seq)
+                    .generate_lengths(n, rps as f64, 42),
+                _ => AmazonLike::for_seq_bucket(model.seq)
+                    .generate_lengths(n, rps as f64, 42),
+            };
+            let mut serving = ServingConfig::default();
+            serving.beam_width = bw;
+            serving.top_k = bw;
+            let cfg = DesConfig {
+                hw: hw.clone(),
+                model: model.clone(),
+                serving,
+                engine,
+                host,
+            };
+            let r = simulate(&trace, &cfg);
+            table.push(
+                Row::new(format!("{}@rps{rps}", engine.name()))
+                    .col("mean_ms", r.mean_ms())
+                    .col("p99_ms", r.p99_ms())
+                    .col("thru_rps", r.throughput_rps())
+                    .col("peak_kv_gb", r.peak_kv_bytes as f64 / 1e9)
+                    .col("slo_ok", if r.meets_slo(200.0) { 1.0 } else { 0.0 }),
+            );
+        }
+    }
+    table.emit();
+    0
+}
+
+fn cmd_info(args: &Args) -> i32 {
+    println!("model specs:");
+    for name in [
+        "onerec-tiny", "onerec-0.1b", "onerec-1b", "onerec-3b",
+        "qwen3-0.6b", "qwen3-1.7b", "qwen3-4b",
+    ] {
+        let m = ModelSpec::by_name(name).unwrap();
+        println!(
+            "  {:12} params={:>12} kv/token={:>8} seq={} bw={}",
+            m.name,
+            m.params(),
+            fmt_bytes(m.kv_bytes_per_token()),
+            m.seq,
+            m.beam_width
+        );
+    }
+    println!("hardware profiles:");
+    for name in ["ascend-910b", "h800"] {
+        let h = HardwareProfile::by_name(name).unwrap();
+        println!(
+            "  {:12} cgs={} mcu={:.0}T vcu={:.1}T hbm={:.1}TB/s mem={}",
+            h.name,
+            h.num_cgs,
+            h.mcu_flops() / 1e12,
+            h.vcu_flops() / 1e12,
+            h.hbm_bps / 1e12,
+            fmt_bytes(h.mem_bytes)
+        );
+    }
+    if let Some(m) = args.get("model") {
+        if let Ok(spec) = ModelSpec::by_name(m) {
+            let catalog = Catalog::generate(spec.vocab as u32, spec.vocab * 8, 1);
+            let trie = ItemTrie::build(&catalog);
+            println!(
+                "catalog for {}: {} items, density {:.2e}, trie {}",
+                m,
+                catalog.len(),
+                catalog.density(),
+                fmt_bytes(trie.resident_bytes())
+            );
+        }
+    }
+    0
+}

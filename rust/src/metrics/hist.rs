@@ -1,0 +1,214 @@
+//! Log-bucketed latency histogram (HdrHistogram-style, fixed memory).
+//!
+//! Values are nanoseconds. Buckets are log2 major buckets × 32 linear
+//! sub-buckets, giving ≤ ~3% relative quantile error across ns..minutes —
+//! plenty for P99-vs-200ms SLO questions.
+
+const SUB_BITS: u32 = 5; // 32 sub-buckets per octave
+const SUB: usize = 1 << SUB_BITS;
+const OCTAVES: usize = 40; // covers up to ~2^40 ns ≈ 18 min
+
+#[derive(Clone)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum: u128,
+    min: u64,
+    max: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            counts: vec![0; OCTAVES * SUB],
+            total: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+
+    #[inline]
+    fn index(v: u64) -> usize {
+        if v < SUB as u64 {
+            return v as usize; // exact for tiny values
+        }
+        let msb = 63 - v.leading_zeros();
+        // v ∈ [32<<octave, 64<<octave) → value ≈ (32 + sub) << octave
+        let octave = (msb - SUB_BITS) as usize;
+        let sub = (v >> octave) as usize & (SUB - 1);
+        (octave * SUB + sub + SUB).min(OCTAVES * SUB - 1)
+    }
+
+    /// Lower bound of a bucket (inverse of `index`, approximately).
+    fn bucket_value(idx: usize) -> u64 {
+        if idx < SUB {
+            return idx as u64;
+        }
+        let idx = idx - SUB;
+        let octave = (idx / SUB) as u32;
+        let sub = (idx % SUB) as u64;
+        ((SUB as u64) + sub) << octave
+    }
+
+    #[inline]
+    pub fn record(&mut self, v: u64) {
+        self.counts[Self::index(v)] += 1;
+        self.total += 1;
+        self.sum += v as u128;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        self.sum as f64 / self.total as f64
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.total == 0 { 0 } else { self.min }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Quantile in [0,1]; returns a bucket-resolution estimate in ns.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0)) * self.total as f64).ceil() as u64;
+        let target = target.max(1);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return Self::bucket_value(i).min(self.max).max(self.min);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+
+    pub fn reset(&mut self) {
+        self.counts.iter_mut().for_each(|c| *c = 0);
+        self.total = 0;
+        self.sum = 0;
+        self.min = u64::MAX;
+        self.max = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn empty_is_zero() {
+        let h = Histogram::new();
+        assert_eq!(h.p99(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.count(), 0);
+    }
+
+    #[test]
+    fn single_value() {
+        let mut h = Histogram::new();
+        h.record(1_000_000);
+        assert_eq!(h.count(), 1);
+        let q = h.p50();
+        assert!((q as f64 - 1e6).abs() / 1e6 < 0.05, "q={q}");
+    }
+
+    #[test]
+    fn quantile_error_bounded() {
+        let mut h = Histogram::new();
+        let mut rng = Pcg::new(5);
+        let mut vals: Vec<u64> = (0..100_000)
+            .map(|_| rng.range(1_000, 500_000_000))
+            .collect();
+        for &v in &vals {
+            h.record(v);
+        }
+        vals.sort_unstable();
+        for q in [0.5, 0.9, 0.99, 0.999] {
+            let exact = vals[((q * vals.len() as f64) as usize).min(vals.len() - 1)];
+            let est = h.quantile(q);
+            let rel = (est as f64 - exact as f64).abs() / exact as f64;
+            assert!(rel < 0.05, "q={q} exact={exact} est={est} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn mean_exact() {
+        let mut h = Histogram::new();
+        for v in [10u64, 20, 30] {
+            h.record(v);
+        }
+        assert_eq!(h.mean(), 20.0);
+        assert_eq!(h.min(), 10);
+        assert_eq!(h.max(), 30);
+    }
+
+    #[test]
+    fn merge_equals_combined() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut all = Histogram::new();
+        let mut rng = Pcg::new(6);
+        for i in 0..10_000 {
+            let v = rng.range(100, 10_000_000);
+            if i % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+            all.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        assert_eq!(a.p99(), all.p99());
+        assert_eq!(a.mean(), all.mean());
+    }
+
+    #[test]
+    fn tiny_values_exact() {
+        let mut h = Histogram::new();
+        for v in 0..32u64 {
+            h.record(v);
+        }
+        assert_eq!(h.quantile(0.0), 0);
+        assert_eq!(h.max(), 31);
+    }
+}

@@ -1,0 +1,131 @@
+//! Serving metrics: latency histograms (P50/P99), throughput counters and
+//! memory gauges — the quantities every figure in the paper reports.
+
+pub mod hist;
+pub mod report;
+
+pub use hist::Histogram;
+pub use report::{Row, Table};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Monotonic counters shared across pipeline threads.
+#[derive(Default, Debug)]
+pub struct Counters {
+    pub requests_in: AtomicU64,
+    pub requests_done: AtomicU64,
+    pub requests_rejected: AtomicU64,
+    pub batches: AtomicU64,
+    pub prefill_tokens: AtomicU64,
+    pub decode_steps: AtomicU64,
+    pub kernel_launches: AtomicU64,
+    pub graph_dispatches: AtomicU64,
+    pub h2d_transfers: AtomicU64,
+    pub slo_violations: AtomicU64,
+}
+
+impl Counters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn inc(c: &AtomicU64) {
+        c.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(c: &AtomicU64, v: u64) {
+        c.fetch_add(v, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn get(c: &AtomicU64) -> u64 {
+        c.load(Ordering::Relaxed)
+    }
+}
+
+/// Peak-tracking gauge (bytes of KV memory etc.).
+#[derive(Default, Debug)]
+pub struct Gauge {
+    current: AtomicU64,
+    peak: AtomicU64,
+}
+
+impl Gauge {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn set(&self, v: u64) {
+        self.current.store(v, Ordering::Relaxed);
+        self.peak.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, v: u64) {
+        let cur = self.current.fetch_add(v, Ordering::Relaxed) + v;
+        self.peak.fetch_max(cur, Ordering::Relaxed);
+    }
+
+    pub fn sub(&self, v: u64) {
+        self.current.fetch_sub(v, Ordering::Relaxed);
+    }
+
+    pub fn current(&self) -> u64 {
+        self.current.load(Ordering::Relaxed)
+    }
+
+    pub fn peak(&self) -> u64 {
+        self.peak.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.current.store(0, Ordering::Relaxed);
+        self.peak.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gauge_tracks_peak() {
+        let g = Gauge::new();
+        g.add(10);
+        g.add(20);
+        g.sub(25);
+        g.add(1);
+        assert_eq!(g.current(), 6);
+        assert_eq!(g.peak(), 30);
+    }
+
+    #[test]
+    fn gauge_set_updates_peak() {
+        let g = Gauge::new();
+        g.set(5);
+        g.set(3);
+        assert_eq!(g.current(), 3);
+        assert_eq!(g.peak(), 5);
+    }
+
+    #[test]
+    fn counters_are_shared_safely() {
+        use std::sync::Arc;
+        let c = Arc::new(Counters::new());
+        let hs: Vec<_> = (0..4)
+            .map(|_| {
+                let c = c.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        Counters::inc(&c.requests_in);
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(Counters::get(&c.requests_in), 4000);
+    }
+}

@@ -1,0 +1,167 @@
+//! Table/row emitters for benches: aligned text for the console plus
+//! machine-readable JSON lines (DESIGN.md: every figure harness prints the
+//! same rows the paper reports).
+
+use crate::util::json::Json;
+
+/// One row: label + named numeric columns.
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub label: String,
+    pub cols: Vec<(String, f64)>,
+}
+
+impl Row {
+    pub fn new(label: impl Into<String>) -> Self {
+        Row { label: label.into(), cols: Vec::new() }
+    }
+
+    pub fn col(mut self, name: &str, v: f64) -> Self {
+        self.cols.push((name.to_string(), v));
+        self
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![("label", Json::str(self.label.clone()))];
+        for (k, v) in &self.cols {
+            pairs.push((k.as_str(), Json::num(*v)));
+        }
+        Json::obj(pairs.into_iter().map(|(k, v)| (k, v)).collect())
+    }
+}
+
+/// A titled table of rows with uniform columns.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub rows: Vec<Row>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>) -> Self {
+        Table { title: title.into(), rows: Vec::new() }
+    }
+
+    pub fn push(&mut self, row: Row) {
+        self.rows.push(row);
+    }
+
+    /// Render aligned, human-readable text.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("## {}\n", self.title));
+        if self.rows.is_empty() {
+            out.push_str("(no rows)\n");
+            return out;
+        }
+        let col_names: Vec<&str> =
+            self.rows[0].cols.iter().map(|(n, _)| n.as_str()).collect();
+        let mut widths: Vec<usize> = col_names.iter().map(|n| n.len()).collect();
+        let label_w = self
+            .rows
+            .iter()
+            .map(|r| r.label.len())
+            .chain(std::iter::once(5))
+            .max()
+            .unwrap();
+        let fmt_v = |v: f64| -> String {
+            if v == 0.0 {
+                "0".to_string()
+            } else if v.abs() >= 1e6 || v.abs() < 1e-3 {
+                format!("{v:.3e}")
+            } else if v.fract() == 0.0 {
+                format!("{}", v as i64)
+            } else {
+                format!("{v:.3}")
+            }
+        };
+        let mut cells: Vec<Vec<String>> = Vec::new();
+        for r in &self.rows {
+            let mut row = Vec::new();
+            for (i, (_, v)) in r.cols.iter().enumerate() {
+                let s = fmt_v(*v);
+                if i < widths.len() {
+                    widths[i] = widths[i].max(s.len());
+                }
+                row.push(s);
+            }
+            cells.push(row);
+        }
+        out.push_str(&format!("{:<label_w$}", "label"));
+        for (n, w) in col_names.iter().zip(&widths) {
+            out.push_str(&format!("  {:>w$}", n, w = w));
+        }
+        out.push('\n');
+        for (r, row) in self.rows.iter().zip(&cells) {
+            out.push_str(&format!("{:<label_w$}", r.label));
+            for (s, w) in row.iter().zip(&widths) {
+                out.push_str(&format!("  {:>w$}", s, w = w));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Emit one JSON line per row (for plotting / regression tracking).
+    pub fn to_jsonl(&self) -> String {
+        self.rows
+            .iter()
+            .map(|r| {
+                let mut j = r.to_json();
+                if let Json::Obj(m) = &mut j {
+                    m.insert("table".into(), Json::str(self.title.clone()));
+                }
+                j.to_string()
+            })
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+
+    /// Print both renderings to stdout (the bench harness convention).
+    pub fn emit(&self) {
+        println!("{}", self.render());
+        if std::env::var("XGR_JSONL").is_ok() {
+            println!("{}", self.to_jsonl());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Table {
+        let mut t = Table::new("fig-test");
+        t.push(Row::new("bw=128").col("p99_ms", 12.5).col("rps", 100.0));
+        t.push(Row::new("bw=512").col("p99_ms", 14.0).col("rps", 96.0));
+        t
+    }
+
+    #[test]
+    fn render_contains_all_cells() {
+        let s = sample().render();
+        assert!(s.contains("fig-test"));
+        assert!(s.contains("bw=128"));
+        assert!(s.contains("p99_ms"));
+        assert!(s.contains("12.5"));
+        assert!(s.contains("96"));
+    }
+
+    #[test]
+    fn jsonl_parses_back() {
+        let t = sample();
+        for line in t.to_jsonl().lines() {
+            let j = crate::util::json::Json::parse(line).unwrap();
+            assert!(j.get("label").is_some());
+            assert!(j.get("table").is_some());
+        }
+    }
+
+    #[test]
+    fn alignment_is_stable() {
+        let s = sample().render();
+        let lines: Vec<&str> = s.lines().skip(1).collect();
+        let lens: Vec<usize> = lines.iter().map(|l| l.len()).collect();
+        assert!(lens.windows(2).all(|w| w[0] == w[1]), "{s}");
+    }
+}

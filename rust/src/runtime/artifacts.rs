@@ -1,0 +1,143 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the Rust runtime. The manifest records every HLO artifact's I/O
+//! signature so literal marshalling is validated, not assumed.
+
+use crate::config::ModelSpec;
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One lowered entry point (prefill / decode / decode_paged).
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub tag: String,
+    pub path: PathBuf,
+    pub inputs: Vec<(Vec<usize>, String)>,
+    pub outputs: Vec<(Vec<usize>, String)>,
+}
+
+/// Parsed manifest for one model.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelSpec,
+    pub entries: BTreeMap<String, ArtifactEntry>,
+}
+
+fn parse_specs(j: &Json) -> Result<Vec<(Vec<usize>, String)>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("specs must be an array"))?
+        .iter()
+        .map(|s| {
+            let shape = s
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("spec missing shape"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                .collect::<Result<Vec<_>>>()?;
+            let dtype = s
+                .get("dtype")
+                .and_then(Json::as_str)
+                .unwrap_or("f32")
+                .to_string();
+            Ok((shape, dtype))
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json` and select `model_name`.
+    pub fn load(dir: impl AsRef<Path>, model_name: &str) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading manifest in {dir:?} — run `make artifacts`"))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        let mj = j
+            .at(&format!("models.{model_name}"))
+            .ok_or_else(|| anyhow!("model {model_name:?} not in manifest"))?;
+        let model = ModelSpec::from_manifest(
+            mj.get("config").ok_or_else(|| anyhow!("missing config"))?,
+        )?;
+        let mut entries = BTreeMap::new();
+        for (tag, e) in mj
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("missing artifacts"))?
+        {
+            let file = e
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact {tag} missing file"))?;
+            let path = dir.join(file);
+            if !path.exists() {
+                return Err(anyhow!("artifact file missing: {path:?}"));
+            }
+            entries.insert(
+                tag.clone(),
+                ArtifactEntry {
+                    tag: tag.clone(),
+                    path,
+                    inputs: parse_specs(
+                        e.get("inputs").ok_or_else(|| anyhow!("no inputs"))?,
+                    )?,
+                    outputs: parse_specs(
+                        e.get("outputs").ok_or_else(|| anyhow!("no outputs"))?,
+                    )?,
+                },
+            );
+        }
+        if !entries.contains_key("prefill") || !entries.contains_key("decode") {
+            return Err(anyhow!("manifest must provide prefill and decode"));
+        }
+        Ok(Manifest { dir, model, entries })
+    }
+
+    pub fn entry(&self, tag: &str) -> Result<&ArtifactEntry> {
+        self.entries
+            .get(tag)
+            .ok_or_else(|| anyhow!("no artifact {tag:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        d.join("manifest.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let m = Manifest::load(&dir, "onerec-tiny").unwrap();
+        assert_eq!(m.model.name, "onerec-tiny");
+        assert_eq!(m.model.num_decode, 3);
+        let p = m.entry("prefill").unwrap();
+        assert_eq!(p.inputs.len(), 2);
+        assert_eq!(p.inputs[0].0, vec![m.model.seq]);
+        let d = m.entry("decode").unwrap();
+        assert_eq!(d.inputs.len(), 7);
+        assert_eq!(d.outputs[0].0, vec![m.model.beam_width, m.model.vocab]);
+    }
+
+    #[test]
+    fn unknown_model_rejected() {
+        let Some(dir) = artifacts_dir() else {
+            return;
+        };
+        assert!(Manifest::load(&dir, "nope").is_err());
+    }
+
+    #[test]
+    fn missing_dir_is_friendly() {
+        let err = Manifest::load("/nonexistent", "onerec-tiny").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,151 @@
+//! Deterministic mock executor for coordinator tests.
+//!
+//! Produces stable pseudo-logits from a hash of (slot, step, beam
+//! tokens): coordinator logic (batching, beam search, masking, slot
+//! lifecycle) can be exercised without artifacts or XLA, and failures
+//! reproduce exactly.
+
+use super::{ModelExecutor, SlotId};
+use crate::config::ModelSpec;
+use crate::Result;
+use anyhow::anyhow;
+use std::collections::HashMap;
+
+pub struct MockExecutor {
+    spec: ModelSpec,
+    slots: HashMap<u64, u64>, // slot -> seed
+    next: u64,
+    /// optional artificial per-call latency (for pipeline tests)
+    pub delay: Option<std::time::Duration>,
+}
+
+impl MockExecutor {
+    pub fn new(spec: ModelSpec) -> Self {
+        MockExecutor { spec, slots: HashMap::new(), next: 0, delay: None }
+    }
+
+    fn h(mut x: u64) -> u64 {
+        // splitmix64
+        x = x.wrapping_add(0x9E3779B97F4A7C15);
+        x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
+        x ^ (x >> 31)
+    }
+
+    fn logits_row(seed: u64, vocab: usize, out: &mut Vec<f32>) {
+        for v in 0..vocab {
+            let h = Self::h(seed ^ (v as u64).wrapping_mul(0x100000001B3));
+            out.push(((h >> 40) as f32 / (1u64 << 24) as f32) * 8.0 - 4.0);
+        }
+    }
+}
+
+impl ModelExecutor for MockExecutor {
+    fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    fn prefill(&mut self, tokens: &[u32]) -> Result<(SlotId, Vec<f32>)> {
+        if tokens.is_empty() || tokens.len() > self.spec.seq {
+            return Err(anyhow!("bad prompt length {}", tokens.len()));
+        }
+        if let Some(d) = self.delay {
+            std::thread::sleep(d);
+        }
+        let mut seed = 0xcbf29ce484222325u64;
+        for &t in tokens {
+            seed = Self::h(seed ^ t as u64);
+        }
+        let id = self.next;
+        self.next += 1;
+        self.slots.insert(id, seed);
+        let mut logits = Vec::with_capacity(self.spec.vocab);
+        Self::logits_row(seed, self.spec.vocab, &mut logits);
+        Ok((SlotId(id), logits))
+    }
+
+    fn decode(
+        &mut self,
+        slot: SlotId,
+        step: usize,
+        beam_tokens: &[u32],
+        _parents: &[usize],
+    ) -> Result<Vec<f32>> {
+        if beam_tokens.len() != self.spec.beam_width {
+            return Err(anyhow!("bad beam width {}", beam_tokens.len()));
+        }
+        let seed = *self
+            .slots
+            .get(&slot.0)
+            .ok_or_else(|| anyhow!("unknown slot"))?;
+        if let Some(d) = self.delay {
+            std::thread::sleep(d);
+        }
+        let mut out = Vec::with_capacity(self.spec.beam_width * self.spec.vocab);
+        for (b, &t) in beam_tokens.iter().enumerate() {
+            let s =
+                Self::h(seed ^ (step as u64) << 32 ^ (b as u64) << 16 ^ t as u64);
+            Self::logits_row(s, self.spec.vocab, &mut out);
+        }
+        Ok(out)
+    }
+
+    fn release(&mut self, slot: SlotId) {
+        self.slots.remove(&slot.0);
+    }
+
+    fn live_slots(&self) -> usize {
+        self.slots.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ModelSpec {
+        let mut m = ModelSpec::onerec_tiny();
+        m.vocab = 64;
+        m.beam_width = 4;
+        m
+    }
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = MockExecutor::new(spec());
+        let mut b = MockExecutor::new(spec());
+        let (sa, la) = a.prefill(&[1, 2, 3]).unwrap();
+        let (sb, lb) = b.prefill(&[1, 2, 3]).unwrap();
+        assert_eq!(la, lb);
+        let da = a.decode(sa, 0, &[1, 2, 3, 4], &[0, 0, 0, 0]).unwrap();
+        let db = b.decode(sb, 0, &[1, 2, 3, 4], &[0, 0, 0, 0]).unwrap();
+        assert_eq!(da, db);
+    }
+
+    #[test]
+    fn different_prompts_different_logits() {
+        let mut a = MockExecutor::new(spec());
+        let (_, l1) = a.prefill(&[1, 2, 3]).unwrap();
+        let (_, l2) = a.prefill(&[1, 2, 4]).unwrap();
+        assert_ne!(l1, l2);
+    }
+
+    #[test]
+    fn slot_lifecycle() {
+        let mut a = MockExecutor::new(spec());
+        let (s, _) = a.prefill(&[5]).unwrap();
+        assert_eq!(a.live_slots(), 1);
+        assert!(a.decode(s, 0, &[1, 2, 3, 4], &[0; 4]).is_ok());
+        a.release(s);
+        assert_eq!(a.live_slots(), 0);
+        assert!(a.decode(s, 1, &[1, 2, 3, 4], &[0; 4]).is_err());
+    }
+
+    #[test]
+    fn validates_shapes() {
+        let mut a = MockExecutor::new(spec());
+        assert!(a.prefill(&[]).is_err());
+        let (s, _) = a.prefill(&[1]).unwrap();
+        assert!(a.decode(s, 0, &[1, 2], &[0, 0]).is_err());
+    }
+}

@@ -1,0 +1,55 @@
+//! The model runtime: loads AOT-compiled HLO-text artifacts and executes
+//! them on the PJRT CPU client from the Rust hot path (Python is never on
+//! the request path — see DESIGN.md).
+//!
+//! * [`artifacts`] — manifest parsing + artifact registry.
+//! * [`pjrt`] — the real engine: `PjRtClient::cpu()` →
+//!   `HloModuleProto::from_text_file` → compile → execute, with a
+//!   slot-based request API (shared KV kept as device literals, unshared
+//!   KV reordered in place between decode phases).
+//! * [`mock`] — a deterministic in-process executor for coordinator unit
+//!   tests (same trait, no XLA dependency in the test path).
+
+pub mod artifacts;
+pub mod pjrt;
+pub mod mock;
+
+pub use artifacts::{ArtifactEntry, Manifest};
+pub use mock::MockExecutor;
+pub use pjrt::PjrtEngine;
+
+use crate::config::ModelSpec;
+use crate::Result;
+
+/// A per-request KV slot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct SlotId(pub u64);
+
+/// The execution interface the coordinator drives.
+///
+/// Contract: `prefill` admits a request and returns the prompt logits
+/// (`[vocab]`); each `decode` runs one phase over all beams, applying the
+/// beam-parent reorder to the unshared KV *before* the forward pass
+/// (step 0 ignores parents), and returns logits `[bw, vocab]` flattened.
+/// NOTE: not `Send` — PJRT handles are raw pointers. Multi-stream
+/// workers construct their own engine inside the worker thread (one PJRT
+/// client per stream, the same process topology the paper's multi-stream
+/// deployment uses).
+pub trait ModelExecutor {
+    fn spec(&self) -> &ModelSpec;
+
+    fn prefill(&mut self, tokens: &[u32]) -> Result<(SlotId, Vec<f32>)>;
+
+    fn decode(
+        &mut self,
+        slot: SlotId,
+        step: usize,
+        beam_tokens: &[u32],
+        parents: &[usize],
+    ) -> Result<Vec<f32>>;
+
+    fn release(&mut self, slot: SlotId);
+
+    /// Live slots (for leak checks).
+    fn live_slots(&self) -> usize;
+}

@@ -1,0 +1,231 @@
+//! The PJRT engine: the real L3↔L2 bridge.
+//!
+//! Loads HLO-text artifacts (see `python/compile/aot.py`: text is the
+//! interchange format because xla_extension 0.5.1 rejects jax≥0.5's
+//! 64-bit-id protos), compiles them once on `PjRtClient::cpu()`, and
+//! serves slot-based prefill/decode.
+//!
+//! KV handling mirrors the paper's separated-cache design at the runtime
+//! level: the shared prefix KV returned by prefill is kept as two device
+//! literals per request and passed by reference to every decode; the
+//! unshared KV lives in a host-side `[L, BW, ND, H, Dh]` buffer of
+//! exactly BW×ND token slots that is (a) permuted in place with the
+//! direct-index schedule between phases and (b) re-uploaded per phase
+//! (CPU PJRT shares the address space, so this is a memcpy, standing in
+//! for the on-device in-place update the paper performs).
+
+use super::{ModelExecutor, SlotId};
+use crate::config::ModelSpec;
+use crate::kvcache::inplace;
+use crate::metrics::Counters;
+use crate::runtime::artifacts::Manifest;
+use crate::Result;
+use anyhow::{anyhow, Context};
+use std::collections::HashMap;
+
+struct Slot {
+    k_shared: xla::Literal,
+    v_shared: xla::Literal,
+    k_uns: Vec<f32>,
+    v_uns: Vec<f32>,
+    length: i32,
+}
+
+/// A compiled model on the PJRT CPU client.
+pub struct PjrtEngine {
+    spec: ModelSpec,
+    _client: xla::PjRtClient,
+    prefill_exe: xla::PjRtLoadedExecutable,
+    decode_exe: xla::PjRtLoadedExecutable,
+    slots: HashMap<u64, Slot>,
+    next_slot: u64,
+    temp: Vec<f32>,
+    pub counters: Counters,
+}
+
+impl PjrtEngine {
+    /// Load + compile. `decode_tag` picks the kernel variant
+    /// ("decode" = xAttention staged kernel, "decode_paged" = baseline).
+    pub fn load(artifacts_dir: &str, model: &str, decode_tag: &str) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir, model)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let compile = |tag: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let entry = manifest.entry(tag)?;
+            let path = entry
+                .path
+                .to_str()
+                .ok_or_else(|| anyhow!("non-utf8 path"))?;
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .with_context(|| format!("parsing HLO text {path}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client
+                .compile(&comp)
+                .with_context(|| format!("compiling {tag}"))
+        };
+        let prefill_exe = compile("prefill")?;
+        let decode_exe = compile(decode_tag)?;
+        Ok(PjrtEngine {
+            spec: manifest.model,
+            _client: client,
+            prefill_exe,
+            decode_exe,
+            slots: HashMap::new(),
+            next_slot: 0,
+            temp: Vec::new(),
+            counters: Counters::new(),
+        })
+    }
+
+    fn uns_shape(&self) -> [usize; 5] {
+        let m = &self.spec;
+        [m.n_layers, m.beam_width, m.num_decode, m.n_heads, m.d_head]
+    }
+
+    fn uns_elems(&self) -> usize {
+        self.uns_shape().iter().product()
+    }
+
+}
+
+impl ModelExecutor for PjrtEngine {
+    fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    fn prefill(&mut self, tokens: &[u32]) -> Result<(SlotId, Vec<f32>)> {
+        let m = &self.spec;
+        if tokens.is_empty() || tokens.len() > m.seq {
+            return Err(anyhow!(
+                "prompt length {} outside bucket (1..={})",
+                tokens.len(),
+                m.seq
+            ));
+        }
+        if let Some(&t) = tokens.iter().find(|&&t| t as usize >= m.vocab) {
+            return Err(anyhow!("token {t} outside vocab {}", m.vocab));
+        }
+        // pad to the bucket
+        let mut padded = vec![0i32; m.seq];
+        for (d, &s) in padded.iter_mut().zip(tokens) {
+            *d = s as i32;
+        }
+        let length = tokens.len() as i32;
+        let t_lit = xla::Literal::vec1(&padded);
+        let l_lit = xla::Literal::from(length);
+        let result = self.prefill_exe.execute::<xla::Literal>(&[t_lit, l_lit])?
+            [0][0]
+            .to_literal_sync()?;
+        Counters::inc(&self.counters.kernel_launches);
+        Counters::add(&self.counters.prefill_tokens, tokens.len() as u64);
+        let outs = result.to_tuple()?;
+        if outs.len() != 3 {
+            return Err(anyhow!("prefill returned {} outputs", outs.len()));
+        }
+        let mut it = outs.into_iter();
+        let logits = it.next().unwrap().to_vec::<f32>()?;
+        let k_shared = it.next().unwrap();
+        let v_shared = it.next().unwrap();
+        let id = self.next_slot;
+        self.next_slot += 1;
+        let n = self.uns_elems();
+        self.slots.insert(
+            id,
+            Slot {
+                k_shared,
+                v_shared,
+                k_uns: vec![0.0; n],
+                v_uns: vec![0.0; n],
+                length,
+            },
+        );
+        Ok((SlotId(id), logits))
+    }
+
+    fn decode(
+        &mut self,
+        slot: SlotId,
+        step: usize,
+        beam_tokens: &[u32],
+        parents: &[usize],
+    ) -> Result<Vec<f32>> {
+        let m = self.spec.clone();
+        if beam_tokens.len() != m.beam_width {
+            return Err(anyhow!(
+                "expected {} beam tokens, got {}",
+                m.beam_width,
+                beam_tokens.len()
+            ));
+        }
+        if step >= m.num_decode {
+            return Err(anyhow!("step {step} out of range"));
+        }
+        let uns_shape = self.uns_shape();
+        let row_len: usize = uns_shape[2] * uns_shape[3] * uns_shape[4]; // ND*H*Dh
+        let layer_stride = uns_shape[1] * row_len; // BW rows
+        let s = self
+            .slots
+            .get_mut(&slot.0)
+            .ok_or_else(|| anyhow!("unknown slot {slot:?}"))?;
+
+        // ---- in-place beam reorder of the unshared cache (Fig 8) ----
+        if step > 0 {
+            let (moves, _) = inplace::plan_moves(parents);
+            for l in 0..uns_shape[0] {
+                let seg = &mut s.k_uns[l * layer_stride..(l + 1) * layer_stride];
+                inplace::apply_moves(seg, row_len, &moves, &mut self.temp);
+                let seg = &mut s.v_uns[l * layer_stride..(l + 1) * layer_stride];
+                inplace::apply_moves(seg, row_len, &moves, &mut self.temp);
+            }
+        }
+
+        let toks: Vec<i32> = beam_tokens.iter().map(|&t| t as i32).collect();
+        let t_lit = xla::Literal::vec1(&toks);
+        let l_lit = xla::Literal::from(s.length);
+        let s_lit = xla::Literal::from(step as i32);
+        let k_uns_shape = uns_shape;
+        let k_uns_lit = xla::Literal::vec1(&s.k_uns).reshape(&[
+            k_uns_shape[0] as i64,
+            k_uns_shape[1] as i64,
+            k_uns_shape[2] as i64,
+            k_uns_shape[3] as i64,
+            k_uns_shape[4] as i64,
+        ])?;
+        let v_uns_lit = xla::Literal::vec1(&s.v_uns).reshape(&[
+            k_uns_shape[0] as i64,
+            k_uns_shape[1] as i64,
+            k_uns_shape[2] as i64,
+            k_uns_shape[3] as i64,
+            k_uns_shape[4] as i64,
+        ])?;
+        // pass by reference — no deep copies of the shared prefix KV
+        let args: [&xla::Literal; 7] = [
+            &t_lit, &l_lit, &s_lit, &s.k_shared, &s.v_shared, &k_uns_lit,
+            &v_uns_lit,
+        ];
+        let result = self.decode_exe.execute::<&xla::Literal>(&args)?[0][0]
+            .to_literal_sync()?;
+        Counters::inc(&self.counters.kernel_launches);
+        Counters::inc(&self.counters.decode_steps);
+        let outs = result.to_tuple()?;
+        if outs.len() != 3 {
+            return Err(anyhow!("decode returned {} outputs", outs.len()));
+        }
+        let mut it = outs.into_iter();
+        let logits = it.next().unwrap().to_vec::<f32>()?;
+        s.k_uns = it.next().unwrap().to_vec::<f32>()?;
+        s.v_uns = it.next().unwrap().to_vec::<f32>()?;
+        Ok(logits)
+    }
+
+    fn release(&mut self, slot: SlotId) {
+        self.slots.remove(&slot.0);
+    }
+
+    fn live_slots(&self) -> usize {
+        self.slots.len()
+    }
+}
+
+// NOTE: integration tests live in rust/tests/integration_pjrt.rs (they
+// need `make artifacts` to have run; unit tests here would force XLA
+// into every `cargo test` invocation of this module's dependents).

@@ -1,0 +1,160 @@
+//! Trace replay driver: feed a workload trace through a live coordinator
+//! at its recorded arrival times (open loop), collect latency and
+//! throughput — the real-mode analogue of the DES end-to-end runs.
+
+use crate::coordinator::{Coordinator, RecRequest};
+use crate::metrics::Histogram;
+use crate::util::{fmt_ns, now_ns};
+use crate::workload::Trace;
+use std::time::Duration;
+
+/// Replay outcome.
+pub struct ReplayReport {
+    pub latency: Histogram,
+    pub completed: u64,
+    pub rejected: u64,
+    pub wall_s: f64,
+    pub valid_items: u64,
+    pub total_items: u64,
+}
+
+impl ReplayReport {
+    pub fn throughput_rps(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            0.0
+        } else {
+            self.completed as f64 / self.wall_s
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "completed={} rejected={} thru={:.1} rps mean={} p50={} p99={} valid={}/{}",
+            self.completed,
+            self.rejected,
+            self.throughput_rps(),
+            fmt_ns(self.latency.mean() as u64),
+            fmt_ns(self.latency.p50()),
+            fmt_ns(self.latency.p99()),
+            self.valid_items,
+            self.total_items,
+        )
+    }
+}
+
+/// Replay `trace` through `coord`. `speedup` rescales inter-arrival gaps
+/// (>1 = faster than recorded). Blocks until every request resolves.
+pub fn replay_trace(coord: &Coordinator, trace: &Trace, speedup: f64) -> ReplayReport {
+    let t_start = now_ns();
+    let mut latency = Histogram::new();
+    let mut completed = 0u64;
+    let mut rejected = 0u64;
+    let mut valid_items = 0u64;
+    let mut total_items = 0u64;
+    let mut submitted = 0u64;
+
+    let drain = |coord: &Coordinator,
+                     latency: &mut Histogram,
+                     completed: &mut u64,
+                     valid: &mut u64,
+                     total: &mut u64,
+                     block: bool| {
+        loop {
+            let r = if block {
+                coord.recv_timeout(Duration::from_secs(30))
+            } else {
+                coord.recv_timeout(Duration::from_millis(0))
+            };
+            match r {
+                Some(resp) => {
+                    latency.record(resp.latency_ns);
+                    *completed += 1;
+                    *valid += resp.valid_items as u64;
+                    *total += resp.items.len() as u64;
+                    if block {
+                        return true;
+                    }
+                }
+                None => return false,
+            }
+        }
+    };
+
+    for r in &trace.requests {
+        let due = t_start + (r.arrival_ns as f64 / speedup) as u64;
+        loop {
+            let now = now_ns();
+            if now >= due {
+                break;
+            }
+            // poll completions while pacing
+            drain(coord, &mut latency, &mut completed, &mut valid_items, &mut total_items, false);
+            let wait = (due - now).min(2_000_000);
+            std::thread::sleep(Duration::from_nanos(wait));
+        }
+        let req = RecRequest {
+            id: r.id,
+            tokens: r.tokens.clone(),
+            arrival_ns: now_ns(),
+        };
+        match coord.submit(req) {
+            Ok(()) => submitted += 1,
+            Err(_) => rejected += 1,
+        }
+        drain(coord, &mut latency, &mut completed, &mut valid_items, &mut total_items, false);
+    }
+    // wait for the tail
+    while completed < submitted {
+        if !drain(coord, &mut latency, &mut completed, &mut valid_items, &mut total_items, true) {
+            break; // timed out — report what we have
+        }
+    }
+    ReplayReport {
+        latency,
+        completed,
+        rejected,
+        wall_s: (now_ns() - t_start) as f64 / 1e9,
+        valid_items,
+        total_items,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelSpec, ServingConfig};
+    use crate::coordinator::{Coordinator, EngineConfig};
+    use crate::itemspace::{Catalog, ItemTrie};
+    use crate::runtime::MockExecutor;
+    use crate::workload::AmazonLike;
+    use std::sync::Arc;
+
+    #[test]
+    fn replay_completes_and_measures() {
+        let mut spec = ModelSpec::onerec_tiny();
+        spec.vocab = 64;
+        spec.beam_width = 4;
+        spec.seq = 48;
+        let catalog = Catalog::generate(64, 400, 3);
+        let trie = Arc::new(ItemTrie::build(&catalog));
+        let mut serving = ServingConfig::default();
+        serving.num_streams = 2;
+        serving.batch_wait_us = 200;
+        let factory: crate::coordinator::ExecutorFactory = {
+            let spec = spec.clone();
+            Arc::new(move || Ok(Box::new(MockExecutor::new(spec.clone())) as _))
+        };
+        let coord =
+            Coordinator::start(&serving, EngineConfig::default(), trie, factory)
+                .unwrap();
+        let trace = AmazonLike::for_seq_bucket(48).generate(
+            &catalog, 30, 400.0, 7,
+        );
+        let report = replay_trace(&coord, &trace, 1.0);
+        assert_eq!(report.completed, 30);
+        assert_eq!(report.rejected, 0);
+        assert!(report.latency.p99() > 0);
+        assert_eq!(report.valid_items, report.total_items);
+        coord.shutdown();
+    }
+}

@@ -1,0 +1,8 @@
+//! Serving front-ends: an in-process trace driver (open/closed loop) and
+//! a small TCP line-protocol server for interactive use.
+
+pub mod driver;
+pub mod tcp;
+
+pub use driver::{replay_trace, ReplayReport};
+pub use tcp::TcpServer;

@@ -1,0 +1,189 @@
+//! A minimal TCP line-protocol front-end (std::net; no external deps).
+//!
+//! Protocol, one request per line:
+//!   `REC <tok>,<tok>,...`   → `OK <t0>:<t1>:<t2>@<score> ...` (top items)
+//!   `PING`                  → `PONG`
+//!   `QUIT`                  → closes the connection
+//! Errors answer `ERR <reason>`.
+
+use crate::coordinator::{Coordinator, RecRequest};
+use crate::util::now_ns;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+pub struct TcpServer {
+    listener: TcpListener,
+    next_id: AtomicU64,
+    stop: Arc<AtomicBool>,
+}
+
+impl TcpServer {
+    pub fn bind(addr: &str) -> crate::Result<Self> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        Ok(TcpServer {
+            listener,
+            next_id: AtomicU64::new(0),
+            stop: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    pub fn local_addr(&self) -> String {
+        self.listener
+            .local_addr()
+            .map(|a| a.to_string())
+            .unwrap_or_default()
+    }
+
+    pub fn stop_flag(&self) -> Arc<AtomicBool> {
+        self.stop.clone()
+    }
+
+    /// Serve connections until the stop flag is set. Connections are
+    /// handled serially per accept (each request round-trips through the
+    /// coordinator, which is itself concurrent).
+    pub fn serve(&self, coord: &Coordinator) {
+        while !self.stop.load(Ordering::Relaxed) {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    if let Err(e) = self.handle(stream, coord) {
+                        eprintln!("tcp: connection error: {e:#}");
+                    }
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => {
+                    eprintln!("tcp: accept error: {e}");
+                    break;
+                }
+            }
+        }
+    }
+
+    fn handle(&self, stream: TcpStream, coord: &Coordinator) -> crate::Result<()> {
+        stream.set_nonblocking(false)?;
+        let mut reader = BufReader::new(stream.try_clone()?);
+        let mut w = stream;
+        let mut line = String::new();
+        loop {
+            line.clear();
+            if reader.read_line(&mut line)? == 0 {
+                return Ok(());
+            }
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line == "QUIT" {
+                return Ok(());
+            }
+            if line == "PING" {
+                writeln!(w, "PONG")?;
+                continue;
+            }
+            let Some(rest) = line.strip_prefix("REC ") else {
+                writeln!(w, "ERR unknown command")?;
+                continue;
+            };
+            let tokens: Result<Vec<u32>, _> =
+                rest.split(',').map(|t| t.trim().parse::<u32>()).collect();
+            let Ok(tokens) = tokens else {
+                writeln!(w, "ERR bad token list")?;
+                continue;
+            };
+            if tokens.is_empty() {
+                writeln!(w, "ERR empty prompt")?;
+                continue;
+            }
+            let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+            let req = RecRequest { id, tokens, arrival_ns: now_ns() };
+            if coord.submit_blocking(req).is_err() {
+                writeln!(w, "ERR shutting down")?;
+                return Ok(());
+            }
+            // serial per-connection: wait for OUR id
+            loop {
+                match coord.recv_timeout(Duration::from_secs(30)) {
+                    Some(resp) if resp.id == id => {
+                        let items: Vec<String> = resp
+                            .items
+                            .iter()
+                            .take(10)
+                            .map(|(it, s)| {
+                                format!("{}:{}:{}@{s:.3}", it[0], it[1], it[2])
+                            })
+                            .collect();
+                        writeln!(w, "OK {}", items.join(" "))?;
+                        break;
+                    }
+                    Some(_) => continue, // a different request's response
+                    None => {
+                        writeln!(w, "ERR timeout")?;
+                        break;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelSpec, ServingConfig};
+    use crate::coordinator::EngineConfig;
+    use crate::itemspace::{Catalog, ItemTrie};
+    use crate::runtime::MockExecutor;
+
+    #[test]
+    fn tcp_roundtrip() {
+        let mut spec = ModelSpec::onerec_tiny();
+        spec.vocab = 64;
+        spec.beam_width = 4;
+        let catalog = Catalog::generate(64, 300, 4);
+        let trie = Arc::new(ItemTrie::build(&catalog));
+        let mut serving = ServingConfig::default();
+        serving.batch_wait_us = 100;
+        let factory: crate::coordinator::ExecutorFactory = {
+            let spec = spec.clone();
+            Arc::new(move || Ok(Box::new(MockExecutor::new(spec.clone())) as _))
+        };
+        let coord =
+            Coordinator::start(&serving, EngineConfig::default(), trie, factory)
+                .unwrap();
+        let server = TcpServer::bind("127.0.0.1:0").unwrap();
+        let addr = server.local_addr();
+        let stop = server.stop_flag();
+        let h = std::thread::spawn(move || {
+            server.serve(&coord);
+            coord.shutdown();
+        });
+
+        let mut s = TcpStream::connect(&addr).unwrap();
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        let mut line = String::new();
+        writeln!(s, "PING").unwrap();
+        r.read_line(&mut line).unwrap();
+        assert_eq!(line.trim(), "PONG");
+
+        line.clear();
+        writeln!(s, "REC 1,2,3").unwrap();
+        r.read_line(&mut line).unwrap();
+        assert!(line.starts_with("OK "), "got {line:?}");
+        assert!(line.contains('@'));
+
+        line.clear();
+        writeln!(s, "REC x,y").unwrap();
+        r.read_line(&mut line).unwrap();
+        assert!(line.starts_with("ERR"));
+
+        writeln!(s, "QUIT").unwrap();
+        stop.store(true, Ordering::Relaxed);
+        drop(s);
+        h.join().unwrap();
+    }
+}

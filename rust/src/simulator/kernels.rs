@@ -1,0 +1,363 @@
+//! Analytic kernel cost models (roofline + launch overhead).
+//!
+//! All four decode-attention kernels compute the same math — the paper's
+//! point is they *move different bytes*:
+//!
+//! * **Paged** (vLLM): no shared-prefix awareness → the prompt KV is
+//!   streamed once *per beam*: `BW·(S+nd)` tokens.
+//! * **Tree**: tokens streamed once, but the mask (`BW × ctx`) must be
+//!   generated and read, and dead-path tokens stay in the stream.
+//! * **xAttention**: shared prefix streamed once + the dense `BW·ND`
+//!   unshared buffer, three pipelined stages over partitioned CGs.
+//! * **Ideal**: perfect reuse lower bound (prefix once, no overheads).
+//!
+//! FLOPs are identical across kernels (same attention); times diverge
+//! through bytes, launch counts, and CG utilization. The `busy` fields
+//! reproduce Fig 17(3)'s pipeline-busy profiling.
+
+use crate::config::{HardwareProfile, ModelSpec};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AttnKernel {
+    Paged,
+    Tree,
+    XAttention,
+    Ideal,
+}
+
+impl AttnKernel {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AttnKernel::Paged => "paged",
+            AttnKernel::Tree => "tree",
+            AttnKernel::XAttention => "xattention",
+            AttnKernel::Ideal => "ideal",
+        }
+    }
+}
+
+/// Cost breakdown of one kernel invocation.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct KernelCost {
+    pub time_s: f64,
+    pub flops: f64,
+    pub hbm_bytes: f64,
+    /// fraction of kernel time the memory pipeline is busy (Fig 17(3))
+    pub mem_busy: f64,
+    /// fraction of kernel time the MCU is busy
+    pub mcu_busy: f64,
+}
+
+/// Attention FLOPs for a decode step: every beam's query attends to its
+/// context (`ctx` tokens): QK^T + PV = 4·ctx·H·Dh per layer per beam.
+fn attn_flops(m: &ModelSpec, batch: usize, bw: usize, ctx: usize) -> f64 {
+    4.0 * (batch * bw * ctx) as f64
+        * (m.n_layers * m.n_heads * m.d_head) as f64
+}
+
+/// Decode-attention cost for one batch-step.
+///
+/// * `batch` — requests in the batch, each with `prompt_len` prompt tokens
+/// * `step` — decode phase index (0-based): context grows with it
+/// * `cgs` — CGs granted to this kernel (spatial multi-stream sharing)
+pub fn decode_attention_cost(
+    kernel: AttnKernel,
+    hw: &HardwareProfile,
+    m: &ModelSpec,
+    batch: usize,
+    bw: usize,
+    prompt_len: usize,
+    step: usize,
+    cgs: usize,
+) -> KernelCost {
+    let bpt = m.kv_bytes_per_token() as f64;
+    let own = step + 1; // decode tokens visible at this step
+    let ctx = prompt_len + own;
+    let flops = attn_flops(m, batch, bw, ctx);
+    let q_bytes = (batch * bw * m.n_layers * m.n_heads * m.d_head * m.dtype_bytes)
+        as f64
+        * 2.0; // Q in + O out
+
+    let kv_bytes = match kernel {
+        AttnKernel::Paged => {
+            // prompt re-streamed per beam + per-beam own tokens
+            (batch * bw) as f64 * (prompt_len + own) as f64 * bpt
+        }
+        AttnKernel::Tree => {
+            // each token once, but dead tree nodes stay in the stream and
+            // the BW×ctx mask is generated + read (1 byte/entry both ways)
+            let tree_tokens = bw * (step + 1); // grown so far, never pruned
+            let stream = (batch * (prompt_len + tree_tokens)) as f64 * bpt;
+            let mask = 2.0 * (batch * bw * (prompt_len + tree_tokens)) as f64;
+            stream + mask
+        }
+        AttnKernel::XAttention => {
+            // shared prefix once + dense unshared buffer
+            (batch * (prompt_len + bw * own)) as f64 * bpt
+        }
+        AttnKernel::Ideal => (batch * (prompt_len + bw * own)) as f64 * bpt,
+    };
+    let bytes = kv_bytes + q_bytes;
+
+    // launch structure: paged/tree/ideal are single-stage; xattention is
+    // a 3-stage pipeline over partitioned CGs (shared/unshared/merge)
+    let (time, mem_busy, mcu_busy) = match kernel {
+        AttnKernel::XAttention => {
+            // optimal CG partition by brute force (the serving engine uses
+            // the Sec 5.2 decision-tree regressor to approximate this;
+            // the cost model takes the true argmin)
+            let cgs_merge = (cgs / 8).max(1);
+            let avail = cgs.saturating_sub(cgs_merge).max(2);
+            let mut t = f64::INFINITY;
+            for cgs_shared in 1..avail {
+                let cand = staged_pipeline_time(
+                    hw, m, batch, bw, prompt_len, own, cgs_shared,
+                    avail - cgs_shared, cgs_merge,
+                );
+                if cand < t {
+                    t = cand;
+                }
+            }
+            let mem_t = bytes / hw.hbm_bps;
+            let cmp_t = flops / (hw.mcu_flops_per_cg * cgs as f64);
+            (t, (mem_t / t).min(1.0), (cmp_t / t).min(1.0))
+        }
+        AttnKernel::Ideal => {
+            let t = hw.roofline_s(flops, bytes, cgs);
+            let mem_t = bytes / hw.hbm_bps;
+            let cmp_t = flops / (hw.mcu_flops_per_cg * cgs as f64);
+            (t, (mem_t / t).min(1.0), (cmp_t / t).min(1.0))
+        }
+        AttnKernel::Tree => {
+            // host-side mask generation before launch (the paper's Sec 3.1
+            // observation: mask generation is significant at large BW)
+            let tree_tokens = bw * (step + 1);
+            let mask_gen =
+                (batch * bw * (prompt_len + tree_tokens)) as f64 * 1.0e-9;
+            let t = hw.roofline_s(flops, bytes, cgs) + mask_gen;
+            let bw_eff = hw.bw_share(cgs);
+            let mem_t = bytes / bw_eff;
+            let cmp_t = flops / (hw.mcu_flops_per_cg * cgs as f64);
+            (t, (mem_t / t).min(1.0), (cmp_t / t).min(1.0))
+        }
+        AttnKernel::Paged => {
+            // per-beam re-reads of the shared prefix hit L2 when the
+            // prefix KV fits there (this is why the paper measures ~6.6×,
+            // not the raw HBM-traffic ratio) — the first read and all
+            // per-beam own tokens still stream from HBM
+            let prefix_bytes = (batch * prompt_len) as f64 * bpt;
+            let reread_bytes = (bw.saturating_sub(1) * batch) as f64
+                * prompt_len as f64
+                * bpt;
+            let own_bytes = (batch * bw * own) as f64 * bpt + q_bytes;
+            let fits_l2 = (prompt_len as u64 * m.kv_bytes_per_token())
+                <= hw.l2_bytes;
+            let reread_bps = if fits_l2 { hw.l2_bps } else { hw.bw_share(cgs) };
+            let mem_t = (prefix_bytes + own_bytes) / hw.bw_share(cgs)
+                + reread_bytes / reread_bps;
+            let cmp_t = flops / (hw.mcu_flops_per_cg * cgs as f64);
+            let t = mem_t.max(cmp_t);
+            (t, (mem_t / t).min(1.0), (cmp_t / t).min(1.0))
+        }
+    };
+
+    KernelCost { time_s: time, flops, hbm_bytes: bytes, mem_busy, mcu_busy }
+}
+
+/// The Sec 5.2 staged pipeline: shared and unshared stages run on
+/// disjoint CG sets in parallel; the merge stage (1+ CG) pipelines behind
+/// them with soft synchronization. Pipeline makespan ≈ max(stage times) +
+/// merge drain.
+#[allow(clippy::too_many_arguments)]
+pub fn staged_pipeline_time(
+    hw: &HardwareProfile,
+    m: &ModelSpec,
+    batch: usize,
+    bw: usize,
+    prompt_len: usize,
+    own: usize,
+    cgs_shared: usize,
+    cgs_unshared: usize,
+    cgs_merge: usize,
+) -> f64 {
+    let bpt = m.kv_bytes_per_token() as f64;
+    let shared_bytes = (batch * prompt_len) as f64 * bpt;
+    let unshared_bytes = (batch * bw * own) as f64 * bpt;
+    let shared_flops = attn_flops(m, batch, bw, prompt_len);
+    let unshared_flops = attn_flops(m, batch, bw, own);
+    let t_shared = hw.roofline_s(shared_flops, shared_bytes, cgs_shared);
+    let t_unshared = hw.roofline_s(unshared_flops, unshared_bytes, cgs_unshared);
+    // merge: OnlineSoftmax + post-processing over [batch·bw, H, Dh] — VCU
+    let merge_elems =
+        (batch * bw * m.n_layers * m.n_heads * m.d_head) as f64 * 4.0;
+    let t_merge = merge_elems / (hw.vcu_flops_per_cg * cgs_merge.max(1) as f64);
+    // soft-sync spin + pipelined drain
+    let sync = 2e-6;
+    t_shared.max(t_unshared) + t_merge + sync
+}
+
+/// Non-attention forward cost (projections, MLP, logits) for `tokens`
+/// query tokens: 2·params FLOPs/token; weights stream once per kernel.
+pub fn forward_cost(
+    hw: &HardwareProfile,
+    m: &ModelSpec,
+    tokens: usize,
+    cgs: usize,
+) -> KernelCost {
+    let flops = 2.0 * m.params() as f64 * tokens as f64;
+    let weight_bytes = m.params() as f64 * m.dtype_bytes as f64;
+    let act_bytes = (tokens * m.d_model * m.dtype_bytes) as f64 * 4.0;
+    let bytes = weight_bytes + act_bytes;
+    let t = hw.roofline_s(flops, bytes, cgs);
+    let bw_eff = hw.bw_share(cgs);
+    KernelCost {
+        time_s: t,
+        flops,
+        hbm_bytes: bytes,
+        mem_busy: ((bytes / bw_eff) / t).min(1.0),
+        mcu_busy: ((flops / (hw.mcu_flops_per_cg * cgs as f64)) / t).min(1.0),
+    }
+}
+
+/// Prefill cost over `total_tokens` prompt tokens (self-attention is
+/// quadratic in each request's length; we approximate with the batch's
+/// mean length, which the dynamic batcher keeps tight).
+pub fn prefill_cost(
+    hw: &HardwareProfile,
+    m: &ModelSpec,
+    total_tokens: usize,
+    mean_len: usize,
+    cgs: usize,
+) -> KernelCost {
+    let fwd = forward_cost(hw, m, total_tokens, cgs);
+    let attn_fl = 4.0 * (total_tokens * mean_len / 2) as f64
+        * (m.n_layers * m.n_heads * m.d_head) as f64;
+    let kv_bytes = (total_tokens as u64 * m.kv_bytes_per_token()) as f64;
+    let flops = fwd.flops + attn_fl;
+    let bytes = fwd.hbm_bytes + 2.0 * kv_bytes;
+    let t = hw.roofline_s(flops, bytes, cgs);
+    let bw_eff = hw.bw_share(cgs);
+    KernelCost {
+        time_s: t,
+        flops,
+        hbm_bytes: bytes,
+        mem_busy: ((bytes / bw_eff) / t).min(1.0),
+        mcu_busy: ((flops / (hw.mcu_flops_per_cg * cgs as f64)) / t).min(1.0),
+    }
+}
+
+/// Kernels launched per decode phase without graph capture: per layer
+/// (qkv, attention, out-proj, 2×mlp, norms ≈ 8) + logits + sampling prep.
+pub fn kernels_per_decode_phase(m: &ModelSpec) -> usize {
+    m.n_layers * 8 + 4
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (HardwareProfile, ModelSpec) {
+        (HardwareProfile::ascend_910b(), ModelSpec::onerec_0_1b())
+    }
+
+    #[test]
+    fn paged_latency_grows_with_bw_xattention_flat() {
+        let (hw, m) = setup();
+        let t = |k, bw| {
+            decode_attention_cost(k, &hw, &m, 1, bw, 1024, 2, hw.num_cgs).time_s
+        };
+        let paged_ratio = t(AttnKernel::Paged, 512) / t(AttnKernel::Paged, 128);
+        assert!(paged_ratio > 3.0, "paged should scale ~linear, got {paged_ratio}");
+        // in the memory-bound regime (BW below the machine balance point
+        // ≈ mcu/hbm flops-per-byte) xattention is near-flat; past it the
+        // (unavoidable) attention flops take over, but scaling stays
+        // strictly better than paged and the absolute gap is huge
+        let x_flat =
+            t(AttnKernel::XAttention, 256) / t(AttnKernel::XAttention, 128);
+        assert!(x_flat < 2.0, "memory-bound regime should be near-flat: {x_flat}");
+        let x_ratio =
+            t(AttnKernel::XAttention, 512) / t(AttnKernel::XAttention, 128);
+        assert!(x_ratio < paged_ratio, "{x_ratio} vs {paged_ratio}");
+        for bw in [128, 256, 512] {
+            let gap = t(AttnKernel::Paged, bw) / t(AttnKernel::XAttention, bw);
+            assert!(gap > 20.0, "bw={bw}: gap {gap}");
+        }
+    }
+
+    #[test]
+    fn ordering_paged_worst_ideal_best() {
+        let (hw, m) = setup();
+        let t = |k| {
+            decode_attention_cost(k, &hw, &m, 4, 256, 1024, 2, hw.num_cgs).time_s
+        };
+        let (p, tr, x, id) = (
+            t(AttnKernel::Paged),
+            t(AttnKernel::Tree),
+            t(AttnKernel::XAttention),
+            t(AttnKernel::Ideal),
+        );
+        assert!(p > tr, "paged {p} vs tree {tr}");
+        assert!(tr > x * 0.9, "tree {tr} vs xattention {x}");
+        assert!(x >= id, "xattention {x} vs ideal {id}");
+        // the paper's ~6.6× kernel-latency claim at large BW
+        assert!(p / x > 3.0, "speedup {}", p / x);
+    }
+
+    #[test]
+    fn paged_is_memory_bound_xattention_is_not() {
+        let (hw, m) = setup();
+        let p = decode_attention_cost(
+            AttnKernel::Paged, &hw, &m, 4, 512, 1024, 2, hw.num_cgs,
+        );
+        let x = decode_attention_cost(
+            AttnKernel::XAttention, &hw, &m, 4, 512, 1024, 2, hw.num_cgs,
+        );
+        assert!(p.mem_busy > 0.85, "paged mem busy {}", p.mem_busy);
+        assert!(x.mem_busy < p.mem_busy, "{} vs {}", x.mem_busy, p.mem_busy);
+    }
+
+    #[test]
+    fn staged_pipeline_parallelism_properties() {
+        let (hw, m) = setup();
+        // running shared ∥ unshared beats serializing them on the same
+        // partition: makespan = max(a,b)+m < a+b+m
+        let par = staged_pipeline_time(&hw, &m, 2, 256, 1024, 3, 16, 7, 2);
+        let t_shared = hw.roofline_s(
+            4.0 * (2 * 256 * 1024) as f64
+                * (m.n_layers * m.n_heads * m.d_head) as f64,
+            (2 * 1024) as f64 * m.kv_bytes_per_token() as f64,
+            16,
+        );
+        let t_unshared = hw.roofline_s(
+            4.0 * (2 * 256 * 3) as f64
+                * (m.n_layers * m.n_heads * m.d_head) as f64,
+            (2 * 256 * 3) as f64 * m.kv_bytes_per_token() as f64,
+            7,
+        );
+        assert!(
+            par < t_shared + t_unshared + 1e-3,
+            "pipeline {par} vs serial {}",
+            t_shared + t_unshared
+        );
+        // more CGs on the bottleneck stage shortens the pipeline
+        let narrow = staged_pipeline_time(&hw, &m, 2, 256, 4096, 3, 4, 18, 2);
+        let wide = staged_pipeline_time(&hw, &m, 2, 256, 4096, 3, 18, 4, 2);
+        assert!(wide < narrow, "wide {wide} vs narrow {narrow}");
+    }
+
+    #[test]
+    fn prefill_scales_with_tokens() {
+        let (hw, m) = setup();
+        let a = prefill_cost(&hw, &m, 1024, 1024, hw.num_cgs).time_s;
+        let b = prefill_cost(&hw, &m, 4096, 1024, hw.num_cgs).time_s;
+        assert!(b > 2.0 * a);
+    }
+
+    #[test]
+    fn fewer_cgs_slower_forward() {
+        let (hw, m) = setup();
+        let full = forward_cost(&hw, &m, 512, hw.num_cgs).time_s;
+        let quarter = forward_cost(&hw, &m, 512, hw.num_cgs / 4).time_s;
+        assert!(quarter > full);
+    }
+}

@@ -1,0 +1,22 @@
+//! The accelerator simulator — the substrate standing in for the paper's
+//! Ascend/H800 clusters (DESIGN.md §Hardware-Adaptation).
+//!
+//! * [`kernels`] — analytic cost models (roofline + launch overhead) for
+//!   the four attention kernels the paper compares (Paged, Tree,
+//!   xAttention, Ideal) and for the non-attention forward pass. These
+//!   produce Figs 3 and 17.
+//! * [`regressor`] — the decision-tree CG-partition predictor of Sec 5.2.
+//! * [`calibrate`] — measures *real* host-side costs (xBeam select, mask
+//!   updates, scheduling) on this machine so the DES charges measured
+//!   numbers for everything that runs on the host.
+//! * [`des`] — a discrete-event simulation of the full serving pipeline
+//!   (scheduler/engine/worker, streams, H2D, overlap, graph dispatch)
+//!   driving Figs 13/14/15/16/18/19.
+
+pub mod kernels;
+pub mod regressor;
+pub mod calibrate;
+pub mod des;
+
+pub use des::{simulate, DesConfig, DesResult, EngineKind};
+pub use kernels::{AttnKernel, KernelCost};

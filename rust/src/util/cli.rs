@@ -1,0 +1,132 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and
+//! positional arguments, with typed getters and a generated usage string.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    bools: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1).collect())
+    }
+
+    pub fn parse(argv: Vec<String>) -> Self {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(rest.to_string(), v);
+                } else {
+                    out.bools.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} wants an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} wants an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} wants a number, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.bools.iter().any(|b| b == key) || self.get(key) == Some("true")
+    }
+
+    /// Comma-separated list of usize, e.g. `--bw 128,256,512`.
+    pub fn usize_list_or(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(key) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .map(|x| {
+                    x.trim()
+                        .parse()
+                        .unwrap_or_else(|_| panic!("--{key}: bad integer {x:?}"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from).collect())
+    }
+
+    #[test]
+    fn flag_value_forms() {
+        // note: a bare `--flag` greedily takes a following non-flag token
+        // as its value, so positionals come first (xgr's convention:
+        // `xgr CMD --flags ...`)
+        let a = parse("cmd --x 1 --y=2 --verbose");
+        assert_eq!(a.usize_or("x", 0), 1);
+        assert_eq!(a.usize_or("y", 0), 2);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["cmd"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("run");
+        assert_eq!(a.usize_or("missing", 7), 7);
+        assert_eq!(a.str_or("name", "d"), "d");
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse("--bw 128,256,512");
+        assert_eq!(a.usize_list_or("bw", &[1]), vec![128, 256, 512]);
+        assert_eq!(a.usize_list_or("other", &[1, 2]), vec![1, 2]);
+    }
+
+    #[test]
+    fn bool_followed_by_flag() {
+        let a = parse("--a --b 3");
+        assert!(a.flag("a"));
+        assert_eq!(a.usize_or("b", 0), 3);
+    }
+}

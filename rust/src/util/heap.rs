@@ -1,0 +1,204 @@
+//! Fixed-capacity min-heap keyed by f32 score — the data structure behind
+//! xBeam's early-termination Top-BW selection (paper Sec 6.2).
+//!
+//! The heap keeps the BW *best* (largest-score) items seen so far; its root
+//! is the *smallest* of them, so `peek_min()` is the admission threshold a
+//! new candidate must beat. Capacity is fixed at construction and storage
+//! is reused across decode steps (Sec 6.3 data-structure reuse): `clear()`
+//! resets length without deallocating.
+
+/// Entry: score plus an opaque payload (beam id, token id, …).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Entry<T> {
+    pub score: f32,
+    pub payload: T,
+}
+
+#[derive(Debug)]
+pub struct BoundedMinHeap<T> {
+    buf: Vec<Entry<T>>,
+    cap: usize,
+}
+
+impl<T: Copy> BoundedMinHeap<T> {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0);
+        BoundedMinHeap { buf: Vec::with_capacity(cap), cap }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    #[inline]
+    pub fn is_full(&self) -> bool {
+        self.buf.len() == self.cap
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Reset for reuse — keeps the allocation (Sec 6.3).
+    pub fn clear(&mut self) {
+        self.buf.clear();
+    }
+
+    /// The current admission threshold (root = min of the kept top set).
+    #[inline]
+    pub fn peek_min(&self) -> Option<f32> {
+        self.buf.first().map(|e| e.score)
+    }
+
+    /// Offer a candidate. Returns true if it was admitted.
+    ///
+    /// While not full, every candidate is admitted. Once full, a candidate
+    /// must strictly beat the root; the root is replaced and sifted down.
+    #[inline]
+    pub fn offer(&mut self, score: f32, payload: T) -> bool {
+        if self.buf.len() < self.cap {
+            self.buf.push(Entry { score, payload });
+            self.sift_up(self.buf.len() - 1);
+            true
+        } else if score > self.buf[0].score {
+            self.buf[0] = Entry { score, payload };
+            self.sift_down(0);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Extract all entries, sorted by descending score. Leaves the heap
+    /// empty (but allocated).
+    pub fn drain_sorted_desc(&mut self) -> Vec<Entry<T>> {
+        let mut out = std::mem::take(&mut self.buf);
+        out.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+        self.buf = Vec::with_capacity(self.cap);
+        out
+    }
+
+    /// Copy entries into `dst` sorted descending, reusing `dst`'s storage
+    /// and keeping the heap's own buffer (fully allocation-free path).
+    pub fn fill_sorted_desc(&mut self, dst: &mut Vec<Entry<T>>) {
+        dst.clear();
+        dst.extend_from_slice(&self.buf);
+        dst.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+        self.buf.clear();
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if self.buf[i].score < self.buf[parent].score {
+                self.buf.swap(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        let n = self.buf.len();
+        loop {
+            let (l, r) = (2 * i + 1, 2 * i + 2);
+            let mut smallest = i;
+            if l < n && self.buf[l].score < self.buf[smallest].score {
+                smallest = l;
+            }
+            if r < n && self.buf[r].score < self.buf[smallest].score {
+                smallest = r;
+            }
+            if smallest == i {
+                break;
+            }
+            self.buf.swap(i, smallest);
+            i = smallest;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn keeps_top_k() {
+        let mut h = BoundedMinHeap::new(3);
+        for (i, s) in [5.0, 1.0, 9.0, 3.0, 7.0].iter().enumerate() {
+            h.offer(*s, i);
+        }
+        let out = h.drain_sorted_desc();
+        let scores: Vec<f32> = out.iter().map(|e| e.score).collect();
+        assert_eq!(scores, vec![9.0, 7.0, 5.0]);
+    }
+
+    #[test]
+    fn threshold_is_min_of_kept() {
+        let mut h = BoundedMinHeap::new(2);
+        h.offer(1.0, 0);
+        h.offer(5.0, 1);
+        assert_eq!(h.peek_min(), Some(1.0));
+        assert!(h.offer(2.0, 2)); // beats 1.0
+        assert_eq!(h.peek_min(), Some(2.0));
+        assert!(!h.offer(1.5, 3)); // rejected
+    }
+
+    #[test]
+    fn matches_full_sort_randomized() {
+        let mut rng = Pcg::new(99);
+        for _ in 0..200 {
+            let n = rng.range(1, 200) as usize;
+            let cap = rng.range(1, 64) as usize;
+            let xs: Vec<f32> = (0..n).map(|_| rng.f32() * 100.0).collect();
+            let mut h = BoundedMinHeap::new(cap);
+            for (i, &x) in xs.iter().enumerate() {
+                h.offer(x, i);
+            }
+            let got: Vec<f32> =
+                h.drain_sorted_desc().iter().map(|e| e.score).collect();
+            let mut want = xs.clone();
+            want.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            want.truncate(cap);
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn clear_reuses_allocation() {
+        let mut h = BoundedMinHeap::new(8);
+        for i in 0..8 {
+            h.offer(i as f32, i);
+        }
+        let cap_before = h.buf.capacity();
+        h.clear();
+        assert!(h.is_empty());
+        for i in 0..8 {
+            h.offer(i as f32, i);
+        }
+        assert_eq!(h.buf.capacity(), cap_before);
+    }
+
+    #[test]
+    fn fill_sorted_desc_reuses_both_buffers() {
+        let mut h = BoundedMinHeap::new(4);
+        let mut dst = Vec::new();
+        for round in 0..3 {
+            for i in 0..10 {
+                h.offer((i * (round + 1)) as f32, i);
+            }
+            h.fill_sorted_desc(&mut dst);
+            assert_eq!(dst.len(), 4);
+            assert!(dst.windows(2).all(|w| w[0].score >= w[1].score));
+            assert!(h.is_empty());
+        }
+    }
+}

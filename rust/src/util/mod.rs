@@ -1,0 +1,77 @@
+//! Infrastructure substrates built in-tree (the offline toolchain has no
+//! tokio/serde/clap/criterion/proptest/rand — DESIGN.md documents each
+//! substitution).
+
+pub mod rng;
+pub mod json;
+pub mod cli;
+pub mod pool;
+pub mod prop;
+pub mod heap;
+
+/// Monotonic wall-clock in nanoseconds since an arbitrary epoch.
+pub fn now_ns() -> u64 {
+    use std::time::Instant;
+    use std::sync::OnceLock;
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    let epoch = *EPOCH.get_or_init(Instant::now);
+    Instant::now().duration_since(epoch).as_nanos() as u64
+}
+
+/// Format nanoseconds human-readably (for reports).
+pub fn fmt_ns(ns: u64) -> String {
+    if ns >= 1_000_000_000 {
+        format!("{:.2}s", ns as f64 / 1e9)
+    } else if ns >= 1_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else if ns >= 1_000 {
+        format!("{:.2}us", ns as f64 / 1e3)
+    } else {
+        format!("{}ns", ns)
+    }
+}
+
+/// Format a byte count human-readably.
+pub fn fmt_bytes(b: u64) -> String {
+    const GB: f64 = 1024.0 * 1024.0 * 1024.0;
+    const MB: f64 = 1024.0 * 1024.0;
+    const KB: f64 = 1024.0;
+    let b = b as f64;
+    if b >= GB {
+        format!("{:.2}GB", b / GB)
+    } else if b >= MB {
+        format!("{:.2}MB", b / MB)
+    } else if b >= KB {
+        format!("{:.2}KB", b / KB)
+    } else {
+        format!("{}B", b as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn now_ns_is_monotonic() {
+        let a = now_ns();
+        let b = now_ns();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(5), "5ns");
+        assert_eq!(fmt_ns(5_000), "5.00us");
+        assert_eq!(fmt_ns(5_000_000), "5.00ms");
+        assert_eq!(fmt_ns(5_000_000_000), "5.00s");
+    }
+
+    #[test]
+    fn fmt_bytes_units() {
+        assert_eq!(fmt_bytes(100), "100B");
+        assert_eq!(fmt_bytes(2048), "2.00KB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.00MB");
+        assert_eq!(fmt_bytes(10 * 1024 * 1024 * 1024), "10.00GB");
+    }
+}

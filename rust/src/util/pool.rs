@@ -1,0 +1,250 @@
+//! Thread-pool + pipeline plumbing (tokio is unavailable offline; the
+//! serving pipeline is CPU-bound staged work, which maps naturally onto
+//! dedicated threads + bounded channels — the same overlap structure the
+//! paper builds with streams and host threads).
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// A bounded MPMC channel (std's mpsc is MPSC only; workers need MPMC).
+pub struct Channel<T> {
+    inner: Arc<ChannelInner<T>>,
+}
+
+struct ChannelInner<T> {
+    q: Mutex<ChannelState<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    cap: usize,
+}
+
+struct ChannelState<T> {
+    buf: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> Clone for Channel<T> {
+    fn clone(&self) -> Self {
+        Channel { inner: self.inner.clone() }
+    }
+}
+
+impl<T> Channel<T> {
+    pub fn bounded(cap: usize) -> Self {
+        Channel {
+            inner: Arc::new(ChannelInner {
+                q: Mutex::new(ChannelState { buf: VecDeque::new(), closed: false }),
+                not_empty: Condvar::new(),
+                not_full: Condvar::new(),
+                cap: cap.max(1),
+            }),
+        }
+    }
+
+    /// Blocking send; returns Err(v) if the channel is closed.
+    pub fn send(&self, v: T) -> Result<(), T> {
+        let mut st = self.inner.q.lock().unwrap();
+        loop {
+            if st.closed {
+                return Err(v);
+            }
+            if st.buf.len() < self.inner.cap {
+                st.buf.push_back(v);
+                self.inner.not_empty.notify_one();
+                return Ok(());
+            }
+            st = self.inner.not_full.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking send; Err(v) if full or closed.
+    pub fn try_send(&self, v: T) -> Result<(), T> {
+        let mut st = self.inner.q.lock().unwrap();
+        if st.closed || st.buf.len() >= self.inner.cap {
+            return Err(v);
+        }
+        st.buf.push_back(v);
+        self.inner.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking receive; None when closed and drained.
+    pub fn recv(&self) -> Option<T> {
+        let mut st = self.inner.q.lock().unwrap();
+        loop {
+            if let Some(v) = st.buf.pop_front() {
+                self.inner.not_full.notify_one();
+                return Some(v);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.inner.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Receive with a timeout; None on timeout OR closed-and-drained
+    /// (check `is_closed` to distinguish).
+    pub fn recv_timeout(&self, dur: std::time::Duration) -> Option<T> {
+        let deadline = std::time::Instant::now() + dur;
+        let mut st = self.inner.q.lock().unwrap();
+        loop {
+            if let Some(v) = st.buf.pop_front() {
+                self.inner.not_full.notify_one();
+                return Some(v);
+            }
+            if st.closed {
+                return None;
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (g, _timeout) = self
+                .inner
+                .not_empty
+                .wait_timeout(st, deadline - now)
+                .unwrap();
+            st = g;
+        }
+    }
+
+    /// Non-blocking receive.
+    pub fn try_recv(&self) -> Option<T> {
+        let mut st = self.inner.q.lock().unwrap();
+        let v = st.buf.pop_front();
+        if v.is_some() {
+            self.inner.not_full.notify_one();
+        }
+        v
+    }
+
+    /// Drain everything currently queued without blocking.
+    pub fn drain(&self) -> Vec<T> {
+        let mut st = self.inner.q.lock().unwrap();
+        let out: Vec<T> = st.buf.drain(..).collect();
+        if !out.is_empty() {
+            self.inner.not_full.notify_all();
+        }
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.q.lock().unwrap().buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn close(&self) {
+        let mut st = self.inner.q.lock().unwrap();
+        st.closed = true;
+        self.inner.not_empty.notify_all();
+        self.inner.not_full.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.q.lock().unwrap().closed
+    }
+}
+
+/// A fixed pool of named worker threads, joined on drop.
+pub struct WorkerPool {
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    pub fn spawn<F>(n: usize, name: &str, f: F) -> Self
+    where
+        F: Fn(usize) + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        let handles = (0..n)
+            .map(|i| {
+                let f = f.clone();
+                std::thread::Builder::new()
+                    .name(format!("{name}-{i}"))
+                    .spawn(move || f(i))
+                    .expect("spawn worker")
+            })
+            .collect();
+        WorkerPool { handles }
+    }
+
+    pub fn join(self) {
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn fifo_single_thread() {
+        let ch = Channel::bounded(4);
+        ch.send(1).unwrap();
+        ch.send(2).unwrap();
+        assert_eq!(ch.recv(), Some(1));
+        assert_eq!(ch.recv(), Some(2));
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let ch = Channel::bounded(4);
+        ch.send(1).unwrap();
+        ch.close();
+        assert_eq!(ch.recv(), Some(1));
+        assert_eq!(ch.recv(), None);
+        assert!(ch.send(9).is_err());
+    }
+
+    #[test]
+    fn try_send_full() {
+        let ch = Channel::bounded(1);
+        ch.try_send(1).unwrap();
+        assert!(ch.try_send(2).is_err());
+    }
+
+    #[test]
+    fn mpmc_all_items_delivered_once() {
+        let ch: Channel<usize> = Channel::bounded(16);
+        let got = Arc::new(AtomicUsize::new(0));
+        let consumers: Vec<_> = (0..3)
+            .map(|_| {
+                let ch = ch.clone();
+                let got = got.clone();
+                std::thread::spawn(move || {
+                    while let Some(v) = ch.recv() {
+                        got.fetch_add(v, Ordering::SeqCst);
+                    }
+                })
+            })
+            .collect();
+        let total: usize = (0..100).sum();
+        for i in 0..100 {
+            ch.send(i).unwrap();
+        }
+        ch.close();
+        for c in consumers {
+            c.join().unwrap();
+        }
+        assert_eq!(got.load(Ordering::SeqCst), total);
+    }
+
+    #[test]
+    fn worker_pool_runs_all() {
+        let count = Arc::new(AtomicUsize::new(0));
+        let c2 = count.clone();
+        let pool = WorkerPool::spawn(4, "t", move |_| {
+            c2.fetch_add(1, Ordering::SeqCst);
+        });
+        pool.join();
+        assert_eq!(count.load(Ordering::SeqCst), 4);
+    }
+}

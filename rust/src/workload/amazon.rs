@@ -1,0 +1,153 @@
+//! Amazon-Review-like workload generator.
+//!
+//! Mirrors the distributional properties of the public Amazon Review
+//! benchmark the paper evaluates on (Hou et al. 2024): per-user history
+//! lengths are heavy-tailed (log-normal body, power-law tail; most users
+//! have short histories, a few have thousands of interactions), and item
+//! popularity is Zipf. Prompts are the user's history items flattened to
+//! semantic-ID tokens (3 per item).
+
+use super::arrivals::poisson_arrivals;
+use super::trace::{Request, Trace};
+use crate::itemspace::Catalog;
+use crate::util::rng::Pcg;
+
+#[derive(Clone, Debug)]
+pub struct AmazonLike {
+    /// log-normal parameters for history length in *items*
+    pub mu: f64,
+    pub sigma: f64,
+    /// clip history to this many items (seq bucket / 3)
+    pub max_items: usize,
+    pub min_items: usize,
+    pub n_users: u64,
+}
+
+impl Default for AmazonLike {
+    fn default() -> Self {
+        // median ~20 items, p99 ~300 items — matches the published
+        // Amazon-Review per-user interaction statistics shape
+        AmazonLike { mu: 3.0, sigma: 1.2, max_items: 340, min_items: 2, n_users: 1 << 20 }
+    }
+}
+
+impl AmazonLike {
+    /// Bound max history items so prompts fit a `seq`-token bucket.
+    pub fn for_seq_bucket(seq: usize) -> Self {
+        AmazonLike { max_items: (seq / 3).max(2), ..Default::default() }
+    }
+
+    /// Sample one user's history length in items.
+    pub fn sample_history_items(&self, rng: &mut Pcg) -> usize {
+        let x = rng.lognormal(self.mu, self.sigma);
+        (x as usize).clamp(self.min_items, self.max_items)
+    }
+
+    /// Generate a full trace: `n` requests at mean `rps`, prompts drawn
+    /// from the catalog by popularity.
+    pub fn generate(
+        &self,
+        catalog: &Catalog,
+        n: usize,
+        rps: f64,
+        seed: u64,
+    ) -> Trace {
+        let mut rng = Pcg::new(seed);
+        let times = poisson_arrivals(&mut rng, n, rps);
+        let requests = times
+            .into_iter()
+            .enumerate()
+            .map(|(i, arrival_ns)| {
+                let items = self.sample_history_items(&mut rng);
+                let mut tokens = Vec::with_capacity(items * 3);
+                for _ in 0..items {
+                    tokens.extend_from_slice(&catalog.sample_item(&mut rng));
+                }
+                Request {
+                    id: i as u64,
+                    arrival_ns,
+                    prompt_len: tokens.len(),
+                    tokens,
+                    user_id: rng.below(self.n_users),
+                }
+            })
+            .collect();
+        Trace::new("amazon-like", requests)
+    }
+
+    /// Lengths-only variant for the simulator (no token materialization —
+    /// large RPS sweeps don't need concrete tokens).
+    pub fn generate_lengths(&self, n: usize, rps: f64, seed: u64) -> Trace {
+        let mut rng = Pcg::new(seed);
+        let times = poisson_arrivals(&mut rng, n, rps);
+        let requests = times
+            .into_iter()
+            .enumerate()
+            .map(|(i, arrival_ns)| {
+                let items = self.sample_history_items(&mut rng);
+                Request {
+                    id: i as u64,
+                    arrival_ns,
+                    prompt_len: items * 3,
+                    tokens: Vec::new(),
+                    user_id: rng.below(self.n_users),
+                }
+            })
+            .collect();
+        Trace::new("amazon-like", requests)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn history_lengths_heavy_tailed() {
+        let g = AmazonLike::default();
+        let mut rng = Pcg::new(1);
+        let mut xs: Vec<usize> =
+            (0..20_000).map(|_| g.sample_history_items(&mut rng)).collect();
+        xs.sort_unstable();
+        let med = xs[xs.len() / 2];
+        let p99 = xs[(xs.len() as f64 * 0.99) as usize];
+        assert!((10..=40).contains(&med), "median {med}");
+        assert!(p99 > 5 * med, "p99 {p99} med {med}");
+    }
+
+    #[test]
+    fn prompts_are_triplet_multiples_of_catalog_items() {
+        let c = Catalog::generate(64, 2000, 2);
+        let g = AmazonLike::for_seq_bucket(126);
+        let t = g.generate(&c, 50, 100.0, 3);
+        assert_eq!(t.len(), 50);
+        for r in &t.requests {
+            assert_eq!(r.tokens.len() % 3, 0);
+            assert_eq!(r.prompt_len, r.tokens.len());
+            assert!(r.prompt_len <= 126);
+            // every triplet is a real item
+            for ch in r.tokens.chunks(3) {
+                assert!(c.items.contains(&[ch[0], ch[1], ch[2]]));
+            }
+        }
+    }
+
+    #[test]
+    fn lengths_variant_matches_statistics() {
+        let g = AmazonLike::default();
+        let a = g.generate_lengths(5000, 100.0, 7);
+        let mean_a = a.requests.iter().map(|r| r.prompt_len).sum::<usize>() as f64
+            / a.len() as f64;
+        // 3 tokens per item, same log-normal
+        assert!(mean_a > 30.0 && mean_a < 400.0, "mean {mean_a}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let c = Catalog::generate(64, 500, 2);
+        let g = AmazonLike::default();
+        let a = g.generate(&c, 20, 10.0, 5);
+        let b = g.generate(&c, 20, 10.0, 5);
+        assert_eq!(a.requests, b.requests);
+    }
+}

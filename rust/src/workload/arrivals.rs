@@ -1,0 +1,129 @@
+//! Arrival processes: Poisson open-loop plus the bursty/diurnal patterns
+//! of production recommendation traffic.
+
+use crate::util::rng::Pcg;
+
+/// Arrival pattern shapes.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ArrivalPattern {
+    /// constant-rate Poisson
+    Poisson,
+    /// sinusoidal diurnal modulation of the rate (peak/trough ratio)
+    Diurnal { peak_ratio: f64, period_s: f64 },
+    /// Poisson base with flash bursts (rate multiplier, burst secs, gap secs)
+    Bursty { multiplier: f64, burst_s: f64, gap_s: f64 },
+}
+
+/// Generate `n` Poisson arrival times (ns) at `rps`.
+pub fn poisson_arrivals(rng: &mut Pcg, n: usize, rps: f64) -> Vec<u64> {
+    let mut t = 0.0f64;
+    (0..n)
+        .map(|_| {
+            t += rng.exponential(rps);
+            (t * 1e9) as u64
+        })
+        .collect()
+}
+
+/// Generate `n` arrivals following `pattern` with mean rate `rps`.
+/// Implemented by thinning a faster Poisson process against the
+/// instantaneous rate function.
+pub fn arrivals(rng: &mut Pcg, n: usize, rps: f64, pattern: ArrivalPattern) -> Vec<u64> {
+    match pattern {
+        ArrivalPattern::Poisson => poisson_arrivals(rng, n, rps),
+        ArrivalPattern::Diurnal { peak_ratio, period_s } => {
+            // rate(t) = rps * (1 + a*sin) with a chosen from peak_ratio
+            let a = (peak_ratio - 1.0) / (peak_ratio + 1.0);
+            let max_rate = rps * (1.0 + a);
+            let mut out = Vec::with_capacity(n);
+            let mut t = 0.0f64;
+            while out.len() < n {
+                t += rng.exponential(max_rate);
+                let rate = rps
+                    * (1.0 + a * (2.0 * std::f64::consts::PI * t / period_s).sin());
+                if rng.f64() < rate / max_rate {
+                    out.push((t * 1e9) as u64);
+                }
+            }
+            out
+        }
+        ArrivalPattern::Bursty { multiplier, burst_s, gap_s } => {
+            let cycle = burst_s + gap_s;
+            // choose base rate so the mean over a cycle is `rps`
+            let base = rps * cycle / (gap_s + multiplier * burst_s);
+            let max_rate = base * multiplier;
+            let mut out = Vec::with_capacity(n);
+            let mut t = 0.0f64;
+            while out.len() < n {
+                t += rng.exponential(max_rate);
+                let in_burst = (t % cycle) < burst_s;
+                let rate = if in_burst { base * multiplier } else { base };
+                if rng.f64() < rate / max_rate {
+                    out.push((t * 1e9) as u64);
+                }
+            }
+            out
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_mean_rate() {
+        let mut rng = Pcg::new(1);
+        let a = poisson_arrivals(&mut rng, 20_000, 100.0);
+        let dur = *a.last().unwrap() as f64 / 1e9;
+        let rate = a.len() as f64 / dur;
+        assert!((rate - 100.0).abs() < 5.0, "rate {rate}");
+        assert!(a.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn diurnal_mean_rate_close() {
+        let mut rng = Pcg::new(2);
+        let a = arrivals(
+            &mut rng,
+            20_000,
+            100.0,
+            ArrivalPattern::Diurnal { peak_ratio: 3.0, period_s: 10.0 },
+        );
+        let dur = *a.last().unwrap() as f64 / 1e9;
+        let rate = a.len() as f64 / dur;
+        assert!((rate - 100.0).abs() < 15.0, "rate {rate}");
+    }
+
+    #[test]
+    fn bursty_has_bursts() {
+        let mut rng = Pcg::new(3);
+        let a = arrivals(
+            &mut rng,
+            30_000,
+            100.0,
+            ArrivalPattern::Bursty { multiplier: 10.0, burst_s: 1.0, gap_s: 9.0 },
+        );
+        // count arrivals in burst vs gap windows of the 10s cycle
+        let (mut burst, mut gap) = (0u64, 0u64);
+        for &t in &a {
+            let phase = (t as f64 / 1e9) % 10.0;
+            if phase < 1.0 {
+                burst += 1;
+            } else {
+                gap += 1;
+            }
+        }
+        // burst second should see ~multiplier× the gap per-second rate
+        let per_s_burst = burst as f64 / 1.0;
+        let per_s_gap = gap as f64 / 9.0;
+        assert!(per_s_burst > 4.0 * per_s_gap, "{per_s_burst} vs {per_s_gap}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = arrivals(&mut Pcg::new(7), 100, 50.0, ArrivalPattern::Poisson);
+        let b = arrivals(&mut Pcg::new(7), 100, 50.0, ArrivalPattern::Poisson);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,17 @@
+//! Workload substrate: request traces with the statistical properties of
+//! the paper's datasets (Amazon Review + JD production traces).
+//!
+//! The paper exploits two workload facts: request sizes follow a power
+//! law spanning tens to thousands of tokens (Sec 3 / Sec 7), and traffic
+//! is bursty with peaks of thousands of QPS. The generators here are
+//! seeded and fully deterministic so every experiment is replayable.
+
+pub mod trace;
+pub mod arrivals;
+pub mod amazon;
+pub mod jdtrace;
+
+pub use amazon::AmazonLike;
+pub use arrivals::{poisson_arrivals, ArrivalPattern};
+pub use jdtrace::JdTraceLike;
+pub use trace::{Request, Trace};

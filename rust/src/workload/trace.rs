@@ -1,0 +1,179 @@
+//! Request and trace types + JSONL (de)serialization.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+use std::io::{BufRead, Write};
+
+/// One recommendation request: a user-history prompt to prefill, then
+/// ND=3 beam-search decode phases.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Request {
+    pub id: u64,
+    /// arrival time relative to trace start, nanoseconds
+    pub arrival_ns: u64,
+    /// prompt length in tokens (history items × 3 tokens)
+    pub prompt_len: usize,
+    /// concrete prompt tokens; may be empty for simulator-only traces
+    pub tokens: Vec<u32>,
+    pub user_id: u64,
+}
+
+impl Request {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::num(self.id as f64)),
+            ("arrival_ns", Json::num(self.arrival_ns as f64)),
+            ("prompt_len", Json::num(self.prompt_len as f64)),
+            ("user_id", Json::num(self.user_id as f64)),
+            (
+                "tokens",
+                Json::arr(self.tokens.iter().map(|&t| Json::num(t as f64)).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let g = |k: &str| -> Result<f64> {
+            j.get(k).and_then(Json::as_f64).ok_or_else(|| anyhow!("missing {k}"))
+        };
+        Ok(Request {
+            id: g("id")? as u64,
+            arrival_ns: g("arrival_ns")? as u64,
+            prompt_len: g("prompt_len")? as usize,
+            user_id: g("user_id")? as u64,
+            tokens: j
+                .get("tokens")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(|x| x.as_f64()).map(|x| x as u32).collect())
+                .unwrap_or_default(),
+        })
+    }
+}
+
+/// An ordered sequence of requests (by arrival time).
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub name: String,
+    pub requests: Vec<Request>,
+}
+
+impl Trace {
+    pub fn new(name: impl Into<String>, mut requests: Vec<Request>) -> Self {
+        requests.sort_by_key(|r| r.arrival_ns);
+        Trace { name: name.into(), requests }
+    }
+
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    /// Total span of the trace in ns.
+    pub fn duration_ns(&self) -> u64 {
+        self.requests.last().map(|r| r.arrival_ns).unwrap_or(0)
+    }
+
+    /// Mean offered load in requests/sec.
+    pub fn offered_rps(&self) -> f64 {
+        if self.requests.len() < 2 {
+            return 0.0;
+        }
+        self.requests.len() as f64 / (self.duration_ns() as f64 / 1e9)
+    }
+
+    pub fn write_jsonl<W: Write>(&self, mut w: W) -> Result<()> {
+        for r in &self.requests {
+            writeln!(w, "{}", r.to_json())?;
+        }
+        Ok(())
+    }
+
+    pub fn read_jsonl<R: BufRead>(name: &str, r: R) -> Result<Self> {
+        let mut requests = Vec::new();
+        for line in r.lines() {
+            let line = line?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            requests.push(Request::from_json(&Json::parse(&line)?)?);
+        }
+        Ok(Trace::new(name, requests))
+    }
+
+    pub fn save(&self, path: &str) -> Result<()> {
+        let f = std::fs::File::create(path)?;
+        self.write_jsonl(std::io::BufWriter::new(f))
+    }
+
+    pub fn load(path: &str) -> Result<Self> {
+        let f = std::fs::File::open(path)?;
+        Self::read_jsonl(path, std::io::BufReader::new(f))
+    }
+
+    /// Rescale arrival times so the trace offers `target_rps` on average —
+    /// how the figure harnesses sweep RPS with a fixed request population.
+    pub fn with_rps(&self, target_rps: f64) -> Trace {
+        let cur = self.offered_rps();
+        if cur <= 0.0 {
+            return self.clone();
+        }
+        let scale = cur / target_rps;
+        let mut t = self.clone();
+        for r in &mut t.requests {
+            r.arrival_ns = (r.arrival_ns as f64 * scale) as u64;
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Trace {
+        Trace::new(
+            "t",
+            vec![
+                Request { id: 1, arrival_ns: 10, prompt_len: 5, tokens: vec![1, 2], user_id: 7 },
+                Request { id: 0, arrival_ns: 0, prompt_len: 3, tokens: vec![], user_id: 9 },
+            ],
+        )
+    }
+
+    #[test]
+    fn sorted_on_construction() {
+        let t = sample();
+        assert_eq!(t.requests[0].id, 0);
+        assert_eq!(t.requests[1].id, 1);
+    }
+
+    #[test]
+    fn jsonl_roundtrip() {
+        let t = sample();
+        let mut buf = Vec::new();
+        t.write_jsonl(&mut buf).unwrap();
+        let t2 = Trace::read_jsonl("t", &buf[..]).unwrap();
+        assert_eq!(t.requests, t2.requests);
+    }
+
+    #[test]
+    fn rps_rescale() {
+        let reqs: Vec<Request> = (0..101)
+            .map(|i| Request {
+                id: i,
+                arrival_ns: i * 10_000_000, // 100 rps over 1s
+                prompt_len: 10,
+                tokens: vec![],
+                user_id: 0,
+            })
+            .collect();
+        let t = Trace::new("t", reqs);
+        let r = t.offered_rps();
+        assert!((r - 101.0).abs() < 2.0, "rps {r}");
+        let t2 = t.with_rps(202.0);
+        assert!((t2.offered_rps() - 202.0).abs() < 5.0);
+    }
+}

@@ -1,0 +1,186 @@
+//! Full-pipeline integration over the mock executor: coordinator +
+//! batcher + workers + engine + masks + beam search under load, checking
+//! end-to-end invariants (completeness, validity, ordering, SLO
+//! accounting, determinism of results).
+
+use std::sync::Arc;
+use std::time::Duration;
+use xgr::config::{ModelSpec, ServingConfig};
+use xgr::coordinator::{
+    Coordinator, EngineConfig, ExecutorFactory, RecRequest, SelectorKind,
+};
+use xgr::itemspace::{Catalog, ItemTrie};
+use xgr::metrics::Histogram;
+use xgr::runtime::MockExecutor;
+use xgr::util::now_ns;
+use xgr::util::rng::Pcg;
+use xgr::workload::{AmazonLike, JdTraceLike};
+
+fn spec() -> ModelSpec {
+    let mut s = ModelSpec::onerec_tiny();
+    s.vocab = 128;
+    s.beam_width = 8;
+    s.seq = 96;
+    s
+}
+
+fn factory(s: &ModelSpec) -> ExecutorFactory {
+    let s = s.clone();
+    Arc::new(move || Ok(Box::new(MockExecutor::new(s.clone())) as _))
+}
+
+fn start(
+    streams: usize,
+    engine_cfg: EngineConfig,
+) -> (Coordinator, Catalog, Arc<ItemTrie>) {
+    let s = spec();
+    let catalog = Catalog::generate(s.vocab as u32, 2000, 11);
+    let trie = Arc::new(ItemTrie::build(&catalog));
+    let mut serving = ServingConfig::default();
+    serving.num_streams = streams;
+    serving.batch_wait_us = 300;
+    serving.max_batch_requests = 8;
+    let c = Coordinator::start(&serving, engine_cfg, trie.clone(), factory(&s))
+        .unwrap();
+    (c, catalog, trie)
+}
+
+#[test]
+fn sustained_load_completes_with_valid_items() {
+    let (coord, catalog, trie) = start(2, EngineConfig::default());
+    let gen = AmazonLike::for_seq_bucket(96);
+    let trace = gen.generate(&catalog, 60, 500.0, 3);
+    let mut latency = Histogram::new();
+    for r in &trace.requests {
+        coord
+            .submit_blocking(RecRequest {
+                id: r.id,
+                tokens: r.tokens.clone(),
+                arrival_ns: now_ns(),
+            })
+            .unwrap();
+    }
+    let mut done = 0;
+    while done < 60 {
+        let resp = coord
+            .recv_timeout(Duration::from_secs(20))
+            .expect("timed out waiting for responses");
+        latency.record(resp.latency_ns);
+        assert!(!resp.items.is_empty(), "request {} got no items", resp.id);
+        assert_eq!(resp.valid_items, resp.items.len());
+        for (it, _) in &resp.items {
+            assert!(trie.contains(*it), "hallucinated item {it:?}");
+        }
+        done += 1;
+    }
+    assert!(latency.p99() > 0);
+    coord.shutdown();
+}
+
+#[test]
+fn results_identical_across_stream_counts() {
+    // scheduling must not change WHAT is recommended, only when
+    let collect = |streams: usize| {
+        let (coord, _catalog, _) = start(streams, EngineConfig::default());
+        let mut rng = Pcg::new(5);
+        let mut reqs = Vec::new();
+        for id in 0..20u64 {
+            let n = rng.range(3, 30) as usize;
+            let tokens: Vec<u32> =
+                (0..n).map(|_| rng.below(128) as u32).collect();
+            reqs.push(tokens.clone());
+            coord
+                .submit_blocking(RecRequest { id, tokens, arrival_ns: now_ns() })
+                .unwrap();
+        }
+        let mut out = vec![Vec::new(); 20];
+        for _ in 0..20 {
+            let r = coord.recv_timeout(Duration::from_secs(20)).unwrap();
+            out[r.id as usize] =
+                r.items.iter().map(|(it, _)| *it).collect::<Vec<_>>();
+        }
+        coord.shutdown();
+        out
+    };
+    let a = collect(1);
+    let b = collect(3);
+    assert_eq!(a, b, "items must not depend on stream assignment");
+}
+
+#[test]
+fn naive_and_xbeam_engines_agree_under_load() {
+    let run = |sel: SelectorKind| {
+        let cfg = EngineConfig { selector: sel, ..Default::default() };
+        let (coord, _c, _) = start(2, cfg);
+        for id in 0..15u64 {
+            coord
+                .submit_blocking(RecRequest {
+                    id,
+                    tokens: vec![3, 1 + (id as u32 % 100), 4, 7],
+                    arrival_ns: now_ns(),
+                })
+                .unwrap();
+        }
+        let mut out = vec![Vec::new(); 15];
+        for _ in 0..15 {
+            let r = coord.recv_timeout(Duration::from_secs(20)).unwrap();
+            out[r.id as usize] =
+                r.items.iter().map(|(it, _)| *it).collect::<Vec<_>>();
+        }
+        coord.shutdown();
+        out
+    };
+    assert_eq!(run(SelectorKind::XBeam), run(SelectorKind::Naive));
+}
+
+#[test]
+fn bursty_jd_traffic_survives() {
+    let (coord, catalog, _) = start(3, EngineConfig::default());
+    let gen = JdTraceLike::for_seq_bucket(96);
+    let trace = gen.generate(&catalog, 80, 800.0, 9);
+    let mut submitted = 0u64;
+    let mut rejected = 0u64;
+    for r in &trace.requests {
+        match coord.submit(RecRequest {
+            id: r.id,
+            tokens: r.tokens.clone(),
+            arrival_ns: now_ns(),
+        }) {
+            Ok(()) => submitted += 1,
+            Err(_) => rejected += 1,
+        }
+    }
+    let mut done = 0u64;
+    while done < submitted {
+        match coord.recv_timeout(Duration::from_secs(20)) {
+            Some(_) => done += 1,
+            None => break,
+        }
+    }
+    assert_eq!(done, submitted, "all admitted requests must complete");
+    assert_eq!(rejected, 0, "queue should absorb this burst");
+    coord.shutdown();
+}
+
+#[test]
+fn slo_accounting_reflects_latency() {
+    let (coord, _c, _) = start(1, EngineConfig::default());
+    for id in 0..10u64 {
+        coord
+            .submit_blocking(RecRequest {
+                id,
+                tokens: vec![1, 2, 3],
+                arrival_ns: now_ns(),
+            })
+            .unwrap();
+    }
+    let mut max_lat = 0u64;
+    for _ in 0..10 {
+        let r = coord.recv_timeout(Duration::from_secs(20)).unwrap();
+        max_lat = max_lat.max(r.latency_ns);
+    }
+    assert!(max_lat > 0);
+    // mock engine is fast: everything far under a 200ms SLO
+    assert!(max_lat < 5_000_000_000, "latency {max_lat}ns implausible");
+    coord.shutdown();
+}
