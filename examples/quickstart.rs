@@ -60,7 +60,12 @@ fn main() -> xgr::Result<()> {
             tokens.extend_from_slice(&catalog.sample_item(&mut rng));
         }
         coord
-            .submit_blocking(RecRequest { id, tokens, arrival_ns: now_ns() })
+            .submit_blocking(RecRequest {
+                id,
+                tokens,
+                arrival_ns: now_ns(),
+                user_id: id,
+            })
             .ok();
     }
 

@@ -143,7 +143,12 @@ fn main() {
                     tokens.extend_from_slice(&catalog.sample_item(&mut rng));
                 }
                 let out = engine
-                    .run_request(&RecRequest { id, tokens, arrival_ns: now_ns() })
+                    .run_request(&RecRequest {
+                        id,
+                        tokens,
+                        arrival_ns: now_ns(),
+                        user_id: id,
+                    })
                     .unwrap();
                 total += out.items.len();
                 valid += out.valid_items;

@@ -20,6 +20,7 @@ pub fn vllm_like_engine_config() -> EngineConfig {
         valid_filter: true, // it must still filter; it just pays more
         pooling: false,
         bos_token: 0,
+        session_cache: None, // no cross-request prefix reuse
     }
 }
 
@@ -39,6 +40,7 @@ pub fn vllm_like_serving(base: &ServingConfig) -> ServingConfig {
     let mut s = base.clone();
     s.features = vllm_like_features();
     s.num_streams = 1;
+    s.session_cache = false; // vLLM-for-GR has no cross-request prefix reuse
     s
 }
 

@@ -13,6 +13,7 @@ pub fn xllm_like_engine_config() -> EngineConfig {
         valid_filter: true,
         pooling: false,
         bos_token: 0,
+        session_cache: None, // no cross-request prefix reuse
     }
 }
 
@@ -29,6 +30,7 @@ pub fn xllm_like_serving(base: &ServingConfig) -> ServingConfig {
     let mut s = base.clone();
     s.features = xllm_like_features();
     s.num_streams = 2; // the paper: xLLM employs dual-stream parallelism
+    s.session_cache = false; // no cross-request prefix reuse
     s
 }
 

@@ -49,6 +49,14 @@ pub struct ServingConfig {
     pub num_streams: usize,
     /// admission queue depth (reject beyond this)
     pub queue_depth: usize,
+    /// session-aware prefix KV cache (cross-request reuse) on/off
+    pub session_cache: bool,
+    /// HBM-tier budget for cached prefixes; 0 = derive from hardware
+    pub session_hbm_bytes: u64,
+    /// DRAM spill-tier budget; 0 = derive from hardware
+    pub session_dram_bytes: u64,
+    /// route a returning user to the stream holding their cached prefix
+    pub session_affinity: bool,
     pub features: Features,
 }
 
@@ -63,6 +71,10 @@ impl Default for ServingConfig {
             batch_wait_us: 2_000,
             num_streams: 4,
             queue_depth: 4096,
+            session_cache: false,
+            session_hbm_bytes: 0,
+            session_dram_bytes: 0,
+            session_affinity: true,
             features: Features::all_on(),
         }
     }
@@ -84,6 +96,10 @@ impl ServingConfig {
                 "batch_wait_us" => c.batch_wait_us = v.as_f64().ok_or_else(|| anyhow!("batch_wait_us"))? as u64,
                 "num_streams" => c.num_streams = v.as_usize().ok_or_else(|| anyhow!("num_streams"))?,
                 "queue_depth" => c.queue_depth = v.as_usize().ok_or_else(|| anyhow!("queue_depth"))?,
+                "session_cache" => c.session_cache = v.as_bool().ok_or_else(|| anyhow!("session_cache"))?,
+                "session_hbm_bytes" => c.session_hbm_bytes = v.as_f64().ok_or_else(|| anyhow!("session_hbm_bytes"))? as u64,
+                "session_dram_bytes" => c.session_dram_bytes = v.as_f64().ok_or_else(|| anyhow!("session_dram_bytes"))? as u64,
+                "session_affinity" => c.session_affinity = v.as_bool().ok_or_else(|| anyhow!("session_affinity"))?,
                 "valid_filter" => c.features.valid_filter = v.as_bool().ok_or_else(|| anyhow!("valid_filter"))?,
                 "graph_dispatch" => c.features.graph_dispatch = v.as_bool().ok_or_else(|| anyhow!("graph_dispatch"))?,
                 "multi_stream" => c.features.multi_stream = v.as_bool().ok_or_else(|| anyhow!("multi_stream"))?,
@@ -113,6 +129,22 @@ impl ServingConfig {
 
     pub fn slo_ns(&self) -> u64 {
         (self.slo_ms * 1e6) as u64
+    }
+
+    /// Session-cache tier budgets: hardware-derived defaults, overridden
+    /// by any non-zero explicit knobs.
+    pub fn session_cache_config(
+        &self,
+        hw: &super::HardwareProfile,
+    ) -> crate::sessioncache::SessionCacheConfig {
+        let mut c = crate::sessioncache::SessionCacheConfig::for_hardware(hw);
+        if self.session_hbm_bytes > 0 {
+            c.hbm_bytes = self.session_hbm_bytes;
+        }
+        if self.session_dram_bytes > 0 {
+            c.dram_bytes = self.session_dram_bytes;
+        }
+        c
     }
 }
 
@@ -150,6 +182,27 @@ mod tests {
         assert!(ServingConfig::from_json(&j).is_err());
         let j = Json::parse(r#"{"slo_ms": -5}"#).unwrap();
         assert!(ServingConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn session_cache_knobs_parse() {
+        let j = Json::parse(
+            r#"{"session_cache": true, "session_hbm_bytes": 1048576,
+                "session_affinity": false}"#,
+        )
+        .unwrap();
+        let c = ServingConfig::from_json(&j).unwrap();
+        assert!(c.session_cache);
+        assert!(!c.session_affinity);
+        assert_eq!(c.session_hbm_bytes, 1 << 20);
+        // explicit budget overrides the hardware-derived default
+        let hw = crate::config::HardwareProfile::ascend_910b();
+        let sc = c.session_cache_config(&hw);
+        assert_eq!(sc.hbm_bytes, 1 << 20);
+        assert_eq!(sc.dram_bytes, (hw.mem_bytes / 8) * 4);
+        // defaults derive both tiers from the profile
+        let sc = ServingConfig::default().session_cache_config(&hw);
+        assert_eq!(sc.hbm_bytes, hw.mem_bytes / 8);
     }
 
     #[test]

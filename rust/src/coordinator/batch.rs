@@ -113,7 +113,7 @@ mod tests {
     use super::*;
 
     fn req(id: u64, tokens: usize, arrival: u64) -> RecRequest {
-        RecRequest { id, tokens: vec![1; tokens], arrival_ns: arrival }
+        RecRequest { id, tokens: vec![1; tokens], arrival_ns: arrival, user_id: id }
     }
 
     #[test]

@@ -21,6 +21,7 @@ use crate::itemspace::{ItemTrie, MaskWorkspace};
 use crate::kvcache::{KvManager, SeparatedKv};
 use crate::metrics::Counters;
 use crate::runtime::ModelExecutor;
+use crate::sessioncache::{SessionCache, SessionCacheConfig, Tier};
 use crate::util::now_ns;
 use crate::Result;
 use std::sync::Arc;
@@ -43,6 +44,8 @@ pub struct EngineConfig {
     pub pooling: bool,
     /// BOS token fed at decode phase 0
     pub bos_token: u32,
+    /// session-aware prefix KV cache (None = per-request prefill only)
+    pub session_cache: Option<SessionCacheConfig>,
 }
 
 impl Default for EngineConfig {
@@ -53,6 +56,7 @@ impl Default for EngineConfig {
             valid_filter: true,
             pooling: true,
             bos_token: 0,
+            session_cache: None,
         }
     }
 }
@@ -75,6 +79,7 @@ pub struct Engine {
     naive: NaiveBeam,
     pool: StatePool,
     kv: SeparatedKv,
+    session: Option<SessionCache>,
     sel: Selection,
     prefix_scratch: Vec<Vec<u32>>,
     temp_u32: Vec<u32>,
@@ -105,6 +110,10 @@ impl Engine {
             naive: NaiveBeam::new(),
             pool,
             kv: SeparatedKv::new(spec.kv_bytes_per_token()),
+            session: cfg
+                .session_cache
+                .clone()
+                .map(|c| SessionCache::new(c, spec.kv_bytes_per_token())),
             sel: Selection::with_capacity(bw),
             prefix_scratch: vec![Vec::with_capacity(3); bw],
             temp_u32: Vec::new(),
@@ -122,6 +131,11 @@ impl Engine {
 
     pub fn kv_manager(&self) -> &SeparatedKv {
         &self.kv
+    }
+
+    /// The session prefix cache, when enabled.
+    pub fn session_cache(&self) -> Option<&SessionCache> {
+        self.session.as_ref()
     }
 
     /// Serve one request end-to-end; `stream` is a label for the response.
@@ -153,10 +167,39 @@ impl Engine {
             &req.tokens
         };
 
-        // ---- prefill ----
-        let (slot, _prompt_logits) = self.exec.prefill(tokens)?;
+        // ---- session cache: reuse the cached prefix, prefill the rest ----
+        // A full-prompt hit still prefills the last token (the prompt
+        // logits must come from somewhere), hence the len-1 clamp.
+        let cached = if let Some(sc) = self.session.as_mut() {
+            let look = sc.lookup(req.user_id, tokens, tokens.len());
+            if look.hit_tokens > 0 {
+                Counters::inc(&self.counters.session_hits);
+            } else {
+                Counters::inc(&self.counters.session_misses);
+            }
+            if look.tier == Some(Tier::Dram) {
+                Counters::inc(&self.counters.session_swap_ins);
+            }
+            look.hit_tokens.min(tokens.len().saturating_sub(1))
+        } else {
+            0
+        };
+
+        // ---- prefill (uncached suffix only when the runtime can) ----
+        let (slot, _prompt_logits) = match self.exec.prefill_with_prefix(tokens, cached)
+        {
+            Ok(x) => x,
+            Err(e) => {
+                // drop the lookup pin before bailing
+                if let Some(sc) = self.session.as_mut() {
+                    sc.release(req.user_id);
+                }
+                return Err(e);
+            }
+        };
         let kvh = self.kv.alloc(tokens.len(), bw, nd);
-        Counters::add(&self.counters.prefill_tokens, tokens.len() as u64);
+        Counters::add(&self.counters.prefill_tokens, (tokens.len() - cached) as u64);
+        Counters::add(&self.counters.prefill_tokens_saved, cached as u64);
 
         // ---- beam state (pooled, Sec 6.3) ----
         let mut state = if self.cfg.pooling {
@@ -166,7 +209,7 @@ impl Engine {
             p.take()
         };
 
-        let mut result: Result<EngineOutput> = (|| {
+        let result: Result<EngineOutput> = (|| {
             // device-resident filtering (the xGR path): selection walks
             // the trie-valid token lists directly — no per-beam mask rows
             // are materialized at all. The naive/baseline path filters
@@ -283,8 +326,14 @@ impl Engine {
         if self.cfg.pooling {
             self.pool.give(state);
         }
-        if let Ok(out) = &mut result {
-            let _ = out;
+        // grow the user's cached prefix to the full served prompt (unpins);
+        // a failed request only unpins
+        if let Some(sc) = self.session.as_mut() {
+            if result.is_ok() {
+                sc.publish(req.user_id, tokens, tokens.len());
+            } else {
+                sc.release(req.user_id);
+            }
         }
         result
     }
@@ -335,7 +384,7 @@ mod tests {
     }
 
     fn req(id: u64, toks: Vec<u32>) -> RecRequest {
-        RecRequest { id, tokens: toks, arrival_ns: now_ns() }
+        RecRequest { id, tokens: toks, arrival_ns: now_ns(), user_id: id }
     }
 
     #[test]
@@ -419,5 +468,66 @@ mod tests {
         let (mut e, _) = setup(true, SelectorKind::XBeam);
         assert!(e.run_request(&req(0, vec![])).is_err());
         assert_eq!(e.exec.live_slots(), 0, "no leak on error");
+    }
+
+    fn setup_session() -> Engine {
+        let mut spec = ModelSpec::onerec_tiny();
+        spec.vocab = 64;
+        spec.beam_width = 8;
+        spec.seq = 48;
+        let catalog = Catalog::generate(64, 600, 5);
+        let trie = Arc::new(ItemTrie::build(&catalog));
+        let cfg = EngineConfig {
+            session_cache: Some(crate::sessioncache::SessionCacheConfig {
+                hbm_bytes: 1 << 20,
+                dram_bytes: 4 << 20,
+            }),
+            ..Default::default()
+        };
+        Engine::new(Box::new(MockExecutor::new(spec)), trie, cfg)
+    }
+
+    #[test]
+    fn session_cache_hits_on_extended_revisit_without_changing_items() {
+        let (mut cold, _) = setup(true, SelectorKind::XBeam);
+        let mut warm = setup_session();
+        let mut history = vec![1, 2, 3, 4, 5, 6];
+        for turn in 0..4u64 {
+            let r = RecRequest {
+                id: turn,
+                tokens: history.clone(),
+                arrival_ns: now_ns(),
+                user_id: 7,
+            };
+            let a = cold.run_request(&r).unwrap();
+            let b = warm.run_request(&r).unwrap();
+            assert_eq!(a.items, b.items, "cache must never change results");
+            history.extend_from_slice(&[10 + turn as u32, 20, 30]);
+        }
+        let sc = warm.session_cache().unwrap();
+        assert_eq!(sc.stats.misses, 1, "only the first turn is cold");
+        assert_eq!(sc.stats.hits, 3);
+        assert!(sc.stats.tokens_saved >= 6 + 9 + 12);
+        assert_eq!(
+            Counters::get(&warm.counters.session_hits),
+            3,
+            "engine counters mirror the cache"
+        );
+    }
+
+    #[test]
+    fn session_cache_releases_pins_on_error() {
+        let mut warm = setup_session();
+        warm.run_request(&req(0, vec![1, 2, 3])).unwrap();
+        // same user, empty prompt → prefill error; pin must not leak
+        let bad = RecRequest {
+            id: 1,
+            tokens: vec![],
+            arrival_ns: now_ns(),
+            user_id: 0,
+        };
+        assert!(warm.run_request(&bad).is_err());
+        let ok = warm.run_request(&req(2, vec![1, 2, 3, 4])).unwrap();
+        assert!(!ok.items.is_empty());
     }
 }

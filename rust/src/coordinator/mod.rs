@@ -8,9 +8,11 @@
 //!   with valid-path masking, early-termination selection, state pooling
 //!   and the in-place unshared-KV reorder.
 //! * **Worker** ([`worker`]) — one OS thread per stream, each owning its
-//!   executor; batches are assigned to idle streams by load
-//!   (multi-stream). [`overlap`] provides the host/device overlap lane
-//!   (mask generation concurrent with the forward pass).
+//!   executor; batches are routed to per-stream queues by load, or — when
+//!   the session cache is on — by *session affinity* (a returning user
+//!   lands on the stream whose engine holds their cached prefix KV).
+//!   [`overlap`] provides the host/device overlap lane (mask generation
+//!   concurrent with the forward pass).
 
 pub mod batch;
 pub mod engine;
@@ -31,6 +33,9 @@ pub struct RecRequest {
     pub tokens: Vec<u32>,
     /// arrival timestamp (util::now_ns clock)
     pub arrival_ns: u64,
+    /// the requesting user — the session cache and affinity router key on
+    /// this; 0 is an anonymous user (cacheable like any other id)
+    pub user_id: u64,
 }
 
 /// A served response: the recommended items with scores.

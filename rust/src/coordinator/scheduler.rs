@@ -1,10 +1,15 @@
 //! Scheduler tier + the public `Coordinator` handle.
 //!
-//! The scheduler thread owns admission (queue-depth backpressure) and the
-//! dynamic batcher; formed batches flow through a bounded channel to the
-//! worker pool (idle-stream pull). `Coordinator` is the process-wide
-//! serving object: `submit` requests, `recv` responses, `shutdown` to
-//! drain.
+//! The scheduler thread owns admission (queue-depth backpressure), the
+//! dynamic batcher(s) and *routing*: every stream has its own bounded
+//! batch queue. Without the session cache, formed batches go to the
+//! least-loaded stream (round-robin tiebreak — the paper's idle-stream
+//! load balancing). With the session cache on, routing switches to
+//! **session affinity**: each user is sticky to one stream, so their
+//! revisits land on the engine that holds their cached prefix KV (one
+//! batcher per stream keeps co-routed requests batched together).
+//! `Coordinator` is the process-wide serving object: `submit` requests,
+//! `recv` responses, `shutdown` to drain.
 
 use super::batch::Batcher;
 use super::engine::EngineConfig;
@@ -14,12 +19,87 @@ use crate::config::ServingConfig;
 use crate::itemspace::ItemTrie;
 use crate::metrics::Counters;
 use crate::runtime::ModelExecutor;
+use crate::sessioncache::SessionCacheConfig;
 use crate::util::now_ns;
 use crate::util::pool::Channel;
 use crate::Result;
+use std::collections::HashMap;
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
+
+/// Largest user→stream affinity map before it is reset (the map is
+/// advisory: clearing only forgets stickiness, never correctness).
+const AFFINITY_MAP_CAP: usize = 1 << 20;
+
+/// Least-loaded stream queue, round-robin tiebreak.
+fn pick_stream(queues: &[Channel<Batch>], rr: &mut usize) -> usize {
+    let n = queues.len();
+    let mut best = *rr % n;
+    let mut best_len = usize::MAX;
+    for k in 0..n {
+        let i = (*rr + k) % n;
+        let l = queues[i].len();
+        if l < best_len {
+            best = i;
+            best_len = l;
+            if l == 0 {
+                break;
+            }
+        }
+    }
+    *rr = (best + 1) % n;
+    best
+}
+
+/// Outcome of trying to hand a batch to a stream queue.
+enum Delivery {
+    Done,
+    /// The affine stream's queue is full: the caller keeps the batch and
+    /// retries on the next tick instead of head-of-line-blocking every
+    /// other stream behind one hot queue.
+    Stall(Batch),
+    /// Every queue is closed (all workers exited).
+    AllClosed,
+}
+
+/// Deliver `b`, preferring the affine stream when given. A dead stream
+/// (closed queue — e.g. its executor failed to init) falls back to
+/// load-balanced delivery across the surviving streams, so one failed
+/// worker degrades capacity instead of wedging the coordinator.
+fn deliver(
+    queues: &[Channel<Batch>],
+    rr: &mut usize,
+    affinity_target: Option<usize>,
+    b: Batch,
+) -> Delivery {
+    let mut b = b;
+    if let Some(t) = affinity_target {
+        match queues[t].try_send(b) {
+            Ok(()) => return Delivery::Done,
+            Err(ret) => {
+                if !queues[t].is_closed() {
+                    return Delivery::Stall(ret); // full, worker alive
+                }
+                b = ret; // worker dead: load-balance instead
+            }
+        }
+    }
+    let n = queues.len();
+    let mut t = pick_stream(queues, rr);
+    for _ in 0..n {
+        // blocking send = admission backpressure when the target is full;
+        // it only errors when that queue is closed
+        match queues[t].send(b) {
+            Ok(()) => return Delivery::Done,
+            Err(ret) => {
+                b = ret;
+                t = (t + 1) % n;
+            }
+        }
+    }
+    Delivery::AllClosed
+}
 
 /// Builds one executor per worker thread (called inside the thread; the
 /// executor itself need not be Send).
@@ -50,65 +130,154 @@ impl Coordinator {
         };
         let counters = Arc::new(Counters::new());
         let inbox: Channel<RecRequest> = Channel::bounded(serving.queue_depth);
-        let batches: Channel<Batch> = Channel::bounded(num_streams * 2);
         let responses: Channel<RecResponse> =
             Channel::bounded(serving.queue_depth.max(64));
+        // one bounded batch queue per stream (the router's targets)
+        let stream_queues: Vec<Channel<Batch>> =
+            (0..num_streams).map(|_| Channel::bounded(2)).collect();
+
+        // serving-level session cache switch: give every engine a cache
+        // unless the caller already configured one explicitly
+        let mut engine_cfg = engine_cfg;
+        if serving.session_cache && engine_cfg.session_cache.is_none() {
+            engine_cfg.session_cache = Some(SessionCacheConfig::host_default());
+        }
+        let affinity = serving.session_cache
+            && serving.session_affinity
+            && engine_cfg.session_cache.is_some()
+            && num_streams > 1;
 
         let workers = Workers::spawn(
-            num_streams,
             factory,
             trie,
             engine_cfg,
-            batches.clone(),
+            stream_queues.clone(),
             responses.clone(),
             counters.clone(),
         );
 
         let scheduler = {
             let inbox = inbox.clone();
-            let batches = batches.clone();
+            let queues = stream_queues;
             let counters = counters.clone();
-            let mut batcher = Batcher::new(
-                serving.max_batch_tokens,
-                serving.max_batch_requests,
-                serving.batch_wait_us * 1_000,
-            );
+            // affinity needs one batcher per stream (so co-routed requests
+            // still batch together); load-balanced routing needs only one
+            let n_batchers = if affinity { num_streams } else { 1 };
+            let mut batchers: Vec<Batcher> = (0..n_batchers)
+                .map(|_| {
+                    Batcher::new(
+                        serving.max_batch_tokens,
+                        serving.max_batch_requests,
+                        serving.batch_wait_us * 1_000,
+                    )
+                })
+                .collect();
             let quota = Duration::from_micros(serving.batch_wait_us.max(100));
             std::thread::Builder::new()
                 .name("xgr-scheduler".into())
                 .spawn(move || {
+                    let mut user_stream: HashMap<u64, usize> = HashMap::new();
+                    let mut rr_user = 0usize; // round-robin user placement
+                    let mut rr_pick = 0usize; // least-loaded tiebreak cursor
+                    // one stalled-batch slot per batcher (affinity mode:
+                    // the affine queue was full on the last attempt)
+                    let mut pending: Vec<Option<Batch>> =
+                        (0..batchers.len()).map(|_| None).collect();
+                    macro_rules! ingest {
+                        ($r:expr) => {{
+                            let r = $r;
+                            Counters::inc(&counters.requests_in);
+                            let bi = if affinity {
+                                if user_stream.len() >= AFFINITY_MAP_CAP {
+                                    user_stream.clear();
+                                }
+                                match user_stream.get(&r.user_id) {
+                                    Some(&s) => s,
+                                    None => {
+                                        let s = rr_user % num_streams;
+                                        rr_user += 1;
+                                        user_stream.insert(r.user_id, s);
+                                        s
+                                    }
+                                }
+                            } else {
+                                0
+                            };
+                            batchers[bi].push(r);
+                        }};
+                    }
                     loop {
                         // admission: pull what's available, at most quota wait
                         match inbox.recv_timeout(quota) {
                             Some(r) => {
-                                Counters::inc(&counters.requests_in);
-                                batcher.push(r);
+                                ingest!(r);
                                 // opportunistically drain the rest
                                 for r in inbox.drain() {
-                                    Counters::inc(&counters.requests_in);
-                                    batcher.push(r);
+                                    ingest!(r);
                                 }
                             }
                             None => {
                                 if inbox.is_closed() && inbox.is_empty() {
-                                    // drain remaining queue then stop
-                                    while let Some(b) = batcher.take_batch() {
-                                        if batches.send(b).is_err() {
-                                            break;
+                                    // drain stalled + remaining batches,
+                                    // load-balanced (affinity no longer
+                                    // matters for the tail), then stop
+                                    for bi in 0..batchers.len() {
+                                        let stalled = pending[bi].take();
+                                        let rest = std::iter::from_fn(|| {
+                                            batchers[bi].take_batch()
+                                        });
+                                        for b in stalled.into_iter().chain(rest) {
+                                            match deliver(
+                                                &queues,
+                                                &mut rr_pick,
+                                                None,
+                                                b,
+                                            ) {
+                                                Delivery::Done => Counters::inc(
+                                                    &counters.graph_dispatches,
+                                                ),
+                                                _ => break,
+                                            }
                                         }
-                                        Counters::inc(&counters.graph_dispatches);
                                     }
-                                    batches.close();
+                                    for q in &queues {
+                                        q.close();
+                                    }
                                     return;
                                 }
                             }
                         }
                         // dispatch policy: budget full or quota exceeded
-                        while batcher.should_dispatch(now_ns()) {
-                            let Some(b) = batcher.take_batch() else { break };
-                            Counters::inc(&counters.graph_dispatches);
-                            if batches.send(b).is_err() {
-                                return;
+                        'batchers: for bi in 0..batchers.len() {
+                            let target = if affinity { Some(bi) } else { None };
+                            // retry the stalled batch before forming more
+                            if let Some(b) = pending[bi].take() {
+                                match deliver(&queues, &mut rr_pick, target, b) {
+                                    Delivery::Done => {}
+                                    Delivery::Stall(b) => {
+                                        pending[bi] = Some(b);
+                                        continue 'batchers;
+                                    }
+                                    Delivery::AllClosed => {
+                                        return;
+                                    }
+                                }
+                            }
+                            while batchers[bi].should_dispatch(now_ns()) {
+                                let Some(b) = batchers[bi].take_batch() else {
+                                    break;
+                                };
+                                Counters::inc(&counters.graph_dispatches);
+                                match deliver(&queues, &mut rr_pick, target, b) {
+                                    Delivery::Done => {}
+                                    Delivery::Stall(b) => {
+                                        pending[bi] = Some(b);
+                                        break;
+                                    }
+                                    Delivery::AllClosed => {
+                                        return;
+                                    }
+                                }
                             }
                         }
                     }
@@ -210,6 +379,7 @@ mod tests {
                 id: i,
                 tokens: vec![1, 2, (i % 60) as u32],
                 arrival_ns: now_ns(),
+                user_id: i,
             })
             .unwrap();
         }
@@ -233,6 +403,7 @@ mod tests {
                 id: i,
                 tokens: vec![3, 4, (i % 50) as u32],
                 arrival_ns: now_ns(),
+                user_id: i,
             })
             .unwrap();
         }
@@ -254,12 +425,69 @@ mod tests {
                 id: i,
                 tokens: vec![5, 6],
                 arrival_ns: now_ns(),
+                user_id: i,
             })
             .unwrap();
         }
         let rest = c.shutdown();
         // everything not picked up during the run is returned at shutdown
         assert!(rest.len() <= 5);
+    }
+
+    #[test]
+    fn session_affinity_keeps_users_on_one_stream() {
+        let mut spec = ModelSpec::onerec_tiny();
+        spec.vocab = 64;
+        spec.beam_width = 4;
+        let catalog = Catalog::generate(64, 400, 2);
+        let trie = Arc::new(ItemTrie::build(&catalog));
+        let mut serving = ServingConfig::default();
+        serving.num_streams = 3;
+        serving.batch_wait_us = 200;
+        serving.max_batch_requests = 2;
+        serving.session_cache = true; // turns affinity routing on
+        let factory: ExecutorFactory = {
+            let spec = spec.clone();
+            Arc::new(move || Ok(Box::new(MockExecutor::new(spec.clone())) as _))
+        };
+        let c = Coordinator::start(
+            &serving,
+            EngineConfig::default(),
+            trie,
+            factory,
+        )
+        .unwrap();
+        // 6 users × 5 revisits, interleaved
+        for turn in 0..5u64 {
+            for user in 0..6u64 {
+                c.submit_blocking(RecRequest {
+                    id: turn * 6 + user,
+                    tokens: (0..(3 + turn as u32)).map(|t| (t + user as u32) % 60).collect(),
+                    arrival_ns: now_ns(),
+                    user_id: user,
+                })
+                .unwrap();
+            }
+        }
+        let mut user_streams: std::collections::HashMap<u64, std::collections::HashSet<usize>> =
+            Default::default();
+        for _ in 0..30 {
+            let r = c.recv_timeout(Duration::from_secs(10)).unwrap();
+            user_streams.entry(r.id % 6).or_default().insert(r.stream);
+        }
+        for (user, streams) in &user_streams {
+            assert_eq!(
+                streams.len(),
+                1,
+                "user {user} served by multiple streams: {streams:?}"
+            );
+        }
+        // counter propagation completes when workers join
+        let counters = c.counters.clone();
+        c.shutdown();
+        // every revisit after the first should hit the stream-local cache
+        assert!(Counters::get(&counters.session_hits) >= 6 * 3);
+        assert!(Counters::get(&counters.prefill_tokens_saved) > 0);
     }
 
     #[test]
@@ -270,6 +498,7 @@ mod tests {
                 id: i,
                 tokens: vec![1, (i % 40) as u32],
                 arrival_ns: now_ns(),
+                user_id: i,
             })
             .unwrap();
         }

@@ -1,13 +1,18 @@
 //! Worker tier: one OS thread per device stream, each owning a full
-//! engine (executor + masks + selector + pools). Idle workers pull the
-//! next batch from a shared queue — the paper's "batches dynamically
-//! assigned to idle streams based on real-time load".
+//! engine (executor + masks + selector + pools + session prefix cache).
+//! Every worker drains its *own* batch queue — the scheduler routes
+//! batches to queues either by load (idle-stream balancing) or by
+//! session affinity, so a returning user's batch reaches the engine
+//! whose cache holds their prefix KV. Workers fold their engine's
+//! session-cache deltas into the shared counters after every batch, so
+//! coordinator-level observability sees cache behavior across streams.
 
 use super::engine::{Engine, EngineConfig};
 use super::scheduler::ExecutorFactory;
 use super::{Batch, RecResponse};
 use crate::itemspace::ItemTrie;
 use crate::metrics::Counters;
+use crate::sessioncache::SessionSnapshot;
 use crate::util::pool::Channel;
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -17,22 +22,22 @@ pub struct Workers {
 }
 
 impl Workers {
-    #[allow(clippy::too_many_arguments)]
+    /// Spawn one worker per queue in `queues` (queue i == stream i).
     pub fn spawn(
-        n: usize,
         factory: ExecutorFactory,
         trie: Arc<ItemTrie>,
         engine_cfg: EngineConfig,
-        batches: Channel<Batch>,
+        queues: Vec<Channel<Batch>>,
         responses: Channel<RecResponse>,
         counters: Arc<Counters>,
     ) -> Workers {
-        let handles = (0..n)
-            .map(|stream| {
+        let handles = queues
+            .into_iter()
+            .enumerate()
+            .map(|(stream, queue)| {
                 let factory = factory.clone();
                 let trie = trie.clone();
                 let engine_cfg = engine_cfg.clone();
-                let batches = batches.clone();
                 let responses = responses.clone();
                 let counters = counters.clone();
                 std::thread::Builder::new()
@@ -44,11 +49,15 @@ impl Workers {
                             Ok(e) => e,
                             Err(e) => {
                                 eprintln!("worker {stream}: executor init failed: {e:#}");
+                                // unblock the scheduler: a closed queue
+                                // fails sends instead of filling up
+                                queue.close();
                                 return;
                             }
                         };
                         let mut engine = Engine::new(exec, trie, engine_cfg);
-                        while let Some(batch) = batches.recv() {
+                        let mut sess_prev = SessionSnapshot::default();
+                        while let Some(batch) = queue.recv() {
                             Counters::inc(&counters.batches);
                             for req in &batch.requests {
                                 match engine.process(req, stream) {
@@ -66,6 +75,17 @@ impl Workers {
                                         Counters::inc(&counters.requests_rejected);
                                     }
                                 }
+                            }
+                            // fold this engine's session-cache activity into
+                            // the shared counters (delta since last batch)
+                            if let Some(sc) = engine.session_cache() {
+                                let s = sc.snapshot();
+                                Counters::add(&counters.session_hits, s.hits - sess_prev.hits);
+                                Counters::add(&counters.session_misses, s.misses - sess_prev.misses);
+                                Counters::add(&counters.session_swap_ins, s.swap_ins - sess_prev.swap_ins);
+                                Counters::add(&counters.session_evictions, s.evictions - sess_prev.evictions);
+                                Counters::add(&counters.prefill_tokens_saved, s.tokens_saved - sess_prev.tokens_saved);
+                                sess_prev = s;
                             }
                         }
                     })
@@ -102,15 +122,15 @@ mod tests {
             let spec = spec.clone();
             Arc::new(move || Ok(Box::new(MockExecutor::new(spec.clone())) as _))
         };
-        let batches: Channel<Batch> = Channel::bounded(8);
+        let queues: Vec<Channel<Batch>> =
+            (0..2).map(|_| Channel::bounded(8)).collect();
         let responses: Channel<RecResponse> = Channel::bounded(64);
         let counters = Arc::new(Counters::new());
         let w = Workers::spawn(
-            2,
             factory,
             trie,
             EngineConfig::default(),
-            batches.clone(),
+            queues.clone(),
             responses.clone(),
             counters.clone(),
         );
@@ -120,13 +140,16 @@ mod tests {
                     id: b * 10 + i,
                     tokens: vec![1, 2, 3 + i as u32],
                     arrival_ns: now_ns(),
+                    user_id: b * 10 + i,
                 })
                 .collect();
-            batches
+            queues[(b % 2) as usize]
                 .send(Batch { requests: reqs, total_tokens: 9 })
                 .unwrap();
         }
-        batches.close();
+        for q in &queues {
+            q.close();
+        }
         w.join();
         responses.close();
         let mut got = 0;

@@ -13,11 +13,14 @@
 //! * L2 — JAX model (`python/compile/model.py`): the GR transformer,
 //!   AOT-lowered to HLO-text artifacts at build time.
 //! * L3 — this crate: request routing, dynamic batching, separated KV-cache
-//!   management, xBeam search (early-termination sort + item masks),
+//!   management, a session-aware hierarchical prefix KV cache
+//!   (`sessioncache`: cross-request reuse of user-history prefixes over
+//!   HBM/DRAM tiers), xBeam search (early-termination sort + item masks),
 //!   xSchedule (three-tier pipeline with host/device overlap, graph
-//!   dispatch, multi-stream), plus every substrate the paper depends on
-//!   (item space, workload generators, an accelerator simulator, baseline
-//!   engines) — Python is never on the request path.
+//!   dispatch, multi-stream, session-affinity routing), plus every
+//!   substrate the paper depends on (item space, workload generators, an
+//!   accelerator simulator, baseline engines) — Python is never on the
+//!   request path.
 //!
 //! See `DESIGN.md` for the full system inventory and experiment index.
 
@@ -27,6 +30,7 @@ pub mod metrics;
 pub mod itemspace;
 pub mod workload;
 pub mod kvcache;
+pub mod sessioncache;
 pub mod beam;
 pub mod simulator;
 pub mod runtime;

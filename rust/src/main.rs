@@ -48,8 +48,10 @@ fn print_help() {
          serve    --artifacts DIR --model NAME --addr HOST:PORT [--engine xgr|vllm|xllm]\n\
          replay   --requests N --rps R [--dataset amazon|jd] [--engine xgr|vllm|xllm]\n\
          \u{20}        [--artifacts DIR | --mock] [--streams N] [--seed S]\n\
+         \u{20}        [--revisit P] [--session-cache]\n\
          simulate --model SPEC --hw ascend|h800 --engine xgr,vllm,xllm,tree\n\
          \u{20}        --rps LIST [--bw N] [--requests N] [--dataset amazon|jd]\n\
+         \u{20}        [--revisit P] [--session-cache]\n\
          info     [--model SPEC]"
     );
 }
@@ -154,13 +156,20 @@ fn cmd_replay(args: &Args) -> i32 {
     let catalog =
         Catalog::generate(spec.vocab as u32, spec.vocab * 8, seed);
     let trie = Arc::new(ItemTrie::build(&catalog));
+    let revisit = args.f64_or("revisit", 0.0);
     let trace = match args.str_or("dataset", "amazon").as_str() {
-        "jd" => JdTraceLike::for_seq_bucket(spec.seq).generate(&catalog, n, rps, seed),
-        _ => AmazonLike::for_seq_bucket(spec.seq).generate(&catalog, n, rps, seed),
+        "jd" => JdTraceLike::for_seq_bucket(spec.seq)
+            .with_revisit(revisit)
+            .generate(&catalog, n, rps, seed),
+        _ => AmazonLike::for_seq_bucket(spec.seq)
+            .with_revisit(revisit)
+            .generate(&catalog, n, rps, seed),
     };
     let mut serving = ServingConfig::default();
     serving.num_streams = args.usize_or("streams", 2);
     serving.batch_wait_us = args.u64_or("batch-wait-us", 1000);
+    // xGR-only: the baselines' real systems have no prefix reuse
+    serving.session_cache = args.flag("session-cache") && engine == "xgr";
     let serving = serving_for(&engine, &serving);
     let factory = build_factory(args, &engine, &spec);
     let coord = match Coordinator::start(
@@ -225,17 +234,22 @@ fn cmd_simulate(args: &Args) -> i32 {
         "simulate {} on {} (BW={bw}, {n} requests)",
         model.name, hw.name
     ));
+    let revisit = args.f64_or("revisit", 0.0);
+    let session_cache = args.flag("session-cache");
     for engine in engines {
         for &rps in &rps_list {
             let trace = match args.str_or("dataset", "amazon").as_str() {
                 "jd" => JdTraceLike::for_seq_bucket(model.seq)
+                    .with_revisit(revisit)
                     .generate_lengths(n, rps as f64, 42),
                 _ => AmazonLike::for_seq_bucket(model.seq)
+                    .with_revisit(revisit)
                     .generate_lengths(n, rps as f64, 42),
             };
             let mut serving = ServingConfig::default();
             serving.beam_width = bw;
             serving.top_k = bw;
+            serving.session_cache = session_cache;
             let cfg = DesConfig {
                 hw: hw.clone(),
                 model: model.clone(),
@@ -244,14 +258,18 @@ fn cmd_simulate(args: &Args) -> i32 {
                 host,
             };
             let r = simulate(&trace, &cfg);
-            table.push(
-                Row::new(format!("{}@rps{rps}", engine.name()))
-                    .col("mean_ms", r.mean_ms())
-                    .col("p99_ms", r.p99_ms())
-                    .col("thru_rps", r.throughput_rps())
-                    .col("peak_kv_gb", r.peak_kv_bytes as f64 / 1e9)
-                    .col("slo_ok", if r.meets_slo(200.0) { 1.0 } else { 0.0 }),
-            );
+            let mut row = Row::new(format!("{}@rps{rps}", engine.name()))
+                .col("mean_ms", r.mean_ms())
+                .col("p99_ms", r.p99_ms())
+                .col("thru_rps", r.throughput_rps())
+                .col("peak_kv_gb", r.peak_kv_bytes as f64 / 1e9)
+                .col("slo_ok", if r.meets_slo(200.0) { 1.0 } else { 0.0 });
+            if session_cache {
+                row = row
+                    .col("session_hit_rate", r.session_hit_rate())
+                    .col("prefill_saved", r.prefill_tokens_saved as f64);
+            }
+            table.push(row);
         }
     }
     table.emit();

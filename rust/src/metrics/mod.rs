@@ -5,7 +5,7 @@ pub mod hist;
 pub mod report;
 
 pub use hist::Histogram;
-pub use report::{Row, Table};
+pub use report::{session_hit_rate, Row, Table};
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -22,6 +22,15 @@ pub struct Counters {
     pub graph_dispatches: AtomicU64,
     pub h2d_transfers: AtomicU64,
     pub slo_violations: AtomicU64,
+    /// session prefix-cache lookups that reused a cached prefix
+    pub session_hits: AtomicU64,
+    pub session_misses: AtomicU64,
+    /// entries evicted from the session cache (demotions + drops)
+    pub session_evictions: AtomicU64,
+    /// DRAM-tier hits that paid a swap-in
+    pub session_swap_ins: AtomicU64,
+    /// prompt tokens whose prefill was skipped via the session cache
+    pub prefill_tokens_saved: AtomicU64,
 }
 
 impl Counters {

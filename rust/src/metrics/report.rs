@@ -4,6 +4,17 @@
 
 use crate::util::json::Json;
 
+/// Hit-rate convenience for `session_hit_rate` columns: hits over all
+/// lookups, 0 when the cache saw no traffic (off or cold).
+pub fn session_hit_rate(hits: u64, misses: u64) -> f64 {
+    let n = hits + misses;
+    if n == 0 {
+        0.0
+    } else {
+        hits as f64 / n as f64
+    }
+}
+
 /// One row: label + named numeric columns.
 #[derive(Clone, Debug)]
 pub struct Row {
@@ -155,6 +166,13 @@ mod tests {
             assert!(j.get("label").is_some());
             assert!(j.get("table").is_some());
         }
+    }
+
+    #[test]
+    fn hit_rate_helper() {
+        assert_eq!(session_hit_rate(0, 0), 0.0);
+        assert_eq!(session_hit_rate(3, 1), 0.75);
+        assert_eq!(session_hit_rate(0, 5), 0.0);
     }
 
     #[test]

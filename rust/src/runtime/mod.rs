@@ -40,6 +40,20 @@ pub trait ModelExecutor {
 
     fn prefill(&mut self, tokens: &[u32]) -> Result<(SlotId, Vec<f32>)>;
 
+    /// Prefill with the first `cached_prefix` tokens' KV already resident
+    /// (a session-cache hit). The default recomputes the full prompt —
+    /// numerically identical output, no savings — so executors without
+    /// cross-request KV residency (mock, CPU PJRT) stay correct; a
+    /// runtime that materializes per-user prefix KV overrides this to
+    /// run only the suffix. `cached_prefix` is always < tokens.len().
+    fn prefill_with_prefix(
+        &mut self,
+        tokens: &[u32],
+        _cached_prefix: usize,
+    ) -> Result<(SlotId, Vec<f32>)> {
+        self.prefill(tokens)
+    }
+
     fn decode(
         &mut self,
         slot: SlotId,

@@ -3,7 +3,7 @@
 //! throughput — the real-mode analogue of the DES end-to-end runs.
 
 use crate::coordinator::{Coordinator, RecRequest};
-use crate::metrics::Histogram;
+use crate::metrics::{session_hit_rate, Counters, Histogram};
 use crate::util::{fmt_ns, now_ns};
 use crate::workload::Trace;
 use std::time::Duration;
@@ -16,6 +16,10 @@ pub struct ReplayReport {
     pub wall_s: f64,
     pub valid_items: u64,
     pub total_items: u64,
+    /// session prefix-cache activity (zero when the cache is off)
+    pub session_hits: u64,
+    pub session_misses: u64,
+    pub prefill_tokens_saved: u64,
 }
 
 impl ReplayReport {
@@ -27,8 +31,12 @@ impl ReplayReport {
         }
     }
 
+    pub fn session_hit_rate(&self) -> f64 {
+        session_hit_rate(self.session_hits, self.session_misses)
+    }
+
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "completed={} rejected={} thru={:.1} rps mean={} p50={} p99={} valid={}/{}",
             self.completed,
             self.rejected,
@@ -38,7 +46,15 @@ impl ReplayReport {
             fmt_ns(self.latency.p99()),
             self.valid_items,
             self.total_items,
-        )
+        );
+        if self.session_hits + self.session_misses > 0 {
+            s.push_str(&format!(
+                " session_hit_rate={:.2} prefill_saved={}",
+                self.session_hit_rate(),
+                self.prefill_tokens_saved
+            ));
+        }
+        s
     }
 }
 
@@ -96,6 +112,7 @@ pub fn replay_trace(coord: &Coordinator, trace: &Trace, speedup: f64) -> ReplayR
             id: r.id,
             tokens: r.tokens.clone(),
             arrival_ns: now_ns(),
+            user_id: r.user_id,
         };
         match coord.submit(req) {
             Ok(()) => submitted += 1,
@@ -116,6 +133,9 @@ pub fn replay_trace(coord: &Coordinator, trace: &Trace, speedup: f64) -> ReplayR
         wall_s: (now_ns() - t_start) as f64 / 1e9,
         valid_items,
         total_items,
+        session_hits: Counters::get(&coord.counters.session_hits),
+        session_misses: Counters::get(&coord.counters.session_misses),
+        prefill_tokens_saved: Counters::get(&coord.counters.prefill_tokens_saved),
     }
 }
 
@@ -155,6 +175,41 @@ mod tests {
         assert_eq!(report.rejected, 0);
         assert!(report.latency.p99() > 0);
         assert_eq!(report.valid_items, report.total_items);
+        assert_eq!(report.session_hits + report.session_misses, 0, "cache off");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn replay_with_session_cache_reports_hits() {
+        let mut spec = ModelSpec::onerec_tiny();
+        spec.vocab = 64;
+        spec.beam_width = 4;
+        spec.seq = 48;
+        let catalog = Catalog::generate(64, 400, 3);
+        let trie = Arc::new(ItemTrie::build(&catalog));
+        let mut serving = ServingConfig::default();
+        serving.num_streams = 2;
+        serving.batch_wait_us = 200;
+        serving.session_cache = true;
+        let factory: crate::coordinator::ExecutorFactory = {
+            let spec = spec.clone();
+            Arc::new(move || Ok(Box::new(MockExecutor::new(spec.clone())) as _))
+        };
+        let coord =
+            Coordinator::start(&serving, EngineConfig::default(), trie, factory)
+                .unwrap();
+        let trace = AmazonLike::for_seq_bucket(48)
+            .with_revisit(0.7)
+            .generate(&catalog, 40, 400.0, 7);
+        let report = replay_trace(&coord, &trace, 1.0);
+        assert_eq!(report.completed, 40);
+        assert_eq!(report.valid_items, report.total_items);
+        assert!(
+            report.session_hits + report.session_misses > 0,
+            "cache must see lookups"
+        );
+        assert!(report.session_hits > 0, "revisit trace must hit");
+        assert!(report.summary().contains("session_hit_rate"));
         coord.shutdown();
     }
 }

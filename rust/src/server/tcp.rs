@@ -2,6 +2,9 @@
 //!
 //! Protocol, one request per line:
 //!   `REC <tok>,<tok>,...`   → `OK <t0>:<t1>:<t2>@<score> ...` (top items)
+//!   `REC@<user> <tok>,...`  → same, tagged with a user id so the session
+//!                             prefix cache / affinity router can reuse
+//!                             the user's cached history KV across calls
 //!   `PING`                  → `PONG`
 //!   `QUIT`                  → closes the connection
 //! Errors answer `ERR <reason>`.
@@ -85,7 +88,24 @@ impl TcpServer {
                 writeln!(w, "PONG")?;
                 continue;
             }
-            let Some(rest) = line.strip_prefix("REC ") else {
+            let Some(rest) = line.strip_prefix("REC") else {
+                writeln!(w, "ERR unknown command")?;
+                continue;
+            };
+            // optional user tag: `REC@<user> <tokens>`
+            let (user_id, rest) = if let Some(tagged) = rest.strip_prefix('@') {
+                let Some((u, r)) = tagged.split_once(' ') else {
+                    writeln!(w, "ERR missing token list")?;
+                    continue;
+                };
+                let Ok(u) = u.trim().parse::<u64>() else {
+                    writeln!(w, "ERR bad user id")?;
+                    continue;
+                };
+                (u, r)
+            } else if let Some(r) = rest.strip_prefix(' ') {
+                (0, r)
+            } else {
                 writeln!(w, "ERR unknown command")?;
                 continue;
             };
@@ -100,7 +120,7 @@ impl TcpServer {
                 continue;
             }
             let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-            let req = RecRequest { id, tokens, arrival_ns: now_ns() };
+            let req = RecRequest { id, tokens, arrival_ns: now_ns(), user_id };
             if coord.submit_blocking(req).is_err() {
                 writeln!(w, "ERR shutting down")?;
                 return Ok(());
@@ -175,6 +195,16 @@ mod tests {
         r.read_line(&mut line).unwrap();
         assert!(line.starts_with("OK "), "got {line:?}");
         assert!(line.contains('@'));
+
+        line.clear();
+        writeln!(s, "REC@42 1,2,3,4").unwrap();
+        r.read_line(&mut line).unwrap();
+        assert!(line.starts_with("OK "), "user-tagged got {line:?}");
+
+        line.clear();
+        writeln!(s, "REC@zz 1,2").unwrap();
+        r.read_line(&mut line).unwrap();
+        assert!(line.starts_with("ERR"), "bad user id got {line:?}");
 
         line.clear();
         writeln!(s, "REC x,y").unwrap();

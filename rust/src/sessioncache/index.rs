@@ -1,0 +1,193 @@
+//! Per-user prefix index: which prompt prefix is cached for each user,
+//! and how much of an incoming prompt it covers.
+//!
+//! GR prompts are user histories, so a returning user's new prompt is
+//! (almost always) a strict extension of the previous one. The index
+//! exploits exactly that structure: one stored prefix per user, matched
+//! against the incoming prompt with an exact-extension fast path (the
+//! stored prefix is wholly reused) and a general longest-prefix fallback
+//! (the session diverged — e.g. history truncation or re-ranking — and
+//! only the common head is reusable).
+//!
+//! The index is token-exact when concrete tokens are available. The DES
+//! runs on lengths-only traces (no materialized tokens); there the
+//! generators guarantee monotone sessions, so the match degrades to
+//! `min(stored_len, prompt_len)` — documented as *assumed-extension*.
+
+use std::collections::HashMap;
+
+/// How an incoming prompt related to the stored prefix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MatchKind {
+    /// No entry, or not even the first token matched.
+    Miss,
+    /// The prompt diverged mid-prefix; only the common head is reusable.
+    Partial,
+    /// The entire stored prefix is a prefix of the new prompt (the
+    /// session-extension fast path — no token comparison beyond the
+    /// stored length is ever needed).
+    Extension,
+}
+
+/// The cached prompt prefix of one user.
+#[derive(Clone, Debug, Default)]
+pub struct StoredPrefix {
+    /// Concrete tokens; empty in lengths-only (simulator) mode.
+    pub tokens: Vec<u32>,
+    /// Prefix length in tokens (== tokens.len() when materialized).
+    pub len: usize,
+}
+
+/// user_id → cached prefix. Pure matching logic: residency, budgets and
+/// eviction live in [`super::tier`]; the facade keeps the two in sync.
+#[derive(Default)]
+pub struct PrefixIndex {
+    map: HashMap<u64, StoredPrefix>,
+}
+
+impl PrefixIndex {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn get(&self, user: u64) -> Option<&StoredPrefix> {
+        self.map.get(&user)
+    }
+
+    /// Match `tokens` (or, when empty, a prompt of `prompt_len` tokens in
+    /// assumed-extension mode) against the user's stored prefix. Returns
+    /// the reusable prefix length in tokens and how it matched.
+    pub fn match_prefix(
+        &self,
+        user: u64,
+        tokens: &[u32],
+        prompt_len: usize,
+    ) -> (usize, MatchKind) {
+        let Some(s) = self.map.get(&user) else {
+            return (0, MatchKind::Miss);
+        };
+        if s.len == 0 {
+            return (0, MatchKind::Miss);
+        }
+        if s.tokens.is_empty() || tokens.is_empty() {
+            // lengths-only mode: sessions only ever extend their history
+            let m = s.len.min(prompt_len);
+            if m == 0 {
+                return (0, MatchKind::Miss);
+            }
+            let kind = if m == s.len {
+                MatchKind::Extension
+            } else {
+                MatchKind::Partial
+            };
+            return (m, kind);
+        }
+        // exact-extension fast path: compare only the stored span
+        if tokens.len() >= s.tokens.len() && tokens[..s.tokens.len()] == s.tokens[..] {
+            return (s.tokens.len(), MatchKind::Extension);
+        }
+        // longest-prefix fallback
+        let m = s
+            .tokens
+            .iter()
+            .zip(tokens.iter())
+            .take_while(|(a, b)| a == b)
+            .count();
+        if m == 0 {
+            (0, MatchKind::Miss)
+        } else {
+            (m, MatchKind::Partial)
+        }
+    }
+
+    /// Record the user's prompt after a completed request, growing (or
+    /// replacing) the stored prefix. Token mode: the latest prompt wins —
+    /// if the session diverged, stale suffix tokens are useless anyway.
+    /// Lengths-only mode: monotone growth. Returns the new stored length.
+    pub fn publish(&mut self, user: u64, tokens: &[u32], prompt_len: usize) -> usize {
+        let e = self.map.entry(user).or_default();
+        if tokens.is_empty() {
+            e.len = e.len.max(prompt_len);
+        } else {
+            e.tokens.clear();
+            e.tokens.extend_from_slice(tokens);
+            e.len = tokens.len();
+        }
+        e.len
+    }
+
+    pub fn remove(&mut self, user: u64) {
+        self.map.remove(&user);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn miss_on_unknown_user() {
+        let idx = PrefixIndex::new();
+        assert_eq!(idx.match_prefix(1, &[1, 2, 3], 3), (0, MatchKind::Miss));
+    }
+
+    #[test]
+    fn exact_extension_fast_path() {
+        let mut idx = PrefixIndex::new();
+        idx.publish(7, &[1, 2, 3], 3);
+        // identical prompt: full reuse
+        assert_eq!(idx.match_prefix(7, &[1, 2, 3], 3), (3, MatchKind::Extension));
+        // strict extension: full stored prefix reused
+        assert_eq!(
+            idx.match_prefix(7, &[1, 2, 3, 4, 5], 5),
+            (3, MatchKind::Extension)
+        );
+    }
+
+    #[test]
+    fn longest_prefix_on_divergence() {
+        let mut idx = PrefixIndex::new();
+        idx.publish(7, &[1, 2, 3, 4], 4);
+        assert_eq!(
+            idx.match_prefix(7, &[1, 2, 9, 9, 9], 5),
+            (2, MatchKind::Partial)
+        );
+        assert_eq!(idx.match_prefix(7, &[8, 8], 2), (0, MatchKind::Miss));
+    }
+
+    #[test]
+    fn lengths_only_assumed_extension() {
+        let mut idx = PrefixIndex::new();
+        idx.publish(3, &[], 90);
+        assert_eq!(idx.match_prefix(3, &[], 120), (90, MatchKind::Extension));
+        // shorter re-request: only the overlapping head counts
+        assert_eq!(idx.match_prefix(3, &[], 60), (60, MatchKind::Partial));
+        // lengths-only publishes grow monotonically
+        assert_eq!(idx.publish(3, &[], 60), 90);
+    }
+
+    #[test]
+    fn latest_prompt_wins_in_token_mode() {
+        let mut idx = PrefixIndex::new();
+        idx.publish(5, &[1, 2, 3], 3);
+        idx.publish(5, &[9, 9], 2);
+        assert_eq!(idx.match_prefix(5, &[9, 9, 1], 3), (2, MatchKind::Extension));
+        assert_eq!(idx.match_prefix(5, &[1, 2, 3], 3), (0, MatchKind::Miss));
+    }
+
+    #[test]
+    fn remove_forgets() {
+        let mut idx = PrefixIndex::new();
+        idx.publish(5, &[1, 2], 2);
+        idx.remove(5);
+        assert_eq!(idx.match_prefix(5, &[1, 2], 2), (0, MatchKind::Miss));
+    }
+}

@@ -1,0 +1,340 @@
+//! Session-aware hierarchical prefix KV cache (MTServe/FLAME-style).
+//!
+//! xGR's [`crate::kvcache::SeparatedKv`] is strictly per-request: the
+//! shared prompt region is written at prefill and freed at completion, so
+//! every arrival pays full prefill — even though GR traffic is dominated
+//! by *repeat users* whose new history prompt extends their previous one.
+//! This subsystem is the layer between admission and prefill that closes
+//! that gap:
+//!
+//! * [`index`] — per-user prefix index: longest-prefix match over prompt
+//!   tokens with an exact-extension fast path (the common case: the user
+//!   came back with `old history ++ new items`).
+//! * [`tier`] — two-tier residency: an **HBM** tier (prefix KV resident
+//!   on-device; hits are free) and a **DRAM** spill tier (hits pay a
+//!   swap-in over the H2D link), with byte budgets derived from
+//!   [`crate::config::HardwareProfile`], lazily-invalidated LRU clock
+//!   eviction, and pinning of entries backing in-flight requests.
+//!
+//! Relation to `kvcache::SeparatedKv`: the session cache holds the
+//! *shared-prefix* KV **across** requests, while `SeparatedKv` accounts
+//! the per-request view (shared prefix + BW×ND unshared buffer) **within**
+//! a request. A hit means the engine prefILLS only the uncached suffix;
+//! the unshared buffer and the decode path are untouched — which is why
+//! the cache can change latency but never results (enforced by the
+//! `session_invariant` integration test).
+//!
+//! Lifecycle per request: `lookup` (pins the entry, promotes DRAM hits)
+//! → serve → `publish` (store the grown prefix, unpin) or `release` on
+//! failure. The engine drives this in real mode; the DES drives the same
+//! object in lengths-only mode at cluster scale.
+
+pub mod index;
+pub mod tier;
+
+pub use index::{MatchKind, PrefixIndex};
+pub use tier::{Tier, TierManager, TierStats};
+
+use crate::config::HardwareProfile;
+
+/// Budgets and toggles for the session cache.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SessionCacheConfig {
+    /// HBM-tier byte budget (on-device resident prefixes).
+    pub hbm_bytes: u64,
+    /// DRAM spill-tier byte budget (host memory, swap-in on hit).
+    pub dram_bytes: u64,
+}
+
+impl SessionCacheConfig {
+    /// Tier budgets derived from a hardware profile: 1/8 of device memory
+    /// is carved out for resident prefixes (the DES subtracts this from
+    /// the request-KV budget), with a 4× larger host spill pool.
+    pub fn for_hardware(hw: &HardwareProfile) -> Self {
+        let hbm = hw.mem_bytes / 8;
+        SessionCacheConfig { hbm_bytes: hbm, dram_bytes: hbm.saturating_mul(4) }
+    }
+
+    /// Default budgets for real-mode (CPU testbed) engines, where tier
+    /// sizes bound host memory rather than accelerator HBM.
+    pub fn host_default() -> Self {
+        SessionCacheConfig {
+            hbm_bytes: 256 << 20,
+            dram_bytes: 1 << 30,
+        }
+    }
+}
+
+/// Monotone cache statistics (also see [`TierStats`] for evictions).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SessionStats {
+    pub hits: u64,
+    pub misses: u64,
+    /// hits where the whole stored prefix was reused (fast path)
+    pub extension_hits: u64,
+    /// prompt tokens whose prefill was skipped
+    pub tokens_saved: u64,
+    /// DRAM-tier hits (each pays a swap-in)
+    pub swap_ins: u64,
+    /// bytes streamed DRAM→HBM for those hits
+    pub swap_in_bytes: u64,
+}
+
+/// Flat counter snapshot for cross-thread propagation (worker → shared
+/// [`crate::metrics::Counters`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SessionSnapshot {
+    pub hits: u64,
+    pub misses: u64,
+    pub swap_ins: u64,
+    pub evictions: u64,
+    pub tokens_saved: u64,
+}
+
+/// Result of consulting the cache for one request.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Lookup {
+    /// reusable prefix length in tokens (0 on miss)
+    pub hit_tokens: usize,
+    /// tier the hit was served from (None on miss)
+    pub tier: Option<Tier>,
+    /// bytes swapped in from the DRAM tier (0 on HBM hits / misses)
+    pub swap_in_bytes: u64,
+}
+
+/// The session cache: prefix index + tiered residency, kept in sync.
+pub struct SessionCache {
+    bytes_per_token: u64,
+    index: PrefixIndex,
+    tiers: TierManager,
+    dropped_scratch: Vec<u64>,
+    pub stats: SessionStats,
+}
+
+impl SessionCache {
+    pub fn new(cfg: SessionCacheConfig, bytes_per_token: u64) -> Self {
+        SessionCache {
+            bytes_per_token,
+            index: PrefixIndex::new(),
+            tiers: TierManager::new(cfg.hbm_bytes, cfg.dram_bytes),
+            dropped_scratch: Vec::new(),
+            stats: SessionStats::default(),
+        }
+    }
+
+    /// Consult the cache at request start. On a hit the entry is pinned
+    /// (it backs an in-flight request until `publish`/`release`) and a
+    /// DRAM-tier hit is promoted toward HBM, charging swap-in for the
+    /// matched span. `tokens` may be empty (lengths-only mode).
+    ///
+    /// `hit_tokens` is clamped to `prompt_len - 1`: a full-prompt hit
+    /// still prefills the final token (the prompt logits must be
+    /// produced), so the clamped value — and `tokens_saved` — reflect
+    /// prefill work actually skipped.
+    pub fn lookup(&mut self, user: u64, tokens: &[u32], prompt_len: usize) -> Lookup {
+        let (m, kind) = self.index.match_prefix(user, tokens, prompt_len);
+        let m = m.min(prompt_len.saturating_sub(1));
+        if m == 0 {
+            self.stats.misses += 1;
+            return Lookup::default();
+        }
+        let Some(tier_before) = self.tiers.tier_of(user) else {
+            // index/tier desync can only mean the entry was dropped;
+            // treat as a miss and heal
+            self.index.remove(user);
+            self.stats.misses += 1;
+            return Lookup::default();
+        };
+        self.stats.hits += 1;
+        if kind == MatchKind::Extension {
+            self.stats.extension_hits += 1;
+        }
+        self.stats.tokens_saved += m as u64;
+        let mut dropped = std::mem::take(&mut self.dropped_scratch);
+        let entry_bytes = self.tiers.promote(user, &mut dropped);
+        let swap = match entry_bytes {
+            // only the matched span is streamed to the device
+            Some(b) => (m as u64 * self.bytes_per_token).min(b),
+            None => 0,
+        };
+        if swap > 0 {
+            self.stats.swap_ins += 1;
+            self.stats.swap_in_bytes += swap;
+        }
+        for u in dropped.drain(..) {
+            self.index.remove(u);
+        }
+        self.dropped_scratch = dropped;
+        self.tiers.pin(user);
+        Lookup { hit_tokens: m, tier: Some(tier_before), swap_in_bytes: swap }
+    }
+
+    /// Publish the (grown) prefix after the request completed: unpin,
+    /// store the new prompt as the user's prefix, and re-admit it at its
+    /// new size (evicting LRU entries under budget pressure).
+    pub fn publish(&mut self, user: u64, tokens: &[u32], prompt_len: usize) {
+        self.tiers.unpin(user);
+        let len = self.index.publish(user, tokens, prompt_len);
+        let bytes = len as u64 * self.bytes_per_token;
+        let mut dropped = std::mem::take(&mut self.dropped_scratch);
+        if bytes == 0 || !self.tiers.put(user, bytes, &mut dropped) {
+            self.index.remove(user);
+            self.tiers.remove(user);
+        }
+        for u in dropped.drain(..) {
+            self.index.remove(u);
+        }
+        self.dropped_scratch = dropped;
+    }
+
+    /// Abandon a looked-up request without publishing (request failed).
+    pub fn release(&mut self, user: u64) {
+        self.tiers.unpin(user);
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        crate::metrics::session_hit_rate(self.stats.hits, self.stats.misses)
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.tiers.stats.demotions + self.tiers.stats.drops
+    }
+
+    pub fn tier_stats(&self) -> TierStats {
+        self.tiers.stats
+    }
+
+    pub fn snapshot(&self) -> SessionSnapshot {
+        SessionSnapshot {
+            hits: self.stats.hits,
+            misses: self.stats.misses,
+            swap_ins: self.stats.swap_ins,
+            evictions: self.evictions(),
+            tokens_saved: self.stats.tokens_saved,
+        }
+    }
+
+    pub fn hbm_bytes(&self) -> u64 {
+        self.tiers.hbm_bytes()
+    }
+
+    pub fn dram_bytes(&self) -> u64 {
+        self.tiers.dram_bytes()
+    }
+
+    pub fn hbm_peak(&self) -> u64 {
+        self.tiers.hbm_peak()
+    }
+
+    pub fn dram_peak(&self) -> u64 {
+        self.tiers.dram_peak()
+    }
+
+    pub fn resident_users(&self) -> usize {
+        self.tiers.resident_users()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const BPT: u64 = 10; // bytes per token, keeps budgets legible
+
+    fn cache(hbm_tokens: u64, dram_tokens: u64) -> SessionCache {
+        SessionCache::new(
+            SessionCacheConfig {
+                hbm_bytes: hbm_tokens * BPT,
+                dram_bytes: dram_tokens * BPT,
+            },
+            BPT,
+        )
+    }
+
+    #[test]
+    fn miss_then_extension_hit() {
+        let mut c = cache(1000, 1000);
+        let l = c.lookup(1, &[1, 2, 3], 3);
+        assert_eq!(l.hit_tokens, 0);
+        c.publish(1, &[1, 2, 3], 3);
+        let l = c.lookup(1, &[1, 2, 3, 4, 5], 5);
+        assert_eq!(l.hit_tokens, 3);
+        assert_eq!(l.tier, Some(Tier::Hbm));
+        assert_eq!(l.swap_in_bytes, 0);
+        c.publish(1, &[1, 2, 3, 4, 5], 5);
+        assert_eq!(c.stats.extension_hits, 1);
+        assert_eq!(c.stats.tokens_saved, 3);
+        assert_eq!(c.hbm_bytes(), 5 * BPT);
+    }
+
+    #[test]
+    fn partial_hit_after_divergence() {
+        let mut c = cache(1000, 1000);
+        c.publish(1, &[1, 2, 3, 4], 4);
+        let l = c.lookup(1, &[1, 2, 9], 3);
+        assert_eq!(l.hit_tokens, 2);
+        c.publish(1, &[1, 2, 9], 3);
+        // latest prompt won: extension of [1,2,9] now fully matches
+        let l = c.lookup(1, &[1, 2, 9, 7], 4);
+        assert_eq!(l.hit_tokens, 3);
+        c.release(1);
+    }
+
+    #[test]
+    fn dram_hit_charges_swap_in_and_promotes() {
+        let mut c = cache(100, 100);
+        c.publish(1, &[], 80);
+        c.publish(2, &[], 80); // user 1 spills to DRAM
+        let l = c.lookup(1, &[], 90);
+        assert_eq!(l.hit_tokens, 80);
+        assert_eq!(l.tier, Some(Tier::Dram));
+        assert_eq!(l.swap_in_bytes, 80 * BPT);
+        assert_eq!(c.stats.swap_ins, 1);
+        c.publish(1, &[], 90);
+        // promoted: the next hit is HBM-resident and free
+        let l = c.lookup(1, &[], 90);
+        assert_eq!(l.tier, Some(Tier::Hbm));
+        assert_eq!(l.swap_in_bytes, 0);
+        c.release(1);
+    }
+
+    #[test]
+    fn pinned_in_flight_entries_survive_pressure() {
+        let mut c = cache(100, 0);
+        c.publish(1, &[], 90);
+        let l = c.lookup(1, &[], 90); // pins user 1
+        assert_eq!(l.hit_tokens, 89, "full-prompt hit clamps to len-1");
+        // a competing publish cannot evict the pinned entry
+        c.publish(2, &[], 90);
+        assert_eq!(c.resident_users(), 1, "2 fits in neither tier");
+        let l2 = c.lookup(1, &[], 95);
+        assert_eq!(l2.hit_tokens, 90, "pinned entry still intact");
+        c.release(1);
+        c.publish(1, &[], 95);
+        assert_eq!(c.hbm_bytes(), 95 * BPT);
+    }
+
+    #[test]
+    fn dropped_entries_vanish_from_the_index_too() {
+        let mut c = cache(100, 100);
+        c.publish(1, &[], 60);
+        c.publish(2, &[], 60); // 1 → DRAM
+        c.publish(3, &[], 60); // 2 → DRAM, 1 dropped (DRAM holds one 60)
+        assert_eq!(c.resident_users(), 2);
+        let l = c.lookup(1, &[], 60);
+        assert_eq!(l.hit_tokens, 0, "dropped entry must not match");
+        assert!(c.evictions() >= 2);
+    }
+
+    #[test]
+    fn hit_rate_counts_all_lookups() {
+        let mut c = cache(1000, 1000);
+        c.lookup(1, &[1], 1); // miss
+        c.publish(1, &[1], 1);
+        c.lookup(1, &[1, 2], 2); // hit
+        c.release(1);
+        assert!((c.hit_rate() - 0.5).abs() < 1e-9);
+        let s = c.snapshot();
+        assert_eq!((s.hits, s.misses), (1, 1));
+    }
+}

@@ -1,0 +1,420 @@
+//! Two-tier residency manager for cached session prefixes.
+//!
+//! Tier 0 (**HBM**) holds prefix KV on-device, ready to serve with zero
+//! extra cost; tier 1 (**DRAM**) is the host spill pool reached over the
+//! H2D link (swap-in cost charged by the DES / counted by the engine).
+//! Each tier has a byte budget; admission prefers HBM, HBM pressure
+//! demotes the least-recently-used entry to DRAM, DRAM pressure drops it
+//! entirely. Entries belonging to in-flight requests are **pinned** and
+//! never evicted — a hit hands its prefix to a request, and yanking it
+//! mid-prefill would fault the request.
+//!
+//! LRU is a lazily-invalidated clock queue: every touch pushes
+//! `(user, tick)` and bumps the entry's tick; a queue element is live
+//! only while its tick still matches, so stale positions are skipped at
+//! pop time (amortized O(1), no intrusive list). Occupancy is tracked by
+//! the same peak-recording [`Gauge`] that [`crate::kvcache::SeparatedKv`]
+//! uses, so tier occupancy and request KV report through one mechanism.
+
+use crate::metrics::Gauge;
+use std::collections::{HashMap, VecDeque};
+
+/// Residency tier of a cached prefix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tier {
+    Hbm,
+    Dram,
+}
+
+/// Eviction counters (demotions spill HBM→DRAM; drops leave the cache).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TierStats {
+    pub demotions: u64,
+    pub drops: u64,
+}
+
+struct Resident {
+    bytes: u64,
+    tier: Tier,
+    pins: u32,
+    tick: u64,
+}
+
+pub struct TierManager {
+    hbm_budget: u64,
+    dram_budget: u64,
+    residents: HashMap<u64, Resident>,
+    lru_hbm: VecDeque<(u64, u64)>,
+    lru_dram: VecDeque<(u64, u64)>,
+    tick: u64,
+    hbm: Gauge,
+    dram: Gauge,
+    pub stats: TierStats,
+}
+
+impl TierManager {
+    pub fn new(hbm_budget: u64, dram_budget: u64) -> Self {
+        TierManager {
+            hbm_budget,
+            dram_budget,
+            residents: HashMap::new(),
+            lru_hbm: VecDeque::new(),
+            lru_dram: VecDeque::new(),
+            tick: 0,
+            hbm: Gauge::new(),
+            dram: Gauge::new(),
+            stats: TierStats::default(),
+        }
+    }
+
+    pub fn tier_of(&self, user: u64) -> Option<Tier> {
+        self.residents.get(&user).map(|r| r.tier)
+    }
+
+    pub fn bytes_of(&self, user: u64) -> u64 {
+        self.residents.get(&user).map(|r| r.bytes).unwrap_or(0)
+    }
+
+    pub fn is_pinned(&self, user: u64) -> bool {
+        self.residents.get(&user).map(|r| r.pins > 0).unwrap_or(false)
+    }
+
+    pub fn hbm_bytes(&self) -> u64 {
+        self.hbm.current()
+    }
+
+    pub fn dram_bytes(&self) -> u64 {
+        self.dram.current()
+    }
+
+    pub fn hbm_peak(&self) -> u64 {
+        self.hbm.peak()
+    }
+
+    pub fn dram_peak(&self) -> u64 {
+        self.dram.peak()
+    }
+
+    pub fn resident_users(&self) -> usize {
+        self.residents.len()
+    }
+
+    pub fn pin(&mut self, user: u64) {
+        if let Some(r) = self.residents.get_mut(&user) {
+            r.pins += 1;
+        }
+    }
+
+    pub fn unpin(&mut self, user: u64) {
+        if let Some(r) = self.residents.get_mut(&user) {
+            r.pins = r.pins.saturating_sub(1);
+        }
+    }
+
+    /// Mark the entry most-recently-used in its current tier.
+    pub fn touch(&mut self, user: u64) {
+        self.tick += 1;
+        let tick = self.tick;
+        if let Some(r) = self.residents.get_mut(&user) {
+            r.tick = tick;
+            match r.tier {
+                Tier::Hbm => self.lru_hbm.push_back((user, tick)),
+                Tier::Dram => self.lru_dram.push_back((user, tick)),
+            }
+        }
+    }
+
+    /// Promote a DRAM resident to HBM on a hit. Returns `Some(bytes)`
+    /// when the entry was in DRAM (the caller charges swap-in for the
+    /// matched span), `None` when it was already HBM-resident or absent.
+    /// If HBM cannot make room (everything pinned), the entry stays in
+    /// DRAM — the data is still streamed to the device, it just does not
+    /// become HBM-resident.
+    pub fn promote(&mut self, user: u64, dropped: &mut Vec<u64>) -> Option<u64> {
+        let Some(r) = self.residents.get(&user) else {
+            return None;
+        };
+        let bytes = r.bytes;
+        if r.tier == Tier::Hbm {
+            self.touch(user);
+            return None;
+        }
+        // the mover's bytes leave DRAM up front so that demotions
+        // triggered by the promotion can land in the slot it vacates
+        self.dram.sub(bytes);
+        if bytes <= self.hbm_budget && self.make_room(Tier::Hbm, bytes, user, dropped)
+        {
+            self.hbm.add(bytes);
+            self.residents.get_mut(&user).unwrap().tier = Tier::Hbm;
+        } else {
+            self.dram.add(bytes);
+        }
+        self.touch(user);
+        Some(bytes)
+    }
+
+    /// Insert or resize the resident for `user` to `bytes`, preferring
+    /// HBM. Returns false when the entry fits in neither tier (it is then
+    /// no longer resident and the caller must drop its index entry too).
+    /// Users evicted to make room are appended to `dropped`.
+    pub fn put(&mut self, user: u64, bytes: u64, dropped: &mut Vec<u64>) -> bool {
+        let mut keep_pins = 0u32;
+        if let Some(r) = self.residents.get(&user) {
+            let (old, tier) = (r.bytes, r.tier);
+            keep_pins = r.pins;
+            if bytes == old {
+                self.touch(user);
+                return true;
+            }
+            if bytes < old {
+                let delta = old - bytes;
+                match tier {
+                    Tier::Hbm => self.hbm.sub(delta),
+                    Tier::Dram => self.dram.sub(delta),
+                }
+                self.residents.get_mut(&user).unwrap().bytes = bytes;
+                self.touch(user);
+                return true;
+            }
+            // grow in place when the tier can absorb the delta
+            let delta = bytes - old;
+            let grew = match tier {
+                Tier::Hbm => {
+                    bytes <= self.hbm_budget
+                        && self.make_room(Tier::Hbm, delta, user, dropped)
+                }
+                Tier::Dram => {
+                    bytes <= self.dram_budget
+                        && self.make_room(Tier::Dram, delta, user, dropped)
+                }
+            };
+            if grew {
+                match tier {
+                    Tier::Hbm => self.hbm.add(delta),
+                    Tier::Dram => self.dram.add(delta),
+                }
+                self.residents.get_mut(&user).unwrap().bytes = bytes;
+                self.touch(user);
+                return true;
+            }
+            self.remove(user);
+        }
+        // fresh admission, HBM first
+        if bytes <= self.hbm_budget && self.make_room(Tier::Hbm, bytes, user, dropped)
+        {
+            self.hbm.add(bytes);
+            self.residents.insert(
+                user,
+                Resident { bytes, tier: Tier::Hbm, pins: keep_pins, tick: 0 },
+            );
+            self.touch(user);
+            return true;
+        }
+        if bytes <= self.dram_budget
+            && self.make_room(Tier::Dram, bytes, user, dropped)
+        {
+            self.dram.add(bytes);
+            self.residents.insert(
+                user,
+                Resident { bytes, tier: Tier::Dram, pins: keep_pins, tick: 0 },
+            );
+            self.touch(user);
+            return true;
+        }
+        false
+    }
+
+    pub fn remove(&mut self, user: u64) {
+        if let Some(r) = self.residents.remove(&user) {
+            match r.tier {
+                Tier::Hbm => self.hbm.sub(r.bytes),
+                Tier::Dram => self.dram.sub(r.bytes),
+            }
+        }
+    }
+
+    /// Free `need` bytes of headroom in `tier`, never evicting pinned
+    /// entries or `protect`. HBM victims demote to DRAM (dropping DRAM
+    /// LRU entries if the spill pool is full); DRAM victims are dropped.
+    fn make_room(
+        &mut self,
+        tier: Tier,
+        need: u64,
+        protect: u64,
+        dropped: &mut Vec<u64>,
+    ) -> bool {
+        loop {
+            let (used, budget) = match tier {
+                Tier::Hbm => (self.hbm.current(), self.hbm_budget),
+                Tier::Dram => (self.dram.current(), self.dram_budget),
+            };
+            if used.saturating_add(need) <= budget {
+                return true;
+            }
+            let Some(victim) = self.pop_victim(tier, protect) else {
+                return false;
+            };
+            let vbytes = self.residents[&victim].bytes;
+            match tier {
+                Tier::Hbm => {
+                    self.hbm.sub(vbytes);
+                    if vbytes <= self.dram_budget
+                        && self.make_room(Tier::Dram, vbytes, protect, dropped)
+                    {
+                        self.residents.get_mut(&victim).unwrap().tier = Tier::Dram;
+                        self.dram.add(vbytes);
+                        self.touch(victim);
+                        self.stats.demotions += 1;
+                    } else {
+                        self.residents.remove(&victim);
+                        dropped.push(victim);
+                        self.stats.drops += 1;
+                    }
+                }
+                Tier::Dram => {
+                    self.dram.sub(vbytes);
+                    self.residents.remove(&victim);
+                    dropped.push(victim);
+                    self.stats.drops += 1;
+                }
+            }
+        }
+    }
+
+    /// Pop the least-recently-used evictable entry of `tier`. Pinned or
+    /// protected entries are rotated to the back (they keep their queue
+    /// position's tick, so they stay live); stale positions are dropped.
+    fn pop_victim(&mut self, tier: Tier, protect: u64) -> Option<u64> {
+        let (q, residents) = match tier {
+            Tier::Hbm => (&mut self.lru_hbm, &self.residents),
+            Tier::Dram => (&mut self.lru_dram, &self.residents),
+        };
+        let mut scanned = 0usize;
+        let limit = q.len();
+        while scanned < limit {
+            let Some((user, tick)) = q.pop_front() else {
+                break;
+            };
+            scanned += 1;
+            match residents.get(&user) {
+                Some(r) if r.tick == tick && r.tier == tier => {
+                    if r.pins == 0 && user != protect {
+                        return Some(user);
+                    }
+                    q.push_back((user, tick));
+                }
+                _ => {} // stale queue position
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drops(v: &mut Vec<u64>) -> Vec<u64> {
+        let mut d = std::mem::take(v);
+        d.sort_unstable();
+        d
+    }
+
+    #[test]
+    fn admission_prefers_hbm_then_spills() {
+        let mut t = TierManager::new(100, 100);
+        let mut d = Vec::new();
+        assert!(t.put(1, 60, &mut d));
+        assert!(t.put(2, 60, &mut d)); // 1 demoted to DRAM to fit 2
+        assert_eq!(t.tier_of(2), Some(Tier::Hbm));
+        assert_eq!(t.tier_of(1), Some(Tier::Dram));
+        assert_eq!(t.stats.demotions, 1);
+        assert!(d.is_empty());
+        assert_eq!(t.hbm_bytes(), 60);
+        assert_eq!(t.dram_bytes(), 60);
+    }
+
+    #[test]
+    fn lru_eviction_order_under_pressure() {
+        let mut t = TierManager::new(100, 0);
+        let mut d = Vec::new();
+        assert!(t.put(1, 40, &mut d));
+        assert!(t.put(2, 40, &mut d));
+        t.touch(1); // 2 becomes the LRU
+        assert!(t.put(3, 40, &mut d)); // evicts 2 (no DRAM: dropped)
+        assert_eq!(drops(&mut d), vec![2]);
+        assert_eq!(t.tier_of(1), Some(Tier::Hbm));
+        assert_eq!(t.tier_of(2), None);
+        assert_eq!(t.stats.drops, 1);
+        // and again: 1 is now older than 3
+        assert!(t.put(4, 40, &mut d));
+        assert_eq!(drops(&mut d), vec![1]);
+    }
+
+    #[test]
+    fn pinned_entries_refuse_eviction() {
+        let mut t = TierManager::new(100, 0);
+        let mut d = Vec::new();
+        assert!(t.put(1, 60, &mut d));
+        t.pin(1);
+        // no unpinned victim: admission must fail, pinned entry intact
+        assert!(!t.put(2, 60, &mut d));
+        assert_eq!(t.tier_of(1), Some(Tier::Hbm));
+        assert_eq!(t.tier_of(2), None);
+        t.unpin(1);
+        assert!(t.put(2, 60, &mut d));
+        assert_eq!(drops(&mut d), vec![1]);
+    }
+
+    #[test]
+    fn promotion_moves_dram_hit_to_hbm() {
+        let mut t = TierManager::new(100, 100);
+        let mut d = Vec::new();
+        assert!(t.put(1, 80, &mut d));
+        assert!(t.put(2, 80, &mut d)); // 1 spills to DRAM
+        assert_eq!(t.tier_of(1), Some(Tier::Dram));
+        // hit on 1: swap-in reported, tiers exchange (2 demotes)
+        let swapped = t.promote(1, &mut d);
+        assert_eq!(swapped, Some(80));
+        assert_eq!(t.tier_of(1), Some(Tier::Hbm));
+        assert_eq!(t.tier_of(2), Some(Tier::Dram));
+        // HBM-resident hit is free
+        assert_eq!(t.promote(1, &mut d), None);
+    }
+
+    #[test]
+    fn promotion_with_fully_pinned_hbm_stays_in_dram() {
+        let mut t = TierManager::new(100, 100);
+        let mut d = Vec::new();
+        assert!(t.put(1, 80, &mut d));
+        t.pin(1);
+        assert!(t.put(2, 80, &mut d));
+        assert_eq!(t.tier_of(2), Some(Tier::Dram));
+        let swapped = t.promote(2, &mut d);
+        assert_eq!(swapped, Some(80), "swap-in still streamed");
+        assert_eq!(t.tier_of(2), Some(Tier::Dram), "no HBM room: stays spilled");
+    }
+
+    #[test]
+    fn resize_adjusts_occupancy() {
+        let mut t = TierManager::new(100, 100);
+        let mut d = Vec::new();
+        assert!(t.put(1, 40, &mut d));
+        assert!(t.put(1, 70, &mut d)); // grow in place
+        assert_eq!(t.hbm_bytes(), 70);
+        assert!(t.put(1, 30, &mut d)); // shrink
+        assert_eq!(t.hbm_bytes(), 30);
+        t.remove(1);
+        assert_eq!(t.hbm_bytes(), 0);
+        assert!(t.hbm_peak() >= 70);
+    }
+
+    #[test]
+    fn oversized_entries_are_rejected() {
+        let mut t = TierManager::new(10, 20);
+        let mut d = Vec::new();
+        assert!(!t.put(1, 50, &mut d), "fits in neither tier");
+        assert!(t.put(2, 15, &mut d), "fits only in DRAM");
+        assert_eq!(t.tier_of(2), Some(Tier::Dram));
+    }
+}

@@ -20,7 +20,12 @@
 //!   device time; H2D mask transfer hides behind attention;
 //! * `valid_filter` — xGR filters device-resident (mask H2D only);
 //!   baselines filter host-side: logits D2H + host sort + tokens H2D
-//!   with a hard sync each decode phase.
+//!   with a hard sync each decode phase;
+//! * `session_cache` — a [`crate::sessioncache::SessionCache`] sits
+//!   between admission and prefill (lengths-only mode): hits shrink the
+//!   prefill to the uncached suffix, DRAM-tier hits additionally pay a
+//!   swap-in over the H2D link, and the HBM tier's budget is carved out
+//!   of the request-KV memory budget.
 
 use super::calibrate::HostCosts;
 use super::kernels::{
@@ -30,6 +35,7 @@ use super::kernels::{
 use crate::config::{HardwareProfile, ModelSpec, ServingConfig};
 use crate::kvcache::{KvManager, PagedKv, SeparatedKv, TreeKv};
 use crate::metrics::Histogram;
+use crate::sessioncache::SessionCache;
 use crate::workload::Trace;
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
@@ -125,6 +131,14 @@ pub struct DesResult {
     pub host_busy_s: f64,
     pub device_busy_s: f64,
     pub batches: u64,
+    // ---- session prefix cache (zero when disabled) ----
+    pub session_hits: u64,
+    pub session_misses: u64,
+    pub session_swap_ins: u64,
+    pub session_evictions: u64,
+    pub prefill_tokens_saved: u64,
+    pub session_peak_hbm_bytes: u64,
+    pub session_peak_dram_bytes: u64,
 }
 
 impl DesResult {
@@ -145,6 +159,10 @@ impl DesResult {
 
     pub fn meets_slo(&self, slo_ms: f64) -> bool {
         self.rejected == 0 && self.p99_ms() <= slo_ms
+    }
+
+    pub fn session_hit_rate(&self) -> f64 {
+        crate::metrics::session_hit_rate(self.session_hits, self.session_misses)
     }
 }
 
@@ -179,7 +197,17 @@ struct BatchTiming {
     device_s: f64,
 }
 
-fn batch_timing(cfg: &DesConfig, lens: &[usize], cgs: usize) -> BatchTiming {
+/// `lens` are full prompt lengths (decode attends to the whole context);
+/// `prefill_lens` are the uncached suffixes actually prefilled (== `lens`
+/// without the session cache); `swap_in_bytes` is DRAM-tier prefix KV
+/// streamed to the device before prefill can start.
+fn batch_timing(
+    cfg: &DesConfig,
+    lens: &[usize],
+    prefill_lens: &[usize],
+    swap_in_bytes: u64,
+    cgs: usize,
+) -> BatchTiming {
     let (graph, overlap, _, filter) = cfg.features();
     let hw = &cfg.hw;
     let m = &cfg.model;
@@ -187,6 +215,7 @@ fn batch_timing(cfg: &DesConfig, lens: &[usize], cgs: usize) -> BatchTiming {
     let b = lens.len();
     let total_tokens: usize = lens.iter().sum();
     let mean_len = (total_tokens / b.max(1)).max(1);
+    let prefill_tokens: usize = prefill_lens.iter().sum();
     let host = &cfg.host;
     let kernel = cfg.attn_kernel();
     let host_beam = !matches!(cfg.engine, EngineKind::Xgr);
@@ -208,8 +237,13 @@ fn batch_timing(cfg: &DesConfig, lens: &[usize], cgs: usize) -> BatchTiming {
     let mut host_s = host.sched_per_req_s * b as f64;
     let mut device_s = 0.0;
 
-    // ---- prefill phase ----
-    device_s += prefill_cost(hw, m, total_tokens, mean_len, cgs).time_s;
+    // ---- prefill phase (uncached suffixes only) ----
+    // DRAM-tier session hits stream their prefix KV over the H2D link
+    // before the suffix prefill can run against it
+    device_s += swap_in_bytes as f64 / hw.h2d_bps;
+    // suffix tokens still attend to the full context, so the quadratic
+    // term keeps the full mean length
+    device_s += prefill_cost(hw, m, prefill_tokens, mean_len, cgs).time_s;
     device_s += launch_per_phase;
     host_s += host_launch_per_phase;
 
@@ -290,6 +324,19 @@ pub fn simulate(trace: &Trace, cfg: &DesConfig) -> DesResult {
     let weights_bytes = cfg.model.params() * cfg.model.dtype_bytes as u64;
 
     let mut kv = cfg.make_kv();
+    // session prefix cache (lengths-only mode); its HBM tier is carved
+    // out of the request-KV budget below. xGR-only: the baselines have
+    // no cross-request prefix residency to emulate, and granting them
+    // one would skew every comparison
+    let cache_on =
+        cfg.serving.session_cache && matches!(cfg.engine, EngineKind::Xgr);
+    let session_cfg = cfg.serving.session_cache_config(&cfg.hw);
+    let session_hbm_budget = if cache_on { session_cfg.hbm_bytes } else { 0 };
+    let mut session: Option<SessionCache> = if cache_on {
+        Some(SessionCache::new(session_cfg, cfg.model.kv_bytes_per_token()))
+    } else {
+        None
+    };
     let mut events: BinaryHeap<Reverse<Ev>> = BinaryHeap::new();
     for (i, r) in trace.requests.iter().enumerate() {
         events.push(Reverse(Ev {
@@ -312,7 +359,11 @@ pub fn simulate(trace: &Trace, cfg: &DesConfig) -> DesResult {
     let mut batches = 0u64;
     let mut in_flight = 0usize;
     let mut last_t = 0.0f64;
-    let mem_budget = cfg.hw.mem_bytes.saturating_sub(weights_bytes);
+    let mem_budget = cfg
+        .hw
+        .mem_bytes
+        .saturating_sub(weights_bytes)
+        .saturating_sub(session_hbm_budget);
     // the simple parent pattern used for KV accounting (fork from sorted
     // candidates): representative mix of keeps and forks
     let parents: Vec<usize> = (0..bw).map(|i| i / 2).collect();
@@ -400,11 +451,31 @@ pub fn simulate(trace: &Trace, cfg: &DesConfig) -> DesResult {
                         kv.decode_step(*h, s, &parents);
                     }
                 }
+                // session cache: prefill only each request's uncached
+                // suffix; DRAM-tier hits charge swap-in bandwidth. A
+                // full-prompt hit still prefills one token (the prompt
+                // logits must be produced), hence the l-1 clamp.
+                let mut swap_in_bytes = 0u64;
+                let prefill_lens: Vec<usize> = if let Some(sc) = session.as_mut() {
+                    req_idx
+                        .iter()
+                        .zip(&lens)
+                        .map(|(&ri, &l)| {
+                            let r = &trace.requests[ri];
+                            let look = sc.lookup(r.user_id, &r.tokens, r.prompt_len);
+                            swap_in_bytes += look.swap_in_bytes;
+                            l - look.hit_tokens.min(l - 1)
+                        })
+                        .collect()
+                } else {
+                    lens.clone()
+                };
                 // concurrent streams share CGs dynamically: a lone
                 // batch uses the whole accelerator; concurrency splits it
                 let active = (in_flight + 1).min(num_streams).max(1);
                 let cgs = (cfg.hw.num_cgs / active).max(1);
-                let timing = batch_timing(cfg, &lens, cgs);
+                let timing =
+                    batch_timing(cfg, &lens, &prefill_lens, swap_in_bytes, cgs);
                 // host work serializes across streams
                 let host_start = host_free.max($now);
                 host_free = host_start + timing.host_s;
@@ -417,8 +488,14 @@ pub fn simulate(trace: &Trace, cfg: &DesConfig) -> DesResult {
                 in_flight += 1;
                 let act = (tokens * cfg.model.d_model * 8) as u64;
                 act_bytes_live += act;
-                peak_total = peak_total
-                    .max(weights_bytes + kv.current_bytes() + act_bytes_live);
+                let session_resident =
+                    session.as_ref().map(|s| s.hbm_bytes()).unwrap_or(0);
+                peak_total = peak_total.max(
+                    weights_bytes
+                        + kv.current_bytes()
+                        + act_bytes_live
+                        + session_resident,
+                );
                 events.push(Reverse(Ev {
                     t: done,
                     kind: EvKind::BatchDone {
@@ -497,6 +574,11 @@ pub fn simulate(trace: &Trace, cfg: &DesConfig) -> DesResult {
                     }
                     completed += 1;
                     kv.free(h);
+                    // publish the grown prefix (unpins the cache entry)
+                    if let Some(sc) = session.as_mut() {
+                        let r = &trace.requests[ri];
+                        sc.publish(r.user_id, &r.tokens, r.prompt_len);
+                    }
                 }
                 act_bytes_live = act_bytes_live.saturating_sub(act_bytes);
                 try_dispatch!(now);
@@ -504,6 +586,7 @@ pub fn simulate(trace: &Trace, cfg: &DesConfig) -> DesResult {
         }
     }
 
+    let sess = session.as_ref();
     DesResult {
         latency,
         completed,
@@ -516,6 +599,13 @@ pub fn simulate(trace: &Trace, cfg: &DesConfig) -> DesResult {
         host_busy_s: host_busy,
         device_busy_s: device_busy,
         batches,
+        session_hits: sess.map(|s| s.stats.hits).unwrap_or(0),
+        session_misses: sess.map(|s| s.stats.misses).unwrap_or(0),
+        session_swap_ins: sess.map(|s| s.stats.swap_ins).unwrap_or(0),
+        session_evictions: sess.map(|s| s.evictions()).unwrap_or(0),
+        prefill_tokens_saved: sess.map(|s| s.stats.tokens_saved).unwrap_or(0),
+        session_peak_hbm_bytes: sess.map(|s| s.hbm_peak()).unwrap_or(0),
+        session_peak_dram_bytes: sess.map(|s| s.dram_peak()).unwrap_or(0),
     }
 }
 
@@ -634,6 +724,70 @@ mod tests {
         assert_eq!(a.completed, b.completed);
         assert_eq!(a.latency.p99(), b.latency.p99());
         assert_eq!(a.peak_total_bytes, b.peak_total_bytes);
+    }
+
+    #[test]
+    fn session_cache_strictly_cuts_latency_on_revisit_traffic() {
+        // the ISSUE-1 acceptance bar: at revisit_rate = 0.6, session-cache-
+        // enabled xGR strictly reduces mean AND p99 latency (prefill
+        // savings outweigh swap-in cost), with identical completion counts
+        let t = AmazonLike::default()
+            .with_revisit(0.6)
+            .generate_lengths(500, 200.0, 42);
+        let off = simulate(&t, &cfg(EngineKind::Xgr, 128));
+        let mut c_on = cfg(EngineKind::Xgr, 128);
+        c_on.serving.session_cache = true;
+        let on = simulate(&t, &c_on);
+        assert_eq!(on.completed, off.completed);
+        assert_eq!(on.rejected, 0);
+        assert!(on.session_hits > 0, "revisit trace must produce hits");
+        assert!(on.prefill_tokens_saved > 0);
+        assert!(on.session_hit_rate() > 0.3, "rate {}", on.session_hit_rate());
+        assert!(
+            on.mean_ms() < off.mean_ms(),
+            "mean: on {} vs off {}",
+            on.mean_ms(),
+            off.mean_ms()
+        );
+        assert!(
+            on.p99_ms() < off.p99_ms(),
+            "p99: on {} vs off {}",
+            on.p99_ms(),
+            off.p99_ms()
+        );
+    }
+
+    #[test]
+    fn session_cache_spills_under_tiny_hbm_budget() {
+        let t = AmazonLike::default()
+            .with_revisit(0.8)
+            .generate_lengths(400, 100.0, 7);
+        let mut c = cfg(EngineKind::Xgr, 128);
+        c.serving.session_cache = true;
+        // ~20 prompts' worth of HBM tier, larger DRAM spill pool
+        let bpt = c.model.kv_bytes_per_token();
+        c.serving.session_hbm_bytes = 2_000 * bpt;
+        c.serving.session_dram_bytes = 40_000 * bpt;
+        let r = simulate(&t, &c);
+        assert!(r.session_evictions > 0, "pressure must demote entries");
+        assert!(r.session_swap_ins > 0, "DRAM hits must swap in");
+        assert!(r.session_peak_hbm_bytes <= 2_000 * bpt);
+        assert!(r.session_peak_dram_bytes <= 40_000 * bpt);
+        assert_eq!(r.completed, 400);
+    }
+
+    #[test]
+    fn session_cache_is_deterministic_and_inert_without_revisits() {
+        let t = trace(150, 80.0); // revisit_rate = 0: every user unique
+        let mut c = cfg(EngineKind::Xgr, 128);
+        c.serving.session_cache = true;
+        let a = simulate(&t, &c);
+        let b = simulate(&t, &c);
+        assert_eq!(a.latency.p99(), b.latency.p99());
+        assert_eq!(a.session_hits, b.session_hits);
+        // 150 users drawn from 2^20: at most a stray birthday collision
+        assert!(a.session_hits <= 2, "hits {}", a.session_hits);
+        assert!(a.session_misses > 100);
     }
 
     #[test]

@@ -21,13 +21,25 @@ pub struct AmazonLike {
     pub max_items: usize,
     pub min_items: usize,
     pub n_users: u64,
+    /// probability a request is a *revisit*: a previously seen user
+    /// returns with their old history extended by a few new items (the
+    /// multi-turn session structure the session cache exploits). 0 = every
+    /// request is a fresh user (the pre-session behavior).
+    pub revisit_rate: f64,
 }
 
 impl Default for AmazonLike {
     fn default() -> Self {
         // median ~20 items, p99 ~300 items — matches the published
         // Amazon-Review per-user interaction statistics shape
-        AmazonLike { mu: 3.0, sigma: 1.2, max_items: 340, min_items: 2, n_users: 1 << 20 }
+        AmazonLike {
+            mu: 3.0,
+            sigma: 1.2,
+            max_items: 340,
+            min_items: 2,
+            n_users: 1 << 20,
+            revisit_rate: 0.0,
+        }
     }
 }
 
@@ -37,6 +49,12 @@ impl AmazonLike {
         AmazonLike { max_items: (seq / 3).max(2), ..Default::default() }
     }
 
+    /// Enable multi-turn sessions at the given revisit probability.
+    pub fn with_revisit(mut self, rate: f64) -> Self {
+        self.revisit_rate = rate.clamp(0.0, 1.0);
+        self
+    }
+
     /// Sample one user's history length in items.
     pub fn sample_history_items(&self, rng: &mut Pcg) -> usize {
         let x = rng.lognormal(self.mu, self.sigma);
@@ -44,7 +62,10 @@ impl AmazonLike {
     }
 
     /// Generate a full trace: `n` requests at mean `rps`, prompts drawn
-    /// from the catalog by popularity.
+    /// from the catalog by popularity. With `revisit_rate > 0`, a request
+    /// may instead be a returning user whose new prompt is their previous
+    /// prompt extended by 1–3 fresh items (a strict token-prefix
+    /// extension — what the session cache's fast path matches).
     pub fn generate(
         &self,
         catalog: &Catalog,
@@ -54,21 +75,47 @@ impl AmazonLike {
     ) -> Trace {
         let mut rng = Pcg::new(seed);
         let times = poisson_arrivals(&mut rng, n, rps);
+        let mut sessions: Vec<(u64, Vec<u32>)> = Vec::new();
         let requests = times
             .into_iter()
             .enumerate()
             .map(|(i, arrival_ns)| {
-                let items = self.sample_history_items(&mut rng);
-                let mut tokens = Vec::with_capacity(items * 3);
-                for _ in 0..items {
-                    tokens.extend_from_slice(&catalog.sample_item(&mut rng));
-                }
-                Request {
-                    id: i as u64,
-                    arrival_ns,
-                    prompt_len: tokens.len(),
-                    tokens,
-                    user_id: rng.below(self.n_users),
+                let revisit = self.revisit_rate > 0.0
+                    && !sessions.is_empty()
+                    && rng.f64() < self.revisit_rate;
+                if revisit {
+                    let si = rng.below(sessions.len() as u64) as usize;
+                    let new_items = 1 + rng.below(3) as usize;
+                    let (user_id, history) = &mut sessions[si];
+                    for _ in 0..new_items {
+                        if history.len() + 3 <= self.max_items * 3 {
+                            history.extend_from_slice(&catalog.sample_item(&mut rng));
+                        }
+                    }
+                    Request {
+                        id: i as u64,
+                        arrival_ns,
+                        prompt_len: history.len(),
+                        tokens: history.clone(),
+                        user_id: *user_id,
+                    }
+                } else {
+                    let items = self.sample_history_items(&mut rng);
+                    let mut tokens = Vec::with_capacity(items * 3);
+                    for _ in 0..items {
+                        tokens.extend_from_slice(&catalog.sample_item(&mut rng));
+                    }
+                    let user_id = rng.below(self.n_users);
+                    if self.revisit_rate > 0.0 {
+                        sessions.push((user_id, tokens.clone()));
+                    }
+                    Request {
+                        id: i as u64,
+                        arrival_ns,
+                        prompt_len: tokens.len(),
+                        tokens,
+                        user_id,
+                    }
                 }
             })
             .collect();
@@ -76,21 +123,45 @@ impl AmazonLike {
     }
 
     /// Lengths-only variant for the simulator (no token materialization —
-    /// large RPS sweeps don't need concrete tokens).
+    /// large RPS sweeps don't need concrete tokens). Revisits grow the
+    /// user's history length monotonically, matching the prefix index's
+    /// assumed-extension mode.
     pub fn generate_lengths(&self, n: usize, rps: f64, seed: u64) -> Trace {
         let mut rng = Pcg::new(seed);
         let times = poisson_arrivals(&mut rng, n, rps);
+        let mut sessions: Vec<(u64, usize)> = Vec::new();
         let requests = times
             .into_iter()
             .enumerate()
             .map(|(i, arrival_ns)| {
-                let items = self.sample_history_items(&mut rng);
-                Request {
-                    id: i as u64,
-                    arrival_ns,
-                    prompt_len: items * 3,
-                    tokens: Vec::new(),
-                    user_id: rng.below(self.n_users),
+                let revisit = self.revisit_rate > 0.0
+                    && !sessions.is_empty()
+                    && rng.f64() < self.revisit_rate;
+                if revisit {
+                    let si = rng.below(sessions.len() as u64) as usize;
+                    let new_items = 1 + rng.below(3) as usize;
+                    let (user_id, items) = &mut sessions[si];
+                    *items = (*items + new_items).min(self.max_items);
+                    Request {
+                        id: i as u64,
+                        arrival_ns,
+                        prompt_len: *items * 3,
+                        tokens: Vec::new(),
+                        user_id: *user_id,
+                    }
+                } else {
+                    let items = self.sample_history_items(&mut rng);
+                    let user_id = rng.below(self.n_users);
+                    if self.revisit_rate > 0.0 {
+                        sessions.push((user_id, items));
+                    }
+                    Request {
+                        id: i as u64,
+                        arrival_ns,
+                        prompt_len: items * 3,
+                        tokens: Vec::new(),
+                        user_id,
+                    }
                 }
             })
             .collect();
@@ -149,5 +220,60 @@ mod tests {
         let a = g.generate(&c, 20, 10.0, 5);
         let b = g.generate(&c, 20, 10.0, 5);
         assert_eq!(a.requests, b.requests);
+    }
+
+    #[test]
+    fn revisits_are_strict_token_prefix_extensions() {
+        use std::collections::HashMap;
+        let c = Catalog::generate(64, 2000, 2);
+        let g = AmazonLike::for_seq_bucket(300).with_revisit(0.6);
+        let t = g.generate(&c, 400, 100.0, 9);
+        let mut last: HashMap<u64, Vec<u32>> = HashMap::new();
+        let mut extensions = 0usize;
+        let mut anomalies = 0usize;
+        // requests are sorted by arrival, which here matches generation
+        // order (Poisson arrivals are monotone)
+        for r in &t.requests {
+            if let Some(prev) = last.get(&r.user_id) {
+                if r.tokens.len() >= prev.len() && r.tokens[..prev.len()] == prev[..]
+                {
+                    extensions += 1;
+                } else {
+                    // only a fresh user whose random id collided with a
+                    // session user can land here
+                    anomalies += 1;
+                }
+            }
+            last.insert(r.user_id, r.tokens.clone());
+        }
+        // with rate 0.6 over 400 requests, prefix extensions must dominate
+        assert!(extensions > 150, "extensions {extensions}");
+        assert!(anomalies <= 2, "anomalies {anomalies}");
+    }
+
+    #[test]
+    fn lengths_variant_revisits_grow_monotonically() {
+        use std::collections::HashMap;
+        let g = AmazonLike::default().with_revisit(0.5);
+        let t = g.generate_lengths(500, 100.0, 3);
+        let mut last: HashMap<u64, usize> = HashMap::new();
+        let mut grows = 0usize;
+        let mut shrinks = 0usize;
+        for r in &t.requests {
+            if let Some(&prev) = last.get(&r.user_id) {
+                if r.prompt_len >= prev {
+                    grows += 1;
+                } else {
+                    shrinks += 1; // id collision with a fresh user
+                }
+            }
+            last.insert(r.user_id, r.prompt_len);
+        }
+        assert!(grows > 100, "grows {grows}");
+        assert!(shrinks <= 2, "shrinks {shrinks}");
+        // rate 0 keeps the legacy single-shot behavior
+        let t0 = AmazonLike::default().generate_lengths(100, 100.0, 3);
+        let t0b = AmazonLike::default().with_revisit(0.0).generate_lengths(100, 100.0, 3);
+        assert_eq!(t0.requests, t0b.requests);
     }
 }

@@ -20,6 +20,10 @@ pub struct JdTraceLike {
     pub max_items: usize,
     pub pattern: ArrivalPattern,
     pub n_users: u64,
+    /// probability a request is a returning user extending their session
+    /// (see [`super::AmazonLike::revisit_rate`]); e-commerce bursts are
+    /// revisit-heavy, which is exactly when the session cache pays off
+    pub revisit_rate: f64,
 }
 
 impl Default for JdTraceLike {
@@ -30,6 +34,7 @@ impl Default for JdTraceLike {
             max_items: 340,
             pattern: ArrivalPattern::Bursty { multiplier: 5.0, burst_s: 2.0, gap_s: 18.0 },
             n_users: 1 << 24,
+            revisit_rate: 0.0,
         }
     }
 }
@@ -37,6 +42,12 @@ impl Default for JdTraceLike {
 impl JdTraceLike {
     pub fn for_seq_bucket(seq: usize) -> Self {
         JdTraceLike { max_items: (seq / 3).max(4), ..Default::default() }
+    }
+
+    /// Enable multi-turn sessions at the given revisit probability.
+    pub fn with_revisit(mut self, rate: f64) -> Self {
+        self.revisit_rate = rate.clamp(0.0, 1.0);
+        self
     }
 
     /// Pareto(alpha) truncated to [min_items, max_items].
@@ -49,21 +60,47 @@ impl JdTraceLike {
     pub fn generate(&self, catalog: &Catalog, n: usize, rps: f64, seed: u64) -> Trace {
         let mut rng = Pcg::new(seed);
         let times = arrivals(&mut rng, n, rps, self.pattern);
+        let mut sessions: Vec<(u64, Vec<u32>)> = Vec::new();
         let requests = times
             .into_iter()
             .enumerate()
             .map(|(i, arrival_ns)| {
-                let items = self.sample_history_items(&mut rng);
-                let mut tokens = Vec::with_capacity(items * 3);
-                for _ in 0..items {
-                    tokens.extend_from_slice(&catalog.sample_item(&mut rng));
-                }
-                Request {
-                    id: i as u64,
-                    arrival_ns,
-                    prompt_len: tokens.len(),
-                    tokens,
-                    user_id: rng.below(self.n_users),
+                let revisit = self.revisit_rate > 0.0
+                    && !sessions.is_empty()
+                    && rng.f64() < self.revisit_rate;
+                if revisit {
+                    let si = rng.below(sessions.len() as u64) as usize;
+                    let new_items = 1 + rng.below(3) as usize;
+                    let (user_id, history) = &mut sessions[si];
+                    for _ in 0..new_items {
+                        if history.len() + 3 <= self.max_items * 3 {
+                            history.extend_from_slice(&catalog.sample_item(&mut rng));
+                        }
+                    }
+                    Request {
+                        id: i as u64,
+                        arrival_ns,
+                        prompt_len: history.len(),
+                        tokens: history.clone(),
+                        user_id: *user_id,
+                    }
+                } else {
+                    let items = self.sample_history_items(&mut rng);
+                    let mut tokens = Vec::with_capacity(items * 3);
+                    for _ in 0..items {
+                        tokens.extend_from_slice(&catalog.sample_item(&mut rng));
+                    }
+                    let user_id = rng.below(self.n_users);
+                    if self.revisit_rate > 0.0 {
+                        sessions.push((user_id, tokens.clone()));
+                    }
+                    Request {
+                        id: i as u64,
+                        arrival_ns,
+                        prompt_len: tokens.len(),
+                        tokens,
+                        user_id,
+                    }
                 }
             })
             .collect();
@@ -74,17 +111,39 @@ impl JdTraceLike {
     pub fn generate_lengths(&self, n: usize, rps: f64, seed: u64) -> Trace {
         let mut rng = Pcg::new(seed);
         let times = arrivals(&mut rng, n, rps, self.pattern);
+        let mut sessions: Vec<(u64, usize)> = Vec::new();
         let requests = times
             .into_iter()
             .enumerate()
             .map(|(i, arrival_ns)| {
-                let items = self.sample_history_items(&mut rng);
-                Request {
-                    id: i as u64,
-                    arrival_ns,
-                    prompt_len: items * 3,
-                    tokens: Vec::new(),
-                    user_id: rng.below(self.n_users),
+                let revisit = self.revisit_rate > 0.0
+                    && !sessions.is_empty()
+                    && rng.f64() < self.revisit_rate;
+                if revisit {
+                    let si = rng.below(sessions.len() as u64) as usize;
+                    let new_items = 1 + rng.below(3) as usize;
+                    let (user_id, items) = &mut sessions[si];
+                    *items = (*items + new_items).min(self.max_items);
+                    Request {
+                        id: i as u64,
+                        arrival_ns,
+                        prompt_len: *items * 3,
+                        tokens: Vec::new(),
+                        user_id: *user_id,
+                    }
+                } else {
+                    let items = self.sample_history_items(&mut rng);
+                    let user_id = rng.below(self.n_users);
+                    if self.revisit_rate > 0.0 {
+                        sessions.push((user_id, items));
+                    }
+                    Request {
+                        id: i as u64,
+                        arrival_ns,
+                        prompt_len: items * 3,
+                        tokens: Vec::new(),
+                        user_id,
+                    }
                 }
             })
             .collect();
@@ -138,6 +197,34 @@ mod tests {
             / counts.len() as f64;
         // Poisson would have var ≈ mean; bursty must be clearly over
         assert!(var > 2.0 * mean, "var {var} mean {mean}");
+    }
+
+    #[test]
+    fn revisit_sessions_extend_prompts() {
+        use std::collections::HashMap;
+        let c = Catalog::generate(64, 1000, 8);
+        let g = JdTraceLike::for_seq_bucket(240).with_revisit(0.5);
+        let t = g.generate(&c, 300, 100.0, 13);
+        let mut last: HashMap<u64, Vec<u32>> = HashMap::new();
+        let mut extensions = 0usize;
+        let mut anomalies = 0usize;
+        for r in &t.requests {
+            if let Some(prev) = last.get(&r.user_id) {
+                if r.tokens.len() >= prev.len() && r.tokens[..prev.len()] == prev[..]
+                {
+                    extensions += 1;
+                } else {
+                    anomalies += 1; // random-id collision with a fresh user
+                }
+            }
+            last.insert(r.user_id, r.tokens.clone());
+        }
+        assert!(extensions > 80, "extensions {extensions}");
+        assert!(anomalies <= 2, "anomalies {anomalies}");
+        // rate 0 reproduces the legacy trace exactly
+        let a = JdTraceLike::default().generate_lengths(50, 50.0, 4);
+        let b = JdTraceLike::default().with_revisit(0.0).generate_lengths(50, 50.0, 4);
+        assert_eq!(a.requests, b.requests);
     }
 
     #[test]

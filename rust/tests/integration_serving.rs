@@ -57,6 +57,7 @@ fn sustained_load_completes_with_valid_items() {
                 id: r.id,
                 tokens: r.tokens.clone(),
                 arrival_ns: now_ns(),
+                user_id: r.user_id,
             })
             .unwrap();
     }
@@ -90,7 +91,12 @@ fn results_identical_across_stream_counts() {
                 (0..n).map(|_| rng.below(128) as u32).collect();
             reqs.push(tokens.clone());
             coord
-                .submit_blocking(RecRequest { id, tokens, arrival_ns: now_ns() })
+                .submit_blocking(RecRequest {
+                    id,
+                    tokens,
+                    arrival_ns: now_ns(),
+                    user_id: id,
+                })
                 .unwrap();
         }
         let mut out = vec![Vec::new(); 20];
@@ -118,6 +124,7 @@ fn naive_and_xbeam_engines_agree_under_load() {
                     id,
                     tokens: vec![3, 1 + (id as u32 % 100), 4, 7],
                     arrival_ns: now_ns(),
+                    user_id: id,
                 })
                 .unwrap();
         }
@@ -145,6 +152,7 @@ fn bursty_jd_traffic_survives() {
             id: r.id,
             tokens: r.tokens.clone(),
             arrival_ns: now_ns(),
+            user_id: r.user_id,
         }) {
             Ok(()) => submitted += 1,
             Err(_) => rejected += 1,
@@ -171,6 +179,7 @@ fn slo_accounting_reflects_latency() {
                 id,
                 tokens: vec![1, 2, 3],
                 arrival_ns: now_ns(),
+                user_id: id,
             })
             .unwrap();
     }
