@@ -48,6 +48,17 @@ fn main() -> xgr::Result<()> {
     // 3. start the three-tier coordinator (2 streams)
     let mut serving = ServingConfig::default();
     serving.num_streams = 2;
+    // session cache + affinity routing: a returning user lands on the
+    // stream that holds their cached prefix KV…
+    serving.session_cache = true;
+    // …but affinity is a preference with a bounded price, not an
+    // invariant: once a user's affine queue holds `affinity_spill_depth`
+    // batches AND a formed batch has stalled `affinity_stall_us`, it
+    // spills to the least-loaded live stream (affinity_spill_depth = 0
+    // would make affinity absolute). A stream whose worker dies triggers
+    // affinity *repair*: its users are re-pinned to surviving streams.
+    serving.affinity_spill_depth = 2;
+    serving.affinity_stall_us = 20_000;
     let coord =
         Coordinator::start(&serving, EngineConfig::default(), trie.clone(), factory)?;
 

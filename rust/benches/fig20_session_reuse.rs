@@ -1,18 +1,27 @@
 //! Fig 20 — session-aware prefix KV cache under revisit traffic
 //! (OneRec-0.1B, Amazon-Review-like dataset, fixed RPS).
 //!
-//! Sweeps the workload's `revisit_rate` ∈ {0, 0.3, 0.6, 0.9} and serves
-//! each trace through the DES twice: xGR as-is and xGR with the session
-//! cache enabled. Reported per row: mean/p99 latency, prefill tokens
-//! saved, session hit rate, swap-ins (DRAM-tier hits) and the peak HBM
-//! tier occupancy. Expected shape: at revisit 0 the cache is inert
-//! (identical latency, zero hits); as the revisit rate grows, the
-//! cache-enabled run's prefill shrinks to the uncached suffixes and both
-//! mean and p99 drop strictly below the cache-off run — prefill savings
-//! dominate the swap-in cost.
+//! Table 1 sweeps the workload's `revisit_rate` ∈ {0, 0.3, 0.6, 0.9} and
+//! serves each trace through the DES twice: xGR as-is and xGR with the
+//! session cache enabled (routing-independent single-cache model, so the
+//! cache effect is isolated from placement). Expected shape: at revisit
+//! 0 the cache is inert; as the revisit rate grows, the cache-enabled
+//! run's prefill shrinks to the uncached suffixes and both mean and p99
+//! drop strictly below the cache-off run.
+//!
+//! Table 2 is the **affinity-vs-throughput frontier** (ISSUE 2): a
+//! Zipf-skewed revisit workload concentrates most revisits on a handful
+//! of users, so their affine streams run hot. Routing policies compared
+//! at the same offered load: pure least-loaded (affinity off, shared
+//! cache), absolute affinity (spill disabled), and bounded spill at
+//! several depths. Expected shape: absolute affinity maximizes
+//! `session_hit_rate` but loses throughput to the hot stream's backlog;
+//! least-loaded maximizes throughput; spill-enabled routing lands within
+//! a few percent of least-loaded throughput while retaining most of the
+//! no-spill hit rate — affinity as a preference with a bounded price.
 
 use xgr::config::{HardwareProfile, ModelSpec, ServingConfig};
-use xgr::metrics::{Row, Table};
+use xgr::metrics::{affinity_spill_rate, Row, Table};
 use xgr::simulator::{calibrate, simulate, DesConfig, EngineKind};
 use xgr::workload::AmazonLike;
 
@@ -37,6 +46,8 @@ fn main() {
             serving.beam_width = bw;
             serving.top_k = bw;
             serving.session_cache = cache_on;
+            // single shared cache: isolate the cache effect from routing
+            serving.session_affinity = false;
             let cfg = DesConfig {
                 hw: hw.clone(),
                 model: model.clone(),
@@ -64,6 +75,67 @@ fn main() {
     table.emit();
     println!(
         "shape: cache-on strictly beats cache-off once revisit_rate > 0; \
-         savings grow with the revisit rate (MTServe-style hierarchical reuse)."
+         savings grow with the revisit rate (MTServe-style hierarchical reuse).\n"
+    );
+
+    // ---- Table 2: affinity-vs-throughput frontier under Zipf skew ----
+    let skew = 6.0;
+    let revisit = 0.7;
+    let frontier_rps = 600.0;
+    let trace = AmazonLike::for_seq_bucket(model.seq)
+        .with_revisit(revisit)
+        .with_revisit_skew(skew)
+        .generate_lengths(n, frontier_rps, 42);
+    let mut frontier = Table::new(format!(
+        "fig20b: affinity spill frontier — zipf skew={skew} revisit={revisit} \
+         @ {frontier_rps:.0} rps, {} streams",
+        ServingConfig::default().num_streams
+    ));
+    // NOTE: the least-loaded row models ONE shared cache (routing cannot
+    // affect placement), so its hit rate is an optimistic upper bound —
+    // real per-engine caches under scattered routing would hit far less.
+    // Its throughput is the fair comparison target; its hit rate is not.
+    for (label, affinity, depth) in [
+        ("least-loaded (shared cache)", false, 0usize),
+        ("affinity no-spill", true, 0),
+        ("affinity spill d=1", true, 1),
+        ("affinity spill d=2", true, 2),
+        ("affinity spill d=4", true, 4),
+    ] {
+        let mut serving = ServingConfig::default();
+        serving.beam_width = bw;
+        serving.top_k = bw;
+        serving.session_cache = true;
+        serving.session_affinity = affinity;
+        serving.affinity_spill_depth = depth;
+        serving.affinity_stall_us = 2_000;
+        // small batches give the spill depth queue-slot granularity
+        serving.max_batch_requests = 8;
+        let cfg = DesConfig {
+            hw: hw.clone(),
+            model: model.clone(),
+            serving,
+            engine: EngineKind::Xgr,
+            host,
+        };
+        let r = simulate(&trace, &cfg);
+        frontier.push(
+            Row::new(label)
+                .col("thru_rps", r.throughput_rps())
+                .col("mean_ms", r.mean_ms())
+                .col("p99_ms", r.p99_ms())
+                .col("session_hit_rate", r.session_hit_rate())
+                .col("prefill_saved_tok", r.prefill_tokens_saved as f64)
+                .col("affinity_spills", r.affinity_spills as f64)
+                .col("affinity_repairs", r.affinity_repairs as f64)
+                .col("spill_rate", affinity_spill_rate(r.affinity_spills, r.completed)),
+        );
+    }
+    frontier.emit();
+    println!(
+        "shape: no-spill affinity tops session_hit_rate but cedes throughput \
+         to the hot stream; spill-enabled rows recover least-loaded-level \
+         throughput (within ~10%) while retaining most (>=70%) of the \
+         no-spill hit rate — the FLAME-style bounded-price affinity."
     );
 }

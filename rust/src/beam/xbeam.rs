@@ -99,6 +99,9 @@ impl XBeam {
                 }
             }
             if !max.is_finite() || max <= -1.0e29 {
+                // fully masked beam: every valid candidate was considered
+                // and skipped (mirrors `step`'s whole-row accounting)
+                self.stats.candidates_skipped += valid.len() as u64;
                 continue;
             }
             let mut sum = 0.0f32;
@@ -170,7 +173,7 @@ impl BeamSelector for XBeam {
     ) {
         assert_eq!(vocab, self.vocab, "workspace built for vocab {}", self.vocab);
         assert!(bw <= self.max_beams, "workspace built for bw {}", self.max_beams);
-        assert!(k <= self.k.max(vocab), "k too large for workspace");
+        assert!(k <= self.k, "workspace built for k {}", self.k);
         let n_beams = beam_scores.len();
         assert_eq!(logits.len(), n_beams * vocab);
 
@@ -187,8 +190,10 @@ impl BeamSelector for XBeam {
                 }
             }
             if !max.is_finite() || max <= -1.0e29 {
-                self.stats.candidates_skipped += k as u64;
-                continue; // fully masked beam
+                // fully masked beam: the whole vocab row was considered
+                // and skipped (counting only k here understated skip_ratio)
+                self.stats.candidates_skipped += vocab as u64;
+                continue;
             }
             let mut sum = 0.0f32;
             for &x in row {
@@ -419,6 +424,27 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn fully_masked_beam_skips_the_whole_vocab() {
+        let vocab = 32;
+        let mut xb = XBeam::new(2, 8, vocab);
+        let mut logits = vec![-1.0e30f32; 2 * vocab];
+        for t in 0..vocab {
+            logits[vocab + t] = t as f32 * 0.1; // beam 1 fully live
+        }
+        let mut out = Selection::default();
+        xb.step(&logits, vocab, &[0.0, 0.0], 8, 2, &mut out);
+        // beam 0 is fully masked: all `vocab` of its candidates were
+        // skipped (the old accounting added only k and understated the
+        // skip ratio)
+        assert!(
+            xb.stats().candidates_skipped >= vocab as u64,
+            "skipped {} < vocab {vocab}",
+            xb.stats().candidates_skipped
+        );
+        assert_eq!(out.len(), 2, "live beam still fills the output");
     }
 
     #[test]

@@ -57,6 +57,18 @@ pub struct ServingConfig {
     pub session_dram_bytes: u64,
     /// route a returning user to the stream holding their cached prefix
     pub session_affinity: bool,
+    /// affinity spill policy: how many batches the affine stream's queue
+    /// may hold before a formed batch becomes eligible to spill to the
+    /// least-loaded live stream (the real-mode queue capacity is
+    /// `max(depth, 2)`, so small depths tighten the spill trigger
+    /// without shrinking the worker's double-buffer). 0 disables
+    /// spilling — affinity is then absolute and a hot stream can
+    /// head-of-line-block its own users.
+    pub affinity_spill_depth: usize,
+    /// affinity spill policy: how long (µs) a formed batch may stall on a
+    /// full affine queue before it spills. 0 = spill as soon as the
+    /// affine queue is full (when spilling is enabled at all).
+    pub affinity_stall_us: u64,
     pub features: Features,
 }
 
@@ -75,6 +87,8 @@ impl Default for ServingConfig {
             session_hbm_bytes: 0,
             session_dram_bytes: 0,
             session_affinity: true,
+            affinity_spill_depth: 2,
+            affinity_stall_us: 20_000,
             features: Features::all_on(),
         }
     }
@@ -100,6 +114,8 @@ impl ServingConfig {
                 "session_hbm_bytes" => c.session_hbm_bytes = v.as_f64().ok_or_else(|| anyhow!("session_hbm_bytes"))? as u64,
                 "session_dram_bytes" => c.session_dram_bytes = v.as_f64().ok_or_else(|| anyhow!("session_dram_bytes"))? as u64,
                 "session_affinity" => c.session_affinity = v.as_bool().ok_or_else(|| anyhow!("session_affinity"))?,
+                "affinity_spill_depth" => c.affinity_spill_depth = v.as_usize().ok_or_else(|| anyhow!("affinity_spill_depth"))?,
+                "affinity_stall_us" => c.affinity_stall_us = v.as_f64().ok_or_else(|| anyhow!("affinity_stall_us"))? as u64,
                 "valid_filter" => c.features.valid_filter = v.as_bool().ok_or_else(|| anyhow!("valid_filter"))?,
                 "graph_dispatch" => c.features.graph_dispatch = v.as_bool().ok_or_else(|| anyhow!("graph_dispatch"))?,
                 "multi_stream" => c.features.multi_stream = v.as_bool().ok_or_else(|| anyhow!("multi_stream"))?,
@@ -123,6 +139,12 @@ impl ServingConfig {
         }
         if self.max_batch_requests == 0 || self.max_batch_tokens == 0 {
             return Err(anyhow!("batch limits must be positive"));
+        }
+        if self.affinity_spill_depth > 1024 {
+            return Err(anyhow!("affinity_spill_depth must be <= 1024 batches"));
+        }
+        if self.affinity_stall_us > 60_000_000 {
+            return Err(anyhow!("affinity_stall_us must be <= 60s"));
         }
         Ok(())
     }
@@ -181,6 +203,28 @@ mod tests {
         let j = Json::parse(r#"{"beam_width": 0}"#).unwrap();
         assert!(ServingConfig::from_json(&j).is_err());
         let j = Json::parse(r#"{"slo_ms": -5}"#).unwrap();
+        assert!(ServingConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn affinity_spill_knobs_parse_and_validate() {
+        let j = Json::parse(
+            r#"{"affinity_spill_depth": 4, "affinity_stall_us": 500}"#,
+        )
+        .unwrap();
+        let c = ServingConfig::from_json(&j).unwrap();
+        assert_eq!(c.affinity_spill_depth, 4);
+        assert_eq!(c.affinity_stall_us, 500);
+        // 0 = disabled is valid for both knobs
+        let j = Json::parse(
+            r#"{"affinity_spill_depth": 0, "affinity_stall_us": 0}"#,
+        )
+        .unwrap();
+        assert!(ServingConfig::from_json(&j).is_ok());
+        // absurd values fail loudly
+        let j = Json::parse(r#"{"affinity_spill_depth": 99999}"#).unwrap();
+        assert!(ServingConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"affinity_stall_us": 61000000}"#).unwrap();
         assert!(ServingConfig::from_json(&j).is_err());
     }
 

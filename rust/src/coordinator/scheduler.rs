@@ -8,6 +8,31 @@
 //! **session affinity**: each user is sticky to one stream, so their
 //! revisits land on the engine that holds their cached prefix KV (one
 //! batcher per stream keeps co-routed requests batched together).
+//!
+//! Affinity is a *preference with a bounded price*, not an invariant
+//! (FLAME-style load-aware dispatch). Three mechanisms keep it from
+//! degrading into head-of-line blocking:
+//!
+//! * **Bounded spill** — the affine queue holds at most
+//!   `ServingConfig::affinity_spill_depth` batches; once it is full and a
+//!   formed batch has stalled longer than `affinity_stall_us`, the batch
+//!   is delivered to the least-loaded *live* stream instead (counted in
+//!   `Counters::affinity_spills`). The spilled users stay pinned to
+//!   their home stream — a spill pays one round of cache misses, it does
+//!   not forfeit future locality. `affinity_spill_depth = 0` disables
+//!   spilling (absolute affinity, the pre-spill behavior).
+//! * **Dead-stream repair** — when delivery finds the affine queue
+//!   closed (its worker died, e.g. executor init failed), every user
+//!   pinned to that stream is re-pinned round-robin across the surviving
+//!   streams (counted in `Counters::affinity_repairs`), and the stranded
+//!   batches are re-ingested through the healed map. Without repair each
+//!   delivery would pay a failed send plus an arbitrary re-route, and
+//!   orphaned users would miss their cache forever.
+//! * **Second-chance map eviction** — the user→stream map is bounded by
+//!   [`AFFINITY_MAP_CAP`]; at the cap, a clock sweep evicts the coldest
+//!   entries one at a time (entries touched since their last sweep get a
+//!   second chance) instead of clearing every user's stickiness at once.
+//!
 //! `Coordinator` is the process-wide serving object: `submit` requests,
 //! `recv` responses, `shutdown` to drain.
 
@@ -23,22 +48,122 @@ use crate::sessioncache::SessionCacheConfig;
 use crate::util::now_ns;
 use crate::util::pool::Channel;
 use crate::Result;
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-/// Largest user→stream affinity map before it is reset (the map is
-/// advisory: clearing only forgets stickiness, never correctness).
+/// Largest user→stream affinity map; beyond it the clock sweep evicts
+/// cold entries (the map is advisory: forgetting an entry only loses
+/// stickiness, never correctness).
 const AFFINITY_MAP_CAP: usize = 1 << 20;
 
-/// Least-loaded stream queue, round-robin tiebreak.
-fn pick_stream(queues: &[Channel<Batch>], rr: &mut usize) -> usize {
+/// Bounded user→stream map with second-chance (clock) eviction. Each
+/// entry carries a referenced bit set on every hit; the sweep clears the
+/// bit on the first pass and evicts on the second, so recently-routed
+/// users keep their stickiness while cold ones age out one at a time.
+struct AffinityMap {
+    cap: usize,
+    map: HashMap<u64, (usize, bool)>,
+    clock: VecDeque<u64>,
+}
+
+impl AffinityMap {
+    fn new(cap: usize) -> Self {
+        AffinityMap { cap: cap.max(1), map: HashMap::new(), clock: VecDeque::new() }
+    }
+
+    #[cfg(test)]
+    fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// Look up the user's stream, marking the entry recently used.
+    fn get(&mut self, user: u64) -> Option<usize> {
+        self.map.get_mut(&user).map(|e| {
+            e.1 = true;
+            e.0
+        })
+    }
+
+    /// Pin `user` to `stream`, evicting via the clock when at capacity.
+    /// The sweep is bounded (≤64 positions per eviction, then the oldest
+    /// entry is force-evicted) so a fully-referenced million-entry map
+    /// can never stall the scheduler thread for a whole clock lap.
+    fn insert(&mut self, user: u64, stream: usize) {
+        if let Some(e) = self.map.get_mut(&user) {
+            e.0 = stream;
+            e.1 = true;
+            return; // clock position already exists
+        }
+        while self.map.len() >= self.cap {
+            let mut evicted = false;
+            for _ in 0..64usize.min(self.clock.len()) {
+                let Some(u) = self.clock.pop_front() else {
+                    break;
+                };
+                match self.map.get_mut(&u) {
+                    Some(e) if e.1 => {
+                        e.1 = false;
+                        self.clock.push_back(u); // second chance
+                    }
+                    Some(_) => {
+                        self.map.remove(&u);
+                        evicted = true;
+                        break;
+                    }
+                    None => {} // stale clock slot
+                }
+            }
+            if !evicted {
+                // every scanned entry just used its second chance:
+                // force-evict the oldest rather than keep sweeping
+                match self.clock.pop_front() {
+                    Some(u) => {
+                        self.map.remove(&u);
+                    }
+                    None => break,
+                }
+            }
+        }
+        self.map.insert(user, (stream, true));
+        self.clock.push_back(user);
+    }
+
+    /// Re-pin every user mapped to `dead_stream` round-robin across the
+    /// `live` streams; returns how many users were re-pinned.
+    fn repair(&mut self, dead_stream: usize, live: &[usize]) -> u64 {
+        if live.is_empty() {
+            return 0;
+        }
+        let mut n = 0u64;
+        for e in self.map.values_mut() {
+            if e.0 == dead_stream {
+                e.0 = live[n as usize % live.len()];
+                n += 1;
+            }
+        }
+        n
+    }
+}
+
+/// Least-loaded live stream queue, round-robin tiebreak (closed queues
+/// and the `exclude`d stream are skipped — a dead worker must not
+/// attract deliveries, and a spill must not land back on the very
+/// stream it is escaping).
+fn pick_stream(
+    queues: &[Channel<Batch>],
+    rr: &mut usize,
+    exclude: Option<usize>,
+) -> usize {
     let n = queues.len();
     let mut best = *rr % n;
     let mut best_len = usize::MAX;
     for k in 0..n {
         let i = (*rr + k) % n;
+        if Some(i) == exclude || queues[i].is_closed() {
+            continue;
+        }
         let l = queues[i].len();
         if l < best_len {
             best = i;
@@ -56,17 +181,21 @@ fn pick_stream(queues: &[Channel<Batch>], rr: &mut usize) -> usize {
 enum Delivery {
     Done,
     /// The affine stream's queue is full: the caller keeps the batch and
-    /// retries on the next tick instead of head-of-line-blocking every
-    /// other stream behind one hot queue.
+    /// retries on the next tick (and may spill once the stall budget is
+    /// exhausted) instead of head-of-line-blocking every other stream
+    /// behind one hot queue.
     Stall(Batch),
+    /// The affine stream's queue is closed (its worker died): the caller
+    /// must run dead-stream affinity repair and re-route.
+    DeadAffine(Batch),
     /// Every queue is closed (all workers exited).
     AllClosed,
 }
 
-/// Deliver `b`, preferring the affine stream when given. A dead stream
-/// (closed queue — e.g. its executor failed to init) falls back to
-/// load-balanced delivery across the surviving streams, so one failed
-/// worker degrades capacity instead of wedging the coordinator.
+/// Deliver `b`, preferring the affine stream when given. With no target
+/// the batch goes to the least-loaded live stream (blocking send =
+/// admission backpressure when it is full; closed queues rotate to the
+/// next stream).
 fn deliver(
     queues: &[Channel<Batch>],
     rr: &mut usize,
@@ -81,12 +210,12 @@ fn deliver(
                 if !queues[t].is_closed() {
                     return Delivery::Stall(ret); // full, worker alive
                 }
-                b = ret; // worker dead: load-balance instead
+                return Delivery::DeadAffine(ret); // worker dead: repair
             }
         }
     }
     let n = queues.len();
-    let mut t = pick_stream(queues, rr);
+    let mut t = pick_stream(queues, rr, None);
     for _ in 0..n {
         // blocking send = admission backpressure when the target is full;
         // it only errors when that queue is closed
@@ -99,6 +228,34 @@ fn deliver(
         }
     }
     Delivery::AllClosed
+}
+
+/// Non-blocking spill: hand `b` to the least-loaded live stream other
+/// than `exclude` (the full affine queue being escaped). Err(b) when
+/// every candidate is full or closed — the caller keeps the batch
+/// pending. The scheduler thread must never block on a spill: blocking
+/// is reserved for the load-balanced path, where it implements
+/// admission backpressure; here it would stall every other batcher
+/// behind one hot peer queue.
+fn try_spill(
+    queues: &[Channel<Batch>],
+    rr: &mut usize,
+    exclude: usize,
+    b: Batch,
+) -> std::result::Result<(), Batch> {
+    let n = queues.len();
+    let mut b = b;
+    let mut t = pick_stream(queues, rr, Some(exclude));
+    for _ in 0..n {
+        if t != exclude {
+            match queues[t].try_send(b) {
+                Ok(()) => return Ok(()),
+                Err(ret) => b = ret,
+            }
+        }
+        t = (t + 1) % n;
+    }
+    Err(b)
 }
 
 /// Builds one executor per worker thread (called inside the thread; the
@@ -132,9 +289,6 @@ impl Coordinator {
         let inbox: Channel<RecRequest> = Channel::bounded(serving.queue_depth);
         let responses: Channel<RecResponse> =
             Channel::bounded(serving.queue_depth.max(64));
-        // one bounded batch queue per stream (the router's targets)
-        let stream_queues: Vec<Channel<Batch>> =
-            (0..num_streams).map(|_| Channel::bounded(2)).collect();
 
         // serving-level session cache switch: give every engine a cache
         // unless the caller already configured one explicitly
@@ -146,6 +300,18 @@ impl Coordinator {
             && serving.session_affinity
             && engine_cfg.session_cache.is_some()
             && num_streams > 1;
+        let spill_depth = serving.affinity_spill_depth;
+        let spill_enabled = affinity && spill_depth > 0;
+        let stall_ns = serving.affinity_stall_us.saturating_mul(1_000);
+
+        // one bounded batch queue per stream (the router's targets). In
+        // affinity mode the spill depth sets the capacity — a full queue
+        // plus an exhausted stall budget is what triggers a spill — but
+        // never below the baseline's 2, so small depths tighten the
+        // spill trigger without removing the worker's double-buffering.
+        let qcap = if spill_enabled { spill_depth.max(2) } else { 2 };
+        let stream_queues: Vec<Channel<Batch>> =
+            (0..num_streams).map(|_| Channel::bounded(qcap)).collect();
 
         let workers = Workers::spawn(
             factory,
@@ -176,34 +342,73 @@ impl Coordinator {
             std::thread::Builder::new()
                 .name("xgr-scheduler".into())
                 .spawn(move || {
-                    let mut user_stream: HashMap<u64, usize> = HashMap::new();
+                    let mut amap = AffinityMap::new(AFFINITY_MAP_CAP);
+                    let mut dead = vec![false; num_streams];
                     let mut rr_user = 0usize; // round-robin user placement
                     let mut rr_pick = 0usize; // least-loaded tiebreak cursor
                     // one stalled-batch slot per batcher (affinity mode:
-                    // the affine queue was full on the last attempt)
+                    // the affine queue was full on the last attempt) plus
+                    // the time the stall began, for the spill budget
                     let mut pending: Vec<Option<Batch>> =
                         (0..batchers.len()).map(|_| None).collect();
+                    let mut stall_since: Vec<Option<u64>> =
+                        (0..batchers.len()).map(|_| None).collect();
+                    // route a user to their pinned stream, pinning fresh
+                    // users round-robin over the live streams
+                    macro_rules! route {
+                        ($user:expr) => {{
+                            match amap.get($user) {
+                                Some(s) => s,
+                                None => {
+                                    let mut s = rr_user % num_streams;
+                                    for _ in 0..num_streams {
+                                        if !dead[s] {
+                                            break;
+                                        }
+                                        s = (s + 1) % num_streams;
+                                    }
+                                    rr_user = s + 1;
+                                    amap.insert($user, s);
+                                    s
+                                }
+                            }
+                        }};
+                    }
                     macro_rules! ingest {
                         ($r:expr) => {{
                             let r = $r;
                             Counters::inc(&counters.requests_in);
-                            let bi = if affinity {
-                                if user_stream.len() >= AFFINITY_MAP_CAP {
-                                    user_stream.clear();
-                                }
-                                match user_stream.get(&r.user_id) {
-                                    Some(&s) => s,
-                                    None => {
-                                        let s = rr_user % num_streams;
-                                        rr_user += 1;
-                                        user_stream.insert(r.user_id, s);
-                                        s
-                                    }
-                                }
-                            } else {
-                                0
-                            };
+                            let bi = if affinity { route!(r.user_id) } else { 0 };
                             batchers[bi].push(r);
+                        }};
+                    }
+                    // dead-stream affinity repair: re-pin the dead
+                    // stream's users across the survivors, then re-ingest
+                    // the failed batch and the dead batcher's backlog
+                    // through the healed map (no request is stranded and
+                    // every user stays sticky to exactly one live stream)
+                    macro_rules! repair {
+                        ($bi:expr, $b:expr) => {{
+                            let bi: usize = $bi;
+                            let b: Batch = $b;
+                            dead[bi] = true;
+                            let live: Vec<usize> = (0..num_streams)
+                                .filter(|&s| !dead[s] && !queues[s].is_closed())
+                                .collect();
+                            let repinned = amap.repair(bi, &live);
+                            Counters::add(&counters.affinity_repairs, repinned);
+                            let mut reqs: Vec<RecRequest> = b.requests;
+                            while let Some(nb) = batchers[bi].take_batch() {
+                                reqs.extend(nb.requests);
+                            }
+                            for r in reqs {
+                                let ti = if live.is_empty() {
+                                    bi // all dead: delivery will AllClosed
+                                } else {
+                                    route!(r.user_id)
+                                };
+                                batchers[ti].push(r);
+                            }
                         }};
                     }
                     loop {
@@ -249,13 +454,58 @@ impl Coordinator {
                         }
                         // dispatch policy: budget full or quota exceeded
                         'batchers: for bi in 0..batchers.len() {
-                            let target = if affinity { Some(bi) } else { None };
-                            // retry the stalled batch before forming more
+                            let target = if affinity && !dead[bi] {
+                                Some(bi)
+                            } else {
+                                None
+                            };
+                            // retry the stalled batch before forming more;
+                            // the affine queue is always tried first (it
+                            // may have drained), and only a stall that
+                            // STILL holds past the budget spills to the
+                            // least-loaded live stream
                             if let Some(b) = pending[bi].take() {
+                                let spill = spill_enabled
+                                    && target.is_some()
+                                    && stall_since[bi].is_some_and(|t0| {
+                                        now_ns().saturating_sub(t0) >= stall_ns
+                                    });
                                 match deliver(&queues, &mut rr_pick, target, b) {
-                                    Delivery::Done => {}
+                                    Delivery::Done => {
+                                        stall_since[bi] = None;
+                                        Counters::inc(&counters.graph_dispatches);
+                                    }
+                                    Delivery::Stall(b) if spill => {
+                                        match try_spill(&queues, &mut rr_pick, bi, b)
+                                        {
+                                            Ok(()) => {
+                                                stall_since[bi] = None;
+                                                Counters::inc(
+                                                    &counters.graph_dispatches,
+                                                );
+                                                Counters::inc(
+                                                    &counters.affinity_spills,
+                                                );
+                                            }
+                                            Err(b) => {
+                                                // every peer full/closed:
+                                                // keep waiting, affinity
+                                                // intact
+                                                pending[bi] = Some(b);
+                                                continue 'batchers;
+                                            }
+                                        }
+                                    }
                                     Delivery::Stall(b) => {
+                                        if stall_since[bi].is_none() {
+                                            stall_since[bi] = Some(now_ns());
+                                        }
                                         pending[bi] = Some(b);
+                                        continue 'batchers;
+                                    }
+                                    Delivery::DeadAffine(b) => {
+                                        repair!(bi, b);
+                                        stall_since[bi] = None;
                                         continue 'batchers;
                                     }
                                     Delivery::AllClosed => {
@@ -267,12 +517,18 @@ impl Coordinator {
                                 let Some(b) = batchers[bi].take_batch() else {
                                     break;
                                 };
-                                Counters::inc(&counters.graph_dispatches);
                                 match deliver(&queues, &mut rr_pick, target, b) {
-                                    Delivery::Done => {}
+                                    Delivery::Done => {
+                                        Counters::inc(&counters.graph_dispatches)
+                                    }
                                     Delivery::Stall(b) => {
+                                        stall_since[bi] = Some(now_ns());
                                         pending[bi] = Some(b);
                                         break;
+                                    }
+                                    Delivery::DeadAffine(b) => {
+                                        repair!(bi, b);
+                                        continue 'batchers;
                                     }
                                     Delivery::AllClosed => {
                                         return;
@@ -345,7 +601,7 @@ mod tests {
     use super::*;
     use crate::config::ModelSpec;
     use crate::itemspace::Catalog;
-    use crate::runtime::MockExecutor;
+    use crate::runtime::{MockExecutor, SlotId};
 
     fn setup(streams: usize) -> (Coordinator, usize) {
         let mut spec = ModelSpec::onerec_tiny();
@@ -446,6 +702,8 @@ mod tests {
         serving.batch_wait_us = 200;
         serving.max_batch_requests = 2;
         serving.session_cache = true; // turns affinity routing on
+        serving.affinity_spill_depth = 0; // absolute affinity: this test
+                                          // asserts routing invariance
         let factory: ExecutorFactory = {
             let spec = spec.clone();
             Arc::new(move || Ok(Box::new(MockExecutor::new(spec.clone())) as _))
@@ -488,6 +746,7 @@ mod tests {
         // every revisit after the first should hit the stream-local cache
         assert!(Counters::get(&counters.session_hits) >= 6 * 3);
         assert!(Counters::get(&counters.prefill_tokens_saved) > 0);
+        assert_eq!(Counters::get(&counters.affinity_spills), 0);
     }
 
     #[test]
@@ -509,5 +768,221 @@ mod tests {
         assert_eq!(Counters::get(&c.counters.requests_done), 8);
         assert!(Counters::get(&c.counters.batches) >= 1);
         c.shutdown();
+    }
+
+    /// Delegates to the mock but pays a fixed prefill delay, so tests can
+    /// back a stream up deterministically.
+    struct SlowExecutor {
+        inner: MockExecutor,
+        delay: Duration,
+    }
+
+    impl ModelExecutor for SlowExecutor {
+        fn spec(&self) -> &ModelSpec {
+            self.inner.spec()
+        }
+
+        fn prefill(&mut self, tokens: &[u32]) -> Result<(SlotId, Vec<f32>)> {
+            std::thread::sleep(self.delay);
+            self.inner.prefill(tokens)
+        }
+
+        fn decode(
+            &mut self,
+            slot: SlotId,
+            step: usize,
+            beam_tokens: &[u32],
+            parents: &[usize],
+        ) -> Result<Vec<f32>> {
+            self.inner.decode(slot, step, beam_tokens, parents)
+        }
+
+        fn release(&mut self, slot: SlotId) {
+            self.inner.release(slot)
+        }
+
+        fn live_slots(&self) -> usize {
+            self.inner.live_slots()
+        }
+    }
+
+    #[test]
+    fn spill_diverts_batches_off_a_backed_up_stream() {
+        // one hot user bursts against slow workers: with spilling enabled
+        // (depth 1, zero stall patience) the burst must overflow the
+        // user's affine stream onto idle streams instead of serializing
+        let mut spec = ModelSpec::onerec_tiny();
+        spec.vocab = 64;
+        spec.beam_width = 4;
+        let catalog = Catalog::generate(64, 400, 2);
+        let trie = Arc::new(ItemTrie::build(&catalog));
+        let mut serving = ServingConfig::default();
+        serving.num_streams = 3;
+        serving.batch_wait_us = 200;
+        serving.max_batch_requests = 1; // one request per batch
+        serving.session_cache = true;
+        serving.affinity_spill_depth = 1;
+        serving.affinity_stall_us = 0; // spill as soon as the queue is full
+        let factory: ExecutorFactory = {
+            let spec = spec.clone();
+            Arc::new(move || {
+                Ok(Box::new(SlowExecutor {
+                    inner: MockExecutor::new(spec.clone()),
+                    delay: Duration::from_millis(5),
+                }) as _)
+            })
+        };
+        let c = Coordinator::start(
+            &serving,
+            EngineConfig::default(),
+            trie,
+            factory,
+        )
+        .unwrap();
+        for i in 0..24u64 {
+            c.submit_blocking(RecRequest {
+                id: i,
+                tokens: vec![1, 2, (i % 60) as u32],
+                arrival_ns: now_ns(),
+                user_id: 7, // everything affine to one stream
+            })
+            .unwrap();
+        }
+        let mut streams = std::collections::HashSet::new();
+        for _ in 0..24 {
+            let r = c.recv_timeout(Duration::from_secs(30)).expect("response");
+            streams.insert(r.stream);
+        }
+        let counters = c.counters.clone();
+        c.shutdown();
+        assert!(
+            Counters::get(&counters.affinity_spills) > 0,
+            "the burst must spill off the affine stream"
+        );
+        assert!(streams.len() > 1, "spilled batches must reach other streams");
+    }
+
+    #[test]
+    fn dead_stream_affinity_repair_keeps_users_sticky() {
+        // one of three workers dies at executor init: every request must
+        // still complete, the orphaned users must be re-pinned to a
+        // single surviving stream each, and their revisits must go back
+        // to hitting the (new) stream-local cache
+        let mut spec = ModelSpec::onerec_tiny();
+        spec.vocab = 64;
+        spec.beam_width = 4;
+        let catalog = Catalog::generate(64, 400, 2);
+        let trie = Arc::new(ItemTrie::build(&catalog));
+        let mut serving = ServingConfig::default();
+        serving.num_streams = 3;
+        serving.batch_wait_us = 200;
+        serving.max_batch_requests = 2;
+        serving.session_cache = true;
+        serving.affinity_spill_depth = 0; // isolate repair from spill
+        let failures = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let factory: ExecutorFactory = {
+            let spec = spec.clone();
+            let failures = failures.clone();
+            Arc::new(move || {
+                if failures.fetch_add(1, std::sync::atomic::Ordering::SeqCst) == 0 {
+                    return Err(anyhow::anyhow!("injected executor init failure"));
+                }
+                Ok(Box::new(MockExecutor::new(spec.clone())) as _)
+            })
+        };
+        let c = Coordinator::start(
+            &serving,
+            EngineConfig::default(),
+            trie,
+            factory,
+        )
+        .unwrap();
+        // let the failing worker close its queue before traffic arrives,
+        // so the test deterministically exercises the repair path (not
+        // the worker-side stranded-batch forwarding)
+        std::thread::sleep(Duration::from_millis(100));
+        for turn in 0..8u64 {
+            for user in 0..6u64 {
+                c.submit_blocking(RecRequest {
+                    id: turn * 6 + user,
+                    tokens: (0..(3 + turn as u32))
+                        .map(|t| (t * 7 + user as u32) % 60)
+                        .collect(),
+                    arrival_ns: now_ns(),
+                    user_id: user,
+                })
+                .unwrap();
+            }
+        }
+        let mut user_streams: std::collections::HashMap<
+            u64,
+            std::collections::HashSet<usize>,
+        > = Default::default();
+        for _ in 0..48 {
+            let r = c
+                .recv_timeout(Duration::from_secs(10))
+                .expect("all requests must complete despite a dead worker");
+            user_streams.entry(r.id % 6).or_default().insert(r.stream);
+        }
+        let counters = c.counters.clone();
+        c.shutdown();
+        assert!(
+            Counters::get(&counters.affinity_repairs) >= 1,
+            "orphaned users must be re-pinned"
+        );
+        for (user, streams) in &user_streams {
+            assert_eq!(
+                streams.len(),
+                1,
+                "user {user} not sticky after repair: {streams:?}"
+            );
+        }
+        // hit rate recovers: every turn after a user's first still hits
+        let hits = Counters::get(&counters.session_hits);
+        let misses = Counters::get(&counters.session_misses);
+        assert!(hits >= 6 * 5, "hit rate must recover after repair: {hits} hits");
+        assert!(crate::metrics::session_hit_rate(hits, misses) >= 0.7);
+    }
+
+    #[test]
+    fn affinity_map_second_chance_evicts_cold_entries() {
+        let mut m = AffinityMap::new(4);
+        for u in 0..4u64 {
+            m.insert(u, u as usize);
+        }
+        // touch 0: it is referenced, 1 is the coldest unreferenced...
+        // except inserts set the bit too — age everyone one sweep first
+        m.insert(4, 0); // sweep clears 0..3's bits, evicts one of them
+        assert_eq!(m.len(), 4, "cap respected");
+        m.get(2);
+        m.get(3);
+        m.insert(5, 1); // evicts an untouched entry, never 2 or 3
+        assert_eq!(m.len(), 4);
+        assert!(m.get(2).is_some(), "recently-routed user keeps stickiness");
+        assert!(m.get(3).is_some(), "recently-routed user keeps stickiness");
+        assert!(m.get(5).is_some());
+        // the map never exceeds the cap under sustained churn
+        for u in 100..200u64 {
+            m.insert(u, 0);
+        }
+        assert!(m.len() <= 4);
+    }
+
+    #[test]
+    fn affinity_map_repair_repins_only_the_dead_stream() {
+        let mut m = AffinityMap::new(16);
+        for u in 0..6u64 {
+            m.insert(u, (u % 3) as usize); // streams 0,1,2
+        }
+        let repinned = m.repair(1, &[0, 2]);
+        assert_eq!(repinned, 2, "users 1 and 4 lived on stream 1");
+        for u in 0..6u64 {
+            let s = m.get(u).unwrap();
+            assert_ne!(s, 1, "user {u} still pinned to the dead stream");
+            if u % 3 != 1 {
+                assert_eq!(s, (u % 3) as usize, "survivor {u} must not move");
+            }
+        }
+        assert_eq!(m.repair(1, &[]), 0, "no live streams: nothing to re-pin");
     }
 }

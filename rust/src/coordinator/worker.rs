@@ -31,10 +31,10 @@ impl Workers {
         responses: Channel<RecResponse>,
         counters: Arc<Counters>,
     ) -> Workers {
-        let handles = queues
-            .into_iter()
-            .enumerate()
-            .map(|(stream, queue)| {
+        let handles = (0..queues.len())
+            .map(|stream| {
+                let queue = queues[stream].clone();
+                let peers = queues.clone();
                 let factory = factory.clone();
                 let trie = trie.clone();
                 let engine_cfg = engine_cfg.clone();
@@ -52,6 +52,21 @@ impl Workers {
                                 // unblock the scheduler: a closed queue
                                 // fails sends instead of filling up
                                 queue.close();
+                                // a batch may have been delivered in the
+                                // window before the close — forward it to
+                                // a surviving stream so it is not stranded
+                                'fwd: while let Some(mut b) = queue.try_recv() {
+                                    for (j, q) in peers.iter().enumerate() {
+                                        if j == stream || q.is_closed() {
+                                            continue;
+                                        }
+                                        match q.send(b) {
+                                            Ok(()) => continue 'fwd,
+                                            Err(ret) => b = ret,
+                                        }
+                                    }
+                                    break 'fwd; // no live peer: draining
+                                }
                                 return;
                             }
                         };

@@ -5,7 +5,7 @@ pub mod hist;
 pub mod report;
 
 pub use hist::Histogram;
-pub use report::{session_hit_rate, Row, Table};
+pub use report::{affinity_spill_rate, session_hit_rate, Row, Table};
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -31,6 +31,12 @@ pub struct Counters {
     pub session_swap_ins: AtomicU64,
     /// prompt tokens whose prefill was skipped via the session cache
     pub prefill_tokens_saved: AtomicU64,
+    /// batches delivered off their affine stream by the spill policy
+    /// (affinity held too long under load, bounded price paid instead)
+    pub affinity_spills: AtomicU64,
+    /// users re-pinned to a surviving stream after their affine stream's
+    /// worker died (dead-stream affinity repair)
+    pub affinity_repairs: AtomicU64,
 }
 
 impl Counters {

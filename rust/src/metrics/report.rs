@@ -15,6 +15,17 @@ pub fn session_hit_rate(hits: u64, misses: u64) -> f64 {
     }
 }
 
+/// Spill-rate convenience for `spill_rate` columns: affinity spills per
+/// dispatched unit (batches in real mode, requests in the DES), 0 when
+/// nothing was dispatched.
+pub fn affinity_spill_rate(spills: u64, dispatched: u64) -> f64 {
+    if dispatched == 0 {
+        0.0
+    } else {
+        spills as f64 / dispatched as f64
+    }
+}
+
 /// One row: label + named numeric columns.
 #[derive(Clone, Debug)]
 pub struct Row {
@@ -173,6 +184,13 @@ mod tests {
         assert_eq!(session_hit_rate(0, 0), 0.0);
         assert_eq!(session_hit_rate(3, 1), 0.75);
         assert_eq!(session_hit_rate(0, 5), 0.0);
+    }
+
+    #[test]
+    fn spill_rate_helper() {
+        assert_eq!(affinity_spill_rate(0, 0), 0.0);
+        assert_eq!(affinity_spill_rate(1, 4), 0.25);
+        assert_eq!(affinity_spill_rate(0, 9), 0.0);
     }
 
     #[test]

@@ -20,6 +20,9 @@ pub struct ReplayReport {
     pub session_hits: u64,
     pub session_misses: u64,
     pub prefill_tokens_saved: u64,
+    /// affinity routing activity (zero with affinity or spilling off)
+    pub affinity_spills: u64,
+    pub affinity_repairs: u64,
 }
 
 impl ReplayReport {
@@ -52,6 +55,12 @@ impl ReplayReport {
                 " session_hit_rate={:.2} prefill_saved={}",
                 self.session_hit_rate(),
                 self.prefill_tokens_saved
+            ));
+        }
+        if self.affinity_spills + self.affinity_repairs > 0 {
+            s.push_str(&format!(
+                " affinity_spills={} affinity_repairs={}",
+                self.affinity_spills, self.affinity_repairs
             ));
         }
         s
@@ -136,6 +145,8 @@ pub fn replay_trace(coord: &Coordinator, trace: &Trace, speedup: f64) -> ReplayR
         session_hits: Counters::get(&coord.counters.session_hits),
         session_misses: Counters::get(&coord.counters.session_misses),
         prefill_tokens_saved: Counters::get(&coord.counters.prefill_tokens_saved),
+        affinity_spills: Counters::get(&coord.counters.affinity_spills),
+        affinity_repairs: Counters::get(&coord.counters.affinity_repairs),
     }
 }
 

@@ -8,14 +8,25 @@
 //!   `PING`                  → `PONG`
 //!   `QUIT`                  → closes the connection
 //! Errors answer `ERR <reason>`.
+//!
+//! Each connection is served by its own thread, and a single demux
+//! thread routes coordinator responses to the connection waiting on that
+//! request id — so one slow client never blocks another, and a response
+//! arriving after its request timed out is dropped for *that* waiter
+//! only instead of stealing some other connection's response.
 
-use crate::coordinator::{Coordinator, RecRequest};
+use crate::coordinator::{Coordinator, RecRequest, RecResponse};
 use crate::util::now_ns;
+use crate::util::pool::Channel;
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
+
+/// Request-id → the channel of the connection thread awaiting it.
+type Waiters = Mutex<HashMap<u64, Channel<RecResponse>>>;
 
 pub struct TcpServer {
     listener: TcpListener,
@@ -45,29 +56,74 @@ impl TcpServer {
         self.stop.clone()
     }
 
-    /// Serve connections until the stop flag is set. Connections are
-    /// handled serially per accept (each request round-trips through the
-    /// coordinator, which is itself concurrent).
+    /// Serve until the stop flag is set: one thread per accepted
+    /// connection plus a demux thread for responses. Returns after every
+    /// connection thread has exited (connections end on QUIT/EOF).
     pub fn serve(&self, coord: &Coordinator) {
-        while !self.stop.load(Ordering::Relaxed) {
-            match self.listener.accept() {
-                Ok((stream, _)) => {
-                    if let Err(e) = self.handle(stream, coord) {
-                        eprintln!("tcp: connection error: {e:#}");
+        let waiters: Waiters = Mutex::new(HashMap::new());
+        // open-connection count: the demux must keep draining while ANY
+        // connection thread is alive (not merely while someone is mid-
+        // request), or a request issued after the stop flag flips would
+        // strand its waiter
+        let active = std::sync::atomic::AtomicUsize::new(0);
+        // true while the accept loop may still produce connections; the
+        // demux must not exit before it flips, or a connection accepted
+        // in the same instant the stop flag was set would be served with
+        // no response consumer
+        let accepting = AtomicBool::new(true);
+        std::thread::scope(|s| {
+            let active = &active;
+            let accepting = &accepting;
+            // demux: the only consumer of the coordinator's response
+            // queue; exits once accepting has ended and every connection
+            // has closed
+            s.spawn(|| loop {
+                if !accepting.load(Ordering::SeqCst)
+                    && active.load(Ordering::SeqCst) == 0
+                {
+                    return;
+                }
+                if let Some(resp) = coord.recv_timeout(Duration::from_millis(50)) {
+                    // no waiter: the connection gave up (timeout) or went
+                    // away — drop this response, never block others'
+                    if let Some(ch) = waiters.lock().unwrap().remove(&resp.id) {
+                        let _ = ch.try_send(resp);
                     }
                 }
-                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                    std::thread::sleep(Duration::from_millis(5));
-                }
-                Err(e) => {
-                    eprintln!("tcp: accept error: {e}");
-                    break;
+            });
+            while !self.stop.load(Ordering::Relaxed) {
+                match self.listener.accept() {
+                    Ok((stream, _)) => {
+                        let waiters = &waiters;
+                        active.fetch_add(1, Ordering::SeqCst);
+                        s.spawn(move || {
+                            if let Err(e) = self.handle(stream, coord, waiters) {
+                                eprintln!("tcp: connection error: {e:#}");
+                            }
+                            active.fetch_sub(1, Ordering::SeqCst);
+                        });
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    Err(e) => {
+                        eprintln!("tcp: accept error: {e}");
+                        // let callers polling the flag wind down too
+                        self.stop.store(true, Ordering::Relaxed);
+                        break;
+                    }
                 }
             }
-        }
+            accepting.store(false, Ordering::SeqCst);
+        });
     }
 
-    fn handle(&self, stream: TcpStream, coord: &Coordinator) -> crate::Result<()> {
+    fn handle(
+        &self,
+        stream: TcpStream,
+        coord: &Coordinator,
+        waiters: &Waiters,
+    ) -> crate::Result<()> {
         stream.set_nonblocking(false)?;
         let mut reader = BufReader::new(stream.try_clone()?);
         let mut w = stream;
@@ -120,31 +176,33 @@ impl TcpServer {
                 continue;
             }
             let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+            // register BEFORE submitting so the demux can never see the
+            // response while no waiter exists
+            let ch: Channel<RecResponse> = Channel::bounded(1);
+            waiters.lock().unwrap().insert(id, ch.clone());
             let req = RecRequest { id, tokens, arrival_ns: now_ns(), user_id };
             if coord.submit_blocking(req).is_err() {
+                waiters.lock().unwrap().remove(&id);
                 writeln!(w, "ERR shutting down")?;
                 return Ok(());
             }
-            // serial per-connection: wait for OUR id
-            loop {
-                match coord.recv_timeout(Duration::from_secs(30)) {
-                    Some(resp) if resp.id == id => {
-                        let items: Vec<String> = resp
-                            .items
-                            .iter()
-                            .take(10)
-                            .map(|(it, s)| {
-                                format!("{}:{}:{}@{s:.3}", it[0], it[1], it[2])
-                            })
-                            .collect();
-                        writeln!(w, "OK {}", items.join(" "))?;
-                        break;
-                    }
-                    Some(_) => continue, // a different request's response
-                    None => {
-                        writeln!(w, "ERR timeout")?;
-                        break;
-                    }
+            match ch.recv_timeout(Duration::from_secs(30)) {
+                Some(resp) => {
+                    let items: Vec<String> = resp
+                        .items
+                        .iter()
+                        .take(10)
+                        .map(|(it, s)| {
+                            format!("{}:{}:{}@{s:.3}", it[0], it[1], it[2])
+                        })
+                        .collect();
+                    writeln!(w, "OK {}", items.join(" "))?;
+                }
+                None => {
+                    // deregister: a late response will be dropped by the
+                    // demux instead of leaking into this channel
+                    waiters.lock().unwrap().remove(&id);
+                    writeln!(w, "ERR timeout")?;
                 }
             }
         }
@@ -159,8 +217,7 @@ mod tests {
     use crate::itemspace::{Catalog, ItemTrie};
     use crate::runtime::MockExecutor;
 
-    #[test]
-    fn tcp_roundtrip() {
+    fn start_server() -> (String, Arc<AtomicBool>, std::thread::JoinHandle<()>) {
         let mut spec = ModelSpec::onerec_tiny();
         spec.vocab = 64;
         spec.beam_width = 4;
@@ -182,6 +239,12 @@ mod tests {
             server.serve(&coord);
             coord.shutdown();
         });
+        (addr, stop, h)
+    }
+
+    #[test]
+    fn tcp_roundtrip() {
+        let (addr, stop, h) = start_server();
 
         let mut s = TcpStream::connect(&addr).unwrap();
         let mut r = BufReader::new(s.try_clone().unwrap());
@@ -214,6 +277,48 @@ mod tests {
         writeln!(s, "QUIT").unwrap();
         stop.store(true, Ordering::Relaxed);
         drop(s);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn concurrent_connections_are_served_in_parallel() {
+        let (addr, stop, h) = start_server();
+
+        // open two connections; issue on BOTH before reading either —
+        // the old serial accept loop would deadlock-by-blocking here
+        // (the second client waited for the first to disconnect)
+        let mut a = TcpStream::connect(&addr).unwrap();
+        let mut b = TcpStream::connect(&addr).unwrap();
+        let mut ra = BufReader::new(a.try_clone().unwrap());
+        let mut rb = BufReader::new(b.try_clone().unwrap());
+        writeln!(b, "REC@2 4,5,6").unwrap();
+        writeln!(a, "REC@1 1,2,3").unwrap();
+        let mut la = String::new();
+        let mut lb = String::new();
+        // read B first: its response must arrive while A is still open
+        rb.read_line(&mut lb).unwrap();
+        assert!(lb.starts_with("OK "), "B got {lb:?}");
+        ra.read_line(&mut la).unwrap();
+        assert!(la.starts_with("OK "), "A got {la:?}");
+
+        // several rounds interleaved: responses must demux by id, never
+        // leak across connections
+        for turn in 0..4 {
+            la.clear();
+            lb.clear();
+            writeln!(a, "REC@1 1,2,3,{}", 7 + turn).unwrap();
+            writeln!(b, "REC@2 4,5,6,{}", 9 + turn).unwrap();
+            ra.read_line(&mut la).unwrap();
+            rb.read_line(&mut lb).unwrap();
+            assert!(la.starts_with("OK "), "A turn {turn} got {la:?}");
+            assert!(lb.starts_with("OK "), "B turn {turn} got {lb:?}");
+        }
+
+        writeln!(a, "QUIT").unwrap();
+        writeln!(b, "QUIT").unwrap();
+        stop.store(true, Ordering::Relaxed);
+        drop(a);
+        drop(b);
         h.join().unwrap();
     }
 }

@@ -124,6 +124,19 @@ impl PrefixIndex {
         e.len
     }
 
+    /// Shrink the stored prefix to at most `len` tokens (no-op when it is
+    /// already within `len`). Rollback path for a failed tier resize of a
+    /// pinned entry: the index must not advertise more prefix than the
+    /// tier actually holds resident.
+    pub fn truncate(&mut self, user: u64, len: usize) {
+        if let Some(e) = self.map.get_mut(&user) {
+            if e.len > len {
+                e.len = len;
+                e.tokens.truncate(len);
+            }
+        }
+    }
+
     pub fn remove(&mut self, user: u64) {
         self.map.remove(&user);
     }
@@ -181,6 +194,20 @@ mod tests {
         idx.publish(5, &[9, 9], 2);
         assert_eq!(idx.match_prefix(5, &[9, 9, 1], 3), (2, MatchKind::Extension));
         assert_eq!(idx.match_prefix(5, &[1, 2, 3], 3), (0, MatchKind::Miss));
+    }
+
+    #[test]
+    fn truncate_rolls_back_the_stored_span() {
+        let mut idx = PrefixIndex::new();
+        idx.publish(5, &[1, 2, 3, 4], 4);
+        idx.truncate(5, 2);
+        assert_eq!(idx.match_prefix(5, &[1, 2, 3, 4], 4), (2, MatchKind::Extension));
+        idx.truncate(5, 3); // growing via truncate is a no-op
+        assert_eq!(idx.match_prefix(5, &[1, 2, 3, 4], 4), (2, MatchKind::Extension));
+        // lengths-only entries truncate too
+        idx.publish(6, &[], 90);
+        idx.truncate(6, 40);
+        assert_eq!(idx.match_prefix(6, &[], 90), (40, MatchKind::Extension));
     }
 
     #[test]

@@ -171,15 +171,43 @@ impl SessionCache {
 
     /// Publish the (grown) prefix after the request completed: unpin,
     /// store the new prompt as the user's prefix, and re-admit it at its
-    /// new size (evicting LRU entries under budget pressure).
+    /// new size (evicting LRU entries under budget pressure). When the
+    /// resize fails while *another* in-flight request still pins the
+    /// entry, the old-size entry stays resident — pinned entries are
+    /// never dropped — and the index is rolled back so it never
+    /// advertises more (or different) tokens than the resident KV holds:
+    /// truncated to the resident span when the new prompt extends the
+    /// old one, dropped outright when the prompt diverged (a truncation
+    /// of the *new* tokens would alias KV computed for the old ones).
     pub fn publish(&mut self, user: u64, tokens: &[u32], prompt_len: usize) {
         self.tiers.unpin(user);
+        // how the new prompt relates to the stored prefix — captured
+        // before `index.publish` overwrites the entry, for the pinned
+        // rollback below
+        let (_, kind) = self.index.match_prefix(user, tokens, prompt_len);
         let len = self.index.publish(user, tokens, prompt_len);
         let bytes = len as u64 * self.bytes_per_token;
         let mut dropped = std::mem::take(&mut self.dropped_scratch);
         if bytes == 0 || !self.tiers.put(user, bytes, &mut dropped) {
-            self.index.remove(user);
-            self.tiers.remove(user);
+            if self.tiers.is_pinned(user) {
+                if kind == MatchKind::Extension {
+                    // the truncated new tokens reproduce the old stored
+                    // span exactly: the resident KV still matches
+                    let resident = (self.tiers.bytes_of(user)
+                        / self.bytes_per_token.max(1))
+                        as usize;
+                    self.index.truncate(user, resident);
+                } else {
+                    // divergent prompt: the resident KV belongs to the
+                    // old tokens, so the index must not advertise it;
+                    // the pinned bytes stay resident until released and
+                    // age out through the normal LRU path
+                    self.index.remove(user);
+                }
+            } else {
+                self.index.remove(user);
+                self.tiers.remove(user);
+            }
         }
         for u in dropped.drain(..) {
             self.index.remove(u);
@@ -312,6 +340,54 @@ mod tests {
         c.release(1);
         c.publish(1, &[], 95);
         assert_eq!(c.hbm_bytes(), 95 * BPT);
+    }
+
+    #[test]
+    fn overlapping_inflight_publish_failure_keeps_pinned_entry() {
+        // two in-flight requests share one user; the first one's publish
+        // grows the prefix past every budget — the entry the second
+        // request still pins must survive, with the index rolled back to
+        // the resident span
+        let mut c = cache(100, 0);
+        c.publish(1, &[], 50);
+        let a = c.lookup(1, &[], 60); // request A pins
+        assert_eq!(a.hit_tokens, 50);
+        let b = c.lookup(1, &[], 60); // request B pins
+        assert_eq!(b.hit_tokens, 50);
+        c.publish(1, &[], 120); // A completes; 120 tokens fit nowhere
+        assert_eq!(c.resident_users(), 1, "pinned entry survived");
+        let l = c.lookup(1, &[], 130);
+        assert_eq!(l.hit_tokens, 50, "index rolled back to the resident span");
+        c.release(1);
+        c.release(1); // B
+        c.publish(1, &[], 120); // last pin gone: oversized entry drops
+        assert_eq!(c.resident_users(), 0);
+        let l = c.lookup(1, &[], 130);
+        assert_eq!(l.hit_tokens, 0);
+        c.release(1);
+    }
+
+    #[test]
+    fn divergent_publish_failure_never_aliases_old_kv() {
+        // token mode: the stored prefix is [1,1,...]; a DIVERGED prompt
+        // fails its resize while another request still pins the entry.
+        // The index must not advertise the new tokens against KV that
+        // was computed for the old ones.
+        let mut c = cache(60, 0);
+        let old: Vec<u32> = vec![1; 50];
+        c.publish(7, &old, 50);
+        let a = c.lookup(7, &old, 50); // request A pins
+        assert_eq!(a.hit_tokens, 49, "full-prompt hit clamps to len-1");
+        let _b = c.lookup(7, &old, 50); // request B pins
+        // A completes with a diverged, larger prompt that fits nowhere
+        let diverged: Vec<u32> = vec![2; 90];
+        c.publish(7, &diverged, 90);
+        assert_eq!(c.resident_users(), 1, "pinned bytes stay resident");
+        // neither the old nor the new prompt may claim a hit now
+        let l = c.lookup(7, &diverged, 90);
+        assert_eq!(l.hit_tokens, 0, "diverged tokens must not alias old KV");
+        c.release(7);
+        c.release(7);
     }
 
     #[test]

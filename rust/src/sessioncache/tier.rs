@@ -154,8 +154,11 @@ impl TierManager {
     }
 
     /// Insert or resize the resident for `user` to `bytes`, preferring
-    /// HBM. Returns false when the entry fits in neither tier (it is then
-    /// no longer resident and the caller must drop its index entry too).
+    /// HBM. Returns false when the resize could not be honored: either
+    /// the entry fits in neither tier (it is then no longer resident and
+    /// the caller must drop its index entry too), or the entry is
+    /// **pinned** and could not grow in place — it then stays resident
+    /// at its old size (check `is_pinned`/`bytes_of` to distinguish).
     /// Users evicted to make room are appended to `dropped`.
     pub fn put(&mut self, user: u64, bytes: u64, dropped: &mut Vec<u64>) -> bool {
         let mut keep_pins = 0u32;
@@ -196,6 +199,14 @@ impl TierManager {
                 self.residents.get_mut(&user).unwrap().bytes = bytes;
                 self.touch(user);
                 return true;
+            }
+            if keep_pins > 0 {
+                // the entry backs an in-flight request: dropping it to
+                // re-admit at the new size could fail and violate the
+                // pinned-never-evicted contract. Refuse the resize and
+                // keep the old-size entry resident instead.
+                self.touch(user);
+                return false;
             }
             self.remove(user);
         }
@@ -364,6 +375,44 @@ mod tests {
         t.unpin(1);
         assert!(t.put(2, 60, &mut d));
         assert_eq!(drops(&mut d), vec![1]);
+    }
+
+    #[test]
+    fn pinned_entry_survives_failed_grow() {
+        let mut t = TierManager::new(100, 0);
+        let mut d = Vec::new();
+        assert!(t.put(1, 60, &mut d));
+        t.pin(1);
+        // the grown size fits in neither tier: the resize must fail WITHOUT
+        // dropping the pinned entry (regression: remove + failed re-admit
+        // used to evict an entry backing an in-flight request)
+        assert!(!t.put(1, 150, &mut d));
+        assert_eq!(t.tier_of(1), Some(Tier::Hbm), "pinned entry stays resident");
+        assert_eq!(t.bytes_of(1), 60, "old size kept");
+        assert_eq!(t.hbm_bytes(), 60, "occupancy consistent");
+        assert!(d.is_empty());
+        // once unpinned, the usual drop-and-readmit applies again
+        t.unpin(1);
+        assert!(!t.put(1, 150, &mut d), "still fits nowhere");
+        assert_eq!(t.tier_of(1), None, "unpinned entry may be dropped");
+        assert_eq!(t.hbm_bytes(), 0);
+    }
+
+    #[test]
+    fn pinned_entry_blocked_by_other_pins_keeps_old_size() {
+        let mut t = TierManager::new(100, 0);
+        let mut d = Vec::new();
+        assert!(t.put(1, 50, &mut d));
+        assert!(t.put(2, 40, &mut d));
+        t.pin(1);
+        t.pin(2);
+        // 1 wants to grow to 90 but 2 is pinned too: no room, no eviction
+        assert!(!t.put(1, 90, &mut d));
+        assert_eq!(t.bytes_of(1), 50);
+        assert_eq!(t.tier_of(2), Some(Tier::Hbm));
+        assert_eq!(t.hbm_bytes(), 90);
+        t.unpin(1);
+        t.unpin(2);
     }
 
     #[test]

@@ -25,7 +25,16 @@
 //!   between admission and prefill (lengths-only mode): hits shrink the
 //!   prefill to the uncached suffix, DRAM-tier hits additionally pay a
 //!   swap-in over the H2D link, and the HBM tier's budget is carved out
-//!   of the request-KV memory budget.
+//!   of the request-KV memory budget;
+//! * `session_affinity` (with the cache on and >1 stream) — the cache
+//!   splits into **per-stream** caches and each user is pinned to one
+//!   stream, so routing decides cache locality exactly as in real mode:
+//!   an affine dispatch can hit, a spilled dispatch looks up the serving
+//!   stream's cache and (usually) misses. A queued request spills when
+//!   its home stream's backlog exceeds `affinity_spill_depth` batches
+//!   AND it has waited at least `affinity_stall_us` — the scheduler
+//!   tier's bounded-price policy, modeled at request granularity so
+//!   cluster-scale sweeps see the affinity-vs-throughput tradeoff.
 
 use super::calibrate::HostCosts;
 use super::kernels::{
@@ -35,10 +44,10 @@ use super::kernels::{
 use crate::config::{HardwareProfile, ModelSpec, ServingConfig};
 use crate::kvcache::{KvManager, PagedKv, SeparatedKv, TreeKv};
 use crate::metrics::Histogram;
-use crate::sessioncache::SessionCache;
+use crate::sessioncache::{SessionCache, SessionCacheConfig};
 use crate::workload::Trace;
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, VecDeque};
+use std::collections::{BinaryHeap, HashMap, VecDeque};
 
 /// Which serving system the DES emulates.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -139,6 +148,13 @@ pub struct DesResult {
     pub prefill_tokens_saved: u64,
     pub session_peak_hbm_bytes: u64,
     pub session_peak_dram_bytes: u64,
+    /// requests dispatched off their affine stream by the spill policy
+    /// (zero when affinity routing is off or spilling is disabled)
+    pub affinity_spills: u64,
+    /// users re-pinned after a stream death (always zero in the DES —
+    /// streams do not die here; surfaced so reports share one schema
+    /// with the real-mode counters)
+    pub affinity_repairs: u64,
 }
 
 impl DesResult {
@@ -330,13 +346,40 @@ pub fn simulate(trace: &Trace, cfg: &DesConfig) -> DesResult {
     // one would skew every comparison
     let cache_on =
         cfg.serving.session_cache && matches!(cfg.engine, EngineKind::Xgr);
+    // affinity routing model: per-stream caches + user pinning + spill.
+    // With affinity off (or one stream) a single shared cache keeps the
+    // legacy routing-independent behavior.
+    let affinity_on = cache_on && cfg.serving.session_affinity && num_streams > 1;
+    let spill_on = affinity_on && cfg.serving.affinity_spill_depth > 0;
+    // the scheduler's depth knob counts queued *batches*; the DES queue
+    // holds requests, so one queue slot ≈ one max-size batch
+    let spill_depth_reqs = cfg
+        .serving
+        .affinity_spill_depth
+        .saturating_mul(cfg.serving.max_batch_requests.max(1));
+    let stall_s = cfg.serving.affinity_stall_us as f64 / 1e6;
     let session_cfg = cfg.serving.session_cache_config(&cfg.hw);
     let session_hbm_budget = if cache_on { session_cfg.hbm_bytes } else { 0 };
-    let mut session: Option<SessionCache> = if cache_on {
-        Some(SessionCache::new(session_cfg, cfg.model.kv_bytes_per_token()))
+    let n_caches = if affinity_on { num_streams } else { 1 };
+    let mut session: Vec<SessionCache> = if cache_on {
+        // per-stream caches split the carved-out budgets evenly: the
+        // streams share one accelerator, so the total residency is the
+        // same — only its *placement* becomes routing-dependent
+        let per = SessionCacheConfig {
+            hbm_bytes: session_cfg.hbm_bytes / n_caches as u64,
+            dram_bytes: session_cfg.dram_bytes / n_caches as u64,
+        };
+        (0..n_caches)
+            .map(|_| SessionCache::new(per.clone(), cfg.model.kv_bytes_per_token()))
+            .collect()
     } else {
-        None
+        Vec::new()
     };
+    // user → home stream (round-robin on first arrival, like the
+    // scheduler tier's affinity map)
+    let mut user_stream: HashMap<u64, usize> = HashMap::new();
+    let mut rr_user = 0usize;
+    let mut affinity_spills = 0u64;
     let mut events: BinaryHeap<Reverse<Ev>> = BinaryHeap::new();
     for (i, r) in trace.requests.iter().enumerate() {
         events.push(Reverse(Ev {
@@ -359,6 +402,11 @@ pub fn simulate(trace: &Trace, cfg: &DesConfig) -> DesResult {
     let mut batches = 0u64;
     let mut in_flight = 0usize;
     let mut last_t = 0.0f64;
+    // peak tier occupancy = running max of the INSTANTANEOUS sum across
+    // the per-stream caches (summing per-cache gauge peaks taken at
+    // different times would overstate the concurrent footprint)
+    let mut session_hbm_peak = 0u64;
+    let mut session_dram_peak = 0u64;
     let mem_budget = cfg
         .hw
         .mem_bytes
@@ -372,6 +420,183 @@ pub fn simulate(trace: &Trace, cfg: &DesConfig) -> DesResult {
 
     macro_rules! try_dispatch {
         ($now:expr) => {{
+            if affinity_on {
+                // ---- affinity routing model: each idle stream serves
+                // its own users' backlog; a stray is only stolen once
+                // its home stream is backed up past the spill budget.
+                // The batch-charging tail (admission shrink, timing,
+                // accounting) must stay in lockstep with the legacy arm
+                // below — the two arms model the SAME engine, only the
+                // routing differs. Per-event cost is O(streams × queue);
+                // queue depth is bench-scale here, bounded by the
+                // admission queue_depth. ----
+                'outer: loop {
+                    if queue.is_empty() {
+                        break;
+                    }
+                    // idle streams, least-recently-busy first
+                    let mut order: Vec<usize> = (0..num_streams)
+                        .filter(|&s| stream_free[s] <= $now)
+                        .collect();
+                    order.sort_by(|&a, &b| {
+                        stream_free[a].partial_cmp(&stream_free[b]).unwrap()
+                    });
+                    // per-stream affine backlogs (the spill-policy input)
+                    let mut backlog = vec![0usize; num_streams];
+                    for &ri in queue.iter() {
+                        backlog[user_stream[&trace.requests[ri].user_id]] += 1;
+                    }
+                    for &si in &order {
+                        // select this stream's affine requests — plus
+                        // spill-eligible strays whose home stream is
+                        // backed up past the depth AND stall budgets —
+                        // oldest first, within the batch budgets
+                        let mut sel_pos: Vec<usize> = Vec::new();
+                        let mut tokens = 0usize;
+                        for (pos, &ri) in queue.iter().enumerate() {
+                            let r = &trace.requests[ri];
+                            let home = user_stream[&r.user_id];
+                            let eligible = home == si
+                                || (spill_on
+                                    && backlog[home] >= spill_depth_reqs
+                                    && $now - r.arrival_ns as f64 / 1e9
+                                        >= stall_s);
+                            if !eligible {
+                                continue;
+                            }
+                            let l = r.prompt_len.max(1);
+                            if sel_pos.len() + 1 > cfg.serving.max_batch_requests
+                                || tokens + l > cfg.serving.max_batch_tokens
+                            {
+                                break;
+                            }
+                            tokens += l;
+                            sel_pos.push(pos);
+                        }
+                        if sel_pos.is_empty() {
+                            continue;
+                        }
+                        let oldest_t = trace.requests[queue[sel_pos[0]]]
+                            .arrival_ns as f64
+                            / 1e9;
+                        let budget_full = sel_pos.len()
+                            >= cfg.serving.max_batch_requests
+                            || tokens as f64
+                                >= 0.95 * cfg.serving.max_batch_tokens as f64;
+                        let quota_hit = $now - oldest_t >= quota_s;
+                        if !budget_full && !quota_hit {
+                            continue;
+                        }
+                        // memory admission: shrink to the prefix that
+                        // fits (affinity_on implies the xGR engine — no
+                        // paged tail-block term)
+                        let mut fit = 0usize;
+                        let mut need = 0u64;
+                        for &pos in &sel_pos {
+                            let l = trace.requests[queue[pos]].prompt_len.max(1);
+                            let r_need = (l + bw * nd) as u64
+                                * cfg.model.kv_bytes_per_token();
+                            if kv.current_bytes() + need + r_need > mem_budget {
+                                break;
+                            }
+                            need += r_need;
+                            fit += 1;
+                        }
+                        if fit == 0 {
+                            continue;
+                        }
+                        sel_pos.truncate(fit);
+                        let req_idx: Vec<usize> =
+                            sel_pos.iter().map(|&p| queue[p]).collect();
+                        for &p in sel_pos.iter().rev() {
+                            queue.remove(p);
+                        }
+                        let lens: Vec<usize> = req_idx
+                            .iter()
+                            .map(|&ri| trace.requests[ri].prompt_len.max(1))
+                            .collect();
+                        let total_tokens: usize = lens.iter().sum();
+                        let mut handles = Vec::with_capacity(req_idx.len());
+                        for &l in &lens {
+                            handles.push(kv.alloc(l, bw, nd));
+                        }
+                        for s in 0..nd {
+                            for h in &handles {
+                                kv.decode_step(*h, s, &parents);
+                            }
+                        }
+                        // per-stream cache: affine requests can hit their
+                        // home cache; spilled strays consult the serving
+                        // stream's cache and pay the (likely) miss
+                        affinity_spills += req_idx
+                            .iter()
+                            .filter(|&&ri| {
+                                user_stream[&trace.requests[ri].user_id] != si
+                            })
+                            .count() as u64;
+                        let mut swap_in_bytes = 0u64;
+                        let prefill_lens: Vec<usize> = {
+                            let sc = &mut session[si];
+                            req_idx
+                                .iter()
+                                .zip(&lens)
+                                .map(|(&ri, &l)| {
+                                    let r = &trace.requests[ri];
+                                    let look = sc.lookup(
+                                        r.user_id,
+                                        &r.tokens,
+                                        r.prompt_len,
+                                    );
+                                    swap_in_bytes += look.swap_in_bytes;
+                                    l - look.hit_tokens.min(l - 1)
+                                })
+                                .collect()
+                        };
+                        let active = (in_flight + 1).min(num_streams).max(1);
+                        let cgs = (cfg.hw.num_cgs / active).max(1);
+                        let timing = batch_timing(
+                            cfg,
+                            &lens,
+                            &prefill_lens,
+                            swap_in_bytes,
+                            cgs,
+                        );
+                        let host_start = host_free.max($now);
+                        host_free = host_start + timing.host_s;
+                        host_busy += timing.host_s;
+                        let start = stream_free[si].max(host_start);
+                        let done = start + timing.device_s;
+                        device_busy += timing.device_s;
+                        stream_free[si] = done;
+                        batches += 1;
+                        in_flight += 1;
+                        let act = (total_tokens * cfg.model.d_model * 8) as u64;
+                        act_bytes_live += act;
+                        let session_resident: u64 =
+                            session.iter().map(|s| s.hbm_bytes()).sum();
+                        session_hbm_peak = session_hbm_peak.max(session_resident);
+                        session_dram_peak = session_dram_peak
+                            .max(session.iter().map(|s| s.dram_bytes()).sum());
+                        peak_total = peak_total.max(
+                            weights_bytes
+                                + kv.current_bytes()
+                                + act_bytes_live
+                                + session_resident,
+                        );
+                        events.push(Reverse(Ev {
+                            t: done,
+                            kind: EvKind::BatchDone {
+                                stream: si,
+                                req_idx,
+                                kv: handles,
+                                act_bytes: act,
+                            },
+                        }));
+                        continue 'outer; // state changed: rescan streams
+                    }
+                    break; // no idle stream could form a batch now
+                }
+            } else {
             loop {
                 if queue.is_empty() {
                     break;
@@ -442,6 +667,9 @@ pub fn simulate(trace: &Trace, cfg: &DesConfig) -> DesResult {
                     .iter()
                     .map(|&ri| trace.requests[ri].prompt_len.max(1))
                     .collect();
+                // activation accounting uses the post-shrink batch (in
+                // lockstep with the affinity arm above)
+                let total_tokens: usize = lens.iter().sum();
                 let mut handles = Vec::with_capacity(count);
                 for &l in &lens {
                     handles.push(kv.alloc(l, bw, nd));
@@ -456,7 +684,7 @@ pub fn simulate(trace: &Trace, cfg: &DesConfig) -> DesResult {
                 // full-prompt hit still prefills one token (the prompt
                 // logits must be produced), hence the l-1 clamp.
                 let mut swap_in_bytes = 0u64;
-                let prefill_lens: Vec<usize> = if let Some(sc) = session.as_mut() {
+                let prefill_lens: Vec<usize> = if let Some(sc) = session.first_mut() {
                     req_idx
                         .iter()
                         .zip(&lens)
@@ -486,10 +714,13 @@ pub fn simulate(trace: &Trace, cfg: &DesConfig) -> DesResult {
                 stream_free[si] = done;
                 batches += 1;
                 in_flight += 1;
-                let act = (tokens * cfg.model.d_model * 8) as u64;
+                let act = (total_tokens * cfg.model.d_model * 8) as u64;
                 act_bytes_live += act;
-                let session_resident =
-                    session.as_ref().map(|s| s.hbm_bytes()).unwrap_or(0);
+                let session_resident: u64 =
+                    session.iter().map(|s| s.hbm_bytes()).sum();
+                session_hbm_peak = session_hbm_peak.max(session_resident);
+                session_dram_peak = session_dram_peak
+                    .max(session.iter().map(|s| s.dram_bytes()).sum());
                 peak_total = peak_total.max(
                     weights_bytes
                         + kv.current_bytes()
@@ -505,6 +736,7 @@ pub fn simulate(trace: &Trace, cfg: &DesConfig) -> DesResult {
                         act_bytes: act,
                     },
                 }));
+            }
             }
         }};
     }
@@ -523,6 +755,17 @@ pub fn simulate(trace: &Trace, cfg: &DesConfig) -> DesResult {
                 if queue.len() >= cfg.serving.queue_depth {
                     rejected += 1;
                 } else {
+                    if affinity_on {
+                        // pin fresh users to their home stream on arrival
+                        // (round-robin, like the scheduler affinity map)
+                        user_stream
+                            .entry(trace.requests[i].user_id)
+                            .or_insert_with(|| {
+                                let s = rr_user % num_streams;
+                                rr_user += 1;
+                                s
+                            });
+                    }
                     let was_empty = queue.is_empty();
                     queue.push_back(i);
                     if was_empty {
@@ -563,7 +806,7 @@ pub fn simulate(trace: &Trace, cfg: &DesConfig) -> DesResult {
                     }));
                 }
             }
-            EvKind::BatchDone { stream: _, req_idx, kv: handles, act_bytes } => {
+            EvKind::BatchDone { stream, req_idx, kv: handles, act_bytes } => {
                 in_flight = in_flight.saturating_sub(1);
                 for (&ri, h) in req_idx.iter().zip(handles) {
                     let arr = trace.requests[ri].arrival_ns as f64 / 1e9;
@@ -575,18 +818,28 @@ pub fn simulate(trace: &Trace, cfg: &DesConfig) -> DesResult {
                     completed += 1;
                     kv.free(h);
                     // publish the grown prefix (unpins the cache entry)
-                    if let Some(sc) = session.as_mut() {
+                    // into the cache of the stream that served it
+                    let ci = if affinity_on { stream } else { 0 };
+                    if let Some(sc) = session.get_mut(ci) {
                         let r = &trace.requests[ri];
                         sc.publish(r.user_id, &r.tokens, r.prompt_len);
                     }
                 }
                 act_bytes_live = act_bytes_live.saturating_sub(act_bytes);
+                // occupancy grows at publish time: sample the peak here
+                if !session.is_empty() {
+                    session_hbm_peak = session_hbm_peak
+                        .max(session.iter().map(|s| s.hbm_bytes()).sum());
+                    session_dram_peak = session_dram_peak
+                        .max(session.iter().map(|s| s.dram_bytes()).sum());
+                }
                 try_dispatch!(now);
             }
         }
     }
 
-    let sess = session.as_ref();
+    // aggregate across the per-stream caches (a single element when the
+    // affinity model is off, empty when the cache is off)
     DesResult {
         latency,
         completed,
@@ -599,13 +852,15 @@ pub fn simulate(trace: &Trace, cfg: &DesConfig) -> DesResult {
         host_busy_s: host_busy,
         device_busy_s: device_busy,
         batches,
-        session_hits: sess.map(|s| s.stats.hits).unwrap_or(0),
-        session_misses: sess.map(|s| s.stats.misses).unwrap_or(0),
-        session_swap_ins: sess.map(|s| s.stats.swap_ins).unwrap_or(0),
-        session_evictions: sess.map(|s| s.evictions()).unwrap_or(0),
-        prefill_tokens_saved: sess.map(|s| s.stats.tokens_saved).unwrap_or(0),
-        session_peak_hbm_bytes: sess.map(|s| s.hbm_peak()).unwrap_or(0),
-        session_peak_dram_bytes: sess.map(|s| s.dram_peak()).unwrap_or(0),
+        session_hits: session.iter().map(|s| s.stats.hits).sum(),
+        session_misses: session.iter().map(|s| s.stats.misses).sum(),
+        session_swap_ins: session.iter().map(|s| s.stats.swap_ins).sum(),
+        session_evictions: session.iter().map(|s| s.evictions()).sum(),
+        prefill_tokens_saved: session.iter().map(|s| s.stats.tokens_saved).sum(),
+        session_peak_hbm_bytes: session_hbm_peak,
+        session_peak_dram_bytes: session_dram_peak,
+        affinity_spills,
+        affinity_repairs: 0,
     }
 }
 
@@ -619,6 +874,9 @@ mod tests {
         let mut serving = ServingConfig::default();
         serving.beam_width = bw;
         serving.top_k = bw;
+        // routing-independent baseline (one shared cache); the affinity
+        // model is exercised by the dedicated tests below
+        serving.session_affinity = false;
         DesConfig {
             hw: HardwareProfile::ascend_910b(),
             model: ModelSpec::onerec_0_1b(),
@@ -788,6 +1046,96 @@ mod tests {
         // 150 users drawn from 2^20: at most a stray birthday collision
         assert!(a.session_hits <= 2, "hits {}", a.session_hits);
         assert!(a.session_misses > 100);
+    }
+
+    /// Zipf-skewed revisit workload: the earliest sessions absorb most
+    /// revisits, so a handful of streams run hot under affinity routing.
+    fn zipf_trace(n: usize, rps: f64) -> Trace {
+        AmazonLike::default()
+            .with_revisit(0.8)
+            .with_revisit_skew(6.0)
+            .generate_lengths(n, rps, 11)
+    }
+
+    fn affinity_cfg(spill_depth: usize) -> DesConfig {
+        let mut c = cfg(EngineKind::Xgr, 128);
+        c.serving.session_cache = true;
+        c.serving.session_affinity = true;
+        c.serving.affinity_spill_depth = spill_depth;
+        c.serving.affinity_stall_us = 1_000;
+        // small batches: queue-slot granularity for the spill depth
+        c.serving.max_batch_requests = 8;
+        c
+    }
+
+    #[test]
+    fn affinity_spill_model_trades_hits_for_throughput() {
+        let t = zipf_trace(500, 500.0);
+        let nospill = simulate(&t, &affinity_cfg(0));
+        let spill = simulate(&t, &affinity_cfg(1));
+        let mut c_ll = affinity_cfg(0);
+        c_ll.serving.session_affinity = false; // pure least-loaded
+        let ll = simulate(&t, &c_ll);
+        for (name, r) in [("nospill", &nospill), ("spill", &spill), ("ll", &ll)] {
+            assert_eq!(r.completed, 500, "{name} must complete everything");
+            assert_eq!(r.rejected, 0, "{name} must reject nothing");
+        }
+        assert_eq!(nospill.affinity_spills, 0, "depth 0 disables spilling");
+        assert_eq!(ll.affinity_spills, 0, "affinity off never spills");
+        assert!(
+            spill.affinity_spills > 0,
+            "the hot stream must shed load via spills"
+        );
+        // spilling can only relieve the hot stream, never slow it down
+        assert!(
+            spill.mean_ms() <= nospill.mean_ms() * 1.05,
+            "spill mean {} vs nospill mean {}",
+            spill.mean_ms(),
+            nospill.mean_ms()
+        );
+        // the price of a spill is cache locality: hit rate stays below
+        // the pure-affinity run, but far above zero (the strays re-seed
+        // the stream they spill onto)
+        assert!(
+            spill.session_hit_rate() <= nospill.session_hit_rate() + 0.02,
+            "spill {} vs nospill {}",
+            spill.session_hit_rate(),
+            nospill.session_hit_rate()
+        );
+        assert!(
+            spill.session_hit_rate() > 0.2,
+            "spilling must not destroy locality: {}",
+            spill.session_hit_rate()
+        );
+        assert!(nospill.session_hit_rate() > 0.4);
+    }
+
+    #[test]
+    fn affinity_model_is_deterministic() {
+        let t = zipf_trace(300, 400.0);
+        let a = simulate(&t, &affinity_cfg(2));
+        let b = simulate(&t, &affinity_cfg(2));
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.latency.p99(), b.latency.p99());
+        assert_eq!(a.session_hits, b.session_hits);
+        assert_eq!(a.affinity_spills, b.affinity_spills);
+    }
+
+    #[test]
+    fn affinity_model_collapses_to_global_cache_on_one_stream() {
+        let t = zipf_trace(200, 200.0);
+        let mut one = affinity_cfg(2);
+        one.serving.num_streams = 1;
+        let r1 = simulate(&t, &one);
+        let mut global = affinity_cfg(2);
+        global.serving.num_streams = 1;
+        global.serving.session_affinity = false;
+        let r2 = simulate(&t, &global);
+        // a single stream has no routing choice: both models agree
+        assert_eq!(r1.completed, r2.completed);
+        assert_eq!(r1.session_hits, r2.session_hits);
+        assert_eq!(r1.latency.p99(), r2.latency.p99());
+        assert_eq!(r1.affinity_spills, 0);
     }
 
     #[test]

@@ -26,6 +26,12 @@ pub struct AmazonLike {
     /// multi-turn session structure the session cache exploits). 0 = every
     /// request is a fresh user (the pre-session behavior).
     pub revisit_rate: f64,
+    /// popularity skew of revisits: which session returns is drawn as
+    /// `floor(u^skew · n)` over the n open sessions, so skew 1.0 is
+    /// uniform (the legacy behavior, bit-identical RNG stream) and
+    /// larger values pile revisits Zipf-like onto the earliest (hottest)
+    /// users — the workload that makes one affinity stream run hot.
+    pub revisit_skew: f64,
 }
 
 impl Default for AmazonLike {
@@ -39,6 +45,7 @@ impl Default for AmazonLike {
             min_items: 2,
             n_users: 1 << 20,
             revisit_rate: 0.0,
+            revisit_skew: 1.0,
         }
     }
 }
@@ -53,6 +60,22 @@ impl AmazonLike {
     pub fn with_revisit(mut self, rate: f64) -> Self {
         self.revisit_rate = rate.clamp(0.0, 1.0);
         self
+    }
+
+    /// Skew revisit popularity toward the earliest sessions (1.0 =
+    /// uniform; larger = hotter head, Zipf-like).
+    pub fn with_revisit_skew(mut self, skew: f64) -> Self {
+        self.revisit_skew = skew.max(1.0);
+        self
+    }
+
+    /// Draw which open session revisits, honoring the popularity skew.
+    fn sample_session(&self, rng: &mut Pcg, n: usize) -> usize {
+        if self.revisit_skew <= 1.0 {
+            rng.below(n as u64) as usize
+        } else {
+            ((rng.f64().powf(self.revisit_skew) * n as f64) as usize).min(n - 1)
+        }
     }
 
     /// Sample one user's history length in items.
@@ -84,7 +107,7 @@ impl AmazonLike {
                     && !sessions.is_empty()
                     && rng.f64() < self.revisit_rate;
                 if revisit {
-                    let si = rng.below(sessions.len() as u64) as usize;
+                    let si = self.sample_session(&mut rng, sessions.len());
                     let new_items = 1 + rng.below(3) as usize;
                     let (user_id, history) = &mut sessions[si];
                     for _ in 0..new_items {
@@ -138,7 +161,7 @@ impl AmazonLike {
                     && !sessions.is_empty()
                     && rng.f64() < self.revisit_rate;
                 if revisit {
-                    let si = rng.below(sessions.len() as u64) as usize;
+                    let si = self.sample_session(&mut rng, sessions.len());
                     let new_items = 1 + rng.below(3) as usize;
                     let (user_id, items) = &mut sessions[si];
                     *items = (*items + new_items).min(self.max_items);
@@ -249,6 +272,39 @@ mod tests {
         // with rate 0.6 over 400 requests, prefix extensions must dominate
         assert!(extensions > 150, "extensions {extensions}");
         assert!(anomalies <= 2, "anomalies {anomalies}");
+    }
+
+    #[test]
+    fn revisit_skew_concentrates_on_the_earliest_sessions() {
+        let n = 2000;
+        let uniform = AmazonLike::default().with_revisit(0.6).generate_lengths(n, 100.0, 5);
+        let skewed = AmazonLike::default()
+            .with_revisit(0.6)
+            .with_revisit_skew(6.0)
+            .generate_lengths(n, 100.0, 5);
+        let top_share = |t: &Trace| {
+            use std::collections::HashMap;
+            let mut counts: HashMap<u64, usize> = HashMap::new();
+            for r in &t.requests {
+                *counts.entry(r.user_id).or_default() += 1;
+            }
+            let mut v: Vec<usize> = counts.into_values().collect();
+            v.sort_unstable_by(|a, b| b.cmp(a));
+            v.iter().take(3).sum::<usize>() as f64 / n as f64
+        };
+        let u = top_share(&uniform);
+        let s = top_share(&skewed);
+        assert!(
+            s > 2.0 * u && s > 0.2,
+            "skewed top-3 share {s} must dominate uniform {u}"
+        );
+        // skew 1.0 is the legacy draw, bit-identical
+        let a = AmazonLike::default().with_revisit(0.5).generate_lengths(300, 50.0, 9);
+        let b = AmazonLike::default()
+            .with_revisit(0.5)
+            .with_revisit_skew(1.0)
+            .generate_lengths(300, 50.0, 9);
+        assert_eq!(a.requests, b.requests);
     }
 
     #[test]
