@@ -8,6 +8,7 @@
 
 use std::sync::Arc;
 use std::time::Duration;
+use xgr::cluster::ClusterCoordinator;
 use xgr::config::{ModelSpec, ServingConfig};
 use xgr::coordinator::{Coordinator, EngineConfig, ExecutorFactory, RecRequest};
 use xgr::itemspace::{Catalog, ItemTrie};
@@ -46,6 +47,7 @@ fn main() -> xgr::Result<()> {
     );
 
     // 3. start the three-tier coordinator (2 streams)
+    let cluster_factory = factory.clone();
     let mut serving = ServingConfig::default();
     serving.num_streams = 2;
     // session cache + affinity routing: a returning user lands on the
@@ -100,6 +102,68 @@ fn main() -> xgr::Result<()> {
         assert_eq!(r.valid_items, r.items.len(), "filtering guarantees validity");
     }
     coord.shutdown();
+
+    // 6. cluster mode: N replicas behind the cache-aware router with a
+    // shared cross-replica prefix pool. Knobs:
+    //   * `cluster_replicas` — engine replicas (each its own scheduler,
+    //     streams and per-stream session caches);
+    //   * `pool_bytes` — shared DRAM pool of serialized prefix entries:
+    //     ONE copy per user for the whole fleet, so a re-route (spill,
+    //     repair, replica death) costs a swap-in, not a full prefill.
+    //     Prefer pool bytes over per-replica `session_dram_bytes` when
+    //     users move between replicas; prefer per-replica DRAM when
+    //     affinity is strong and swap-in bandwidth is the bottleneck;
+    //   * `prefix_ttl_us` — freshness bound: pooled prefixes expire this
+    //     long after their last publish (user history can be rewritten
+    //     upstream), reclaimed by a periodic sweep.
+    serving.cluster_replicas = 2;
+    serving.pool_bytes = 64 << 20;
+    serving.prefix_ttl_us = 5_000_000;
+    let cluster = ClusterCoordinator::start(
+        &serving,
+        EngineConfig::default(),
+        trie.clone(),
+        cluster_factory,
+    )?;
+    // user 9 visits twice — and between the visits, the replica that
+    // served them dies. The pool makes the revisit a swap-in hit on the
+    // surviving replica instead of a cold prefill.
+    let mut history: Vec<u32> = Vec::new();
+    for _ in 0..6 {
+        history.extend_from_slice(&catalog.sample_item(&mut rng));
+    }
+    cluster
+        .submit_blocking(RecRequest {
+            id: 100,
+            tokens: history.clone(),
+            arrival_ns: now_ns(),
+            user_id: 9,
+        })
+        .ok();
+    cluster.recv_timeout(Duration::from_secs(30)).expect("first visit");
+    let home = cluster.replica_of(9).expect("router knows the user now");
+    println!("cluster: user 9 served by replica {home}; killing it");
+    cluster.kill_replica(home)?;
+    history.extend_from_slice(&catalog.sample_item(&mut rng));
+    cluster
+        .submit_blocking(RecRequest {
+            id: 101,
+            tokens: history,
+            arrival_ns: now_ns(),
+            user_id: 9,
+        })
+        .ok();
+    let r = cluster.recv_timeout(Duration::from_secs(30)).expect("revisit");
+    let stats = cluster.backend_stats();
+    println!(
+        "cluster: revisit served on stream {} in {}; pool_hits={} \
+         prefill_tokens_saved={}",
+        r.stream,
+        fmt_ns(r.latency_ns),
+        stats.pool_hits,
+        stats.prefill_tokens_saved
+    );
+    cluster.shutdown();
     println!("quickstart OK");
     Ok(())
 }

@@ -21,6 +21,7 @@ pub fn vllm_like_engine_config() -> EngineConfig {
         pooling: false,
         bos_token: 0,
         session_cache: None, // no cross-request prefix reuse
+        session_pool: None,
     }
 }
 

@@ -14,6 +14,7 @@ pub fn xllm_like_engine_config() -> EngineConfig {
         pooling: false,
         bos_token: 0,
         session_cache: None, // no cross-request prefix reuse
+        session_pool: None,
     }
 }
 

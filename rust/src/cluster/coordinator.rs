@@ -1,0 +1,483 @@
+//! The replica tier: N engine [`Coordinator`]s behind one cache-aware
+//! router and one shared prefix pool.
+//!
+//! Topology (cluster analogue of the paper's Fig 19 deployment):
+//!
+//! ```text
+//!            submit()                  ┌────────────┐
+//!   client ──────────► Router ──────► │ replica 0  │──┐ forwarders
+//!                      (cheapest      │ Coordinator│  │ (stream ids
+//!                       miss)    ──► │ replica 1  │──┤  remapped into
+//!                        │            │    ...     │  │  one channel)
+//!                        ▼            └────────────┘  ▼
+//!                  PrefixPool  ◄── publish/lookup ── recv_timeout()
+//!                  (shared DRAM, epochs + TTL)
+//! ```
+//!
+//! Each replica is a full serving pipeline (scheduler + streams +
+//! per-stream session caches); the pool is the only shared state, so a
+//! prefix published by one replica is swap-in-hittable from any other —
+//! re-routes and replica deaths cost a swap-in, not a full prefill.
+//! `kill_replica` drains a replica gracefully (its in-flight requests
+//! complete and are handed back), after which the router places around
+//! the corpse and the pool absorbs its users' next visits.
+
+use super::router::Router;
+use crate::config::ServingConfig;
+use crate::coordinator::{
+    BackendStats, Coordinator, EngineConfig, ExecutorFactory, RecRequest,
+    RecResponse, ServingBackend,
+};
+use crate::itemspace::ItemTrie;
+use crate::metrics::Counters;
+use crate::sessioncache::PrefixPool;
+use crate::util::now_ns;
+use crate::util::pool::Channel;
+use crate::Result;
+use anyhow::anyhow;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Router map capacity (advisory placement hints, clock-evicted).
+const ROUTER_MAP_CAP: usize = 1 << 20;
+
+/// One replica plus its response forwarder. The forwarder blocks on the
+/// replica's response channel and pushes remapped responses into the
+/// cluster-shared `out` channel, so `recv_timeout` blocks on ONE channel
+/// instead of busy-polling every replica (which would add up to a
+/// millisecond of artificial latency to every response).
+struct ReplicaSlot {
+    coord: RwLock<Option<Arc<Coordinator>>>,
+    stop: Arc<AtomicBool>,
+    forwarder: Mutex<Option<JoinHandle<()>>>,
+}
+
+pub struct ClusterCoordinator {
+    replicas: Vec<ReplicaSlot>,
+    /// per-replica counters, kept after a replica is killed so cluster
+    /// stats stay complete
+    counters: Vec<Arc<Counters>>,
+    alive: Vec<AtomicBool>,
+    outstanding: Arc<Vec<AtomicU64>>,
+    router: Mutex<Router>,
+    pool: Option<Arc<PrefixPool>>,
+    /// merged response stream from all forwarders
+    out: Channel<RecResponse>,
+    /// overflow + killed-replica leftovers (drained by `recv_timeout`
+    /// before it blocks on `out`; only ever non-empty when `out` is
+    /// full, i.e. when consumers are NOT starved)
+    pending: Arc<Mutex<VecDeque<RecResponse>>>,
+    streams_per_replica: usize,
+}
+
+impl ClusterCoordinator {
+    /// Start `serving.cluster_replicas` replicas, each a full
+    /// [`Coordinator`], sharing one prefix pool when `pool_bytes` is set.
+    pub fn start(
+        serving: &ServingConfig,
+        engine_cfg: EngineConfig,
+        trie: Arc<ItemTrie>,
+        factory: ExecutorFactory,
+    ) -> Result<Self> {
+        serving.validate()?;
+        let n = serving.cluster_replicas;
+        let mut engine_cfg = engine_cfg;
+        if engine_cfg.session_pool.is_none() {
+            if let Some(pc) = serving.pool_config() {
+                engine_cfg.session_pool = Some(Arc::new(PrefixPool::new(pc)));
+            }
+        }
+        let pool = engine_cfg.session_pool.clone();
+        let streams_per_replica = if serving.features.multi_stream {
+            serving.num_streams
+        } else {
+            1
+        };
+        // forwarders NEVER block on this channel (overflow goes to
+        // `pending`), so shutdown/kill can always join them even when a
+        // driver stops claiming responses
+        let out: Channel<RecResponse> =
+            Channel::bounded((serving.queue_depth + 64).saturating_mul(n));
+        let pending: Arc<Mutex<VecDeque<RecResponse>>> =
+            Arc::new(Mutex::new(VecDeque::new()));
+        let outstanding: Arc<Vec<AtomicU64>> =
+            Arc::new((0..n).map(|_| AtomicU64::new(0)).collect());
+        let mut replicas = Vec::with_capacity(n);
+        let mut counters = Vec::with_capacity(n);
+        for i in 0..n {
+            let c = Arc::new(Coordinator::start(
+                serving,
+                engine_cfg.clone(),
+                trie.clone(),
+                factory.clone(),
+            )?);
+            counters.push(c.counters.clone());
+            let stop = Arc::new(AtomicBool::new(false));
+            let forwarder = {
+                let coord = c.clone();
+                let stop = stop.clone();
+                let out = out.clone();
+                let pending = pending.clone();
+                let outstanding = outstanding.clone();
+                let offset = i * streams_per_replica;
+                std::thread::Builder::new()
+                    .name(format!("xgr-cluster-fwd-{i}"))
+                    .spawn(move || loop {
+                        let dur = if stop.load(Ordering::SeqCst) {
+                            Duration::ZERO // drain what is left, then exit
+                        } else {
+                            Duration::from_millis(25)
+                        };
+                        match coord.recv_timeout(dur) {
+                            Some(mut resp) => {
+                                let _ = outstanding[i].fetch_update(
+                                    Ordering::Relaxed,
+                                    Ordering::Relaxed,
+                                    |v| Some(v.saturating_sub(1)),
+                                );
+                                resp.stream += offset;
+                                // non-blocking: a full merged channel
+                                // means consumers have plenty queued —
+                                // spill to pending instead of wedging
+                                // this thread against shutdown's join
+                                if let Err(resp) = out.try_send(resp) {
+                                    pending.lock().unwrap().push_back(resp);
+                                }
+                            }
+                            None => {
+                                if stop.load(Ordering::SeqCst) {
+                                    return;
+                                }
+                            }
+                        }
+                    })
+                    .expect("spawn cluster forwarder")
+            };
+            replicas.push(ReplicaSlot {
+                coord: RwLock::new(Some(c)),
+                stop,
+                forwarder: Mutex::new(Some(forwarder)),
+            });
+        }
+        Ok(ClusterCoordinator {
+            replicas,
+            counters,
+            alive: (0..n).map(|_| AtomicBool::new(true)).collect(),
+            outstanding,
+            router: Mutex::new(Router::new(ROUTER_MAP_CAP)),
+            pool,
+            out,
+            pending,
+            streams_per_replica,
+        })
+    }
+
+    /// Stop replica `i`'s forwarder and take sole ownership of its
+    /// coordinator (forwarder joined first, so the Arc is unique).
+    fn detach_replica(&self, i: usize) -> Option<Coordinator> {
+        self.replicas[i].stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.replicas[i].forwarder.lock().unwrap().take() {
+            let _ = h.join();
+        }
+        let mut arc = self.replicas[i].coord.write().unwrap().take()?;
+        loop {
+            match Arc::try_unwrap(arc) {
+                Ok(c) => return Some(c),
+                Err(a) => {
+                    // a submit still holds the read guard's borrow for a
+                    // moment; retry (no new holders can appear)
+                    arc = a;
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+        }
+    }
+
+    pub fn num_replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn pool(&self) -> Option<&Arc<PrefixPool>> {
+        self.pool.as_ref()
+    }
+
+    /// The replica the router expects to hold `user`'s prefix locally
+    /// (None for unknown users or when the holder is dead).
+    pub fn replica_of(&self, user: u64) -> Option<usize> {
+        self.router
+            .lock()
+            .unwrap()
+            .replica_of(user)
+            .filter(|&r| self.alive[r].load(Ordering::Relaxed))
+    }
+
+    fn loads(&self) -> Vec<u64> {
+        self.outstanding.iter().map(|o| o.load(Ordering::Relaxed)).collect()
+    }
+
+    fn alive_vec(&self) -> Vec<bool> {
+        self.alive.iter().map(|a| a.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Cheapest-miss placement, then submit — falling back over the
+    /// remaining live replicas (load order) when the preferred one is
+    /// full or died underneath us.
+    pub fn submit(&self, req: RecRequest) -> std::result::Result<(), RecRequest> {
+        let loads = self.loads();
+        let alive = self.alive_vec();
+        let placement = {
+            let mut router = self.router.lock().unwrap();
+            router.place(
+                &req,
+                &loads,
+                &alive,
+                self.pool.as_deref(),
+                now_ns() / 1_000,
+            )
+        };
+        let Some(placement) = placement else {
+            return Err(req); // every replica dead
+        };
+        let mut order: Vec<usize> = (0..self.replicas.len())
+            .filter(|&r| alive[r] && r != placement.replica())
+            .collect();
+        order.sort_by_key(|&r| loads[r]);
+        order.insert(0, placement.replica());
+        let user = req.user_id;
+        let prompt_len = req.tokens.len().max(1);
+        let mut req = req;
+        for r in order {
+            let guard = self.replicas[r].coord.read().unwrap();
+            let Some(coord) = guard.as_ref() else {
+                continue; // killed between the alive check and here
+            };
+            match coord.submit(req) {
+                Ok(()) => {
+                    self.outstanding[r].fetch_add(1, Ordering::Relaxed);
+                    // record where the user's prefix will live once served
+                    self.router.lock().unwrap().note_placed(user, r, prompt_len);
+                    return Ok(());
+                }
+                Err(ret) => req = ret,
+            }
+        }
+        Err(req)
+    }
+
+    /// Blocking submit: retries across replicas until one admits the
+    /// request or every replica is dead.
+    pub fn submit_blocking(
+        &self,
+        req: RecRequest,
+    ) -> std::result::Result<(), RecRequest> {
+        let mut req = req;
+        loop {
+            match self.submit(req) {
+                Ok(()) => return Ok(()),
+                Err(ret) => {
+                    if !self.alive_vec().iter().any(|&a| a) {
+                        return Err(ret);
+                    }
+                    req = ret;
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+        }
+    }
+
+    /// Next response from any replica (stream ids remapped to the
+    /// cluster-global numbering `replica * num_streams + stream`).
+    /// Blocks on the merged forwarder channel — no replica polling.
+    pub fn recv_timeout(&self, dur: Duration) -> Option<RecResponse> {
+        if let Some(resp) = self.pending.lock().unwrap().pop_front() {
+            return Some(resp);
+        }
+        match self.out.recv_timeout(dur) {
+            Some(resp) => Some(resp),
+            // a kill may have handed leftovers over mid-wait
+            None => self.pending.lock().unwrap().pop_front(),
+        }
+    }
+
+    /// Gracefully drain replica `i` mid-run: its queued requests finish,
+    /// unclaimed responses are handed back through `recv_timeout`, and
+    /// the router stops placing on it. The shared pool keeps its users'
+    /// prefixes swap-in-hittable from the survivors. Returns how many
+    /// leftover responses the replica handed back.
+    pub fn kill_replica(&self, i: usize) -> Result<usize> {
+        if i >= self.replicas.len() {
+            return Err(anyhow!("no replica {i}"));
+        }
+        self.alive[i].store(false, Ordering::SeqCst);
+        let Some(coord) = self.detach_replica(i) else {
+            return Err(anyhow!("replica {i} already dead"));
+        };
+        let leftovers = coord.shutdown();
+        let n = leftovers.len();
+        for mut resp in leftovers {
+            resp.stream += i * self.streams_per_replica;
+            // prefer the merged channel (wakes a blocked recv_timeout);
+            // overflow to the pending queue
+            if let Err(resp) = self.out.try_send(resp) {
+                self.pending.lock().unwrap().push_back(resp);
+            }
+        }
+        self.outstanding[i].store(0, Ordering::Relaxed);
+        Ok(n)
+    }
+
+    /// Drain everything: close every replica, return all unclaimed
+    /// responses (cluster-global stream ids).
+    pub fn shutdown(self) -> Vec<RecResponse> {
+        let mut drained: Vec<RecResponse> =
+            self.pending.lock().unwrap().drain(..).collect();
+        for r in 0..self.replicas.len() {
+            if let Some(coord) = self.detach_replica(r) {
+                for mut resp in coord.shutdown() {
+                    resp.stream += r * self.streams_per_replica;
+                    drained.push(resp);
+                }
+            }
+        }
+        // responses already forwarded but never claimed
+        self.out.close();
+        while let Some(resp) = self.out.try_recv() {
+            drained.push(resp);
+        }
+        drained
+    }
+
+    /// Aggregate stats across replicas (dead ones included — their
+    /// counters outlive them) plus the shared pool's global view.
+    pub fn backend_stats(&self) -> BackendStats {
+        let mut agg = BackendStats::default();
+        for c in &self.counters {
+            agg.merge(&BackendStats::from_counters(c));
+        }
+        if let Some(pool) = &self.pool {
+            let ps = pool.stats();
+            agg.pool_ttl_expirations = ps.ttl_expirations;
+            agg.pool_peak_bytes = pool.peak_bytes();
+            for c in &self.counters {
+                Counters::max(&c.pool_ttl_expirations, ps.ttl_expirations);
+            }
+        }
+        agg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelSpec;
+    use crate::itemspace::Catalog;
+    use crate::runtime::MockExecutor;
+
+    fn cluster(replicas: usize, pool_mb: u64) -> ClusterCoordinator {
+        let mut spec = ModelSpec::onerec_tiny();
+        spec.vocab = 64;
+        spec.beam_width = 4;
+        let catalog = Catalog::generate(64, 400, 2);
+        let trie = Arc::new(crate::itemspace::ItemTrie::build(&catalog));
+        let mut serving = ServingConfig::default();
+        serving.num_streams = 2;
+        serving.batch_wait_us = 200;
+        serving.max_batch_requests = 4;
+        serving.session_cache = true;
+        serving.cluster_replicas = replicas;
+        serving.pool_bytes = pool_mb << 20;
+        let factory: ExecutorFactory = {
+            let spec = spec.clone();
+            Arc::new(move || Ok(Box::new(MockExecutor::new(spec.clone())) as _))
+        };
+        ClusterCoordinator::start(
+            &serving,
+            EngineConfig::default(),
+            trie,
+            factory,
+        )
+        .unwrap()
+    }
+
+    fn req(id: u64, user: u64) -> RecRequest {
+        RecRequest {
+            id,
+            tokens: vec![1, 2, (id % 60) as u32],
+            arrival_ns: now_ns(),
+            user_id: user,
+        }
+    }
+
+    #[test]
+    fn serves_across_replicas_with_global_stream_ids() {
+        let c = cluster(3, 16);
+        for i in 0..24u64 {
+            c.submit_blocking(req(i, i % 8)).unwrap();
+        }
+        let mut got = std::collections::HashSet::new();
+        let mut streams = std::collections::HashSet::new();
+        while got.len() < 24 {
+            let r = c
+                .recv_timeout(Duration::from_secs(10))
+                .expect("response timed out");
+            assert!(!r.items.is_empty());
+            assert!(got.insert(r.id), "duplicate response {}", r.id);
+            assert!(r.stream < 3 * 2, "stream id must be cluster-global");
+            streams.insert(r.stream / 2); // replica index
+        }
+        assert!(streams.len() > 1, "load must spread over replicas: {streams:?}");
+        let stats = c.backend_stats();
+        assert_eq!(stats.per_replica_hit_rates.len(), 3);
+        let rest = c.shutdown();
+        assert!(rest.is_empty());
+    }
+
+    #[test]
+    fn returning_users_stay_on_their_replica() {
+        let c = cluster(3, 16);
+        // 4 users × 5 turns, drained turn by turn so the router's view
+        // is settled before each revisit
+        let mut user_replica: std::collections::HashMap<u64, usize> =
+            Default::default();
+        for turn in 0..5u64 {
+            for user in 0..4u64 {
+                c.submit_blocking(req(turn * 4 + user, user)).unwrap();
+            }
+            for _ in 0..4 {
+                let r = c.recv_timeout(Duration::from_secs(10)).unwrap();
+                let replica = r.stream / 2;
+                let prev = user_replica.insert(r.id % 4, replica);
+                if turn > 0 {
+                    assert_eq!(
+                        prev,
+                        Some(replica),
+                        "user {} moved replicas without pressure",
+                        r.id % 4
+                    );
+                }
+            }
+        }
+        c.shutdown();
+    }
+}
+
+impl ServingBackend for ClusterCoordinator {
+    fn submit(&self, req: RecRequest) -> std::result::Result<(), RecRequest> {
+        ClusterCoordinator::submit(self, req)
+    }
+
+    fn submit_blocking(&self, req: RecRequest) -> std::result::Result<(), RecRequest> {
+        ClusterCoordinator::submit_blocking(self, req)
+    }
+
+    fn recv_timeout(&self, dur: Duration) -> Option<RecResponse> {
+        ClusterCoordinator::recv_timeout(self, dur)
+    }
+
+    fn backend_stats(&self) -> BackendStats {
+        ClusterCoordinator::backend_stats(self)
+    }
+}

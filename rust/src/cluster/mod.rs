@@ -1,0 +1,33 @@
+//! Cluster replica tier: N engine replicas behind a cache-aware router,
+//! backed by the shared cross-replica prefix pool.
+//!
+//! The paper's evaluation (Fig 19) is a GPU *cluster*; this module is
+//! the layer that takes the single-engine serving stack there. Three
+//! pieces:
+//!
+//! * [`router`] — cheapest-miss placement: prefer the replica whose
+//!   local session cache holds the user's longest live prefix, fall
+//!   back to the least-loaded replica — which the shared pool turns
+//!   into a swap-in instead of a full prefill. The local preference is
+//!   bounded by a load slack (FLAME-style), mirroring the scheduler
+//!   tier's bounded affinity from PR 2.
+//! * [`coordinator`] — [`ClusterCoordinator`]: owns the replicas
+//!   (each a full [`crate::coordinator::Coordinator`] with its own
+//!   scheduler, streams and per-stream caches), the router, and the
+//!   [`crate::sessioncache::PrefixPool`]; implements
+//!   [`crate::coordinator::ServingBackend`], so the trace-replay driver
+//!   and the TCP front-end drive a cluster exactly like a single engine.
+//! * the pool itself lives in [`crate::sessioncache::pool`] — the
+//!   serialization format, epoch invalidation and TTL sweep are cache
+//!   concerns; this module is the topology around them.
+//!
+//! Failure model: `kill_replica` drains a replica gracefully. Its users'
+//! next requests are re-placed by the router and recover their prefixes
+//! from the pool; results are byte-identical to a single-replica run
+//! (enforced by `tests/cluster_invariant.rs`).
+
+pub mod coordinator;
+pub mod router;
+
+pub use coordinator::ClusterCoordinator;
+pub use router::{Placement, Router, LOAD_SLACK};

@@ -1,0 +1,190 @@
+//! Cache-aware request placement across engine replicas.
+//!
+//! The router places each request by **cheapest miss**, not round-robin:
+//!
+//! 1. the replica whose local session cache holds the user's longest
+//!    live prefix (tracked as the replica that last served them and how
+//!    long their prompt was) — a hit there costs nothing extra;
+//! 2. otherwise, if the shared [`PrefixPool`] holds a live prefix, any
+//!    replica will do (the pool is reachable from all of them, one
+//!    swap-in away) — so take the least-loaded;
+//! 3. otherwise the miss is full everywhere: least-loaded.
+//!
+//! Like the scheduler tier's session affinity (PR 2), the local-replica
+//! preference is *bounded*: when the holder's outstanding load exceeds
+//! the least-loaded replica's by more than [`LOAD_SLACK`], the router
+//! abandons locality for this request rather than pile onto a hot
+//! replica — the pool turns that re-route from a full prefill into a
+//! swap-in, which is exactly why it exists.
+
+use crate::coordinator::RecRequest;
+use crate::sessioncache::PrefixPool;
+use crate::util::clockmap::ClockMap;
+
+/// How many outstanding requests of imbalance the local-replica
+/// preference may cost before the router falls back to least-loaded.
+pub const LOAD_SLACK: u64 = 8;
+
+/// The placement decision and why it was made (surfaced for tests and
+/// observability; the coordinator only needs the replica index).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Placement {
+    /// the replica already holding the user's prefix locally
+    Local(usize),
+    /// least-loaded replica; the shared pool covers part of the prompt
+    PoolAssisted(usize),
+    /// least-loaded replica; full prefill everywhere
+    Cold(usize),
+}
+
+impl Placement {
+    pub fn replica(&self) -> usize {
+        match *self {
+            Placement::Local(r) | Placement::PoolAssisted(r) | Placement::Cold(r) => r,
+        }
+    }
+}
+
+pub struct Router {
+    /// user → (replica, prompt_len): where the user's prefix lives and
+    /// how long it is. Advisory, clock-bounded (the same second-chance
+    /// discipline as the scheduler's affinity map) — forgetting an entry
+    /// only loses a placement hint.
+    users: ClockMap<(usize, usize)>,
+}
+
+impl Router {
+    pub fn new(capacity: usize) -> Self {
+        Router { users: ClockMap::new(capacity) }
+    }
+
+    /// Place one request. `loads[r]` is replica r's outstanding request
+    /// count; dead replicas are `alive[r] == false`. Returns None when
+    /// every replica is dead.
+    pub fn place(
+        &mut self,
+        req: &RecRequest,
+        loads: &[u64],
+        alive: &[bool],
+        pool: Option<&PrefixPool>,
+        now_us: u64,
+    ) -> Option<Placement> {
+        let least = (0..loads.len())
+            .filter(|&r| alive[r])
+            .min_by_key(|&r| loads[r])?;
+        let prompt_len = req.tokens.len().max(1);
+        // cost of landing on the least-loaded replica = what the shared
+        // pool cannot cover (plus one token so an equally-long LOCAL
+        // prefix always wins — a local hit pays no swap-in)
+        let pool_len = pool
+            .map(|p| p.peek_match(req.user_id, &req.tokens, prompt_len, now_us))
+            .unwrap_or(0)
+            .min(prompt_len - 1);
+        let fallback_cost = prompt_len - pool_len + usize::from(pool_len > 0);
+        if let Some(&(home, len)) = self.users.get(req.user_id) {
+            if alive[home]
+                && loads[home] <= loads[least].saturating_add(LOAD_SLACK)
+            {
+                let local_cost = prompt_len - len.min(prompt_len - 1);
+                if local_cost < fallback_cost {
+                    return Some(Placement::Local(home));
+                }
+            }
+        }
+        Some(if pool_len > 0 {
+            Placement::PoolAssisted(least)
+        } else {
+            Placement::Cold(least)
+        })
+    }
+
+    /// Record a successful placement: the serving replica will publish
+    /// the user's full prompt into its local cache.
+    pub fn note_placed(&mut self, user: u64, replica: usize, prompt_len: usize) {
+        self.users.insert(user, (replica, prompt_len));
+    }
+
+    /// The replica currently expected to hold `user`'s prefix locally.
+    pub fn replica_of(&mut self, user: u64) -> Option<usize> {
+        self.users.get(user).map(|&(r, _)| r)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sessioncache::{PoolConfig, PrefixEntry};
+
+    fn req(user: u64, tokens: Vec<u32>) -> RecRequest {
+        RecRequest { id: 0, tokens, arrival_ns: 0, user_id: user }
+    }
+
+    #[test]
+    fn fresh_users_go_least_loaded() {
+        let mut r = Router::new(64);
+        let p = r
+            .place(&req(1, vec![1, 2, 3]), &[5, 0, 2], &[true; 3], None, 0)
+            .unwrap();
+        assert_eq!(p, Placement::Cold(1));
+    }
+
+    #[test]
+    fn returning_users_stick_to_their_prefix_holder() {
+        let mut r = Router::new(64);
+        r.note_placed(7, 2, 30);
+        let p = r
+            .place(&req(7, (0..33).collect()), &[0, 0, 3], &[true; 3], None, 0)
+            .unwrap();
+        assert_eq!(p, Placement::Local(2), "longest live prefix wins");
+    }
+
+    #[test]
+    fn overloaded_holder_is_abandoned_within_the_slack() {
+        let mut r = Router::new(64);
+        r.note_placed(7, 2, 30);
+        let loads = [0, 0, LOAD_SLACK + 1];
+        let p = r
+            .place(&req(7, (0..33).collect()), &loads, &[true; 3], None, 0)
+            .unwrap();
+        assert_eq!(p, Placement::Cold(0), "bounded preference, not invariant");
+    }
+
+    #[test]
+    fn dead_holder_falls_back_and_pool_upgrades_the_miss() {
+        let mut r = Router::new(64);
+        r.note_placed(7, 1, 30);
+        let pool =
+            PrefixPool::new(PoolConfig { pool_bytes: 1 << 20, prefix_ttl_us: 0 });
+        let tokens: Vec<u32> = (0..30).collect();
+        pool.publish(&PrefixEntry::from_tokens(7, &tokens, 30, 8, 0), 0, 0);
+        let alive = [true, false, true];
+        let p = r
+            .place(&req(7, (0..33).collect()), &[1, 0, 0], &alive, Some(&pool), 1)
+            .unwrap();
+        assert_eq!(
+            p,
+            Placement::PoolAssisted(2),
+            "dead replica skipped; pool makes the re-route cheap"
+        );
+        // all dead: nothing to place on
+        assert!(r
+            .place(&req(7, vec![1]), &[0, 0, 0], &[false; 3], Some(&pool), 1)
+            .is_none());
+    }
+
+    #[test]
+    fn local_beats_pool_at_equal_coverage() {
+        let mut r = Router::new(64);
+        let tokens: Vec<u32> = (0..30).collect();
+        r.note_placed(7, 0, 30);
+        let pool =
+            PrefixPool::new(PoolConfig { pool_bytes: 1 << 20, prefix_ttl_us: 0 });
+        pool.publish(&PrefixEntry::from_tokens(7, &tokens, 30, 8, 0), 0, 0);
+        // same coverage local vs pool, holder slightly busier: the local
+        // hit still wins (no swap-in) within the slack
+        let p = r
+            .place(&req(7, tokens.clone()), &[2, 0], &[true; 2], Some(&pool), 1)
+            .unwrap();
+        assert_eq!(p, Placement::Local(0));
+    }
+}

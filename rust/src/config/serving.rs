@@ -69,6 +69,16 @@ pub struct ServingConfig {
     /// full affine queue before it spills. 0 = spill as soon as the
     /// affine queue is full (when spilling is enabled at all).
     pub affinity_stall_us: u64,
+    /// engine replicas behind the cluster router (1 = single engine, the
+    /// pre-cluster topology). Each replica runs its own scheduler,
+    /// streams and per-stream session caches.
+    pub cluster_replicas: usize,
+    /// shared cross-replica prefix pool budget in bytes; 0 disables the
+    /// pool. Requires `session_cache` (the pool is its DRAM backing).
+    pub pool_bytes: u64,
+    /// per-entry TTL for pooled prefixes, microseconds since last
+    /// publish; 0 = no expiry. Requires `pool_bytes > 0`.
+    pub prefix_ttl_us: u64,
     pub features: Features,
 }
 
@@ -89,6 +99,9 @@ impl Default for ServingConfig {
             session_affinity: true,
             affinity_spill_depth: 2,
             affinity_stall_us: 20_000,
+            cluster_replicas: 1,
+            pool_bytes: 0,
+            prefix_ttl_us: 0,
             features: Features::all_on(),
         }
     }
@@ -116,6 +129,9 @@ impl ServingConfig {
                 "session_affinity" => c.session_affinity = v.as_bool().ok_or_else(|| anyhow!("session_affinity"))?,
                 "affinity_spill_depth" => c.affinity_spill_depth = v.as_usize().ok_or_else(|| anyhow!("affinity_spill_depth"))?,
                 "affinity_stall_us" => c.affinity_stall_us = v.as_f64().ok_or_else(|| anyhow!("affinity_stall_us"))? as u64,
+                "cluster_replicas" => c.cluster_replicas = v.as_usize().ok_or_else(|| anyhow!("cluster_replicas"))?,
+                "pool_bytes" => c.pool_bytes = v.as_f64().ok_or_else(|| anyhow!("pool_bytes"))? as u64,
+                "prefix_ttl_us" => c.prefix_ttl_us = v.as_f64().ok_or_else(|| anyhow!("prefix_ttl_us"))? as u64,
                 "valid_filter" => c.features.valid_filter = v.as_bool().ok_or_else(|| anyhow!("valid_filter"))?,
                 "graph_dispatch" => c.features.graph_dispatch = v.as_bool().ok_or_else(|| anyhow!("graph_dispatch"))?,
                 "multi_stream" => c.features.multi_stream = v.as_bool().ok_or_else(|| anyhow!("multi_stream"))?,
@@ -146,7 +162,31 @@ impl ServingConfig {
         if self.affinity_stall_us > 60_000_000 {
             return Err(anyhow!("affinity_stall_us must be <= 60s"));
         }
+        if self.cluster_replicas == 0 || self.cluster_replicas > 64 {
+            return Err(anyhow!("cluster_replicas must be in 1..=64"));
+        }
+        if self.pool_bytes > 0 && !self.session_cache {
+            return Err(anyhow!("pool_bytes requires session_cache"));
+        }
+        if self.prefix_ttl_us > 0 && self.pool_bytes == 0 {
+            return Err(anyhow!("prefix_ttl_us requires pool_bytes > 0"));
+        }
+        if self.prefix_ttl_us > 3_600_000_000 {
+            return Err(anyhow!("prefix_ttl_us must be <= 1h"));
+        }
         Ok(())
+    }
+
+    /// Shared cross-replica prefix pool settings, when enabled.
+    pub fn pool_config(&self) -> Option<crate::sessioncache::PoolConfig> {
+        if self.session_cache && self.pool_bytes > 0 {
+            Some(crate::sessioncache::PoolConfig {
+                pool_bytes: self.pool_bytes,
+                prefix_ttl_us: self.prefix_ttl_us,
+            })
+        } else {
+            None
+        }
     }
 
     pub fn slo_ns(&self) -> u64 {
@@ -247,6 +287,35 @@ mod tests {
         // defaults derive both tiers from the profile
         let sc = ServingConfig::default().session_cache_config(&hw);
         assert_eq!(sc.hbm_bytes, hw.mem_bytes / 8);
+    }
+
+    #[test]
+    fn cluster_knobs_parse_and_validate() {
+        let j = Json::parse(
+            r#"{"session_cache": true, "cluster_replicas": 4,
+                "pool_bytes": 67108864, "prefix_ttl_us": 500000}"#,
+        )
+        .unwrap();
+        let c = ServingConfig::from_json(&j).unwrap();
+        assert_eq!(c.cluster_replicas, 4);
+        assert_eq!(c.pool_bytes, 64 << 20);
+        assert_eq!(c.prefix_ttl_us, 500_000);
+        let pc = c.pool_config().unwrap();
+        assert_eq!(pc.pool_bytes, 64 << 20);
+        assert_eq!(pc.prefix_ttl_us, 500_000);
+        // the pool needs the session cache it backs
+        let j = Json::parse(r#"{"pool_bytes": 1024}"#).unwrap();
+        assert!(ServingConfig::from_json(&j).is_err());
+        // a TTL without a pool is meaningless
+        let j = Json::parse(r#"{"session_cache": true, "prefix_ttl_us": 5}"#).unwrap();
+        assert!(ServingConfig::from_json(&j).is_err());
+        // replica bounds fail loudly
+        let j = Json::parse(r#"{"cluster_replicas": 0}"#).unwrap();
+        assert!(ServingConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"cluster_replicas": 65}"#).unwrap();
+        assert!(ServingConfig::from_json(&j).is_err());
+        // defaults: single replica, no pool
+        assert!(ServingConfig::default().pool_config().is_none());
     }
 
     #[test]

@@ -46,6 +46,9 @@ pub struct EngineConfig {
     pub bos_token: u32,
     /// session-aware prefix KV cache (None = per-request prefill only)
     pub session_cache: Option<SessionCacheConfig>,
+    /// shared cross-replica prefix pool backing the session cache (the
+    /// cluster coordinator hands every replica the same Arc)
+    pub session_pool: Option<std::sync::Arc<crate::sessioncache::PrefixPool>>,
 }
 
 impl Default for EngineConfig {
@@ -57,6 +60,7 @@ impl Default for EngineConfig {
             pooling: true,
             bos_token: 0,
             session_cache: None,
+            session_pool: None,
         }
     }
 }
@@ -110,10 +114,13 @@ impl Engine {
             naive: NaiveBeam::new(),
             pool,
             kv: SeparatedKv::new(spec.kv_bytes_per_token()),
-            session: cfg
-                .session_cache
-                .clone()
-                .map(|c| SessionCache::new(c, spec.kv_bytes_per_token())),
+            session: cfg.session_cache.clone().map(|c| {
+                let mut sc = SessionCache::new(c, spec.kv_bytes_per_token());
+                if let Some(pool) = cfg.session_pool.clone() {
+                    sc.attach_pool(pool);
+                }
+                sc
+            }),
             sel: Selection::with_capacity(bw),
             prefix_scratch: vec![Vec::with_capacity(3); bw],
             temp_u32: Vec::new(),
@@ -179,6 +186,9 @@ impl Engine {
             }
             if look.tier == Some(Tier::Dram) {
                 Counters::inc(&self.counters.session_swap_ins);
+            }
+            if look.pool_hit {
+                Counters::inc(&self.counters.pool_hits);
             }
             look.hit_tokens.min(tokens.len().saturating_sub(1))
         } else {

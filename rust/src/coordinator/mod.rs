@@ -25,6 +25,8 @@ pub use batch::{Batch, Batcher};
 pub use engine::{Engine, EngineConfig, EngineOutput, SelectorKind};
 pub use scheduler::{Coordinator, ExecutorFactory};
 
+use crate::metrics::Counters;
+
 /// An inbound recommendation request.
 #[derive(Clone, Debug)]
 pub struct RecRequest {
@@ -48,6 +50,103 @@ pub struct RecResponse {
     pub latency_ns: u64,
     /// items that exist in the catalog (== items.len() when filtering on)
     pub valid_items: usize,
-    /// which stream served it
+    /// which stream served it (cluster mode: globally numbered,
+    /// `replica * num_streams + local_stream`)
     pub stream: usize,
+}
+
+/// Aggregated serving-side statistics a backend can report (single
+/// coordinator or a whole replica cluster) — what `ReplayReport` and the
+/// figure harnesses surface.
+#[derive(Clone, Debug, Default)]
+pub struct BackendStats {
+    pub session_hits: u64,
+    pub session_misses: u64,
+    pub session_swap_ins: u64,
+    pub session_evictions: u64,
+    pub prefill_tokens_saved: u64,
+    pub session_peak_hbm_bytes: u64,
+    pub session_peak_dram_bytes: u64,
+    pub affinity_spills: u64,
+    pub affinity_spills_warm: u64,
+    pub affinity_repairs: u64,
+    pub pool_hits: u64,
+    pub pool_misses: u64,
+    pub pool_ttl_expirations: u64,
+    pub pool_epoch_drops: u64,
+    pub pool_peak_bytes: u64,
+    /// session hit rate per replica (one element for a lone coordinator)
+    pub per_replica_hit_rates: Vec<f64>,
+}
+
+impl BackendStats {
+    pub fn session_hit_rate(&self) -> f64 {
+        crate::metrics::session_hit_rate(self.session_hits, self.session_misses)
+    }
+
+    /// Snapshot one coordinator's shared counters (pool-global fields are
+    /// filled by the pool owner on top of this).
+    pub fn from_counters(c: &Counters) -> Self {
+        let g = Counters::get;
+        BackendStats {
+            session_hits: g(&c.session_hits),
+            session_misses: g(&c.session_misses),
+            session_swap_ins: g(&c.session_swap_ins),
+            session_evictions: g(&c.session_evictions),
+            prefill_tokens_saved: g(&c.prefill_tokens_saved),
+            session_peak_hbm_bytes: g(&c.session_peak_hbm_bytes),
+            session_peak_dram_bytes: g(&c.session_peak_dram_bytes),
+            affinity_spills: g(&c.affinity_spills),
+            affinity_spills_warm: g(&c.affinity_spills_warm),
+            affinity_repairs: g(&c.affinity_repairs),
+            pool_hits: g(&c.pool_hits),
+            pool_misses: g(&c.pool_misses),
+            pool_ttl_expirations: g(&c.pool_ttl_expirations),
+            pool_epoch_drops: g(&c.pool_epoch_drops),
+            pool_peak_bytes: 0,
+            per_replica_hit_rates: vec![crate::metrics::session_hit_rate(
+                g(&c.session_hits),
+                g(&c.session_misses),
+            )],
+        }
+    }
+
+    /// Merge another backend's stats into this one (cluster aggregation:
+    /// sums for monotone counters, max for peaks, concatenated rates).
+    pub fn merge(&mut self, o: &BackendStats) {
+        self.session_hits += o.session_hits;
+        self.session_misses += o.session_misses;
+        self.session_swap_ins += o.session_swap_ins;
+        self.session_evictions += o.session_evictions;
+        self.prefill_tokens_saved += o.prefill_tokens_saved;
+        self.session_peak_hbm_bytes = self.session_peak_hbm_bytes.max(o.session_peak_hbm_bytes);
+        self.session_peak_dram_bytes = self.session_peak_dram_bytes.max(o.session_peak_dram_bytes);
+        self.affinity_spills += o.affinity_spills;
+        self.affinity_spills_warm += o.affinity_spills_warm;
+        self.affinity_repairs += o.affinity_repairs;
+        self.pool_hits += o.pool_hits;
+        self.pool_misses += o.pool_misses;
+        self.pool_epoch_drops += o.pool_epoch_drops;
+        // pool-global fields (TTL expirations, peak) come from the single
+        // shared pool, not per-replica sums — take the max, not the sum
+        self.pool_ttl_expirations = self.pool_ttl_expirations.max(o.pool_ttl_expirations);
+        self.pool_peak_bytes = self.pool_peak_bytes.max(o.pool_peak_bytes);
+        self.per_replica_hit_rates.extend(o.per_replica_hit_rates.iter().copied());
+    }
+}
+
+/// The request-serving surface shared by [`Coordinator`] and
+/// [`crate::cluster::ClusterCoordinator`]: the trace-replay driver and
+/// the TCP front-end drive either through this trait, so a multi-replica
+/// deployment is a drop-in behind the same protocol.
+pub trait ServingBackend: Sync {
+    /// Non-blocking submit; Err(req) when admission is full or shutting
+    /// down.
+    fn submit(&self, req: RecRequest) -> std::result::Result<(), RecRequest>;
+    /// Blocking submit (closed-loop drivers).
+    fn submit_blocking(&self, req: RecRequest) -> std::result::Result<(), RecRequest>;
+    /// Next response, waiting up to `dur`.
+    fn recv_timeout(&self, dur: std::time::Duration) -> Option<RecResponse>;
+    /// Aggregate serving statistics (session cache, pool, routing).
+    fn backend_stats(&self) -> BackendStats;
 }

@@ -45,10 +45,10 @@ use crate::itemspace::ItemTrie;
 use crate::metrics::Counters;
 use crate::runtime::ModelExecutor;
 use crate::sessioncache::SessionCacheConfig;
+use crate::util::clockmap::ClockMap;
 use crate::util::now_ns;
 use crate::util::pool::Channel;
 use crate::Result;
-use std::collections::{HashMap, VecDeque};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
@@ -58,76 +58,30 @@ use std::time::Duration;
 /// stickiness, never correctness).
 const AFFINITY_MAP_CAP: usize = 1 << 20;
 
-/// Bounded user→stream map with second-chance (clock) eviction. Each
-/// entry carries a referenced bit set on every hit; the sweep clears the
-/// bit on the first pass and evicts on the second, so recently-routed
-/// users keep their stickiness while cold ones age out one at a time.
-struct AffinityMap {
-    cap: usize,
-    map: HashMap<u64, (usize, bool)>,
-    clock: VecDeque<u64>,
-}
+/// Bounded user→stream map on the shared second-chance clock
+/// ([`ClockMap`]): recently-routed users keep their stickiness while
+/// cold ones age out one at a time — the map is advisory, so an
+/// eviction only loses a routing hint.
+struct AffinityMap(ClockMap<usize>);
 
 impl AffinityMap {
     fn new(cap: usize) -> Self {
-        AffinityMap { cap: cap.max(1), map: HashMap::new(), clock: VecDeque::new() }
+        AffinityMap(ClockMap::new(cap))
     }
 
     #[cfg(test)]
     fn len(&self) -> usize {
-        self.map.len()
+        self.0.len()
     }
 
     /// Look up the user's stream, marking the entry recently used.
     fn get(&mut self, user: u64) -> Option<usize> {
-        self.map.get_mut(&user).map(|e| {
-            e.1 = true;
-            e.0
-        })
+        self.0.get(user).copied()
     }
 
     /// Pin `user` to `stream`, evicting via the clock when at capacity.
-    /// The sweep is bounded (≤64 positions per eviction, then the oldest
-    /// entry is force-evicted) so a fully-referenced million-entry map
-    /// can never stall the scheduler thread for a whole clock lap.
     fn insert(&mut self, user: u64, stream: usize) {
-        if let Some(e) = self.map.get_mut(&user) {
-            e.0 = stream;
-            e.1 = true;
-            return; // clock position already exists
-        }
-        while self.map.len() >= self.cap {
-            let mut evicted = false;
-            for _ in 0..64usize.min(self.clock.len()) {
-                let Some(u) = self.clock.pop_front() else {
-                    break;
-                };
-                match self.map.get_mut(&u) {
-                    Some(e) if e.1 => {
-                        e.1 = false;
-                        self.clock.push_back(u); // second chance
-                    }
-                    Some(_) => {
-                        self.map.remove(&u);
-                        evicted = true;
-                        break;
-                    }
-                    None => {} // stale clock slot
-                }
-            }
-            if !evicted {
-                // every scanned entry just used its second chance:
-                // force-evict the oldest rather than keep sweeping
-                match self.clock.pop_front() {
-                    Some(u) => {
-                        self.map.remove(&u);
-                    }
-                    None => break,
-                }
-            }
-        }
-        self.map.insert(user, (stream, true));
-        self.clock.push_back(user);
+        self.0.insert(user, stream);
     }
 
     /// Re-pin every user mapped to `dead_stream` round-robin across the
@@ -137,9 +91,9 @@ impl AffinityMap {
             return 0;
         }
         let mut n = 0u64;
-        for e in self.map.values_mut() {
-            if e.0 == dead_stream {
-                e.0 = live[n as usize % live.len()];
+        for s in self.0.values_mut() {
+            if *s == dead_stream {
+                *s = live[n as usize % live.len()];
                 n += 1;
             }
         }
@@ -230,9 +184,16 @@ fn deliver(
     Delivery::AllClosed
 }
 
-/// Non-blocking spill: hand `b` to the least-loaded live stream other
-/// than `exclude` (the full affine queue being escaped). Err(b) when
-/// every candidate is full or closed — the caller keeps the batch
+/// Non-blocking spill: hand `b` to a live stream other than `exclude`
+/// (the full affine queue being escaped). Placement is *cheapest-miss*,
+/// not pure least-loaded: a stream that served one of this batch's users
+/// on a previous spill holds their (possibly stale) prefix copy — its
+/// engine published the prompt after serving — so landing there turns
+/// the spill's full prefill into a warm partial hit. `warm` remembers
+/// each user's last off-affinity serving stream; when no warm candidate
+/// can take the batch, the least-loaded live stream is used as before.
+/// Ok(true) = warm placement, Ok(false) = least-loaded fallback, Err(b)
+/// when every candidate is full or closed — the caller keeps the batch
 /// pending. The scheduler thread must never block on a spill: blocking
 /// is reserved for the load-balanced path, where it implements
 /// admission backpressure; here it would stall every other batcher
@@ -241,15 +202,45 @@ fn try_spill(
     queues: &[Channel<Batch>],
     rr: &mut usize,
     exclude: usize,
+    warm: &mut AffinityMap,
     b: Batch,
-) -> std::result::Result<(), Batch> {
+) -> std::result::Result<bool, Batch> {
     let n = queues.len();
+    let users: Vec<u64> = b.requests.iter().map(|r| r.user_id).collect();
     let mut b = b;
+    // distinct warm candidates in request order (batches are small)
+    let mut warm_targets: Vec<usize> = Vec::new();
+    for &u in &users {
+        if let Some(t) = warm.get(u) {
+            if t != exclude && t < n && !warm_targets.contains(&t) {
+                warm_targets.push(t);
+            }
+        }
+    }
+    for &t in &warm_targets {
+        if queues[t].is_closed() {
+            continue;
+        }
+        match queues[t].try_send(b) {
+            Ok(()) => {
+                for &u in &users {
+                    warm.insert(u, t);
+                }
+                return Ok(true);
+            }
+            Err(ret) => b = ret,
+        }
+    }
     let mut t = pick_stream(queues, rr, Some(exclude));
     for _ in 0..n {
         if t != exclude {
             match queues[t].try_send(b) {
-                Ok(()) => return Ok(()),
+                Ok(()) => {
+                    for &u in &users {
+                        warm.insert(u, t);
+                    }
+                    return Ok(false);
+                }
                 Err(ret) => b = ret,
             }
         }
@@ -269,6 +260,9 @@ pub struct Coordinator {
     scheduler: Option<JoinHandle<()>>,
     workers: Option<Workers>,
     pub counters: Arc<Counters>,
+    /// shared prefix pool, when configured (owned here for stats; the
+    /// engines hold clones via `EngineConfig::session_pool`)
+    pool: Option<Arc<crate::sessioncache::PrefixPool>>,
 }
 
 impl Coordinator {
@@ -296,6 +290,17 @@ impl Coordinator {
         if serving.session_cache && engine_cfg.session_cache.is_none() {
             engine_cfg.session_cache = Some(SessionCacheConfig::host_default());
         }
+        // shared prefix pool: the cluster coordinator passes one Arc to
+        // every replica; a standalone coordinator with pool_bytes set
+        // creates its own (shared across this process's streams, so even
+        // a single replica recovers spill/repair misses from it)
+        if engine_cfg.session_pool.is_none() {
+            if let Some(pc) = serving.pool_config() {
+                engine_cfg.session_pool =
+                    Some(Arc::new(crate::sessioncache::PrefixPool::new(pc)));
+            }
+        }
+        let pool = engine_cfg.session_pool.clone();
         let affinity = serving.session_cache
             && serving.session_affinity
             && engine_cfg.session_cache.is_some()
@@ -343,6 +348,10 @@ impl Coordinator {
                 .name("xgr-scheduler".into())
                 .spawn(move || {
                     let mut amap = AffinityMap::new(AFFINITY_MAP_CAP);
+                    // user → last off-affinity serving stream: the
+                    // cheapest-miss spill target (that stream's engine
+                    // published the user's prompt after serving them)
+                    let mut warm_map = AffinityMap::new(AFFINITY_MAP_CAP / 16);
                     let mut dead = vec![false; num_streams];
                     let mut rr_user = 0usize; // round-robin user placement
                     let mut rr_pick = 0usize; // least-loaded tiebreak cursor
@@ -476,9 +485,14 @@ impl Coordinator {
                                         Counters::inc(&counters.graph_dispatches);
                                     }
                                     Delivery::Stall(b) if spill => {
-                                        match try_spill(&queues, &mut rr_pick, bi, b)
-                                        {
-                                            Ok(()) => {
+                                        match try_spill(
+                                            &queues,
+                                            &mut rr_pick,
+                                            bi,
+                                            &mut warm_map,
+                                            b,
+                                        ) {
+                                            Ok(warm) => {
                                                 stall_since[bi] = None;
                                                 Counters::inc(
                                                     &counters.graph_dispatches,
@@ -486,6 +500,12 @@ impl Coordinator {
                                                 Counters::inc(
                                                     &counters.affinity_spills,
                                                 );
+                                                if warm {
+                                                    Counters::inc(
+                                                        &counters
+                                                            .affinity_spills_warm,
+                                                    );
+                                                }
                                             }
                                             Err(b) => {
                                                 // every peer full/closed:
@@ -547,7 +567,13 @@ impl Coordinator {
             scheduler: Some(scheduler),
             workers: Some(workers),
             counters,
+            pool,
         })
+    }
+
+    /// The shared prefix pool, when configured.
+    pub fn pool(&self) -> Option<&Arc<crate::sessioncache::PrefixPool>> {
+        self.pool.as_ref()
     }
 
     /// Submit a request; Err(req) when the admission queue is full or the
@@ -581,6 +607,33 @@ impl Coordinator {
             out.push(r);
         }
         out
+    }
+}
+
+impl super::ServingBackend for Coordinator {
+    fn submit(&self, req: RecRequest) -> std::result::Result<(), RecRequest> {
+        Coordinator::submit(self, req)
+    }
+
+    fn submit_blocking(&self, req: RecRequest) -> std::result::Result<(), RecRequest> {
+        Coordinator::submit_blocking(self, req)
+    }
+
+    fn recv_timeout(&self, dur: Duration) -> Option<RecResponse> {
+        Coordinator::recv_timeout(self, dur)
+    }
+
+    fn backend_stats(&self) -> super::BackendStats {
+        let mut s = super::BackendStats::from_counters(&self.counters);
+        if let Some(pool) = &self.pool {
+            let ps = pool.stats();
+            s.pool_ttl_expirations = ps.ttl_expirations;
+            s.pool_peak_bytes = pool.peak_bytes();
+            // surface the pool-global sweep counter in the shared
+            // Counters too (monotone, so fetch_max is idempotent)
+            Counters::max(&self.counters.pool_ttl_expirations, ps.ttl_expirations);
+        }
+        s
     }
 }
 
@@ -942,6 +995,39 @@ mod tests {
         let misses = Counters::get(&counters.session_misses);
         assert!(hits >= 6 * 5, "hit rate must recover after repair: {hits} hits");
         assert!(crate::metrics::session_hit_rate(hits, misses) >= 0.7);
+    }
+
+    #[test]
+    fn try_spill_prefers_the_warm_stream() {
+        let queues: Vec<Channel<Batch>> =
+            (0..3).map(|_| Channel::bounded(2)).collect();
+        let mut warm = AffinityMap::new(16);
+        let mut rr = 0usize;
+        let batch = |u: u64| Batch {
+            requests: vec![RecRequest {
+                id: 0,
+                tokens: vec![1],
+                arrival_ns: 0,
+                user_id: u,
+            }],
+            total_tokens: 1,
+        };
+        // first spill of user 7: no warm copy anywhere → least-loaded
+        assert!(!try_spill(&queues, &mut rr, 0, &mut warm, batch(7)).unwrap());
+        let landed = queues.iter().position(|q| q.len() == 1).unwrap();
+        assert_ne!(landed, 0, "spill must escape the excluded stream");
+        // the landing stream now holds user 7's prefix copy: the next
+        // spill goes there even though the other peer is emptier
+        assert!(
+            try_spill(&queues, &mut rr, 0, &mut warm, batch(7)).unwrap(),
+            "second spill must be warm-placed"
+        );
+        assert_eq!(queues[landed].len(), 2);
+        // warm queue full → least-loaded fallback keeps the batch moving
+        assert!(!try_spill(&queues, &mut rr, 0, &mut warm, batch(7)).unwrap());
+        assert_eq!(queues.iter().map(|q| q.len()).sum::<usize>(), 3);
+        // a different user is unaffected by 7's warm history
+        assert!(!try_spill(&queues, &mut rr, 0, &mut warm, batch(8)).unwrap());
     }
 
     #[test]

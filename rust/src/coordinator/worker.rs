@@ -100,6 +100,11 @@ impl Workers {
                                 Counters::add(&counters.session_swap_ins, s.swap_ins - sess_prev.swap_ins);
                                 Counters::add(&counters.session_evictions, s.evictions - sess_prev.evictions);
                                 Counters::add(&counters.prefill_tokens_saved, s.tokens_saved - sess_prev.tokens_saved);
+                                Counters::add(&counters.pool_hits, s.pool_hits - sess_prev.pool_hits);
+                                Counters::add(&counters.pool_misses, s.pool_misses - sess_prev.pool_misses);
+                                Counters::add(&counters.pool_epoch_drops, s.pool_epoch_drops - sess_prev.pool_epoch_drops);
+                                Counters::max(&counters.session_peak_hbm_bytes, s.peak_hbm_bytes);
+                                Counters::max(&counters.session_peak_dram_bytes, s.peak_dram_bytes);
                                 sess_prev = s;
                             }
                         }

@@ -35,6 +35,7 @@ pub mod beam;
 pub mod simulator;
 pub mod runtime;
 pub mod coordinator;
+pub mod cluster;
 pub mod baselines;
 pub mod server;
 

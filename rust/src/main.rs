@@ -14,6 +14,7 @@
 use std::sync::Arc;
 
 use xgr::baselines;
+use xgr::cluster::ClusterCoordinator;
 use xgr::config::{HardwareProfile, ModelSpec, ServingConfig};
 use xgr::coordinator::{Coordinator, EngineConfig, ExecutorFactory};
 use xgr::itemspace::{Catalog, ItemTrie};
@@ -46,9 +47,11 @@ fn print_help() {
         "xgr — generative recommendation serving (paper reproduction)\n\n\
          USAGE: xgr <serve|replay|simulate|info> [flags]\n\n\
          serve    --artifacts DIR --model NAME --addr HOST:PORT [--engine xgr|vllm|xllm]\n\
+         \u{20}        [--session-cache] [--replicas N] [--pool-bytes B] [--prefix-ttl-us T]\n\
          replay   --requests N --rps R [--dataset amazon|jd] [--engine xgr|vllm|xllm]\n\
          \u{20}        [--artifacts DIR | --mock] [--streams N] [--seed S]\n\
-         \u{20}        [--revisit P] [--session-cache]\n\
+         \u{20}        [--revisit P] [--session-cache] [--replicas N] [--pool-bytes B]\n\
+         \u{20}        [--prefix-ttl-us T]\n\
          simulate --model SPEC --hw ascend|h800 --engine xgr,vllm,xllm,tree\n\
          \u{20}        --rps LIST [--bw N] [--requests N] [--dataset amazon|jd]\n\
          \u{20}        [--revisit P] [--session-cache]\n\
@@ -112,20 +115,15 @@ fn cmd_serve(args: &Args) -> i32 {
     let trie = Arc::new(ItemTrie::build(&catalog));
     let mut serving = ServingConfig::default();
     serving.num_streams = args.usize_or("streams", 2);
+    // xGR-only: the baselines' real systems have no prefix reuse
+    serving.session_cache = args.flag("session-cache") && engine == "xgr";
+    serving.cluster_replicas = args.usize_or("replicas", 1);
+    if serving.session_cache {
+        serving.pool_bytes = args.u64_or("pool-bytes", 0);
+        serving.prefix_ttl_us = args.u64_or("prefix-ttl-us", 0);
+    }
     let serving = serving_for(&engine, &serving);
     let factory = build_factory(args, &engine, &spec);
-    let coord = match Coordinator::start(
-        &serving,
-        engine_cfg_for(&engine),
-        trie,
-        factory,
-    ) {
-        Ok(c) => c,
-        Err(e) => {
-            eprintln!("error: {e:#}");
-            return 2;
-        }
-    };
     let addr = args.str_or("addr", "127.0.0.1:7878");
     let server = match TcpServer::bind(&addr) {
         Ok(s) => s,
@@ -135,15 +133,45 @@ fn cmd_serve(args: &Args) -> i32 {
         }
     };
     println!(
-        "xgr serving {} ({} params) on {} — engine={engine}, {} streams",
+        "xgr serving {} ({} params) on {} — engine={engine}, {} streams × {} replicas",
         spec.name,
         spec.params(),
         server.local_addr(),
         serving.num_streams,
+        serving.cluster_replicas,
     );
     println!("protocol: REC <tok,tok,...> | PING | QUIT");
-    server.serve(&coord);
-    coord.shutdown();
+    if serving.cluster_replicas > 1 {
+        let cluster = match ClusterCoordinator::start(
+            &serving,
+            engine_cfg_for(&engine),
+            trie,
+            factory,
+        ) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("error: {e:#}");
+                return 2;
+            }
+        };
+        server.serve(&cluster);
+        cluster.shutdown();
+    } else {
+        let coord = match Coordinator::start(
+            &serving,
+            engine_cfg_for(&engine),
+            trie,
+            factory,
+        ) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("error: {e:#}");
+                return 2;
+            }
+        };
+        server.serve(&coord);
+        coord.shutdown();
+    }
     0
 }
 
@@ -170,30 +198,56 @@ fn cmd_replay(args: &Args) -> i32 {
     serving.batch_wait_us = args.u64_or("batch-wait-us", 1000);
     // xGR-only: the baselines' real systems have no prefix reuse
     serving.session_cache = args.flag("session-cache") && engine == "xgr";
+    serving.cluster_replicas = args.usize_or("replicas", 1);
+    if serving.session_cache {
+        serving.pool_bytes = args.u64_or("pool-bytes", 0);
+        serving.prefix_ttl_us = args.u64_or("prefix-ttl-us", 0);
+    }
     let serving = serving_for(&engine, &serving);
     let factory = build_factory(args, &engine, &spec);
-    let coord = match Coordinator::start(
-        &serving,
-        engine_cfg_for(&engine),
-        trie,
-        factory,
-    ) {
-        Ok(c) => c,
-        Err(e) => {
-            eprintln!("error: {e:#}");
-            return 2;
-        }
-    };
     println!(
-        "replaying {} requests at {:.1} rps through {} ({} streams, engine={engine})",
+        "replaying {} requests at {:.1} rps through {} ({} streams × {} replicas, engine={engine})",
         trace.len(),
         trace.offered_rps(),
         spec.name,
-        serving.num_streams
+        serving.num_streams,
+        serving.cluster_replicas,
     );
-    let report = replay_trace(&coord, &trace, args.f64_or("speedup", 1.0));
+    let speedup = args.f64_or("speedup", 1.0);
+    let report = if serving.cluster_replicas > 1 {
+        let cluster = match ClusterCoordinator::start(
+            &serving,
+            engine_cfg_for(&engine),
+            trie,
+            factory,
+        ) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("error: {e:#}");
+                return 2;
+            }
+        };
+        let report = replay_trace(&cluster, &trace, speedup);
+        cluster.shutdown();
+        report
+    } else {
+        let coord = match Coordinator::start(
+            &serving,
+            engine_cfg_for(&engine),
+            trie,
+            factory,
+        ) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("error: {e:#}");
+                return 2;
+            }
+        };
+        let report = replay_trace(&coord, &trace, speedup);
+        coord.shutdown();
+        report
+    };
     println!("{}", report.summary());
-    coord.shutdown();
     0
 }
 

@@ -34,9 +34,26 @@ pub struct Counters {
     /// batches delivered off their affine stream by the spill policy
     /// (affinity held too long under load, bounded price paid instead)
     pub affinity_spills: AtomicU64,
+    /// spills placed on the stream holding the users' (possibly stale)
+    /// prefix copy — the cheapest-miss target — instead of pure
+    /// least-loaded (subset of `affinity_spills`)
+    pub affinity_spills_warm: AtomicU64,
     /// users re-pinned to a surviving stream after their affine stream's
     /// worker died (dead-stream affinity repair)
     pub affinity_repairs: AtomicU64,
+    /// local session-cache misses recovered from the shared cross-replica
+    /// prefix pool (each pays a pool swap-in)
+    pub pool_hits: AtomicU64,
+    /// pool consultations that found nothing reusable
+    pub pool_misses: AtomicU64,
+    /// pooled entries reclaimed by the TTL staleness sweep
+    pub pool_ttl_expirations: AtomicU64,
+    /// local prefix copies dropped because the pool advertised a newer
+    /// epoch (divergent republish on another replica)
+    pub pool_epoch_drops: AtomicU64,
+    /// session-cache tier occupancy peaks (folded with `Counters::max`)
+    pub session_peak_hbm_bytes: AtomicU64,
+    pub session_peak_dram_bytes: AtomicU64,
 }
 
 impl Counters {
@@ -57,6 +74,12 @@ impl Counters {
     #[inline]
     pub fn get(c: &AtomicU64) -> u64 {
         c.load(Ordering::Relaxed)
+    }
+
+    /// Fold a gauge-style peak into a counter (running maximum).
+    #[inline]
+    pub fn max(c: &AtomicU64, v: u64) {
+        c.fetch_max(v, Ordering::Relaxed);
     }
 }
 

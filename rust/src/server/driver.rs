@@ -1,10 +1,13 @@
-//! Trace replay driver: feed a workload trace through a live coordinator
-//! at its recorded arrival times (open loop), collect latency and
-//! throughput — the real-mode analogue of the DES end-to-end runs.
+//! Trace replay driver: feed a workload trace through a live serving
+//! backend at its recorded arrival times (open loop), collect latency
+//! and throughput — the real-mode analogue of the DES end-to-end runs.
+//! Generic over [`ServingBackend`], so a single [`Coordinator`] and a
+//! multi-replica [`crate::cluster::ClusterCoordinator`] replay the same
+//! trace through the same harness.
 
-use crate::coordinator::{Coordinator, RecRequest};
-use crate::metrics::{session_hit_rate, Counters, Histogram};
-use crate::util::{fmt_ns, now_ns};
+use crate::coordinator::{BackendStats, RecRequest, ServingBackend};
+use crate::metrics::{session_hit_rate, Histogram};
+use crate::util::{fmt_bytes, fmt_ns, now_ns};
 use crate::workload::Trace;
 use std::time::Duration;
 
@@ -20,9 +23,23 @@ pub struct ReplayReport {
     pub session_hits: u64,
     pub session_misses: u64,
     pub prefill_tokens_saved: u64,
+    /// tier residency and swap traffic (PR 1 counters, now surfaced)
+    pub session_swap_ins: u64,
+    pub session_evictions: u64,
+    pub session_peak_hbm_bytes: u64,
+    pub session_peak_dram_bytes: u64,
     /// affinity routing activity (zero with affinity or spilling off)
     pub affinity_spills: u64,
+    /// spills placed on the stream holding a stale prefix copy
+    pub affinity_spills_warm: u64,
     pub affinity_repairs: u64,
+    /// shared cross-replica pool activity (zero without a pool)
+    pub pool_hits: u64,
+    pub pool_misses: u64,
+    pub pool_ttl_expirations: u64,
+    pub pool_epoch_drops: u64,
+    /// session hit rate per replica (one element for a single engine)
+    pub per_replica_hit_rates: Vec<f64>,
 }
 
 impl ReplayReport {
@@ -52,24 +69,66 @@ impl ReplayReport {
         );
         if self.session_hits + self.session_misses > 0 {
             s.push_str(&format!(
-                " session_hit_rate={:.2} prefill_saved={}",
+                " session_hit_rate={:.2} prefill_saved={} swap_ins={} \
+                 evictions={} hbm_peak={} dram_peak={}",
                 self.session_hit_rate(),
-                self.prefill_tokens_saved
+                self.prefill_tokens_saved,
+                self.session_swap_ins,
+                self.session_evictions,
+                fmt_bytes(self.session_peak_hbm_bytes),
+                fmt_bytes(self.session_peak_dram_bytes),
             ));
         }
         if self.affinity_spills + self.affinity_repairs > 0 {
             s.push_str(&format!(
-                " affinity_spills={} affinity_repairs={}",
-                self.affinity_spills, self.affinity_repairs
+                " affinity_spills={} (warm={}) affinity_repairs={}",
+                self.affinity_spills, self.affinity_spills_warm, self.affinity_repairs
             ));
+        }
+        if self.pool_hits + self.pool_misses + self.pool_ttl_expirations > 0 {
+            s.push_str(&format!(
+                " pool_hits={} pool_ttl_expired={} pool_epoch_drops={}",
+                self.pool_hits, self.pool_ttl_expirations, self.pool_epoch_drops
+            ));
+        }
+        if self.per_replica_hit_rates.len() > 1 {
+            let rates: Vec<String> = self
+                .per_replica_hit_rates
+                .iter()
+                .map(|r| format!("{r:.2}"))
+                .collect();
+            s.push_str(&format!(" replica_hit_rates=[{}]", rates.join(",")));
         }
         s
     }
+
+    fn apply_stats(&mut self, st: &BackendStats) {
+        self.session_hits = st.session_hits;
+        self.session_misses = st.session_misses;
+        self.prefill_tokens_saved = st.prefill_tokens_saved;
+        self.session_swap_ins = st.session_swap_ins;
+        self.session_evictions = st.session_evictions;
+        self.session_peak_hbm_bytes = st.session_peak_hbm_bytes;
+        self.session_peak_dram_bytes = st.session_peak_dram_bytes;
+        self.affinity_spills = st.affinity_spills;
+        self.affinity_spills_warm = st.affinity_spills_warm;
+        self.affinity_repairs = st.affinity_repairs;
+        self.pool_hits = st.pool_hits;
+        self.pool_misses = st.pool_misses;
+        self.pool_ttl_expirations = st.pool_ttl_expirations;
+        self.pool_epoch_drops = st.pool_epoch_drops;
+        self.per_replica_hit_rates = st.per_replica_hit_rates.clone();
+    }
 }
 
-/// Replay `trace` through `coord`. `speedup` rescales inter-arrival gaps
-/// (>1 = faster than recorded). Blocks until every request resolves.
-pub fn replay_trace(coord: &Coordinator, trace: &Trace, speedup: f64) -> ReplayReport {
+/// Replay `trace` through `coord` (a single engine or a whole replica
+/// cluster). `speedup` rescales inter-arrival gaps (>1 = faster than
+/// recorded). Blocks until every request resolves.
+pub fn replay_trace<B: ServingBackend>(
+    coord: &B,
+    trace: &Trace,
+    speedup: f64,
+) -> ReplayReport {
     let t_start = now_ns();
     let mut latency = Histogram::new();
     let mut completed = 0u64;
@@ -78,7 +137,7 @@ pub fn replay_trace(coord: &Coordinator, trace: &Trace, speedup: f64) -> ReplayR
     let mut total_items = 0u64;
     let mut submitted = 0u64;
 
-    let drain = |coord: &Coordinator,
+    let drain = |coord: &B,
                      latency: &mut Histogram,
                      completed: &mut u64,
                      valid: &mut u64,
@@ -135,19 +194,31 @@ pub fn replay_trace(coord: &Coordinator, trace: &Trace, speedup: f64) -> ReplayR
             break; // timed out — report what we have
         }
     }
-    ReplayReport {
+    let mut report = ReplayReport {
         latency,
         completed,
         rejected,
         wall_s: (now_ns() - t_start) as f64 / 1e9,
         valid_items,
         total_items,
-        session_hits: Counters::get(&coord.counters.session_hits),
-        session_misses: Counters::get(&coord.counters.session_misses),
-        prefill_tokens_saved: Counters::get(&coord.counters.prefill_tokens_saved),
-        affinity_spills: Counters::get(&coord.counters.affinity_spills),
-        affinity_repairs: Counters::get(&coord.counters.affinity_repairs),
-    }
+        session_hits: 0,
+        session_misses: 0,
+        prefill_tokens_saved: 0,
+        session_swap_ins: 0,
+        session_evictions: 0,
+        session_peak_hbm_bytes: 0,
+        session_peak_dram_bytes: 0,
+        affinity_spills: 0,
+        affinity_spills_warm: 0,
+        affinity_repairs: 0,
+        pool_hits: 0,
+        pool_misses: 0,
+        pool_ttl_expirations: 0,
+        pool_epoch_drops: 0,
+        per_replica_hit_rates: Vec::new(),
+    };
+    report.apply_stats(&coord.backend_stats());
+    report
 }
 
 #[cfg(test)]
@@ -188,6 +259,46 @@ mod tests {
         assert_eq!(report.valid_items, report.total_items);
         assert_eq!(report.session_hits + report.session_misses, 0, "cache off");
         coord.shutdown();
+    }
+
+    #[test]
+    fn replay_drives_a_cluster_backend_through_the_same_harness() {
+        let mut spec = ModelSpec::onerec_tiny();
+        spec.vocab = 64;
+        spec.beam_width = 4;
+        spec.seq = 48;
+        let catalog = Catalog::generate(64, 400, 3);
+        let trie = Arc::new(ItemTrie::build(&catalog));
+        let mut serving = ServingConfig::default();
+        serving.num_streams = 2;
+        serving.batch_wait_us = 200;
+        serving.session_cache = true;
+        serving.cluster_replicas = 2;
+        serving.pool_bytes = 32 << 20;
+        let factory: crate::coordinator::ExecutorFactory = {
+            let spec = spec.clone();
+            Arc::new(move || Ok(Box::new(MockExecutor::new(spec.clone())) as _))
+        };
+        let cluster = crate::cluster::ClusterCoordinator::start(
+            &serving,
+            EngineConfig::default(),
+            trie,
+            factory,
+        )
+        .unwrap();
+        let trace = AmazonLike::for_seq_bucket(48)
+            .with_revisit(0.7)
+            .generate(&catalog, 40, 400.0, 7);
+        let report = replay_trace(&cluster, &trace, 1.0);
+        assert_eq!(report.completed, 40);
+        assert_eq!(report.valid_items, report.total_items);
+        assert_eq!(
+            report.per_replica_hit_rates.len(),
+            2,
+            "cluster stats must be per-replica"
+        );
+        assert!(report.session_hits > 0, "revisit trace must hit somewhere");
+        cluster.shutdown();
     }
 
     #[test]

@@ -15,7 +15,7 @@
 //! arriving after its request timed out is dropped for *that* waiter
 //! only instead of stealing some other connection's response.
 
-use crate::coordinator::{Coordinator, RecRequest, RecResponse};
+use crate::coordinator::{RecRequest, RecResponse, ServingBackend};
 use crate::util::now_ns;
 use crate::util::pool::Channel;
 use std::collections::HashMap;
@@ -59,7 +59,10 @@ impl TcpServer {
     /// Serve until the stop flag is set: one thread per accepted
     /// connection plus a demux thread for responses. Returns after every
     /// connection thread has exited (connections end on QUIT/EOF).
-    pub fn serve(&self, coord: &Coordinator) {
+    /// Generic over the backend: a single [`crate::coordinator::Coordinator`]
+    /// and a multi-replica [`crate::cluster::ClusterCoordinator`] serve
+    /// the same line protocol.
+    pub fn serve<B: ServingBackend>(&self, coord: &B) {
         let waiters: Waiters = Mutex::new(HashMap::new());
         // open-connection count: the demux must keep draining while ANY
         // connection thread is alive (not merely while someone is mid-
@@ -118,10 +121,10 @@ impl TcpServer {
         });
     }
 
-    fn handle(
+    fn handle<B: ServingBackend>(
         &self,
         stream: TcpStream,
-        coord: &Coordinator,
+        coord: &B,
         waiters: &Waiters,
     ) -> crate::Result<()> {
         stream.set_nonblocking(false)?;
@@ -274,6 +277,53 @@ mod tests {
         r.read_line(&mut line).unwrap();
         assert!(line.starts_with("ERR"));
 
+        writeln!(s, "QUIT").unwrap();
+        stop.store(true, Ordering::Relaxed);
+        drop(s);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_serves_a_cluster_backend() {
+        let mut spec = ModelSpec::onerec_tiny();
+        spec.vocab = 64;
+        spec.beam_width = 4;
+        let catalog = Catalog::generate(64, 300, 4);
+        let trie = Arc::new(ItemTrie::build(&catalog));
+        let mut serving = ServingConfig::default();
+        serving.batch_wait_us = 100;
+        serving.session_cache = true;
+        serving.cluster_replicas = 2;
+        serving.pool_bytes = 16 << 20;
+        let factory: crate::coordinator::ExecutorFactory = {
+            let spec = spec.clone();
+            Arc::new(move || Ok(Box::new(MockExecutor::new(spec.clone())) as _))
+        };
+        let cluster = crate::cluster::ClusterCoordinator::start(
+            &serving,
+            EngineConfig::default(),
+            trie,
+            factory,
+        )
+        .unwrap();
+        let server = TcpServer::bind("127.0.0.1:0").unwrap();
+        let addr = server.local_addr();
+        let stop = server.stop_flag();
+        let h = std::thread::spawn(move || {
+            server.serve(&cluster);
+            cluster.shutdown();
+        });
+        let mut s = TcpStream::connect(&addr).unwrap();
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        let mut line = String::new();
+        // same user over several turns: the cluster front-end answers the
+        // identical protocol a single coordinator does
+        for turn in 0..3 {
+            line.clear();
+            writeln!(s, "REC@11 1,2,3,{}", 10 + turn).unwrap();
+            r.read_line(&mut line).unwrap();
+            assert!(line.starts_with("OK "), "turn {turn} got {line:?}");
+        }
         writeln!(s, "QUIT").unwrap();
         stop.store(true, Ordering::Relaxed);
         drop(s);

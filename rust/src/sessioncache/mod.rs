@@ -28,14 +28,51 @@
 //! → serve → `publish` (store the grown prefix, unpin) or `release` on
 //! failure. The engine drives this in real mode; the DES drives the same
 //! object in lengths-only mode at cluster scale.
+//!
+//! # Cluster mode: the shared cross-replica prefix pool
+//!
+//! With `ServingConfig::cluster_replicas > 1` the serving stack runs N
+//! engine replicas behind the cache-aware router in [`crate::cluster`].
+//! Each replica keeps its own per-stream session caches, and all of them
+//! share one [`pool::PrefixPool`] — a DRAM tier of *serialized* prefix
+//! entries (`attach_pool`). The walkthrough:
+//!
+//! 1. **Publish** — after serving a request, `publish` stores the grown
+//!    prefix locally *and* pushes a [`pool::PrefixEntry`] (user id,
+//!    token hash chain, byte size, epoch, timestamp) into the pool.
+//! 2. **Re-route** — when the user's next request lands on a *different*
+//!    replica (affinity spill, dead-stream repair, a killed replica, or
+//!    plain router load-balancing), that replica's local lookup misses,
+//!    consults the pool, and swaps the pooled span in over the H2D link
+//!    instead of paying a full prefill.
+//! 3. **Invalidate** — a divergent republish bumps the entry's epoch;
+//!    replicas holding copies built against an older epoch lazily drop
+//!    them, and a publish from a superseded base epoch is rejected, so
+//!    an old prefix never resurrects.
+//! 4. **Expire** — entries older than `ServingConfig::prefix_ttl_us`
+//!    are reclaimed by a periodic sweep (surfaced as
+//!    `Counters::pool_ttl_expirations`); pinned entries are never swept.
+//!
+//! Sizing guidance — `pool_bytes` vs. per-replica `session_dram_bytes`:
+//! the pool holds **one** copy per user for the whole fleet, so when
+//! re-routing is common (spill-heavy load, frequent repairs, many
+//! replicas serving the same users) pool bytes buy more hit coverage
+//! than the same bytes split across per-replica DRAM tiers. Prefer
+//! per-replica DRAM when affinity is strong (users rarely move — local
+//! swap-ins skip the pool's serialization and epoch traffic) or when
+//! swap-in bandwidth, not capacity, is the bottleneck.
 
 pub mod index;
+pub mod pool;
 pub mod tier;
 
 pub use index::{MatchKind, PrefixIndex};
+pub use pool::{PoolConfig, PoolStats, PrefixEntry, PrefixPool, Publish};
 pub use tier::{Tier, TierManager, TierStats};
 
 use crate::config::HardwareProfile;
+use std::collections::HashMap;
+use std::sync::Arc;
 
 /// Budgets and toggles for the session cache.
 #[derive(Clone, Debug, PartialEq)]
@@ -78,6 +115,14 @@ pub struct SessionStats {
     pub swap_ins: u64,
     /// bytes streamed DRAM→HBM for those hits
     pub swap_in_bytes: u64,
+    /// local misses recovered from the shared cross-replica pool
+    pub pool_hits: u64,
+    /// pool consultations that found nothing reusable
+    pub pool_misses: u64,
+    /// bytes swapped in from the pool (subset of `swap_in_bytes`)
+    pub pool_swap_in_bytes: u64,
+    /// local copies dropped because the pool advertised a newer epoch
+    pub pool_epoch_drops: u64,
 }
 
 /// Flat counter snapshot for cross-thread propagation (worker → shared
@@ -89,6 +134,12 @@ pub struct SessionSnapshot {
     pub swap_ins: u64,
     pub evictions: u64,
     pub tokens_saved: u64,
+    pub pool_hits: u64,
+    pub pool_misses: u64,
+    pub pool_epoch_drops: u64,
+    /// tier occupancy peaks (gauges, folded with fetch_max)
+    pub peak_hbm_bytes: u64,
+    pub peak_dram_bytes: u64,
 }
 
 /// Result of consulting the cache for one request.
@@ -100,13 +151,26 @@ pub struct Lookup {
     pub tier: Option<Tier>,
     /// bytes swapped in from the DRAM tier (0 on HBM hits / misses)
     pub swap_in_bytes: u64,
+    /// the hit was recovered from the shared cross-replica pool (the
+    /// swap-in streamed pooled bytes, not this replica's DRAM tier)
+    pub pool_hit: bool,
 }
 
-/// The session cache: prefix index + tiered residency, kept in sync.
+/// The session cache: prefix index + tiered residency, kept in sync,
+/// optionally backed by a shared cross-replica [`PrefixPool`].
 pub struct SessionCache {
     bytes_per_token: u64,
     index: PrefixIndex,
     tiers: TierManager,
+    pool: Option<Arc<PrefixPool>>,
+    /// pool epoch each locally-cached prefix was built against
+    pool_epochs: HashMap<u64, u32>,
+    /// pool pins THIS cache holds per user (pool-hit lookups in flight).
+    /// Unpinning must be exactly balanced against these — an
+    /// unconditional unpin would release a pin held by another
+    /// stream/replica for the same user and let the sweep drop an entry
+    /// backing their in-flight swap-in.
+    pool_pins: HashMap<u64, u32>,
     dropped_scratch: Vec<u64>,
     pub stats: SessionStats,
 }
@@ -117,9 +181,23 @@ impl SessionCache {
             bytes_per_token,
             index: PrefixIndex::new(),
             tiers: TierManager::new(cfg.hbm_bytes, cfg.dram_bytes),
+            pool: None,
+            pool_epochs: HashMap::new(),
+            pool_pins: HashMap::new(),
             dropped_scratch: Vec::new(),
             stats: SessionStats::default(),
         }
+    }
+
+    /// Back this cache with a shared cross-replica prefix pool: local
+    /// misses consult it, publishes feed it, and epoch bumps from other
+    /// replicas lazily invalidate local copies.
+    pub fn attach_pool(&mut self, pool: Arc<PrefixPool>) {
+        self.pool = Some(pool);
+    }
+
+    pub fn pool(&self) -> Option<&Arc<PrefixPool>> {
+        self.pool.as_ref()
     }
 
     /// Consult the cache at request start. On a hit the entry is pinned
@@ -132,18 +210,52 @@ impl SessionCache {
     /// produced), so the clamped value — and `tokens_saved` — reflect
     /// prefill work actually skipped.
     pub fn lookup(&mut self, user: u64, tokens: &[u32], prompt_len: usize) -> Lookup {
-        let (m, kind) = self.index.match_prefix(user, tokens, prompt_len);
+        self.lookup_at(user, tokens, prompt_len, crate::util::now_ns() / 1_000)
+    }
+
+    /// [`Self::lookup`] with an explicit clock (microseconds) — the DES
+    /// passes simulated time so pool TTLs run on the virtual clock.
+    pub fn lookup_at(
+        &mut self,
+        user: u64,
+        tokens: &[u32],
+        prompt_len: usize,
+        now_us: u64,
+    ) -> Lookup {
+        let (mut m, kind) = self.index.match_prefix(user, tokens, prompt_len);
+        // lazy staleness drop: a pool epoch newer than the one this
+        // replica's copy was built against means another replica
+        // republished divergently — stop advertising the superseded
+        // copy. A local copy with NO recorded epoch while the pool holds
+        // one was never reconciled with the pooled lineage (e.g. its
+        // epoch record was cleared by a stale publish while pinned):
+        // treat it as superseded too, never as current.
+        if m > 0 {
+            if let Some(pool) = &self.pool {
+                if let Some(cur) = pool.current_epoch(user) {
+                    let stale = match self.pool_epochs.get(&user) {
+                        Some(&seen) => seen < cur,
+                        None => true,
+                    };
+                    if stale && !self.tiers.is_pinned(user) {
+                        self.index.remove(user);
+                        self.tiers.remove(user);
+                        self.pool_epochs.remove(&user);
+                        self.stats.pool_epoch_drops += 1;
+                        m = 0;
+                    }
+                }
+            }
+        }
         let m = m.min(prompt_len.saturating_sub(1));
         if m == 0 {
-            self.stats.misses += 1;
-            return Lookup::default();
+            return self.lookup_pool(user, tokens, prompt_len, now_us);
         }
         let Some(tier_before) = self.tiers.tier_of(user) else {
             // index/tier desync can only mean the entry was dropped;
             // treat as a miss and heal
             self.index.remove(user);
-            self.stats.misses += 1;
-            return Lookup::default();
+            return self.lookup_pool(user, tokens, prompt_len, now_us);
         };
         self.stats.hits += 1;
         if kind == MatchKind::Extension {
@@ -162,11 +274,103 @@ impl SessionCache {
             self.stats.swap_in_bytes += swap;
         }
         for u in dropped.drain(..) {
-            self.index.remove(u);
+            self.forget(u);
         }
         self.dropped_scratch = dropped;
         self.tiers.pin(user);
-        Lookup { hit_tokens: m, tier: Some(tier_before), swap_in_bytes: swap }
+        Lookup { hit_tokens: m, tier: Some(tier_before), swap_in_bytes: swap, pool_hit: false }
+    }
+
+    /// Local miss path: consult the shared pool before giving up. A pool
+    /// hit streams the matched span to the device (swap-in), adopts the
+    /// prefix into the local index/tiers so the user's *next* visit hits
+    /// locally, and pins both the local and pooled entries until
+    /// `publish`/`release`.
+    fn lookup_pool(
+        &mut self,
+        user: u64,
+        tokens: &[u32],
+        prompt_len: usize,
+        now_us: u64,
+    ) -> Lookup {
+        let Some(pool) = self.pool.clone() else {
+            self.stats.misses += 1;
+            return Lookup::default();
+        };
+        let Some(entry) = pool.lookup(user, now_us) else {
+            self.stats.pool_misses += 1;
+            self.stats.misses += 1;
+            return Lookup::default();
+        };
+        // record the OBSERVED epoch even when nothing matches: the
+        // publish after this request must carry it as its base, so a
+        // genuinely divergent new prompt is accepted as a divergence
+        // bump rather than rejected as a stale lineage forever
+        self.pool_epochs.insert(user, entry.epoch);
+        let pm = entry.match_len(tokens, prompt_len).min(prompt_len.saturating_sub(1));
+        if pm == 0 {
+            self.stats.pool_misses += 1;
+            self.stats.misses += 1;
+            return Lookup::default();
+        }
+        pool.pin(user);
+        *self.pool_pins.entry(user).or_insert(0) += 1;
+        // adopt locally so subsequent revisits hit this replica's tiers
+        let bytes = pm as u64 * self.bytes_per_token;
+        let mut dropped = std::mem::take(&mut self.dropped_scratch);
+        if tokens.is_empty() {
+            self.index.publish(user, &[], pm);
+        } else {
+            self.index.publish(user, &tokens[..pm], pm);
+        }
+        if self.tiers.put(user, bytes, &mut dropped) {
+            self.tiers.pin(user);
+        } else {
+            // no local room (everything pinned): the span is still
+            // streamed for this request, it just does not become resident
+            self.index.remove(user);
+            self.tiers.remove(user);
+        }
+        for u in dropped.drain(..) {
+            self.forget(u);
+        }
+        self.dropped_scratch = dropped;
+        self.stats.hits += 1;
+        self.stats.pool_hits += 1;
+        self.stats.tokens_saved += pm as u64;
+        self.stats.swap_ins += 1;
+        self.stats.swap_in_bytes += bytes;
+        self.stats.pool_swap_in_bytes += bytes;
+        Lookup {
+            hit_tokens: pm,
+            tier: Some(Tier::Dram),
+            swap_in_bytes: bytes,
+            pool_hit: true,
+        }
+    }
+
+    /// Drop every local trace of `user` (index + epoch bookkeeping); the
+    /// tier entry is already gone when this is called from eviction.
+    /// Pool pins are NOT touched — they track in-flight requests, not
+    /// residency.
+    fn forget(&mut self, user: u64) {
+        self.index.remove(user);
+        self.pool_epochs.remove(&user);
+    }
+
+    /// Release one of THIS cache's pool pins for `user`, if any. A
+    /// request that never pool-pinned (local hit, plain miss) must not
+    /// unpin the shared entry out from under another stream's in-flight
+    /// swap-in.
+    fn pool_unpin_one(&mut self, user: u64) {
+        let Some(pool) = &self.pool else { return };
+        if let Some(c) = self.pool_pins.get_mut(&user) {
+            *c -= 1;
+            if *c == 0 {
+                self.pool_pins.remove(&user);
+            }
+            pool.unpin(user);
+        }
     }
 
     /// Publish the (grown) prefix after the request completed: unpin,
@@ -180,6 +384,18 @@ impl SessionCache {
     /// old one, dropped outright when the prompt diverged (a truncation
     /// of the *new* tokens would alias KV computed for the old ones).
     pub fn publish(&mut self, user: u64, tokens: &[u32], prompt_len: usize) {
+        self.publish_at(user, tokens, prompt_len, crate::util::now_ns() / 1_000)
+    }
+
+    /// [`Self::publish`] with an explicit clock (microseconds); see
+    /// [`Self::lookup_at`].
+    pub fn publish_at(
+        &mut self,
+        user: u64,
+        tokens: &[u32],
+        prompt_len: usize,
+        now_us: u64,
+    ) {
         self.tiers.unpin(user);
         // how the new prompt relates to the stored prefix — captured
         // before `index.publish` overwrites the entry, for the pinned
@@ -210,14 +426,55 @@ impl SessionCache {
             }
         }
         for u in dropped.drain(..) {
-            self.index.remove(u);
+            self.forget(u);
         }
         self.dropped_scratch = dropped;
+        // feed the shared pool regardless of local tier admission: the
+        // pool budget is independent DRAM, and a prefix too large for
+        // this replica's tiers may still serve a re-routed revisit
+        self.pool_unpin_one(user);
+        if let Some(pool) = self.pool.clone() {
+            if len > 0 {
+                let entry = PrefixEntry::from_tokens(
+                    user,
+                    tokens,
+                    len,
+                    self.bytes_per_token,
+                    now_us,
+                );
+                // base = the epoch this replica last OBSERVED (recorded
+                // at pool lookup or a previous Stored). Never substitute
+                // the pool's current epoch: a publisher that lost its
+                // record must not be able to pass a superseded lineage
+                // off as a fresh divergence (resurrection).
+                let base = self.pool_epochs.get(&user).copied().unwrap_or(0);
+                match pool.publish(&entry, base, now_us) {
+                    Publish::Stored(epoch) => {
+                        self.pool_epochs.insert(user, epoch);
+                    }
+                    Publish::Stale => {
+                        // another replica moved the lineage forward while
+                        // we served: our copy is superseded — drop it
+                        if !self.tiers.is_pinned(user) {
+                            self.index.remove(user);
+                            self.tiers.remove(user);
+                        }
+                        self.pool_epochs.remove(&user);
+                        self.stats.pool_epoch_drops += 1;
+                    }
+                    Publish::NoRoom => {
+                        // the pool is unchanged: keep the recorded base
+                        // (our local copy is still the lineage we saw)
+                    }
+                }
+            }
+        }
     }
 
     /// Abandon a looked-up request without publishing (request failed).
     pub fn release(&mut self, user: u64) {
         self.tiers.unpin(user);
+        self.pool_unpin_one(user);
     }
 
     pub fn hit_rate(&self) -> f64 {
@@ -239,6 +496,11 @@ impl SessionCache {
             swap_ins: self.stats.swap_ins,
             evictions: self.evictions(),
             tokens_saved: self.stats.tokens_saved,
+            pool_hits: self.stats.pool_hits,
+            pool_misses: self.stats.pool_misses,
+            pool_epoch_drops: self.stats.pool_epoch_drops,
+            peak_hbm_bytes: self.hbm_peak(),
+            peak_dram_bytes: self.dram_peak(),
         }
     }
 
@@ -400,6 +662,128 @@ mod tests {
         let l = c.lookup(1, &[], 60);
         assert_eq!(l.hit_tokens, 0, "dropped entry must not match");
         assert!(c.evictions() >= 2);
+    }
+
+    fn pooled_cache(hbm_tokens: u64, pool: &Arc<PrefixPool>) -> SessionCache {
+        let mut c = cache(hbm_tokens, hbm_tokens);
+        c.attach_pool(pool.clone());
+        c
+    }
+
+    #[test]
+    fn rerouted_user_recovers_prefix_from_the_pool() {
+        let pool = Arc::new(PrefixPool::new(PoolConfig {
+            pool_bytes: 10_000 * BPT,
+            prefix_ttl_us: 0,
+        }));
+        let mut a = pooled_cache(1000, &pool); // replica A
+        let mut b = pooled_cache(1000, &pool); // replica B
+        let t1: Vec<u32> = (0..30).collect();
+        // user 7 served on A: published locally AND into the pool
+        assert_eq!(a.lookup_at(7, &t1, 30, 0).hit_tokens, 0);
+        a.publish_at(7, &t1, 30, 0);
+        // re-route to B: local miss, pool hit covering the shared span
+        let mut t2 = t1.clone();
+        t2.extend_from_slice(&[40, 41, 42]);
+        let l = b.lookup_at(7, &t2, 33, 1);
+        assert!(l.pool_hit, "re-route must be pool-recoverable");
+        assert_eq!(l.hit_tokens, 30);
+        assert_eq!(l.swap_in_bytes, 30 * BPT);
+        b.publish_at(7, &t2, 33, 1);
+        assert_eq!(b.stats.pool_hits, 1);
+        assert_eq!(b.stats.pool_swap_in_bytes, 30 * BPT);
+        // B's copy is now local: the next visit does not touch the pool
+        let hits_before = pool.stats().hits;
+        let l = b.lookup_at(7, &t2, 33, 2);
+        assert!(!l.pool_hit);
+        assert_eq!(l.hit_tokens, 32, "full-prompt hit clamps to len-1");
+        b.release(7);
+        assert_eq!(pool.stats().hits, hits_before);
+    }
+
+    #[test]
+    fn divergent_republish_invalidates_the_other_replicas_copy() {
+        let pool = Arc::new(PrefixPool::new(PoolConfig {
+            pool_bytes: 10_000 * BPT,
+            prefix_ttl_us: 0,
+        }));
+        let mut a = pooled_cache(1000, &pool);
+        let mut b = pooled_cache(1000, &pool);
+        let t: Vec<u32> = (0..20).collect();
+        a.publish_at(1, &t, 20, 0);
+        // B adopts the prefix via the pool
+        let l = b.lookup_at(1, &t, 20, 1);
+        assert!(l.pool_hit);
+        b.publish_at(1, &t, 20, 1);
+        // A republishes a DIVERGED history (upstream rewrite) that still
+        // shares the first 10 tokens — so B's token-exact index would
+        // still claim a partial local hit, and only the epoch can tell B
+        // its copy belongs to a dead lineage
+        let diverged: Vec<u32> = t.iter().copied().take(10).chain(100..120).collect();
+        a.publish_at(1, &diverged, 30, 2);
+        assert!(pool.stats().epoch_invalidations >= 1);
+        // B's local copy is lazily dropped on its next lookup; the pool
+        // then serves the NEW lineage, never the old one
+        let l = b.lookup_at(1, &diverged, 30, 3);
+        assert!(l.pool_hit, "stale copy dropped, new lineage adopted");
+        assert_eq!(l.hit_tokens, 29);
+        assert!(b.stats.pool_epoch_drops >= 1);
+        b.release(1);
+    }
+
+    #[test]
+    fn local_hit_publish_never_unpins_another_replicas_pool_pin() {
+        let pool = Arc::new(PrefixPool::new(PoolConfig {
+            pool_bytes: 10_000 * BPT,
+            prefix_ttl_us: 100,
+        }));
+        let mut a = pooled_cache(1000, &pool);
+        let mut b = pooled_cache(1000, &pool);
+        let t: Vec<u32> = (0..20).collect();
+        a.publish_at(5, &t, 20, 0);
+        // B pool-hits and keeps its request in flight (pool pinned)
+        assert!(b.lookup_at(5, &t, 20, 1).pool_hit);
+        // A serves the same user from its LOCAL cache and completes: its
+        // publish must not release B's pool pin (regression: an
+        // unconditional unpin let the sweep drop the entry under B)
+        let l = a.lookup_at(5, &t, 20, 2);
+        assert!(!l.pool_hit);
+        assert!(l.hit_tokens > 0);
+        a.publish_at(5, &t, 20, 3);
+        assert_eq!(pool.sweep(500), 0, "pinned entry must survive the sweep");
+        assert!(pool.current_epoch(5).is_some());
+        // B completes: the pin is released and TTL reclaim works again
+        b.publish_at(5, &t, 20, 4);
+        assert_eq!(pool.sweep(600), 1);
+        assert!(pool.current_epoch(5).is_none());
+    }
+
+    #[test]
+    fn stale_base_publish_never_resurrects_old_lineage() {
+        let pool = Arc::new(PrefixPool::new(PoolConfig {
+            pool_bytes: 10_000 * BPT,
+            prefix_ttl_us: 0,
+        }));
+        let mut a = pooled_cache(1000, &pool);
+        let mut c = pooled_cache(1000, &pool);
+        let t: Vec<u32> = (0..20).collect();
+        a.publish_at(1, &t, 20, 0);
+        // C adopts the old lineage (records its epoch)
+        assert!(c.lookup_at(1, &t, 20, 1).pool_hit);
+        // meanwhile A republishes a DIVERGED history: epoch moves on
+        let diverged: Vec<u32> = (100..130).collect();
+        a.publish_at(1, &diverged, 30, 2);
+        // C finishes serving and publishes its old-lineage extension with
+        // the superseded base epoch: rejected, C drops its local copy
+        let mut t_ext = t.clone();
+        t_ext.push(99);
+        c.publish_at(1, &t_ext, 21, 3);
+        assert!(c.stats.pool_epoch_drops >= 1, "stale publish must drop");
+        assert_eq!(c.lookup_at(1, &t_ext, 21, 4).hit_tokens, 0, "copy gone");
+        c.release(1);
+        let got = pool.lookup(1, 5).unwrap();
+        assert_eq!(got.match_len(&diverged, 30), 30, "newest lineage intact");
+        assert_eq!(got.match_len(&t_ext, 21), 0, "old lineage dead");
     }
 
     #[test]

@@ -1,0 +1,755 @@
+//! Shared cross-replica DRAM prefix pool (MTServe-style hierarchical
+//! pooling at cluster scale).
+//!
+//! The per-engine [`super::SessionCache`] ties a user's prefix KV to the
+//! stream that served them; any re-route — an affinity spill, dead-stream
+//! repair, or a multi-replica deployment — turns the next visit into a
+//! full-prefill miss. The pool closes that gap: a process-wide DRAM tier
+//! holding **serialized** prefix entries, so a prefix published by one
+//! replica is swap-in-hittable from any other.
+//!
+//! * **Entry format** ([`PrefixEntry`]) — compact binary record: user id,
+//!   token-prefix **hash chain** (one 64-bit FNV snapshot per
+//!   [`CHAIN_STRIDE`]-token chunk plus one at the prefix end), KV byte
+//!   size, epoch, publish timestamp. The chain lets a *different* replica
+//!   compute how much of an incoming prompt the pooled prefix covers
+//!   without shipping the tokens themselves (1 byte of chain per token
+//!   instead of 4 bytes of token). Lengths-only (simulator) entries carry
+//!   an empty chain and match assumed-extension, like the prefix index.
+//! * **Epoch invalidation** — each user entry carries an epoch. A
+//!   divergent republish bumps it; a publish whose *base* epoch is older
+//!   than the pool's current one is rejected (the publisher was working
+//!   from superseded content), and replicas lazily drop local copies
+//!   whose recorded epoch falls behind. An older prefix can therefore
+//!   never resurrect over a newer one.
+//! * **TTL staleness** — recommendation freshness: user history can be
+//!   rewritten upstream (deletions), so entries expire `prefix_ttl_us`
+//!   after their last publish. A periodic sweep (piggybacked on
+//!   lookups/publishes) drops expired entries — never pinned ones — and
+//!   counts them for `metrics::Counters`.
+//! * **Byte budget** — eviction reuses the [`TierManager`] clock
+//!   discipline (single DRAM tier: budget, lazily-invalidated LRU clock,
+//!   pins for entries backing in-flight swap-ins).
+
+use super::tier::{Tier, TierManager};
+use crate::Result;
+use anyhow::anyhow;
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Tokens per hash-chain snapshot. Coarser stride = smaller entries but
+/// up to `CHAIN_STRIDE - 1` reusable tokens lost at a divergence point.
+pub const CHAIN_STRIDE: usize = 8;
+
+const MAGIC: u32 = 0x5852_4750; // "XRGP"
+const VERSION: u16 = 1;
+
+/// Pool sizing and freshness knobs (see `ServingConfig::pool_bytes` /
+/// `ServingConfig::prefix_ttl_us`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PoolConfig {
+    /// DRAM byte budget for pooled prefix KV.
+    pub pool_bytes: u64,
+    /// Per-entry time-to-live since last publish, microseconds. 0 = no
+    /// expiry (budget pressure is then the only eviction).
+    pub prefix_ttl_us: u64,
+}
+
+/// One serialized prefix record (see module docs for the wire layout).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PrefixEntry {
+    pub user: u64,
+    /// invalidation epoch (assigned by the pool at publish)
+    pub epoch: u32,
+    /// publish timestamp, microseconds (wall clock or simulated)
+    pub stamp_us: u64,
+    /// resident KV bytes this prefix occupies when swapped in
+    pub bytes: u64,
+    /// prefix length in tokens
+    pub len: u32,
+    /// FNV-1a snapshots of tokens[..min((i+1)*CHAIN_STRIDE, len)];
+    /// empty in lengths-only mode
+    pub chain: Vec<u64>,
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+#[inline]
+fn fnv_step(h: u64, t: u32) -> u64 {
+    let mut h = h;
+    for b in t.to_le_bytes() {
+        h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+impl PrefixEntry {
+    /// Build an entry from a served prompt. `tokens` may be empty
+    /// (lengths-only mode); then `prompt_len` alone defines the prefix.
+    pub fn from_tokens(
+        user: u64,
+        tokens: &[u32],
+        prompt_len: usize,
+        bytes_per_token: u64,
+        stamp_us: u64,
+    ) -> Self {
+        let len = if tokens.is_empty() { prompt_len } else { tokens.len() };
+        let mut chain = Vec::with_capacity(len.div_ceil(CHAIN_STRIDE));
+        let mut h = FNV_OFFSET;
+        for (i, &t) in tokens.iter().enumerate() {
+            h = fnv_step(h, t);
+            if (i + 1) % CHAIN_STRIDE == 0 || i + 1 == tokens.len() {
+                chain.push(h);
+            }
+        }
+        PrefixEntry {
+            user,
+            epoch: 0,
+            stamp_us,
+            bytes: len as u64 * bytes_per_token,
+            len: len as u32,
+            chain,
+        }
+    }
+
+    /// How many leading tokens of an incoming prompt this entry covers.
+    /// Token mode verifies against the hash chain chunk-by-chunk (match
+    /// granularity is [`CHAIN_STRIDE`]); lengths-only mode is
+    /// assumed-extension, mirroring [`super::PrefixIndex`].
+    pub fn match_len(&self, tokens: &[u32], prompt_len: usize) -> usize {
+        let len = self.len as usize;
+        if len == 0 {
+            return 0;
+        }
+        if self.chain.is_empty() || tokens.is_empty() {
+            return len.min(prompt_len);
+        }
+        let mut matched = 0usize;
+        let mut k = 0usize; // next chain snapshot to compare
+        let mut h = FNV_OFFSET;
+        for (i, &t) in tokens.iter().enumerate() {
+            if i >= len || k >= self.chain.len() {
+                break;
+            }
+            h = fnv_step(h, t);
+            // stored snapshots sit at chunk boundaries and at the prefix end
+            if (i + 1) % CHAIN_STRIDE == 0 || i + 1 == len {
+                if h != self.chain[k] {
+                    break;
+                }
+                matched = i + 1;
+                k += 1;
+            }
+        }
+        matched.min(prompt_len)
+    }
+
+    /// Does `self` extend `older` (same content up to `older.len`)?
+    /// Verified at full-chunk granularity; lengths-only entries extend
+    /// iff they are at least as long.
+    fn extends(&self, older: &PrefixEntry) -> bool {
+        if self.len < older.len {
+            return false;
+        }
+        if older.chain.is_empty() || self.chain.is_empty() {
+            return true;
+        }
+        // compare the full CHAIN_STRIDE-chunks both entries snapshot at
+        // the same boundaries; older's final partial-chunk snapshot has
+        // no counterpart in self and is treated as compatible
+        let full = (older.len as usize) / CHAIN_STRIDE;
+        let n = full.min(self.chain.len()).min(older.chain.len());
+        self.chain[..n] == older.chain[..n]
+    }
+
+    /// Compact binary encoding (little-endian; see module docs).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(42 + 8 * self.chain.len());
+        out.extend_from_slice(&MAGIC.to_le_bytes());
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&(CHAIN_STRIDE as u16).to_le_bytes());
+        out.extend_from_slice(&self.user.to_le_bytes());
+        out.extend_from_slice(&self.epoch.to_le_bytes());
+        out.extend_from_slice(&self.stamp_us.to_le_bytes());
+        out.extend_from_slice(&self.bytes.to_le_bytes());
+        out.extend_from_slice(&self.len.to_le_bytes());
+        out.extend_from_slice(&(self.chain.len() as u32).to_le_bytes());
+        for h in &self.chain {
+            out.extend_from_slice(&h.to_le_bytes());
+        }
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Self> {
+        fn take<'a>(buf: &'a [u8], at: &mut usize, n: usize) -> Result<&'a [u8]> {
+            let s = buf
+                .get(*at..*at + n)
+                .ok_or_else(|| anyhow!("prefix entry truncated at byte {at}", at = *at))?;
+            *at += n;
+            Ok(s)
+        }
+        fn u32le(s: &[u8]) -> u32 {
+            u32::from_le_bytes(s.try_into().unwrap())
+        }
+        fn u64le(s: &[u8]) -> u64 {
+            u64::from_le_bytes(s.try_into().unwrap())
+        }
+        let at = &mut 0usize;
+        if u32le(take(buf, at, 4)?) != MAGIC {
+            return Err(anyhow!("bad prefix entry magic"));
+        }
+        let ver = u16::from_le_bytes(take(buf, at, 2)?.try_into().unwrap());
+        if ver != VERSION {
+            return Err(anyhow!("unsupported prefix entry version {ver}"));
+        }
+        let stride = u16::from_le_bytes(take(buf, at, 2)?.try_into().unwrap());
+        if stride as usize != CHAIN_STRIDE {
+            return Err(anyhow!("prefix entry chain stride {stride} != {CHAIN_STRIDE}"));
+        }
+        let user = u64le(take(buf, at, 8)?);
+        let epoch = u32le(take(buf, at, 4)?);
+        let stamp_us = u64le(take(buf, at, 8)?);
+        let bytes = u64le(take(buf, at, 8)?);
+        let len = u32le(take(buf, at, 4)?);
+        let chain_n = u32le(take(buf, at, 4)?) as usize;
+        if chain_n > (len as usize).div_ceil(CHAIN_STRIDE) {
+            return Err(anyhow!("prefix entry chain longer than its prefix"));
+        }
+        let mut chain = Vec::with_capacity(chain_n);
+        for _ in 0..chain_n {
+            chain.push(u64le(take(buf, at, 8)?));
+        }
+        if *at != buf.len() {
+            return Err(anyhow!("trailing bytes after prefix entry"));
+        }
+        Ok(PrefixEntry { user, epoch, stamp_us, bytes, len, chain })
+    }
+}
+
+/// Outcome of a pool publish.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Publish {
+    /// Stored under this (possibly bumped) epoch.
+    Stored(u32),
+    /// The pool holds a newer epoch than the publisher's base: the
+    /// publisher worked from superseded content and must drop its copy.
+    Stale,
+    /// The entry fits nowhere under the byte budget (or every resident
+    /// byte is pinned); nothing was stored.
+    NoRoom,
+}
+
+/// Monotone pool counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolStats {
+    pub publishes: u64,
+    pub hits: u64,
+    pub misses: u64,
+    /// entries dropped by the TTL staleness sweep
+    pub ttl_expirations: u64,
+    /// divergent republishes that bumped an entry's epoch
+    pub epoch_invalidations: u64,
+    /// publishes rejected for carrying a stale base epoch
+    pub stale_publishes: u64,
+    /// entries dropped by byte-budget pressure (TierManager clock)
+    pub evictions: u64,
+}
+
+struct Slot {
+    /// the wire image — what a cross-process pool transport would ship
+    /// (kept authoritative by `publish`, exercised by the round-trip
+    /// property tests)
+    data: Vec<u8>,
+    /// decoded working copy, so lookups and router probes never parse
+    /// under the pool mutex
+    entry: PrefixEntry,
+    epoch: u32,
+    expires_us: u64, // u64::MAX when TTL is off
+}
+
+struct PoolInner {
+    slots: HashMap<u64, Slot>,
+    tiers: TierManager, // single DRAM tier: budget + clock LRU + pins
+    stats: PoolStats,
+    last_sweep_us: u64,
+}
+
+/// The process-wide shared prefix pool. All methods take `&self`; the
+/// pool is shared across replicas/workers behind an `Arc`.
+pub struct PrefixPool {
+    cfg: PoolConfig,
+    inner: Mutex<PoolInner>,
+}
+
+impl std::fmt::Debug for PrefixPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PrefixPool").field("cfg", &self.cfg).finish()
+    }
+}
+
+impl PrefixPool {
+    pub fn new(cfg: PoolConfig) -> Self {
+        PrefixPool {
+            cfg,
+            inner: Mutex::new(PoolInner {
+                slots: HashMap::new(),
+                // no HBM tier: the pool is host DRAM only, so every
+                // admission lands in the DRAM clock queue
+                tiers: TierManager::new(0, cfg.pool_bytes),
+                stats: PoolStats::default(),
+                last_sweep_us: 0,
+            }),
+        }
+    }
+
+    pub fn config(&self) -> PoolConfig {
+        self.cfg
+    }
+
+    /// Fetch the user's pooled prefix, marking it recently used. Expired
+    /// entries read as misses (and are dropped unless pinned).
+    pub fn lookup(&self, user: u64, now_us: u64) -> Option<PrefixEntry> {
+        let mut g = self.inner.lock().unwrap();
+        self.maybe_sweep(&mut g, now_us);
+        let Some(expires_us) = g.slots.get(&user).map(|s| s.expires_us) else {
+            g.stats.misses += 1;
+            return None;
+        };
+        if now_us >= expires_us {
+            if !g.tiers.is_pinned(user) {
+                g.slots.remove(&user);
+                g.tiers.remove(user);
+                g.stats.ttl_expirations += 1;
+            }
+            g.stats.misses += 1;
+            return None;
+        }
+        let entry = g.slots[&user].entry.clone();
+        g.tiers.touch(user);
+        g.stats.hits += 1;
+        Some(entry)
+    }
+
+    /// Router-side probe: how many leading tokens of `tokens` (or an
+    /// assumed-extension prompt of `prompt_len`) would a pool swap-in
+    /// cover? No pin, no LRU touch, no hit/miss accounting.
+    pub fn peek_match(&self, user: u64, tokens: &[u32], prompt_len: usize, now_us: u64) -> usize {
+        let g = self.inner.lock().unwrap();
+        let Some(slot) = g.slots.get(&user) else {
+            return 0;
+        };
+        if now_us >= slot.expires_us {
+            return 0;
+        }
+        slot.entry.match_len(tokens, prompt_len)
+    }
+
+    /// The user's current invalidation epoch, if pooled.
+    pub fn current_epoch(&self, user: u64) -> Option<u32> {
+        self.inner.lock().unwrap().slots.get(&user).map(|s| s.epoch)
+    }
+
+    /// Pin the user's entry while a swap-in backed request is in flight
+    /// (the TTL sweep and the byte-budget clock never drop pinned
+    /// entries).
+    pub fn pin(&self, user: u64) {
+        self.inner.lock().unwrap().tiers.pin(user);
+    }
+
+    pub fn unpin(&self, user: u64) {
+        self.inner.lock().unwrap().tiers.unpin(user);
+    }
+
+    /// Publish a (re)grown prefix. `base_epoch` is the epoch the
+    /// publisher last observed for this user (0 for a fresh lineage); a
+    /// base older than the pool's current epoch is rejected so an older
+    /// prefix can never overwrite a newer one. A divergent republish
+    /// (the new chain does not extend the stored one) bumps the epoch.
+    /// On [`Publish::NoRoom`] the pool is left **unchanged** — a refused
+    /// publish must not destroy other users' (or this user's previous)
+    /// pooled prefixes.
+    pub fn publish(&self, entry: &PrefixEntry, base_epoch: u32, now_us: u64) -> Publish {
+        let user = entry.user;
+        let mut g = self.inner.lock().unwrap();
+        self.maybe_sweep(&mut g, now_us);
+        g.stats.publishes += 1;
+        let mut epoch = base_epoch;
+        let mut divergent = false;
+        let mut stale = false;
+        if let Some(slot) = g.slots.get(&user) {
+            if slot.epoch > base_epoch {
+                stale = true;
+            } else {
+                epoch = epoch.max(slot.epoch);
+                divergent = !entry.extends(&slot.entry);
+            }
+        }
+        if stale {
+            g.stats.stale_publishes += 1;
+            return Publish::Stale;
+        }
+        // admission pre-check: refuse BEFORE evicting anyone when the
+        // entry cannot fit even after reclaiming every unpinned byte —
+        // `TierManager::put` would otherwise evict victims one by one
+        // and only then discover the put must fail
+        let own = g.tiers.bytes_of(user);
+        let free = self.cfg.pool_bytes.saturating_sub(g.tiers.dram_bytes());
+        let evictable = g.tiers.evictable_bytes(Tier::Dram);
+        let fits = if g.tiers.is_pinned(user) {
+            // pinned entries can only shrink or grow in place; the delta
+            // must fit in free space plus OTHER unpinned residents
+            // (a pinned entry is not in `evictable`)
+            entry.bytes <= own || entry.bytes - own <= free + evictable
+        } else {
+            // replacement semantics: our own unpinned bytes are
+            // reclaimable too (they are counted in `evictable`)
+            entry.bytes <= free + evictable
+        };
+        if entry.bytes == 0 || !fits {
+            return Publish::NoRoom;
+        }
+        let mut dropped = Vec::new();
+        let before = g.tiers.stats.drops;
+        let admitted = g.tiers.put(user, entry.bytes, &mut dropped);
+        for u in dropped {
+            g.slots.remove(&u);
+        }
+        g.stats.evictions += g.tiers.stats.drops - before;
+        if !admitted {
+            // defensively unreachable given the pre-check; keep slot and
+            // tier consistent if it ever fires
+            if g.tiers.bytes_of(user) == 0 {
+                g.slots.remove(&user);
+            }
+            return Publish::NoRoom;
+        }
+        if divergent {
+            epoch += 1;
+            g.stats.epoch_invalidations += 1;
+        }
+        let mut stored = entry.clone();
+        stored.epoch = epoch;
+        stored.stamp_us = now_us;
+        let expires_us = if self.cfg.prefix_ttl_us == 0 {
+            u64::MAX
+        } else {
+            now_us.saturating_add(self.cfg.prefix_ttl_us)
+        };
+        let data = stored.encode();
+        g.slots.insert(user, Slot { data, entry: stored, epoch, expires_us });
+        Publish::Stored(epoch)
+    }
+
+    /// Drop every expired, unpinned entry; returns how many were
+    /// dropped. Normally invoked lazily from lookup/publish, exposed for
+    /// deterministic tests and external sweepers.
+    pub fn sweep(&self, now_us: u64) -> u64 {
+        let mut g = self.inner.lock().unwrap();
+        Self::sweep_locked(&mut g, now_us)
+    }
+
+    fn sweep_locked(g: &mut PoolInner, now_us: u64) -> u64 {
+        g.last_sweep_us = now_us;
+        let expired: Vec<u64> = g
+            .slots
+            .iter()
+            .filter(|(u, s)| now_us >= s.expires_us && !g.tiers.is_pinned(**u))
+            .map(|(u, _)| *u)
+            .collect();
+        for u in &expired {
+            g.slots.remove(u);
+            g.tiers.remove(*u);
+        }
+        g.stats.ttl_expirations += expired.len() as u64;
+        expired.len() as u64
+    }
+
+    /// Piggybacked periodic sweep: at most one scan per half-TTL.
+    fn maybe_sweep(&self, g: &mut PoolInner, now_us: u64) {
+        let ttl = self.cfg.prefix_ttl_us;
+        if ttl == 0 {
+            return;
+        }
+        if now_us.saturating_sub(g.last_sweep_us) >= ttl / 2 + 1 {
+            Self::sweep_locked(g, now_us);
+        }
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        self.inner.lock().unwrap().stats
+    }
+
+    /// Currently pooled KV bytes.
+    pub fn bytes(&self) -> u64 {
+        self.inner.lock().unwrap().tiers.dram_bytes()
+    }
+
+    pub fn peak_bytes(&self) -> u64 {
+        self.inner.lock().unwrap().tiers.dram_peak()
+    }
+
+    pub fn resident_users(&self) -> usize {
+        self.inner.lock().unwrap().slots.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::rng::Pcg;
+    use crate::{prop_assert, prop_assert_eq};
+
+    const BPT: u64 = 10;
+
+    fn entry(user: u64, tokens: &[u32], stamp: u64) -> PrefixEntry {
+        PrefixEntry::from_tokens(user, tokens, tokens.len(), BPT, stamp)
+    }
+
+    fn toks(rng: &mut Pcg, n: usize) -> Vec<u32> {
+        (0..n).map(|_| rng.below(1 << 20) as u32).collect()
+    }
+
+    #[test]
+    fn chain_matches_extension_and_stops_at_divergence() {
+        let mut rng = Pcg::new(7);
+        let base = toks(&mut rng, 37);
+        let e = entry(1, &base, 0);
+        // strict extension: full stored prefix covered
+        let mut ext = base.clone();
+        ext.extend_from_slice(&[9, 9, 9]);
+        assert_eq!(e.match_len(&ext, ext.len()), 37);
+        // identical prompt
+        assert_eq!(e.match_len(&base, base.len()), 37);
+        // divergence inside chunk 2: match stops at the last verified
+        // chunk boundary before it (chunk granularity)
+        let mut div = base.clone();
+        div[CHAIN_STRIDE + 3] ^= 1;
+        assert_eq!(e.match_len(&div, div.len()), CHAIN_STRIDE);
+        // shorter prompt: only full verified chunks within it count
+        assert_eq!(e.match_len(&base[..20], 20), 2 * CHAIN_STRIDE);
+    }
+
+    #[test]
+    fn lengths_only_entries_match_assumed_extension() {
+        let e = PrefixEntry::from_tokens(4, &[], 90, BPT, 0);
+        assert_eq!(e.match_len(&[], 120), 90);
+        assert_eq!(e.match_len(&[], 60), 60);
+        assert!(e.chain.is_empty());
+        assert_eq!(e.bytes, 90 * BPT);
+    }
+
+    #[test]
+    fn prop_serialization_round_trip() {
+        check("prefix-entry-roundtrip", 200, |rng| {
+            let n = rng.below(200) as usize;
+            let tokens = toks(rng, n);
+            let mut e = PrefixEntry::from_tokens(
+                rng.next_u64(),
+                &tokens,
+                n.max(rng.below(300) as usize),
+                1 + rng.below(4096),
+                rng.next_u64() >> 20,
+            );
+            e.epoch = rng.below(1 << 30) as u32;
+            let buf = e.encode();
+            let d = PrefixEntry::decode(&buf)
+                .map_err(|err| format!("decode failed: {err}"))?;
+            prop_assert_eq!(d, e);
+            // corrupting the magic must fail loudly, not mis-decode
+            let mut bad = buf.clone();
+            bad[0] ^= 0xff;
+            prop_assert!(PrefixEntry::decode(&bad).is_err(), "bad magic accepted");
+            // truncation at any point must fail, not panic
+            let cut = rng.below(buf.len() as u64) as usize;
+            prop_assert!(
+                PrefixEntry::decode(&buf[..cut]).is_err(),
+                "truncated entry accepted at {cut}/{}",
+                buf.len()
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_epoch_never_resurrects_an_older_prefix() {
+        // model: the pool must always hold the content of the last
+        // ACCEPTED publish, and epochs must be monotone. Publishers that
+        // lag behind (stale base epoch) must be rejected.
+        check("pool-epoch-monotone", 60, |rng| {
+            let pool = PrefixPool::new(PoolConfig {
+                pool_bytes: 1 << 30,
+                prefix_ttl_us: 0,
+            });
+            let mut history = toks(rng, 4 + rng.below(12) as usize);
+            let e0 = entry(1, &history, 0);
+            prop_assert_eq!(pool.publish(&e0, 0, 0), Publish::Stored(0));
+            let mut cur_epoch = 0u32;
+            let mut cur_len = history.len();
+            for step in 0..30u64 {
+                let now = step + 1;
+                if rng.below(3) == 0 {
+                    // divergent republish from the current lineage
+                    let cut = 1 + rng.below(history.len() as u64 - 1) as usize;
+                    history.truncate(cut);
+                    history.extend(toks(rng, 1 + rng.below(20) as usize));
+                    let e = entry(1, &history, now);
+                    match pool.publish(&e, cur_epoch, now) {
+                        Publish::Stored(ep) => {
+                            prop_assert!(ep >= cur_epoch, "epoch regressed");
+                            cur_epoch = ep;
+                            cur_len = history.len();
+                        }
+                        other => return Err(format!("live publish rejected: {other:?}")),
+                    }
+                } else if rng.below(3) == 0 && cur_epoch > 0 {
+                    // a laggard replica publishes from a superseded base:
+                    // must be rejected, pool content untouched
+                    let stale = entry(1, &toks(rng, 5), now);
+                    prop_assert_eq!(
+                        pool.publish(&stale, cur_epoch - 1, now),
+                        Publish::Stale
+                    );
+                } else {
+                    // extension republish keeps the epoch
+                    history.extend(toks(rng, 1 + rng.below(6) as usize));
+                    let e = entry(1, &history, now);
+                    match pool.publish(&e, cur_epoch, now) {
+                        Publish::Stored(ep) => {
+                            prop_assert_eq!(ep, cur_epoch);
+                            cur_len = history.len();
+                        }
+                        other => return Err(format!("extension rejected: {other:?}")),
+                    }
+                }
+                let got = pool
+                    .lookup(1, now)
+                    .ok_or_else(|| "pooled entry vanished".to_string())?;
+                prop_assert_eq!(got.epoch, cur_epoch);
+                prop_assert_eq!(got.len as usize, cur_len);
+                prop_assert_eq!(got.match_len(&history, history.len()), cur_len);
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_ttl_sweep_never_drops_a_pinned_entry() {
+        check("pool-ttl-respects-pins", 80, |rng| {
+            let ttl = 1_000u64;
+            let pool = PrefixPool::new(PoolConfig {
+                pool_bytes: 1 << 30,
+                prefix_ttl_us: ttl,
+            });
+            let n = 2 + rng.below(20) as u64;
+            let mut pinned = Vec::new();
+            for u in 0..n {
+                let t = toks(rng, 1 + rng.below(30) as usize);
+                pool.publish(&entry(u, &t, 0), 0, 0);
+                if rng.below(2) == 0 {
+                    pool.pin(u);
+                    pinned.push(u);
+                }
+            }
+            let dropped = pool.sweep(ttl * 10);
+            prop_assert_eq!(dropped, n - pinned.len() as u64);
+            for &u in &pinned {
+                prop_assert!(
+                    pool.current_epoch(u).is_some(),
+                    "pinned user {u} swept away"
+                );
+            }
+            // once unpinned, the next sweep reclaims them
+            for &u in &pinned {
+                pool.unpin(u);
+            }
+            pool.sweep(ttl * 11);
+            prop_assert_eq!(pool.resident_users(), 0);
+            prop_assert_eq!(pool.stats().ttl_expirations, n);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn ttl_expiry_reads_as_miss_and_refreshes_on_publish() {
+        let pool =
+            PrefixPool::new(PoolConfig { pool_bytes: 1 << 20, prefix_ttl_us: 100 });
+        let t = [1u32, 2, 3];
+        pool.publish(&entry(5, &t, 0), 0, 0);
+        assert!(pool.lookup(5, 50).is_some(), "fresh entry hits");
+        // republish refreshes the clock
+        pool.publish(&entry(5, &t, 80), 0, 80);
+        assert!(pool.lookup(5, 150).is_some(), "refreshed entry still live");
+        assert!(pool.lookup(5, 300).is_none(), "expired entry misses");
+        assert!(pool.stats().ttl_expirations >= 1);
+        assert_eq!(pool.peek_match(5, &t, 3, 400), 0);
+    }
+
+    #[test]
+    fn byte_budget_evicts_lru_via_clock() {
+        let pool = PrefixPool::new(PoolConfig {
+            pool_bytes: 25 * BPT,
+            prefix_ttl_us: 0,
+        });
+        let mut rng = Pcg::new(3);
+        let (a, b, c) = (toks(&mut rng, 10), toks(&mut rng, 10), toks(&mut rng, 10));
+        assert_eq!(pool.publish(&entry(1, &a, 0), 0, 0), Publish::Stored(0));
+        assert_eq!(pool.publish(&entry(2, &b, 1), 0, 1), Publish::Stored(0));
+        pool.lookup(1, 2); // touch 1: user 2 becomes the LRU victim
+        assert_eq!(pool.publish(&entry(3, &c, 3), 0, 3), Publish::Stored(0));
+        assert!(pool.current_epoch(1).is_some());
+        assert!(pool.current_epoch(2).is_none(), "LRU entry evicted");
+        assert!(pool.current_epoch(3).is_some());
+        assert!(pool.stats().evictions >= 1);
+        // an entry larger than the whole pool is refused outright
+        let huge = toks(&mut rng, 40);
+        assert_eq!(pool.publish(&entry(9, &huge, 4), 0, 4), Publish::NoRoom);
+    }
+
+    #[test]
+    fn refused_publish_never_evicts_other_users() {
+        // pool: users 1 and 2 resident, user 3 pinned — a publish that
+        // cannot fit even after evicting 1 and 2 must be refused WITHOUT
+        // destroying anyone (regression: put used to evict victims one
+        // by one and only then discover the admission must fail)
+        let pool = PrefixPool::new(PoolConfig {
+            pool_bytes: 30 * BPT,
+            prefix_ttl_us: 0,
+        });
+        let mut rng = Pcg::new(5);
+        for u in 1..=3u64 {
+            let t = toks(&mut rng, 10);
+            assert_eq!(pool.publish(&entry(u, &t, 0), 0, 0), Publish::Stored(0));
+        }
+        pool.pin(3);
+        let big = toks(&mut rng, 25); // 250 > free(0) + evictable(200)
+        assert_eq!(pool.publish(&entry(9, &big, 1), 0, 1), Publish::NoRoom);
+        for u in 1..=3u64 {
+            assert!(
+                pool.current_epoch(u).is_some(),
+                "refused publish must not evict user {u}"
+            );
+        }
+        assert_eq!(pool.stats().evictions, 0);
+        pool.unpin(3);
+    }
+
+    #[test]
+    fn pinned_entries_survive_budget_pressure() {
+        let pool = PrefixPool::new(PoolConfig {
+            pool_bytes: 20 * BPT,
+            prefix_ttl_us: 0,
+        });
+        let mut rng = Pcg::new(4);
+        let a = toks(&mut rng, 15);
+        pool.publish(&entry(1, &a, 0), 0, 0);
+        pool.pin(1);
+        let b = toks(&mut rng, 15);
+        assert_eq!(pool.publish(&entry(2, &b, 1), 0, 1), Publish::NoRoom);
+        assert!(pool.current_epoch(1).is_some(), "pinned entry intact");
+        pool.unpin(1);
+        assert_eq!(pool.publish(&entry(2, &b, 2), 0, 2), Publish::Stored(0));
+        assert!(pool.current_epoch(1).is_none());
+    }
+}

@@ -99,6 +99,18 @@ impl TierManager {
         self.residents.len()
     }
 
+    /// Total bytes of unpinned residents in `tier` — an upper bound on
+    /// what eviction can reclaim. Callers use it to refuse an admission
+    /// outright instead of evicting victims for a put that cannot
+    /// succeed anyway.
+    pub fn evictable_bytes(&self, tier: Tier) -> u64 {
+        self.residents
+            .values()
+            .filter(|r| r.tier == tier && r.pins == 0)
+            .map(|r| r.bytes)
+            .sum()
+    }
+
     pub fn pin(&mut self, user: u64) {
         if let Some(r) = self.residents.get_mut(&user) {
             r.pins += 1;

@@ -34,7 +34,17 @@
 //!   its home stream's backlog exceeds `affinity_spill_depth` batches
 //!   AND it has waited at least `affinity_stall_us` — the scheduler
 //!   tier's bounded-price policy, modeled at request granularity so
-//!   cluster-scale sweeps see the affinity-vs-throughput tradeoff.
+//!   cluster-scale sweeps see the affinity-vs-throughput tradeoff;
+//! * `cluster_replicas` (xGR only) — the fleet model: R replicas, each
+//!   with its own accelerator (`num_streams` streams, its own host
+//!   thread, its own memory budget and session-cache carve-out). A
+//!   request's prefill lands on one replica's device; the SAME
+//!   [`crate::sessioncache::PrefixPool`] backs every per-stream cache
+//!   when `pool_bytes` is set, so a spill onto another stream or
+//!   replica pays a **pool swap-in** (H2D of the pooled span) instead
+//!   of a full-prefill miss, and TTL expiry runs on simulated time.
+//!   The KV manager stays fleet-global (an aggregate accounting view);
+//!   budgets and weights scale by R.
 
 use super::calibrate::HostCosts;
 use super::kernels::{
@@ -44,10 +54,11 @@ use super::kernels::{
 use crate::config::{HardwareProfile, ModelSpec, ServingConfig};
 use crate::kvcache::{KvManager, PagedKv, SeparatedKv, TreeKv};
 use crate::metrics::Histogram;
-use crate::sessioncache::{SessionCache, SessionCacheConfig};
+use crate::sessioncache::{PrefixPool, SessionCache, SessionCacheConfig};
 use crate::workload::Trace;
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::sync::Arc;
 
 /// Which serving system the DES emulates.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -155,6 +166,20 @@ pub struct DesResult {
     /// streams do not die here; surfaced so reports share one schema
     /// with the real-mode counters)
     pub affinity_repairs: u64,
+    // ---- shared cross-replica prefix pool (zero when disabled) ----
+    /// local-cache misses recovered from the shared pool
+    pub pool_hits: u64,
+    /// pool consultations that found nothing reusable
+    pub pool_misses: u64,
+    /// pooled entries reclaimed by the TTL staleness sweep
+    pub pool_ttl_expirations: u64,
+    /// local copies dropped after a divergent republish elsewhere
+    pub pool_epoch_drops: u64,
+    pub pool_peak_bytes: u64,
+    /// replicas simulated (1 = the single-engine legacy model)
+    pub cluster_replicas: usize,
+    /// session hit rate per replica (empty when the cache is off)
+    pub per_replica_hit_rates: Vec<f64>,
 }
 
 impl DesResult {
@@ -334,10 +359,20 @@ fn batch_timing(
 
 /// Run the simulation of `trace` under `cfg`.
 pub fn simulate(trace: &Trace, cfg: &DesConfig) -> DesResult {
-    let (_, _, num_streams, _) = cfg.features();
+    let (_, _, streams_per_replica, _) = cfg.features();
+    // the cluster model is xGR's (the baselines are single-engine
+    // comparison points); each replica contributes its own streams
+    let replicas = if matches!(cfg.engine, EngineKind::Xgr) {
+        cfg.serving.cluster_replicas.max(1)
+    } else {
+        1
+    };
+    let num_streams = streams_per_replica * replicas;
     let bw = cfg.serving.beam_width;
     let nd = cfg.model.num_decode;
     let weights_bytes = cfg.model.params() * cfg.model.dtype_bytes as u64;
+    // fleet-wide weights: every replica holds a copy
+    let fleet_weights = weights_bytes * replicas as u64;
 
     let mut kv = cfg.make_kv();
     // session prefix cache (lengths-only mode); its HBM tier is carved
@@ -360,17 +395,36 @@ pub fn simulate(trace: &Trace, cfg: &DesConfig) -> DesResult {
     let stall_s = cfg.serving.affinity_stall_us as f64 / 1e6;
     let session_cfg = cfg.serving.session_cache_config(&cfg.hw);
     let session_hbm_budget = if cache_on { session_cfg.hbm_bytes } else { 0 };
-    let n_caches = if affinity_on { num_streams } else { 1 };
+    // affinity on: one cache per stream (routing decides locality).
+    // affinity off: one shared cache per REPLICA — replicas are distinct
+    // machines, so cross-replica HBM locality cannot exist even under
+    // routing-independent modeling (R = 1 keeps the legacy single cache)
+    let n_caches = if affinity_on { num_streams } else { replicas };
+    // the shared cross-replica pool (simulated time drives its TTL)
+    let pool: Option<Arc<PrefixPool>> = if cache_on {
+        cfg.serving.pool_config().map(|pc| Arc::new(PrefixPool::new(pc)))
+    } else {
+        None
+    };
     let mut session: Vec<SessionCache> = if cache_on {
-        // per-stream caches split the carved-out budgets evenly: the
-        // streams share one accelerator, so the total residency is the
-        // same — only its *placement* becomes routing-dependent
+        // per-stream caches split each replica's carved-out budgets
+        // evenly across ITS streams: streams of one replica share that
+        // replica's accelerator, so the per-replica residency total is
+        // unchanged — only its *placement* becomes routing-dependent
+        let split = if affinity_on { streams_per_replica.max(1) as u64 } else { 1 };
         let per = SessionCacheConfig {
-            hbm_bytes: session_cfg.hbm_bytes / n_caches as u64,
-            dram_bytes: session_cfg.dram_bytes / n_caches as u64,
+            hbm_bytes: session_cfg.hbm_bytes / split,
+            dram_bytes: session_cfg.dram_bytes / split,
         };
         (0..n_caches)
-            .map(|_| SessionCache::new(per.clone(), cfg.model.kv_bytes_per_token()))
+            .map(|_| {
+                let mut sc =
+                    SessionCache::new(per.clone(), cfg.model.kv_bytes_per_token());
+                if let Some(p) = &pool {
+                    sc.attach_pool(p.clone());
+                }
+                sc
+            })
             .collect()
     } else {
         Vec::new()
@@ -390,28 +444,35 @@ pub fn simulate(trace: &Trace, cfg: &DesConfig) -> DesResult {
 
     let mut queue: VecDeque<usize> = VecDeque::new();
     let mut stream_free = vec![0.0f64; num_streams];
-    let mut host_free = 0.0f64;
+    // one host thread per replica (the scheduler tier is per-replica)
+    let mut host_free = vec![0.0f64; replicas];
     let mut latency = Histogram::new();
     let mut completed = 0u64;
     let mut rejected = 0u64;
     let mut slo_violations = 0u64;
-    let mut peak_total = weights_bytes;
+    let mut peak_total = fleet_weights;
     let mut act_bytes_live = 0u64;
     let mut host_busy = 0.0f64;
     let mut device_busy = 0.0f64;
     let mut batches = 0u64;
     let mut in_flight = 0usize;
+    // per-replica concurrency: streams split their OWN replica's CGs
+    let mut in_flight_rep = vec![0usize; replicas];
     let mut last_t = 0.0f64;
     // peak tier occupancy = running max of the INSTANTANEOUS sum across
     // the per-stream caches (summing per-cache gauge peaks taken at
     // different times would overstate the concurrent footprint)
     let mut session_hbm_peak = 0u64;
     let mut session_dram_peak = 0u64;
-    let mem_budget = cfg
-        .hw
-        .mem_bytes
-        .saturating_sub(weights_bytes)
-        .saturating_sub(session_hbm_budget);
+    // fleet memory budget: every replica brings its own device memory,
+    // minus its weights copy and its session-cache carve-out (the KV
+    // manager is a fleet-aggregate accounting view)
+    let mem_budget = replicas as u64
+        * cfg
+            .hw
+            .mem_bytes
+            .saturating_sub(weights_bytes)
+            .saturating_sub(session_hbm_budget);
     // the simple parent pattern used for KV accounting (fork from sorted
     // candidates): representative mix of keeps and forks
     let parents: Vec<usize> = (0..bw).map(|i| i / 2).collect();
@@ -527,13 +588,16 @@ pub fn simulate(trace: &Trace, cfg: &DesConfig) -> DesResult {
                         }
                         // per-stream cache: affine requests can hit their
                         // home cache; spilled strays consult the serving
-                        // stream's cache and pay the (likely) miss
+                        // stream's cache and pay the (likely) miss — which
+                        // the shared pool, when configured, downgrades to
+                        // a pool swap-in instead of a full prefill
                         affinity_spills += req_idx
                             .iter()
                             .filter(|&&ri| {
                                 user_stream[&trace.requests[ri].user_id] != si
                             })
                             .count() as u64;
+                        let now_us = ($now * 1e6) as u64;
                         let mut swap_in_bytes = 0u64;
                         let prefill_lens: Vec<usize> = {
                             let sc = &mut session[si];
@@ -542,17 +606,21 @@ pub fn simulate(trace: &Trace, cfg: &DesConfig) -> DesResult {
                                 .zip(&lens)
                                 .map(|(&ri, &l)| {
                                     let r = &trace.requests[ri];
-                                    let look = sc.lookup(
+                                    let look = sc.lookup_at(
                                         r.user_id,
                                         &r.tokens,
                                         r.prompt_len,
+                                        now_us,
                                     );
                                     swap_in_bytes += look.swap_in_bytes;
                                     l - look.hit_tokens.min(l - 1)
                                 })
                                 .collect()
                         };
-                        let active = (in_flight + 1).min(num_streams).max(1);
+                        let rep = si / streams_per_replica;
+                        let active = (in_flight_rep[rep] + 1)
+                            .min(streams_per_replica)
+                            .max(1);
                         let cgs = (cfg.hw.num_cgs / active).max(1);
                         let timing = batch_timing(
                             cfg,
@@ -561,8 +629,8 @@ pub fn simulate(trace: &Trace, cfg: &DesConfig) -> DesResult {
                             swap_in_bytes,
                             cgs,
                         );
-                        let host_start = host_free.max($now);
-                        host_free = host_start + timing.host_s;
+                        let host_start = host_free[rep].max($now);
+                        host_free[rep] = host_start + timing.host_s;
                         host_busy += timing.host_s;
                         let start = stream_free[si].max(host_start);
                         let done = start + timing.device_s;
@@ -570,6 +638,7 @@ pub fn simulate(trace: &Trace, cfg: &DesConfig) -> DesResult {
                         stream_free[si] = done;
                         batches += 1;
                         in_flight += 1;
+                        in_flight_rep[rep] += 1;
                         let act = (total_tokens * cfg.model.d_model * 8) as u64;
                         act_bytes_live += act;
                         let session_resident: u64 =
@@ -578,7 +647,7 @@ pub fn simulate(trace: &Trace, cfg: &DesConfig) -> DesResult {
                         session_dram_peak = session_dram_peak
                             .max(session.iter().map(|s| s.dram_bytes()).sum());
                         peak_total = peak_total.max(
-                            weights_bytes
+                            fleet_weights
                                 + kv.current_bytes()
                                 + act_bytes_live
                                 + session_resident,
@@ -683,14 +752,23 @@ pub fn simulate(trace: &Trace, cfg: &DesConfig) -> DesResult {
                 // suffix; DRAM-tier hits charge swap-in bandwidth. A
                 // full-prompt hit still prefills one token (the prompt
                 // logits must be produced), hence the l-1 clamp.
+                // this batch's replica: its cache, host thread and CGs
+                let rep = si / streams_per_replica;
+                let now_us = ($now * 1e6) as u64;
                 let mut swap_in_bytes = 0u64;
-                let prefill_lens: Vec<usize> = if let Some(sc) = session.first_mut() {
+                let prefill_lens: Vec<usize> = if let Some(sc) = session.get_mut(rep)
+                {
                     req_idx
                         .iter()
                         .zip(&lens)
                         .map(|(&ri, &l)| {
                             let r = &trace.requests[ri];
-                            let look = sc.lookup(r.user_id, &r.tokens, r.prompt_len);
+                            let look = sc.lookup_at(
+                                r.user_id,
+                                &r.tokens,
+                                r.prompt_len,
+                                now_us,
+                            );
                             swap_in_bytes += look.swap_in_bytes;
                             l - look.hit_tokens.min(l - 1)
                         })
@@ -698,15 +776,14 @@ pub fn simulate(trace: &Trace, cfg: &DesConfig) -> DesResult {
                 } else {
                     lens.clone()
                 };
-                // concurrent streams share CGs dynamically: a lone
-                // batch uses the whole accelerator; concurrency splits it
-                let active = (in_flight + 1).min(num_streams).max(1);
+                let active =
+                    (in_flight_rep[rep] + 1).min(streams_per_replica).max(1);
                 let cgs = (cfg.hw.num_cgs / active).max(1);
                 let timing =
                     batch_timing(cfg, &lens, &prefill_lens, swap_in_bytes, cgs);
-                // host work serializes across streams
-                let host_start = host_free.max($now);
-                host_free = host_start + timing.host_s;
+                // host work serializes across one replica's streams
+                let host_start = host_free[rep].max($now);
+                host_free[rep] = host_start + timing.host_s;
                 host_busy += timing.host_s;
                 let start = sfree.max(host_start);
                 let done = start + timing.device_s;
@@ -714,6 +791,7 @@ pub fn simulate(trace: &Trace, cfg: &DesConfig) -> DesResult {
                 stream_free[si] = done;
                 batches += 1;
                 in_flight += 1;
+                in_flight_rep[rep] += 1;
                 let act = (total_tokens * cfg.model.d_model * 8) as u64;
                 act_bytes_live += act;
                 let session_resident: u64 =
@@ -722,7 +800,7 @@ pub fn simulate(trace: &Trace, cfg: &DesConfig) -> DesResult {
                 session_dram_peak = session_dram_peak
                     .max(session.iter().map(|s| s.dram_bytes()).sum());
                 peak_total = peak_total.max(
-                    weights_bytes
+                    fleet_weights
                         + kv.current_bytes()
                         + act_bytes_live
                         + session_resident,
@@ -808,6 +886,8 @@ pub fn simulate(trace: &Trace, cfg: &DesConfig) -> DesResult {
             }
             EvKind::BatchDone { stream, req_idx, kv: handles, act_bytes } => {
                 in_flight = in_flight.saturating_sub(1);
+                let rep = stream / streams_per_replica;
+                in_flight_rep[rep] = in_flight_rep[rep].saturating_sub(1);
                 for (&ri, h) in req_idx.iter().zip(handles) {
                     let arr = trace.requests[ri].arrival_ns as f64 / 1e9;
                     let lat_ns = ((now - arr) * 1e9) as u64;
@@ -818,11 +898,18 @@ pub fn simulate(trace: &Trace, cfg: &DesConfig) -> DesResult {
                     completed += 1;
                     kv.free(h);
                     // publish the grown prefix (unpins the cache entry)
-                    // into the cache of the stream that served it
-                    let ci = if affinity_on { stream } else { 0 };
+                    // into the cache of the stream (affinity) or replica
+                    // (routing-independent) that served it — and,
+                    // through it, into the shared pool
+                    let ci = if affinity_on { stream } else { rep };
                     if let Some(sc) = session.get_mut(ci) {
                         let r = &trace.requests[ri];
-                        sc.publish(r.user_id, &r.tokens, r.prompt_len);
+                        sc.publish_at(
+                            r.user_id,
+                            &r.tokens,
+                            r.prompt_len,
+                            (now * 1e6) as u64,
+                        );
                     }
                 }
                 act_bytes_live = act_bytes_live.saturating_sub(act_bytes);
@@ -840,6 +927,27 @@ pub fn simulate(trace: &Trace, cfg: &DesConfig) -> DesResult {
 
     // aggregate across the per-stream caches (a single element when the
     // affinity model is off, empty when the cache is off)
+    let per_replica_hit_rates: Vec<f64> = if session.is_empty() {
+        Vec::new()
+    } else if affinity_on {
+        (0..replicas)
+            .map(|r| {
+                let caches =
+                    &session[r * streams_per_replica..(r + 1) * streams_per_replica];
+                crate::metrics::session_hit_rate(
+                    caches.iter().map(|s| s.stats.hits).sum(),
+                    caches.iter().map(|s| s.stats.misses).sum(),
+                )
+            })
+            .collect()
+    } else {
+        // routing-independent mode: one cache per replica already
+        session
+            .iter()
+            .map(|s| crate::metrics::session_hit_rate(s.stats.hits, s.stats.misses))
+            .collect()
+    };
+    let pool_stats = pool.as_ref().map(|p| p.stats()).unwrap_or_default();
     DesResult {
         latency,
         completed,
@@ -861,6 +969,13 @@ pub fn simulate(trace: &Trace, cfg: &DesConfig) -> DesResult {
         session_peak_dram_bytes: session_dram_peak,
         affinity_spills,
         affinity_repairs: 0,
+        pool_hits: session.iter().map(|s| s.stats.pool_hits).sum(),
+        pool_misses: session.iter().map(|s| s.stats.pool_misses).sum(),
+        pool_ttl_expirations: pool_stats.ttl_expirations,
+        pool_epoch_drops: session.iter().map(|s| s.stats.pool_epoch_drops).sum(),
+        pool_peak_bytes: pool.as_ref().map(|p| p.peak_bytes()).unwrap_or(0),
+        cluster_replicas: replicas,
+        per_replica_hit_rates,
     }
 }
 
@@ -1136,6 +1251,82 @@ mod tests {
         assert_eq!(r1.session_hits, r2.session_hits);
         assert_eq!(r1.latency.p99(), r2.latency.p99());
         assert_eq!(r1.affinity_spills, 0);
+    }
+
+    fn cluster_cfg(replicas: usize, pool_mb: u64, ttl_us: u64) -> DesConfig {
+        let mut c = affinity_cfg(1); // spill depth 1: re-routes happen
+        // 2 streams per replica keeps per-stream pressure at the level
+        // the spill tests above are calibrated for
+        c.serving.num_streams = 2;
+        c.serving.cluster_replicas = replicas;
+        c.serving.pool_bytes = pool_mb << 20;
+        c.serving.prefix_ttl_us = ttl_us;
+        c
+    }
+
+    #[test]
+    fn pool_recovers_rerouted_prefixes_at_cluster_scale() {
+        // ~600 rps per replica device: the per-stream pressure the spill
+        // tests above are calibrated to produce re-routes at
+        let t = zipf_trace(600, 2400.0);
+        let nopool = simulate(&t, &cluster_cfg(4, 0, 0));
+        let pooled = simulate(&t, &cluster_cfg(4, 512, 0));
+        assert_eq!(nopool.completed, 600);
+        assert_eq!(pooled.completed, 600);
+        assert_eq!(pooled.cluster_replicas, 4);
+        assert!(
+            pooled.affinity_spills > 0,
+            "the hot streams must shed load for the pool to matter"
+        );
+        assert!(pooled.pool_hits > 0, "re-routes must recover from the pool");
+        assert_eq!(nopool.pool_hits, 0, "no pool, no pool hits");
+        // pool hits ARE session hits: re-routed revisits stop missing
+        // (small tolerance: pool-altered timing can reshuffle routing)
+        assert!(
+            pooled.session_hit_rate() >= nopool.session_hit_rate() - 0.02,
+            "pool {} vs nopool {}",
+            pooled.session_hit_rate(),
+            nopool.session_hit_rate()
+        );
+        assert_eq!(pooled.per_replica_hit_rates.len(), 4);
+        assert!(pooled.pool_peak_bytes > 0);
+    }
+
+    #[test]
+    fn pool_ttl_sweep_expires_idle_prefixes() {
+        // trace spans ~4s of simulated time; a 300ms TTL lets idle
+        // sessions expire between revisits (timestamps are sim-time)
+        let t = zipf_trace(600, 150.0);
+        let r = simulate(&t, &cluster_cfg(2, 512, 300_000));
+        assert_eq!(r.completed, 600);
+        assert!(
+            r.pool_ttl_expirations > 0,
+            "idle pooled prefixes must age out under a short TTL"
+        );
+        // no TTL: same trace, nothing ever expires
+        let forever = simulate(&t, &cluster_cfg(2, 512, 0));
+        assert_eq!(forever.pool_ttl_expirations, 0);
+    }
+
+    #[test]
+    fn cluster_model_is_deterministic_and_scales() {
+        let t = zipf_trace(400, 1200.0);
+        let a = simulate(&t, &cluster_cfg(4, 256, 0));
+        let b = simulate(&t, &cluster_cfg(4, 256, 0));
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.latency.p99(), b.latency.p99());
+        assert_eq!(a.pool_hits, b.pool_hits);
+        assert_eq!(a.session_hits, b.session_hits);
+        // 4 replicas bring 4× the devices: the same offered load clears
+        // no slower than on one replica
+        let one = simulate(&t, &cluster_cfg(1, 256, 0));
+        assert_eq!(one.cluster_replicas, 1);
+        assert!(
+            a.p99_ms() <= one.p99_ms() * 1.05,
+            "4 replicas {} vs 1 replica {}",
+            a.p99_ms(),
+            one.p99_ms()
+        );
     }
 
     #[test]

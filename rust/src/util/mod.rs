@@ -5,6 +5,7 @@
 pub mod rng;
 pub mod json;
 pub mod cli;
+pub mod clockmap;
 pub mod pool;
 pub mod prop;
 pub mod heap;

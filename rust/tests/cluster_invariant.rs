@@ -1,0 +1,273 @@
+//! Cluster-tier load-bearing invariant: re-routing never changes
+//! results. The same request set replayed through `cluster_replicas = 1`
+//! and `cluster_replicas = N` — with forced affinity spills and one
+//! replica killed mid-trace — must yield byte-identical recommendations
+//! per request id. The multi-replica run must additionally prove the
+//! shared pool did real work: nonzero pool hits (killed replica's users
+//! recover their prefixes elsewhere) and nonzero TTL expirations under a
+//! short `prefix_ttl_us`.
+//!
+//! The replica count honors `XGR_CLUSTER_REPLICAS` (CI runs the suite
+//! with it set >1 so multi-replica paths stay green).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+use xgr::cluster::ClusterCoordinator;
+use xgr::config::{ModelSpec, ServingConfig};
+use xgr::coordinator::{EngineConfig, ExecutorFactory, RecRequest};
+use xgr::itemspace::{Catalog, ItemTrie};
+use xgr::runtime::{MockExecutor, ModelExecutor, SlotId};
+use xgr::util::now_ns;
+use xgr::Result;
+
+const USERS: u64 = 6;
+const TURNS: u64 = 8;
+const KILL_AFTER_TURN: u64 = 4; // kill between turns 4 and 5
+const SLEEP_BEFORE_TURN: u64 = 6; // outlive the TTL between turns 5 and 6
+const BURST: u64 = 12; // hot-user burst: forces affinity spills
+const TTL_US: u64 = 400_000;
+
+fn spec() -> ModelSpec {
+    let mut s = ModelSpec::onerec_tiny();
+    s.vocab = 64;
+    s.beam_width = 8;
+    s.seq = 48;
+    s
+}
+
+/// Delegates to the mock but pays a fixed prefill delay so bursts back a
+/// stream up deterministically enough to trigger the spill policy.
+struct SlowExecutor {
+    inner: MockExecutor,
+    delay: Duration,
+}
+
+impl ModelExecutor for SlowExecutor {
+    fn spec(&self) -> &ModelSpec {
+        self.inner.spec()
+    }
+
+    fn prefill(&mut self, tokens: &[u32]) -> Result<(SlotId, Vec<f32>)> {
+        std::thread::sleep(self.delay);
+        self.inner.prefill(tokens)
+    }
+
+    fn decode(
+        &mut self,
+        slot: SlotId,
+        step: usize,
+        beam_tokens: &[u32],
+        parents: &[usize],
+    ) -> Result<Vec<f32>> {
+        self.inner.decode(slot, step, beam_tokens, parents)
+    }
+
+    fn release(&mut self, slot: SlotId) {
+        self.inner.release(slot)
+    }
+
+    fn live_slots(&self) -> usize {
+        self.inner.live_slots()
+    }
+}
+
+fn serving(replicas: usize) -> ServingConfig {
+    let mut s = ServingConfig::default();
+    s.num_streams = 2;
+    s.batch_wait_us = 200;
+    s.max_batch_requests = 2;
+    s.session_cache = true;
+    s.affinity_spill_depth = 1; // tight queue: bursts must spill
+    s.affinity_stall_us = 0; // spill as soon as the affine queue is full
+    s.cluster_replicas = replicas;
+    s.pool_bytes = 32 << 20;
+    s.prefix_ttl_us = TTL_US;
+    s
+}
+
+fn user_history(user: u64, turn: u64) -> Vec<u32> {
+    // each turn strictly extends the previous one (multi-turn session)
+    (0..(4 + 3 * turn)).map(|k| ((user * 7 + k) % 60) as u32).collect()
+}
+
+/// The full request set: USERS × TURNS session requests plus a hot-user
+/// burst after [`KILL_AFTER_TURN`] (ids 1000+). Identical in every run.
+fn request_tokens() -> Vec<(u64, u64, Vec<u32>)> {
+    let mut reqs = Vec::new();
+    for turn in 0..TURNS {
+        for user in 0..USERS {
+            reqs.push((turn * USERS + user, user, user_history(user, turn)));
+        }
+        if turn == KILL_AFTER_TURN {
+            for i in 0..BURST {
+                reqs.push((1000 + i, 0, user_history(0, turn)));
+            }
+        }
+    }
+    reqs
+}
+
+/// Per-request recommendation lists, keyed by request id.
+type ItemsById = HashMap<u64, Vec<([u32; 3], f32)>>;
+
+struct RunOutcome {
+    items: ItemsById,
+    stats: xgr::coordinator::BackendStats,
+}
+
+fn run_cluster(replicas: usize, kill_mid: bool) -> RunOutcome {
+    let spec = spec();
+    let catalog = Catalog::generate(64, 600, 5);
+    let trie = Arc::new(ItemTrie::build(&catalog));
+    let factory: ExecutorFactory = {
+        let spec = spec.clone();
+        Arc::new(move || {
+            Ok(Box::new(SlowExecutor {
+                inner: MockExecutor::new(spec.clone()),
+                delay: Duration::from_millis(3),
+            }) as _)
+        })
+    };
+    let cluster = ClusterCoordinator::start(
+        &serving(replicas),
+        EngineConfig::default(),
+        trie,
+        factory,
+    )
+    .unwrap();
+
+    let mut items: ItemsById = HashMap::new();
+    let mut submitted = 0u64;
+    let drain_all = |cluster: &ClusterCoordinator,
+                         items: &mut ItemsById,
+                         upto: u64| {
+        while (items.len() as u64) < upto {
+            let r = cluster
+                .recv_timeout(Duration::from_secs(30))
+                .expect("response timed out");
+            assert!(!r.items.is_empty(), "request {} returned nothing", r.id);
+            assert!(
+                items.insert(r.id, r.items).is_none(),
+                "duplicate response {}",
+                r.id
+            );
+        }
+    };
+
+    let mut current_turn = u64::MAX;
+    for (id, user, tokens) in request_tokens() {
+        let turn = if id >= 1000 { KILL_AFTER_TURN } else { id / USERS };
+        if turn != current_turn && id < 1000 {
+            current_turn = turn;
+            if turn == KILL_AFTER_TURN + 1 && kill_mid {
+                // settle, then kill the replica holding user 0's prefix:
+                // its users' next visits MUST recover from the pool
+                drain_all(&cluster, &mut items, submitted);
+                let victim = cluster.replica_of(0).unwrap_or(0);
+                let leftovers = cluster.kill_replica(victim).unwrap();
+                assert_eq!(leftovers, 0, "drained replica hands back nothing");
+            }
+            if turn == SLEEP_BEFORE_TURN {
+                // outlive the pool TTL: the next lookups sweep expired
+                // entries (counted), then republish fresh ones
+                drain_all(&cluster, &mut items, submitted);
+                std::thread::sleep(Duration::from_micros(TTL_US * 5 / 2));
+            }
+        }
+        cluster
+            .submit_blocking(RecRequest {
+                id,
+                tokens,
+                arrival_ns: now_ns(),
+                user_id: user,
+            })
+            .expect("cluster must accept while any replica lives");
+        submitted += 1;
+    }
+    drain_all(&cluster, &mut items, submitted);
+    assert_eq!(items.len() as u64, USERS * TURNS + BURST);
+    let stats = cluster.backend_stats();
+    cluster.shutdown();
+    RunOutcome { items, stats }
+}
+
+#[test]
+fn rerouting_never_changes_recommendations() {
+    let replicas: usize = std::env::var("XGR_CLUSTER_REPLICAS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4)
+        .clamp(2, 8);
+
+    let single = run_cluster(1, false);
+    let multi = run_cluster(replicas, true);
+
+    // ---- result invariance: byte-identical recommendations per id ----
+    assert_eq!(single.items.len(), multi.items.len());
+    for (id, items) in &single.items {
+        assert_eq!(
+            multi.items.get(id),
+            Some(items),
+            "request {id}: {replicas}-replica run changed the recommendations"
+        );
+    }
+
+    // ---- the cluster actually exercised the machinery ----
+    assert_eq!(
+        multi.stats.per_replica_hit_rates.len(),
+        replicas,
+        "stats must stay per-replica"
+    );
+    assert!(
+        multi.stats.affinity_spills > 0,
+        "the hot-user burst must force spills"
+    );
+    assert!(
+        multi.stats.pool_hits > 0,
+        "killed replica's users must recover their prefixes from the pool"
+    );
+    assert!(
+        multi.stats.pool_ttl_expirations > 0,
+        "the TTL sweep must reclaim idle entries after the sleep"
+    );
+    // the single-replica run shares the same code path end to end
+    assert!(single.stats.session_hits > 0);
+}
+
+#[test]
+fn submit_fails_only_when_every_replica_is_dead() {
+    let spec = spec();
+    let catalog = Catalog::generate(64, 600, 5);
+    let trie = Arc::new(ItemTrie::build(&catalog));
+    let factory: ExecutorFactory = {
+        let spec = spec.clone();
+        Arc::new(move || Ok(Box::new(MockExecutor::new(spec.clone())) as _))
+    };
+    let cluster = ClusterCoordinator::start(
+        &serving(2),
+        EngineConfig::default(),
+        trie,
+        factory,
+    )
+    .unwrap();
+    let req = |id: u64| RecRequest {
+        id,
+        tokens: vec![1, 2, 3],
+        arrival_ns: now_ns(),
+        user_id: id,
+    };
+    cluster.submit_blocking(req(0)).unwrap();
+    assert!(cluster.recv_timeout(Duration::from_secs(10)).is_some());
+    cluster.kill_replica(0).unwrap();
+    // one replica down: still serving
+    cluster.submit_blocking(req(1)).unwrap();
+    assert!(cluster.recv_timeout(Duration::from_secs(10)).is_some());
+    assert!(cluster.kill_replica(0).is_err(), "double kill is an error");
+    cluster.kill_replica(1).unwrap();
+    // all dead: submission must fail, not hang
+    assert!(cluster.submit(req(2)).is_err());
+    assert!(cluster.submit_blocking(req(3)).is_err());
+    let rest = cluster.shutdown();
+    assert!(rest.is_empty());
+}
