@@ -115,10 +115,25 @@ fn main() -> xgr::Result<()> {
     //     affinity is strong and swap-in bandwidth is the bottleneck;
     //   * `prefix_ttl_us` — freshness bound: pooled prefixes expire this
     //     long after their last publish (user history can be rewritten
-    //     upstream), reclaimed by a periodic sweep.
+    //     upstream), reclaimed by a periodic sweep;
+    //   * `steal_threshold` / `steal_max_batches` — cross-replica work
+    //     stealing: the router places each request once, so a replica
+    //     that goes hot AFTER placement (bursty user, slow stream, a
+    //     killed peer shifting load) piles up queued batches while its
+    //     peers idle. When the busiest replica's queued work leads the
+    //     least-loaded's by `steal_threshold` requests, the steal loop
+    //     migrates up to `steal_max_batches` whole queued batches (never
+    //     in-flight work — results stay byte-identical). Donor policy:
+    //     busiest live replica donates to the least-loaded live one. On
+    //     the way out the victim refreshes the migrated users' pooled
+    //     prefixes (`PrefixPool::publish_for_migration`), so the thief's
+    //     first lookup is a swap-in, not a full prefill — watch
+    //     `batch_steals` / `steal_tokens_saved` / `steal_aborts` in
+    //     `backend_stats`. 0 disables stealing.
     serving.cluster_replicas = 2;
     serving.pool_bytes = 64 << 20;
     serving.prefix_ttl_us = 5_000_000;
+    serving.steal_threshold = 4;
     let cluster = ClusterCoordinator::start(
         &serving,
         EngineConfig::default(),

@@ -39,19 +39,26 @@ impl BeamSelector for NaiveBeam {
             // full sort of the vocab to find top-k
             let mut idx: Vec<u32> = (0..vocab as u32).collect();
             self.stats.allocations += 1;
-            idx.sort_by(|&a, &b2| {
-                row[b2 as usize].partial_cmp(&row[a as usize]).unwrap()
-            });
+            // total_cmp: a poisoned (NaN) logit must not panic the sort;
+            // non-finite log-probs are filtered below anyway
+            idx.sort_by(|&a, &b2| row[b2 as usize].total_cmp(&row[a as usize]));
             for &t in idx.iter().take(k) {
                 let lp = row[t as usize];
-                if lp.is_finite() && lp > -1.0e29 {
+                if !lp.is_finite() {
+                    // poisoned logit: a counted, candidate-level reject
+                    // (under total_cmp NaNs sort to the top, so they DO
+                    // land in the top-k window and must be visible)
+                    self.stats.non_finite_rejects += 1;
+                    continue;
+                }
+                if lp > -1.0e29 {
                     pool.push((beam_scores[b] + lp, b, t));
                 }
             }
         }
         self.stats.candidates_seen += pool.len() as u64;
         // full sort of the aggregated pool
-        pool.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        pool.sort_by(|a, b| b.0.total_cmp(&a.0));
         out.clear();
         for &(score, beam, tok) in pool.iter().take(bw) {
             out.parents.push(beam);

@@ -84,26 +84,52 @@ impl BeamState {
     }
 }
 
-/// A free-list pool of `BeamState`s with fixed shape.
+/// Free-list capacity floor: even an unwarmed pool keeps a few states
+/// around, but never an unbounded burst's worth.
+const DEFAULT_FREE_CAP: usize = 8;
+
+/// A free-list pool of `BeamState`s with fixed shape. The free list is
+/// **bounded** (2× the warm size): a concurrency burst may allocate past
+/// the cap, but the overflow is dropped on `give` instead of being held
+/// forever — without the bound, one burst would pin peak-burst memory on
+/// every stream for the life of the process.
 pub struct StatePool {
     bw: usize,
     nd: usize,
     free: Vec<BeamState>,
+    max_free: usize,
     pub created: u64,
     pub reused: u64,
+    /// states dropped at `give` because the free list was at capacity
+    pub dropped: u64,
 }
 
 impl StatePool {
     pub fn new(bw: usize, nd: usize) -> Self {
-        StatePool { bw, nd, free: Vec::new(), created: 0, reused: 0 }
+        StatePool {
+            bw,
+            nd,
+            free: Vec::new(),
+            max_free: DEFAULT_FREE_CAP,
+            created: 0,
+            reused: 0,
+            dropped: 0,
+        }
     }
 
-    /// Pre-populate (done at startup, off the request path).
+    /// Pre-populate (done at startup, off the request path); the free
+    /// list is capped at 2× the warmed size.
     pub fn warm(&mut self, n: usize) {
+        self.max_free = self.max_free.max(2 * n);
         for _ in 0..n {
             self.free.push(BeamState::new(self.bw, self.nd));
             self.created += 1;
         }
+    }
+
+    /// Steady-state free-list bound.
+    pub fn max_free(&self) -> usize {
+        self.max_free
     }
 
     pub fn take(&mut self) -> BeamState {
@@ -123,6 +149,11 @@ impl StatePool {
     pub fn give(&mut self, s: BeamState) {
         debug_assert_eq!(s.bw, self.bw);
         debug_assert_eq!(s.nd, self.nd);
+        if self.free.len() >= self.max_free {
+            // burst overshoot: drop instead of holding peak-burst memory
+            self.dropped += 1;
+            return;
+        }
         self.free.push(s);
     }
 
@@ -176,6 +207,30 @@ mod tests {
         assert_eq!(p.created, 1);
         p.give(a);
         assert_eq!(p.available(), 1);
+    }
+
+    #[test]
+    fn free_list_is_bounded_after_a_burst() {
+        let mut p = StatePool::new(4, 3);
+        p.warm(4); // cap = 2× warm = 8
+        assert_eq!(p.max_free(), 8);
+        // a 50-deep concurrency burst
+        let burst: Vec<BeamState> = (0..50).map(|_| p.take()).collect();
+        assert_eq!(p.created, 4 + 46, "burst allocates past the warm set");
+        for s in burst {
+            p.give(s);
+        }
+        // steady-state memory: the free list holds at most the cap; the
+        // burst overshoot was dropped, not retained
+        assert_eq!(p.available(), 8);
+        assert_eq!(p.dropped, 42);
+        // a second burst reuses the capped set then allocates again
+        let b2: Vec<BeamState> = (0..10).map(|_| p.take()).collect();
+        assert_eq!(p.reused, 4 + 8);
+        for s in b2 {
+            p.give(s);
+        }
+        assert_eq!(p.available(), 8, "cap holds under repeated bursts");
     }
 
     #[test]

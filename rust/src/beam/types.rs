@@ -47,6 +47,9 @@ pub struct SelectorStats {
     pub heap_admits: u64,
     /// buffer (re)allocations performed
     pub allocations: u64,
+    /// candidates rejected for a non-finite logit/score (a poisoned
+    /// runtime output degrades that one candidate, never the stream)
+    pub non_finite_rejects: u64,
 }
 
 /// A beam-selection strategy.
@@ -78,7 +81,7 @@ pub trait BeamSelector {
 pub fn log_softmax_row(row: &mut [f32]) -> (f32, f32) {
     let mut max = f32::NEG_INFINITY;
     for &x in row.iter() {
-        if x > max {
+        if x.is_finite() && x > max {
             max = x;
         }
     }
@@ -89,8 +92,12 @@ pub fn log_softmax_row(row: &mut [f32]) -> (f32, f32) {
     }
     let mut sum = 0.0f32;
     for &x in row.iter() {
-        let e = (x - max).exp();
-        sum += e;
+        // a single non-finite entry (poisoned logit) must not NaN the
+        // whole row's normalizer — it stays non-finite after the shift
+        // and callers filter it per candidate
+        if x.is_finite() {
+            sum += (x - max).exp();
+        }
     }
     let lse = sum.ln();
     for x in row.iter_mut() {
@@ -101,16 +108,26 @@ pub fn log_softmax_row(row: &mut [f32]) -> (f32, f32) {
 
 /// Seed the initial beams from a single (masked) prefill-logits row:
 /// top-`bw` tokens by log-probability. Returns (tokens, scores).
+/// Non-finite entries (poisoned logits) rank below everything — under
+/// `total_cmp` alone a positive NaN would outrank +∞ and win.
 pub fn seed_beams(logits: &mut [f32], bw: usize) -> (Vec<u32>, Vec<f32>) {
     log_softmax_row(logits);
+    let key = |t: u32| {
+        let v = logits[t as usize];
+        if v.is_finite() {
+            v
+        } else {
+            f32::NEG_INFINITY
+        }
+    };
     let mut idx: Vec<u32> = (0..logits.len() as u32).collect();
     let n = logits.len();
     let bw = bw.min(n);
     idx.select_nth_unstable_by(bw.saturating_sub(1), |&a, &b| {
-        logits[b as usize].partial_cmp(&logits[a as usize]).unwrap()
+        key(b).total_cmp(&key(a))
     });
     let mut top: Vec<u32> = idx[..bw].to_vec();
-    top.sort_by(|&a, &b| logits[b as usize].partial_cmp(&logits[a as usize]).unwrap());
+    top.sort_by(|&a, &b| key(b).total_cmp(&key(a)));
     let scores: Vec<f32> = top.iter().map(|&t| logits[t as usize]).collect();
     (top, scores)
 }

@@ -90,11 +90,14 @@ impl XBeam {
             if valid.is_empty() {
                 continue;
             }
-            // max + sum-exp over the valid set only
+            // max + sum-exp over the valid set only. Non-finite logits
+            // (a poisoned runtime output) are excluded candidate-by-
+            // candidate: one NaN degrades one selection, never the row's
+            // normalizer and never the stream (counted as rejects).
             let mut max = f32::NEG_INFINITY;
             for &t in valid {
                 let x = row[t as usize];
-                if x > max {
+                if x.is_finite() && x > max {
                     max = x;
                 }
             }
@@ -106,7 +109,10 @@ impl XBeam {
             }
             let mut sum = 0.0f32;
             for &t in valid {
-                sum += (row[t as usize] - max).exp();
+                let x = row[t as usize];
+                if x.is_finite() {
+                    sum += (x - max).exp();
+                }
             }
             let lse = sum.ln();
             let bs = beam_scores[b];
@@ -116,28 +122,40 @@ impl XBeam {
                 f32::NEG_INFINITY
             };
             self.cand.clear();
+            let mut row_rejects = 0usize;
             for &t in valid {
                 let x = row[t as usize];
+                if !x.is_finite() {
+                    row_rejects += 1;
+                    continue;
+                }
                 if x > bound {
                     self.cand.push((x, t));
                 }
             }
+            self.stats.non_finite_rejects += row_rejects as u64;
             self.stats.candidates_skipped +=
-                (valid.len() - self.cand.len()) as u64;
+                (valid.len() - self.cand.len() - row_rejects) as u64;
             let k = k.min(valid.len());
             if self.cand.len() > k {
                 self.cand.select_nth_unstable_by(k - 1, |a, b2| {
-                    b2.0.partial_cmp(&a.0).unwrap()
+                    b2.0.total_cmp(&a.0)
                 });
                 self.cand.truncate(k);
             }
-            self.cand
-                .sort_unstable_by(|a, b2| b2.0.partial_cmp(&a.0).unwrap());
+            self.cand.sort_unstable_by(|a, b2| b2.0.total_cmp(&a.0));
             let mut taken = 0u64;
             let n_cand = self.cand.len();
             for ci in 0..n_cand {
                 let (x, t) = self.cand[ci];
                 let score = bs + (x - max - lse);
+                if !score.is_finite() {
+                    // non-finite beam score (padded beam): candidate-
+                    // level reject, same policy as a poisoned logit
+                    self.stats.non_finite_rejects += 1;
+                    taken += 1;
+                    continue;
+                }
                 if self.heap.is_full()
                     && score <= self.heap.peek_min().unwrap()
                 {
@@ -182,10 +200,13 @@ impl BeamSelector for XBeam {
         for b in 0..n_beams {
             let row = &logits[b * vocab..(b + 1) * vocab];
             // ---- pass 1: streaming max + sum-exp (no copy, no writes;
-            // log-softmax is monotone so raw logits order candidates) ----
+            // log-softmax is monotone so raw logits order candidates).
+            // Non-finite logits are excluded here and counted as rejects
+            // in pass 2 — one poisoned entry degrades that candidate,
+            // not the row's normalizer. ----
             let mut max = f32::NEG_INFINITY;
             for &x in row {
-                if x > max {
+                if x.is_finite() && x > max {
                     max = x;
                 }
             }
@@ -197,7 +218,7 @@ impl BeamSelector for XBeam {
             }
             let mut sum = 0.0f32;
             for &x in row {
-                if x > -1.0e29 {
+                if x > -1.0e29 && x.is_finite() {
                     sum += (x - max).exp();
                 }
             }
@@ -214,27 +235,40 @@ impl BeamSelector for XBeam {
                 f32::NEG_INFINITY
             };
             self.cand.clear();
+            let mut row_rejects = 0usize;
             for (t, &x) in row.iter().enumerate() {
+                if !x.is_finite() {
+                    row_rejects += 1;
+                    continue;
+                }
                 if x > bound && x > -1.0e29 {
                     self.cand.push((x, t as u32));
                 }
             }
-            self.stats.candidates_skipped += (vocab - self.cand.len()) as u64;
+            self.stats.non_finite_rejects += row_rejects as u64;
+            self.stats.candidates_skipped +=
+                (vocab - self.cand.len() - row_rejects) as u64;
             // ---- per-beam top-K of the survivors, descending ----
             if self.cand.len() > k {
                 self.cand.select_nth_unstable_by(k - 1, |a, b2| {
-                    b2.0.partial_cmp(&a.0).unwrap()
+                    b2.0.total_cmp(&a.0)
                 });
                 self.cand.truncate(k);
             }
-            self.cand
-                .sort_unstable_by(|a, b2| b2.0.partial_cmp(&a.0).unwrap());
+            self.cand.sort_unstable_by(|a, b2| b2.0.total_cmp(&a.0));
             // ---- early-terminated heap reduction ----
             let mut taken = 0u64;
             let n_cand = self.cand.len();
             for ci in 0..n_cand {
                 let (x, t) = self.cand[ci];
                 let score = bs + (x - max - lse);
+                if !score.is_finite() {
+                    // non-finite beam score (padded beam): candidate-
+                    // level reject, same policy as a poisoned logit
+                    self.stats.non_finite_rejects += 1;
+                    taken += 1;
+                    continue;
+                }
                 if self.heap.is_full()
                     && score <= self.heap.peek_min().unwrap()
                 {
@@ -445,6 +479,40 @@ mod tests {
             xb.stats().candidates_skipped
         );
         assert_eq!(out.len(), 2, "live beam still fills the output");
+    }
+
+    #[test]
+    fn non_finite_logits_degrade_one_candidate_not_the_selection() {
+        let vocab = 16;
+        let mut rng = Pcg::new(9);
+        let mut logits = random_logits(&mut rng, 2, vocab, 0.0);
+        logits[3] = f32::NAN; // poisoned logit in beam 0
+        logits[vocab + 5] = f32::INFINITY; // runaway logit in beam 1
+        let mut xb = XBeam::new(4, 8, vocab);
+        let mut out = Selection::default();
+        xb.step(&logits, vocab, &[0.0, 0.0], 8, 4, &mut out);
+        assert_eq!(out.len(), 4, "finite candidates still fill the selection");
+        assert!(out.scores.iter().all(|s| s.is_finite()));
+        for (&p, &t) in out.parents.iter().zip(&out.tokens) {
+            assert!(
+                !(p == 0 && t == 3) && !(p == 1 && t == 5),
+                "poisoned candidate ({p},{t}) selected"
+            );
+        }
+        assert!(
+            xb.stats().non_finite_rejects >= 2,
+            "rejects must be counted: {:?}",
+            xb.stats()
+        );
+        // the same poison through the valid-list path
+        let mut xv = XBeam::new(4, 8, vocab);
+        let lists: Vec<u32> = (0..vocab as u32).collect();
+        let refs: Vec<&[u32]> = vec![lists.as_slice(), lists.as_slice()];
+        let mut out2 = Selection::default();
+        xv.step_valid(&logits, vocab, &[0.0, 0.0], &refs, 8, 4, &mut out2);
+        assert_eq!(out2.len(), 4);
+        assert!(out2.scores.iter().all(|s| s.is_finite()));
+        assert!(xv.stats().non_finite_rejects >= 2);
     }
 
     #[test]

@@ -21,8 +21,29 @@
 //! `kill_replica` drains a replica gracefully (its in-flight requests
 //! complete and are handed back), after which the router places around
 //! the corpse and the pool absorbs its users' next visits.
+//!
+//! # Work stealing (cross-replica batch migration)
+//!
+//! The router decides placement **once**, at admission. A replica that
+//! goes hot *after* placement — a bursty user, a slow stream, a killed
+//! peer shifting load — accumulates queued batches while others idle:
+//! exactly the tail-latency failure the paper's strict-SLO claim is
+//! about. With `ServingConfig::steal_threshold > 0` a steal loop
+//! watches per-replica queued-work telemetry
+//! ([`Coordinator::queued_work`]) and, whenever the busiest live
+//! replica leads the least-loaded by at least the threshold, migrates
+//! up to `steal_max_batches` whole queued batches
+//! ([`Coordinator::drain_tail`] — stalled formed batches, stream-queue
+//! tails, unformed backlog; **never** in-flight work, so results stay
+//! byte-identical). The victim publishes the migrated users' prefixes
+//! into the shared pool on the way out
+//! ([`PrefixPool::publish_for_migration`]) so the thief's first lookup
+//! is a DRAM swap-in instead of a full prefill (`steal_tokens_saved`),
+//! and the router re-homes the users to the thief. Donor policy lives
+//! in [`select_steal_pair`]; counted in `Counters::batch_steals` /
+//! `steal_tokens_saved` / `steal_aborts`.
 
-use super::router::Router;
+use super::router::{select_steal_pair, Router};
 use crate::config::ServingConfig;
 use crate::coordinator::{
     BackendStats, Coordinator, EngineConfig, ExecutorFactory, RecRequest,
@@ -56,13 +77,14 @@ struct ReplicaSlot {
 }
 
 pub struct ClusterCoordinator {
-    replicas: Vec<ReplicaSlot>,
+    /// Arc-shared with the steal thread, which reads the same slots
+    replicas: Arc<Vec<ReplicaSlot>>,
     /// per-replica counters, kept after a replica is killed so cluster
     /// stats stay complete
     counters: Vec<Arc<Counters>>,
-    alive: Vec<AtomicBool>,
+    alive: Arc<Vec<AtomicBool>>,
     outstanding: Arc<Vec<AtomicU64>>,
-    router: Mutex<Router>,
+    router: Arc<Mutex<Router>>,
     pool: Option<Arc<PrefixPool>>,
     /// merged response stream from all forwarders
     out: Channel<RecResponse>,
@@ -71,6 +93,108 @@ pub struct ClusterCoordinator {
     /// full, i.e. when consumers are NOT starved)
     pending: Arc<Mutex<VecDeque<RecResponse>>>,
     streams_per_replica: usize,
+    /// work-stealing tier (None when `steal_threshold == 0` or a single
+    /// replica)
+    steal_stop: Arc<AtomicBool>,
+    steal_thread: Mutex<Option<JoinHandle<()>>>,
+}
+
+/// One pass of the work-stealing loop. Reads per-replica queued-work
+/// telemetry, picks a (victim, thief) pair when the imbalance crosses
+/// `threshold`, detaches up to `max_batches` queued-but-unstarted
+/// batches from the victim's scheduler (`Coordinator::drain_tail` —
+/// never in-flight work, so results stay byte-identical), publishes the
+/// migrated users' prefixes into the shared pool (the thief's first
+/// lookup becomes a swap-in instead of a full prefill), and re-submits
+/// the requests on the thief. A request the thief cannot admit goes
+/// back to the victim (counted in `steal_aborts`) — a steal may be
+/// unprofitable, it can never lose work. Returns whether anything
+/// moved (the caller backs off when false).
+#[allow(clippy::too_many_arguments)]
+fn steal_tick(
+    replicas: &[ReplicaSlot],
+    alive: &[AtomicBool],
+    outstanding: &[AtomicU64],
+    router: &Mutex<Router>,
+    pool: Option<&PrefixPool>,
+    counters: &[Arc<Counters>],
+    threshold: u64,
+    max_batches: usize,
+) -> bool {
+    let alive_v: Vec<bool> =
+        alive.iter().map(|a| a.load(Ordering::Relaxed)).collect();
+    let mut depths = vec![0u64; replicas.len()];
+    for (r, slot) in replicas.iter().enumerate() {
+        if !alive_v[r] {
+            continue;
+        }
+        let g = slot.coord.read().unwrap();
+        depths[r] = g.as_ref().map(|c| c.queued_work()).unwrap_or(0);
+    }
+    let Some((victim_i, thief_i)) =
+        select_steal_pair(&depths, &alive_v, threshold)
+    else {
+        return false;
+    };
+    // hold read guards across the whole migration so neither replica can
+    // be detached out from under it (kill_replica's write lock waits)
+    let vg = replicas[victim_i].coord.read().unwrap();
+    let tg = replicas[thief_i].coord.read().unwrap();
+    let (Some(victim), Some(thief)) = (vg.as_ref(), tg.as_ref()) else {
+        return false;
+    };
+    let stolen = victim.drain_tail(max_batches);
+    if stolen.is_empty() {
+        Counters::inc(&counters[victim_i].steal_aborts);
+        return false;
+    }
+    let now_us = now_ns() / 1_000;
+    let mut saved = 0u64;
+    for batch in stolen {
+        let mut migrated = false;
+        for req in batch.requests {
+            let user = req.user_id;
+            let prompt_len = req.tokens.len().max(1);
+            // pool handoff BEFORE re-submission: the thief's lookup must
+            // not race an unrefreshed (TTL-expiring) entry. The covered
+            // span is only CREDITED if the thief admits the request — a
+            // bounced request goes home to its warm cache and skips no
+            // prefill (the early refresh itself is a harmless restamp).
+            let covered = pool
+                .map(|p| {
+                    p.publish_for_migration(user, &req.tokens, prompt_len, now_us)
+                        as u64
+                })
+                .unwrap_or(0);
+            match thief.submit(req) {
+                Ok(()) => {
+                    migrated = true;
+                    saved += covered;
+                    let _ = outstanding[victim_i].fetch_update(
+                        Ordering::Relaxed,
+                        Ordering::Relaxed,
+                        |v| Some(v.saturating_sub(1)),
+                    );
+                    outstanding[thief_i].fetch_add(1, Ordering::Relaxed);
+                    // the user's prefix now lives (or will live) on the
+                    // thief: future placements follow the migration
+                    router.lock().unwrap().note_placed(user, thief_i, prompt_len);
+                }
+                Err(ret) => {
+                    // thief filled up mid-steal: the request goes home —
+                    // the victim's scheduler re-ingests it through the
+                    // (already repaired) affinity map
+                    Counters::inc(&counters[victim_i].steal_aborts);
+                    let _ = victim.submit_blocking(ret);
+                }
+            }
+        }
+        if migrated {
+            Counters::inc(&counters[victim_i].batch_steals);
+        }
+    }
+    Counters::add(&counters[victim_i].steal_tokens_saved, saved);
+    true
 }
 
 impl ClusterCoordinator {
@@ -162,16 +286,68 @@ impl ClusterCoordinator {
                 forwarder: Mutex::new(Some(forwarder)),
             });
         }
+        let replicas = Arc::new(replicas);
+        let alive: Arc<Vec<AtomicBool>> =
+            Arc::new((0..n).map(|_| AtomicBool::new(true)).collect());
+        let router = Arc::new(Mutex::new(Router::new(ROUTER_MAP_CAP)));
+        let steal_stop = Arc::new(AtomicBool::new(false));
+        // ---- work-stealing tier ----
+        // Admission placement is decided ONCE by the router; a replica
+        // that goes hot after placement (bursty user, slow stream, a
+        // mid-trace kill shifting load) would otherwise sit on queued
+        // batches while its peers idle. The steal loop watches queued-
+        // work telemetry and migrates whole unstarted batches from the
+        // busiest replica to the least-loaded one; the shared pool turns
+        // the thief's cache miss into a swap-in (`steal_tokens_saved`).
+        let steal_thread = if n > 1 && serving.steal_threshold > 0 {
+            let replicas = replicas.clone();
+            let alive = alive.clone();
+            let outstanding = outstanding.clone();
+            let router = router.clone();
+            let pool = pool.clone();
+            let counters = counters.clone();
+            let stop = steal_stop.clone();
+            let threshold = serving.steal_threshold as u64;
+            let max_batches = serving.steal_max_batches;
+            Some(
+                std::thread::Builder::new()
+                    .name("xgr-cluster-steal".into())
+                    .spawn(move || {
+                        while !stop.load(Ordering::SeqCst) {
+                            let stole = steal_tick(
+                                &replicas,
+                                &alive,
+                                &outstanding,
+                                &router,
+                                pool.as_deref(),
+                                &counters,
+                                threshold,
+                                max_batches,
+                            );
+                            if !stole {
+                                // balanced (or nothing stealable): back
+                                // off instead of spinning on telemetry
+                                std::thread::sleep(Duration::from_micros(500));
+                            }
+                        }
+                    })
+                    .expect("spawn cluster steal loop"),
+            )
+        } else {
+            None
+        };
         Ok(ClusterCoordinator {
             replicas,
             counters,
-            alive: (0..n).map(|_| AtomicBool::new(true)).collect(),
+            alive,
             outstanding,
-            router: Mutex::new(Router::new(ROUTER_MAP_CAP)),
+            router,
             pool,
             out,
             pending,
             streams_per_replica,
+            steal_stop,
+            steal_thread: Mutex::new(steal_thread),
         })
     }
 
@@ -332,6 +508,12 @@ impl ClusterCoordinator {
     /// Drain everything: close every replica, return all unclaimed
     /// responses (cluster-global stream ids).
     pub fn shutdown(self) -> Vec<RecResponse> {
+        // stop the steal loop first: a steal mid-shutdown would race the
+        // replica detach (and there is nothing left worth balancing)
+        self.steal_stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.steal_thread.lock().unwrap().take() {
+            let _ = h.join();
+        }
         let mut drained: Vec<RecResponse> =
             self.pending.lock().unwrap().drain(..).collect();
         for r in 0..self.replicas.len() {
@@ -374,7 +556,7 @@ mod tests {
     use super::*;
     use crate::config::ModelSpec;
     use crate::itemspace::Catalog;
-    use crate::runtime::MockExecutor;
+    use crate::runtime::{MockExecutor, ModelExecutor, SlotId};
 
     fn cluster(replicas: usize, pool_mb: u64) -> ClusterCoordinator {
         let mut spec = ModelSpec::onerec_tiny();
@@ -433,6 +615,111 @@ mod tests {
         assert_eq!(stats.per_replica_hit_rates.len(), 3);
         let rest = c.shutdown();
         assert!(rest.is_empty());
+    }
+
+    /// Mock with a fixed prefill delay, so a burst deterministically
+    /// backs its replica up far enough for the steal loop to fire.
+    struct SlowExecutor {
+        inner: MockExecutor,
+        delay: Duration,
+    }
+
+    impl ModelExecutor for SlowExecutor {
+        fn spec(&self) -> &ModelSpec {
+            self.inner.spec()
+        }
+
+        fn prefill(&mut self, tokens: &[u32]) -> crate::Result<(SlotId, Vec<f32>)> {
+            std::thread::sleep(self.delay);
+            self.inner.prefill(tokens)
+        }
+
+        fn decode(
+            &mut self,
+            slot: SlotId,
+            step: usize,
+            beam_tokens: &[u32],
+            parents: &[usize],
+        ) -> crate::Result<Vec<f32>> {
+            self.inner.decode(slot, step, beam_tokens, parents)
+        }
+
+        fn release(&mut self, slot: SlotId) {
+            self.inner.release(slot)
+        }
+
+        fn live_slots(&self) -> usize {
+            self.inner.live_slots()
+        }
+    }
+
+    #[test]
+    fn steal_loop_migrates_queued_batches_with_pool_handoff() {
+        let mut spec = ModelSpec::onerec_tiny();
+        spec.vocab = 64;
+        spec.beam_width = 4;
+        let catalog = Catalog::generate(64, 400, 2);
+        let trie = Arc::new(crate::itemspace::ItemTrie::build(&catalog));
+        let mut serving = ServingConfig::default();
+        serving.num_streams = 1;
+        serving.batch_wait_us = 200;
+        serving.max_batch_requests = 1;
+        serving.session_cache = true;
+        serving.cluster_replicas = 3;
+        serving.pool_bytes = 16 << 20;
+        serving.steal_threshold = 1; // any imbalance is worth stealing
+        serving.steal_max_batches = 2;
+        let factory: ExecutorFactory = {
+            let spec = spec.clone();
+            Arc::new(move || {
+                Ok(Box::new(SlowExecutor {
+                    inner: MockExecutor::new(spec.clone()),
+                    delay: Duration::from_millis(4),
+                }) as _)
+            })
+        };
+        let c = ClusterCoordinator::start(
+            &serving,
+            EngineConfig::default(),
+            trie,
+            factory,
+        )
+        .unwrap();
+        // identical prompts so the pooled prefix covers every burst
+        // request (the handoff accounting needs a real match)
+        let breq = |id: u64| RecRequest {
+            id,
+            tokens: vec![1, 2, 3],
+            arrival_ns: now_ns(),
+            user_id: 7,
+        };
+        // warm turn: user 7's prefix is served and pool-published
+        c.submit_blocking(breq(0)).unwrap();
+        assert!(c.recv_timeout(Duration::from_secs(10)).is_some());
+        // hot-user burst: the router's bounded local preference piles
+        // these onto user 7's home replica — the steal loop must spread
+        // the queued tail over the idle replicas
+        let burst = 16u64;
+        for i in 1..=burst {
+            c.submit_blocking(breq(i)).unwrap();
+        }
+        let mut got = std::collections::HashSet::new();
+        while got.len() < burst as usize {
+            let r = c
+                .recv_timeout(Duration::from_secs(30))
+                .expect("burst must complete despite migrations");
+            assert!(got.insert(r.id), "request {} served twice", r.id);
+        }
+        let stats = c.backend_stats();
+        c.shutdown();
+        assert!(
+            stats.batch_steals > 0,
+            "an idle replica must steal from the hot one: {stats:?}"
+        );
+        assert!(
+            stats.steal_tokens_saved > 0,
+            "the pool handoff must cover the migrated prompts: {stats:?}"
+        );
     }
 
     #[test]

@@ -110,6 +110,37 @@ impl Router {
     }
 }
 
+/// Work-stealing donor selection: pick `(victim, thief)` — the busiest
+/// and least-loaded **live** replicas by queued (unstarted) work — when
+/// the imbalance is at least `threshold` requests. Returns None when
+/// the fleet is balanced, has fewer than two live replicas, or the
+/// threshold is not met. Ties break toward the lower index, keeping the
+/// steal loop deterministic for a given telemetry snapshot.
+pub fn select_steal_pair(
+    depths: &[u64],
+    alive: &[bool],
+    threshold: u64,
+) -> Option<(usize, usize)> {
+    let mut victim: Option<usize> = None;
+    let mut thief: Option<usize> = None;
+    for r in 0..depths.len() {
+        if !alive[r] {
+            continue;
+        }
+        if victim.is_none_or(|v| depths[r] > depths[v]) {
+            victim = Some(r);
+        }
+        if thief.is_none_or(|t| depths[r] < depths[t]) {
+            thief = Some(r);
+        }
+    }
+    let (v, t) = (victim?, thief?);
+    if v == t || depths[v] < depths[t].saturating_add(threshold.max(1)) {
+        return None;
+    }
+    Some((v, t))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -170,6 +201,34 @@ mod tests {
         assert!(r
             .place(&req(7, vec![1]), &[0, 0, 0], &[false; 3], Some(&pool), 1)
             .is_none());
+    }
+
+    #[test]
+    fn steal_pair_picks_busiest_and_idlest_live_replicas() {
+        let alive = [true; 4];
+        assert_eq!(
+            select_steal_pair(&[9, 0, 3, 1], &alive, 2),
+            Some((0, 1)),
+            "busiest donates to idlest"
+        );
+        // imbalance below the threshold: no steal
+        assert_eq!(select_steal_pair(&[3, 2, 3, 2], &alive, 2), None);
+        // threshold 0 behaves like 1 (any real imbalance)
+        assert_eq!(select_steal_pair(&[2, 1], &[true, true], 0), Some((0, 1)));
+        assert_eq!(select_steal_pair(&[1, 1], &[true, true], 0), None);
+        // dead replicas are never picked on either side
+        assert_eq!(
+            select_steal_pair(&[9, 0, 4, 1], &[false, false, true, true], 1),
+            Some((2, 3))
+        );
+        // fewer than two live replicas: nothing to balance
+        assert_eq!(select_steal_pair(&[9, 1], &[true, false], 1), None);
+        assert_eq!(select_steal_pair(&[], &[], 1), None);
+        // deterministic tie-break toward the lower index
+        assert_eq!(
+            select_steal_pair(&[5, 0, 5, 0], &alive, 1),
+            Some((0, 1))
+        );
     }
 
     #[test]

@@ -79,6 +79,16 @@ pub struct ServingConfig {
     /// per-entry TTL for pooled prefixes, microseconds since last
     /// publish; 0 = no expiry. Requires `pool_bytes > 0`.
     pub prefix_ttl_us: u64,
+    /// cross-replica work stealing: when the busiest replica's queued
+    /// (unstarted) work exceeds the least-loaded live replica's by at
+    /// least this many requests, the steal loop migrates whole queued
+    /// batches from the back of the busiest replica's scheduler queues
+    /// to the idle one (never in-flight work, so results are
+    /// byte-identical). 0 disables stealing.
+    pub steal_threshold: usize,
+    /// max whole batches migrated per steal operation (always >= 1; only
+    /// consulted when `steal_threshold > 0`)
+    pub steal_max_batches: usize,
     pub features: Features,
 }
 
@@ -102,6 +112,8 @@ impl Default for ServingConfig {
             cluster_replicas: 1,
             pool_bytes: 0,
             prefix_ttl_us: 0,
+            steal_threshold: 0,
+            steal_max_batches: 4,
             features: Features::all_on(),
         }
     }
@@ -132,6 +144,8 @@ impl ServingConfig {
                 "cluster_replicas" => c.cluster_replicas = v.as_usize().ok_or_else(|| anyhow!("cluster_replicas"))?,
                 "pool_bytes" => c.pool_bytes = v.as_f64().ok_or_else(|| anyhow!("pool_bytes"))? as u64,
                 "prefix_ttl_us" => c.prefix_ttl_us = v.as_f64().ok_or_else(|| anyhow!("prefix_ttl_us"))? as u64,
+                "steal_threshold" => c.steal_threshold = v.as_usize().ok_or_else(|| anyhow!("steal_threshold"))?,
+                "steal_max_batches" => c.steal_max_batches = v.as_usize().ok_or_else(|| anyhow!("steal_max_batches"))?,
                 "valid_filter" => c.features.valid_filter = v.as_bool().ok_or_else(|| anyhow!("valid_filter"))?,
                 "graph_dispatch" => c.features.graph_dispatch = v.as_bool().ok_or_else(|| anyhow!("graph_dispatch"))?,
                 "multi_stream" => c.features.multi_stream = v.as_bool().ok_or_else(|| anyhow!("multi_stream"))?,
@@ -173,6 +187,12 @@ impl ServingConfig {
         }
         if self.prefix_ttl_us > 3_600_000_000 {
             return Err(anyhow!("prefix_ttl_us must be <= 1h"));
+        }
+        if self.steal_threshold > 1 << 20 {
+            return Err(anyhow!("steal_threshold must be <= 2^20 requests"));
+        }
+        if self.steal_max_batches == 0 || self.steal_max_batches > 64 {
+            return Err(anyhow!("steal_max_batches must be in 1..=64"));
         }
         Ok(())
     }
@@ -316,6 +336,33 @@ mod tests {
         assert!(ServingConfig::from_json(&j).is_err());
         // defaults: single replica, no pool
         assert!(ServingConfig::default().pool_config().is_none());
+    }
+
+    #[test]
+    fn steal_knobs_parse_validate_and_round_trip() {
+        let j = Json::parse(
+            r#"{"steal_threshold": 3, "steal_max_batches": 8}"#,
+        )
+        .unwrap();
+        let c = ServingConfig::from_json(&j).unwrap();
+        assert_eq!(c.steal_threshold, 3);
+        assert_eq!(c.steal_max_batches, 8);
+        // 0 = disabled is valid for the threshold
+        let j = Json::parse(r#"{"steal_threshold": 0}"#).unwrap();
+        let c = ServingConfig::from_json(&j).unwrap();
+        assert_eq!(c.steal_threshold, 0);
+        assert_eq!(c.steal_max_batches, 4, "default batch cap untouched");
+        // absurd values fail loudly
+        let j = Json::parse(r#"{"steal_max_batches": 0}"#).unwrap();
+        assert!(ServingConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"steal_max_batches": 65}"#).unwrap();
+        assert!(ServingConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"steal_threshold": 2000000}"#).unwrap();
+        assert!(ServingConfig::from_json(&j).is_err());
+        // defaults: stealing off, valid
+        let d = ServingConfig::default();
+        assert_eq!(d.steal_threshold, 0);
+        d.validate().unwrap();
     }
 
     #[test]

@@ -145,15 +145,34 @@ impl Engine {
         self.session.as_ref()
     }
 
+    /// Work counters of the active selector (early-termination ratios,
+    /// non-finite logit rejects).
+    pub fn selector_stats(&self) -> crate::beam::SelectorStats {
+        match self.cfg.selector {
+            SelectorKind::XBeam => self.xbeam.stats(),
+            SelectorKind::Naive => self.naive.stats(),
+        }
+    }
+
     /// Serve one request end-to-end; `stream` is a label for the response.
     pub fn process(&mut self, req: &RecRequest, stream: usize) -> Result<RecResponse> {
         let t0 = now_ns();
         let out = self.run_request(req)?;
         Counters::inc(&self.counters.requests_done);
+        let done = now_ns();
+        // queue and service time are stamped SEPARATELY: a future-stamped
+        // arrival (open-loop replay pacing) reads as zero queue time —
+        // the old `arrival.min(t0)` collapse silently folded the skew
+        // into one number, conflating queue and service in every
+        // percentile report
+        let queue_ns = t0.saturating_sub(req.arrival_ns);
+        let service_ns = done.saturating_sub(t0);
         Ok(RecResponse {
             id: out.id,
             items: out.items,
-            latency_ns: now_ns().saturating_sub(req.arrival_ns.min(t0)),
+            latency_ns: queue_ns + service_ns,
+            queue_ns,
+            service_ns,
             valid_items: out.valid_items,
             stream,
         })
@@ -323,7 +342,7 @@ impl Engine {
                     }
                 }
             }
-            items.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+            items.sort_by(|a, b| b.1.total_cmp(&a.1));
             items.dedup_by_key(|x| x.0);
             let valid_items =
                 items.iter().filter(|(it, _)| self.trie.contains(*it)).count();
@@ -522,6 +541,78 @@ mod tests {
             Counters::get(&warm.counters.session_hits),
             3,
             "engine counters mirror the cache"
+        );
+    }
+
+    /// Delegates to the mock but poisons one decode logit per step with
+    /// NaN — the failure mode a real runtime exhibits on a numerics bug.
+    struct NanExecutor {
+        inner: MockExecutor,
+    }
+
+    impl crate::runtime::ModelExecutor for NanExecutor {
+        fn spec(&self) -> &ModelSpec {
+            self.inner.spec()
+        }
+
+        fn prefill(&mut self, tokens: &[u32]) -> crate::Result<(crate::runtime::SlotId, Vec<f32>)> {
+            self.inner.prefill(tokens)
+        }
+
+        fn decode(
+            &mut self,
+            slot: crate::runtime::SlotId,
+            step: usize,
+            beam_tokens: &[u32],
+            parents: &[usize],
+        ) -> crate::Result<Vec<f32>> {
+            let mut logits = self.inner.decode(slot, step, beam_tokens, parents)?;
+            logits[step % logits.len()] = f32::NAN;
+            Ok(logits)
+        }
+
+        fn release(&mut self, slot: crate::runtime::SlotId) {
+            self.inner.release(slot)
+        }
+
+        fn live_slots(&self) -> usize {
+            self.inner.live_slots()
+        }
+    }
+
+    #[test]
+    fn nan_logit_degrades_one_candidate_instead_of_panicking() {
+        let mut spec = ModelSpec::onerec_tiny();
+        spec.vocab = 64;
+        spec.beam_width = 8;
+        spec.seq = 48;
+        let catalog = Catalog::generate(64, 600, 5);
+        let trie = Arc::new(ItemTrie::build(&catalog));
+        // filtered (device-resident lists) path: must serve through the
+        // poison without panicking the stream
+        let mut filtered = Engine::new(
+            Box::new(NanExecutor { inner: MockExecutor::new(spec.clone()) }),
+            trie.clone(),
+            EngineConfig::default(),
+        );
+        // unfiltered path scans the whole row, so every poisoned entry
+        // is provably seen and must be a *counted* reject
+        let mut unfiltered = Engine::new(
+            Box::new(NanExecutor { inner: MockExecutor::new(spec) }),
+            trie,
+            EngineConfig { valid_filter: false, ..Default::default() },
+        );
+        for i in 0..4 {
+            let r = req(i, vec![1, 2, 3, (i as u32) % 60]);
+            let out = filtered.run_request(&r).unwrap();
+            assert!(!out.items.is_empty(), "selection survives the poison");
+            assert!(out.items.iter().all(|(_, s)| s.is_finite()));
+            let out = unfiltered.run_request(&r).unwrap();
+            assert!(out.items.iter().all(|(_, s)| s.is_finite()));
+        }
+        assert!(
+            unfiltered.selector_stats().non_finite_rejects > 0,
+            "the poisoned candidates must be counted as rejects"
         );
     }
 

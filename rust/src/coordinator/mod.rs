@@ -46,8 +46,14 @@ pub struct RecResponse {
     pub id: u64,
     /// (item triplet, cumulative log-prob), best first
     pub items: Vec<([u32; 3], f32)>,
-    /// end-to-end latency
+    /// end-to-end latency (`queue_ns + service_ns`)
     pub latency_ns: u64,
+    /// arrival → processing start (admission + batching + queue wait; 0
+    /// for future-stamped arrivals from open-loop replay pacing — the
+    /// skew is confined here instead of contaminating `service_ns`)
+    pub queue_ns: u64,
+    /// processing start → completion (prefill + decode + selection)
+    pub service_ns: u64,
     /// items that exist in the catalog (== items.len() when filtering on)
     pub valid_items: usize,
     /// which stream served it (cluster mode: globally numbered,
@@ -75,6 +81,13 @@ pub struct BackendStats {
     pub pool_ttl_expirations: u64,
     pub pool_epoch_drops: u64,
     pub pool_peak_bytes: u64,
+    /// whole queued batches migrated between replicas by work stealing
+    pub batch_steals: u64,
+    /// prompt tokens the pool handoff spares stolen requests from
+    /// re-prefilling
+    pub steal_tokens_saved: u64,
+    /// steal attempts that migrated nothing (empty drain or full thief)
+    pub steal_aborts: u64,
     /// session hit rate per replica (one element for a lone coordinator)
     pub per_replica_hit_rates: Vec<f64>,
 }
@@ -104,6 +117,9 @@ impl BackendStats {
             pool_ttl_expirations: g(&c.pool_ttl_expirations),
             pool_epoch_drops: g(&c.pool_epoch_drops),
             pool_peak_bytes: 0,
+            batch_steals: g(&c.batch_steals),
+            steal_tokens_saved: g(&c.steal_tokens_saved),
+            steal_aborts: g(&c.steal_aborts),
             per_replica_hit_rates: vec![crate::metrics::session_hit_rate(
                 g(&c.session_hits),
                 g(&c.session_misses),
@@ -127,6 +143,9 @@ impl BackendStats {
         self.pool_hits += o.pool_hits;
         self.pool_misses += o.pool_misses;
         self.pool_epoch_drops += o.pool_epoch_drops;
+        self.batch_steals += o.batch_steals;
+        self.steal_tokens_saved += o.steal_tokens_saved;
+        self.steal_aborts += o.steal_aborts;
         // pool-global fields (TTL expirations, peak) come from the single
         // shared pool, not per-replica sums — take the max, not the sum
         self.pool_ttl_expirations = self.pool_ttl_expirations.max(o.pool_ttl_expirations);

@@ -49,6 +49,7 @@ use crate::util::clockmap::ClockMap;
 use crate::util::now_ns;
 use crate::util::pool::Channel;
 use crate::Result;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
@@ -82,6 +83,13 @@ impl AffinityMap {
     /// Pin `user` to `stream`, evicting via the clock when at capacity.
     fn insert(&mut self, user: u64, stream: usize) {
         self.0.insert(user, stream);
+    }
+
+    /// Forget `user`'s pin entirely (their prefix is migrating to
+    /// another replica — stale stickiness here would route their next
+    /// visit to KV that left).
+    fn remove(&mut self, user: u64) {
+        self.0.remove(user);
     }
 
     /// Re-pin every user mapped to `dead_stream` round-robin across the
@@ -254,9 +262,27 @@ fn try_spill(
 pub type ExecutorFactory =
     Arc<dyn Fn() -> Result<Box<dyn ModelExecutor>> + Send + Sync>;
 
+/// Control messages to the scheduler thread — the victim side of the
+/// cross-replica steal protocol.
+enum SchedCtl {
+    /// Detach up to `max_batches` queued-but-unstarted batches (stalled
+    /// formed batches, stream-queue tails, then unformed backlog) and
+    /// send them back on `reply`. The scheduler repairs the affinity
+    /// map for the migrated users before replying.
+    DrainTail { max_batches: usize, reply: Channel<Vec<Batch>> },
+}
+
 pub struct Coordinator {
     inbox: Channel<RecRequest>,
     responses: Channel<RecResponse>,
+    /// per-stream batch queues (kept for queued-work telemetry; the
+    /// scheduler and workers own the live routing)
+    stream_queues: Vec<Channel<Batch>>,
+    /// control channel into the scheduler thread (steal protocol)
+    ctl: Channel<SchedCtl>,
+    /// requests sitting in the scheduler's batchers + stalled slots,
+    /// refreshed once per scheduler tick (telemetry only)
+    sched_backlog: Arc<AtomicU64>,
     scheduler: Option<JoinHandle<()>>,
     workers: Option<Workers>,
     pub counters: Arc<Counters>,
@@ -327,9 +353,13 @@ impl Coordinator {
             counters.clone(),
         );
 
+        let ctl: Channel<SchedCtl> = Channel::bounded(4);
+        let sched_backlog = Arc::new(AtomicU64::new(0));
         let scheduler = {
             let inbox = inbox.clone();
-            let queues = stream_queues;
+            let queues = stream_queues.clone();
+            let ctl = ctl.clone();
+            let sched_backlog = sched_backlog.clone();
             let counters = counters.clone();
             // affinity needs one batcher per stream (so co-routed requests
             // still batch together); load-balanced routing needs only one
@@ -457,10 +487,85 @@ impl Coordinator {
                                     for q in &queues {
                                         q.close();
                                     }
+                                    ctl.close();
                                     return;
                                 }
                             }
                         }
+                        // ---- steal protocol, victim side ----
+                        // Detach queued-but-unstarted work, most-stealable
+                        // first: (1) stalled formed batches (stuck behind a
+                        // full affine queue), (2) the tails of the deepest
+                        // stream queues (workers pop the front, so a tail
+                        // batch is provably unstarted), (3) unformed
+                        // backlog from the deepest batcher. The migrated
+                        // users are dropped from the affinity/warm maps —
+                        // their prefix leaves with them, and stale
+                        // stickiness would route their next visit to KV
+                        // that is gone (the PR 2 repair principle at
+                        // migration granularity).
+                        while let Some(SchedCtl::DrainTail { max_batches, reply }) =
+                            ctl.try_recv()
+                        {
+                            let mut stolen: Vec<Batch> = Vec::new();
+                            for bi in 0..batchers.len() {
+                                if stolen.len() >= max_batches {
+                                    break;
+                                }
+                                if let Some(b) = pending[bi].take() {
+                                    stall_since[bi] = None;
+                                    stolen.push(b);
+                                }
+                            }
+                            while stolen.len() < max_batches {
+                                let deepest = (0..queues.len())
+                                    .filter(|&s| !queues[s].is_empty())
+                                    .max_by_key(|&s| queues[s].len());
+                                let Some(s) = deepest else { break };
+                                let mut tail = queues[s].drain_tail(1);
+                                match tail.pop() {
+                                    Some(b) => stolen.push(b),
+                                    None => break, // raced the worker: empty
+                                }
+                            }
+                            while stolen.len() < max_batches {
+                                let bi = (0..batchers.len())
+                                    .max_by_key(|&i| batchers[i].queued_requests())
+                                    .unwrap_or(0);
+                                if batchers[bi].queued_requests() == 0 {
+                                    break;
+                                }
+                                match batchers[bi].take_batch() {
+                                    Some(b) if !b.requests.is_empty() => {
+                                        stolen.push(b)
+                                    }
+                                    _ => break,
+                                }
+                            }
+                            if affinity {
+                                for b in &stolen {
+                                    for r in &b.requests {
+                                        amap.remove(r.user_id);
+                                        warm_map.remove(r.user_id);
+                                    }
+                                }
+                            }
+                            let _ = reply.send(stolen);
+                        }
+                        // telemetry: requests still waiting inside this
+                        // scheduler (batcher backlog + stalled batches)
+                        sched_backlog.store(
+                            batchers
+                                .iter()
+                                .map(|b| b.queued_requests() as u64)
+                                .sum::<u64>()
+                                + pending
+                                    .iter()
+                                    .flatten()
+                                    .map(|b| b.requests.len() as u64)
+                                    .sum::<u64>(),
+                            Ordering::Relaxed,
+                        );
                         // dispatch policy: budget full or quota exceeded
                         'batchers: for bi in 0..batchers.len() {
                             let target = if affinity && !dead[bi] {
@@ -529,6 +634,7 @@ impl Coordinator {
                                         continue 'batchers;
                                     }
                                     Delivery::AllClosed => {
+                                        ctl.close();
                                         return;
                                     }
                                 }
@@ -551,6 +657,7 @@ impl Coordinator {
                                         continue 'batchers;
                                     }
                                     Delivery::AllClosed => {
+                                        ctl.close();
                                         return;
                                     }
                                 }
@@ -564,11 +671,70 @@ impl Coordinator {
         Ok(Coordinator {
             inbox,
             responses,
+            stream_queues,
+            ctl,
+            sched_backlog,
             scheduler: Some(scheduler),
             workers: Some(workers),
             counters,
             pool,
         })
+    }
+
+    /// Queued-but-unstarted work at this coordinator, in **requests**:
+    /// admission inbox + the scheduler's batcher backlog + the requests
+    /// inside batches waiting in stream queues (counted through the
+    /// batch, so a replica holding few LARGE batches is not mistaken
+    /// for an idle one). In-flight work — anything a worker already
+    /// popped — is excluded, which is exactly the stealable quantity.
+    pub fn queued_work(&self) -> u64 {
+        self.inbox.len() as u64
+            + self.sched_backlog.load(Ordering::Relaxed)
+            + self
+                .stream_queues
+                .iter()
+                .map(|q| q.fold_queued(|b| b.requests.len() as u64))
+                .sum::<u64>()
+    }
+
+    /// Steal protocol, victim side: detach up to `max_batches` queued-
+    /// but-unstarted batches from this coordinator (stalled formed
+    /// batches, stream-queue tails, unformed backlog — never work a
+    /// worker has started) and repair the affinity map for the migrated
+    /// users. Returns the detached batches; empty when there is nothing
+    /// stealable or the scheduler is gone. Usually returns within one
+    /// admission tick; in load-balanced (non-affinity) mode it can wait
+    /// behind the scheduler's dispatch backpressure, but never past the
+    /// scheduler's lifetime.
+    pub fn drain_tail(&self, max_batches: usize) -> Vec<Batch> {
+        if max_batches == 0 {
+            return Vec::new();
+        }
+        let reply: Channel<Vec<Batch>> = Channel::bounded(1);
+        if self
+            .ctl
+            .try_send(SchedCtl::DrainTail { max_batches, reply: reply.clone() })
+            .is_err()
+        {
+            // scheduler gone or the ctl queue is saturated with other
+            // steals: nothing detached
+            return Vec::new();
+        }
+        // Wait for the reply for as long as the scheduler is alive —
+        // abandoning a reply that arrives later would LOSE the detached
+        // batches. The scheduler closes `ctl` on every exit path and
+        // always replies before it can exit, so "ctl closed + reply
+        // empty" means the request was never served.
+        loop {
+            if let Some(b) = reply.recv_timeout(Duration::from_millis(50)) {
+                return b;
+            }
+            if self.ctl.is_closed() {
+                // the close happened after any reply send on the same
+                // thread, so one last non-blocking read cannot race
+                return reply.try_recv().unwrap_or_default();
+            }
+        }
     }
 
     /// The shared prefix pool, when configured.
@@ -913,6 +1079,93 @@ mod tests {
             "the burst must spill off the affine stream"
         );
         assert!(streams.len() > 1, "spilled batches must reach other streams");
+    }
+
+    #[test]
+    fn drain_tail_detaches_only_unstarted_work_and_heals_the_map() {
+        // slow workers + one-request batches back the scheduler up;
+        // drain_tail hands work back, and re-submitting it completes it:
+        // every request resolves EXACTLY once (stealing an in-flight
+        // batch would produce a duplicate response, losing one would
+        // leave a gap)
+        let mut spec = ModelSpec::onerec_tiny();
+        spec.vocab = 64;
+        spec.beam_width = 4;
+        let catalog = Catalog::generate(64, 400, 2);
+        let trie = Arc::new(ItemTrie::build(&catalog));
+        let mut serving = ServingConfig::default();
+        serving.num_streams = 2;
+        serving.batch_wait_us = 200;
+        serving.max_batch_requests = 1;
+        serving.session_cache = true;
+        serving.affinity_spill_depth = 0; // absolute affinity: deep backlogs
+        let factory: ExecutorFactory = {
+            let spec = spec.clone();
+            Arc::new(move || {
+                Ok(Box::new(SlowExecutor {
+                    inner: MockExecutor::new(spec.clone()),
+                    delay: Duration::from_millis(4),
+                }) as _)
+            })
+        };
+        let c = Coordinator::start(
+            &serving,
+            EngineConfig::default(),
+            trie,
+            factory,
+        )
+        .unwrap();
+        let n = 40u64;
+        for i in 0..n {
+            c.submit_blocking(RecRequest {
+                id: i,
+                tokens: vec![1, 2, (i % 60) as u32],
+                arrival_ns: now_ns(),
+                user_id: i % 3,
+            })
+            .unwrap();
+        }
+        let depth_before = c.queued_work();
+        assert!(depth_before > 0, "telemetry must see the backlog");
+        let mut stolen: Vec<RecRequest> = Vec::new();
+        for _ in 0..6 {
+            for b in c.drain_tail(2) {
+                stolen.extend(b.requests);
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(
+            !stolen.is_empty(),
+            "a backed-up scheduler must yield stealable work"
+        );
+        // everything NOT stolen completes on its own…
+        let mut got = std::collections::HashSet::new();
+        for _ in 0..(n as usize - stolen.len()) {
+            let r = c
+                .recv_timeout(Duration::from_secs(30))
+                .expect("non-stolen work must complete");
+            assert!(got.insert(r.id), "duplicate response {}", r.id);
+        }
+        // …and nothing extra appears: the stolen requests were never
+        // started (an in-flight steal would answer here)
+        assert!(
+            c.recv_timeout(Duration::from_millis(300)).is_none(),
+            "a stolen batch must not also be served"
+        );
+        // thief role: re-submit the stolen work through the healed map
+        let n_stolen = stolen.len();
+        for r in stolen {
+            c.submit_blocking(r).unwrap();
+        }
+        for _ in 0..n_stolen {
+            let r = c
+                .recv_timeout(Duration::from_secs(30))
+                .expect("stolen work must complete after re-submission");
+            assert!(got.insert(r.id), "duplicate response {}", r.id);
+        }
+        assert_eq!(got.len(), n as usize, "every request exactly once");
+        let rest = c.shutdown();
+        assert!(rest.is_empty());
     }
 
     #[test]

@@ -48,10 +48,11 @@ fn print_help() {
          USAGE: xgr <serve|replay|simulate|info> [flags]\n\n\
          serve    --artifacts DIR --model NAME --addr HOST:PORT [--engine xgr|vllm|xllm]\n\
          \u{20}        [--session-cache] [--replicas N] [--pool-bytes B] [--prefix-ttl-us T]\n\
+         \u{20}        [--steal-threshold N] [--steal-max-batches N]\n\
          replay   --requests N --rps R [--dataset amazon|jd] [--engine xgr|vllm|xllm]\n\
          \u{20}        [--artifacts DIR | --mock] [--streams N] [--seed S]\n\
          \u{20}        [--revisit P] [--session-cache] [--replicas N] [--pool-bytes B]\n\
-         \u{20}        [--prefix-ttl-us T]\n\
+         \u{20}        [--prefix-ttl-us T] [--steal-threshold N] [--steal-max-batches N]\n\
          simulate --model SPEC --hw ascend|h800 --engine xgr,vllm,xllm,tree\n\
          \u{20}        --rps LIST [--bw N] [--requests N] [--dataset amazon|jd]\n\
          \u{20}        [--revisit P] [--session-cache]\n\
@@ -118,6 +119,8 @@ fn cmd_serve(args: &Args) -> i32 {
     // xGR-only: the baselines' real systems have no prefix reuse
     serving.session_cache = args.flag("session-cache") && engine == "xgr";
     serving.cluster_replicas = args.usize_or("replicas", 1);
+    serving.steal_threshold = args.usize_or("steal-threshold", 0);
+    serving.steal_max_batches = args.usize_or("steal-max-batches", 4);
     if serving.session_cache {
         serving.pool_bytes = args.u64_or("pool-bytes", 0);
         serving.prefix_ttl_us = args.u64_or("prefix-ttl-us", 0);
@@ -199,6 +202,8 @@ fn cmd_replay(args: &Args) -> i32 {
     // xGR-only: the baselines' real systems have no prefix reuse
     serving.session_cache = args.flag("session-cache") && engine == "xgr";
     serving.cluster_replicas = args.usize_or("replicas", 1);
+    serving.steal_threshold = args.usize_or("steal-threshold", 0);
+    serving.steal_max_batches = args.usize_or("steal-max-batches", 4);
     if serving.session_cache {
         serving.pool_bytes = args.u64_or("pool-bytes", 0);
         serving.prefix_ttl_us = args.u64_or("prefix-ttl-us", 0);

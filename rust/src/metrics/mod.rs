@@ -41,6 +41,15 @@ pub struct Counters {
     /// users re-pinned to a surviving stream after their affine stream's
     /// worker died (dead-stream affinity repair)
     pub affinity_repairs: AtomicU64,
+    /// whole queued batches migrated off an overloaded replica by the
+    /// cross-replica steal loop (never in-flight work)
+    pub batch_steals: AtomicU64,
+    /// prompt tokens a stolen request will swap in from the shared pool
+    /// instead of re-prefilling on the thief (the pool-mediated handoff)
+    pub steal_tokens_saved: AtomicU64,
+    /// steal attempts that found nothing to migrate or could not place a
+    /// migrated request on the thief (handed back to the victim)
+    pub steal_aborts: AtomicU64,
     /// local session-cache misses recovered from the shared cross-replica
     /// prefix pool (each pays a pool swap-in)
     pub pool_hits: AtomicU64,

@@ -14,6 +14,12 @@ use std::time::Duration;
 /// Replay outcome.
 pub struct ReplayReport {
     pub latency: Histogram,
+    /// arrival → processing start (queue/batching wait) — stamped
+    /// separately from service so replay-pacing skew cannot conflate
+    /// the two components in the percentile report
+    pub queue_lat: Histogram,
+    /// processing start → completion (prefill + decode + selection)
+    pub service_lat: Histogram,
     pub completed: u64,
     pub rejected: u64,
     pub wall_s: f64,
@@ -38,6 +44,10 @@ pub struct ReplayReport {
     pub pool_misses: u64,
     pub pool_ttl_expirations: u64,
     pub pool_epoch_drops: u64,
+    /// cross-replica work stealing (zero with stealing disabled)
+    pub batch_steals: u64,
+    pub steal_tokens_saved: u64,
+    pub steal_aborts: u64,
     /// session hit rate per replica (one element for a single engine)
     pub per_replica_hit_rates: Vec<f64>,
 }
@@ -57,13 +67,16 @@ impl ReplayReport {
 
     pub fn summary(&self) -> String {
         let mut s = format!(
-            "completed={} rejected={} thru={:.1} rps mean={} p50={} p99={} valid={}/{}",
+            "completed={} rejected={} thru={:.1} rps mean={} p50={} p99={} \
+             queue_p99={} service_p99={} valid={}/{}",
             self.completed,
             self.rejected,
             self.throughput_rps(),
             fmt_ns(self.latency.mean() as u64),
             fmt_ns(self.latency.p50()),
             fmt_ns(self.latency.p99()),
+            fmt_ns(self.queue_lat.p99()),
+            fmt_ns(self.service_lat.p99()),
             self.valid_items,
             self.total_items,
         );
@@ -89,6 +102,12 @@ impl ReplayReport {
             s.push_str(&format!(
                 " pool_hits={} pool_ttl_expired={} pool_epoch_drops={}",
                 self.pool_hits, self.pool_ttl_expirations, self.pool_epoch_drops
+            ));
+        }
+        if self.batch_steals + self.steal_aborts > 0 {
+            s.push_str(&format!(
+                " batch_steals={} steal_tokens_saved={} steal_aborts={}",
+                self.batch_steals, self.steal_tokens_saved, self.steal_aborts
             ));
         }
         if self.per_replica_hit_rates.len() > 1 {
@@ -117,6 +136,9 @@ impl ReplayReport {
         self.pool_misses = st.pool_misses;
         self.pool_ttl_expirations = st.pool_ttl_expirations;
         self.pool_epoch_drops = st.pool_epoch_drops;
+        self.batch_steals = st.batch_steals;
+        self.steal_tokens_saved = st.steal_tokens_saved;
+        self.steal_aborts = st.steal_aborts;
         self.per_replica_hit_rates = st.per_replica_hit_rates.clone();
     }
 }
@@ -131,6 +153,8 @@ pub fn replay_trace<B: ServingBackend>(
 ) -> ReplayReport {
     let t_start = now_ns();
     let mut latency = Histogram::new();
+    let mut queue_lat = Histogram::new();
+    let mut service_lat = Histogram::new();
     let mut completed = 0u64;
     let mut rejected = 0u64;
     let mut valid_items = 0u64;
@@ -139,6 +163,8 @@ pub fn replay_trace<B: ServingBackend>(
 
     let drain = |coord: &B,
                      latency: &mut Histogram,
+                     queue_lat: &mut Histogram,
+                     service_lat: &mut Histogram,
                      completed: &mut u64,
                      valid: &mut u64,
                      total: &mut u64,
@@ -152,6 +178,8 @@ pub fn replay_trace<B: ServingBackend>(
             match r {
                 Some(resp) => {
                     latency.record(resp.latency_ns);
+                    queue_lat.record(resp.queue_ns);
+                    service_lat.record(resp.service_ns);
                     *completed += 1;
                     *valid += resp.valid_items as u64;
                     *total += resp.items.len() as u64;
@@ -172,7 +200,7 @@ pub fn replay_trace<B: ServingBackend>(
                 break;
             }
             // poll completions while pacing
-            drain(coord, &mut latency, &mut completed, &mut valid_items, &mut total_items, false);
+            drain(coord, &mut latency, &mut queue_lat, &mut service_lat, &mut completed, &mut valid_items, &mut total_items, false);
             let wait = (due - now).min(2_000_000);
             std::thread::sleep(Duration::from_nanos(wait));
         }
@@ -186,16 +214,18 @@ pub fn replay_trace<B: ServingBackend>(
             Ok(()) => submitted += 1,
             Err(_) => rejected += 1,
         }
-        drain(coord, &mut latency, &mut completed, &mut valid_items, &mut total_items, false);
+        drain(coord, &mut latency, &mut queue_lat, &mut service_lat, &mut completed, &mut valid_items, &mut total_items, false);
     }
     // wait for the tail
     while completed < submitted {
-        if !drain(coord, &mut latency, &mut completed, &mut valid_items, &mut total_items, true) {
+        if !drain(coord, &mut latency, &mut queue_lat, &mut service_lat, &mut completed, &mut valid_items, &mut total_items, true) {
             break; // timed out — report what we have
         }
     }
     let mut report = ReplayReport {
         latency,
+        queue_lat,
+        service_lat,
         completed,
         rejected,
         wall_s: (now_ns() - t_start) as f64 / 1e9,
@@ -215,6 +245,9 @@ pub fn replay_trace<B: ServingBackend>(
         pool_misses: 0,
         pool_ttl_expirations: 0,
         pool_epoch_drops: 0,
+        batch_steals: 0,
+        steal_tokens_saved: 0,
+        steal_aborts: 0,
         per_replica_hit_rates: Vec::new(),
     };
     report.apply_stats(&coord.backend_stats());
@@ -256,6 +289,12 @@ mod tests {
         assert_eq!(report.completed, 30);
         assert_eq!(report.rejected, 0);
         assert!(report.latency.p99() > 0);
+        // queue and service are stamped separately; service can never be
+        // zero for real work, and the summary surfaces both
+        assert!(report.service_lat.p99() > 0);
+        assert!(report.latency.p99() >= report.service_lat.p99());
+        assert!(report.summary().contains("queue_p99"));
+        assert!(report.summary().contains("service_p99"));
         assert_eq!(report.valid_items, report.total_items);
         assert_eq!(report.session_hits + report.session_misses, 0, "cache off");
         coord.shutdown();

@@ -52,6 +52,15 @@
 //! 4. **Expire** — entries older than `ServingConfig::prefix_ttl_us`
 //!    are reclaimed by a periodic sweep (surfaced as
 //!    `Counters::pool_ttl_expirations`); pinned entries are never swept.
+//! 5. **Migrate (work stealing)** — with `ServingConfig::steal_threshold
+//!    > 0` the cluster tier migrates whole *queued* batches off an
+//!    overloaded replica (see [`crate::cluster`]). The victim calls
+//!    [`PrefixPool::publish_for_migration`] for each migrated user: no
+//!    pin (the stolen request is in flight nowhere during the handoff),
+//!    no epoch movement (content is unchanged), just a TTL restamp so a
+//!    sweep between steal and thief-lookup cannot drop the handoff —
+//!    the thief's first lookup then lands as a pool swap-in instead of
+//!    a full prefill (`Counters::steal_tokens_saved`).
 //!
 //! Sizing guidance — `pool_bytes` vs. per-replica `session_dram_bytes`:
 //! the pool holds **one** copy per user for the whole fleet, so when

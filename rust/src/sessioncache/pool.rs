@@ -250,6 +250,9 @@ pub struct PoolStats {
     pub ttl_expirations: u64,
     /// divergent republishes that bumped an entry's epoch
     pub epoch_invalidations: u64,
+    /// migration handoffs (work stealing): pooled entries refreshed so a
+    /// thief replica's first lookup lands as a swap-in
+    pub migration_publishes: u64,
     /// publishes rejected for carrying a stale base epoch
     pub stale_publishes: u64,
     /// entries dropped by byte-budget pressure (TierManager clock)
@@ -439,6 +442,55 @@ impl PrefixPool {
         let data = stored.encode();
         g.slots.insert(user, Slot { data, entry: stored, epoch, expires_us });
         Publish::Stored(epoch)
+    }
+
+    /// Migration handoff (work stealing): a victim replica is giving a
+    /// queued request away, and the thief's first lookup must find the
+    /// user's prefix here. The entry content was already fed by the
+    /// victim's serve-time publishes, so this only **refreshes** the
+    /// pooled entry's TTL stamp (a sweep between steal and thief-lookup
+    /// must not drop the handoff) and reports how many leading tokens
+    /// of the migrating prompt the pooled entry covers — the prefill the
+    /// thief will skip (`steal_tokens_saved`). No pin is taken (the
+    /// stolen request is in flight nowhere during the handoff) and the
+    /// epoch is untouched (content does not change, so other replicas'
+    /// copies stay valid). Returns 0 when the pool holds nothing
+    /// usable — the steal still happens, it just pays a full prefill.
+    pub fn publish_for_migration(
+        &self,
+        user: u64,
+        tokens: &[u32],
+        prompt_len: usize,
+        now_us: u64,
+    ) -> usize {
+        let mut g = self.inner.lock().unwrap();
+        let ttl = self.cfg.prefix_ttl_us;
+        let covered = {
+            let Some(slot) = g.slots.get_mut(&user) else { return 0 };
+            if now_us >= slot.expires_us {
+                return 0; // already stale: freshness beats the handoff
+            }
+            let covered = slot
+                .entry
+                .match_len(tokens, prompt_len)
+                .min(prompt_len.saturating_sub(1));
+            if covered == 0 {
+                return 0; // divergent prompt: nothing reusable to hand off
+            }
+            slot.entry.stamp_us = now_us;
+            slot.expires_us = if ttl == 0 {
+                u64::MAX
+            } else {
+                now_us.saturating_add(ttl)
+            };
+            // keep the wire image authoritative (cross-process transports
+            // ship `data`, and the round-trip property tests decode it)
+            slot.data = slot.entry.encode();
+            covered
+        };
+        g.tiers.touch(user);
+        g.stats.migration_publishes += 1;
+        covered
     }
 
     /// Drop every expired, unpinned entry; returns how many were
@@ -684,6 +736,40 @@ mod tests {
         assert!(pool.lookup(5, 300).is_none(), "expired entry misses");
         assert!(pool.stats().ttl_expirations >= 1);
         assert_eq!(pool.peek_match(5, &t, 3, 400), 0);
+    }
+
+    #[test]
+    fn migration_handoff_refreshes_ttl_and_reports_coverage() {
+        let pool =
+            PrefixPool::new(PoolConfig { pool_bytes: 1 << 20, prefix_ttl_us: 100 });
+        let mut rng = Pcg::new(8);
+        let base = toks(&mut rng, 24);
+        pool.publish(&entry(7, &base, 0), 0, 0);
+        // the stolen request extends the served history
+        let mut stolen = base.clone();
+        stolen.extend_from_slice(&[9, 9, 9]);
+        let covered = pool.publish_for_migration(7, &stolen, stolen.len(), 60);
+        assert_eq!(covered, 24, "handoff covers the whole pooled span");
+        // the refresh moved the expiry: the thief's lookup at t=150
+        // (past the ORIGINAL expiry of 100) still hits
+        let got = pool.lookup(7, 150).expect("refreshed entry must survive");
+        assert_eq!(got.match_len(&stolen, stolen.len()), 24);
+        assert_eq!(got.epoch, 0, "a handoff never moves the epoch");
+        assert!(pool.stats().migration_publishes >= 1);
+        // unknown user / divergent prompt: nothing usable, no refresh
+        assert_eq!(pool.publish_for_migration(99, &stolen, stolen.len(), 150), 0);
+        let diverged: Vec<u32> = (500..520).collect();
+        assert_eq!(pool.publish_for_migration(7, &diverged, 20, 155), 0);
+        // full-prompt coverage clamps to len-1 (the thief still prefills
+        // the final token for the prompt logits); refresh → expires 258
+        let covered = pool.publish_for_migration(7, &base, base.len(), 158);
+        assert_eq!(covered, 23);
+        // past the refreshed expiry the entry reads as no handoff
+        assert_eq!(
+            pool.publish_for_migration(7, &stolen, stolen.len(), 10_000),
+            0,
+            "an expired entry must not be handed off (freshness wins)"
+        );
     }
 
     #[test]

@@ -45,6 +45,13 @@
 //!   of a full-prefill miss, and TTL expiry runs on simulated time.
 //!   The KV manager stays fleet-global (an aggregate accounting view);
 //!   budgets and weights scale by R.
+//! * `steal_threshold` (with the cluster + affinity model) — work
+//!   stealing on simulated time: an idle stream may take a stray whose
+//!   home *replica's* backlog leads its own by the threshold, without
+//!   waiting out the spill stall budget. The stolen user is re-homed to
+//!   the serving stream (the router `note_placed` analogue) and the
+//!   tokens their lookup reuses count as `steal_tokens_saved` — so
+//!   fig19's steal frontier can sweep the threshold at cluster RPS.
 
 use super::calibrate::HostCosts;
 use super::kernels::{
@@ -162,6 +169,14 @@ pub struct DesResult {
     /// requests dispatched off their affine stream by the spill policy
     /// (zero when affinity routing is off or spilling is disabled)
     pub affinity_spills: u64,
+    /// requests migrated across replicas by work stealing (the DES
+    /// models the steal at request granularity; zero when
+    /// `steal_threshold == 0` or a single replica). A stolen user is
+    /// re-homed to the thief, mirroring the router's `note_placed`.
+    pub batch_steals: u64,
+    /// prompt tokens stolen requests reused (pool swap-in or adopted
+    /// copy) instead of re-prefilling on the thief
+    pub steal_tokens_saved: u64,
     /// users re-pinned after a stream death (always zero in the DES —
     /// streams do not die here; surfaced so reports share one schema
     /// with the real-mode counters)
@@ -386,6 +401,13 @@ pub fn simulate(trace: &Trace, cfg: &DesConfig) -> DesResult {
     // legacy routing-independent behavior.
     let affinity_on = cache_on && cfg.serving.session_affinity && num_streams > 1;
     let spill_on = affinity_on && cfg.serving.affinity_spill_depth > 0;
+    // cross-replica work stealing: an idle stream may take a stray whose
+    // home REPLICA is backed up past the threshold, regardless of the
+    // spill stall budget (the real steal loop runs on queue telemetry,
+    // not per-batch stall timers)
+    let steal_on =
+        affinity_on && cfg.serving.steal_threshold > 0 && replicas > 1;
+    let steal_thresh = cfg.serving.steal_threshold;
     // the scheduler's depth knob counts queued *batches*; the DES queue
     // holds requests, so one queue slot ≈ one max-size batch
     let spill_depth_reqs = cfg
@@ -434,6 +456,8 @@ pub fn simulate(trace: &Trace, cfg: &DesConfig) -> DesResult {
     let mut user_stream: HashMap<u64, usize> = HashMap::new();
     let mut rr_user = 0usize;
     let mut affinity_spills = 0u64;
+    let mut batch_steals = 0u64;
+    let mut steal_tokens_saved = 0u64;
     let mut events: BinaryHeap<Reverse<Ev>> = BinaryHeap::new();
     for (i, r) in trace.requests.iter().enumerate() {
         events.push(Reverse(Ev {
@@ -507,22 +531,36 @@ pub fn simulate(trace: &Trace, cfg: &DesConfig) -> DesResult {
                     for &ri in queue.iter() {
                         backlog[user_stream[&trace.requests[ri].user_id]] += 1;
                     }
+                    // per-replica backlogs (the steal-policy telemetry)
+                    let mut rep_backlog = vec![0usize; replicas];
+                    for (s, &b) in backlog.iter().enumerate() {
+                        rep_backlog[s / streams_per_replica] += b;
+                    }
                     for &si in &order {
+                        let si_rep = si / streams_per_replica;
                         // select this stream's affine requests — plus
                         // spill-eligible strays whose home stream is
-                        // backed up past the depth AND stall budgets —
+                        // backed up past the depth AND stall budgets, and
+                        // steal-eligible strays whose home REPLICA leads
+                        // this one's backlog by the steal threshold —
                         // oldest first, within the batch budgets
                         let mut sel_pos: Vec<usize> = Vec::new();
+                        // parallel flag: admitted by the steal clause only
+                        let mut sel_steal: Vec<bool> = Vec::new();
                         let mut tokens = 0usize;
                         for (pos, &ri) in queue.iter().enumerate() {
                             let r = &trace.requests[ri];
                             let home = user_stream[&r.user_id];
-                            let eligible = home == si
-                                || (spill_on
-                                    && backlog[home] >= spill_depth_reqs
-                                    && $now - r.arrival_ns as f64 / 1e9
-                                        >= stall_s);
-                            if !eligible {
+                            let spill_ok = spill_on
+                                && backlog[home] >= spill_depth_reqs
+                                && $now - r.arrival_ns as f64 / 1e9
+                                    >= stall_s;
+                            let steal_ok = steal_on
+                                && home / streams_per_replica != si_rep
+                                && rep_backlog[home / streams_per_replica]
+                                    >= rep_backlog[si_rep]
+                                        .saturating_add(steal_thresh);
+                            if home != si && !spill_ok && !steal_ok {
                                 continue;
                             }
                             let l = r.prompt_len.max(1);
@@ -533,6 +571,7 @@ pub fn simulate(trace: &Trace, cfg: &DesConfig) -> DesResult {
                             }
                             tokens += l;
                             sel_pos.push(pos);
+                            sel_steal.push(home != si && !spill_ok && steal_ok);
                         }
                         if sel_pos.is_empty() {
                             continue;
@@ -567,6 +606,7 @@ pub fn simulate(trace: &Trace, cfg: &DesConfig) -> DesResult {
                             continue;
                         }
                         sel_pos.truncate(fit);
+                        sel_steal.truncate(fit);
                         let req_idx: Vec<usize> =
                             sel_pos.iter().map(|&p| queue[p]).collect();
                         for &p in sel_pos.iter().rev() {
@@ -590,13 +630,21 @@ pub fn simulate(trace: &Trace, cfg: &DesConfig) -> DesResult {
                         // home cache; spilled strays consult the serving
                         // stream's cache and pay the (likely) miss — which
                         // the shared pool, when configured, downgrades to
-                        // a pool swap-in instead of a full prefill
-                        affinity_spills += req_idx
-                            .iter()
-                            .filter(|&&ri| {
-                                user_stream[&trace.requests[ri].user_id] != si
-                            })
-                            .count() as u64;
+                        // a pool swap-in instead of a full prefill. Stolen
+                        // strays are additionally RE-HOMED to the serving
+                        // stream (the router's note_placed analogue) and
+                        // their reused tokens count as steal savings.
+                        for (j, &ri) in req_idx.iter().enumerate() {
+                            let u = trace.requests[ri].user_id;
+                            if user_stream[&u] != si {
+                                if sel_steal[j] {
+                                    batch_steals += 1;
+                                    user_stream.insert(u, si);
+                                } else {
+                                    affinity_spills += 1;
+                                }
+                            }
+                        }
                         let now_us = ($now * 1e6) as u64;
                         let mut swap_in_bytes = 0u64;
                         let prefill_lens: Vec<usize> = {
@@ -604,7 +652,8 @@ pub fn simulate(trace: &Trace, cfg: &DesConfig) -> DesResult {
                             req_idx
                                 .iter()
                                 .zip(&lens)
-                                .map(|(&ri, &l)| {
+                                .enumerate()
+                                .map(|(j, (&ri, &l))| {
                                     let r = &trace.requests[ri];
                                     let look = sc.lookup_at(
                                         r.user_id,
@@ -613,6 +662,10 @@ pub fn simulate(trace: &Trace, cfg: &DesConfig) -> DesResult {
                                         now_us,
                                     );
                                     swap_in_bytes += look.swap_in_bytes;
+                                    if sel_steal[j] {
+                                        steal_tokens_saved +=
+                                            look.hit_tokens.min(l - 1) as u64;
+                                    }
                                     l - look.hit_tokens.min(l - 1)
                                 })
                                 .collect()
@@ -968,6 +1021,8 @@ pub fn simulate(trace: &Trace, cfg: &DesConfig) -> DesResult {
         session_peak_hbm_bytes: session_hbm_peak,
         session_peak_dram_bytes: session_dram_peak,
         affinity_spills,
+        batch_steals,
+        steal_tokens_saved,
         affinity_repairs: 0,
         pool_hits: session.iter().map(|s| s.stats.pool_hits).sum(),
         pool_misses: session.iter().map(|s| s.stats.pool_misses).sum(),
@@ -1290,6 +1345,56 @@ mod tests {
         );
         assert_eq!(pooled.per_replica_hit_rates.len(), 4);
         assert!(pooled.pool_peak_bytes > 0);
+    }
+
+    fn steal_cfg(replicas: usize, threshold: usize) -> DesConfig {
+        let mut c = cluster_cfg(replicas, 512, 0);
+        c.serving.affinity_spill_depth = 0; // isolate stealing from spilling
+        c.serving.steal_threshold = threshold;
+        c
+    }
+
+    #[test]
+    fn work_stealing_relieves_skewed_replicas_without_losing_work() {
+        let t = zipf_trace(600, 2400.0);
+        let base = simulate(&t, &steal_cfg(4, 0));
+        let steal = simulate(&t, &steal_cfg(4, 1));
+        for (name, r) in [("base", &base), ("steal", &steal)] {
+            assert_eq!(r.completed, 600, "{name} must complete everything");
+            assert_eq!(r.rejected, 0, "{name} must reject nothing");
+        }
+        assert_eq!(base.batch_steals, 0, "threshold 0 disables stealing");
+        assert!(
+            steal.batch_steals > 0,
+            "skewed replicas must trigger migrations"
+        );
+        assert!(
+            steal.steal_tokens_saved > 0,
+            "the pool handoff must cover migrated prompts"
+        );
+        assert_eq!(
+            steal.affinity_spills, 0,
+            "spilling is disabled: only steals may move work"
+        );
+        // stealing adds dispatch options for idle streams; under skew it
+        // must relieve the tail, never worsen it
+        assert!(
+            steal.p99_ms() <= base.p99_ms() * 1.05,
+            "steal p99 {} vs base p99 {}",
+            steal.p99_ms(),
+            base.p99_ms()
+        );
+    }
+
+    #[test]
+    fn steal_model_is_deterministic() {
+        let t = zipf_trace(300, 1200.0);
+        let a = simulate(&t, &steal_cfg(4, 2));
+        let b = simulate(&t, &steal_cfg(4, 2));
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.latency.p99(), b.latency.p99());
+        assert_eq!(a.batch_steals, b.batch_steals);
+        assert_eq!(a.steal_tokens_saved, b.steal_tokens_saved);
     }
 
     #[test]

@@ -17,11 +17,20 @@ pub struct ClockMap<V> {
     cap: usize,
     map: HashMap<u64, (V, bool)>,
     clock: VecDeque<u64>,
+    /// stale clock slots created by `remove` (eviction sweeps also
+    /// reclaim them, but those only run at the cap — this counter
+    /// drives amortized compaction below it)
+    stale: usize,
 }
 
 impl<V> ClockMap<V> {
     pub fn new(cap: usize) -> Self {
-        ClockMap { cap: cap.max(1), map: HashMap::new(), clock: VecDeque::new() }
+        ClockMap {
+            cap: cap.max(1),
+            map: HashMap::new(),
+            clock: VecDeque::new(),
+            stale: 0,
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -81,6 +90,29 @@ impl<V> ClockMap<V> {
         self.clock.push_back(key);
     }
 
+    /// Remove `key`, returning its value. The key's clock slot becomes
+    /// stale (lazy invalidation, like evicted entries). Below the cap
+    /// the eviction sweep never runs, so remove/re-insert churn —
+    /// steady work-stealing migrations, say — would grow the deque
+    /// unboundedly; once stale slots outnumber live ones the clock is
+    /// compacted in place (O(len), amortized O(1) per remove), keeping
+    /// the first (oldest) slot per live key so sweep order is
+    /// preserved.
+    pub fn remove(&mut self, key: u64) -> Option<V> {
+        let v = self.map.remove(&key).map(|(v, _)| v);
+        if v.is_some() {
+            self.stale += 1;
+            if self.stale > self.clock.len() / 2 + 8 {
+                let map = &self.map;
+                let mut seen =
+                    std::collections::HashSet::with_capacity(map.len());
+                self.clock.retain(|k| map.contains_key(k) && seen.insert(*k));
+                self.stale = 0;
+            }
+        }
+        v
+    }
+
     /// Mutable iteration over the values (bulk rewrites, e.g. the
     /// scheduler's dead-stream re-pinning). Does not touch the
     /// referenced bits.
@@ -123,6 +155,47 @@ mod tests {
         m.insert(7, (2, 20));
         assert_eq!(m.len(), 1);
         assert_eq!(m.get(7), Some(&(2, 20)));
+    }
+
+    #[test]
+    fn remove_forgets_the_key_and_reinsert_works() {
+        let mut m: ClockMap<usize> = ClockMap::new(4);
+        m.insert(1, 10);
+        m.insert(2, 20);
+        assert_eq!(m.remove(1), Some(10));
+        assert_eq!(m.get(1), None);
+        assert_eq!(m.remove(1), None, "double remove is a no-op");
+        m.insert(1, 11);
+        assert_eq!(m.get(1), Some(&11));
+        // remove/re-insert churn never breaks the cap
+        for k in 0..100u64 {
+            m.remove(k % 8);
+            m.insert(k % 8, k as usize);
+            m.insert(1000 + k, 0);
+        }
+        assert!(m.len() <= 4);
+    }
+
+    #[test]
+    fn remove_churn_below_cap_does_not_grow_the_clock() {
+        // a big cap (eviction sweep never runs) with sustained
+        // remove/re-insert churn over a small key set: the compaction
+        // must bound the clock deque near the live-entry count
+        let mut m: ClockMap<usize> = ClockMap::new(1 << 20);
+        for round in 0..10_000u64 {
+            let k = round % 16;
+            m.remove(k);
+            m.insert(k, round as usize);
+        }
+        assert_eq!(m.len(), 16);
+        assert!(
+            m.clock.len() <= 64,
+            "stale slots must be compacted, clock holds {}",
+            m.clock.len()
+        );
+        for k in 0..16u64 {
+            assert!(m.get(k).is_some(), "live key {k} lost by compaction");
+        }
     }
 
     #[test]

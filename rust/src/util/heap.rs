@@ -58,10 +58,18 @@ impl<T: Copy> BoundedMinHeap<T> {
 
     /// Offer a candidate. Returns true if it was admitted.
     ///
-    /// While not full, every candidate is admitted. Once full, a candidate
-    /// must strictly beat the root; the root is replaced and sifted down.
+    /// While not full, every *finite*-scored candidate is admitted. Once
+    /// full, a candidate must strictly beat the root; the root is
+    /// replaced and sifted down. Non-finite scores (NaN, ±∞ — e.g. a
+    /// poisoned logit from the runtime) are rejected outright: admitting
+    /// a NaN while filling would corrupt the heap invariant (every NaN
+    /// comparison is false, so sift places it arbitrarily and
+    /// `peek_min` stops being the admission threshold).
     #[inline]
     pub fn offer(&mut self, score: f32, payload: T) -> bool {
+        if !score.is_finite() {
+            return false;
+        }
         if self.buf.len() < self.cap {
             self.buf.push(Entry { score, payload });
             self.sift_up(self.buf.len() - 1);
@@ -79,7 +87,10 @@ impl<T: Copy> BoundedMinHeap<T> {
     /// empty (but allocated).
     pub fn drain_sorted_desc(&mut self) -> Vec<Entry<T>> {
         let mut out = std::mem::take(&mut self.buf);
-        out.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+        // total_cmp: a total order even if a non-finite score ever got
+        // in through a future code path — a sort must never panic the
+        // serving thread
+        out.sort_by(|a, b| b.score.total_cmp(&a.score));
         self.buf = Vec::with_capacity(self.cap);
         out
     }
@@ -89,7 +100,7 @@ impl<T: Copy> BoundedMinHeap<T> {
     pub fn fill_sorted_desc(&mut self, dst: &mut Vec<Entry<T>>) {
         dst.clear();
         dst.extend_from_slice(&self.buf);
-        dst.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+        dst.sort_by(|a, b| b.score.total_cmp(&a.score));
         self.buf.clear();
     }
 
@@ -170,6 +181,27 @@ mod tests {
             want.truncate(cap);
             assert_eq!(got, want);
         }
+    }
+
+    #[test]
+    fn non_finite_scores_are_rejected() {
+        let mut h = BoundedMinHeap::new(3);
+        // while filling: NaN/±inf must not be admitted (a NaN in the
+        // buffer breaks the sift invariant and peek_min)
+        assert!(!h.offer(f32::NAN, 0));
+        assert!(!h.offer(f32::INFINITY, 1));
+        assert!(!h.offer(f32::NEG_INFINITY, 2));
+        assert!(h.is_empty());
+        for (i, s) in [2.0f32, 5.0, 1.0].iter().enumerate() {
+            assert!(h.offer(*s, 10 + i));
+        }
+        // once full, same rejection; finite admissions keep working
+        assert!(!h.offer(f32::NAN, 99));
+        assert_eq!(h.peek_min(), Some(1.0));
+        assert!(h.offer(3.0, 20));
+        let scores: Vec<f32> =
+            h.drain_sorted_desc().iter().map(|e| e.score).collect();
+        assert_eq!(scores, vec![5.0, 3.0, 2.0]);
     }
 
     #[test]

@@ -120,6 +120,32 @@ impl<T> Channel<T> {
         v
     }
 
+    /// Pop up to `n` items from the **back** of the queue — the most
+    /// recently queued, i.e. the items furthest from being started by a
+    /// consumer (consumers pop the front, so anything still in the
+    /// buffer is provably unstarted). Returns them in their original
+    /// queue order. Never blocks; empty when the queue is empty. This
+    /// is the work-stealing primitive: a thief detaches tail batches
+    /// while the owner keeps consuming the head.
+    pub fn drain_tail(&self, n: usize) -> Vec<T> {
+        let mut st = self.inner.q.lock().unwrap();
+        let take = n.min(st.buf.len());
+        let at = st.buf.len() - take;
+        let out: Vec<T> = Vec::from(st.buf.split_off(at));
+        if !out.is_empty() {
+            self.inner.not_full.notify_all();
+        }
+        out
+    }
+
+    /// Sum `f` over the currently queued items, under the lock. O(len) —
+    /// intended for telemetry over small bounded queues (e.g. counting
+    /// the requests inside queued batches), not hot paths.
+    pub fn fold_queued<F: Fn(&T) -> u64>(&self, f: F) -> u64 {
+        let st = self.inner.q.lock().unwrap();
+        st.buf.iter().map(f).sum()
+    }
+
     /// Drain everything currently queued without blocking.
     pub fn drain(&self) -> Vec<T> {
         let mut st = self.inner.q.lock().unwrap();
@@ -235,6 +261,58 @@ mod tests {
             c.join().unwrap();
         }
         assert_eq!(got.load(Ordering::SeqCst), total);
+    }
+
+    #[test]
+    fn drain_tail_takes_the_newest_items_in_order() {
+        let ch = Channel::bounded(8);
+        for i in 0..5 {
+            ch.send(i).unwrap();
+        }
+        assert_eq!(ch.drain_tail(2), vec![3, 4]);
+        assert_eq!(ch.recv(), Some(0), "head untouched");
+        assert_eq!(ch.drain_tail(10), vec![1, 2], "clamped to what is queued");
+        assert!(ch.drain_tail(3).is_empty());
+    }
+
+    #[test]
+    fn drain_tail_and_recv_partition_items_exactly_once() {
+        // a consumer pops the front while a stealer drains the tail:
+        // every item must land on exactly one side (the steal loop's
+        // no-loss / no-duplication contract)
+        let ch: Channel<usize> = Channel::bounded(1024);
+        let consumed = Arc::new(std::sync::Mutex::new(Vec::new()));
+        let consumer = {
+            let ch = ch.clone();
+            let consumed = consumed.clone();
+            std::thread::spawn(move || {
+                while let Some(v) = ch.recv() {
+                    consumed.lock().unwrap().push(v);
+                }
+            })
+        };
+        let stealer = {
+            let ch = ch.clone();
+            std::thread::spawn(move || {
+                let mut stolen = Vec::new();
+                for _ in 0..200 {
+                    stolen.extend(ch.drain_tail(3));
+                    std::thread::yield_now();
+                }
+                stolen
+            })
+        };
+        for i in 0..1000usize {
+            ch.send(i).unwrap();
+        }
+        ch.close();
+        let stolen = stealer.join().unwrap();
+        consumer.join().unwrap();
+        let mut all: Vec<usize> = consumed.lock().unwrap().clone();
+        all.extend_from_slice(&stolen);
+        all.sort_unstable();
+        let want: Vec<usize> = (0..1000).collect();
+        assert_eq!(all, want, "lost or duplicated items");
     }
 
     #[test]

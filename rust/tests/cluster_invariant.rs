@@ -7,8 +7,15 @@
 //! recover their prefixes elsewhere) and nonzero TTL expirations under a
 //! short `prefix_ttl_us`.
 //!
-//! The replica count honors `XGR_CLUSTER_REPLICAS` (CI runs the suite
-//! with it set >1 so multi-replica paths stay green).
+//! The invariant is then re-proven with **work stealing forced on**
+//! (tiny `steal_threshold`): cross-replica batch migration must change
+//! scheduling only, never results — and the steal machinery must
+//! actually fire (`batch_steals > 0`) with the pool handoff covering
+//! the migrated prompts (`steal_tokens_saved > 0`).
+//!
+//! The replica count honors `XGR_CLUSTER_REPLICAS` and the steal knob
+//! honors `XGR_STEAL_THRESHOLD` (CI runs the suite with both set so the
+//! multi-replica and steal paths stay green).
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -72,7 +79,16 @@ impl ModelExecutor for SlowExecutor {
     }
 }
 
-fn serving(replicas: usize) -> ServingConfig {
+/// Steal threshold forced by CI (0 = stealing off unless a test forces
+/// it on itself).
+fn env_steal_threshold() -> usize {
+    std::env::var("XGR_STEAL_THRESHOLD")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0)
+}
+
+fn serving(replicas: usize, steal_threshold: usize) -> ServingConfig {
     let mut s = ServingConfig::default();
     s.num_streams = 2;
     s.batch_wait_us = 200;
@@ -83,6 +99,8 @@ fn serving(replicas: usize) -> ServingConfig {
     s.cluster_replicas = replicas;
     s.pool_bytes = 32 << 20;
     s.prefix_ttl_us = TTL_US;
+    s.steal_threshold = steal_threshold;
+    s.steal_max_batches = 2;
     s
 }
 
@@ -116,7 +134,7 @@ struct RunOutcome {
     stats: xgr::coordinator::BackendStats,
 }
 
-fn run_cluster(replicas: usize, kill_mid: bool) -> RunOutcome {
+fn run_cluster(replicas: usize, kill_mid: bool, steal_threshold: usize) -> RunOutcome {
     let spec = spec();
     let catalog = Catalog::generate(64, 600, 5);
     let trie = Arc::new(ItemTrie::build(&catalog));
@@ -130,7 +148,7 @@ fn run_cluster(replicas: usize, kill_mid: bool) -> RunOutcome {
         })
     };
     let cluster = ClusterCoordinator::start(
-        &serving(replicas),
+        &serving(replicas, steal_threshold),
         EngineConfig::default(),
         trie,
         factory,
@@ -200,8 +218,8 @@ fn rerouting_never_changes_recommendations() {
         .unwrap_or(4)
         .clamp(2, 8);
 
-    let single = run_cluster(1, false);
-    let multi = run_cluster(replicas, true);
+    let single = run_cluster(1, false, 0);
+    let multi = run_cluster(replicas, true, env_steal_threshold());
 
     // ---- result invariance: byte-identical recommendations per id ----
     assert_eq!(single.items.len(), multi.items.len());
@@ -233,6 +251,135 @@ fn rerouting_never_changes_recommendations() {
     );
     // the single-replica run shares the same code path end to end
     assert!(single.stats.session_hits > 0);
+
+    // ---- same invariant with work stealing forced on ----
+    // The hot-user burst piles queued batches onto one replica; with a
+    // 1-request imbalance threshold the steal loop must migrate some of
+    // them — changing WHERE they run, never WHAT they return — and the
+    // pool handoff must cover the migrated prompts.
+    let stolen = run_cluster(replicas, true, env_steal_threshold().max(1));
+    assert_eq!(single.items.len(), stolen.items.len());
+    for (id, items) in &single.items {
+        assert_eq!(
+            stolen.items.get(id),
+            Some(items),
+            "request {id}: stealing changed the recommendations"
+        );
+    }
+    assert!(
+        stolen.stats.batch_steals > 0,
+        "the burst must trigger cross-replica steals: {:?}",
+        stolen.stats
+    );
+    assert!(
+        stolen.stats.steal_tokens_saved > 0,
+        "the pool handoff must cover migrated prompts: {:?}",
+        stolen.stats
+    );
+}
+
+/// Property: `drain_tail` never detaches in-flight work and always
+/// leaves the affinity map consistent. Randomized over request counts,
+/// user sets and steal patterns: (a) the detached requests plus the
+/// received responses partition the submitted set exactly — a stolen
+/// in-flight batch would surface as a duplicate response, a lost batch
+/// as a gap; (b) after re-submission (the thief role) every user's
+/// revisit still completes and hits the cache, i.e. the repaired map
+/// routes correctly.
+#[test]
+fn drain_tail_property_exactly_once_and_consistent_map() {
+    use xgr::coordinator::Coordinator;
+    use xgr::util::rng::Pcg;
+
+    for seed in [3u64, 17, 40] {
+        let mut rng = Pcg::new(seed);
+        let spec = spec();
+        let catalog = Catalog::generate(64, 600, 5);
+        let trie = Arc::new(ItemTrie::build(&catalog));
+        let factory: ExecutorFactory = {
+            let spec = spec.clone();
+            Arc::new(move || {
+                Ok(Box::new(SlowExecutor {
+                    inner: MockExecutor::new(spec.clone()),
+                    delay: Duration::from_millis(2),
+                }) as _)
+            })
+        };
+        let mut s = ServingConfig::default();
+        s.num_streams = 2;
+        s.batch_wait_us = 200;
+        s.max_batch_requests = 1;
+        s.session_cache = true;
+        s.affinity_spill_depth = 0; // absolute affinity: deep backlogs
+        let coord = Coordinator::start(
+            &s,
+            EngineConfig::default(),
+            trie,
+            factory,
+        )
+        .unwrap();
+        let n = 20 + rng.below(20);
+        let users = 2 + rng.below(4);
+        for i in 0..n {
+            coord
+                .submit_blocking(RecRequest {
+                    id: i,
+                    tokens: vec![1, 2, (i % 60) as u32],
+                    arrival_ns: now_ns(),
+                    user_id: i % users,
+                })
+                .unwrap();
+        }
+        let mut stolen: Vec<RecRequest> = Vec::new();
+        let rounds = 1 + rng.below(6);
+        for _ in 0..rounds {
+            for b in coord.drain_tail(1 + rng.below(3) as usize) {
+                stolen.extend(b.requests);
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let mut got = std::collections::HashSet::new();
+        for _ in 0..(n as usize - stolen.len()) {
+            let r = coord
+                .recv_timeout(Duration::from_secs(30))
+                .expect("non-stolen work completes");
+            assert!(got.insert(r.id), "seed {seed}: duplicate {}", r.id);
+        }
+        assert!(
+            coord.recv_timeout(Duration::from_millis(200)).is_none(),
+            "seed {seed}: a detached batch was also served in-flight"
+        );
+        let n_stolen = stolen.len();
+        for r in stolen {
+            coord.submit_blocking(r).unwrap();
+        }
+        // map-consistency probe: one revisit per user rides along
+        for u in 0..users {
+            coord
+                .submit_blocking(RecRequest {
+                    id: 10_000 + u,
+                    tokens: vec![1, 2, (u % 60) as u32, 7],
+                    arrival_ns: now_ns(),
+                    user_id: u,
+                })
+                .unwrap();
+        }
+        for _ in 0..(n_stolen + users as usize) {
+            let r = coord
+                .recv_timeout(Duration::from_secs(30))
+                .expect("re-submitted + revisit work completes");
+            assert!(got.insert(r.id), "seed {seed}: duplicate {}", r.id);
+        }
+        assert_eq!(got.len(), n as usize + users as usize, "seed {seed}");
+        let counters = coord.counters.clone();
+        let rest = coord.shutdown();
+        assert!(rest.is_empty(), "seed {seed}");
+        // the healed map still routes revisits onto warm caches
+        assert!(
+            xgr::metrics::Counters::get(&counters.session_hits) > 0,
+            "seed {seed}: revisits must still hit after repair"
+        );
+    }
 }
 
 #[test]
@@ -245,7 +392,7 @@ fn submit_fails_only_when_every_replica_is_dead() {
         Arc::new(move || Ok(Box::new(MockExecutor::new(spec.clone())) as _))
     };
     let cluster = ClusterCoordinator::start(
-        &serving(2),
+        &serving(2, env_steal_threshold()),
         EngineConfig::default(),
         trie,
         factory,
