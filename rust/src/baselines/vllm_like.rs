@@ -22,6 +22,7 @@ pub fn vllm_like_engine_config() -> EngineConfig {
         bos_token: 0,
         session_cache: None, // no cross-request prefix reuse
         session_pool: None,
+        overlap_lane: false, // vLLM-like: host masks inline, no lane
     }
 }
 

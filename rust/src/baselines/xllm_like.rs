@@ -15,6 +15,7 @@ pub fn xllm_like_engine_config() -> EngineConfig {
         bos_token: 0,
         session_cache: None, // no cross-request prefix reuse
         session_pool: None,
+        overlap_lane: false, // xLLM-like has no mask/forward overlap
     }
 }
 

@@ -89,6 +89,21 @@ pub struct ServingConfig {
     /// max whole batches migrated per steal operation (always >= 1; only
     /// consulted when `steal_threshold > 0`)
     pub steal_max_batches: usize,
+    /// staged batch engine: prompt tokens streamed per iteration-level
+    /// stage tick (chunked prefill interleaved with every in-flight
+    /// request's decode steps, so one long prompt cannot head-of-line-
+    /// block a batch). 0 = sequential request-at-a-time execution (the
+    /// ablation baseline). Results are byte-identical either way.
+    pub prefill_chunk_tokens: usize,
+    /// batcher admission backpressure: max queued prompt tokens per
+    /// batcher before new requests are shed (counted in
+    /// `batch_rejects`). 0 = unlimited (the legacy unbounded inbox).
+    /// Must be 0 or >= `max_batch_tokens` so a full batch can always
+    /// form. Shedding is LOAD SHEDDING: the request was accepted at
+    /// submit but produces no response, so clients of a capped
+    /// deployment must run response timeouts (the replay driver
+    /// reconciles against `batch_rejects` automatically).
+    pub batch_inbox_tokens: usize,
     pub features: Features,
 }
 
@@ -114,6 +129,8 @@ impl Default for ServingConfig {
             prefix_ttl_us: 0,
             steal_threshold: 0,
             steal_max_batches: 4,
+            prefill_chunk_tokens: 0,
+            batch_inbox_tokens: 0,
             features: Features::all_on(),
         }
     }
@@ -146,6 +163,8 @@ impl ServingConfig {
                 "prefix_ttl_us" => c.prefix_ttl_us = v.as_f64().ok_or_else(|| anyhow!("prefix_ttl_us"))? as u64,
                 "steal_threshold" => c.steal_threshold = v.as_usize().ok_or_else(|| anyhow!("steal_threshold"))?,
                 "steal_max_batches" => c.steal_max_batches = v.as_usize().ok_or_else(|| anyhow!("steal_max_batches"))?,
+                "prefill_chunk_tokens" => c.prefill_chunk_tokens = v.as_usize().ok_or_else(|| anyhow!("prefill_chunk_tokens"))?,
+                "batch_inbox_tokens" => c.batch_inbox_tokens = v.as_usize().ok_or_else(|| anyhow!("batch_inbox_tokens"))?,
                 "valid_filter" => c.features.valid_filter = v.as_bool().ok_or_else(|| anyhow!("valid_filter"))?,
                 "graph_dispatch" => c.features.graph_dispatch = v.as_bool().ok_or_else(|| anyhow!("graph_dispatch"))?,
                 "multi_stream" => c.features.multi_stream = v.as_bool().ok_or_else(|| anyhow!("multi_stream"))?,
@@ -193,6 +212,18 @@ impl ServingConfig {
         }
         if self.steal_max_batches == 0 || self.steal_max_batches > 64 {
             return Err(anyhow!("steal_max_batches must be in 1..=64"));
+        }
+        if self.prefill_chunk_tokens > 1 << 20 {
+            return Err(anyhow!("prefill_chunk_tokens must be <= 2^20"));
+        }
+        if self.batch_inbox_tokens > 0
+            && self.batch_inbox_tokens < self.max_batch_tokens
+        {
+            return Err(anyhow!(
+                "batch_inbox_tokens must be 0 (unlimited) or >= max_batch_tokens \
+                 ({}) so a full batch can always form",
+                self.max_batch_tokens
+            ));
         }
         Ok(())
     }
@@ -363,6 +394,36 @@ mod tests {
         let d = ServingConfig::default();
         assert_eq!(d.steal_threshold, 0);
         d.validate().unwrap();
+    }
+
+    #[test]
+    fn staged_knobs_parse_and_validate() {
+        let j = Json::parse(
+            r#"{"prefill_chunk_tokens": 128, "batch_inbox_tokens": 32768}"#,
+        )
+        .unwrap();
+        let c = ServingConfig::from_json(&j).unwrap();
+        assert_eq!(c.prefill_chunk_tokens, 128);
+        assert_eq!(c.batch_inbox_tokens, 32768);
+        // 0 = sequential / unlimited are the defaults and always valid
+        let d = ServingConfig::default();
+        assert_eq!(d.prefill_chunk_tokens, 0);
+        assert_eq!(d.batch_inbox_tokens, 0);
+        d.validate().unwrap();
+        // absurd chunk sizes fail loudly
+        let j = Json::parse(r#"{"prefill_chunk_tokens": 2097152}"#).unwrap();
+        assert!(ServingConfig::from_json(&j).is_err());
+        // an inbox cap below one batch budget would starve batch forming
+        let j = Json::parse(
+            r#"{"max_batch_tokens": 1000, "batch_inbox_tokens": 999}"#,
+        )
+        .unwrap();
+        assert!(ServingConfig::from_json(&j).is_err());
+        let j = Json::parse(
+            r#"{"max_batch_tokens": 1000, "batch_inbox_tokens": 1000}"#,
+        )
+        .unwrap();
+        assert!(ServingConfig::from_json(&j).is_ok());
     }
 
     #[test]

@@ -2,7 +2,9 @@
 //! bounded by *token capacity* (request sizes vary over two orders of
 //! magnitude, so counting requests is meaningless) and dispatch
 //! immediately once the oldest request's waiting delay reaches the SLO
-//! quota.
+//! quota. Admission is bounded too: an optional queued-token cap
+//! ([`Batcher::with_inbox_cap`]) sheds at [`Batcher::push`] instead of
+//! letting a burst grow the backlog — and its memory — without limit.
 
 use super::RecRequest;
 use std::collections::VecDeque;
@@ -19,6 +21,9 @@ pub struct Batcher {
     max_tokens: usize,
     max_requests: usize,
     wait_quota_ns: u64,
+    /// queued-token backpressure cap (0 = unlimited, the legacy
+    /// unbounded inbox)
+    inbox_token_cap: usize,
     queue: VecDeque<RecRequest>,
     queued_tokens: usize,
 }
@@ -29,12 +34,38 @@ impl Batcher {
             max_tokens,
             max_requests,
             wait_quota_ns,
+            inbox_token_cap: 0,
             queue: VecDeque::new(),
             queued_tokens: 0,
         }
     }
 
-    pub fn push(&mut self, r: RecRequest) {
+    /// Bound the queued-token backlog: `push` rejects once admitting a
+    /// request would exceed `cap` tokens (0 = unlimited). A single
+    /// oversized request is still admitted into an empty queue so it can
+    /// ship alone — the cap bounds backlog growth, never liveness.
+    pub fn with_inbox_cap(mut self, cap: usize) -> Self {
+        self.inbox_token_cap = cap;
+        self
+    }
+
+    /// Admit a request, or hand it back when the queued-token cap is hit
+    /// (the caller sheds it and counts `batch_rejects`).
+    pub fn push(&mut self, r: RecRequest) -> Result<(), RecRequest> {
+        if self.inbox_token_cap > 0
+            && !self.queue.is_empty()
+            && self.queued_tokens + r.tokens.len() > self.inbox_token_cap
+        {
+            return Err(r);
+        }
+        self.requeue(r);
+        Ok(())
+    }
+
+    /// Unconditional admission — for re-ingestion paths (dead-stream
+    /// repair, steal hand-backs) where shedding would lose a request the
+    /// system already accepted.
+    pub fn requeue(&mut self, r: RecRequest) {
         self.queued_tokens += r.tokens.len();
         self.queue.push_back(r);
     }
@@ -120,7 +151,7 @@ mod tests {
     fn batches_respect_token_budget() {
         let mut b = Batcher::new(100, 10, 1_000_000);
         for i in 0..5 {
-            b.push(req(i, 30, 0));
+            b.push(req(i, 30, 0)).unwrap();
         }
         let batch = b.take_batch().unwrap();
         assert_eq!(batch.requests.len(), 3); // 30+30+30 ≤ 100, +30 > 100
@@ -132,7 +163,7 @@ mod tests {
     fn batches_respect_request_budget() {
         let mut b = Batcher::new(10_000, 2, 1_000_000);
         for i in 0..5 {
-            b.push(req(i, 10, 0));
+            b.push(req(i, 10, 0)).unwrap();
         }
         assert_eq!(b.take_batch().unwrap().requests.len(), 2);
     }
@@ -140,7 +171,7 @@ mod tests {
     #[test]
     fn oversized_request_still_ships_alone() {
         let mut b = Batcher::new(100, 10, 0);
-        b.push(req(0, 500, 0));
+        b.push(req(0, 500, 0)).unwrap();
         let batch = b.take_batch().unwrap();
         assert_eq!(batch.requests.len(), 1);
         assert_eq!(batch.total_tokens, 500);
@@ -149,7 +180,7 @@ mod tests {
     #[test]
     fn quota_triggers_dispatch() {
         let mut b = Batcher::new(1_000_000, 100, 2_000_000); // 2ms quota
-        b.push(req(0, 10, 1_000_000));
+        b.push(req(0, 10, 1_000_000)).unwrap();
         assert!(!b.should_dispatch(1_500_000), "under quota, under budget");
         assert!(b.should_dispatch(3_100_000), "quota exceeded");
     }
@@ -157,9 +188,9 @@ mod tests {
     #[test]
     fn budget_full_triggers_dispatch_immediately() {
         let mut b = Batcher::new(50, 100, u64::MAX);
-        b.push(req(0, 30, 0));
+        b.push(req(0, 30, 0)).unwrap();
         assert!(!b.should_dispatch(0));
-        b.push(req(1, 30, 0));
+        b.push(req(1, 30, 0)).unwrap();
         assert!(b.should_dispatch(0));
     }
 
@@ -167,7 +198,7 @@ mod tests {
     fn fifo_order_preserved() {
         let mut b = Batcher::new(1000, 2, 0);
         for i in 0..4 {
-            b.push(req(i, 10, i));
+            b.push(req(i, 10, i)).unwrap();
         }
         let ids: Vec<u64> =
             b.take_batch().unwrap().requests.iter().map(|r| r.id).collect();
@@ -180,11 +211,48 @@ mod tests {
     #[test]
     fn token_accounting_consistent() {
         let mut b = Batcher::new(100, 10, 0);
-        b.push(req(0, 40, 0));
-        b.push(req(1, 40, 0));
+        b.push(req(0, 40, 0)).unwrap();
+        b.push(req(1, 40, 0)).unwrap();
         assert_eq!(b.queued_tokens(), 80);
         b.take_batch();
         assert_eq!(b.queued_tokens(), 0);
         assert!(b.take_batch().is_none());
+    }
+
+    #[test]
+    fn inbox_cap_sheds_at_admission_and_recovers() {
+        let mut b = Batcher::new(100, 10, 0).with_inbox_cap(100);
+        b.push(req(0, 60, 0)).unwrap();
+        b.push(req(1, 40, 0)).unwrap(); // exactly at the cap
+        let rejected = b.push(req(2, 1, 0));
+        assert_eq!(rejected.unwrap_err().id, 2, "over the cap: handed back");
+        assert_eq!(b.queued_tokens(), 100, "shed request never queued");
+        // draining the backlog reopens admission
+        b.take_batch().unwrap();
+        b.push(req(3, 30, 0)).unwrap();
+        // requeue ignores the cap (repair/steal re-ingestion must not shed)
+        b.requeue(req(4, 500, 0));
+        assert_eq!(b.queued_requests(), 2);
+        assert!(b.queued_tokens() > 100);
+    }
+
+    #[test]
+    fn inbox_cap_never_starves_an_oversized_request() {
+        let mut b = Batcher::new(100, 10, 0).with_inbox_cap(50);
+        // bigger than the whole cap, but the queue is empty: admitted so
+        // it can ship alone (the cap bounds backlog, not liveness)
+        b.push(req(0, 500, 0)).unwrap();
+        assert!(b.push(req(1, 1, 0)).is_err(), "backlog now over the cap");
+        assert_eq!(b.take_batch().unwrap().requests.len(), 1);
+        b.push(req(2, 10, 0)).unwrap();
+    }
+
+    #[test]
+    fn zero_cap_is_unlimited() {
+        let mut b = Batcher::new(100, 1000, 0);
+        for i in 0..100 {
+            b.push(req(i, 50, 0)).unwrap();
+        }
+        assert_eq!(b.queued_requests(), 100);
     }
 }

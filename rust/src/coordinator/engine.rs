@@ -9,18 +9,28 @@
 //! selection's parent map (the engine passes `parents` down to the
 //! executor, which applies the direct-index schedule).
 //!
+//! The request pipeline is **resumable**: [`Engine::begin_request`]
+//! admits a request into an [`InflightReq`] lifecycle state machine
+//! (`Prefilling{offset} → Decoding{step} → Done`), and
+//! [`Engine::advance_prefill`] / [`Engine::advance_decode`] each move it
+//! one stage. [`Engine::run_request`] is the sequential composition of
+//! those phases; the staged batch driver ([`super::staged`]) interleaves
+//! them across a whole batch instead — same phase methods, so the two
+//! modes cannot drift apart.
+//!
 //! The engine is deliberately *configurable into a baseline*: selector
 //! (xBeam vs naive full-sort), filtering on/off, state pooling on/off —
 //! the baselines/ module builds vLLM/xLLM-like engines from these knobs,
 //! so the real-mode benches compare implementations inside one harness.
 
+use super::overlap::MaskLane;
 use super::{RecRequest, RecResponse};
-use crate::beam::pool::StatePool;
+use crate::beam::pool::{BeamState, StatePool};
 use crate::beam::{BeamSelector, NaiveBeam, Selection, XBeam};
 use crate::itemspace::{ItemTrie, MaskWorkspace};
-use crate::kvcache::{KvManager, SeparatedKv};
+use crate::kvcache::{KvManager, ReqHandle, SeparatedKv};
 use crate::metrics::Counters;
-use crate::runtime::ModelExecutor;
+use crate::runtime::{ModelExecutor, SlotId};
 use crate::sessioncache::{SessionCache, SessionCacheConfig, Tier};
 use crate::util::now_ns;
 use crate::Result;
@@ -49,6 +59,13 @@ pub struct EngineConfig {
     /// shared cross-replica prefix pool backing the session cache (the
     /// cluster coordinator hands every replica the same Arc)
     pub session_pool: Option<std::sync::Arc<crate::sessioncache::PrefixPool>>,
+    /// run host-side mask generation on the keyed overlap lane (a
+    /// dedicated thread, concurrent with the device forward) instead of
+    /// inline — the paper's host/device overlap, wired from
+    /// `Features::overlap`. Only the host-filter (non-xBeam) path
+    /// materializes mask rows, so this is a no-op for the full-xGR
+    /// engine.
+    pub overlap_lane: bool,
 }
 
 impl Default for EngineConfig {
@@ -61,6 +78,7 @@ impl Default for EngineConfig {
             bos_token: 0,
             session_cache: None,
             session_pool: None,
+            overlap_lane: false,
         }
     }
 }
@@ -71,6 +89,55 @@ pub struct EngineOutput {
     pub id: u64,
     pub items: Vec<([u32; 3], f32)>,
     pub valid_items: usize,
+}
+
+/// Lifecycle of one request inside the (staged) engine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// prompt chunks still streaming; `offset` tokens fed so far
+    Prefilling { offset: usize },
+    /// decode iterations; `step` is the next of `num_decode` phases
+    Decoding { step: usize },
+    /// all phases complete — ready for [`Engine::finish_request`]
+    Done,
+}
+
+/// One request's detached in-flight state: everything the engine needs
+/// to resume it at any phase boundary, so N of these interleave over the
+/// shared executor / selector / mask machinery (beam state is pooled,
+/// Sec 6.3).
+pub struct InflightReq {
+    pub id: u64,
+    pub(crate) user_id: u64,
+    pub(crate) arrival_ns: u64,
+    /// processing start (the queue/service stamp split point)
+    pub(crate) t0: u64,
+    /// the served (bucket-truncated) prompt
+    pub(crate) tokens: Vec<u32>,
+    pub(crate) slot: SlotId,
+    pub(crate) kvh: ReqHandle,
+    pub(crate) state: BeamState,
+    pub(crate) beam_tokens: Vec<u32>,
+    pub(crate) phase: Phase,
+}
+
+impl InflightReq {
+    pub fn phase(&self) -> Phase {
+        self.phase
+    }
+
+    /// (arrival, processing-start) stamps for response timing.
+    pub fn stamps(&self) -> (u64, u64) {
+        (self.arrival_ns, self.t0)
+    }
+
+    /// Prompt tokens not yet fed (0 once decoding).
+    pub fn prefill_remaining(&self) -> usize {
+        match self.phase {
+            Phase::Prefilling { offset } => self.tokens.len() - offset,
+            _ => 0,
+        }
+    }
 }
 
 /// A single-stream engine bound to one executor.
@@ -84,6 +151,8 @@ pub struct Engine {
     pool: StatePool,
     kv: SeparatedKv,
     session: Option<SessionCache>,
+    /// keyed host/device overlap lane (mask gen ∥ forward), when enabled
+    lane: Option<MaskLane>,
     sel: Selection,
     prefix_scratch: Vec<Vec<u32>>,
     temp_u32: Vec<u32>,
@@ -108,7 +177,19 @@ impl Engine {
         if cfg.pooling {
             pool.warm(8);
         }
+        // only the host-filter (non-xBeam) path ever materializes mask
+        // rows, so a lane for any other config would be a permanently
+        // idle thread per stream
+        let lane = if cfg.overlap_lane
+            && cfg.valid_filter
+            && cfg.selector != SelectorKind::XBeam
+        {
+            Some(MaskLane::new(trie.clone(), bw))
+        } else {
+            None
+        };
         Engine {
+            lane,
             masks: MaskWorkspace::new(&trie, bw),
             xbeam: XBeam::new(bw, k, spec.vocab),
             naive: NaiveBeam::new(),
@@ -154,11 +235,23 @@ impl Engine {
         }
     }
 
+    /// Inline mask computations forced by a dead overlap-lane worker
+    /// (zero without the lane).
+    pub fn mask_lane_fallbacks(&self) -> u64 {
+        self.lane.as_ref().map(|l| l.fallbacks()).unwrap_or(0)
+    }
+
+    /// Whether the executor can stream prompts chunk by chunk (the
+    /// staged driver falls back to whole-prompt prefills otherwise,
+    /// still interleaving at decode granularity).
+    pub fn supports_chunked_prefill(&self) -> bool {
+        self.exec.supports_chunked_prefill()
+    }
+
     /// Serve one request end-to-end; `stream` is a label for the response.
     pub fn process(&mut self, req: &RecRequest, stream: usize) -> Result<RecResponse> {
         let t0 = now_ns();
         let out = self.run_request(req)?;
-        Counters::inc(&self.counters.requests_done);
         let done = now_ns();
         // queue and service time are stamped SEPARATELY: a future-stamped
         // arrival (open-loop replay pacing) reads as zero queue time —
@@ -178,26 +271,49 @@ impl Engine {
         })
     }
 
-    /// The core request pipeline.
+    /// The sequential request pipeline: begin → decode to completion →
+    /// finish. Exactly the staged driver's phase methods composed with a
+    /// whole-prompt "chunk", so sequential and staged mode share one
+    /// code path and cannot drift.
     pub fn run_request(&mut self, req: &RecRequest) -> Result<EngineOutput> {
+        let mut r = self.begin_request(req, false)?;
+        while r.phase != Phase::Done {
+            if let Err(e) = self.advance_decode(&mut r) {
+                self.abort_request(r);
+                return Err(e);
+            }
+        }
+        Ok(self.finish_request(r))
+    }
+
+    /// Admit one request: session-cache lookup, prefill admission, KV +
+    /// beam-state allocation. With `chunked` (and an executor that
+    /// supports it) the prompt is NOT computed yet — the request parks in
+    /// [`Phase::Prefilling`] and [`advance_prefill`](Self::advance_prefill)
+    /// streams it chunk by chunk; otherwise the whole prompt prefills
+    /// here and the request starts [`Phase::Decoding`].
+    pub fn begin_request(
+        &mut self,
+        req: &RecRequest,
+        chunked: bool,
+    ) -> Result<InflightReq> {
         let spec = self.exec.spec().clone();
         let bw = spec.beam_width;
         let nd = spec.num_decode;
-        let v = spec.vocab;
-        let k = if self.cfg.top_k == 0 { bw } else { self.cfg.top_k };
+        let t0 = now_ns();
 
         // truncate over-long prompts to the bucket (keep most recent)
-        let tokens: &[u32] = if req.tokens.len() > spec.seq {
-            &req.tokens[req.tokens.len() - spec.seq..]
+        let tokens: Vec<u32> = if req.tokens.len() > spec.seq {
+            req.tokens[req.tokens.len() - spec.seq..].to_vec()
         } else {
-            &req.tokens
+            req.tokens.clone()
         };
 
         // ---- session cache: reuse the cached prefix, prefill the rest ----
         // A full-prompt hit still prefills the last token (the prompt
         // logits must come from somewhere), hence the len-1 clamp.
         let cached = if let Some(sc) = self.session.as_mut() {
-            let look = sc.lookup(req.user_id, tokens, tokens.len());
+            let look = sc.lookup(req.user_id, &tokens, tokens.len());
             if look.hit_tokens > 0 {
                 Counters::inc(&self.counters.session_hits);
             } else {
@@ -214,10 +330,18 @@ impl Engine {
             0
         };
 
-        // ---- prefill (uncached suffix only when the runtime can) ----
-        let (slot, _prompt_logits) = match self.exec.prefill_with_prefix(tokens, cached)
-        {
-            Ok(x) => x,
+        // ---- prefill admission ----
+        let chunked = chunked && self.exec.supports_chunked_prefill();
+        let admit = if chunked {
+            // staged: open the slot now, stream the prompt later; the KV
+            // shared region is accounted as chunks land
+            self.exec.prefill_open(tokens.len())
+        } else {
+            // sequential: the whole (uncached-suffix) prompt right here
+            self.exec.prefill_with_prefix(&tokens, cached).map(|(s, _logits)| s)
+        };
+        let slot = match admit {
+            Ok(s) => s,
             Err(e) => {
                 // drop the lookup pin before bailing
                 if let Some(sc) = self.session.as_mut() {
@@ -226,145 +350,285 @@ impl Engine {
                 return Err(e);
             }
         };
-        let kvh = self.kv.alloc(tokens.len(), bw, nd);
+        let kvh = if chunked {
+            self.kv.alloc_staged(tokens.len(), bw, nd)
+        } else {
+            self.kv.alloc(tokens.len(), bw, nd)
+        };
+        // charge the suffix once, phase-independently, so counter totals
+        // stay identical between staged and sequential runs. NOTE: like
+        // `prefill_with_prefix` on today's executors (mock, CPU PJRT),
+        // chunked mode physically recomputes the WHOLE prompt — the
+        // accounting captures the savings a residency-capable runtime
+        // would realize; when one lands (ROADMAP: suffix-KV
+        // materialization), the chunk stream must start at `cached`.
         Counters::add(&self.counters.prefill_tokens, (tokens.len() - cached) as u64);
         Counters::add(&self.counters.prefill_tokens_saved, cached as u64);
 
         // ---- beam state (pooled, Sec 6.3) ----
-        let mut state = if self.cfg.pooling {
+        let state = if self.cfg.pooling {
             self.pool.take()
         } else {
             let mut p = StatePool::new(bw, nd);
             p.take()
         };
+        Ok(InflightReq {
+            id: req.id,
+            user_id: req.user_id,
+            arrival_ns: req.arrival_ns,
+            t0,
+            tokens,
+            slot,
+            kvh,
+            state,
+            beam_tokens: vec![self.cfg.bos_token; bw],
+            phase: if chunked {
+                Phase::Prefilling { offset: 0 }
+            } else {
+                Phase::Decoding { step: 0 }
+            },
+        })
+    }
 
-        let result: Result<EngineOutput> = (|| {
-            // device-resident filtering (the xGR path): selection walks
-            // the trie-valid token lists directly — no per-beam mask rows
-            // are materialized at all. The naive/baseline path filters
-            // the host way: dense/sparse mask rows added onto logits.
-            let device_filter =
-                self.cfg.valid_filter && self.cfg.selector == SelectorKind::XBeam;
-            let mut beam_tokens = vec![self.cfg.bos_token; bw];
-            for step in 0..nd {
-                // host-side mask preparation (baseline path only). Step 0
-                // needs no per-beam rows (all beams share the empty
-                // prefix; the dense root mask is applied to one row).
-                if self.cfg.valid_filter && !device_filter && step > 0 {
-                    for b in 0..bw {
-                        self.prefix_scratch[b].clear();
-                        self.prefix_scratch[b].extend_from_slice(state.prefix(b));
-                    }
-                    self.masks.update_sparse(&self.trie, &self.prefix_scratch);
-                }
-                if device_filter && step > 0 {
-                    for b in 0..bw {
-                        self.prefix_scratch[b].clear();
-                        self.prefix_scratch[b].extend_from_slice(state.prefix(b));
-                    }
-                }
-                // decode forward (applies the in-place KV reorder by the
-                // previous selection's parents)
-                let logits =
-                    self.exec.decode(slot, step, &beam_tokens, &state.parents)?;
-                Counters::inc(&self.counters.decode_steps);
-                self.kv.decode_step(kvh, step, &state.parents);
+    /// Feed up to `budget` more prompt tokens of a [`Phase::Prefilling`]
+    /// request through the executor's chunked prefill; returns the
+    /// tokens consumed (0 for a request not prefilling or a zero
+    /// budget). The final chunk flips the request to [`Phase::Decoding`].
+    pub fn advance_prefill(
+        &mut self,
+        r: &mut InflightReq,
+        budget: usize,
+    ) -> Result<usize> {
+        let Phase::Prefilling { offset } = r.phase else {
+            return Ok(0);
+        };
+        let n = budget.min(r.tokens.len() - offset);
+        if n == 0 {
+            return Ok(0);
+        }
+        let done = self
+            .exec
+            .prefill_chunk(r.slot, &r.tokens[offset..offset + n], offset)?
+            .is_some();
+        self.kv.prefill_advance(r.kvh, n);
+        Counters::inc(&self.counters.prefill_chunks);
+        r.phase = if done {
+            debug_assert_eq!(offset + n, r.tokens.len());
+            Phase::Decoding { step: 0 }
+        } else {
+            Phase::Prefilling { offset: offset + n }
+        };
+        Ok(n)
+    }
 
-                // masking + selection
-                self.logits_scratch.clear();
-                if step == 0 {
-                    // all beams share the BOS state: expand from row 0
-                    self.logits_scratch.extend_from_slice(&logits[..v]);
-                    let scores = [0.0f32];
-                    if device_filter {
-                        let lists = [self.trie.valid_roots()];
-                        self.xbeam.step_valid(
-                            &self.logits_scratch, v, &scores, &lists, k, bw,
-                            &mut self.sel,
-                        );
-                    } else {
-                        if self.cfg.valid_filter {
-                            self.masks.apply_root(&mut self.logits_scratch);
-                        }
-                        self.select(&scores, v, k, bw);
+    /// Pre-submit `r`'s next decode step's mask job to the overlap lane
+    /// (host-filter path only; no-op otherwise). The staged driver calls
+    /// this for every in-flight request before advancing any of them, so
+    /// the lane computes masks for request B while request A's forward
+    /// occupies the device.
+    pub fn prepare_masks(&mut self, r: &InflightReq) {
+        let Phase::Decoding { step } = r.phase else {
+            return;
+        };
+        if step == 0
+            || !self.cfg.valid_filter
+            || self.cfg.selector == SelectorKind::XBeam
+        {
+            return;
+        }
+        let Some(lane) = self.lane.as_mut() else {
+            return;
+        };
+        if lane.has_job(r.id) {
+            return;
+        }
+        let prefixes: Vec<Vec<u32>> =
+            (0..r.state.bw).map(|b| r.state.prefix(b).to_vec()).collect();
+        lane.submit_sparse(r.id, prefixes);
+    }
+
+    /// Run one decode iteration of a [`Phase::Decoding`] request: KV
+    /// reorder + forward, masking, selection, beam-state update. The
+    /// last step (or a fully-masked selection) flips it to
+    /// [`Phase::Done`].
+    pub fn advance_decode(&mut self, r: &mut InflightReq) -> Result<()> {
+        let Phase::Decoding { step } = r.phase else {
+            return Ok(());
+        };
+        let (bw, nd, v) = {
+            let s = self.exec.spec();
+            (s.beam_width, s.num_decode, s.vocab)
+        };
+        let k = if self.cfg.top_k == 0 { bw } else { self.cfg.top_k };
+        // device-resident filtering (the xGR path): selection walks the
+        // trie-valid token lists directly — no per-beam mask rows are
+        // materialized at all. The naive/baseline path filters the host
+        // way: dense/sparse mask rows added onto logits.
+        let device_filter =
+            self.cfg.valid_filter && self.cfg.selector == SelectorKind::XBeam;
+        // per-beam prefixes of this step (host masks AND device lists).
+        // Step 0 needs none (all beams share the empty prefix).
+        if self.cfg.valid_filter && step > 0 {
+            for b in 0..bw {
+                self.prefix_scratch[b].clear();
+                self.prefix_scratch[b].extend_from_slice(r.state.prefix(b));
+            }
+        }
+        // host-filter masks ride the overlap lane when configured:
+        // submitted before the forward (unless the staged driver already
+        // did via `prepare_masks`), collected after — mask generation
+        // hides behind the device pass
+        let use_lane = !device_filter
+            && self.cfg.valid_filter
+            && step > 0
+            && self.lane.is_some();
+        if use_lane && !self.lane.as_ref().unwrap().has_job(r.id) {
+            let prefixes: Vec<Vec<u32>> = self.prefix_scratch[..bw].to_vec();
+            self.lane.as_mut().unwrap().submit_sparse(r.id, prefixes);
+        }
+        // decode forward (applies the in-place KV reorder by the
+        // previous selection's parents)
+        let logits =
+            match self.exec.decode(r.slot, step, &r.beam_tokens, &r.state.parents) {
+                Ok(l) => l,
+                Err(e) => {
+                    // reclaim the in-flight mask job before bailing
+                    if let Some(lane) = self.lane.as_mut() {
+                        lane.discard(r.id);
                     }
-                } else {
-                    self.logits_scratch.extend_from_slice(&logits);
-                    let scores = state.scores.clone();
-                    if device_filter {
-                        let lists: Vec<&[u32]> = (0..bw)
-                            .map(|b| self.trie.valid_next(&self.prefix_scratch[b]))
-                            .collect();
-                        self.xbeam.step_valid(
-                            &self.logits_scratch, v, &scores, &lists, k, bw,
-                            &mut self.sel,
-                        );
-                    } else {
-                        if self.cfg.valid_filter {
-                            for b in 0..bw {
-                                self.masks.apply(
-                                    b,
-                                    &mut self.logits_scratch[b * v..(b + 1) * v],
-                                );
-                            }
-                        }
-                        self.select(&scores, v, k, bw);
-                    }
+                    return Err(e);
                 }
-                if self.sel.is_empty() {
-                    // fully masked — no valid continuation (can only
-                    // happen with filtering off catalogs; fail soft)
-                    break;
-                }
-                // pad selection up to BW by repeating the best candidate
-                // (keeps executor shapes static, mirrors real engines)
-                while self.sel.len() < bw {
-                    let i = self.sel.len() % self.sel.parents.len().max(1);
-                    self.sel.parents.push(self.sel.parents[i]);
-                    self.sel.tokens.push(self.sel.tokens[i]);
-                    self.sel.scores.push(f32::NEG_INFINITY);
-                }
-                state.apply_selection(
-                    &self.sel.parents,
-                    &self.sel.tokens,
-                    &self.sel.scores,
-                    &mut self.temp_u32,
+            };
+        Counters::inc(&self.counters.decode_steps);
+        self.kv.decode_step(r.kvh, step, &r.state.parents);
+
+        // ---- masking + selection ----
+        self.logits_scratch.clear();
+        if step == 0 {
+            // all beams share the BOS state: expand from row 0
+            self.logits_scratch.extend_from_slice(&logits[..v]);
+            let scores = [0.0f32];
+            if device_filter {
+                let lists = [self.trie.valid_roots()];
+                self.xbeam.step_valid(
+                    &self.logits_scratch, v, &scores, &lists, k, bw,
+                    &mut self.sel,
                 );
-                beam_tokens.copy_from_slice(&self.sel.tokens);
+            } else {
+                if self.cfg.valid_filter {
+                    self.masks.apply_root(&mut self.logits_scratch);
+                }
+                self.select(&scores, v, k, bw);
             }
-
-            // ---- collect items ----
-            let mut items: Vec<([u32; 3], f32)> = Vec::with_capacity(bw);
-            if state.prefix_len == nd {
-                for (b, item) in state.items().into_iter().enumerate() {
-                    if state.scores[b].is_finite() {
-                        items.push((item, state.scores[b]));
+        } else {
+            self.logits_scratch.extend_from_slice(&logits);
+            let scores = r.state.scores.clone();
+            if device_filter {
+                let lists: Vec<&[u32]> = (0..bw)
+                    .map(|b| self.trie.valid_next(&self.prefix_scratch[b]))
+                    .collect();
+                self.xbeam.step_valid(
+                    &self.logits_scratch, v, &scores, &lists, k, bw,
+                    &mut self.sel,
+                );
+            } else {
+                if self.cfg.valid_filter {
+                    if use_lane {
+                        let ws = self.lane.as_mut().unwrap().collect(r.id);
+                        for b in 0..bw {
+                            ws.apply(
+                                b,
+                                &mut self.logits_scratch[b * v..(b + 1) * v],
+                            );
+                        }
+                        self.lane.as_mut().unwrap().recycle(ws);
+                    } else {
+                        self.masks.update_sparse(&self.trie, &self.prefix_scratch);
+                        for b in 0..bw {
+                            self.masks.apply(
+                                b,
+                                &mut self.logits_scratch[b * v..(b + 1) * v],
+                            );
+                        }
                     }
                 }
+                self.select(&scores, v, k, bw);
             }
-            items.sort_by(|a, b| b.1.total_cmp(&a.1));
-            items.dedup_by_key(|x| x.0);
-            let valid_items =
-                items.iter().filter(|(it, _)| self.trie.contains(*it)).count();
-            Ok(EngineOutput { id: req.id, items, valid_items })
-        })();
+        }
+        if self.sel.is_empty() {
+            // fully masked — no valid continuation (can only happen with
+            // filtering off catalogs; fail soft with an empty item list)
+            r.phase = Phase::Done;
+            return Ok(());
+        }
+        // pad selection up to BW by repeating the best candidate
+        // (keeps executor shapes static, mirrors real engines)
+        while self.sel.len() < bw {
+            let i = self.sel.len() % self.sel.parents.len().max(1);
+            self.sel.parents.push(self.sel.parents[i]);
+            self.sel.tokens.push(self.sel.tokens[i]);
+            self.sel.scores.push(f32::NEG_INFINITY);
+        }
+        r.state.apply_selection(
+            &self.sel.parents,
+            &self.sel.tokens,
+            &self.sel.scores,
+            &mut self.temp_u32,
+        );
+        r.beam_tokens.copy_from_slice(&self.sel.tokens);
+        r.phase = if step + 1 == nd {
+            Phase::Done
+        } else {
+            Phase::Decoding { step: step + 1 }
+        };
+        Ok(())
+    }
 
-        // ---- cleanup (always) ----
+    /// Retire a [`Phase::Done`] request: collect + rank its items,
+    /// release every per-request resource, publish the grown session
+    /// prefix (unpins). Infallible — a request that reached `Done`
+    /// always yields an output (possibly with an empty item list).
+    pub fn finish_request(&mut self, r: InflightReq) -> EngineOutput {
+        let nd = self.exec.spec().num_decode;
+        let InflightReq { id, user_id, tokens, slot, kvh, state, .. } = r;
+        let mut items: Vec<([u32; 3], f32)> = Vec::with_capacity(state.bw);
+        if state.prefix_len == nd {
+            for (b, item) in state.items().into_iter().enumerate() {
+                if state.scores[b].is_finite() {
+                    items.push((item, state.scores[b]));
+                }
+            }
+        }
+        items.sort_by(|a, b| b.1.total_cmp(&a.1));
+        items.dedup_by_key(|x| x.0);
+        let valid_items =
+            items.iter().filter(|(it, _)| self.trie.contains(*it)).count();
         self.exec.release(slot);
         self.kv.free(kvh);
         if self.cfg.pooling {
             self.pool.give(state);
         }
-        // grow the user's cached prefix to the full served prompt (unpins);
-        // a failed request only unpins
         if let Some(sc) = self.session.as_mut() {
-            if result.is_ok() {
-                sc.publish(req.user_id, tokens, tokens.len());
-            } else {
-                sc.release(req.user_id);
-            }
+            sc.publish(user_id, &tokens, tokens.len());
         }
-        result
+        Counters::inc(&self.counters.requests_done);
+        EngineOutput { id, items, valid_items }
+    }
+
+    /// Tear down a request that failed mid-flight: every per-request
+    /// resource is released and the session pin dropped (no publish).
+    pub fn abort_request(&mut self, r: InflightReq) {
+        if let Some(lane) = self.lane.as_mut() {
+            lane.discard(r.id);
+        }
+        self.exec.release(r.slot);
+        self.kv.free(r.kvh);
+        if self.cfg.pooling {
+            self.pool.give(r.state);
+        }
+        if let Some(sc) = self.session.as_mut() {
+            sc.release(r.user_id);
+        }
     }
 
     fn select(&mut self, scores: &[f32], v: usize, k: usize, bw: usize) {

@@ -11,18 +11,22 @@
 //!   executor; batches are routed to per-stream queues by load, or — when
 //!   the session cache is on — by *session affinity* (a returning user
 //!   lands on the stream whose engine holds their cached prefix KV).
-//!   [`overlap`] provides the host/device overlap lane (mask generation
-//!   concurrent with the forward pass).
+//!   With `prefill_chunk_tokens > 0` a worker drives each batch through
+//!   the iteration-level **staged** loop ([`staged`]): mixed
+//!   prefill-chunk + decode-step ticks instead of request-at-a-time.
+//!   [`overlap`] provides the keyed host/device overlap lane (mask
+//!   generation concurrent with the forward pass).
 
 pub mod batch;
 pub mod engine;
 pub mod graph;
 pub mod overlap;
 pub mod scheduler;
+pub mod staged;
 pub mod worker;
 
 pub use batch::{Batch, Batcher};
-pub use engine::{Engine, EngineConfig, EngineOutput, SelectorKind};
+pub use engine::{Engine, EngineConfig, EngineOutput, InflightReq, Phase, SelectorKind};
 pub use scheduler::{Coordinator, ExecutorFactory};
 
 use crate::metrics::Counters;
@@ -88,6 +92,17 @@ pub struct BackendStats {
     pub steal_tokens_saved: u64,
     /// steal attempts that migrated nothing (empty drain or full thief)
     pub steal_aborts: u64,
+    /// prompt chunks fed by the staged engine (zero in sequential mode)
+    pub prefill_chunks: u64,
+    /// iteration-level stage ticks the staged engine drove
+    pub stage_ticks: u64,
+    /// Σ in-flight requests over stage ticks (÷ `stage_ticks` = mean
+    /// stage occupancy)
+    pub stage_occupancy_sum: u64,
+    /// mask jobs computed inline because an overlap-lane worker died
+    pub mask_lane_fallbacks: u64,
+    /// requests shed at batcher admission by the queued-token cap
+    pub batch_rejects: u64,
     /// session hit rate per replica (one element for a lone coordinator)
     pub per_replica_hit_rates: Vec<f64>,
 }
@@ -95,6 +110,11 @@ pub struct BackendStats {
 impl BackendStats {
     pub fn session_hit_rate(&self) -> f64 {
         crate::metrics::session_hit_rate(self.session_hits, self.session_misses)
+    }
+
+    /// Mean in-flight requests per staged tick (0 in sequential mode).
+    pub fn mean_stage_occupancy(&self) -> f64 {
+        crate::metrics::mean_stage_occupancy(self.stage_occupancy_sum, self.stage_ticks)
     }
 
     /// Snapshot one coordinator's shared counters (pool-global fields are
@@ -120,6 +140,11 @@ impl BackendStats {
             batch_steals: g(&c.batch_steals),
             steal_tokens_saved: g(&c.steal_tokens_saved),
             steal_aborts: g(&c.steal_aborts),
+            prefill_chunks: g(&c.prefill_chunks),
+            stage_ticks: g(&c.stage_ticks),
+            stage_occupancy_sum: g(&c.stage_occupancy_sum),
+            mask_lane_fallbacks: g(&c.mask_lane_fallbacks),
+            batch_rejects: g(&c.batch_rejects),
             per_replica_hit_rates: vec![crate::metrics::session_hit_rate(
                 g(&c.session_hits),
                 g(&c.session_misses),
@@ -146,6 +171,11 @@ impl BackendStats {
         self.batch_steals += o.batch_steals;
         self.steal_tokens_saved += o.steal_tokens_saved;
         self.steal_aborts += o.steal_aborts;
+        self.prefill_chunks += o.prefill_chunks;
+        self.stage_ticks += o.stage_ticks;
+        self.stage_occupancy_sum += o.stage_occupancy_sum;
+        self.mask_lane_fallbacks += o.mask_lane_fallbacks;
+        self.batch_rejects += o.batch_rejects;
         // pool-global fields (TTL expirations, peak) come from the single
         // shared pool, not per-replica sums — take the max, not the sum
         self.pool_ttl_expirations = self.pool_ttl_expirations.max(o.pool_ttl_expirations);

@@ -1,89 +1,182 @@
 //! Host/device overlap lane (paper Sec 7): mask generation runs on a
 //! dedicated host thread concurrently with the device-side forward pass.
 //!
-//! Ownership ping-pong, zero copies: the engine sends the
-//! `MaskWorkspace` plus the beam prefixes to the lane *before* launching
-//! the decode forward; while the device computes logits the lane applies
-//! the sparse updates; the engine then receives the workspace back when
-//! it needs to apply masks. On a single-core host this buys structure
-//! (and is exactly the paper's dataflow); on a multi-core host it buys
-//! wall-clock.
+//! The lane is **keyed and multi-workspace**: every in-flight request
+//! submits its sparse mask job under its own key, so the staged batch
+//! engine can queue mask updates for N interleaved requests before
+//! launching their decode forwards and collect each result exactly when
+//! that request's selection needs it. Workspaces materialize on demand
+//! (one per concurrently in-flight key), are handed to the worker with
+//! the job, and return to a bounded free list via [`MaskLane::recycle`].
+//!
+//! Failure policy: the lane **degrades, never poisons**. If the worker
+//! thread is gone (channel closed), `submit_sparse` computes the mask
+//! inline on the caller's thread, and `collect` replays the recorded job
+//! inline on a fresh workspace — both counted in
+//! [`MaskLane::fallbacks`], surfaced as `Counters::mask_lane_fallbacks`.
+//! The old lane `panic!("mask lane closed")` / `expect("mask lane
+//! died")` turned one dead helper thread into a dead engine stream.
 
 use crate::itemspace::{ItemTrie, MaskWorkspace};
 use crate::util::pool::Channel;
+use std::collections::HashMap;
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
-enum Job {
-    Step0(MaskWorkspace),
-    Sparse(MaskWorkspace, Vec<Vec<u32>>),
+/// Recycled-workspace cap: enough for a full staged batch's worth of
+/// concurrently in-flight keys without pinning a burst's memory forever.
+const FREE_WS_CAP: usize = 8;
+
+struct Job {
+    key: u64,
+    ws: MaskWorkspace,
+    prefixes: Vec<Vec<u32>>,
 }
 
-/// A mask-update lane backed by one worker thread.
+/// A keyed mask-update lane backed by one worker thread.
 pub struct MaskLane {
+    trie: Arc<ItemTrie>,
+    bw: usize,
     to_worker: Channel<Job>,
-    from_worker: Channel<MaskWorkspace>,
+    from_worker: Channel<(u64, MaskWorkspace)>,
+    /// results that came back before their caller asked
+    ready: HashMap<u64, MaskWorkspace>,
+    /// submitted prefixes, kept until collect: if the worker dies with
+    /// the workspace, the job replays inline on a fresh one
+    pending: HashMap<u64, Vec<Vec<u32>>>,
+    free: Vec<MaskWorkspace>,
     handle: Option<JoinHandle<()>>,
-    in_flight: bool,
+    fallbacks: u64,
 }
 
 impl MaskLane {
-    pub fn new(trie: Arc<ItemTrie>) -> Self {
-        let to_worker: Channel<Job> = Channel::bounded(1);
-        let from_worker: Channel<MaskWorkspace> = Channel::bounded(1);
+    pub fn new(trie: Arc<ItemTrie>, bw: usize) -> Self {
+        let to_worker: Channel<Job> = Channel::bounded(16);
+        let from_worker: Channel<(u64, MaskWorkspace)> = Channel::bounded(16);
         let rx = to_worker.clone();
         let tx = from_worker.clone();
+        let worker_trie = trie.clone();
         let handle = std::thread::Builder::new()
             .name("mask-lane".into())
             .spawn(move || {
-                while let Some(job) = rx.recv() {
-                    let ws = match job {
-                        Job::Step0(mut ws) => {
-                            ws.set_step0();
-                            ws
-                        }
-                        Job::Sparse(mut ws, prefixes) => {
-                            ws.update_sparse(&trie, &prefixes);
-                            ws
-                        }
-                    };
-                    if tx.send(ws).is_err() {
+                while let Some(mut job) = rx.recv() {
+                    job.ws.update_sparse(&worker_trie, &job.prefixes);
+                    if tx.send((job.key, job.ws)).is_err() {
                         break;
                     }
                 }
             })
             .expect("spawn mask lane");
-        MaskLane { to_worker, from_worker, handle: Some(handle), in_flight: false }
+        MaskLane {
+            trie,
+            bw,
+            to_worker,
+            from_worker,
+            ready: HashMap::new(),
+            pending: HashMap::new(),
+            free: Vec::new(),
+            handle: Some(handle),
+            fallbacks: 0,
+        }
     }
 
-    /// Kick off the dense step-0 preparation (call before the decode
-    /// forward; `await_masks` collects the result).
-    pub fn submit_step0(&mut self, ws: MaskWorkspace) {
-        assert!(!self.in_flight, "one job at a time");
-        self.to_worker
-            .send(Job::Step0(ws))
-            .unwrap_or_else(|_| panic!("mask lane closed"));
-        self.in_flight = true;
+    fn take_ws(&mut self) -> MaskWorkspace {
+        self.free
+            .pop()
+            .unwrap_or_else(|| MaskWorkspace::new(&self.trie, self.bw))
     }
 
-    /// Kick off a sparse update for the given beam prefixes.
-    pub fn submit_sparse(&mut self, ws: MaskWorkspace, prefixes: Vec<Vec<u32>>) {
-        assert!(!self.in_flight, "one job at a time");
-        self.to_worker
-            .send(Job::Sparse(ws, prefixes))
-            .unwrap_or_else(|_| panic!("mask lane closed"));
-        self.in_flight = true;
+    /// Kick off a sparse mask update for `key` (one per key at a time).
+    /// Call before launching the decode forward; `collect(key)` blocks
+    /// until the masks are ready. NEVER blocks: a saturated lane (a
+    /// whole staged batch pre-submitting before any collect would
+    /// otherwise wedge against the bounded channels) computes this job
+    /// inline — backpressure, not failure — and a dead worker does the
+    /// same, additionally counted in [`fallbacks`](Self::fallbacks).
+    pub fn submit_sparse(&mut self, key: u64, prefixes: Vec<Vec<u32>>) {
+        assert!(
+            !self.pending.contains_key(&key),
+            "mask job for key {key} already in flight"
+        );
+        assert_eq!(prefixes.len(), self.bw, "one prefix per beam");
+        let ws = self.take_ws();
+        self.pending.insert(key, prefixes.clone());
+        if let Err(mut job) = self.to_worker.try_send(Job { key, ws, prefixes }) {
+            // lane full or worker gone: inline on the engine thread
+            job.ws.update_sparse(&self.trie, &job.prefixes);
+            if self.to_worker.is_closed() {
+                self.fallbacks += 1; // degraded (dead worker), not merely full
+            }
+            self.ready.insert(key, job.ws);
+        }
     }
 
-    /// Block until the workspace comes back with masks ready.
-    pub fn await_masks(&mut self) -> MaskWorkspace {
-        assert!(self.in_flight, "nothing submitted");
-        self.in_flight = false;
-        self.from_worker.recv().expect("mask lane died")
+    /// Is a job for `key` submitted and not yet collected?
+    pub fn has_job(&self, key: u64) -> bool {
+        self.pending.contains_key(&key)
     }
 
-    pub fn is_in_flight(&self) -> bool {
-        self.in_flight
+    /// Block until `key`'s workspace comes back with masks ready.
+    /// Results for other keys arriving first are stashed for their own
+    /// callers. Return the workspace via [`recycle`](Self::recycle).
+    pub fn collect(&mut self, key: u64) -> MaskWorkspace {
+        assert!(self.pending.contains_key(&key), "collect without submit");
+        loop {
+            if let Some(ws) = self.ready.remove(&key) {
+                self.pending.remove(&key);
+                return ws;
+            }
+            match self.from_worker.recv() {
+                Some((k, ws)) => {
+                    self.ready.insert(k, ws);
+                }
+                None => {
+                    // worker died holding the workspace: replay the
+                    // recorded job inline on a fresh one
+                    let prefixes =
+                        self.pending.remove(&key).expect("checked above");
+                    let mut ws = self.take_ws();
+                    ws.update_sparse(&self.trie, &prefixes);
+                    self.fallbacks += 1;
+                    return ws;
+                }
+            }
+        }
+    }
+
+    /// Drop an in-flight job whose request is being aborted (the
+    /// workspace is recovered and recycled).
+    pub fn discard(&mut self, key: u64) {
+        if self.pending.contains_key(&key) {
+            let ws = self.collect(key);
+            self.recycle(ws);
+        }
+    }
+
+    /// Return a collected workspace to the free list.
+    pub fn recycle(&mut self, ws: MaskWorkspace) {
+        if self.free.len() < FREE_WS_CAP {
+            self.free.push(ws);
+        }
+    }
+
+    /// Jobs computed inline because the worker thread was gone.
+    pub fn fallbacks(&self) -> u64 {
+        self.fallbacks
+    }
+
+    /// Keys submitted but not yet collected.
+    pub fn in_flight(&self) -> usize {
+        self.pending.len()
+    }
+
+    #[cfg(test)]
+    fn kill_worker(&mut self) {
+        self.to_worker.close();
+        self.from_worker.close();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
     }
 }
 
@@ -102,64 +195,158 @@ mod tests {
     use super::*;
     use crate::itemspace::Catalog;
 
-    fn setup() -> (Arc<ItemTrie>, MaskWorkspace) {
+    fn setup() -> Arc<ItemTrie> {
         let c = Catalog::generate(32, 300, 3);
-        let t = Arc::new(ItemTrie::build(&c));
-        let ws = MaskWorkspace::new(&t, 4);
-        (t, ws)
+        Arc::new(ItemTrie::build(&c))
     }
 
-    #[test]
-    fn overlapped_step0_equals_inline() {
-        let (trie, ws) = setup();
-        let mut lane = MaskLane::new(trie.clone());
-        lane.submit_step0(ws);
-        // ... device forward would run here ...
-        let ws = lane.await_masks();
-        let mut inline = MaskWorkspace::new(&trie, 4);
-        inline.set_step0();
-        for b in 0..4 {
-            assert_eq!(ws.row(b), inline.row(b));
-        }
+    fn inline_rows(trie: &ItemTrie, bw: usize, prefixes: &[Vec<u32>]) -> MaskWorkspace {
+        let mut ws = MaskWorkspace::new(trie, bw);
+        ws.update_sparse(trie, prefixes);
+        ws
     }
 
     #[test]
     fn overlapped_sparse_equals_inline() {
-        let (trie, mut ws) = setup();
-        ws.set_step0();
+        let trie = setup();
         let t0 = trie.valid_roots()[0];
         let prefixes: Vec<Vec<u32>> = (0..4).map(|_| vec![t0]).collect();
-        let mut lane = MaskLane::new(trie.clone());
-        lane.submit_sparse(ws, prefixes.clone());
-        let ws = lane.await_masks();
-        let mut inline = MaskWorkspace::new(&trie, 4);
-        inline.set_step0();
-        inline.update_sparse(&trie, &prefixes);
+        let mut lane = MaskLane::new(trie.clone(), 4);
+        lane.submit_sparse(7, prefixes.clone());
+        assert_eq!(lane.in_flight(), 1);
+        let ws = lane.collect(7);
+        let inline = inline_rows(&trie, 4, &prefixes);
         for b in 0..4 {
+            assert_eq!(ws.row(b), inline.row(b));
+        }
+        lane.recycle(ws);
+        assert_eq!(lane.in_flight(), 0);
+        assert_eq!(lane.fallbacks(), 0);
+    }
+
+    #[test]
+    fn keyed_jobs_collect_out_of_order() {
+        let trie = setup();
+        let roots = trie.valid_roots().to_vec();
+        let mut lane = MaskLane::new(trie.clone(), 2);
+        let jobs: Vec<(u64, Vec<Vec<u32>>)> = (0..3)
+            .map(|i| {
+                let t = roots[i % roots.len()];
+                (i as u64, (0..2).map(|_| vec![t]).collect())
+            })
+            .collect();
+        for (k, p) in &jobs {
+            lane.submit_sparse(*k, p.clone());
+        }
+        assert_eq!(lane.in_flight(), 3);
+        // collect newest-first: earlier results stash in `ready`
+        for (k, p) in jobs.iter().rev() {
+            let ws = lane.collect(*k);
+            let inline = inline_rows(&trie, 2, p);
+            for b in 0..2 {
+                assert_eq!(ws.row(b), inline.row(b), "key {k}");
+            }
+            lane.recycle(ws);
+        }
+        assert_eq!(lane.in_flight(), 0);
+    }
+
+    #[test]
+    fn recycled_workspace_stays_consistent_across_users() {
+        // a workspace last used for key A must produce correct rows for
+        // key B: update_sparse re-poisons exactly the open positions
+        let trie = setup();
+        let roots = trie.valid_roots().to_vec();
+        let mut lane = MaskLane::new(trie.clone(), 2);
+        let pa: Vec<Vec<u32>> = (0..2).map(|_| vec![roots[0]]).collect();
+        lane.submit_sparse(1, pa);
+        let ws = lane.collect(1);
+        lane.recycle(ws); // key 2 will reuse this workspace
+        let pb: Vec<Vec<u32>> =
+            (0..2).map(|_| vec![roots[roots.len() - 1]]).collect();
+        lane.submit_sparse(2, pb.clone());
+        let ws = lane.collect(2);
+        let inline = inline_rows(&trie, 2, &pb);
+        for b in 0..2 {
             assert_eq!(ws.row(b), inline.row(b));
         }
     }
 
     #[test]
+    fn dead_worker_degrades_inline_and_counts_fallbacks() {
+        let trie = setup();
+        let t0 = trie.valid_roots()[0];
+        let prefixes: Vec<Vec<u32>> = (0..4).map(|_| vec![t0]).collect();
+        let mut lane = MaskLane::new(trie.clone(), 4);
+        lane.kill_worker();
+        // submit after death: inline at submit time
+        lane.submit_sparse(3, prefixes.clone());
+        let ws = lane.collect(3);
+        let inline = inline_rows(&trie, 4, &prefixes);
+        for b in 0..4 {
+            assert_eq!(ws.row(b), inline.row(b), "degraded masks must match");
+        }
+        lane.recycle(ws);
+        assert_eq!(lane.fallbacks(), 1);
+        // keep serving: a second job also degrades instead of panicking
+        lane.submit_sparse(4, prefixes.clone());
+        lane.discard(4);
+        assert_eq!(lane.fallbacks(), 2);
+        assert_eq!(lane.in_flight(), 0);
+    }
+
+    #[test]
     fn lane_runs_concurrently_with_caller_work() {
-        let (trie, ws) = setup();
-        let mut lane = MaskLane::new(trie);
-        lane.submit_step0(ws);
-        assert!(lane.is_in_flight());
+        let trie = setup();
+        let t0 = trie.valid_roots()[0];
+        let mut lane = MaskLane::new(trie, 4);
+        lane.submit_sparse(0, (0..4).map(|_| vec![t0]).collect());
+        assert!(lane.has_job(0));
         // simulate device work on the caller thread
         let mut acc = 0u64;
         for i in 0..10_000u64 {
             acc = acc.wrapping_add(i * i);
         }
         assert!(acc > 0);
-        let _ws = lane.await_masks();
+        let _ws = lane.collect(0);
+        assert!(!lane.has_job(0));
     }
 
     #[test]
-    #[should_panic(expected = "nothing submitted")]
-    fn await_without_submit_panics() {
-        let (trie, _) = setup();
-        let mut lane = MaskLane::new(trie);
-        lane.await_masks();
+    #[should_panic(expected = "collect without submit")]
+    fn collect_without_submit_panics() {
+        let trie = setup();
+        let mut lane = MaskLane::new(trie, 2);
+        lane.collect(9);
+    }
+
+    #[test]
+    fn saturating_the_lane_never_deadlocks() {
+        // a whole staged batch pre-submits before any collect: far more
+        // jobs than the bounded channels hold — overflow must compute
+        // inline (backpressure), every key must still collect correctly
+        let trie = setup();
+        let roots = trie.valid_roots().to_vec();
+        let mut lane = MaskLane::new(trie.clone(), 2);
+        let jobs: Vec<(u64, Vec<Vec<u32>>)> = (0..64u64)
+            .map(|k| {
+                let t = roots[k as usize % roots.len()];
+                (k, (0..2).map(|_| vec![t]).collect())
+            })
+            .collect();
+        for (k, p) in &jobs {
+            lane.submit_sparse(*k, p.clone());
+        }
+        assert_eq!(lane.in_flight(), 64);
+        for (k, p) in &jobs {
+            let ws = lane.collect(*k);
+            let inline = inline_rows(&trie, 2, p);
+            for b in 0..2 {
+                assert_eq!(ws.row(b), inline.row(b), "key {k}");
+            }
+            lane.recycle(ws);
+        }
+        assert_eq!(lane.in_flight(), 0);
+        assert_eq!(lane.fallbacks(), 0, "a full lane is not a dead lane");
     }
 }

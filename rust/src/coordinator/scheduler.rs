@@ -327,6 +327,10 @@ impl Coordinator {
             }
         }
         let pool = engine_cfg.session_pool.clone();
+        // host/device overlap: mask generation rides the keyed lane
+        // (a no-op for the device-filtered xGR selector, which never
+        // materializes mask rows)
+        engine_cfg.overlap_lane = serving.features.overlap;
         let affinity = serving.session_cache
             && serving.session_affinity
             && engine_cfg.session_cache.is_some()
@@ -351,6 +355,7 @@ impl Coordinator {
             stream_queues.clone(),
             responses.clone(),
             counters.clone(),
+            serving.prefill_chunk_tokens,
         );
 
         let ctl: Channel<SchedCtl> = Channel::bounded(4);
@@ -371,6 +376,7 @@ impl Coordinator {
                         serving.max_batch_requests,
                         serving.batch_wait_us * 1_000,
                     )
+                    .with_inbox_cap(serving.batch_inbox_tokens)
                 })
                 .collect();
             let quota = Duration::from_micros(serving.batch_wait_us.max(100));
@@ -416,9 +422,16 @@ impl Coordinator {
                     macro_rules! ingest {
                         ($r:expr) => {{
                             let r = $r;
-                            Counters::inc(&counters.requests_in);
                             let bi = if affinity { route!(r.user_id) } else { 0 };
-                            batchers[bi].push(r);
+                            match batchers[bi].push(r) {
+                                Ok(()) => Counters::inc(&counters.requests_in),
+                                Err(_shed) => {
+                                    // queued-token cap hit: shed at
+                                    // admission instead of growing the
+                                    // backlog without bound
+                                    Counters::inc(&counters.batch_rejects);
+                                }
+                            }
                         }};
                     }
                     // dead-stream affinity repair: re-pin the dead
@@ -446,7 +459,8 @@ impl Coordinator {
                                 } else {
                                     route!(r.user_id)
                                 };
-                                batchers[ti].push(r);
+                                // already-admitted work must not be shed
+                                batchers[ti].requeue(r);
                             }
                         }};
                     }

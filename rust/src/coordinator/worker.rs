@@ -3,9 +3,15 @@
 //! Every worker drains its *own* batch queue — the scheduler routes
 //! batches to queues either by load (idle-stream balancing) or by
 //! session affinity, so a returning user's batch reaches the engine
-//! whose cache holds their prefix KV. Workers fold their engine's
-//! session-cache deltas into the shared counters after every batch, so
-//! coordinator-level observability sees cache behavior across streams.
+//! whose cache holds their prefix KV. With `prefill_chunk_tokens > 0`
+//! each batch runs through the iteration-level staged driver
+//! ([`super::staged`]): prompts stream in chunks interleaved with every
+//! in-flight request's decode steps, so one long prompt no longer
+//! head-of-line-blocks the batch (0 keeps the sequential
+//! request-at-a-time loop, the ablation baseline). Workers fold their
+//! engine's session-cache and overlap-lane deltas into the shared
+//! counters after every batch, so coordinator-level observability sees
+//! cache behavior across streams.
 
 use super::engine::{Engine, EngineConfig};
 use super::scheduler::ExecutorFactory;
@@ -23,6 +29,7 @@ pub struct Workers {
 
 impl Workers {
     /// Spawn one worker per queue in `queues` (queue i == stream i).
+    /// `prefill_chunk_tokens > 0` selects the staged batch driver.
     pub fn spawn(
         factory: ExecutorFactory,
         trie: Arc<ItemTrie>,
@@ -30,6 +37,7 @@ impl Workers {
         queues: Vec<Channel<Batch>>,
         responses: Channel<RecResponse>,
         counters: Arc<Counters>,
+        prefill_chunk_tokens: usize,
     ) -> Workers {
         let handles = (0..queues.len())
             .map(|stream| {
@@ -72,22 +80,51 @@ impl Workers {
                         };
                         let mut engine = Engine::new(exec, trie, engine_cfg);
                         let mut sess_prev = SessionSnapshot::default();
+                        let mut lane_prev = 0u64;
                         while let Some(batch) = queue.recv() {
                             Counters::inc(&counters.batches);
-                            for req in &batch.requests {
-                                match engine.process(req, stream) {
-                                    Ok(resp) => {
-                                        Counters::inc(&counters.requests_done);
-                                        if responses.send(resp).is_err() {
-                                            return;
+                            if prefill_chunk_tokens > 0 {
+                                // staged: the whole batch interleaves at
+                                // iteration granularity
+                                let results = super::staged::run_batch(
+                                    &mut engine,
+                                    &batch.requests,
+                                    stream,
+                                    prefill_chunk_tokens,
+                                    &counters,
+                                );
+                                for (id, res) in results {
+                                    match res {
+                                        Ok(resp) => {
+                                            Counters::inc(&counters.requests_done);
+                                            if responses.send(resp).is_err() {
+                                                return;
+                                            }
+                                        }
+                                        Err(e) => {
+                                            eprintln!(
+                                                "worker {stream}: request {id} failed: {e:#}"
+                                            );
+                                            Counters::inc(&counters.requests_rejected);
                                         }
                                     }
-                                    Err(e) => {
-                                        eprintln!(
-                                            "worker {stream}: request {} failed: {e:#}",
-                                            req.id
-                                        );
-                                        Counters::inc(&counters.requests_rejected);
+                                }
+                            } else {
+                                for req in &batch.requests {
+                                    match engine.process(req, stream) {
+                                        Ok(resp) => {
+                                            Counters::inc(&counters.requests_done);
+                                            if responses.send(resp).is_err() {
+                                                return;
+                                            }
+                                        }
+                                        Err(e) => {
+                                            eprintln!(
+                                                "worker {stream}: request {} failed: {e:#}",
+                                                req.id
+                                            );
+                                            Counters::inc(&counters.requests_rejected);
+                                        }
                                     }
                                 }
                             }
@@ -107,6 +144,11 @@ impl Workers {
                                 Counters::max(&counters.session_peak_dram_bytes, s.peak_dram_bytes);
                                 sess_prev = s;
                             }
+                            // overlap-lane degradation delta (0 while the
+                            // lane worker lives)
+                            let lf = engine.mask_lane_fallbacks();
+                            Counters::add(&counters.mask_lane_fallbacks, lf - lane_prev);
+                            lane_prev = lf;
                         }
                     })
                     .expect("spawn worker")
@@ -131,8 +173,7 @@ mod tests {
     use crate::runtime::MockExecutor;
     use crate::util::now_ns;
 
-    #[test]
-    fn workers_drain_batches_and_respond() {
+    fn drain_with_chunk(prefill_chunk_tokens: usize) -> Arc<Counters> {
         let mut spec = ModelSpec::onerec_tiny();
         spec.vocab = 64;
         spec.beam_width = 4;
@@ -153,6 +194,7 @@ mod tests {
             queues.clone(),
             responses.clone(),
             counters.clone(),
+            prefill_chunk_tokens,
         );
         for b in 0..4 {
             let reqs = (0..3)
@@ -180,5 +222,19 @@ mod tests {
         assert_eq!(got, 12);
         assert_eq!(Counters::get(&counters.requests_done), 12);
         assert_eq!(Counters::get(&counters.batches), 4);
+        counters
+    }
+
+    #[test]
+    fn workers_drain_batches_and_respond() {
+        let c = drain_with_chunk(0);
+        assert_eq!(Counters::get(&c.stage_ticks), 0, "sequential mode");
+    }
+
+    #[test]
+    fn staged_workers_drain_batches_and_respond() {
+        let c = drain_with_chunk(2);
+        assert!(Counters::get(&c.stage_ticks) > 0, "staged mode ticks");
+        assert!(Counters::get(&c.prefill_chunks) > 0);
     }
 }

@@ -17,7 +17,12 @@ struct Entry {
     prompt_len: usize,
     bw: usize,
     nd: usize,
+    /// RESIDENT bytes: the fixed unshared region plus the shared prefix
+    /// tokens written so far (== the full footprint once prefill ends)
     bytes: u64,
+    /// shared prefix tokens written so far (chunked prefill grows this;
+    /// a plain `alloc` starts fully written)
+    written: usize,
     steps_done: usize,
 }
 
@@ -52,6 +57,48 @@ impl SeparatedKv {
     pub fn request_bytes(&self, h: ReqHandle) -> u64 {
         self.entry(h).bytes
     }
+
+    /// Staged admission (chunked prefill): the fixed `BW × ND` unshared
+    /// region is accounted now; the shared prefix region is accounted as
+    /// chunks land via [`prefill_advance`](Self::prefill_advance), so a
+    /// half-prefilled request is charged only for the KV it has actually
+    /// written — what lets the staged driver keep more requests in
+    /// flight without overstating residency.
+    pub fn alloc_staged(&mut self, prompt_len: usize, bw: usize, nd: usize) -> ReqHandle {
+        let bytes = (bw * nd) as u64 * self.bytes_per_token;
+        let h = self.next;
+        self.next += 1;
+        self.entries.insert(
+            h,
+            Entry { prompt_len, bw, nd, bytes, written: 0, steps_done: 0 },
+        );
+        self.gauge.add(bytes);
+        ReqHandle(h)
+    }
+
+    /// Account `tokens` more shared prefix tokens written by a prefill
+    /// chunk (staged admission only; a plain `alloc` is born fully
+    /// written).
+    pub fn prefill_advance(&mut self, h: ReqHandle, tokens: usize) {
+        let bpt = self.bytes_per_token;
+        let e = self.entries.get_mut(&h.0).expect("unknown handle");
+        assert!(
+            e.written + tokens <= e.prompt_len,
+            "prefill chunk overruns the shared region ({} + {tokens} > {})",
+            e.written,
+            e.prompt_len
+        );
+        e.written += tokens;
+        let b = tokens as u64 * bpt;
+        e.bytes += b;
+        self.gauge.add(b);
+    }
+
+    /// Shared prefix tokens written so far (== prompt length once the
+    /// request reaches decode).
+    pub fn written_tokens(&self, h: ReqHandle) -> usize {
+        self.entry(h).written
+    }
 }
 
 impl KvManager for SeparatedKv {
@@ -62,7 +109,7 @@ impl KvManager for SeparatedKv {
         self.next += 1;
         self.entries.insert(
             h,
-            Entry { prompt_len, bw, nd, bytes, steps_done: 0 },
+            Entry { prompt_len, bw, nd, bytes, written: prompt_len, steps_done: 0 },
         );
         self.gauge.add(bytes);
         ReqHandle(h)
@@ -72,6 +119,10 @@ impl KvManager for SeparatedKv {
         let bpt = self.bytes_per_token;
         let e = self.entries.get_mut(&h.0).expect("unknown handle");
         assert!(step < e.nd, "step {step} out of range");
+        debug_assert_eq!(
+            e.written, e.prompt_len,
+            "decode before the shared region is fully written"
+        );
         assert_eq!(parents.len(), e.bw);
         e.steps_done = e.steps_done.max(step + 1);
         // in-place reorder of the rows written so far: plan only (the PJRT
@@ -187,5 +238,33 @@ mod tests {
         let mut m = SeparatedKv::new(BPT);
         let h = m.alloc(10, 2, 3);
         m.decode_step(h, 3, &[0, 0]);
+    }
+
+    #[test]
+    fn staged_alloc_accounts_the_shared_region_chunk_by_chunk() {
+        let mut m = SeparatedKv::new(BPT);
+        let h = m.alloc_staged(100, 8, 3);
+        assert_eq!(m.current_bytes(), (8 * 3) as u64 * BPT, "unshared only");
+        assert_eq!(m.written_tokens(h), 0);
+        m.prefill_advance(h, 40);
+        assert_eq!(m.current_bytes(), (40 + 8 * 3) as u64 * BPT);
+        m.prefill_advance(h, 60);
+        assert_eq!(m.written_tokens(h), 100);
+        // fully written: identical footprint to a plain alloc
+        let mut full = SeparatedKv::new(BPT);
+        let hf = full.alloc(100, 8, 3);
+        assert_eq!(m.current_bytes(), full.current_bytes());
+        assert_eq!(m.request_bytes(h), full.request_bytes(hf));
+        m.decode_step(h, 0, &[0; 8]);
+        m.free(h);
+        assert_eq!(m.current_bytes(), 0, "partial accounting frees cleanly");
+    }
+
+    #[test]
+    #[should_panic(expected = "overruns the shared region")]
+    fn staged_alloc_rejects_chunk_overrun() {
+        let mut m = SeparatedKv::new(BPT);
+        let h = m.alloc_staged(10, 2, 3);
+        m.prefill_advance(h, 11);
     }
 }

@@ -49,13 +49,15 @@ fn print_help() {
          serve    --artifacts DIR --model NAME --addr HOST:PORT [--engine xgr|vllm|xllm]\n\
          \u{20}        [--session-cache] [--replicas N] [--pool-bytes B] [--prefix-ttl-us T]\n\
          \u{20}        [--steal-threshold N] [--steal-max-batches N]\n\
+         \u{20}        [--prefill-chunk TOKENS] [--batch-inbox-tokens T]\n\
          replay   --requests N --rps R [--dataset amazon|jd] [--engine xgr|vllm|xllm]\n\
          \u{20}        [--artifacts DIR | --mock] [--streams N] [--seed S]\n\
          \u{20}        [--revisit P] [--session-cache] [--replicas N] [--pool-bytes B]\n\
          \u{20}        [--prefix-ttl-us T] [--steal-threshold N] [--steal-max-batches N]\n\
+         \u{20}        [--prefill-chunk TOKENS] [--batch-inbox-tokens T]\n\
          simulate --model SPEC --hw ascend|h800 --engine xgr,vllm,xllm,tree\n\
          \u{20}        --rps LIST [--bw N] [--requests N] [--dataset amazon|jd]\n\
-         \u{20}        [--revisit P] [--session-cache]\n\
+         \u{20}        [--revisit P] [--session-cache] [--prefill-chunk TOKENS]\n\
          info     [--model SPEC]"
     );
 }
@@ -121,6 +123,8 @@ fn cmd_serve(args: &Args) -> i32 {
     serving.cluster_replicas = args.usize_or("replicas", 1);
     serving.steal_threshold = args.usize_or("steal-threshold", 0);
     serving.steal_max_batches = args.usize_or("steal-max-batches", 4);
+    serving.prefill_chunk_tokens = args.usize_or("prefill-chunk", 0);
+    serving.batch_inbox_tokens = args.usize_or("batch-inbox-tokens", 0);
     if serving.session_cache {
         serving.pool_bytes = args.u64_or("pool-bytes", 0);
         serving.prefix_ttl_us = args.u64_or("prefix-ttl-us", 0);
@@ -204,6 +208,8 @@ fn cmd_replay(args: &Args) -> i32 {
     serving.cluster_replicas = args.usize_or("replicas", 1);
     serving.steal_threshold = args.usize_or("steal-threshold", 0);
     serving.steal_max_batches = args.usize_or("steal-max-batches", 4);
+    serving.prefill_chunk_tokens = args.usize_or("prefill-chunk", 0);
+    serving.batch_inbox_tokens = args.usize_or("batch-inbox-tokens", 0);
     if serving.session_cache {
         serving.pool_bytes = args.u64_or("pool-bytes", 0);
         serving.prefix_ttl_us = args.u64_or("prefix-ttl-us", 0);
@@ -309,6 +315,7 @@ fn cmd_simulate(args: &Args) -> i32 {
             serving.beam_width = bw;
             serving.top_k = bw;
             serving.session_cache = session_cache;
+            serving.prefill_chunk_tokens = args.usize_or("prefill-chunk", 0);
             let cfg = DesConfig {
                 hw: hw.clone(),
                 model: model.clone(),

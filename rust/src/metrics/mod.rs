@@ -5,7 +5,9 @@ pub mod hist;
 pub mod report;
 
 pub use hist::Histogram;
-pub use report::{affinity_spill_rate, session_hit_rate, Row, Table};
+pub use report::{
+    affinity_spill_rate, mean_stage_occupancy, session_hit_rate, Row, Table,
+};
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -63,6 +65,22 @@ pub struct Counters {
     /// session-cache tier occupancy peaks (folded with `Counters::max`)
     pub session_peak_hbm_bytes: AtomicU64,
     pub session_peak_dram_bytes: AtomicU64,
+    /// prompt chunks fed through the staged engine's chunked prefill
+    /// (zero in sequential mode, `prefill_chunk_tokens = 0`)
+    pub prefill_chunks: AtomicU64,
+    /// iteration-level stage ticks driven by the staged batch engine
+    /// (each tick = one mixed prefill-chunk + decode-step stage)
+    pub stage_ticks: AtomicU64,
+    /// Σ over stage ticks of in-flight requests at that tick; divided by
+    /// `stage_ticks` this is the mean stage occupancy — how full the
+    /// interleaved iterations actually ran
+    pub stage_occupancy_sum: AtomicU64,
+    /// mask jobs computed inline on the engine thread because the mask
+    /// lane's worker died (degraded, never poisoned)
+    pub mask_lane_fallbacks: AtomicU64,
+    /// requests shed at batcher admission by the queued-token
+    /// backpressure cap (`batch_inbox_tokens`)
+    pub batch_rejects: AtomicU64,
 }
 
 impl Counters {

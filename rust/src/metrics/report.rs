@@ -26,6 +26,17 @@ pub fn affinity_spill_rate(spills: u64, dispatched: u64) -> f64 {
     }
 }
 
+/// Mean in-flight requests per staged tick (`occupancy_sum / ticks`),
+/// 0 in sequential mode — shared by BackendStats / ReplayReport /
+/// DesResult so the metric cannot drift between surfaces.
+pub fn mean_stage_occupancy(occupancy_sum: u64, ticks: u64) -> f64 {
+    if ticks == 0 {
+        0.0
+    } else {
+        occupancy_sum as f64 / ticks as f64
+    }
+}
+
 /// One row: label + named numeric columns.
 #[derive(Clone, Debug)]
 pub struct Row {

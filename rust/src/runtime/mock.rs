@@ -14,6 +14,11 @@ use std::collections::HashMap;
 pub struct MockExecutor {
     spec: ModelSpec,
     slots: HashMap<u64, u64>, // slot -> seed
+    /// chunked prefills in progress: slot -> (rolling seed, fed, total).
+    /// The prompt seed is a left fold over tokens, so it accumulates
+    /// chunk by chunk with no buffering — any chunking is byte-identical
+    /// to a whole-prompt prefill.
+    pending: HashMap<u64, (u64, usize, usize)>,
     next: u64,
     /// optional artificial per-call latency (for pipeline tests)
     pub delay: Option<std::time::Duration>,
@@ -21,7 +26,13 @@ pub struct MockExecutor {
 
 impl MockExecutor {
     pub fn new(spec: ModelSpec) -> Self {
-        MockExecutor { spec, slots: HashMap::new(), next: 0, delay: None }
+        MockExecutor {
+            spec,
+            slots: HashMap::new(),
+            pending: HashMap::new(),
+            next: 0,
+            delay: None,
+        }
     }
 
     fn h(mut x: u64) -> u64 {
@@ -46,22 +57,64 @@ impl ModelExecutor for MockExecutor {
     }
 
     fn prefill(&mut self, tokens: &[u32]) -> Result<(SlotId, Vec<f32>)> {
-        if tokens.is_empty() || tokens.len() > self.spec.seq {
-            return Err(anyhow!("bad prompt length {}", tokens.len()));
+        // reexpressed on the chunked API: one chunk covering the prompt
+        let slot = self.prefill_open(tokens.len())?;
+        match self.prefill_chunk(slot, tokens, 0) {
+            Ok(Some(logits)) => Ok((slot, logits)),
+            Ok(None) => unreachable!("single chunk covers the prompt"),
+            Err(e) => {
+                self.release(slot);
+                Err(e)
+            }
         }
-        if let Some(d) = self.delay {
-            std::thread::sleep(d);
-        }
-        let mut seed = 0xcbf29ce484222325u64;
-        for &t in tokens {
-            seed = Self::h(seed ^ t as u64);
+    }
+
+    fn supports_chunked_prefill(&self) -> bool {
+        true
+    }
+
+    fn prefill_open(&mut self, total_len: usize) -> Result<SlotId> {
+        if total_len == 0 || total_len > self.spec.seq {
+            return Err(anyhow!("bad prompt length {total_len}"));
         }
         let id = self.next;
         self.next += 1;
-        self.slots.insert(id, seed);
+        self.pending.insert(id, (0xcbf29ce484222325u64, 0, total_len));
+        Ok(SlotId(id))
+    }
+
+    fn prefill_chunk(
+        &mut self,
+        slot: SlotId,
+        tokens: &[u32],
+        offset: usize,
+    ) -> Result<Option<Vec<f32>>> {
+        let (seed, fed, total) = self
+            .pending
+            .get_mut(&slot.0)
+            .ok_or_else(|| anyhow!("unknown prefill slot"))?;
+        if offset != *fed || offset + tokens.len() > *total || tokens.is_empty()
+        {
+            return Err(anyhow!(
+                "chunk [{offset}, {}) out of order (fed {fed}, total {total})",
+                offset + tokens.len()
+            ));
+        }
+        for &t in tokens {
+            *seed = Self::h(*seed ^ t as u64);
+        }
+        *fed += tokens.len();
+        if *fed < *total {
+            return Ok(None);
+        }
+        let (seed, _, _) = self.pending.remove(&slot.0).unwrap();
+        if let Some(d) = self.delay {
+            std::thread::sleep(d);
+        }
+        self.slots.insert(slot.0, seed);
         let mut logits = Vec::with_capacity(self.spec.vocab);
         Self::logits_row(seed, self.spec.vocab, &mut logits);
-        Ok((SlotId(id), logits))
+        Ok(Some(logits))
     }
 
     fn decode(
@@ -92,10 +145,13 @@ impl ModelExecutor for MockExecutor {
 
     fn release(&mut self, slot: SlotId) {
         self.slots.remove(&slot.0);
+        self.pending.remove(&slot.0);
     }
 
     fn live_slots(&self) -> usize {
-        self.slots.len()
+        // half-prefilled slots count: an abandoned chunked prefill that
+        // is never released is a leak like any other
+        self.slots.len() + self.pending.len()
     }
 }
 
@@ -147,5 +203,42 @@ mod tests {
         assert!(a.prefill(&[]).is_err());
         let (s, _) = a.prefill(&[1]).unwrap();
         assert!(a.decode(s, 0, &[1, 2], &[0, 0]).is_err());
+    }
+
+    #[test]
+    fn chunked_prefill_is_byte_identical_to_whole_prompt() {
+        let tokens: Vec<u32> = (0..17).map(|i| (i * 13) % 60).collect();
+        let mut whole = MockExecutor::new(spec());
+        let (sw, lw) = whole.prefill(&tokens).unwrap();
+        for split in [1usize, 3, 5, 16] {
+            let mut chunked = MockExecutor::new(spec());
+            let slot = chunked.prefill_open(tokens.len()).unwrap();
+            let mut off = 0;
+            let mut logits = None;
+            while off < tokens.len() {
+                let n = split.min(tokens.len() - off);
+                logits =
+                    chunked.prefill_chunk(slot, &tokens[off..off + n], off).unwrap();
+                off += n;
+            }
+            assert_eq!(logits.as_ref(), Some(&lw), "split {split}");
+            // decode from the chunked slot matches the whole-prompt slot
+            let dw = whole.decode(sw, 0, &[1, 2, 3, 4], &[0; 4]).unwrap();
+            let dc = chunked.decode(slot, 0, &[1, 2, 3, 4], &[0; 4]).unwrap();
+            assert_eq!(dw, dc, "split {split}");
+        }
+    }
+
+    #[test]
+    fn chunked_prefill_rejects_out_of_order_and_counts_pending() {
+        let mut a = MockExecutor::new(spec());
+        let s = a.prefill_open(10).unwrap();
+        assert_eq!(a.live_slots(), 1, "half-open prefill is live");
+        a.prefill_chunk(s, &[1, 2, 3], 0).unwrap();
+        assert!(a.prefill_chunk(s, &[4], 1).is_err(), "gap rejected");
+        assert!(a.prefill_chunk(s, &[4; 20], 3).is_err(), "overrun rejected");
+        a.release(s);
+        assert_eq!(a.live_slots(), 0, "released mid-prefill");
+        assert!(a.prefill_open(0).is_err());
     }
 }

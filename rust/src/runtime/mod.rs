@@ -20,6 +20,7 @@ pub use pjrt::PjrtEngine;
 
 use crate::config::ModelSpec;
 use crate::Result;
+use anyhow::anyhow;
 
 /// A per-request KV slot.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -40,10 +41,51 @@ pub trait ModelExecutor {
 
     fn prefill(&mut self, tokens: &[u32]) -> Result<(SlotId, Vec<f32>)>;
 
+    /// Whether this executor implements the chunked-prefill API
+    /// ([`prefill_open`](Self::prefill_open) /
+    /// [`prefill_chunk`](Self::prefill_chunk)). The staged batch driver
+    /// only chunks prompts on executors that answer true; everything
+    /// else prefills whole prompts (still interleaved at decode
+    /// granularity).
+    fn supports_chunked_prefill(&self) -> bool {
+        false
+    }
+
+    /// Begin a chunked prefill: admit a slot that expects exactly
+    /// `total_len` prompt tokens, delivered in order via
+    /// [`prefill_chunk`](Self::prefill_chunk). The staged engine uses
+    /// this to interleave long prompts with other requests' decode
+    /// iterations instead of monopolizing the executor for the whole
+    /// prompt.
+    fn prefill_open(&mut self, total_len: usize) -> Result<SlotId> {
+        let _ = total_len;
+        Err(anyhow!("chunked prefill unsupported by this executor"))
+    }
+
+    /// Feed `tokens` at `offset` into a slot opened by
+    /// [`prefill_open`](Self::prefill_open). Chunks must arrive in
+    /// order (`offset` == tokens fed so far). When the final chunk
+    /// lands (offset + tokens.len() == total_len) the prompt logits
+    /// (`[vocab]`) are returned; earlier chunks return `None`. The
+    /// chunk boundary must never change the result: feeding one chunk
+    /// covering the whole prompt is byte-identical to `prefill`.
+    fn prefill_chunk(
+        &mut self,
+        slot: SlotId,
+        tokens: &[u32],
+        offset: usize,
+    ) -> Result<Option<Vec<f32>>> {
+        let _ = (slot, tokens, offset);
+        Err(anyhow!("chunked prefill unsupported by this executor"))
+    }
+
     /// Prefill with the first `cached_prefix` tokens' KV already resident
-    /// (a session-cache hit). The default recomputes the full prompt —
+    /// (a session-cache hit). Reexpressed on top of the chunked API when
+    /// the executor supports it (one open + one chunk covering the whole
+    /// prompt — the chunked entry point is the single prefill surface);
+    /// otherwise the default recomputes the full prompt via `prefill` —
     /// numerically identical output, no savings — so executors without
-    /// cross-request KV residency (mock, CPU PJRT) stay correct; a
+    /// cross-request KV residency (mock, CPU PJRT) stay correct. A
     /// runtime that materializes per-user prefix KV overrides this to
     /// run only the suffix. `cached_prefix` is always < tokens.len().
     fn prefill_with_prefix(
@@ -51,7 +93,22 @@ pub trait ModelExecutor {
         tokens: &[u32],
         _cached_prefix: usize,
     ) -> Result<(SlotId, Vec<f32>)> {
-        self.prefill(tokens)
+        if self.supports_chunked_prefill() {
+            let slot = self.prefill_open(tokens.len())?;
+            match self.prefill_chunk(slot, tokens, 0) {
+                Ok(Some(logits)) => Ok((slot, logits)),
+                Ok(None) => {
+                    self.release(slot);
+                    Err(anyhow!("single-chunk prefill did not complete"))
+                }
+                Err(e) => {
+                    self.release(slot);
+                    Err(e)
+                }
+            }
+        } else {
+            self.prefill(tokens)
+        }
     }
 
     fn decode(

@@ -38,6 +38,13 @@ pub struct PjrtEngine {
     prefill_exe: xla::PjRtLoadedExecutable,
     decode_exe: xla::PjRtLoadedExecutable,
     slots: HashMap<u64, Slot>,
+    /// chunked prefills in progress: slot -> (buffered tokens, total).
+    /// The AOT prefill executable is compiled for the whole bucket, so
+    /// chunks buffer host-side and the forward runs once when the last
+    /// chunk lands — byte-identical to a whole-prompt prefill, while the
+    /// staged driver stays free to interleave other requests' decode
+    /// iterations between chunks.
+    pending: HashMap<u64, (Vec<u32>, usize)>,
     next_slot: u64,
     temp: Vec<f32>,
     pub counters: Counters,
@@ -70,6 +77,7 @@ impl PjrtEngine {
             prefill_exe,
             decode_exe,
             slots: HashMap::new(),
+            pending: HashMap::new(),
             next_slot: 0,
             temp: Vec::new(),
             counters: Counters::new(),
@@ -139,6 +147,57 @@ impl ModelExecutor for PjrtEngine {
             },
         );
         Ok((SlotId(id), logits))
+    }
+
+    fn supports_chunked_prefill(&self) -> bool {
+        true
+    }
+
+    fn prefill_open(&mut self, total_len: usize) -> Result<SlotId> {
+        if total_len == 0 || total_len > self.spec.seq {
+            return Err(anyhow!(
+                "prompt length {total_len} outside bucket (1..={})",
+                self.spec.seq
+            ));
+        }
+        let id = self.next_slot;
+        self.next_slot += 1;
+        self.pending.insert(id, (Vec::with_capacity(total_len), total_len));
+        Ok(SlotId(id))
+    }
+
+    fn prefill_chunk(
+        &mut self,
+        slot: SlotId,
+        tokens: &[u32],
+        offset: usize,
+    ) -> Result<Option<Vec<f32>>> {
+        let (buf, total) = self
+            .pending
+            .get_mut(&slot.0)
+            .ok_or_else(|| anyhow!("unknown prefill slot {slot:?}"))?;
+        if offset != buf.len() || offset + tokens.len() > *total || tokens.is_empty()
+        {
+            return Err(anyhow!(
+                "chunk [{offset}, {}) out of order (fed {}, total {total})",
+                offset + tokens.len(),
+                buf.len()
+            ));
+        }
+        buf.extend_from_slice(tokens);
+        if buf.len() < *total {
+            return Ok(None);
+        }
+        // final chunk: run the whole-bucket prefill executable once and
+        // re-home the resulting slot under the caller's id
+        let (buf, _) = self.pending.remove(&slot.0).unwrap();
+        let (tmp, logits) = self.prefill(&buf)?;
+        let s = self
+            .slots
+            .remove(&tmp.0)
+            .expect("prefill just inserted this slot");
+        self.slots.insert(slot.0, s);
+        Ok(Some(logits))
     }
 
     fn decode(
@@ -219,10 +278,11 @@ impl ModelExecutor for PjrtEngine {
 
     fn release(&mut self, slot: SlotId) {
         self.slots.remove(&slot.0);
+        self.pending.remove(&slot.0);
     }
 
     fn live_slots(&self) -> usize {
-        self.slots.len()
+        self.slots.len() + self.pending.len()
     }
 }
 

@@ -48,6 +48,14 @@ pub struct ReplayReport {
     pub batch_steals: u64,
     pub steal_tokens_saved: u64,
     pub steal_aborts: u64,
+    /// staged batch engine activity (zero in sequential mode)
+    pub prefill_chunks: u64,
+    pub stage_ticks: u64,
+    pub stage_occupancy_sum: u64,
+    /// overlap-lane inline degradations (zero while lane workers live)
+    pub mask_lane_fallbacks: u64,
+    /// requests shed by the batcher's queued-token cap
+    pub batch_rejects: u64,
     /// session hit rate per replica (one element for a single engine)
     pub per_replica_hit_rates: Vec<f64>,
 }
@@ -63,6 +71,11 @@ impl ReplayReport {
 
     pub fn session_hit_rate(&self) -> f64 {
         session_hit_rate(self.session_hits, self.session_misses)
+    }
+
+    /// Mean in-flight requests per staged tick (0 in sequential mode).
+    pub fn mean_stage_occupancy(&self) -> f64 {
+        crate::metrics::mean_stage_occupancy(self.stage_occupancy_sum, self.stage_ticks)
     }
 
     pub fn summary(&self) -> String {
@@ -110,6 +123,23 @@ impl ReplayReport {
                 self.batch_steals, self.steal_tokens_saved, self.steal_aborts
             ));
         }
+        if self.stage_ticks > 0 {
+            s.push_str(&format!(
+                " prefill_chunks={} stage_ticks={} stage_occupancy={:.2}",
+                self.prefill_chunks,
+                self.stage_ticks,
+                self.mean_stage_occupancy()
+            ));
+        }
+        if self.mask_lane_fallbacks > 0 {
+            s.push_str(&format!(
+                " mask_lane_fallbacks={}",
+                self.mask_lane_fallbacks
+            ));
+        }
+        if self.batch_rejects > 0 {
+            s.push_str(&format!(" batch_rejects={}", self.batch_rejects));
+        }
         if self.per_replica_hit_rates.len() > 1 {
             let rates: Vec<String> = self
                 .per_replica_hit_rates
@@ -139,6 +169,11 @@ impl ReplayReport {
         self.batch_steals = st.batch_steals;
         self.steal_tokens_saved = st.steal_tokens_saved;
         self.steal_aborts = st.steal_aborts;
+        self.prefill_chunks = st.prefill_chunks;
+        self.stage_ticks = st.stage_ticks;
+        self.stage_occupancy_sum = st.stage_occupancy_sum;
+        self.mask_lane_fallbacks = st.mask_lane_fallbacks;
+        self.batch_rejects = st.batch_rejects;
         self.per_replica_hit_rates = st.per_replica_hit_rates.clone();
     }
 }
@@ -216,8 +251,12 @@ pub fn replay_trace<B: ServingBackend>(
         }
         drain(coord, &mut latency, &mut queue_lat, &mut service_lat, &mut completed, &mut valid_items, &mut total_items, false);
     }
-    // wait for the tail
-    while completed < submitted {
+    // wait for the tail. Requests shed by the batcher's queued-token cap
+    // (`batch_inbox_tokens`) are accepted at submit but never produce a
+    // response — subtract the live `batch_rejects` count from the
+    // outstanding tally instead of burning the full timeout waiting for
+    // replies that cannot come.
+    while completed + coord.backend_stats().batch_rejects < submitted {
         if !drain(coord, &mut latency, &mut queue_lat, &mut service_lat, &mut completed, &mut valid_items, &mut total_items, true) {
             break; // timed out — report what we have
         }
@@ -248,6 +287,11 @@ pub fn replay_trace<B: ServingBackend>(
         batch_steals: 0,
         steal_tokens_saved: 0,
         steal_aborts: 0,
+        prefill_chunks: 0,
+        stage_ticks: 0,
+        stage_occupancy_sum: 0,
+        mask_lane_fallbacks: 0,
+        batch_rejects: 0,
         per_replica_hit_rates: Vec::new(),
     };
     report.apply_stats(&coord.backend_stats());
@@ -338,6 +382,48 @@ mod tests {
         );
         assert!(report.session_hits > 0, "revisit trace must hit somewhere");
         cluster.shutdown();
+    }
+
+    #[test]
+    fn staged_replay_matches_sequential_and_reports_stage_counters() {
+        let mut spec = ModelSpec::onerec_tiny();
+        spec.vocab = 64;
+        spec.beam_width = 4;
+        spec.seq = 48;
+        let catalog = Catalog::generate(64, 400, 3);
+        let trie = Arc::new(ItemTrie::build(&catalog));
+        let run = |chunk: usize| {
+            let mut serving = ServingConfig::default();
+            serving.num_streams = 2;
+            serving.batch_wait_us = 200;
+            serving.prefill_chunk_tokens = chunk;
+            let factory: crate::coordinator::ExecutorFactory = {
+                let spec = spec.clone();
+                Arc::new(move || Ok(Box::new(MockExecutor::new(spec.clone())) as _))
+            };
+            let coord = Coordinator::start(
+                &serving,
+                EngineConfig::default(),
+                trie.clone(),
+                factory,
+            )
+            .unwrap();
+            let trace =
+                AmazonLike::for_seq_bucket(48).generate(&catalog, 30, 400.0, 7);
+            let report = replay_trace(&coord, &trace, 1.0);
+            coord.shutdown();
+            report
+        };
+        let seq = run(0);
+        let staged = run(8);
+        assert_eq!(staged.completed, 30);
+        assert_eq!(staged.completed, seq.completed);
+        assert_eq!(staged.valid_items, staged.total_items);
+        assert_eq!(seq.stage_ticks, 0, "sequential mode drives no ticks");
+        assert!(staged.stage_ticks > 0, "staged mode must tick");
+        assert!(staged.prefill_chunks > 0, "prompts must stream in chunks");
+        assert!(staged.mean_stage_occupancy() >= 1.0);
+        assert!(staged.summary().contains("stage_occupancy"));
     }
 
     #[test]

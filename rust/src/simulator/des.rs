@@ -158,6 +158,12 @@ pub struct DesResult {
     pub host_busy_s: f64,
     pub device_busy_s: f64,
     pub batches: u64,
+    /// staged engine: prompt chunks fed (0 with `prefill_chunk_tokens = 0`)
+    pub prefill_chunks: u64,
+    /// staged engine: iteration-level stage ticks driven
+    pub stage_ticks: u64,
+    /// staged engine: Σ in-flight requests over those ticks
+    pub stage_occupancy_sum: u64,
     // ---- session prefix cache (zero when disabled) ----
     pub session_hits: u64,
     pub session_misses: u64,
@@ -220,6 +226,12 @@ impl DesResult {
     pub fn session_hit_rate(&self) -> f64 {
         crate::metrics::session_hit_rate(self.session_hits, self.session_misses)
     }
+
+    /// Mean in-flight requests per staged tick — how full the
+    /// interleaved iterations ran (0 in sequential mode).
+    pub fn mean_stage_occupancy(&self) -> f64 {
+        crate::metrics::mean_stage_occupancy(self.stage_occupancy_sum, self.stage_ticks)
+    }
 }
 
 #[derive(PartialEq)]
@@ -251,6 +263,12 @@ impl Ord for Ev {
 struct BatchTiming {
     host_s: f64,
     device_s: f64,
+    /// prompt chunks the staged engine fed (0 in sequential mode)
+    prefill_chunks: u64,
+    /// iteration-level stage ticks (0 in sequential mode)
+    stage_ticks: u64,
+    /// Σ in-flight requests over those ticks (mean occupancy numerator)
+    occupancy_sum: u64,
 }
 
 /// `lens` are full prompt lengths (decode attends to the whole context);
@@ -291,16 +309,21 @@ fn batch_timing(
     };
 
     let mut host_s = host.sched_per_req_s * b as f64;
-    let mut device_s = 0.0;
+    // prefill and decode device time are tracked separately: the staged
+    // engine interleaves them (decode iterations of already-prefilled
+    // requests hide behind later prompt chunks), so the combination rule
+    // depends on the mode
+    let mut prefill_dev = 0.0;
+    let mut decode_dev = 0.0;
 
     // ---- prefill phase (uncached suffixes only) ----
     // DRAM-tier session hits stream their prefix KV over the H2D link
     // before the suffix prefill can run against it
-    device_s += swap_in_bytes as f64 / hw.h2d_bps;
+    prefill_dev += swap_in_bytes as f64 / hw.h2d_bps;
     // suffix tokens still attend to the full context, so the quadratic
     // term keeps the full mean length
-    device_s += prefill_cost(hw, m, prefill_tokens, mean_len, cgs).time_s;
-    device_s += launch_per_phase;
+    prefill_dev += prefill_cost(hw, m, prefill_tokens, mean_len, cgs).time_s;
+    prefill_dev += launch_per_phase;
     host_s += host_launch_per_phase;
 
     // ---- 3 decode phases ----
@@ -330,7 +353,7 @@ fn batch_timing(
             dev_phase += d2h + h2d_tokens;
             host_phase += sort + maskc;
             host_s += host_phase;
-            device_s += dev_phase + (sort + maskc); // device idles during host work
+            decode_dev += dev_phase + (sort + maskc); // device idles during host work
         } else {
             // xGR: device-resident filtering; host does sparse mask updates
             // + xbeam select + in-place reorder planning
@@ -365,11 +388,45 @@ fn batch_timing(
             } else {
                 dev_phase += maskc + mask_h2d + sel + reorder;
             }
-            device_s += dev_phase;
+            decode_dev += dev_phase;
         }
     }
 
-    BatchTiming { host_s, device_s }
+    // ---- combine the phases ----
+    // Sequential: prefill then decode, strictly serialized. Staged
+    // (xGR + `prefill_chunk_tokens > 0`): the batch runs as mixed
+    // iteration-level ticks — decode iterations of already-prefilled
+    // requests hide behind the remaining prompt chunks. Hiding is
+    // bounded by chunk granularity (finer chunks interleave more:
+    // 1 - 1/n_chunks) and by how much decode work belongs to OTHER
+    // requests ((b-1)/b — a lone request has nothing to interleave
+    // with); each extra chunk pays one more launch, so the chunk-size
+    // sweep in fig18 shows a real overhead/overlap tradeoff.
+    let chunk = cfg.serving.prefill_chunk_tokens;
+    let staged = chunk > 0 && !host_beam;
+    if staged {
+        let n_chunks = prefill_tokens.div_ceil(chunk).max(1) as u64;
+        let chunk_overhead = (n_chunks - 1) as f64 * launch_per_phase;
+        let hidden = prefill_dev.min(decode_dev)
+            * (1.0 - 1.0 / n_chunks as f64)
+            * ((b - 1) as f64 / b as f64);
+        let ticks = n_chunks + m.num_decode as u64;
+        BatchTiming {
+            host_s,
+            device_s: prefill_dev + decode_dev - hidden + chunk_overhead,
+            prefill_chunks: n_chunks,
+            stage_ticks: ticks,
+            occupancy_sum: b as u64 * ticks,
+        }
+    } else {
+        BatchTiming {
+            host_s,
+            device_s: prefill_dev + decode_dev,
+            prefill_chunks: 0,
+            stage_ticks: 0,
+            occupancy_sum: 0,
+        }
+    }
 }
 
 /// Run the simulation of `trace` under `cfg`.
@@ -479,6 +536,9 @@ pub fn simulate(trace: &Trace, cfg: &DesConfig) -> DesResult {
     let mut host_busy = 0.0f64;
     let mut device_busy = 0.0f64;
     let mut batches = 0u64;
+    let mut prefill_chunks = 0u64;
+    let mut stage_ticks = 0u64;
+    let mut stage_occupancy_sum = 0u64;
     let mut in_flight = 0usize;
     // per-replica concurrency: streams split their OWN replica's CGs
     let mut in_flight_rep = vec![0usize; replicas];
@@ -690,6 +750,9 @@ pub fn simulate(trace: &Trace, cfg: &DesConfig) -> DesResult {
                         device_busy += timing.device_s;
                         stream_free[si] = done;
                         batches += 1;
+                        prefill_chunks += timing.prefill_chunks;
+                        stage_ticks += timing.stage_ticks;
+                        stage_occupancy_sum += timing.occupancy_sum;
                         in_flight += 1;
                         in_flight_rep[rep] += 1;
                         let act = (total_tokens * cfg.model.d_model * 8) as u64;
@@ -843,6 +906,9 @@ pub fn simulate(trace: &Trace, cfg: &DesConfig) -> DesResult {
                 device_busy += timing.device_s;
                 stream_free[si] = done;
                 batches += 1;
+                prefill_chunks += timing.prefill_chunks;
+                stage_ticks += timing.stage_ticks;
+                stage_occupancy_sum += timing.occupancy_sum;
                 in_flight += 1;
                 in_flight_rep[rep] += 1;
                 let act = (total_tokens * cfg.model.d_model * 8) as u64;
@@ -1013,6 +1079,9 @@ pub fn simulate(trace: &Trace, cfg: &DesConfig) -> DesResult {
         host_busy_s: host_busy,
         device_busy_s: device_busy,
         batches,
+        prefill_chunks,
+        stage_ticks,
+        stage_occupancy_sum,
         session_hits: session.iter().map(|s| s.stats.hits).sum(),
         session_misses: session.iter().map(|s| s.stats.misses).sum(),
         session_swap_ins: session.iter().map(|s| s.stats.swap_ins).sum(),
@@ -1432,6 +1501,59 @@ mod tests {
             a.p99_ms(),
             one.p99_ms()
         );
+    }
+
+    #[test]
+    fn staged_interleaving_relieves_mixed_batches() {
+        // long-prompt traffic under load: staged ticks must not worsen —
+        // and with multi-request batches should improve — latency, with
+        // identical completion counts and nonzero staged telemetry
+        let t = trace(400, 300.0);
+        let seq = simulate(&t, &cfg(EngineKind::Xgr, 128));
+        let mut c_staged = cfg(EngineKind::Xgr, 128);
+        c_staged.serving.prefill_chunk_tokens = 128;
+        let staged = simulate(&t, &c_staged);
+        assert_eq!(staged.completed, seq.completed);
+        assert_eq!(staged.rejected, 0);
+        assert_eq!(seq.stage_ticks, 0, "sequential mode drives no ticks");
+        assert!(staged.stage_ticks > 0);
+        assert!(staged.prefill_chunks > 0);
+        assert!(staged.mean_stage_occupancy() >= 1.0);
+        assert!(
+            staged.p99_ms() <= seq.p99_ms() * 1.05,
+            "staged p99 {} vs sequential {}",
+            staged.p99_ms(),
+            seq.p99_ms()
+        );
+        assert!(
+            staged.mean_ms() <= seq.mean_ms() * 1.05,
+            "staged mean {} vs sequential {}",
+            staged.mean_ms(),
+            seq.mean_ms()
+        );
+    }
+
+    #[test]
+    fn staged_model_is_deterministic_and_chunk_size_trades_overhead() {
+        let t = trace(200, 200.0);
+        let run = |chunk: usize| {
+            let mut c = cfg(EngineKind::Xgr, 128);
+            c.serving.prefill_chunk_tokens = chunk;
+            simulate(&t, &c)
+        };
+        let a = run(64);
+        let b = run(64);
+        assert_eq!(a.latency.p99(), b.latency.p99());
+        assert_eq!(a.stage_ticks, b.stage_ticks);
+        // finer chunks = more chunks fed (the overhead axis of the sweep)
+        let fine = run(16);
+        let coarse = run(512);
+        assert!(fine.prefill_chunks > coarse.prefill_chunks);
+        // baselines never stage, whatever the knob says
+        let mut vc = cfg(EngineKind::VllmLike, 128);
+        vc.serving.prefill_chunk_tokens = 128;
+        let v = simulate(&t, &vc);
+        assert_eq!(v.stage_ticks, 0);
     }
 
     #[test]

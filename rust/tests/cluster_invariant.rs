@@ -13,9 +13,11 @@
 //! actually fire (`batch_steals > 0`) with the pool handoff covering
 //! the migrated prompts (`steal_tokens_saved > 0`).
 //!
-//! The replica count honors `XGR_CLUSTER_REPLICAS` and the steal knob
-//! honors `XGR_STEAL_THRESHOLD` (CI runs the suite with both set so the
-//! multi-replica and steal paths stay green).
+//! The replica count honors `XGR_CLUSTER_REPLICAS`, the steal knob
+//! honors `XGR_STEAL_THRESHOLD`, and the staged engine honors
+//! `XGR_PREFILL_CHUNK` (CI runs the suite with each set so the
+//! multi-replica, steal and staged paths stay green — and byte-identical
+//! to each other).
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -88,6 +90,16 @@ fn env_steal_threshold() -> usize {
         .unwrap_or(0)
 }
 
+/// Staged prefill chunk forced by CI (0 = sequential engine). Every run
+/// in this suite shares the value, so the byte-identical comparisons
+/// also prove the STAGED engine re-routes without changing results.
+fn env_prefill_chunk() -> usize {
+    std::env::var("XGR_PREFILL_CHUNK")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0)
+}
+
 fn serving(replicas: usize, steal_threshold: usize) -> ServingConfig {
     let mut s = ServingConfig::default();
     s.num_streams = 2;
@@ -101,6 +113,7 @@ fn serving(replicas: usize, steal_threshold: usize) -> ServingConfig {
     s.prefix_ttl_us = TTL_US;
     s.steal_threshold = steal_threshold;
     s.steal_max_batches = 2;
+    s.prefill_chunk_tokens = env_prefill_chunk();
     s
 }
 

@@ -1,0 +1,294 @@
+//! The staged batch engine's load-bearing invariant: iteration-level
+//! interleaving (chunked prefill + mixed decode ticks) produces
+//! **byte-identical** recommendations to the sequential
+//! request-at-a-time loop. Staging may change latency and ordering —
+//! never results.
+//!
+//! Proven as a property over random prompt lengths, chunk sizes, batch
+//! partitions, session-cache states and both mock engine paths
+//! (device-filtered xBeam and host-masked naive, with and without the
+//! overlap lane), then re-proven at coordinator level where the staged
+//! driver runs inside real worker threads.
+//!
+//! `XGR_PREFILL_CHUNK` forces the coordinator-level chunk size (CI's
+//! `staged` job sets 128); 0/unset falls back to a small chunk so the
+//! staged path is always exercised here.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+use xgr::config::{ModelSpec, ServingConfig};
+use xgr::coordinator::{
+    staged, Coordinator, Engine, EngineConfig, ExecutorFactory, RecRequest,
+    SelectorKind, ServingBackend,
+};
+use xgr::itemspace::{Catalog, ItemTrie};
+use xgr::metrics::Counters;
+use xgr::runtime::{MockExecutor, ModelExecutor, SlotId};
+use xgr::util::now_ns;
+use xgr::util::prop;
+use xgr::util::rng::Pcg;
+use xgr::{prop_assert, prop_assert_eq};
+
+fn spec() -> ModelSpec {
+    let mut s = ModelSpec::onerec_tiny();
+    s.vocab = 64;
+    s.beam_width = 8;
+    s.seq = 96;
+    s
+}
+
+fn env_prefill_chunk() -> usize {
+    std::env::var("XGR_PREFILL_CHUNK")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&c| c > 0)
+        .unwrap_or(24)
+}
+
+#[test]
+fn staged_is_byte_identical_to_sequential_property() {
+    let catalog = Catalog::generate(64, 600, 5);
+    let trie = Arc::new(ItemTrie::build(&catalog));
+    prop::check("staged == sequential", 24, |rng: &mut Pcg| {
+        let selector = if rng.below(2) == 0 {
+            SelectorKind::XBeam
+        } else {
+            SelectorKind::Naive
+        };
+        let use_cache = rng.below(2) == 0;
+        let overlap = rng.below(2) == 0;
+        let session = |on: bool| {
+            on.then(|| xgr::sessioncache::SessionCacheConfig {
+                hbm_bytes: 256 << 10,
+                dram_bytes: 512 << 10,
+            })
+        };
+        let mut seq = Engine::new(
+            Box::new(MockExecutor::new(spec())),
+            trie.clone(),
+            EngineConfig {
+                selector,
+                session_cache: session(use_cache),
+                ..Default::default()
+            },
+        );
+        let mut stg = Engine::new(
+            Box::new(MockExecutor::new(spec())),
+            trie.clone(),
+            EngineConfig {
+                selector,
+                session_cache: session(use_cache),
+                overlap_lane: overlap,
+                ..Default::default()
+            },
+        );
+        // random mix: multi-turn users (cache hit states) + one-offs,
+        // prompt lengths spanning the bucket
+        let n = 4 + rng.below(8) as usize;
+        let users = 1 + rng.below(4);
+        let reqs: Vec<RecRequest> = (0..n)
+            .map(|i| {
+                let len = 1 + rng.below(90) as usize;
+                RecRequest {
+                    id: i as u64,
+                    tokens: (0..len).map(|_| rng.below(60) as u32).collect(),
+                    arrival_ns: now_ns(),
+                    user_id: rng.below(users),
+                }
+            })
+            .collect();
+        let mut want: HashMap<u64, Vec<([u32; 3], f32)>> = HashMap::new();
+        for r in &reqs {
+            let out = seq
+                .run_request(r)
+                .map_err(|e| format!("sequential failed: {e:#}"))?;
+            want.insert(r.id, out.items);
+        }
+        // staged: random batch partition, random chunk size
+        let chunk = 1 + rng.below(33) as usize;
+        let counters = Counters::new();
+        let mut i = 0;
+        while i < reqs.len() {
+            let take = (1 + rng.below(4) as usize).min(reqs.len() - i);
+            let results =
+                staged::run_batch(&mut stg, &reqs[i..i + take], 0, chunk, &counters);
+            prop_assert_eq!(results.len(), take);
+            for (id, res) in results {
+                let items = res
+                    .map_err(|e| format!("staged request {id} failed: {e:#}"))?
+                    .items;
+                prop_assert!(
+                    want[&id] == items,
+                    "request {id} diverged (selector {selector:?}, chunk {chunk}, \
+                     cache {use_cache}, lane {overlap})"
+                );
+            }
+            i += take;
+        }
+        prop_assert!(
+            Counters::get(&counters.stage_ticks) > 0,
+            "staged mode must tick"
+        );
+        prop_assert!(
+            Counters::get(&counters.prefill_chunks) > 0,
+            "prompts must stream in chunks"
+        );
+        Ok(())
+    });
+}
+
+fn run_coordinator(chunk: usize) -> (HashMap<u64, Vec<[u32; 3]>>, xgr::coordinator::BackendStats) {
+    let spec = spec();
+    let catalog = Catalog::generate(64, 600, 5);
+    let trie = Arc::new(ItemTrie::build(&catalog));
+    let mut serving = ServingConfig::default();
+    serving.num_streams = 2;
+    serving.batch_wait_us = 200;
+    serving.max_batch_requests = 4;
+    serving.session_cache = true;
+    serving.prefill_chunk_tokens = chunk;
+    let factory: ExecutorFactory = {
+        let spec = spec.clone();
+        Arc::new(move || Ok(Box::new(MockExecutor::new(spec.clone())) as _))
+    };
+    let coord =
+        Coordinator::start(&serving, EngineConfig::default(), trie, factory)
+            .unwrap();
+    let mut rng = Pcg::new(17);
+    let n = 40u64;
+    for id in 0..n {
+        let len = 1 + rng.below(90) as usize;
+        coord
+            .submit_blocking(RecRequest {
+                id,
+                tokens: (0..len).map(|_| rng.below(60) as u32).collect(),
+                arrival_ns: now_ns(),
+                user_id: id % 5,
+            })
+            .unwrap();
+    }
+    let mut items = HashMap::new();
+    for _ in 0..n {
+        let r = coord
+            .recv_timeout(Duration::from_secs(20))
+            .expect("response timed out");
+        assert!(!r.items.is_empty(), "request {} got nothing", r.id);
+        let ids: Vec<[u32; 3]> = r.items.iter().map(|(it, _)| *it).collect();
+        assert!(items.insert(r.id, ids).is_none(), "duplicate {}", r.id);
+    }
+    let stats = coord.backend_stats();
+    coord.shutdown();
+    (items, stats)
+}
+
+#[test]
+fn staged_coordinator_matches_sequential_with_nonzero_counters() {
+    let (seq_items, seq_stats) = run_coordinator(0);
+    let (stg_items, stg_stats) = run_coordinator(env_prefill_chunk());
+    assert_eq!(seq_items.len(), stg_items.len());
+    for (id, items) in &seq_items {
+        assert_eq!(
+            stg_items.get(id),
+            Some(items),
+            "request {id}: staged coordinator changed the recommendations"
+        );
+    }
+    assert_eq!(seq_stats.stage_ticks, 0, "chunk 0 = sequential engine");
+    assert_eq!(seq_stats.prefill_chunks, 0);
+    assert!(stg_stats.stage_ticks > 0, "staged engine must tick");
+    assert!(stg_stats.prefill_chunks > 0, "prompts must stream in chunks");
+    assert!(stg_stats.mean_stage_occupancy() >= 1.0);
+    assert_eq!(stg_stats.mask_lane_fallbacks, 0, "lane workers stayed alive");
+}
+
+/// Delegates to the mock but pays a fixed prefill delay so the batcher
+/// backlog deterministically outgrows the admission cap.
+struct SlowExecutor {
+    inner: MockExecutor,
+    delay: Duration,
+}
+
+impl ModelExecutor for SlowExecutor {
+    fn spec(&self) -> &ModelSpec {
+        self.inner.spec()
+    }
+
+    fn prefill(&mut self, tokens: &[u32]) -> xgr::Result<(SlotId, Vec<f32>)> {
+        std::thread::sleep(self.delay);
+        self.inner.prefill(tokens)
+    }
+
+    fn decode(
+        &mut self,
+        slot: SlotId,
+        step: usize,
+        beam_tokens: &[u32],
+        parents: &[usize],
+    ) -> xgr::Result<Vec<f32>> {
+        self.inner.decode(slot, step, beam_tokens, parents)
+    }
+
+    fn release(&mut self, slot: SlotId) {
+        self.inner.release(slot)
+    }
+
+    fn live_slots(&self) -> usize {
+        self.inner.live_slots()
+    }
+}
+
+#[test]
+fn batcher_inbox_cap_sheds_bursts_and_counts_them() {
+    let spec = spec();
+    let catalog = Catalog::generate(64, 600, 5);
+    let trie = Arc::new(ItemTrie::build(&catalog));
+    let mut serving = ServingConfig::default();
+    serving.num_streams = 1;
+    serving.batch_wait_us = 200;
+    serving.max_batch_requests = 2;
+    serving.max_batch_tokens = 16;
+    serving.batch_inbox_tokens = 16; // ~5 three-token requests of backlog
+    let factory: ExecutorFactory = {
+        let spec = spec.clone();
+        Arc::new(move || {
+            Ok(Box::new(SlowExecutor {
+                inner: MockExecutor::new(spec.clone()),
+                delay: Duration::from_millis(5),
+            }) as _)
+        })
+    };
+    let coord =
+        Coordinator::start(&serving, EngineConfig::default(), trie, factory)
+            .unwrap();
+    let n = 60u64;
+    for id in 0..n {
+        coord
+            .submit_blocking(RecRequest {
+                id,
+                tokens: vec![1, 2, (id % 60) as u32],
+                arrival_ns: now_ns(),
+                user_id: id,
+            })
+            .unwrap();
+    }
+    let mut got = 0u64;
+    while coord.recv_timeout(Duration::from_secs(5)).is_some() {
+        got += 1;
+    }
+    let stats = coord.backend_stats();
+    let counters = coord.counters.clone();
+    coord.shutdown();
+    assert!(stats.batch_rejects > 0, "the burst must overflow the cap");
+    assert!(got > 0, "admitted work still completes");
+    assert_eq!(
+        got + stats.batch_rejects,
+        n,
+        "every request either completes or is counted as shed"
+    );
+    assert_eq!(
+        Counters::get(&counters.requests_in),
+        got,
+        "requests_in counts only admitted work"
+    );
+}
