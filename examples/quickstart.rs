@@ -77,12 +77,19 @@ fn main() -> xgr::Result<()> {
     // queued-token backlog per batcher (0 = unlimited); overflow is
     // shed at admission and counted in `batch_rejects`.
     serving.batch_inbox_tokens = 64 * 1024;
+    // Observability: sample every request into the phase tracer (0.0 —
+    // the default — disables it; the recording path is per-thread ring
+    // buffers, so leaving a small fraction on in production is cheap).
+    // `XGR_TRACE_SAMPLE=0.01` overrides this knob without a rebuild.
+    serving.trace_sample = 1.0;
     let coord =
         Coordinator::start(&serving, EngineConfig::default(), trie.clone(), factory)?;
 
     // 4. submit a few "user history" prompts built from real catalog items
     let mut rng = xgr::util::rng::Pcg::new(42);
-    for id in 0..5u64 {
+    // ids start at 1: the tracer reserves request id 0 for the staged
+    // engine's per-stream tick track
+    for id in 1..=5u64 {
         let n_items = 4 + id as usize;
         let mut tokens = Vec::new();
         for _ in 0..n_items {
@@ -126,6 +133,41 @@ fn main() -> xgr::Result<()> {
             stats.stage_ticks,
             stats.mean_stage_occupancy()
         );
+    }
+
+    // 5b. observability: with `trace_sample` on, every phase of every
+    // sampled request was recorded into per-thread ring buffers — queue
+    // wait, prefill (whole-prompt or per staged chunk), mask-lane work,
+    // and each decode iteration's forward / mask / sort slices, plus a
+    // per-stream tick track from the staged driver. Three ways out:
+    //   * drain raw spans here (`tracer().take()`) — a waterfall per
+    //     request, non-overlapping within one request;
+    //   * `ReplayReport` (the replay harness) folds them into per-phase
+    //     p50/p99 histogram lines in `summary()` and exports Chrome
+    //     `trace_event` JSON via `write_chrome_trace` — open it in
+    //     chrome://tracing or Perfetto;
+    //   * the TCP front-end answers a `STATS` line with the counter side
+    //     as Prometheus plaintext (see the `xgr::metrics` module doc for
+    //     the full counters reference).
+    // Dropped spans (a ring filled between drains) are counted, never
+    // blocked on: `trace_drops` in reports, `xgr_trace_drops` in STATS.
+    let spans = xgr::metrics::trace::tracer().take();
+    let mut wf: Vec<_> =
+        spans.iter().filter(|s| s.req_id == 1).collect();
+    wf.sort_by_key(|s| s.start_ns);
+    println!("tracer: {} spans captured; request 1 waterfall:", spans.len());
+    if let Some(t0) = wf.first().map(|s| s.start_ns) {
+        for s in wf.iter().take(8) {
+            println!(
+                "    {:>7} @ +{:<9} dur {}",
+                s.phase.name(),
+                fmt_ns(s.start_ns - t0),
+                fmt_ns(s.dur_ns)
+            );
+        }
+        if wf.len() > 8 {
+            println!("    … {} more", wf.len() - 8);
+        }
     }
     coord.shutdown();
 
@@ -203,6 +245,17 @@ fn main() -> xgr::Result<()> {
         fmt_ns(r.latency_ns),
         stats.pool_hits,
         stats.prefill_tokens_saved
+    );
+    // the same stats render as Prometheus plaintext — what the TCP
+    // front-end's STATS verb serves; cluster backends label each
+    // replica's counter shard ({replica="0"}, {replica="1"}, …)
+    let prom = stats.to_prometheus();
+    println!(
+        "cluster: STATS would serve {} Prometheus lines, e.g. `{}`",
+        prom.lines().count(),
+        prom.lines()
+            .find(|l| l.contains("replica"))
+            .unwrap_or_default()
     );
     cluster.shutdown();
     println!("quickstart OK");

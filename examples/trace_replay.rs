@@ -3,6 +3,11 @@
 //! the same coordinator, printing one table row each.
 //!
 //!     cargo run --release --example trace_replay [-- --requests 80 --rps 40 --mock]
+//!
+//! Observability: `--trace-sample 1.0` turns the phase tracer on
+//! (sampled per request; the summary then includes per-phase p50/p99),
+//! and `--trace-out xgr.trace.json` exports the xGR run's spans as a
+//! Chrome `trace_event` file for `chrome://tracing` / Perfetto.
 
 use std::sync::Arc;
 use xgr::baselines;
@@ -20,6 +25,8 @@ fn main() -> xgr::Result<()> {
     let artifacts = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
     let n = args.usize_or("requests", 80);
     let rps = args.f64_or("rps", 40.0);
+    let trace_sample = args.f64_or("trace-sample", 0.0);
+    let trace_out = args.str_or("trace-out", "");
     let use_mock = args.flag("mock")
         || Manifest::load(&artifacts, "onerec-tiny").is_err();
 
@@ -53,7 +60,8 @@ fn main() -> xgr::Result<()> {
         }
     };
 
-    let base = ServingConfig::default();
+    let mut base = ServingConfig::default();
+    base.trace_sample = trace_sample;
     let systems: Vec<(&str, ServingConfig, EngineConfig, &str)> = vec![
         ("xGR", base.clone(), EngineConfig::default(), "decode"),
         (
@@ -80,6 +88,18 @@ fn main() -> xgr::Result<()> {
         )?;
         let r = replay_trace(&coord, &trace, 1.0);
         coord.shutdown();
+        if trace_sample > 0.0 {
+            println!("{name}: {}", r.summary());
+        }
+        // export the xGR run's waterfall (the baselines overwrite less
+        // interesting data, so only the first system writes the file)
+        if !trace_out.is_empty() && name == "xGR" {
+            r.write_chrome_trace(std::path::Path::new(&trace_out))?;
+            println!(
+                "{name}: wrote {} spans to {trace_out} (chrome://tracing)",
+                r.spans.len()
+            );
+        }
         table.push(
             Row::new(name)
                 .col("completed", r.completed as f64)

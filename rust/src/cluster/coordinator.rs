@@ -79,9 +79,12 @@ struct ReplicaSlot {
 pub struct ClusterCoordinator {
     /// Arc-shared with the steal thread, which reads the same slots
     replicas: Arc<Vec<ReplicaSlot>>,
-    /// per-replica counters, kept after a replica is killed so cluster
-    /// stats stay complete
+    /// per-replica scheduler counters, kept after a replica is killed so
+    /// cluster stats stay complete
     counters: Vec<Arc<Counters>>,
+    /// per-replica worker counter shards (one Vec per replica, shard j ==
+    /// stream j), captured at start for the same dead-replica reason
+    shards: Vec<Vec<Arc<Counters>>>,
     alive: Arc<Vec<AtomicBool>>,
     outstanding: Arc<Vec<AtomicU64>>,
     router: Arc<Mutex<Router>>,
@@ -231,6 +234,7 @@ impl ClusterCoordinator {
             Arc::new((0..n).map(|_| AtomicU64::new(0)).collect());
         let mut replicas = Vec::with_capacity(n);
         let mut counters = Vec::with_capacity(n);
+        let mut shards = Vec::with_capacity(n);
         for i in 0..n {
             let c = Arc::new(Coordinator::start(
                 serving,
@@ -239,6 +243,7 @@ impl ClusterCoordinator {
                 factory.clone(),
             )?);
             counters.push(c.counters.clone());
+            shards.push(c.counter_shards().to_vec());
             let stop = Arc::new(AtomicBool::new(false));
             let forwarder = {
                 let coord = c.clone();
@@ -339,6 +344,7 @@ impl ClusterCoordinator {
         Ok(ClusterCoordinator {
             replicas,
             counters,
+            shards,
             alive,
             outstanding,
             router,
@@ -533,11 +539,22 @@ impl ClusterCoordinator {
     }
 
     /// Aggregate stats across replicas (dead ones included — their
-    /// counters outlive them) plus the shared pool's global view.
+    /// counters outlive them) plus the shared pool's global view. The
+    /// per-replica breakdown survives in `BackendStats::per_replica`:
+    /// each entry folds one replica's scheduler counters with its
+    /// per-stream worker shards.
     pub fn backend_stats(&self) -> BackendStats {
         let mut agg = BackendStats::default();
-        for c in &self.counters {
-            agg.merge(&BackendStats::from_counters(c));
+        let mut per_replica = Vec::with_capacity(self.counters.len());
+        for (c, shards) in self.counters.iter().zip(&self.shards) {
+            let folded = Counters::new();
+            c.fold_into(&folded);
+            for sh in shards {
+                sh.fold_into(&folded);
+            }
+            let rs = BackendStats::from_counters(&folded);
+            agg.merge(&rs);
+            per_replica.push(rs);
         }
         if let Some(pool) = &self.pool {
             let ps = pool.stats();
@@ -547,6 +564,9 @@ impl ClusterCoordinator {
                 Counters::max(&c.pool_ttl_expirations, ps.ttl_expirations);
             }
         }
+        agg.trace_drops = crate::metrics::trace::tracer().dropped();
+        agg.gauge_underflows = crate::metrics::gauge_underflows();
+        agg.per_replica = per_replica;
         agg
     }
 }
@@ -613,6 +633,12 @@ mod tests {
         assert!(streams.len() > 1, "load must spread over replicas: {streams:?}");
         let stats = c.backend_stats();
         assert_eq!(stats.per_replica_hit_rates.len(), 3);
+        // the per-replica shard breakdown tiles the aggregate
+        assert_eq!(stats.per_replica.len(), 3);
+        assert_eq!(
+            stats.per_replica.iter().map(|r| r.requests_done).sum::<u64>(),
+            stats.requests_done,
+        );
         let rest = c.shutdown();
         assert!(rest.is_empty());
     }

@@ -104,6 +104,13 @@ pub struct ServingConfig {
     /// deployment must run response timeouts (the replay driver
     /// reconciles against `batch_rejects` automatically).
     pub batch_inbox_tokens: usize,
+    /// phase-level tracing: fraction of requests whose lifecycle spans
+    /// are recorded (deterministic per-request sampling; all spans of
+    /// one request keep or drop together). 0.0 = tracing off (the
+    /// default; the disabled tracer costs one atomic load per phase).
+    /// The `XGR_TRACE_SAMPLE` environment variable overrides this at
+    /// `Coordinator::start`. Never changes recommendation bytes.
+    pub trace_sample: f64,
     pub features: Features,
 }
 
@@ -131,6 +138,7 @@ impl Default for ServingConfig {
             steal_max_batches: 4,
             prefill_chunk_tokens: 0,
             batch_inbox_tokens: 0,
+            trace_sample: 0.0,
             features: Features::all_on(),
         }
     }
@@ -165,6 +173,7 @@ impl ServingConfig {
                 "steal_max_batches" => c.steal_max_batches = v.as_usize().ok_or_else(|| anyhow!("steal_max_batches"))?,
                 "prefill_chunk_tokens" => c.prefill_chunk_tokens = v.as_usize().ok_or_else(|| anyhow!("prefill_chunk_tokens"))?,
                 "batch_inbox_tokens" => c.batch_inbox_tokens = v.as_usize().ok_or_else(|| anyhow!("batch_inbox_tokens"))?,
+                "trace_sample" => c.trace_sample = v.as_f64().ok_or_else(|| anyhow!("trace_sample"))?,
                 "valid_filter" => c.features.valid_filter = v.as_bool().ok_or_else(|| anyhow!("valid_filter"))?,
                 "graph_dispatch" => c.features.graph_dispatch = v.as_bool().ok_or_else(|| anyhow!("graph_dispatch"))?,
                 "multi_stream" => c.features.multi_stream = v.as_bool().ok_or_else(|| anyhow!("multi_stream"))?,
@@ -215,6 +224,10 @@ impl ServingConfig {
         }
         if self.prefill_chunk_tokens > 1 << 20 {
             return Err(anyhow!("prefill_chunk_tokens must be <= 2^20"));
+        }
+        if !(0.0..=1.0).contains(&self.trace_sample) {
+            // NaN also fails the range test, which is what we want
+            return Err(anyhow!("trace_sample must be in [0, 1]"));
         }
         if self.batch_inbox_tokens > 0
             && self.batch_inbox_tokens < self.max_batch_tokens
@@ -424,6 +437,31 @@ mod tests {
         )
         .unwrap();
         assert!(ServingConfig::from_json(&j).is_ok());
+    }
+
+    #[test]
+    fn trace_sample_knob_parses_and_validates() {
+        let j = Json::parse(r#"{"trace_sample": 0.25}"#).unwrap();
+        let c = ServingConfig::from_json(&j).unwrap();
+        assert_eq!(c.trace_sample, 0.25);
+        // endpoints are valid (0 = off, 1 = trace everything)
+        for s in ["0", "1", "0.0", "1.0"] {
+            let j = Json::parse(&format!(r#"{{"trace_sample": {s}}}"#)).unwrap();
+            assert!(ServingConfig::from_json(&j).is_ok(), "trace_sample={s}");
+        }
+        // out-of-range fractions fail loudly
+        for s in ["-0.1", "1.5", "2"] {
+            let j = Json::parse(&format!(r#"{{"trace_sample": {s}}}"#)).unwrap();
+            assert!(ServingConfig::from_json(&j).is_err(), "trace_sample={s}");
+        }
+        // default: tracing off, valid
+        let d = ServingConfig::default();
+        assert_eq!(d.trace_sample, 0.0);
+        d.validate().unwrap();
+        // NaN is rejected, not silently truthy
+        let mut c = ServingConfig::default();
+        c.trace_sample = f64::NAN;
+        assert!(c.validate().is_err());
     }
 
     #[test]

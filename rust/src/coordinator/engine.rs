@@ -29,6 +29,7 @@ use crate::beam::pool::{BeamState, StatePool};
 use crate::beam::{BeamSelector, NaiveBeam, Selection, XBeam};
 use crate::itemspace::{ItemTrie, MaskWorkspace};
 use crate::kvcache::{KvManager, ReqHandle, SeparatedKv};
+use crate::metrics::trace::{self, SpanPhase};
 use crate::metrics::Counters;
 use crate::runtime::{ModelExecutor, SlotId};
 use crate::sessioncache::{SessionCache, SessionCacheConfig, Tier};
@@ -119,6 +120,9 @@ pub struct InflightReq {
     pub(crate) state: BeamState,
     pub(crate) beam_tokens: Vec<u32>,
     pub(crate) phase: Phase,
+    /// sampled into the phase tracer (decided once at admission so all
+    /// spans of one request keep or drop together)
+    pub(crate) traced: bool,
 }
 
 impl InflightReq {
@@ -372,6 +376,28 @@ impl Engine {
             let mut p = StatePool::new(bw, nd);
             p.take()
         };
+        let traced = trace::tracer().keep_request(req.id);
+        if traced {
+            let tr = trace::tracer();
+            // queue wait: arrival at the batcher until this admission
+            tr.record(
+                req.id,
+                SpanPhase::Queue,
+                req.arrival_ns.min(t0),
+                t0.saturating_sub(req.arrival_ns),
+                [0; 3],
+            );
+            // admission prefill (sequential mode computes the whole
+            // uncached suffix here; chunked mode only opens the slot and
+            // streams tokens through advance_prefill spans)
+            tr.record(
+                req.id,
+                SpanPhase::Prefill,
+                t0,
+                now_ns().saturating_sub(t0),
+                [(tokens.len() - cached) as u64, 0, 0],
+            );
+        }
         Ok(InflightReq {
             id: req.id,
             user_id: req.user_id,
@@ -387,6 +413,7 @@ impl Engine {
             } else {
                 Phase::Decoding { step: 0 }
             },
+            traced,
         })
     }
 
@@ -406,12 +433,22 @@ impl Engine {
         if n == 0 {
             return Ok(0);
         }
+        let t_start = if r.traced { now_ns() } else { 0 };
         let done = self
             .exec
             .prefill_chunk(r.slot, &r.tokens[offset..offset + n], offset)?
             .is_some();
         self.kv.prefill_advance(r.kvh, n);
         Counters::inc(&self.counters.prefill_chunks);
+        if r.traced {
+            trace::tracer().record(
+                r.id,
+                SpanPhase::Prefill,
+                t_start,
+                now_ns().saturating_sub(t_start),
+                [n as u64, 0, 0],
+            );
+        }
         r.phase = if done {
             debug_assert_eq!(offset + n, r.tokens.len());
             Phase::Decoding { step: 0 }
@@ -442,9 +479,19 @@ impl Engine {
         if lane.has_job(r.id) {
             return;
         }
+        let t_start = if r.traced { now_ns() } else { 0 };
         let prefixes: Vec<Vec<u32>> =
             (0..r.state.bw).map(|b| r.state.prefix(b).to_vec()).collect();
         lane.submit_sparse(r.id, prefixes);
+        if r.traced {
+            trace::tracer().record(
+                r.id,
+                SpanPhase::Mask,
+                t_start,
+                now_ns().saturating_sub(t_start),
+                [r.state.bw as u64, step as u64, 0],
+            );
+        }
     }
 
     /// Run one decode iteration of a [`Phase::Decoding`] request: KV
@@ -460,6 +507,8 @@ impl Engine {
             (s.beam_width, s.num_decode, s.vocab)
         };
         let k = if self.cfg.top_k == 0 { bw } else { self.cfg.top_k };
+        let traced = r.traced;
+        let t_fwd = if traced { now_ns() } else { 0 };
         // device-resident filtering (the xGR path): selection walks the
         // trie-valid token lists directly — no per-beam mask rows are
         // materialized at all. The naive/baseline path filters the host
@@ -501,6 +550,11 @@ impl Engine {
             };
         Counters::inc(&self.counters.decode_steps);
         self.kv.decode_step(r.kvh, step, &r.state.parents);
+        // span checkpoints: Decode = forward + KV reorder, Mask = host
+        // mask apply (zero-duration on the device-filter path, where no
+        // mask rows exist), Sort = selection + beam-state update
+        let t_fwd_end = if traced { now_ns() } else { 0 };
+        let mut t_mask_end = t_fwd_end;
 
         // ---- masking + selection ----
         self.logits_scratch.clear();
@@ -517,6 +571,9 @@ impl Engine {
             } else {
                 if self.cfg.valid_filter {
                     self.masks.apply_root(&mut self.logits_scratch);
+                }
+                if traced {
+                    t_mask_end = now_ns();
                 }
                 self.select(&scores, v, k, bw);
             }
@@ -552,12 +609,45 @@ impl Engine {
                         }
                     }
                 }
+                if traced {
+                    t_mask_end = now_ns();
+                }
                 self.select(&scores, v, k, bw);
             }
+        }
+        macro_rules! record_step_spans {
+            () => {
+                if traced {
+                    let t_end = now_ns();
+                    let tr = trace::tracer();
+                    tr.record(
+                        r.id,
+                        SpanPhase::Decode,
+                        t_fwd,
+                        t_fwd_end.saturating_sub(t_fwd),
+                        [bw as u64, step as u64, 0],
+                    );
+                    tr.record(
+                        r.id,
+                        SpanPhase::Mask,
+                        t_fwd_end,
+                        t_mask_end.saturating_sub(t_fwd_end),
+                        [bw as u64, step as u64, 0],
+                    );
+                    tr.record(
+                        r.id,
+                        SpanPhase::Sort,
+                        t_mask_end,
+                        t_end.saturating_sub(t_mask_end),
+                        [self.sel.len() as u64, step as u64, 0],
+                    );
+                }
+            };
         }
         if self.sel.is_empty() {
             // fully masked — no valid continuation (can only happen with
             // filtering off catalogs; fail soft with an empty item list)
+            record_step_spans!();
             r.phase = Phase::Done;
             return Ok(());
         }
@@ -576,6 +666,7 @@ impl Engine {
             &mut self.temp_u32,
         );
         r.beam_tokens.copy_from_slice(&self.sel.tokens);
+        record_step_spans!();
         r.phase = if step + 1 == nd {
             Phase::Done
         } else {
@@ -590,6 +681,8 @@ impl Engine {
     /// always yields an output (possibly with an empty item list).
     pub fn finish_request(&mut self, r: InflightReq) -> EngineOutput {
         let nd = self.exec.spec().num_decode;
+        let traced = r.traced;
+        let t_start = if traced { now_ns() } else { 0 };
         let InflightReq { id, user_id, tokens, slot, kvh, state, .. } = r;
         let mut items: Vec<([u32; 3], f32)> = Vec::with_capacity(state.bw);
         if state.prefix_len == nd {
@@ -612,6 +705,16 @@ impl Engine {
             sc.publish(user_id, &tokens, tokens.len());
         }
         Counters::inc(&self.counters.requests_done);
+        if traced {
+            // final ranking + resource release, attributed to Sort
+            trace::tracer().record(
+                id,
+                SpanPhase::Sort,
+                t_start,
+                now_ns().saturating_sub(t_start),
+                [items.len() as u64, nd as u64, 0],
+            );
+        }
         EngineOutput { id, items, valid_items }
     }
 

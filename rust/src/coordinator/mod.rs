@@ -70,6 +70,14 @@ pub struct RecResponse {
 /// figure harnesses surface.
 #[derive(Clone, Debug, Default)]
 pub struct BackendStats {
+    /// requests admitted into a scheduler's batchers
+    pub requests_in: u64,
+    /// requests completed with a response
+    pub requests_done: u64,
+    /// requests that errored inside a worker
+    pub requests_rejected: u64,
+    /// batches taken off stream queues by workers
+    pub batches: u64,
     pub session_hits: u64,
     pub session_misses: u64,
     pub session_swap_ins: u64,
@@ -103,8 +111,15 @@ pub struct BackendStats {
     pub mask_lane_fallbacks: u64,
     /// requests shed at batcher admission by the queued-token cap
     pub batch_rejects: u64,
+    /// trace spans dropped on a full per-thread ring (process-global)
+    pub trace_drops: u64,
+    /// saturated `Gauge::sub` underflows (process-global)
+    pub gauge_underflows: u64,
     /// session hit rate per replica (one element for a lone coordinator)
     pub per_replica_hit_rates: Vec<f64>,
+    /// full per-replica stat shards (empty for a lone coordinator;
+    /// `merge` never touches this — the cluster aggregator fills it)
+    pub per_replica: Vec<BackendStats>,
 }
 
 impl BackendStats {
@@ -122,6 +137,10 @@ impl BackendStats {
     pub fn from_counters(c: &Counters) -> Self {
         let g = Counters::get;
         BackendStats {
+            requests_in: g(&c.requests_in),
+            requests_done: g(&c.requests_done),
+            requests_rejected: g(&c.requests_rejected),
+            batches: g(&c.batches),
             session_hits: g(&c.session_hits),
             session_misses: g(&c.session_misses),
             session_swap_ins: g(&c.session_swap_ins),
@@ -145,16 +164,23 @@ impl BackendStats {
             stage_occupancy_sum: g(&c.stage_occupancy_sum),
             mask_lane_fallbacks: g(&c.mask_lane_fallbacks),
             batch_rejects: g(&c.batch_rejects),
+            trace_drops: 0,
+            gauge_underflows: 0,
             per_replica_hit_rates: vec![crate::metrics::session_hit_rate(
                 g(&c.session_hits),
                 g(&c.session_misses),
             )],
+            per_replica: Vec::new(),
         }
     }
 
     /// Merge another backend's stats into this one (cluster aggregation:
     /// sums for monotone counters, max for peaks, concatenated rates).
     pub fn merge(&mut self, o: &BackendStats) {
+        self.requests_in += o.requests_in;
+        self.requests_done += o.requests_done;
+        self.requests_rejected += o.requests_rejected;
+        self.batches += o.batches;
         self.session_hits += o.session_hits;
         self.session_misses += o.session_misses;
         self.session_swap_ins += o.session_swap_ins;
@@ -180,7 +206,134 @@ impl BackendStats {
         // shared pool, not per-replica sums — take the max, not the sum
         self.pool_ttl_expirations = self.pool_ttl_expirations.max(o.pool_ttl_expirations);
         self.pool_peak_bytes = self.pool_peak_bytes.max(o.pool_peak_bytes);
+        // both sides read the same process-wide globals — max, not sum
+        self.trace_drops = self.trace_drops.max(o.trace_drops);
+        self.gauge_underflows = self.gauge_underflows.max(o.gauge_underflows);
         self.per_replica_hit_rates.extend(o.per_replica_hit_rates.iter().copied());
+    }
+
+    fn emit_prometheus(&self, out: &mut String, labels: &str) {
+        use std::fmt::Write as _;
+        macro_rules! counter {
+            ($($f:ident),* $(,)?) => {
+                $(let _ = writeln!(
+                    out,
+                    concat!("xgr_", stringify!($f), "{} {}"),
+                    labels,
+                    self.$f,
+                );)*
+            };
+        }
+        counter!(
+            requests_in,
+            requests_done,
+            requests_rejected,
+            batches,
+            session_hits,
+            session_misses,
+            session_swap_ins,
+            session_evictions,
+            prefill_tokens_saved,
+            session_peak_hbm_bytes,
+            session_peak_dram_bytes,
+            affinity_spills,
+            affinity_spills_warm,
+            affinity_repairs,
+            pool_hits,
+            pool_misses,
+            pool_ttl_expirations,
+            pool_epoch_drops,
+            pool_peak_bytes,
+            batch_steals,
+            steal_tokens_saved,
+            steal_aborts,
+            prefill_chunks,
+            stage_ticks,
+            stage_occupancy_sum,
+            mask_lane_fallbacks,
+            batch_rejects,
+            trace_drops,
+            gauge_underflows,
+        );
+        let _ = writeln!(
+            out,
+            "xgr_session_hit_rate{} {:.6}",
+            labels,
+            self.session_hit_rate()
+        );
+    }
+
+    /// Render as Prometheus-style plaintext: one `xgr_<counter>` line per
+    /// field, repeated with `{replica="i"}` labels for every shard in
+    /// `per_replica`, terminated by a `# EOF` line so a line-oriented
+    /// client knows where the exposition ends (the TCP `STATS` verb).
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        self.emit_prometheus(&mut out, "");
+        for (i, r) in self.per_replica.iter().enumerate() {
+            r.emit_prometheus(&mut out, &format!("{{replica=\"{i}\"}}"));
+        }
+        out.push_str("# EOF\n");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_stats_merge_sums_flow_and_maxes_globals() {
+        let mut a = BackendStats {
+            requests_in: 5,
+            requests_done: 4,
+            requests_rejected: 1,
+            batches: 2,
+            trace_drops: 7,
+            gauge_underflows: 1,
+            ..Default::default()
+        };
+        let b = BackendStats {
+            requests_in: 3,
+            requests_done: 3,
+            batches: 1,
+            trace_drops: 2,
+            gauge_underflows: 4,
+            per_replica: vec![BackendStats::default()],
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.requests_in, 8);
+        assert_eq!(a.requests_done, 7);
+        assert_eq!(a.requests_rejected, 1);
+        assert_eq!(a.batches, 3);
+        // process-wide globals are the same counter seen twice
+        assert_eq!(a.trace_drops, 7);
+        assert_eq!(a.gauge_underflows, 4);
+        // merge never adopts the other side's replica breakdown
+        assert!(a.per_replica.is_empty());
+    }
+
+    #[test]
+    fn prometheus_text_labels_replicas_and_terminates() {
+        let mut s = BackendStats { requests_done: 10, ..Default::default() };
+        s.per_replica = vec![
+            BackendStats { requests_done: 6, ..Default::default() },
+            BackendStats { requests_done: 4, ..Default::default() },
+        ];
+        let text = s.to_prometheus();
+        assert!(text.contains("xgr_requests_done 10\n"));
+        assert!(text.contains("xgr_requests_done{replica=\"0\"} 6\n"));
+        assert!(text.contains("xgr_requests_done{replica=\"1\"} 4\n"));
+        assert!(text.contains("xgr_session_hit_rate 0.000000\n"));
+        assert!(text.ends_with("# EOF\n"));
+        // every line is `name[{labels}] value` or the terminator
+        for line in text.lines() {
+            assert!(
+                line.starts_with("xgr_") || line == "# EOF",
+                "malformed line: {line}"
+            );
+        }
     }
 }
 

@@ -285,7 +285,12 @@ pub struct Coordinator {
     sched_backlog: Arc<AtomicU64>,
     scheduler: Option<JoinHandle<()>>,
     workers: Option<Workers>,
+    /// scheduler-owned counters (admission, routing, dispatch); the
+    /// worker-owned counts live in `shards`, one per stream
     pub counters: Arc<Counters>,
+    /// per-stream worker counter shards (shard i == stream i); folded
+    /// with `counters` by [`Self::aggregate_counters`]
+    shards: Vec<Arc<Counters>>,
     /// shared prefix pool, when configured (owned here for stats; the
     /// engines hold clones via `EngineConfig::session_pool`)
     pool: Option<Arc<crate::sessioncache::PrefixPool>>,
@@ -300,6 +305,14 @@ impl Coordinator {
         factory: ExecutorFactory,
     ) -> Result<Self> {
         serving.validate()?;
+        // phase tracing: the env var wins over the config knob so a
+        // deployed binary can be traced without a config edit. Tracing
+        // only ever observes — it never changes recommendation bytes.
+        let trace_sample = std::env::var("XGR_TRACE_SAMPLE")
+            .ok()
+            .and_then(|v| v.parse::<f64>().ok())
+            .unwrap_or(serving.trace_sample);
+        crate::metrics::trace::tracer().configure(trace_sample);
         let num_streams = if serving.features.multi_stream {
             serving.num_streams
         } else {
@@ -348,13 +361,15 @@ impl Coordinator {
         let stream_queues: Vec<Channel<Batch>> =
             (0..num_streams).map(|_| Channel::bounded(qcap)).collect();
 
+        let shards: Vec<Arc<Counters>> =
+            (0..num_streams).map(|_| Arc::new(Counters::new())).collect();
         let workers = Workers::spawn(
             factory,
             trie,
             engine_cfg,
             stream_queues.clone(),
             responses.clone(),
-            counters.clone(),
+            shards.clone(),
             serving.prefill_chunk_tokens,
         );
 
@@ -691,8 +706,26 @@ impl Coordinator {
             scheduler: Some(scheduler),
             workers: Some(workers),
             counters,
+            shards,
             pool,
         })
+    }
+
+    /// Per-stream worker counter shards (shard i == stream i).
+    pub fn counter_shards(&self) -> &[Arc<Counters>] {
+        &self.shards
+    }
+
+    /// Fold the scheduler-owned counters and every per-stream worker
+    /// shard into one aggregate snapshot (the totals a single shared
+    /// counter block would have produced).
+    pub fn aggregate_counters(&self) -> Counters {
+        let agg = Counters::new();
+        self.counters.fold_into(&agg);
+        for sh in &self.shards {
+            sh.fold_into(&agg);
+        }
+        agg
     }
 
     /// Queued-but-unstarted work at this coordinator, in **requests**:
@@ -804,15 +837,23 @@ impl super::ServingBackend for Coordinator {
     }
 
     fn backend_stats(&self) -> super::BackendStats {
-        let mut s = super::BackendStats::from_counters(&self.counters);
+        if let Some(pool) = &self.pool {
+            // surface the pool-global sweep counter in the shared
+            // Counters too (monotone, so fetch_max is idempotent)
+            Counters::max(
+                &self.counters.pool_ttl_expirations,
+                pool.stats().ttl_expirations,
+            );
+        }
+        let mut s =
+            super::BackendStats::from_counters(&self.aggregate_counters());
         if let Some(pool) = &self.pool {
             let ps = pool.stats();
             s.pool_ttl_expirations = ps.ttl_expirations;
             s.pool_peak_bytes = pool.peak_bytes();
-            // surface the pool-global sweep counter in the shared
-            // Counters too (monotone, so fetch_max is idempotent)
-            Counters::max(&self.counters.pool_ttl_expirations, ps.ttl_expirations);
         }
+        s.trace_drops = crate::metrics::trace::tracer().dropped();
+        s.gauge_underflows = crate::metrics::gauge_underflows();
         s
     }
 }
@@ -974,8 +1015,14 @@ mod tests {
             );
         }
         // counter propagation completes when workers join
-        let counters = c.counters.clone();
+        let shared = c.counters.clone();
+        let shards: Vec<_> = c.counter_shards().to_vec();
         c.shutdown();
+        let counters = Counters::new();
+        shared.fold_into(&counters);
+        for sh in &shards {
+            sh.fold_into(&counters);
+        }
         // every revisit after the first should hit the stream-local cache
         assert!(Counters::get(&counters.session_hits) >= 6 * 3);
         assert!(Counters::get(&counters.prefill_tokens_saved) > 0);
@@ -998,8 +1045,10 @@ mod tests {
             c.recv_timeout(Duration::from_secs(10)).unwrap();
         }
         assert_eq!(Counters::get(&c.counters.requests_in), 8);
-        assert_eq!(Counters::get(&c.counters.requests_done), 8);
-        assert!(Counters::get(&c.counters.batches) >= 1);
+        // worker-owned counts live on the per-stream shards
+        let agg = c.aggregate_counters();
+        assert_eq!(Counters::get(&agg.requests_done), 8);
+        assert!(Counters::get(&agg.batches) >= 1);
         c.shutdown();
     }
 
@@ -1244,8 +1293,14 @@ mod tests {
                 .expect("all requests must complete despite a dead worker");
             user_streams.entry(r.id % 6).or_default().insert(r.stream);
         }
-        let counters = c.counters.clone();
+        let shared = c.counters.clone();
+        let shards: Vec<_> = c.counter_shards().to_vec();
         c.shutdown();
+        let counters = Counters::new();
+        shared.fold_into(&counters);
+        for sh in &shards {
+            sh.fold_into(&counters);
+        }
         assert!(
             Counters::get(&counters.affinity_repairs) >= 1,
             "orphaned users must be re-pinned"

@@ -48,6 +48,7 @@
 
 use super::engine::{Engine, InflightReq, Phase};
 use super::{RecRequest, RecResponse};
+use crate::metrics::trace::{self, SpanPhase};
 use crate::metrics::Counters;
 use crate::util::now_ns;
 use crate::Result;
@@ -78,9 +79,14 @@ pub fn run_batch(
             Err(e) => out.push((req.id, Err(e))),
         }
     }
+    // tick spans ride the tracer's req_id 0 track (whole-engine events,
+    // not tied to any one request's sampling decision)
+    let trace_ticks = trace::tracer().enabled();
     while !live.is_empty() {
+        let tick_start = if trace_ticks { now_ns() } else { 0 };
+        let occupancy = live.len() as u64;
         Counters::inc(&counters.stage_ticks);
-        Counters::add(&counters.stage_occupancy_sum, live.len() as u64);
+        Counters::add(&counters.stage_occupancy_sum, occupancy);
         // ---- prefill stage: stream up to chunk_tokens prompt tokens,
         // FAIR-SHARED across the requests still prefilling. A greedy
         // admission-order fill would let one long prompt absorb every
@@ -133,12 +139,14 @@ pub fn run_batch(
         for r in live.iter() {
             engine.prepare_masks(r);
         }
+        let mut decode_width = 0u64;
         let mut i = 0;
         while i < live.len() {
             if !matches!(live[i].phase(), Phase::Decoding { .. }) {
                 i += 1;
                 continue;
             }
+            decode_width += 1;
             match engine.advance_decode(&mut live[i]) {
                 Ok(()) => i += 1,
                 Err(e) => {
@@ -175,6 +183,15 @@ pub fn run_batch(
                     stream,
                 }),
             ));
+        }
+        if trace_ticks {
+            trace::tracer().record(
+                0,
+                SpanPhase::Tick,
+                tick_start,
+                now_ns().saturating_sub(tick_start),
+                [occupancy, (chunk_tokens - budget) as u64, decode_width],
+            );
         }
     }
     out

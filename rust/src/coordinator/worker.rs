@@ -8,10 +8,12 @@
 //! ([`super::staged`]): prompts stream in chunks interleaved with every
 //! in-flight request's decode steps, so one long prompt no longer
 //! head-of-line-blocks the batch (0 keeps the sequential
-//! request-at-a-time loop, the ablation baseline). Workers fold their
-//! engine's session-cache and overlap-lane deltas into the shared
-//! counters after every batch, so coordinator-level observability sees
-//! cache behavior across streams.
+//! request-at-a-time loop, the ablation baseline). Each worker owns a
+//! private [`Counters`] shard (folding its engine's session-cache and
+//! overlap-lane deltas after every batch); `backend_stats` folds the
+//! shards into the aggregate and keeps them around for the per-stream /
+//! per-replica breakdown — no cross-stream cache-line contention on the
+//! hot counting paths.
 
 use super::engine::{Engine, EngineConfig};
 use super::scheduler::ExecutorFactory;
@@ -28,7 +30,8 @@ pub struct Workers {
 }
 
 impl Workers {
-    /// Spawn one worker per queue in `queues` (queue i == stream i).
+    /// Spawn one worker per queue in `queues` (queue i == stream i),
+    /// each counting into its own shard `shards[i]`.
     /// `prefill_chunk_tokens > 0` selects the staged batch driver.
     pub fn spawn(
         factory: ExecutorFactory,
@@ -36,9 +39,10 @@ impl Workers {
         engine_cfg: EngineConfig,
         queues: Vec<Channel<Batch>>,
         responses: Channel<RecResponse>,
-        counters: Arc<Counters>,
+        shards: Vec<Arc<Counters>>,
         prefill_chunk_tokens: usize,
     ) -> Workers {
+        assert_eq!(shards.len(), queues.len(), "one counter shard per stream");
         let handles = (0..queues.len())
             .map(|stream| {
                 let queue = queues[stream].clone();
@@ -47,10 +51,12 @@ impl Workers {
                 let trie = trie.clone();
                 let engine_cfg = engine_cfg.clone();
                 let responses = responses.clone();
-                let counters = counters.clone();
+                let counters = shards[stream].clone();
                 std::thread::Builder::new()
                     .name(format!("xgr-worker-{stream}"))
                     .spawn(move || {
+                        // label this thread's trace spans with its stream
+                        crate::metrics::trace::set_thread_stream(stream as u32);
                         // the executor is created INSIDE the worker thread
                         // (PJRT handles are not Send)
                         let exec = match factory() {
@@ -173,7 +179,7 @@ mod tests {
     use crate::runtime::MockExecutor;
     use crate::util::now_ns;
 
-    fn drain_with_chunk(prefill_chunk_tokens: usize) -> Arc<Counters> {
+    fn drain_with_chunk(prefill_chunk_tokens: usize) -> Counters {
         let mut spec = ModelSpec::onerec_tiny();
         spec.vocab = 64;
         spec.beam_width = 4;
@@ -186,14 +192,15 @@ mod tests {
         let queues: Vec<Channel<Batch>> =
             (0..2).map(|_| Channel::bounded(8)).collect();
         let responses: Channel<RecResponse> = Channel::bounded(64);
-        let counters = Arc::new(Counters::new());
+        let shards: Vec<Arc<Counters>> =
+            (0..2).map(|_| Arc::new(Counters::new())).collect();
         let w = Workers::spawn(
             factory,
             trie,
             EngineConfig::default(),
             queues.clone(),
             responses.clone(),
-            counters.clone(),
+            shards.clone(),
             prefill_chunk_tokens,
         );
         for b in 0..4 {
@@ -220,9 +227,17 @@ mod tests {
             got += 1;
         }
         assert_eq!(got, 12);
-        assert_eq!(Counters::get(&counters.requests_done), 12);
-        assert_eq!(Counters::get(&counters.batches), 4);
-        counters
+        // both streams saw work, and the fold reproduces the totals
+        for sh in &shards {
+            assert!(Counters::get(&sh.batches) > 0, "both shards count");
+        }
+        let agg = Counters::new();
+        for sh in &shards {
+            sh.fold_into(&agg);
+        }
+        assert_eq!(Counters::get(&agg.requests_done), 12);
+        assert_eq!(Counters::get(&agg.batches), 4);
+        agg
     }
 
     #[test]

@@ -211,4 +211,55 @@ mod tests {
         assert_eq!(h.quantile(0.0), 0);
         assert_eq!(h.max(), 31);
     }
+
+    #[test]
+    fn empty_quantiles_and_extremes_are_zero() {
+        let h = Histogram::new();
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(h.quantile(q), 0);
+        }
+        assert_eq!(h.min(), 0, "empty min must not report the sentinel");
+        assert_eq!(h.max(), 0);
+    }
+
+    #[test]
+    fn single_sample_dominates_every_quantile() {
+        let mut h = Histogram::new();
+        h.record(42_000);
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            let est = h.quantile(q);
+            assert!(
+                (est as f64 - 42e3).abs() / 42e3 < 0.05,
+                "q={q} est={est}"
+            );
+        }
+        assert_eq!(h.min(), 42_000);
+        assert_eq!(h.max(), 42_000);
+        assert_eq!(h.mean(), 42_000.0);
+    }
+
+    #[test]
+    fn merge_of_disjoint_ranges() {
+        // a: microsecond-scale cluster, b: second-scale cluster — merged
+        // quantiles must straddle the gap, min/max must span both
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        for i in 0..100u64 {
+            a.record(1_000 + i);
+            b.record(1_000_000_000 + i * 1_000);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 200);
+        assert_eq!(a.min(), 1_000);
+        assert_eq!(a.max(), 1_000_000_000 + 99_000);
+        // p25 lands in the low cluster, p75 in the high one
+        let lo = a.quantile(0.25);
+        let hi = a.quantile(0.75);
+        assert!(lo < 2_000, "p25 must stay in the low cluster, got {lo}");
+        assert!(hi >= 1_000_000_000, "p75 must reach the high cluster, got {hi}");
+        // merging an empty histogram changes nothing
+        let before = (a.count(), a.p50(), a.min(), a.max());
+        a.merge(&Histogram::new());
+        assert_eq!(before, (a.count(), a.p50(), a.min(), a.max()));
+    }
 }

@@ -1,13 +1,60 @@
-//! Serving metrics: latency histograms (P50/P99), throughput counters and
-//! memory gauges — the quantities every figure in the paper reports.
+//! Serving metrics: latency histograms (P50/P99), throughput counters,
+//! memory gauges and phase-level trace spans — the quantities every
+//! figure in the paper reports.
+//!
+//! # Counters reference
+//!
+//! Every [`Counters`] field and who bumps it:
+//!
+//! | counter | bumped by |
+//! |---|---|
+//! | `requests_in` | scheduler, on batcher admission |
+//! | `requests_done` | worker, per completed response |
+//! | `requests_rejected` | worker, per errored response |
+//! | `batches` | worker, per batch taken off its queue |
+//! | `prefill_tokens` | engine `begin_request`, uncached prompt tokens |
+//! | `decode_steps` | engine `advance_decode`, per iteration |
+//! | `kernel_launches` | executor, per kernel launch |
+//! | `graph_dispatches` | scheduler, per dispatched batch (graph mode) |
+//! | `h2d_transfers` | executor, per host→device copy |
+//! | `slo_violations` | replay driver, per response over `slo_ms` |
+//! | `session_hits` | worker, session-cache lookup fold |
+//! | `session_misses` | worker, session-cache lookup fold |
+//! | `session_evictions` | worker, session-cache demotion/drop fold |
+//! | `session_swap_ins` | worker, DRAM-tier hit fold |
+//! | `prefill_tokens_saved` | worker, cached-prefix token fold |
+//! | `affinity_spills` | scheduler, batch sent off its affine stream |
+//! | `affinity_spills_warm` | scheduler, spill placed on the warm stream |
+//! | `affinity_repairs` | scheduler, user re-pinned off a dead stream |
+//! | `batch_steals` | cluster steal loop, batch migrated off a victim |
+//! | `steal_tokens_saved` | cluster steal loop, pool-handoff tokens |
+//! | `steal_aborts` | cluster steal loop, steal found/placed nothing |
+//! | `pool_hits` | worker, shared-pool recovery fold |
+//! | `pool_misses` | worker, empty pool consultation fold |
+//! | `pool_ttl_expirations` | backend_stats, pool TTL sweep (max-folded) |
+//! | `pool_epoch_drops` | worker, stale-epoch local drop fold |
+//! | `session_peak_hbm_bytes` | worker, tier-peak fold (max-folded) |
+//! | `session_peak_dram_bytes` | worker, tier-peak fold (max-folded) |
+//! | `prefill_chunks` | staged engine, per prompt chunk fed |
+//! | `stage_ticks` | staged engine, per iteration-level tick |
+//! | `stage_occupancy_sum` | staged engine, Σ in-flight per tick |
+//! | `mask_lane_fallbacks` | worker, inline mask after lane death fold |
+//! | `batch_rejects` | scheduler, request shed by inbox backpressure |
+//!
+//! Two process-global counters live outside `Counters`:
+//! [`gauge_underflows`] (a [`Gauge::sub`] went below zero and saturated)
+//! and [`trace::Tracer::dropped`] (spans dropped on a full trace ring).
+//! Both surface in `ReplayReport::summary` and the TCP `STATS` verb.
 
 pub mod hist;
 pub mod report;
+pub mod trace;
 
 pub use hist::Histogram;
 pub use report::{
     affinity_spill_rate, mean_stage_occupancy, session_hit_rate, Row, Table,
 };
+pub use trace::{Span, SpanPhase};
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -108,6 +155,71 @@ impl Counters {
     pub fn max(c: &AtomicU64, v: u64) {
         c.fetch_max(v, Ordering::Relaxed);
     }
+
+    /// Fold this shard into an aggregate: monotone counters add,
+    /// peak/absolute gauges (`session_peak_*`, `pool_ttl_expirations`)
+    /// take the running maximum. This is how the per-stream and
+    /// per-replica shards collapse into the totals `backend_stats`
+    /// reports — folding N disjoint shards reproduces the single-counter
+    /// totals exactly.
+    pub fn fold_into(&self, into: &Counters) {
+        macro_rules! add {
+            ($($f:ident),* $(,)?) => {
+                $(Counters::add(&into.$f, Counters::get(&self.$f));)*
+            };
+        }
+        macro_rules! fold_max {
+            ($($f:ident),* $(,)?) => {
+                $(Counters::max(&into.$f, Counters::get(&self.$f));)*
+            };
+        }
+        add!(
+            requests_in,
+            requests_done,
+            requests_rejected,
+            batches,
+            prefill_tokens,
+            decode_steps,
+            kernel_launches,
+            graph_dispatches,
+            h2d_transfers,
+            slo_violations,
+            session_hits,
+            session_misses,
+            session_evictions,
+            session_swap_ins,
+            prefill_tokens_saved,
+            affinity_spills,
+            affinity_spills_warm,
+            affinity_repairs,
+            batch_steals,
+            steal_tokens_saved,
+            steal_aborts,
+            pool_hits,
+            pool_misses,
+            pool_epoch_drops,
+            prefill_chunks,
+            stage_ticks,
+            stage_occupancy_sum,
+            mask_lane_fallbacks,
+            batch_rejects,
+        );
+        fold_max!(
+            pool_ttl_expirations,
+            session_peak_hbm_bytes,
+            session_peak_dram_bytes,
+        );
+    }
+}
+
+/// Process-global count of saturated [`Gauge::sub`] underflows (a
+/// release accounted more than was ever added — a bug signal, surfaced
+/// in reports rather than silently wrapping the gauge to ~`u64::MAX`).
+static GAUGE_UNDERFLOWS: AtomicU64 = AtomicU64::new(0);
+
+/// Total gauge underflows to date, process-wide.
+pub fn gauge_underflows() -> u64 {
+    GAUGE_UNDERFLOWS.load(Ordering::Relaxed)
 }
 
 /// Peak-tracking gauge (bytes of KV memory etc.).
@@ -132,8 +244,19 @@ impl Gauge {
         self.peak.fetch_max(cur, Ordering::Relaxed);
     }
 
+    /// Saturating decrement: mismatched accounting (releasing more than
+    /// was added) clamps at zero and bumps [`gauge_underflows`] instead
+    /// of wrapping to ~`u64::MAX` and poisoning the peak.
     pub fn sub(&self, v: u64) {
-        self.current.fetch_sub(v, Ordering::Relaxed);
+        let prev = self
+            .current
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |cur| {
+                Some(cur.saturating_sub(v))
+            })
+            .unwrap();
+        if prev < v {
+            GAUGE_UNDERFLOWS.fetch_add(1, Ordering::Relaxed);
+        }
     }
 
     pub fn current(&self) -> u64 {
@@ -172,6 +295,70 @@ mod tests {
         g.set(3);
         assert_eq!(g.current(), 3);
         assert_eq!(g.peak(), 5);
+    }
+
+    #[test]
+    fn gauge_sub_saturates_and_counts_underflows() {
+        let g = Gauge::new();
+        let before = gauge_underflows();
+        g.add(5);
+        g.sub(7); // over-release: clamp at 0, count it
+        assert_eq!(g.current(), 0);
+        assert_eq!(g.peak(), 5);
+        g.sub(1); // under-release from empty: same
+        assert_eq!(g.current(), 0);
+        assert!(
+            gauge_underflows() >= before + 2,
+            "underflows must be counted"
+        );
+        // the peak stays sane after the saturation (the wrapping bug
+        // poisoned it via the next add)
+        g.add(2);
+        assert_eq!(g.current(), 2);
+        assert_eq!(g.peak(), 5);
+    }
+
+    #[test]
+    fn sharded_counters_fold_into_aggregate_exactly() {
+        use std::sync::Arc;
+        let shards: Vec<Arc<Counters>> =
+            (0..4).map(|_| Arc::new(Counters::new())).collect();
+        let hs: Vec<_> = shards
+            .iter()
+            .enumerate()
+            .map(|(i, sh)| {
+                let sh = sh.clone();
+                std::thread::spawn(move || {
+                    for k in 0..1000u64 {
+                        Counters::inc(&sh.requests_done);
+                        Counters::add(&sh.prefill_tokens, k % 7);
+                        Counters::max(
+                            &sh.session_peak_hbm_bytes,
+                            i as u64 * 100 + k % 13,
+                        );
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        let agg = Counters::new();
+        for sh in &shards {
+            sh.fold_into(&agg);
+        }
+        let per_shard_tokens: u64 = (0..1000u64).map(|k| k % 7).sum();
+        assert_eq!(Counters::get(&agg.requests_done), 4000);
+        assert_eq!(Counters::get(&agg.prefill_tokens), 4 * per_shard_tokens);
+        // peaks fold by max, not sum: the largest shard peak wins
+        assert_eq!(Counters::get(&agg.session_peak_hbm_bytes), 3 * 100 + 12);
+        // folding is additive: a second pass doubles monotone counters
+        // but leaves peaks put
+        for sh in &shards {
+            sh.fold_into(&agg);
+        }
+        assert_eq!(Counters::get(&agg.requests_done), 8000);
+        assert_eq!(Counters::get(&agg.session_peak_hbm_bytes), 312);
     }
 
     #[test]

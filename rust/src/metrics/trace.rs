@@ -1,0 +1,462 @@
+//! Phase-level span tracing: bounded, lock-free, per-thread ring buffers.
+//!
+//! The serving argument of the paper is a latency *breakdown* — staged
+//! prefill/decode, early sort termination and multi-stream overlap each
+//! claim a slice of per-request time — so the tracer records one [`Span`]
+//! per lifecycle phase and yields per-request waterfalls:
+//!
+//! * [`SpanPhase::Queue`] — batcher admission to engine start
+//!   (`arrival_ns → t0`, the same quantity `queue_ns` reports);
+//! * [`SpanPhase::Prefill`] — `begin_request` (sequential mode prefills
+//!   the whole prompt here) plus one span per `advance_prefill` chunk;
+//! * [`SpanPhase::Decode`] — the device forward + KV step of one decode
+//!   iteration;
+//! * [`SpanPhase::Mask`] — validity-mask work: the mask-lane submit in
+//!   `prepare_masks` and the lane collect / host mask apply inside the
+//!   decode iteration (zero-length on the device-filter path, where
+//!   masking fuses into selection);
+//! * [`SpanPhase::Sort`] — beam selection + state reorder of one decode
+//!   iteration, and the final ranking in `finish_request`;
+//! * [`SpanPhase::Tick`] — one staged-engine stage tick (`req_id = 0`;
+//!   args carry occupancy / chunk tokens / decode width). Tick spans are
+//!   a per-stream track, not part of any request's waterfall.
+//!
+//! Within one request the spans are non-overlapping and — in sequential
+//! mode, where nothing interleaves — sum to that request's `service_ns`
+//! up to loop overhead; the staged engine interleaves requests, so there
+//! the slack is bounded by tick granularity.
+//!
+//! Design: each recording thread owns one bounded single-producer ring
+//! ([`SHARD_CAP`] spans). A write fills the slot first, then publishes
+//! the new length with a `Release` store; [`Tracer::take`] reads lengths
+//! with `Acquire` and copies the published prefix, so the hot path never
+//! takes a lock (the registry mutex is touched once per thread, at
+//! registration). When a ring fills, further spans on that thread are
+//! *dropped* and counted in [`Tracer::dropped`] — never blocked on.
+//! Sampling is per-request and deterministic: a request is kept iff
+//! `splitmix64(req_id)` falls under the configured fraction, so every
+//! phase of one request keeps or drops together and reruns trace the
+//! same requests. `take` drains every ring; call it between runs (the
+//! replay driver does) when all workers are quiescent — a drain racing
+//! a recording thread is memory-safe but may re-deliver that thread's
+//! already-drained spans.
+
+use crate::util::json::Json;
+use std::cell::{Cell, OnceCell, UnsafeCell};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Spans one thread can buffer between drains (drop-on-full past this).
+pub const SHARD_CAP: usize = 8192;
+
+/// Request lifecycle phase a [`Span`] is attributed to.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum SpanPhase {
+    /// batcher admission → engine start (the queue wait)
+    #[default]
+    Queue,
+    /// prompt prefill (whole-prompt in sequential mode, per-chunk staged)
+    Prefill,
+    /// validity-mask build/apply and mask-lane queueing
+    Mask,
+    /// device forward + KV append of one decode iteration
+    Decode,
+    /// beam selection / reorder, and the final ranking sort
+    Sort,
+    /// one staged stage tick (not part of a request waterfall)
+    Tick,
+}
+
+impl SpanPhase {
+    /// The five per-request phases, waterfall order ([`SpanPhase::Tick`]
+    /// is a per-stream track, not a request phase).
+    pub const REQUEST_PHASES: [SpanPhase; 5] = [
+        SpanPhase::Queue,
+        SpanPhase::Prefill,
+        SpanPhase::Mask,
+        SpanPhase::Decode,
+        SpanPhase::Sort,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanPhase::Queue => "queue",
+            SpanPhase::Prefill => "prefill",
+            SpanPhase::Mask => "mask",
+            SpanPhase::Decode => "decode",
+            SpanPhase::Sort => "sort",
+            SpanPhase::Tick => "tick",
+        }
+    }
+
+    /// Names for the three `args` slots in the Chrome export ("" = unused).
+    fn arg_names(self) -> [&'static str; 3] {
+        match self {
+            SpanPhase::Queue => ["", "", ""],
+            SpanPhase::Prefill => ["tokens", "", ""],
+            SpanPhase::Mask => ["beams", "step", ""],
+            SpanPhase::Decode => ["beams", "step", ""],
+            SpanPhase::Sort => ["kept", "step", ""],
+            SpanPhase::Tick => ["occupancy", "chunk_tokens", "decode_width"],
+        }
+    }
+}
+
+/// One recorded phase interval. `stream` is the recording thread's label
+/// (see [`set_thread_stream`]); `req_id = 0` marks per-stream tick spans.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Span {
+    pub req_id: u64,
+    pub stream: u32,
+    pub phase: SpanPhase,
+    pub start_ns: u64,
+    pub dur_ns: u64,
+    /// phase-specific payload, named per-phase in the Chrome export
+    pub args: [u64; 3],
+}
+
+/// One thread's bounded single-producer ring. Only the owning thread
+/// writes; `len` is the publication point (slot written before the
+/// `Release` store, so an `Acquire` reader sees fully-written spans).
+struct Shard {
+    buf: UnsafeCell<Box<[Span]>>,
+    len: AtomicUsize,
+}
+
+// SAFETY: slots at index >= len are touched only by the owning thread;
+// slots below len are write-once until a drain resets len, and drains
+// are documented quiescent-only.
+unsafe impl Sync for Shard {}
+
+impl Shard {
+    fn new() -> Self {
+        Shard {
+            buf: UnsafeCell::new(
+                vec![Span::default(); SHARD_CAP].into_boxed_slice(),
+            ),
+            len: AtomicUsize::new(0),
+        }
+    }
+
+    /// Owning thread only. Returns false (span dropped) when full.
+    fn push(&self, s: Span) -> bool {
+        let len = self.len.load(Ordering::Relaxed);
+        if len >= SHARD_CAP {
+            return false;
+        }
+        // SAFETY: single producer; this slot is unpublished (>= len).
+        unsafe {
+            (*self.buf.get())[len] = s;
+        }
+        self.len.store(len + 1, Ordering::Release);
+        true
+    }
+
+    fn drain(&self) -> Vec<Span> {
+        let n = self.len.load(Ordering::Acquire).min(SHARD_CAP);
+        // SAFETY: the published prefix is write-once (see type docs).
+        let out = unsafe { (*self.buf.get())[..n].to_vec() };
+        self.len.store(0, Ordering::Release);
+        out
+    }
+}
+
+thread_local! {
+    static LOCAL_SHARD: OnceCell<Arc<Shard>> = OnceCell::new();
+    static LOCAL_STREAM: Cell<u32> = Cell::new(0);
+}
+
+/// Tag spans recorded by this thread with a stream id (workers call this
+/// once at startup; unlabeled threads record as stream 0).
+pub fn set_thread_stream(stream: u32) {
+    LOCAL_STREAM.with(|c| c.set(stream));
+}
+
+/// The global span recorder. All state is behind atomics except the
+/// shard registry, locked once per recording thread.
+pub struct Tracer {
+    /// f64 bits of the sampling fraction (0.0 = tracing off)
+    sample_bits: AtomicU64,
+    /// spans dropped because a thread's ring was full
+    dropped: AtomicU64,
+    shards: Mutex<Vec<Arc<Shard>>>,
+}
+
+static GLOBAL: OnceLock<Tracer> = OnceLock::new();
+
+/// The process-global tracer (the one every instrumentation site uses).
+pub fn tracer() -> &'static Tracer {
+    GLOBAL.get_or_init(Tracer::new)
+}
+
+impl Tracer {
+    fn new() -> Self {
+        Tracer {
+            sample_bits: AtomicU64::new(0f64.to_bits()),
+            dropped: AtomicU64::new(0),
+            shards: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// A standalone instance for benches and tests. CAUTION: rings are
+    /// registered per *thread* at first record, so only one tracer may
+    /// ever record from a given thread — a local instance must record
+    /// from threads the global tracer never touches, or be the only
+    /// recorder in its process (as the overhead bench is).
+    pub fn new_local() -> Self {
+        Self::new()
+    }
+
+    /// Set the per-request sampling fraction (clamped to `[0, 1]`;
+    /// NaN disables). `Coordinator::start` calls this from
+    /// `ServingConfig::trace_sample` / `XGR_TRACE_SAMPLE`.
+    pub fn configure(&self, sample: f64) {
+        let s = if sample.is_nan() { 0.0 } else { sample.clamp(0.0, 1.0) };
+        self.sample_bits.store(s.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn sample(&self) -> f64 {
+        f64::from_bits(self.sample_bits.load(Ordering::Relaxed))
+    }
+
+    /// One relaxed load — the entire cost of a disabled tracer.
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.sample() > 0.0
+    }
+
+    /// Deterministic per-request sampling decision: all spans of one
+    /// request keep or drop together, and reruns keep the same requests.
+    #[inline]
+    pub fn keep_request(&self, req_id: u64) -> bool {
+        keep_request_sampled(req_id, self.sample())
+    }
+
+    /// Record one span into the calling thread's ring (registering the
+    /// thread on first use). Never blocks; drops (and counts) when full.
+    pub fn record(
+        &self,
+        req_id: u64,
+        phase: SpanPhase,
+        start_ns: u64,
+        dur_ns: u64,
+        args: [u64; 3],
+    ) {
+        if !self.enabled() {
+            return;
+        }
+        LOCAL_SHARD.with(|cell| {
+            let shard = cell.get_or_init(|| {
+                let sh = Arc::new(Shard::new());
+                self.shards.lock().unwrap().push(sh.clone());
+                sh
+            });
+            let span = Span {
+                req_id,
+                stream: LOCAL_STREAM.with(|c| c.get()),
+                phase,
+                start_ns,
+                dur_ns,
+                args,
+            };
+            if !shard.push(span) {
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+            }
+        });
+    }
+
+    /// Spans dropped to date because some thread's ring was full
+    /// (cumulative; surfaced as `trace_drops` in reports).
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Drain every thread's ring, merged and sorted by start time.
+    /// Quiescent-only (see module docs).
+    pub fn take(&self) -> Vec<Span> {
+        let mut out = Vec::new();
+        for shard in self.shards.lock().unwrap().iter() {
+            out.extend(shard.drain());
+        }
+        out.sort_by_key(|s| (s.start_ns, s.req_id));
+        out
+    }
+}
+
+/// The sampling decision as a pure function — the DES uses it directly
+/// (its spans live on simulated time, outside the global tracer) so both
+/// modes keep exactly the same request ids at a given fraction.
+#[inline]
+pub fn keep_request_sampled(req_id: u64, sample: f64) -> bool {
+    if !(sample > 0.0) {
+        false
+    } else if sample >= 1.0 {
+        true
+    } else {
+        splitmix64(req_id) < (sample * u64::MAX as f64) as u64
+    }
+}
+
+/// SplitMix64 finalizer — the sampling hash (full-avalanche, so request
+/// ids sharing low bits do not bias the kept set).
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+/// Render spans as Chrome `trace_event` JSON (load in `chrome://tracing`
+/// or Perfetto): one complete (`"ph":"X"`) event per span, `pid` = stream,
+/// `tid` = request id (0 = the stream's tick track), timestamps in µs
+/// rebased to the earliest span.
+pub fn chrome_trace_json(spans: &[Span]) -> Json {
+    let t0 = spans.iter().map(|s| s.start_ns).min().unwrap_or(0);
+    let events = spans
+        .iter()
+        .map(|s| {
+            let names = s.phase.arg_names();
+            let args: Vec<(&str, Json)> = names
+                .iter()
+                .zip(s.args.iter())
+                .filter(|(n, _)| !n.is_empty())
+                .map(|(n, v)| (*n, Json::num(*v as f64)))
+                .collect();
+            Json::obj(vec![
+                ("name", Json::str(s.phase.name())),
+                ("cat", Json::str("xgr")),
+                ("ph", Json::str("X")),
+                ("ts", Json::num((s.start_ns - t0) as f64 / 1e3)),
+                ("dur", Json::num(s.dur_ns as f64 / 1e3)),
+                ("pid", Json::num(s.stream as f64)),
+                ("tid", Json::num(s.req_id as f64)),
+                ("args", Json::obj(args)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("traceEvents", Json::arr(events)),
+        ("displayTimeUnit", Json::str("ms")),
+    ])
+}
+
+/// Write spans as a Chrome trace file.
+pub fn write_chrome_trace(
+    path: &std::path::Path,
+    spans: &[Span],
+) -> crate::Result<()> {
+    std::fs::write(path, chrome_trace_json(spans).to_string())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_drops_when_full_and_drain_resets() {
+        let sh = Shard::new();
+        let mut dropped = 0;
+        for i in 0..SHARD_CAP + 10 {
+            let ok = sh.push(Span {
+                req_id: i as u64,
+                ..Span::default()
+            });
+            if !ok {
+                dropped += 1;
+            }
+        }
+        assert_eq!(dropped, 10);
+        let spans = sh.drain();
+        assert_eq!(spans.len(), SHARD_CAP);
+        assert_eq!(spans[0].req_id, 0);
+        assert_eq!(spans[SHARD_CAP - 1].req_id, SHARD_CAP as u64 - 1);
+        assert!(sh.drain().is_empty());
+        assert!(sh.push(Span::default()), "drain must free the ring");
+    }
+
+    #[test]
+    fn sampling_is_deterministic_and_proportional() {
+        let t = Tracer::new();
+        t.configure(0.0);
+        assert!(!t.enabled());
+        assert!(!t.keep_request(7));
+        t.configure(1.0);
+        assert!((0..1000).all(|i| t.keep_request(i)));
+        t.configure(0.5);
+        let kept: usize =
+            (0..10_000).filter(|&i| t.keep_request(i)).count();
+        assert!(
+            (4_000..=6_000).contains(&kept),
+            "0.5 sampling kept {kept}/10000"
+        );
+        // same id, same decision
+        for i in 0..100 {
+            assert_eq!(t.keep_request(i), t.keep_request(i));
+        }
+        // out-of-range / NaN inputs degrade safely
+        t.configure(7.5);
+        assert!(t.keep_request(3));
+        t.configure(f64::NAN);
+        assert!(!t.enabled());
+    }
+
+    #[test]
+    fn record_take_roundtrip_with_stream_labels() {
+        // a dedicated tracer + a fresh thread: fresh thread-locals, no
+        // interference with the process-global tracer other tests use
+        let t = Tracer::new();
+        t.configure(1.0);
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                set_thread_stream(3);
+                t.record(9, SpanPhase::Prefill, 100, 50, [4, 0, 0]);
+                t.record(9, SpanPhase::Decode, 150, 25, [8, 1, 0]);
+                t.record(0, SpanPhase::Tick, 100, 80, [2, 16, 1]);
+            });
+        });
+        let spans = t.take();
+        assert_eq!(spans.len(), 3);
+        assert!(spans.iter().all(|s| s.stream == 3));
+        assert!(spans.windows(2).all(|w| w[0].start_ns <= w[1].start_ns));
+        assert_eq!(t.dropped(), 0);
+        assert!(t.take().is_empty(), "take drains");
+    }
+
+    #[test]
+    fn chrome_export_parses_and_rebases_timestamps() {
+        let spans = vec![
+            Span {
+                req_id: 1,
+                stream: 0,
+                phase: SpanPhase::Queue,
+                start_ns: 5_000,
+                dur_ns: 2_000,
+                args: [0; 3],
+            },
+            Span {
+                req_id: 1,
+                stream: 0,
+                phase: SpanPhase::Prefill,
+                start_ns: 7_000,
+                dur_ns: 3_000,
+                args: [12, 0, 0],
+            },
+        ];
+        let j = chrome_trace_json(&spans);
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        let evs = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(evs[0].get("ts").unwrap().as_f64(), Some(0.0));
+        assert_eq!(evs[1].get("ts").unwrap().as_f64(), Some(2.0));
+        assert_eq!(evs[1].get("name").unwrap().as_str(), Some("prefill"));
+        assert_eq!(
+            evs[1].at("args.tokens").and_then(Json::as_f64),
+            Some(12.0)
+        );
+        // empty input still renders a valid document
+        let empty = chrome_trace_json(&[]);
+        assert!(Json::parse(&empty.to_string()).is_ok());
+    }
+}

@@ -6,10 +6,46 @@
 //! trace through the same harness.
 
 use crate::coordinator::{BackendStats, RecRequest, ServingBackend};
-use crate::metrics::{session_hit_rate, Histogram};
+use crate::metrics::{session_hit_rate, Histogram, Span, SpanPhase};
 use crate::util::{fmt_bytes, fmt_ns, now_ns};
 use crate::workload::Trace;
 use std::time::Duration;
+
+/// Per-phase latency histograms distilled from the tracer's request
+/// spans (all empty when tracing is off or nothing was sampled).
+#[derive(Default)]
+pub struct PhaseLatencies {
+    pub queue: Histogram,
+    pub prefill: Histogram,
+    pub mask: Histogram,
+    pub decode: Histogram,
+    pub sort: Histogram,
+}
+
+impl PhaseLatencies {
+    pub fn from_spans(spans: &[Span]) -> Self {
+        let mut p = PhaseLatencies::default();
+        for s in spans {
+            match s.phase {
+                SpanPhase::Queue => p.queue.record(s.dur_ns),
+                SpanPhase::Prefill => p.prefill.record(s.dur_ns),
+                SpanPhase::Mask => p.mask.record(s.dur_ns),
+                SpanPhase::Decode => p.decode.record(s.dur_ns),
+                SpanPhase::Sort => p.sort.record(s.dur_ns),
+                SpanPhase::Tick => {} // engine-wide, not a request phase
+            }
+        }
+        p
+    }
+
+    pub fn total_count(&self) -> u64 {
+        self.queue.count()
+            + self.prefill.count()
+            + self.mask.count()
+            + self.decode.count()
+            + self.sort.count()
+    }
+}
 
 /// Replay outcome.
 pub struct ReplayReport {
@@ -58,6 +94,17 @@ pub struct ReplayReport {
     pub batch_rejects: u64,
     /// session hit rate per replica (one element for a single engine)
     pub per_replica_hit_rates: Vec<f64>,
+    /// phase spans drained from the tracer at the end of the replay
+    /// (empty with tracing off); exportable via `write_chrome_trace`
+    pub spans: Vec<Span>,
+    /// per-phase latency histograms distilled from `spans`
+    pub phases: PhaseLatencies,
+    /// spans dropped on full trace rings (process-global)
+    pub trace_drops: u64,
+    /// saturated gauge underflows (process-global, a bug signal)
+    pub gauge_underflows: u64,
+    /// full per-replica stat shards (cluster runs; empty otherwise)
+    pub per_replica: Vec<BackendStats>,
 }
 
 impl ReplayReport {
@@ -131,15 +178,28 @@ impl ReplayReport {
                 self.mean_stage_occupancy()
             ));
         }
-        if self.mask_lane_fallbacks > 0 {
+        if self.phases.total_count() > 0 {
+            let pq = |h: &Histogram| {
+                format!("{}/{}", fmt_ns(h.p50()), fmt_ns(h.p99()))
+            };
             s.push_str(&format!(
-                " mask_lane_fallbacks={}",
-                self.mask_lane_fallbacks
+                " phases[p50/p99]: queue={} prefill={} mask={} decode={} sort={}",
+                pq(&self.phases.queue),
+                pq(&self.phases.prefill),
+                pq(&self.phases.mask),
+                pq(&self.phases.decode),
+                pq(&self.phases.sort),
             ));
         }
-        if self.batch_rejects > 0 {
-            s.push_str(&format!(" batch_rejects={}", self.batch_rejects));
-        }
+        // engine-health segment — always printed, zeros are a signal too
+        s.push_str(&format!(
+            " mask_lane_fallbacks={} batch_rejects={} trace_drops={} \
+             gauge_underflows={}",
+            self.mask_lane_fallbacks,
+            self.batch_rejects,
+            self.trace_drops,
+            self.gauge_underflows,
+        ));
         if self.per_replica_hit_rates.len() > 1 {
             let rates: Vec<String> = self
                 .per_replica_hit_rates
@@ -148,7 +208,27 @@ impl ReplayReport {
                 .collect();
             s.push_str(&format!(" replica_hit_rates=[{}]", rates.join(",")));
         }
+        if self.per_replica.len() > 1 {
+            let shards: Vec<String> = self
+                .per_replica
+                .iter()
+                .enumerate()
+                .map(|(i, r)| {
+                    format!(
+                        "{i}:done={},batches={},hits={},steals={}",
+                        r.requests_done, r.batches, r.session_hits, r.batch_steals
+                    )
+                })
+                .collect();
+            s.push_str(&format!(" per_replica=[{}]", shards.join(" ")));
+        }
         s
+    }
+
+    /// Export the drained spans as a Chrome `trace_event` JSON file
+    /// (open in `chrome://tracing` or Perfetto).
+    pub fn write_chrome_trace(&self, path: &std::path::Path) -> crate::Result<()> {
+        crate::metrics::trace::write_chrome_trace(path, &self.spans)
     }
 
     fn apply_stats(&mut self, st: &BackendStats) {
@@ -175,6 +255,9 @@ impl ReplayReport {
         self.mask_lane_fallbacks = st.mask_lane_fallbacks;
         self.batch_rejects = st.batch_rejects;
         self.per_replica_hit_rates = st.per_replica_hit_rates.clone();
+        self.trace_drops = st.trace_drops;
+        self.gauge_underflows = st.gauge_underflows;
+        self.per_replica = st.per_replica.clone();
     }
 }
 
@@ -293,8 +376,17 @@ pub fn replay_trace<B: ServingBackend>(
         mask_lane_fallbacks: 0,
         batch_rejects: 0,
         per_replica_hit_rates: Vec::new(),
+        spans: Vec::new(),
+        phases: PhaseLatencies::default(),
+        trace_drops: 0,
+        gauge_underflows: 0,
+        per_replica: Vec::new(),
     };
     report.apply_stats(&coord.backend_stats());
+    // drain whatever the tracer captured during this replay; empty when
+    // tracing is off, so this is free in the default configuration
+    report.spans = crate::metrics::trace::tracer().take();
+    report.phases = PhaseLatencies::from_spans(&report.spans);
     report
 }
 

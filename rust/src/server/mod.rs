@@ -4,5 +4,5 @@
 pub mod driver;
 pub mod tcp;
 
-pub use driver::{replay_trace, ReplayReport};
+pub use driver::{replay_trace, PhaseLatencies, ReplayReport};
 pub use tcp::TcpServer;

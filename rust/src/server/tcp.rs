@@ -6,6 +6,11 @@
 //!                             prefix cache / affinity router can reuse
 //!                             the user's cached history KV across calls
 //!   `PING`                  → `PONG`
+//!   `STATS`                 → Prometheus-style plaintext counter dump
+//!                             (`xgr_*` lines, terminated by `# EOF`) —
+//!                             point a scraper or `nc` at it for live
+//!                             metrics; cluster backends include
+//!                             `{replica="i"}`-labelled shards
 //!   `QUIT`                  → closes the connection
 //! Errors answer `ERR <reason>`.
 //!
@@ -147,6 +152,12 @@ impl TcpServer {
                 writeln!(w, "PONG")?;
                 continue;
             }
+            if line == "STATS" {
+                // live metrics export: fold the backend's counters and
+                // render them Prometheus-style (ends with `# EOF`)
+                w.write_all(coord.backend_stats().to_prometheus().as_bytes())?;
+                continue;
+            }
             let Some(rest) = line.strip_prefix("REC") else {
                 writeln!(w, "ERR unknown command")?;
                 continue;
@@ -216,7 +227,7 @@ impl TcpServer {
 mod tests {
     use super::*;
     use crate::config::{ModelSpec, ServingConfig};
-    use crate::coordinator::EngineConfig;
+    use crate::coordinator::{Coordinator, EngineConfig};
     use crate::itemspace::{Catalog, ItemTrie};
     use crate::runtime::MockExecutor;
 
@@ -277,6 +288,25 @@ mod tests {
         r.read_line(&mut line).unwrap();
         assert!(line.starts_with("ERR"));
 
+        // STATS: Prometheus-style dump, terminated by `# EOF`
+        writeln!(s, "STATS").unwrap();
+        let mut dump = String::new();
+        loop {
+            line.clear();
+            r.read_line(&mut line).unwrap();
+            dump.push_str(&line);
+            if line.trim() == "# EOF" {
+                break;
+            }
+        }
+        assert!(dump.contains("xgr_requests_done"), "got {dump:?}");
+        assert!(dump.contains("xgr_session_hit_rate"), "got {dump:?}");
+        // the connection still serves requests after a dump
+        line.clear();
+        writeln!(s, "REC 2,3,4").unwrap();
+        r.read_line(&mut line).unwrap();
+        assert!(line.starts_with("OK "), "post-STATS got {line:?}");
+
         writeln!(s, "QUIT").unwrap();
         stop.store(true, Ordering::Relaxed);
         drop(s);
@@ -324,6 +354,19 @@ mod tests {
             r.read_line(&mut line).unwrap();
             assert!(line.starts_with("OK "), "turn {turn} got {line:?}");
         }
+        // a cluster STATS dump carries per-replica labelled shards
+        writeln!(s, "STATS").unwrap();
+        let mut dump = String::new();
+        loop {
+            line.clear();
+            r.read_line(&mut line).unwrap();
+            dump.push_str(&line);
+            if line.trim() == "# EOF" {
+                break;
+            }
+        }
+        assert!(dump.contains("{replica=\"0\"}"), "got {dump:?}");
+        assert!(dump.contains("{replica=\"1\"}"), "got {dump:?}");
         writeln!(s, "QUIT").unwrap();
         stop.store(true, Ordering::Relaxed);
         drop(s);

@@ -60,7 +60,8 @@ use super::kernels::{
 };
 use crate::config::{HardwareProfile, ModelSpec, ServingConfig};
 use crate::kvcache::{KvManager, PagedKv, SeparatedKv, TreeKv};
-use crate::metrics::Histogram;
+use crate::metrics::trace::keep_request_sampled;
+use crate::metrics::{Histogram, Span, SpanPhase};
 use crate::sessioncache::{PrefixPool, SessionCache, SessionCacheConfig};
 use crate::workload::Trace;
 use std::cmp::Reverse;
@@ -201,6 +202,10 @@ pub struct DesResult {
     pub cluster_replicas: usize,
     /// session hit rate per replica (empty when the cache is off)
     pub per_replica_hit_rates: Vec<f64>,
+    /// phase spans on simulated time (empty unless
+    /// `serving.trace_sample > 0`) — the live tracer's schema, so the
+    /// same Chrome export renders DES waterfalls
+    pub spans: Vec<Span>,
 }
 
 impl DesResult {
@@ -269,6 +274,12 @@ struct BatchTiming {
     stage_ticks: u64,
     /// Σ in-flight requests over those ticks (mean occupancy numerator)
     occupancy_sum: u64,
+    // per-phase device components (unstaged proportions; the span
+    // emitter rescales them to tile the batch's actual interval)
+    prefill_s: f64,
+    decode_s: f64,
+    mask_s: f64,
+    sort_s: f64,
 }
 
 /// `lens` are full prompt lengths (decode attends to the whole context);
@@ -315,6 +326,11 @@ fn batch_timing(
     // depends on the mode
     let mut prefill_dev = 0.0;
     let mut decode_dev = 0.0;
+    // phase attribution for span emission: how much of the device time
+    // is forward/KV work vs masking vs selection/sort
+    let mut decode_comp = 0.0;
+    let mut mask_comp = 0.0;
+    let mut sort_comp = 0.0;
 
     // ---- prefill phase (uncached suffixes only) ----
     // DRAM-tier session hits stream their prefix KV over the H2D link
@@ -354,6 +370,9 @@ fn batch_timing(
             host_phase += sort + maskc;
             host_s += host_phase;
             decode_dev += dev_phase + (sort + maskc); // device idles during host work
+            decode_comp += dev_phase;
+            mask_comp += maskc;
+            sort_comp += sort;
         } else {
             // xGR: device-resident filtering; host does sparse mask updates
             // + xbeam select + in-place reorder planning
@@ -389,6 +408,15 @@ fn batch_timing(
                 dev_phase += maskc + mask_h2d + sel + reorder;
             }
             decode_dev += dev_phase;
+            decode_comp += fwd + attn + launch_per_phase;
+            mask_comp += if overlap {
+                // only the mask work poking out past the forward/attn it
+                // hides behind shows up on the timeline
+                (fwd.max(maskc) - fwd) + (attn.max(mask_h2d) - attn)
+            } else {
+                maskc + mask_h2d
+            };
+            sort_comp += sel + reorder;
         }
     }
 
@@ -417,6 +445,10 @@ fn batch_timing(
             prefill_chunks: n_chunks,
             stage_ticks: ticks,
             occupancy_sum: b as u64 * ticks,
+            prefill_s: prefill_dev,
+            decode_s: decode_comp,
+            mask_s: mask_comp,
+            sort_s: sort_comp,
         }
     } else {
         BatchTiming {
@@ -425,6 +457,84 @@ fn batch_timing(
             prefill_chunks: 0,
             stage_ticks: 0,
             occupancy_sum: 0,
+            prefill_s: prefill_dev,
+            decode_s: decode_comp,
+            mask_s: mask_comp,
+            sort_s: sort_comp,
+        }
+    }
+}
+
+/// Emit one request's span waterfall for every sampled request of a
+/// dispatched batch: a Queue span (arrival → batch start) plus the four
+/// engine phases tiling `[start, done]` proportionally to the batch's
+/// modeled per-phase device time — the same schema the live tracer
+/// records, on simulated time.
+#[allow(clippy::too_many_arguments)]
+fn emit_request_spans(
+    spans: &mut Vec<Span>,
+    trace: &Trace,
+    req_idx: &[usize],
+    prefill_lens: &[usize],
+    timing: &BatchTiming,
+    sample: f64,
+    stream: usize,
+    bw: usize,
+    start: f64,
+    done: f64,
+) {
+    let start_ns = (start * 1e9) as u64;
+    let done_ns = (done * 1e9) as u64;
+    let total =
+        timing.prefill_s + timing.decode_s + timing.mask_s + timing.sort_s;
+    if total <= 0.0 || done_ns <= start_ns {
+        return;
+    }
+    let span_ns = (done_ns - start_ns) as f64;
+    for (j, &ri) in req_idx.iter().enumerate() {
+        let req_id = ri as u64 + 1; // id 0 is the tracer's tick track
+        if !keep_request_sampled(req_id, sample) {
+            continue;
+        }
+        let arrival = trace.requests[ri].arrival_ns;
+        spans.push(Span {
+            req_id,
+            stream: stream as u32,
+            phase: SpanPhase::Queue,
+            start_ns: arrival.min(start_ns),
+            dur_ns: start_ns.saturating_sub(arrival),
+            args: [0; 3],
+        });
+        let phases = [
+            (
+                SpanPhase::Prefill,
+                timing.prefill_s,
+                [prefill_lens[j] as u64, 0, 0],
+            ),
+            (SpanPhase::Decode, timing.decode_s, [bw as u64, 0, 0]),
+            (SpanPhase::Mask, timing.mask_s, [bw as u64, 0, 0]),
+            (SpanPhase::Sort, timing.sort_s, [bw as u64, 0, 0]),
+        ];
+        let mut t = start_ns;
+        let mut acc = 0.0;
+        for (k, (phase, phase_s, args)) in phases.iter().enumerate() {
+            acc += phase_s;
+            // the last phase ends exactly at `done` (no float drift)
+            let end = if k == phases.len() - 1 {
+                done_ns
+            } else {
+                start_ns + (span_ns * acc / total) as u64
+            };
+            let end = end.max(t);
+            spans.push(Span {
+                req_id,
+                stream: stream as u32,
+                phase: *phase,
+                start_ns: t,
+                dur_ns: end - t,
+                args: *args,
+            });
+            t = end;
         }
     }
 }
@@ -562,6 +672,11 @@ pub fn simulate(trace: &Trace, cfg: &DesConfig) -> DesResult {
     let parents: Vec<usize> = (0..bw).map(|i| i / 2).collect();
 
     let quota_s = cfg.serving.batch_wait_us as f64 / 1e6;
+
+    // span emission on simulated time (same schema + sampling as the
+    // live tracer; `trace_sample = 0` keeps this completely inert)
+    let trace_on = cfg.serving.trace_sample > 0.0;
+    let mut spans: Vec<Span> = Vec::new();
 
     macro_rules! try_dispatch {
         ($now:expr) => {{
@@ -768,6 +883,20 @@ pub fn simulate(trace: &Trace, cfg: &DesConfig) -> DesResult {
                                 + act_bytes_live
                                 + session_resident,
                         );
+                        if trace_on {
+                            emit_request_spans(
+                                &mut spans,
+                                trace,
+                                &req_idx,
+                                &prefill_lens,
+                                &timing,
+                                cfg.serving.trace_sample,
+                                si,
+                                bw,
+                                start,
+                                done,
+                            );
+                        }
                         events.push(Reverse(Ev {
                             t: done,
                             kind: EvKind::BatchDone {
@@ -924,6 +1053,20 @@ pub fn simulate(trace: &Trace, cfg: &DesConfig) -> DesResult {
                         + act_bytes_live
                         + session_resident,
                 );
+                if trace_on {
+                    emit_request_spans(
+                        &mut spans,
+                        trace,
+                        &req_idx,
+                        &prefill_lens,
+                        &timing,
+                        cfg.serving.trace_sample,
+                        si,
+                        bw,
+                        start,
+                        done,
+                    );
+                }
                 events.push(Reverse(Ev {
                     t: done,
                     kind: EvKind::BatchDone {
@@ -1100,6 +1243,7 @@ pub fn simulate(trace: &Trace, cfg: &DesConfig) -> DesResult {
         pool_peak_bytes: pool.as_ref().map(|p| p.peak_bytes()).unwrap_or(0),
         cluster_replicas: replicas,
         per_replica_hit_rates,
+        spans,
     }
 }
 
@@ -1127,6 +1271,44 @@ mod tests {
 
     fn trace(n: usize, rps: f64) -> Trace {
         AmazonLike::default().generate_lengths(n, rps, 42)
+    }
+
+    #[test]
+    fn des_emits_phase_spans_on_simulated_time() {
+        let mut c = cfg(EngineKind::Xgr, 8);
+        c.serving.trace_sample = 1.0;
+        let t = trace(40, 300.0);
+        let r = simulate(&t, &c);
+        let r2 = simulate(&t, &c);
+        assert!(!r.spans.is_empty());
+        assert_eq!(r.spans.len(), r2.spans.len(), "deterministic");
+        for ph in SpanPhase::REQUEST_PHASES {
+            assert!(
+                r.spans.iter().any(|s| s.phase == ph),
+                "missing phase {ph:?}"
+            );
+        }
+        // per-request waterfalls: every span carries a request id, and
+        // one request's spans never overlap
+        let mut by_req: HashMap<u64, Vec<&Span>> = HashMap::new();
+        for s in &r.spans {
+            assert_ne!(s.req_id, 0, "DES emits no tick track");
+            by_req.entry(s.req_id).or_default().push(s);
+        }
+        for (id, mut ss) in by_req {
+            ss.sort_by_key(|s| s.start_ns);
+            for w in ss.windows(2) {
+                assert!(
+                    w[0].start_ns + w[0].dur_ns <= w[1].start_ns,
+                    "request {id} spans overlap"
+                );
+            }
+        }
+        // tracing off (the default) is inert: no spans, same numbers
+        let r0 = simulate(&t, &cfg(EngineKind::Xgr, 8));
+        assert!(r0.spans.is_empty());
+        assert_eq!(r0.latency.p99(), r.latency.p99());
+        assert_eq!(r0.completed, r.completed);
     }
 
     #[test]

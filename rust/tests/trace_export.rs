@@ -1,0 +1,179 @@
+//! End-to-end phase tracing: a traced serving run yields per-request
+//! span waterfalls that export as valid Chrome `trace_event` JSON, the
+//! replay harness folds the same spans into per-phase latency
+//! histograms, and disabling the tracer changes no recommendation
+//! bytes.
+//!
+//! ONE test fn on purpose: the tracer is process-global (configured by
+//! `Coordinator::start`, drained by `take()`), so parallel #[test] fns
+//! in this binary would race each other's configure/drain. Integration
+//! tests run in their own process, so the lib tests are unaffected.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+use xgr::config::{ModelSpec, ServingConfig};
+use xgr::coordinator::{
+    Coordinator, EngineConfig, ExecutorFactory, RecRequest,
+};
+use xgr::itemspace::{Catalog, ItemTrie};
+use xgr::metrics::trace::{self, SpanPhase};
+use xgr::metrics::Span;
+use xgr::runtime::MockExecutor;
+use xgr::util::json::Json;
+use xgr::util::now_ns;
+use xgr::workload::AmazonLike;
+
+fn start(
+    serving: &ServingConfig,
+    trie: Arc<ItemTrie>,
+    spec: ModelSpec,
+) -> Coordinator {
+    let factory: ExecutorFactory =
+        Arc::new(move || Ok(Box::new(MockExecutor::new(spec.clone())) as _));
+    Coordinator::start(serving, EngineConfig::default(), trie, factory).unwrap()
+}
+
+/// Serve 20 requests one at a time (deterministic order) and return
+/// each request's recommendations and reported service time.
+fn serve_twenty(
+    coord: &Coordinator,
+) -> (HashMap<u64, Vec<[u32; 3]>>, HashMap<u64, u64>) {
+    let mut items = HashMap::new();
+    let mut service = HashMap::new();
+    // ids start at 1: the tracer reserves request id 0 for tick spans
+    for id in 1..=20u64 {
+        let len = 3 + (id as usize % 9);
+        coord
+            .submit_blocking(RecRequest {
+                id,
+                tokens: (0..len as u32).map(|t| 1 + (id as u32 + t) % 60).collect(),
+                arrival_ns: now_ns(),
+                user_id: id % 4,
+            })
+            .unwrap();
+        let r = coord
+            .recv_timeout(Duration::from_secs(20))
+            .expect("response timed out");
+        assert_eq!(r.id, id, "one request in flight at a time");
+        items.insert(id, r.items.iter().map(|(it, _)| *it).collect());
+        service.insert(id, r.service_ns);
+    }
+    (items, service)
+}
+
+#[test]
+fn trace_export_end_to_end() {
+    // CI runs this test with XGR_TRACE_SAMPLE=1; pin it so the first
+    // phase is deterministic under a bare `cargo test` too
+    std::env::set_var("XGR_TRACE_SAMPLE", "1");
+
+    let mut spec = ModelSpec::onerec_tiny();
+    spec.vocab = 64;
+    spec.beam_width = 4;
+    spec.seq = 48;
+    let catalog = Catalog::generate(64, 400, 3);
+    let trie = Arc::new(ItemTrie::build(&catalog));
+    let mut serving = ServingConfig::default();
+    // single sequential stream: one request's spans tile its service
+    // time with nothing interleaved between them
+    serving.num_streams = 1;
+    serving.batch_wait_us = 100;
+    serving.trace_sample = 1.0;
+
+    // ---- phase 1: traced run → raw spans + Chrome export ----
+    let coord = start(&serving, trie.clone(), spec.clone());
+    let (items_on, service_ns) = serve_twenty(&coord);
+    coord.shutdown();
+    let spans = trace::tracer().take();
+    assert!(!spans.is_empty(), "sampling at 1.0 must record spans");
+    assert_eq!(trace::tracer().dropped(), 0, "20 requests cannot fill a ring");
+    for ph in SpanPhase::REQUEST_PHASES {
+        assert!(
+            spans.iter().any(|s| s.phase == ph),
+            "no {ph:?} span recorded"
+        );
+    }
+    let mut by_req: HashMap<u64, Vec<&Span>> = HashMap::new();
+    for s in &spans {
+        if s.req_id != 0 {
+            by_req.entry(s.req_id).or_default().push(s);
+        }
+    }
+    assert_eq!(by_req.len(), 20, "every request sampled at 1.0");
+    for (id, mut ss) in by_req {
+        ss.sort_by_key(|s| (s.start_ns, s.dur_ns));
+        for w in ss.windows(2) {
+            assert!(
+                w[0].start_ns + w[0].dur_ns <= w[1].start_ns,
+                "request {id}: spans overlap ({:?} then {:?})",
+                w[0],
+                w[1]
+            );
+        }
+        // the engine-phase spans sum to the request's service time up
+        // to loop overhead (2ms slack on both sides)
+        let engine_ns: u64 = ss
+            .iter()
+            .filter(|s| s.phase != SpanPhase::Queue)
+            .map(|s| s.dur_ns)
+            .sum();
+        let svc = service_ns[&id];
+        assert!(
+            engine_ns <= svc + 2_000_000,
+            "request {id}: spans ({engine_ns}ns) exceed service ({svc}ns)"
+        );
+        assert!(
+            engine_ns + 2_000_000 >= svc / 2,
+            "request {id}: spans ({engine_ns}ns) cover too little of \
+             service ({svc}ns)"
+        );
+    }
+    // Chrome trace_event export round-trips through the JSON parser
+    let path = std::env::temp_dir()
+        .join(format!("xgr_trace_export_{}.json", std::process::id()));
+    trace::write_chrome_trace(&path, &spans).unwrap();
+    let parsed = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    std::fs::remove_file(&path).ok();
+    let evs = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+    assert_eq!(evs.len(), spans.len(), "one event per span");
+    for ph in SpanPhase::REQUEST_PHASES {
+        assert!(
+            evs.iter().any(|e| {
+                e.get("name").and_then(Json::as_str) == Some(ph.name())
+                    && e.get("ph").and_then(Json::as_str) == Some("X")
+            }),
+            "exported trace has no {ph:?} event"
+        );
+    }
+
+    // ---- phase 2: the replay harness folds spans into phase p50/p99
+    // and surfaces the tracer health counters in its summary ----
+    let coord = start(&serving, trie.clone(), spec.clone());
+    let wl = AmazonLike::for_seq_bucket(48).generate(&catalog, 20, 400.0, 7);
+    let report = xgr::server::replay_trace(&coord, &wl, 1.0);
+    coord.shutdown();
+    assert_eq!(report.completed, 20);
+    assert!(report.phases.total_count() > 0, "replay folds spans");
+    assert!(!report.spans.is_empty());
+    let summary = report.summary();
+    assert!(summary.contains("phases[p50/p99]"), "got: {summary}");
+    assert!(summary.contains("trace_drops="), "got: {summary}");
+    assert!(summary.contains("gauge_underflows="), "got: {summary}");
+
+    // ---- phase 3: the env override disables tracing, and a disabled
+    // tracer changes no recommendation bytes ----
+    std::env::set_var("XGR_TRACE_SAMPLE", "0");
+    let coord = start(&serving, trie, spec); // config still asks for 1.0
+    let (items_off, _) = serve_twenty(&coord);
+    coord.shutdown();
+    assert!(
+        trace::tracer().take().is_empty(),
+        "XGR_TRACE_SAMPLE=0 must win over trace_sample=1.0"
+    );
+    assert_eq!(
+        items_on, items_off,
+        "tracing changed the recommendation bytes"
+    );
+    std::env::remove_var("XGR_TRACE_SAMPLE");
+}
