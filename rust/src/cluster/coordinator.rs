@@ -54,11 +54,11 @@ use crate::metrics::Counters;
 use crate::sessioncache::PrefixPool;
 use crate::util::now_ns;
 use crate::util::pool::Channel;
+use crate::util::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::util::sync::{saturating_dec, Arc, Mutex, RwLock};
 use crate::Result;
 use anyhow::anyhow;
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
@@ -124,6 +124,8 @@ fn steal_tick(
     threshold: u64,
     max_batches: usize,
 ) -> bool {
+    // ordering: Relaxed — liveness snapshot for a heuristic pass; a
+    // replica killed mid-tick is caught by the coord read-lock below.
     let alive_v: Vec<bool> =
         alive.iter().map(|a| a.load(Ordering::Relaxed)).collect();
     let mut depths = vec![0u64; replicas.len()];
@@ -173,11 +175,9 @@ fn steal_tick(
                 Ok(()) => {
                     migrated = true;
                     saved += covered;
-                    let _ = outstanding[victim_i].fetch_update(
-                        Ordering::Relaxed,
-                        Ordering::Relaxed,
-                        |v| Some(v.saturating_sub(1)),
-                    );
+                    saturating_dec(&outstanding[victim_i]);
+                    // ordering: Relaxed — advisory load estimate for
+                    // placement; no memory is published under it.
                     outstanding[thief_i].fetch_add(1, Ordering::Relaxed);
                     // the user's prefix now lives (or will live) on the
                     // thief: future placements follow the migration
@@ -255,6 +255,10 @@ impl ClusterCoordinator {
                 std::thread::Builder::new()
                     .name(format!("xgr-cluster-fwd-{i}"))
                     .spawn(move || loop {
+                        // ordering: SeqCst — join handshake with
+                        // detach_replica's store; keeps the flag in the
+                        // same total order as the stores it pairs with
+                        // (visibility-only: no data rides on the flag).
                         let dur = if stop.load(Ordering::SeqCst) {
                             Duration::ZERO // drain what is left, then exit
                         } else {
@@ -262,11 +266,7 @@ impl ClusterCoordinator {
                         };
                         match coord.recv_timeout(dur) {
                             Some(mut resp) => {
-                                let _ = outstanding[i].fetch_update(
-                                    Ordering::Relaxed,
-                                    Ordering::Relaxed,
-                                    |v| Some(v.saturating_sub(1)),
-                                );
+                                saturating_dec(&outstanding[i]);
                                 resp.stream += offset;
                                 // non-blocking: a full merged channel
                                 // means consumers have plenty queued —
@@ -277,6 +277,7 @@ impl ClusterCoordinator {
                                 }
                             }
                             None => {
+                                // ordering: SeqCst — see the load above.
                                 if stop.load(Ordering::SeqCst) {
                                     return;
                                 }
@@ -318,6 +319,8 @@ impl ClusterCoordinator {
                 std::thread::Builder::new()
                     .name("xgr-cluster-steal".into())
                     .spawn(move || {
+                        // ordering: SeqCst — join handshake with
+                        // shutdown's store (visibility-only flag).
                         while !stop.load(Ordering::SeqCst) {
                             let stole = steal_tick(
                                 &replicas,
@@ -360,6 +363,8 @@ impl ClusterCoordinator {
     /// Stop replica `i`'s forwarder and take sole ownership of its
     /// coordinator (forwarder joined first, so the Arc is unique).
     fn detach_replica(&self, i: usize) -> Option<Coordinator> {
+        // ordering: SeqCst — join handshake: the forwarder polls this
+        // flag between recv rounds and must observe it before we join.
         self.replicas[i].stop.store(true, Ordering::SeqCst);
         if let Some(h) = self.replicas[i].forwarder.lock().unwrap().take() {
             let _ = h.join();
@@ -393,14 +398,19 @@ impl ClusterCoordinator {
             .lock()
             .unwrap()
             .replica_of(user)
+            // ordering: Relaxed — advisory liveness for a lookup API.
             .filter(|&r| self.alive[r].load(Ordering::Relaxed))
     }
 
     fn loads(&self) -> Vec<u64> {
+        // ordering: Relaxed — advisory load estimates for placement; a
+        // stale value only skews the tie-break, never correctness.
         self.outstanding.iter().map(|o| o.load(Ordering::Relaxed)).collect()
     }
 
     fn alive_vec(&self) -> Vec<bool> {
+        // ordering: Relaxed — liveness snapshot; submit() re-checks via
+        // the slot's RwLock, which is the authoritative gate.
         self.alive.iter().map(|a| a.load(Ordering::Relaxed)).collect()
     }
 
@@ -438,6 +448,7 @@ impl ClusterCoordinator {
             };
             match coord.submit(req) {
                 Ok(()) => {
+                    // ordering: Relaxed — advisory load estimate.
                     self.outstanding[r].fetch_add(1, Ordering::Relaxed);
                     // record where the user's prefix will live once served
                     self.router.lock().unwrap().note_placed(user, r, prompt_len);
@@ -493,6 +504,9 @@ impl ClusterCoordinator {
         if i >= self.replicas.len() {
             return Err(anyhow!("no replica {i}"));
         }
+        // ordering: SeqCst — kill ordering: router/steal snapshots must
+        // not see replica i alive after its slot is emptied below; one
+        // total order keeps the kill sequence easy to reason about.
         self.alive[i].store(false, Ordering::SeqCst);
         let Some(coord) = self.detach_replica(i) else {
             return Err(anyhow!("replica {i} already dead"));
@@ -507,6 +521,8 @@ impl ClusterCoordinator {
                 self.pending.lock().unwrap().push_back(resp);
             }
         }
+        // ordering: Relaxed — reset the advisory load estimate; the
+        // replica is already detached, nobody races this write.
         self.outstanding[i].store(0, Ordering::Relaxed);
         Ok(n)
     }
@@ -516,6 +532,7 @@ impl ClusterCoordinator {
     pub fn shutdown(self) -> Vec<RecResponse> {
         // stop the steal loop first: a steal mid-shutdown would race the
         // replica detach (and there is nothing left worth balancing)
+        // ordering: SeqCst — join handshake with the steal loop's poll.
         self.steal_stop.store(true, Ordering::SeqCst);
         if let Some(h) = self.steal_thread.lock().unwrap().take() {
             let _ = h.join();
@@ -571,7 +588,7 @@ impl ClusterCoordinator {
     }
 }
 
-#[cfg(test)]
+#[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
     use crate::config::ModelSpec;

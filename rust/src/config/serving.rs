@@ -1,6 +1,12 @@
 //! Serving parameters: SLO, batching policy, beam-search sizes, and the
 //! feature toggles used by the Fig 18 scheduling ablation.
+//!
+//! Every knob is wired through four surfaces that `cargo xtask lint`
+//! keeps in sync: [`ServingConfig::from_json`] (parse),
+//! [`ServingConfig::to_json`] (emit), [`ServingConfig::validate`]
+//! (bounds), and [`ServingConfig::apply_args`] (CLI flags).
 
+use crate::util::cli::Args;
 use crate::util::json::Json;
 use anyhow::{anyhow, Result};
 
@@ -185,6 +191,93 @@ impl ServingConfig {
         Ok(c)
     }
 
+    /// Emit as a JSON object with exactly the keys `from_json` accepts,
+    /// so `from_json(&c.to_json())` round-trips any valid config (the
+    /// linter checks every field appears on both sides).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("slo_ms", Json::num(self.slo_ms)),
+            ("beam_width", Json::num(self.beam_width as f64)),
+            ("top_k", Json::num(self.top_k as f64)),
+            ("max_batch_tokens", Json::num(self.max_batch_tokens as f64)),
+            ("max_batch_requests", Json::num(self.max_batch_requests as f64)),
+            ("batch_wait_us", Json::num(self.batch_wait_us as f64)),
+            ("num_streams", Json::num(self.num_streams as f64)),
+            ("queue_depth", Json::num(self.queue_depth as f64)),
+            ("session_cache", Json::Bool(self.session_cache)),
+            ("session_hbm_bytes", Json::num(self.session_hbm_bytes as f64)),
+            ("session_dram_bytes", Json::num(self.session_dram_bytes as f64)),
+            ("session_affinity", Json::Bool(self.session_affinity)),
+            ("affinity_spill_depth", Json::num(self.affinity_spill_depth as f64)),
+            ("affinity_stall_us", Json::num(self.affinity_stall_us as f64)),
+            ("cluster_replicas", Json::num(self.cluster_replicas as f64)),
+            ("pool_bytes", Json::num(self.pool_bytes as f64)),
+            ("prefix_ttl_us", Json::num(self.prefix_ttl_us as f64)),
+            ("steal_threshold", Json::num(self.steal_threshold as f64)),
+            ("steal_max_batches", Json::num(self.steal_max_batches as f64)),
+            ("prefill_chunk_tokens", Json::num(self.prefill_chunk_tokens as f64)),
+            ("batch_inbox_tokens", Json::num(self.batch_inbox_tokens as f64)),
+            ("trace_sample", Json::num(self.trace_sample)),
+            ("valid_filter", Json::Bool(self.features.valid_filter)),
+            ("graph_dispatch", Json::Bool(self.features.graph_dispatch)),
+            ("multi_stream", Json::Bool(self.features.multi_stream)),
+            ("overlap", Json::Bool(self.features.overlap)),
+        ])
+    }
+
+    /// Overlay CLI flags onto this config: every knob gets a
+    /// `--kebab-case` flag defaulting to the current value, so callers
+    /// pre-seed command-specific defaults and then apply. Booleans
+    /// accept bare `--flag` or `--flag true|false`. Pool knobs are
+    /// force-zeroed when the session cache ends up off (they require it;
+    /// see `validate`).
+    pub fn apply_args(&mut self, a: &Args) {
+        self.slo_ms = a.f64_or("slo-ms", self.slo_ms);
+        self.beam_width = a.usize_or("beam-width", self.beam_width);
+        self.top_k = a.usize_or("top-k", self.top_k);
+        self.max_batch_tokens =
+            a.usize_or("max-batch-tokens", self.max_batch_tokens);
+        self.max_batch_requests =
+            a.usize_or("max-batch-requests", self.max_batch_requests);
+        self.batch_wait_us = a.u64_or("batch-wait-us", self.batch_wait_us);
+        self.num_streams = a.usize_or("streams", self.num_streams);
+        self.queue_depth = a.usize_or("queue-depth", self.queue_depth);
+        self.session_cache = a.bool_or("session-cache", self.session_cache);
+        self.session_hbm_bytes =
+            a.u64_or("session-hbm-bytes", self.session_hbm_bytes);
+        self.session_dram_bytes =
+            a.u64_or("session-dram-bytes", self.session_dram_bytes);
+        self.session_affinity =
+            a.bool_or("session-affinity", self.session_affinity);
+        self.affinity_spill_depth =
+            a.usize_or("affinity-spill-depth", self.affinity_spill_depth);
+        self.affinity_stall_us =
+            a.u64_or("affinity-stall-us", self.affinity_stall_us);
+        self.cluster_replicas = a.usize_or("replicas", self.cluster_replicas);
+        self.pool_bytes = a.u64_or("pool-bytes", self.pool_bytes);
+        self.prefix_ttl_us = a.u64_or("prefix-ttl-us", self.prefix_ttl_us);
+        self.steal_threshold =
+            a.usize_or("steal-threshold", self.steal_threshold);
+        self.steal_max_batches =
+            a.usize_or("steal-max-batches", self.steal_max_batches);
+        self.prefill_chunk_tokens =
+            a.usize_or("prefill-chunk", self.prefill_chunk_tokens);
+        self.batch_inbox_tokens =
+            a.usize_or("batch-inbox-tokens", self.batch_inbox_tokens);
+        self.trace_sample = a.f64_or("trace-sample", self.trace_sample);
+        self.features.valid_filter =
+            a.bool_or("valid-filter", self.features.valid_filter);
+        self.features.graph_dispatch =
+            a.bool_or("graph-dispatch", self.features.graph_dispatch);
+        self.features.multi_stream =
+            a.bool_or("multi-stream", self.features.multi_stream);
+        self.features.overlap = a.bool_or("overlap", self.features.overlap);
+        if !self.session_cache {
+            self.pool_bytes = 0;
+            self.prefix_ttl_us = 0;
+        }
+    }
+
     pub fn validate(&self) -> Result<()> {
         if self.beam_width == 0 || self.top_k == 0 {
             return Err(anyhow!("beam_width and top_k must be positive"));
@@ -197,6 +290,16 @@ impl ServingConfig {
         }
         if self.max_batch_requests == 0 || self.max_batch_tokens == 0 {
             return Err(anyhow!("batch limits must be positive"));
+        }
+        if self.batch_wait_us > 60_000_000 {
+            return Err(anyhow!("batch_wait_us must be <= 60s"));
+        }
+        if self.queue_depth == 0 || self.queue_depth > 1 << 20 {
+            return Err(anyhow!("queue_depth must be in 1..=2^20"));
+        }
+        if self.session_hbm_bytes > 1 << 46 || self.session_dram_bytes > 1 << 46
+        {
+            return Err(anyhow!("session tier budgets must be <= 64 TiB"));
         }
         if self.affinity_spill_depth > 1024 {
             return Err(anyhow!("affinity_spill_depth must be <= 1024 batches"));
@@ -461,6 +564,131 @@ mod tests {
         // NaN is rejected, not silently truthy
         let mut c = ServingConfig::default();
         c.trace_sample = f64::NAN;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn to_json_round_trips_through_text() {
+        // a config with every field off its default
+        let mut c = ServingConfig::default();
+        c.slo_ms = 150.0;
+        c.beam_width = 256;
+        c.top_k = 64;
+        c.max_batch_tokens = 8192;
+        c.max_batch_requests = 32;
+        c.batch_wait_us = 500;
+        c.num_streams = 3;
+        c.queue_depth = 128;
+        c.session_cache = true;
+        c.session_hbm_bytes = 1 << 30;
+        c.session_dram_bytes = 1 << 32;
+        c.session_affinity = false;
+        c.affinity_spill_depth = 7;
+        c.affinity_stall_us = 1_000;
+        c.cluster_replicas = 3;
+        c.pool_bytes = 64 << 20;
+        c.prefix_ttl_us = 250_000;
+        c.steal_threshold = 5;
+        c.steal_max_batches = 2;
+        c.prefill_chunk_tokens = 64;
+        c.batch_inbox_tokens = 16 * 1024;
+        c.trace_sample = 0.5;
+        c.features.valid_filter = false;
+        c.features.graph_dispatch = false;
+        c.features.multi_stream = false;
+        c.features.overlap = false;
+        c.validate().unwrap();
+        let text = c.to_json().to_string();
+        let back =
+            ServingConfig::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(format!("{c:?}"), format!("{back:?}"));
+        // the default round-trips too
+        let d = ServingConfig::default();
+        let back = ServingConfig::from_json(&d.to_json()).unwrap();
+        assert_eq!(format!("{d:?}"), format!("{back:?}"));
+    }
+
+    #[test]
+    fn apply_args_maps_every_flag() {
+        let argv = [
+            "--slo-ms", "120", "--beam-width", "256", "--top-k", "32",
+            "--max-batch-tokens", "4096", "--max-batch-requests", "16",
+            "--batch-wait-us", "750", "--streams", "3", "--queue-depth",
+            "256", "--session-cache", "--session-hbm-bytes", "1048576",
+            "--session-dram-bytes", "2097152", "--session-affinity",
+            "false", "--affinity-spill-depth", "5", "--affinity-stall-us",
+            "900", "--replicas", "2", "--pool-bytes", "33554432",
+            "--prefix-ttl-us", "100000", "--steal-threshold", "4",
+            "--steal-max-batches", "3", "--prefill-chunk", "32",
+            "--batch-inbox-tokens", "8192", "--trace-sample", "0.1",
+            "--valid-filter", "false", "--graph-dispatch", "false",
+            "--multi-stream", "false", "--overlap", "false",
+        ];
+        let a = Args::parse(argv.iter().map(|s| s.to_string()).collect());
+        let mut c = ServingConfig::default();
+        c.apply_args(&a);
+        c.validate().unwrap();
+        assert_eq!(c.slo_ms, 120.0);
+        assert_eq!(c.beam_width, 256);
+        assert_eq!(c.top_k, 32);
+        assert_eq!(c.max_batch_tokens, 4096);
+        assert_eq!(c.max_batch_requests, 16);
+        assert_eq!(c.batch_wait_us, 750);
+        assert_eq!(c.num_streams, 3);
+        assert_eq!(c.queue_depth, 256);
+        assert!(c.session_cache);
+        assert_eq!(c.session_hbm_bytes, 1 << 20);
+        assert_eq!(c.session_dram_bytes, 1 << 21);
+        assert!(!c.session_affinity);
+        assert_eq!(c.affinity_spill_depth, 5);
+        assert_eq!(c.affinity_stall_us, 900);
+        assert_eq!(c.cluster_replicas, 2);
+        assert_eq!(c.pool_bytes, 32 << 20);
+        assert_eq!(c.prefix_ttl_us, 100_000);
+        assert_eq!(c.steal_threshold, 4);
+        assert_eq!(c.steal_max_batches, 3);
+        assert_eq!(c.prefill_chunk_tokens, 32);
+        assert_eq!(c.batch_inbox_tokens, 8192);
+        assert_eq!(c.trace_sample, 0.1);
+        assert!(!c.features.valid_filter);
+        assert!(!c.features.graph_dispatch);
+        assert!(!c.features.multi_stream);
+        assert!(!c.features.overlap);
+    }
+
+    #[test]
+    fn apply_args_defaults_and_pool_gate() {
+        // no flags: the config is untouched
+        let a = Args::parse(Vec::new());
+        let mut c = ServingConfig::default();
+        c.num_streams = 7;
+        c.apply_args(&a);
+        assert_eq!(c.num_streams, 7);
+        assert_eq!(format!("{c:?}"), {
+            let mut d = ServingConfig::default();
+            d.num_streams = 7;
+            format!("{d:?}")
+        });
+        // pool knobs without --session-cache are zeroed, not an error
+        let argv = ["--pool-bytes", "1048576", "--prefix-ttl-us", "5000"];
+        let a = Args::parse(argv.iter().map(|s| s.to_string()).collect());
+        let mut c = ServingConfig::default();
+        c.apply_args(&a);
+        assert_eq!(c.pool_bytes, 0);
+        assert_eq!(c.prefix_ttl_us, 0);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn new_bounds_validate() {
+        let j = Json::parse(r#"{"batch_wait_us": 61000000}"#).unwrap();
+        assert!(ServingConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"queue_depth": 0}"#).unwrap();
+        assert!(ServingConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"queue_depth": 2097152}"#).unwrap();
+        assert!(ServingConfig::from_json(&j).is_err());
+        let mut c = ServingConfig::default();
+        c.session_hbm_bytes = (1 << 46) + 1;
         assert!(c.validate().is_err());
     }
 

@@ -78,6 +78,18 @@ pub struct BackendStats {
     pub requests_rejected: u64,
     /// batches taken off stream queues by workers
     pub batches: u64,
+    /// prompt tokens actually prefilled (after cache/pool savings)
+    pub prefill_tokens: u64,
+    /// beam decode steps executed
+    pub decode_steps: u64,
+    /// executor kernel launches (mock or real)
+    pub kernel_launches: u64,
+    /// whole-graph dispatches (graph mode folds per-step launches)
+    pub graph_dispatches: u64,
+    /// host→device mask/state uploads
+    pub h2d_transfers: u64,
+    /// responses whose end-to-end latency exceeded the configured SLO
+    pub slo_violations: u64,
     pub session_hits: u64,
     pub session_misses: u64,
     pub session_swap_ins: u64,
@@ -141,6 +153,12 @@ impl BackendStats {
             requests_done: g(&c.requests_done),
             requests_rejected: g(&c.requests_rejected),
             batches: g(&c.batches),
+            prefill_tokens: g(&c.prefill_tokens),
+            decode_steps: g(&c.decode_steps),
+            kernel_launches: g(&c.kernel_launches),
+            graph_dispatches: g(&c.graph_dispatches),
+            h2d_transfers: g(&c.h2d_transfers),
+            slo_violations: g(&c.slo_violations),
             session_hits: g(&c.session_hits),
             session_misses: g(&c.session_misses),
             session_swap_ins: g(&c.session_swap_ins),
@@ -181,6 +199,12 @@ impl BackendStats {
         self.requests_done += o.requests_done;
         self.requests_rejected += o.requests_rejected;
         self.batches += o.batches;
+        self.prefill_tokens += o.prefill_tokens;
+        self.decode_steps += o.decode_steps;
+        self.kernel_launches += o.kernel_launches;
+        self.graph_dispatches += o.graph_dispatches;
+        self.h2d_transfers += o.h2d_transfers;
+        self.slo_violations += o.slo_violations;
         self.session_hits += o.session_hits;
         self.session_misses += o.session_misses;
         self.session_swap_ins += o.session_swap_ins;
@@ -229,6 +253,12 @@ impl BackendStats {
             requests_done,
             requests_rejected,
             batches,
+            prefill_tokens,
+            decode_steps,
+            kernel_launches,
+            graph_dispatches,
+            h2d_transfers,
+            slo_violations,
             session_hits,
             session_misses,
             session_swap_ins,
@@ -289,6 +319,9 @@ mod tests {
             requests_done: 4,
             requests_rejected: 1,
             batches: 2,
+            prefill_tokens: 100,
+            decode_steps: 12,
+            slo_violations: 1,
             trace_drops: 7,
             gauge_underflows: 1,
             ..Default::default()
@@ -297,6 +330,9 @@ mod tests {
             requests_in: 3,
             requests_done: 3,
             batches: 1,
+            prefill_tokens: 40,
+            decode_steps: 9,
+            slo_violations: 2,
             trace_drops: 2,
             gauge_underflows: 4,
             per_replica: vec![BackendStats::default()],
@@ -307,6 +343,9 @@ mod tests {
         assert_eq!(a.requests_done, 7);
         assert_eq!(a.requests_rejected, 1);
         assert_eq!(a.batches, 3);
+        assert_eq!(a.prefill_tokens, 140);
+        assert_eq!(a.decode_steps, 21);
+        assert_eq!(a.slo_violations, 3);
         // process-wide globals are the same counter seen twice
         assert_eq!(a.trace_drops, 7);
         assert_eq!(a.gauge_underflows, 4);

@@ -49,7 +49,7 @@ use crate::util::clockmap::ClockMap;
 use crate::util::now_ns;
 use crate::util::pool::Channel;
 use crate::Result;
-use std::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
@@ -371,6 +371,7 @@ impl Coordinator {
             responses.clone(),
             shards.clone(),
             serving.prefill_chunk_tokens,
+            serving.slo_ns(),
         );
 
         let ctl: Channel<SchedCtl> = Channel::bounded(4);
@@ -583,6 +584,9 @@ impl Coordinator {
                         }
                         // telemetry: requests still waiting inside this
                         // scheduler (batcher backlog + stalled batches)
+                        // ordering: Relaxed — advisory load signal for
+                        // the steal loop's victim choice; a stale value
+                        // only skews donor selection, never correctness.
                         sched_backlog.store(
                             batchers
                                 .iter()
@@ -736,6 +740,8 @@ impl Coordinator {
     /// popped — is excluded, which is exactly the stealable quantity.
     pub fn queued_work(&self) -> u64 {
         self.inbox.len() as u64
+            // ordering: Relaxed — advisory telemetry (see the store in
+            // the scheduler loop); steal decisions tolerate staleness.
             + self.sched_backlog.load(Ordering::Relaxed)
             + self
                 .stream_queues
@@ -1248,12 +1254,18 @@ mod tests {
         serving.max_batch_requests = 2;
         serving.session_cache = true;
         serving.affinity_spill_depth = 0; // isolate repair from spill
-        let failures = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let failures =
+            Arc::new(crate::util::sync::atomic::AtomicUsize::new(0));
         let factory: ExecutorFactory = {
             let spec = spec.clone();
             let failures = failures.clone();
             Arc::new(move || {
-                if failures.fetch_add(1, std::sync::atomic::Ordering::SeqCst) == 0 {
+                // ordering: SeqCst — test scaffolding (fail exactly the
+                // first factory call).
+                if failures
+                    .fetch_add(1, crate::util::sync::atomic::Ordering::SeqCst)
+                    == 0
+                {
                     return Err(anyhow::anyhow!("injected executor init failure"));
                 }
                 Ok(Box::new(MockExecutor::new(spec.clone())) as _)

@@ -33,6 +33,8 @@ impl Workers {
     /// Spawn one worker per queue in `queues` (queue i == stream i),
     /// each counting into its own shard `shards[i]`.
     /// `prefill_chunk_tokens > 0` selects the staged batch driver.
+    /// `slo_ns > 0` counts responses over that end-to-end latency into
+    /// `slo_violations` (0 disables the check).
     pub fn spawn(
         factory: ExecutorFactory,
         trie: Arc<ItemTrie>,
@@ -41,6 +43,7 @@ impl Workers {
         responses: Channel<RecResponse>,
         shards: Vec<Arc<Counters>>,
         prefill_chunk_tokens: usize,
+        slo_ns: u64,
     ) -> Workers {
         assert_eq!(shards.len(), queues.len(), "one counter shard per stream");
         let handles = (0..queues.len())
@@ -103,6 +106,9 @@ impl Workers {
                                     match res {
                                         Ok(resp) => {
                                             Counters::inc(&counters.requests_done);
+                                            if slo_ns > 0 && resp.latency_ns > slo_ns {
+                                                Counters::inc(&counters.slo_violations);
+                                            }
                                             if responses.send(resp).is_err() {
                                                 return;
                                             }
@@ -120,6 +126,9 @@ impl Workers {
                                     match engine.process(req, stream) {
                                         Ok(resp) => {
                                             Counters::inc(&counters.requests_done);
+                                            if slo_ns > 0 && resp.latency_ns > slo_ns {
+                                                Counters::inc(&counters.slo_violations);
+                                            }
                                             if responses.send(resp).is_err() {
                                                 return;
                                             }
@@ -202,6 +211,7 @@ mod tests {
             responses.clone(),
             shards.clone(),
             prefill_chunk_tokens,
+            0, // no SLO accounting in this harness
         );
         for b in 0..4 {
             let reqs = (0..3)

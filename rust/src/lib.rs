@@ -24,6 +24,11 @@
 //!
 //! See `DESIGN.md` for the full system inventory and experiment index.
 
+// `unsafe` is confined to an allowlist (`metrics/trace.rs` plus future
+// runtime FFI), each opting in with a module-level `#![allow]`;
+// `cargo xtask lint` enforces both sides of the contract.
+#![deny(unsafe_code)]
+
 pub mod util;
 pub mod config;
 pub mod metrics;

@@ -58,7 +58,10 @@ fn print_help() {
          simulate --model SPEC --hw ascend|h800 --engine xgr,vllm,xllm,tree\n\
          \u{20}        --rps LIST [--bw N] [--requests N] [--dataset amazon|jd]\n\
          \u{20}        [--revisit P] [--session-cache] [--prefill-chunk TOKENS]\n\
-         info     [--model SPEC]"
+         info     [--model SPEC]\n\n\
+         serve/replay accept every ServingConfig knob as a --kebab-case\n\
+         flag (--slo-ms, --queue-depth, --session-affinity false, ...);\n\
+         see ServingConfig::apply_args for the full list."
     );
 }
 
@@ -117,19 +120,19 @@ fn cmd_serve(args: &Args) -> i32 {
         Catalog::generate(spec.vocab as u32, spec.vocab * 8, args.u64_or("seed", 1));
     let trie = Arc::new(ItemTrie::build(&catalog));
     let mut serving = ServingConfig::default();
-    serving.num_streams = args.usize_or("streams", 2);
+    serving.num_streams = 2; // serve-mode default, overridable by --streams
+    serving.apply_args(args);
     // xGR-only: the baselines' real systems have no prefix reuse
-    serving.session_cache = args.flag("session-cache") && engine == "xgr";
-    serving.cluster_replicas = args.usize_or("replicas", 1);
-    serving.steal_threshold = args.usize_or("steal-threshold", 0);
-    serving.steal_max_batches = args.usize_or("steal-max-batches", 4);
-    serving.prefill_chunk_tokens = args.usize_or("prefill-chunk", 0);
-    serving.batch_inbox_tokens = args.usize_or("batch-inbox-tokens", 0);
-    if serving.session_cache {
-        serving.pool_bytes = args.u64_or("pool-bytes", 0);
-        serving.prefix_ttl_us = args.u64_or("prefix-ttl-us", 0);
+    if engine != "xgr" {
+        serving.session_cache = false;
+        serving.pool_bytes = 0;
+        serving.prefix_ttl_us = 0;
     }
     let serving = serving_for(&engine, &serving);
+    if let Err(e) = serving.validate() {
+        eprintln!("error: {e:#}");
+        return 2;
+    }
     let factory = build_factory(args, &engine, &spec);
     let addr = args.str_or("addr", "127.0.0.1:7878");
     let server = match TcpServer::bind(&addr) {
@@ -201,20 +204,21 @@ fn cmd_replay(args: &Args) -> i32 {
             .generate(&catalog, n, rps, seed),
     };
     let mut serving = ServingConfig::default();
-    serving.num_streams = args.usize_or("streams", 2);
-    serving.batch_wait_us = args.u64_or("batch-wait-us", 1000);
+    // replay-mode defaults, overridable by --streams / --batch-wait-us
+    serving.num_streams = 2;
+    serving.batch_wait_us = 1000;
+    serving.apply_args(args);
     // xGR-only: the baselines' real systems have no prefix reuse
-    serving.session_cache = args.flag("session-cache") && engine == "xgr";
-    serving.cluster_replicas = args.usize_or("replicas", 1);
-    serving.steal_threshold = args.usize_or("steal-threshold", 0);
-    serving.steal_max_batches = args.usize_or("steal-max-batches", 4);
-    serving.prefill_chunk_tokens = args.usize_or("prefill-chunk", 0);
-    serving.batch_inbox_tokens = args.usize_or("batch-inbox-tokens", 0);
-    if serving.session_cache {
-        serving.pool_bytes = args.u64_or("pool-bytes", 0);
-        serving.prefix_ttl_us = args.u64_or("prefix-ttl-us", 0);
+    if engine != "xgr" {
+        serving.session_cache = false;
+        serving.pool_bytes = 0;
+        serving.prefix_ttl_us = 0;
     }
     let serving = serving_for(&engine, &serving);
+    if let Err(e) = serving.validate() {
+        eprintln!("error: {e:#}");
+        return 2;
+    }
     let factory = build_factory(args, &engine, &spec);
     println!(
         "replaying {} requests at {:.1} rps through {} ({} streams × {} replicas, engine={engine})",

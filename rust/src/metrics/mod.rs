@@ -17,7 +17,7 @@
 //! | `kernel_launches` | executor, per kernel launch |
 //! | `graph_dispatches` | scheduler, per dispatched batch (graph mode) |
 //! | `h2d_transfers` | executor, per host→device copy |
-//! | `slo_violations` | replay driver, per response over `slo_ms` |
+//! | `slo_violations` | worker, per response over the `slo_ms` budget |
 //! | `session_hits` | worker, session-cache lookup fold |
 //! | `session_misses` | worker, session-cache lookup fold |
 //! | `session_evictions` | worker, session-cache demotion/drop fold |
@@ -56,10 +56,11 @@ pub use report::{
 };
 pub use trace::{Span, SpanPhase};
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::StaticCounter;
 
 /// Monotonic counters shared across pipeline threads.
-#[derive(Default, Debug)]
+#[derive(Debug)]
 pub struct Counters {
     pub requests_in: AtomicU64,
     pub requests_done: AtomicU64,
@@ -130,6 +131,47 @@ pub struct Counters {
     pub batch_rejects: AtomicU64,
 }
 
+// loom's atomics have no `const fn new` and no `Default`, so the
+// counter block is built field-by-field (the only construction site).
+impl Default for Counters {
+    fn default() -> Self {
+        Counters {
+            requests_in: AtomicU64::new(0),
+            requests_done: AtomicU64::new(0),
+            requests_rejected: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            prefill_tokens: AtomicU64::new(0),
+            decode_steps: AtomicU64::new(0),
+            kernel_launches: AtomicU64::new(0),
+            graph_dispatches: AtomicU64::new(0),
+            h2d_transfers: AtomicU64::new(0),
+            slo_violations: AtomicU64::new(0),
+            session_hits: AtomicU64::new(0),
+            session_misses: AtomicU64::new(0),
+            session_evictions: AtomicU64::new(0),
+            session_swap_ins: AtomicU64::new(0),
+            prefill_tokens_saved: AtomicU64::new(0),
+            affinity_spills: AtomicU64::new(0),
+            affinity_spills_warm: AtomicU64::new(0),
+            affinity_repairs: AtomicU64::new(0),
+            batch_steals: AtomicU64::new(0),
+            steal_tokens_saved: AtomicU64::new(0),
+            steal_aborts: AtomicU64::new(0),
+            pool_hits: AtomicU64::new(0),
+            pool_misses: AtomicU64::new(0),
+            pool_ttl_expirations: AtomicU64::new(0),
+            pool_epoch_drops: AtomicU64::new(0),
+            session_peak_hbm_bytes: AtomicU64::new(0),
+            session_peak_dram_bytes: AtomicU64::new(0),
+            prefill_chunks: AtomicU64::new(0),
+            stage_ticks: AtomicU64::new(0),
+            stage_occupancy_sum: AtomicU64::new(0),
+            mask_lane_fallbacks: AtomicU64::new(0),
+            batch_rejects: AtomicU64::new(0),
+        }
+    }
+}
+
 impl Counters {
     pub fn new() -> Self {
         Self::default()
@@ -137,22 +179,30 @@ impl Counters {
 
     #[inline]
     pub fn inc(c: &AtomicU64) {
+        // ordering: Relaxed — monotone telemetry tally; `fold_into`
+        // snapshots need no cross-field consistency, only that no bump
+        // is lost (atomicity), which RMW gives at any ordering.
         c.fetch_add(1, Ordering::Relaxed);
     }
 
     #[inline]
     pub fn add(c: &AtomicU64, v: u64) {
+        // ordering: Relaxed — see `inc`; counters publish no memory.
         c.fetch_add(v, Ordering::Relaxed);
     }
 
     #[inline]
     pub fn get(c: &AtomicU64) -> u64 {
+        // ordering: Relaxed — an eventually-consistent snapshot is the
+        // contract; readers (reports) run after joins or tolerate skew.
         c.load(Ordering::Relaxed)
     }
 
     /// Fold a gauge-style peak into a counter (running maximum).
     #[inline]
     pub fn max(c: &AtomicU64, v: u64) {
+        // ordering: Relaxed — fetch_max is idempotent and monotone, so
+        // racing folds converge to the true peak at any ordering.
         c.fetch_max(v, Ordering::Relaxed);
     }
 
@@ -215,32 +265,50 @@ impl Counters {
 /// Process-global count of saturated [`Gauge::sub`] underflows (a
 /// release accounted more than was ever added — a bug signal, surfaced
 /// in reports rather than silently wrapping the gauge to ~`u64::MAX`).
-static GAUGE_UNDERFLOWS: AtomicU64 = AtomicU64::new(0);
+/// A [`StaticCounter`] (always std-backed) because loom atomics cannot
+/// live in statics — see `util::sync` for the contract.
+static GAUGE_UNDERFLOWS: StaticCounter = StaticCounter::new(0);
 
 /// Total gauge underflows to date, process-wide.
 pub fn gauge_underflows() -> u64 {
-    GAUGE_UNDERFLOWS.load(Ordering::Relaxed)
+    GAUGE_UNDERFLOWS.get()
 }
 
 /// Peak-tracking gauge (bytes of KV memory etc.).
-#[derive(Default, Debug)]
+#[derive(Debug)]
 pub struct Gauge {
     current: AtomicU64,
     peak: AtomicU64,
 }
 
+impl Default for Gauge {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 impl Gauge {
     pub fn new() -> Self {
-        Self::default()
+        Gauge {
+            current: AtomicU64::new(0),
+            peak: AtomicU64::new(0),
+        }
     }
 
     pub fn set(&self, v: u64) {
+        // ordering: Relaxed — gauges are telemetry; current/peak need
+        // no joint snapshot (peak is monotone via fetch_max below).
         self.current.store(v, Ordering::Relaxed);
+        // ordering: Relaxed — monotone max, order-insensitive.
         self.peak.fetch_max(v, Ordering::Relaxed);
     }
 
     pub fn add(&self, v: u64) {
+        // ordering: Relaxed — atomic RMW keeps the tally exact; the
+        // gauge synchronizes no other memory.
         let cur = self.current.fetch_add(v, Ordering::Relaxed) + v;
+        // ordering: Relaxed — each adder folds its own observed level;
+        // the running max of those is the true peak at any ordering.
         self.peak.fetch_max(cur, Ordering::Relaxed);
     }
 
@@ -248,32 +316,48 @@ impl Gauge {
     /// was added) clamps at zero and bumps [`gauge_underflows`] instead
     /// of wrapping to ~`u64::MAX` and poisoning the peak.
     pub fn sub(&self, v: u64) {
-        let prev = self
-            .current
-            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |cur| {
-                Some(cur.saturating_sub(v))
-            })
-            .unwrap();
-        if prev < v {
-            GAUGE_UNDERFLOWS.fetch_add(1, Ordering::Relaxed);
+        // ordering: Relaxed (both CAS sides) — a pure accounting update
+        // on one cell; the saturation decision only needs the value the
+        // CAS itself certifies. Checked by `loom_gauge_sub_never_wraps`.
+        let mut cur = self.current.load(Ordering::Relaxed);
+        loop {
+            match self.current.compare_exchange_weak(
+                cur,
+                cur.saturating_sub(v),
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(prev) => {
+                    if prev < v {
+                        GAUGE_UNDERFLOWS.add(1);
+                    }
+                    return;
+                }
+                Err(now) => cur = now,
+            }
         }
     }
 
     pub fn current(&self) -> u64 {
+        // ordering: Relaxed — telemetry snapshot.
         self.current.load(Ordering::Relaxed)
     }
 
     pub fn peak(&self) -> u64 {
+        // ordering: Relaxed — telemetry snapshot of a monotone max.
         self.peak.load(Ordering::Relaxed)
     }
 
     pub fn reset(&self) {
+        // ordering: Relaxed — callers reset between runs, not racing
+        // recorders (a racing add may survive the reset, harmlessly).
         self.current.store(0, Ordering::Relaxed);
+        // ordering: Relaxed — same between-runs contract.
         self.peak.store(0, Ordering::Relaxed);
     }
 }
 
-#[cfg(test)]
+#[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
 
@@ -379,5 +463,77 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(Counters::get(&c.requests_in), 4000);
+    }
+}
+
+/// Loom models of the sharded-counter fold and the gauge. Run with
+/// `RUSTFLAGS="--cfg loom" cargo test --release --lib loom_`.
+#[cfg(all(test, loom))]
+mod loom_tests {
+    use super::*;
+    use crate::util::sync::Arc;
+
+    /// `fold_into` racing live increments never loses or double-counts:
+    /// a concurrent fold sees some prefix of the bumps, and a fold after
+    /// the incrementer joins sees every one exactly once.
+    #[test]
+    fn loom_counters_fold_into_never_loses_or_double_counts() {
+        loom::model(|| {
+            let sh = Arc::new(Counters::new());
+            let bumper = {
+                let sh = sh.clone();
+                loom::thread::spawn(move || {
+                    Counters::inc(&sh.requests_done);
+                    Counters::add(&sh.prefill_tokens, 3);
+                    Counters::inc(&sh.requests_done);
+                })
+            };
+            let mid = Counters::new();
+            sh.fold_into(&mid); // concurrent snapshot
+            assert!(Counters::get(&mid.requests_done) <= 2);
+            assert!(Counters::get(&mid.prefill_tokens) <= 3);
+            bumper.join().unwrap();
+            let fin = Counters::new();
+            sh.fold_into(&fin);
+            assert_eq!(Counters::get(&fin.requests_done), 2, "lost bump");
+            assert_eq!(Counters::get(&fin.prefill_tokens), 3, "lost add");
+        });
+    }
+
+    /// Peak folds (`Counters::max`) racing each other converge to the
+    /// true maximum, never a sum or a stale value.
+    #[test]
+    fn loom_counters_peak_fold_is_max_not_sum() {
+        loom::model(|| {
+            let agg = Arc::new(Counters::new());
+            let a = {
+                let agg = agg.clone();
+                loom::thread::spawn(move || {
+                    Counters::max(&agg.session_peak_hbm_bytes, 10);
+                })
+            };
+            Counters::max(&agg.session_peak_hbm_bytes, 7);
+            a.join().unwrap();
+            assert_eq!(Counters::get(&agg.session_peak_hbm_bytes), 10);
+        });
+    }
+
+    /// Concurrent over-release saturates at zero instead of wrapping —
+    /// the wrap poisoned the peak on the next add.
+    #[test]
+    fn loom_gauge_sub_never_wraps() {
+        loom::model(|| {
+            let g = Arc::new(Gauge::new());
+            g.add(1);
+            let s = {
+                let g = g.clone();
+                loom::thread::spawn(move || g.sub(2))
+            };
+            g.sub(1);
+            s.join().unwrap();
+            assert_eq!(g.current(), 0, "underflow must clamp");
+            g.add(1);
+            assert_eq!(g.peak(), 1, "peak poisoned by a wrapped current");
+        });
     }
 }

@@ -28,23 +28,28 @@
 //!
 //! Design: each recording thread owns one bounded single-producer ring
 //! ([`SHARD_CAP`] spans). A write fills the slot first, then publishes
-//! the new length with a `Release` store; [`Tracer::take`] reads lengths
-//! with `Acquire` and copies the published prefix, so the hot path never
-//! takes a lock (the registry mutex is touched once per thread, at
-//! registration). When a ring fills, further spans on that thread are
-//! *dropped* and counted in [`Tracer::dropped`] — never blocked on.
-//! Sampling is per-request and deterministic: a request is kept iff
+//! the new length with a `Release` store; a drain `Acquire`-reads the
+//! length, copies the published prefix and retires it with a
+//! `compare_exchange` back to zero — so the hot path never takes a lock
+//! (the registry mutex is touched once per thread, at registration).
+//! When a ring fills, further spans on that thread are *dropped* and
+//! counted in [`Tracer::dropped`] — never blocked on. Sampling is
+//! per-request and deterministic: a request is kept iff
 //! `splitmix64(req_id)` falls under the configured fraction, so every
 //! phase of one request keeps or drops together and reruns trace the
-//! same requests. `take` drains every ring; call it between runs (the
-//! replay driver does) when all workers are quiescent — a drain racing
-//! a recording thread is memory-safe but may re-deliver that thread's
-//! already-drained spans.
+//! same requests. [`Tracer::take`] drains every ring and is safe to run
+//! concurrently with recording threads: a span published mid-drain is
+//! delivered by that drain or the next one, exactly once (the loom
+//! models in this module check the full protocol; `CONCURRENCY.md`
+//! documents the ordering contract).
+
+#![allow(unsafe_code)] // the ring's published-prefix aliasing proof
 
 use crate::util::json::Json;
-use std::cell::{Cell, OnceCell, UnsafeCell};
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex, OnceLock};
+use crate::util::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use crate::util::sync::{Arc, Mutex, UnsafeCell};
+use std::cell::{Cell, OnceCell};
+use std::sync::OnceLock;
 
 /// Spans one thread can buffer between drains (drop-on-full past this).
 pub const SHARD_CAP: usize = 8192;
@@ -118,46 +123,99 @@ pub struct Span {
 /// One thread's bounded single-producer ring. Only the owning thread
 /// writes; `len` is the publication point (slot written before the
 /// `Release` store, so an `Acquire` reader sees fully-written spans).
+///
+/// Memory-ordering contract (model-checked in `loom_tests`):
+///
+/// * the producer's `push` Acquire-loads `len` — pairing with the
+///   drain's Release reset so a slot is only overwritten after the
+///   drain's copy of it provably completed;
+/// * the producer Release-stores `len + 1` after the slot write —
+///   publication;
+/// * the drain Acquire-loads `len`, copies the prefix, then
+///   `compare_exchange`es that exact length back to zero. A concurrent
+///   publication makes the CAS fail and the drain re-copies the longer
+///   prefix, so a span published mid-drain is delivered, not clobbered
+///   (a plain `store(0)` here silently lost such spans — caught by the
+///   `loom_regression` models).
 struct Shard {
     buf: UnsafeCell<Box<[Span]>>,
     len: AtomicUsize,
+    cap: usize,
 }
 
-// SAFETY: slots at index >= len are touched only by the owning thread;
-// slots below len are write-once until a drain resets len, and drains
-// are documented quiescent-only.
+// SAFETY: slots at index >= len are touched only by the owning producer
+// thread; slots below len are write-once between drains, and the
+// Acquire/Release protocol on `len` (above) orders every producer write
+// against every drain read. `unsafe impl` needed because UnsafeCell is
+// !Sync.
 unsafe impl Sync for Shard {}
 
 impl Shard {
     fn new() -> Self {
+        Self::with_cap(SHARD_CAP)
+    }
+
+    /// Ring with an explicit capacity — production uses [`SHARD_CAP`];
+    /// the loom models use tiny rings to keep the state space tractable.
+    fn with_cap(cap: usize) -> Self {
         Shard {
             buf: UnsafeCell::new(
-                vec![Span::default(); SHARD_CAP].into_boxed_slice(),
+                vec![Span::default(); cap].into_boxed_slice(),
             ),
             len: AtomicUsize::new(0),
+            cap,
         }
     }
 
     /// Owning thread only. Returns false (span dropped) when full.
     fn push(&self, s: Span) -> bool {
-        let len = self.len.load(Ordering::Relaxed);
-        if len >= SHARD_CAP {
+        // ordering: Acquire — pairs with the drain's Release-side CAS
+        // reset. Observing the reset len must also make the drain's
+        // prefix copy visible-as-finished before we overwrite those
+        // slots below (a Relaxed load here raced the drain's reads —
+        // the `loom_regression_relaxed_len_load_races_drain` model
+        // fails on it).
+        let len = self.len.load(Ordering::Acquire);
+        if len >= self.cap {
             return false;
         }
-        // SAFETY: single producer; this slot is unpublished (>= len).
-        unsafe {
-            (*self.buf.get())[len] = s;
-        }
+        // SAFETY: single producer; slot `len` is unpublished, and the
+        // Acquire load above ordered any drain's reads of it before us.
+        self.buf.with_mut(|p| unsafe { (*p)[len] = s });
+        // ordering: Release — publishes the slot write above; the
+        // drain's Acquire len load then sees a fully-written span
+        // (never torn).
         self.len.store(len + 1, Ordering::Release);
         true
     }
 
+    /// Drain the published prefix. Safe concurrent with the producer:
+    /// retries until it retires exactly the prefix it copied.
     fn drain(&self) -> Vec<Span> {
-        let n = self.len.load(Ordering::Acquire).min(SHARD_CAP);
-        // SAFETY: the published prefix is write-once (see type docs).
-        let out = unsafe { (*self.buf.get())[..n].to_vec() };
-        self.len.store(0, Ordering::Release);
-        out
+        loop {
+            // ordering: Acquire — pairs with push's Release publish, so
+            // every span below `raw` is fully written before we copy.
+            let raw = self.len.load(Ordering::Acquire);
+            let n = raw.min(self.cap);
+            // SAFETY: the published prefix is write-once until we retire
+            // it; the CAS below only succeeds if no new span landed.
+            let out = self.buf.with(|p| unsafe { (*p)[..n].to_vec() });
+            // ordering: AcqRel on success — the Release half orders our
+            // prefix reads above before the visible reset (push's
+            // Acquire load then licenses overwriting those slots);
+            // Acquire on failure so the retry's copy sees the span
+            // published by the racing push. A plain store(0) here lost
+            // concurrently published spans (see `loom_regression`).
+            match self.len.compare_exchange(
+                raw,
+                0,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => return out,
+                Err(_) => continue, // producer published mid-copy
+            }
+        }
     }
 }
 
@@ -212,10 +270,15 @@ impl Tracer {
     /// `ServingConfig::trace_sample` / `XGR_TRACE_SAMPLE`.
     pub fn configure(&self, sample: f64) {
         let s = if sample.is_nan() { 0.0 } else { sample.clamp(0.0, 1.0) };
+        // ordering: Relaxed — an isolated mode flag; recording threads
+        // may keep the old fraction for a few spans, which is benign
+        // (sampling is per-request, not a safety property).
         self.sample_bits.store(s.to_bits(), Ordering::Relaxed);
     }
 
     pub fn sample(&self) -> f64 {
+        // ordering: Relaxed — see `configure`; no memory is published
+        // through the sampling fraction.
         f64::from_bits(self.sample_bits.load(Ordering::Relaxed))
     }
 
@@ -260,6 +323,8 @@ impl Tracer {
                 args,
             };
             if !shard.push(span) {
+                // ordering: Relaxed — independent telemetry tally; the
+                // drop count synchronizes nothing.
                 self.dropped.fetch_add(1, Ordering::Relaxed);
             }
         });
@@ -268,11 +333,13 @@ impl Tracer {
     /// Spans dropped to date because some thread's ring was full
     /// (cumulative; surfaced as `trace_drops` in reports).
     pub fn dropped(&self) -> u64 {
+        // ordering: Relaxed — snapshot of a telemetry tally.
         self.dropped.load(Ordering::Relaxed)
     }
 
-    /// Drain every thread's ring, merged and sorted by start time.
-    /// Quiescent-only (see module docs).
+    /// Drain every thread's ring, merged and sorted by start time. Safe
+    /// concurrent with recording threads: each span is delivered by
+    /// exactly one drain (see [`Shard::drain`]).
     pub fn take(&self) -> Vec<Span> {
         let mut out = Vec::new();
         for shard in self.shards.lock().unwrap().iter() {
@@ -349,7 +416,7 @@ pub fn write_chrome_trace(
     Ok(())
 }
 
-#[cfg(test)]
+#[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
 
@@ -373,6 +440,42 @@ mod tests {
         assert_eq!(spans[SHARD_CAP - 1].req_id, SHARD_CAP as u64 - 1);
         assert!(sh.drain().is_empty());
         assert!(sh.push(Span::default()), "drain must free the ring");
+    }
+
+    #[test]
+    fn shard_drain_concurrent_with_push_delivers_exactly_once() {
+        // std-mode stress version of the loom exactly-once model: one
+        // producer races many drains; every pushed span must surface in
+        // exactly one drain (the CAS-retry drain; a store-reset drain
+        // lost spans published mid-copy)
+        let sh = std::sync::Arc::new(Shard::with_cap(64));
+        let total: u64 = 10_000;
+        let producer = {
+            let sh = sh.clone();
+            std::thread::spawn(move || {
+                let mut pushed = Vec::new();
+                for i in 0..total {
+                    while !sh.push(Span { req_id: i, ..Span::default() }) {
+                        std::thread::yield_now();
+                    }
+                    pushed.push(i);
+                }
+                pushed
+            })
+        };
+        let mut got = Vec::new();
+        loop {
+            for s in sh.drain() {
+                got.push(s.req_id);
+            }
+            if got.len() as u64 >= total {
+                break;
+            }
+            std::thread::yield_now();
+        }
+        let pushed = producer.join().unwrap();
+        got.sort_unstable();
+        assert_eq!(got, pushed, "lost, duplicated or torn span ids");
     }
 
     #[test]
@@ -458,5 +561,192 @@ mod tests {
         // empty input still renders a valid document
         let empty = chrome_trace_json(&[]);
         assert!(Json::parse(&empty.to_string()).is_ok());
+    }
+}
+
+/// Loom models of the ring protocol. Run with
+/// `RUSTFLAGS="--cfg loom" cargo test --release --lib loom_` (the CI
+/// `loom` job; needs the `loom` dev-dependency, injected there).
+#[cfg(all(test, loom))]
+mod loom_tests {
+    use super::*;
+
+    fn span(v: u64) -> Span {
+        // every field carries `v`, so a torn read is detectable as a
+        // span whose fields disagree
+        Span {
+            req_id: v,
+            stream: v as u32,
+            phase: SpanPhase::Prefill,
+            start_ns: v,
+            dur_ns: v,
+            args: [v, v, v],
+        }
+    }
+
+    fn consistent(s: &Span) -> bool {
+        s.stream as u64 == s.req_id
+            && s.start_ns == s.req_id
+            && s.dur_ns == s.req_id
+            && s.args == [s.req_id; 3]
+    }
+
+    /// Tentpole model: one producer, concurrent drains. No drained span
+    /// is ever torn, and every push lands in exactly one drain (or is
+    /// reported dropped by `push` returning false).
+    #[test]
+    fn loom_ring_publish_drain_never_tears_or_loses() {
+        loom::model(|| {
+            let sh = Arc::new(Shard::with_cap(2));
+            let producer = {
+                let sh = sh.clone();
+                loom::thread::spawn(move || {
+                    let mut accepted = Vec::new();
+                    for v in 1..=3u64 {
+                        if sh.push(span(v)) {
+                            accepted.push(v);
+                        }
+                    }
+                    accepted
+                })
+            };
+            let mut drained: Vec<Span> = sh.drain();
+            let accepted = producer.join().unwrap();
+            drained.extend(sh.drain());
+            assert!(
+                drained.iter().all(consistent),
+                "torn span escaped the ring"
+            );
+            let mut got: Vec<u64> =
+                drained.iter().map(|s| s.req_id).collect();
+            got.sort_unstable();
+            assert_eq!(
+                got, accepted,
+                "each accepted span must surface exactly once"
+            );
+        });
+    }
+
+    /// Drop accounting: pushes either land or report false; with a
+    /// cap-1 ring and no drain, exactly the overflow is dropped.
+    #[test]
+    fn loom_ring_drop_counts_exactly_the_overflow() {
+        loom::model(|| {
+            let sh = Shard::with_cap(1);
+            let mut dropped = 0u64;
+            for v in 1..=3u64 {
+                if !sh.push(span(v)) {
+                    dropped += 1;
+                }
+            }
+            assert_eq!(dropped, 2);
+            assert_eq!(sh.drain().len(), 1);
+        });
+    }
+
+    /// A replica of the ring as it shipped before this PR: `push` loads
+    /// `len` with Relaxed and `drain` retires with a plain store.
+    mod loom_regression {
+        use super::*;
+
+        struct OldShard {
+            buf: UnsafeCell<Box<[Span]>>,
+            len: AtomicUsize,
+            cap: usize,
+        }
+
+        // SAFETY: intentionally replicates the OLD (unsound) contract
+        // so the models below demonstrate the defects; never shipped.
+        unsafe impl Sync for OldShard {}
+
+        impl OldShard {
+            fn with_cap(cap: usize) -> Self {
+                OldShard {
+                    buf: UnsafeCell::new(
+                        vec![Span::default(); cap].into_boxed_slice(),
+                    ),
+                    len: AtomicUsize::new(0),
+                    cap,
+                }
+            }
+
+            fn push(&self, s: Span) -> bool {
+                // ordering: Relaxed — THE DEFECT under test: does not
+                // pair with drain's reset, so the slot write below can
+                // race the drain's copy (loom's cell tracking panics).
+                let len = self.len.load(Ordering::Relaxed);
+                if len >= self.cap {
+                    return false;
+                }
+                // SAFETY: the old (wrong) single-producer argument.
+                self.buf.with_mut(|p| unsafe { (*p)[len] = s });
+                // ordering: Release — publication (this half was right).
+                self.len.store(len + 1, Ordering::Release);
+                true
+            }
+
+            fn drain(&self) -> Vec<Span> {
+                // ordering: Acquire — pairs with push's publication.
+                let n = self.len.load(Ordering::Acquire).min(self.cap);
+                // SAFETY: the old (wrong) write-once argument.
+                let out =
+                    self.buf.with(|p| unsafe { (*p)[..n].to_vec() });
+                // ordering: Release — THE SECOND DEFECT: a plain reset
+                // clobbers a concurrently published len, losing that
+                // span without a drop count.
+                self.len.store(0, Ordering::Release);
+                out
+            }
+        }
+
+        /// Fails (loom detects the unsynchronized cell access) on the
+        /// pre-PR Relaxed `len` load in `push` — the regression lock
+        /// for upgrading it to Acquire.
+        #[test]
+        #[should_panic]
+        fn loom_regression_relaxed_len_load_races_drain() {
+            loom::model(|| {
+                let sh = Arc::new(OldShard::with_cap(2));
+                let producer = {
+                    let sh = sh.clone();
+                    loom::thread::spawn(move || {
+                        sh.push(span(1));
+                        sh.push(span(2));
+                    })
+                };
+                sh.drain();
+                sh.drain();
+                producer.join().unwrap();
+            });
+        }
+
+        /// Fails (an accepted span vanishes) on the pre-PR store-reset
+        /// drain — the regression lock for the CAS-retry drain.
+        #[test]
+        #[should_panic]
+        fn loom_regression_store_reset_drain_loses_published_span() {
+            loom::model(|| {
+                let sh = Arc::new(OldShard::with_cap(4));
+                let producer = {
+                    let sh = sh.clone();
+                    loom::thread::spawn(move || {
+                        let mut accepted = Vec::new();
+                        for v in 1..=2u64 {
+                            if sh.push(span(v)) {
+                                accepted.push(v);
+                            }
+                        }
+                        accepted
+                    })
+                };
+                let mut drained = sh.drain();
+                let accepted = producer.join().unwrap();
+                drained.extend(sh.drain());
+                let mut got: Vec<u64> =
+                    drained.iter().map(|s| s.req_id).collect();
+                got.sort_unstable();
+                assert_eq!(got, accepted, "span lost by store-reset");
+            });
+        }
     }
 }

@@ -61,6 +61,19 @@ pub struct ReplayReport {
     pub wall_s: f64,
     pub valid_items: u64,
     pub total_items: u64,
+    /// scheduler admissions / batches formed (the backend's view, which
+    /// may exceed `completed` when requests are shed downstream)
+    pub requests_in: u64,
+    pub batches: u64,
+    /// execution-volume counters (prompt tokens actually prefilled,
+    /// decode steps, kernel/graph dispatches, host→device uploads)
+    pub prefill_tokens: u64,
+    pub decode_steps: u64,
+    pub kernel_launches: u64,
+    pub graph_dispatches: u64,
+    pub h2d_transfers: u64,
+    /// responses that missed the configured latency SLO
+    pub slo_violations: u64,
     /// session prefix-cache activity (zero when the cache is off)
     pub session_hits: u64,
     pub session_misses: u64,
@@ -160,8 +173,12 @@ impl ReplayReport {
         }
         if self.pool_hits + self.pool_misses + self.pool_ttl_expirations > 0 {
             s.push_str(&format!(
-                " pool_hits={} pool_ttl_expired={} pool_epoch_drops={}",
-                self.pool_hits, self.pool_ttl_expirations, self.pool_epoch_drops
+                " pool_hits={} pool_misses={} pool_ttl_expired={} \
+                 pool_epoch_drops={}",
+                self.pool_hits,
+                self.pool_misses,
+                self.pool_ttl_expirations,
+                self.pool_epoch_drops
             ));
         }
         if self.batch_steals + self.steal_aborts > 0 {
@@ -176,6 +193,23 @@ impl ReplayReport {
                 self.prefill_chunks,
                 self.stage_ticks,
                 self.mean_stage_occupancy()
+            ));
+        }
+        // execution-volume segment (zero only when nothing decoded, e.g.
+        // a backend that rejected the whole trace)
+        if self.decode_steps > 0 {
+            s.push_str(&format!(
+                " requests_in={} batches={} prefill_tokens={} \
+                 decode_steps={} kernel_launches={} graph_dispatches={} \
+                 h2d_transfers={} slo_violations={}",
+                self.requests_in,
+                self.batches,
+                self.prefill_tokens,
+                self.decode_steps,
+                self.kernel_launches,
+                self.graph_dispatches,
+                self.h2d_transfers,
+                self.slo_violations,
             ));
         }
         if self.phases.total_count() > 0 {
@@ -232,6 +266,14 @@ impl ReplayReport {
     }
 
     fn apply_stats(&mut self, st: &BackendStats) {
+        self.requests_in = st.requests_in;
+        self.batches = st.batches;
+        self.prefill_tokens = st.prefill_tokens;
+        self.decode_steps = st.decode_steps;
+        self.kernel_launches = st.kernel_launches;
+        self.graph_dispatches = st.graph_dispatches;
+        self.h2d_transfers = st.h2d_transfers;
+        self.slo_violations = st.slo_violations;
         self.session_hits = st.session_hits;
         self.session_misses = st.session_misses;
         self.prefill_tokens_saved = st.prefill_tokens_saved;
@@ -353,6 +395,14 @@ pub fn replay_trace<B: ServingBackend>(
         wall_s: (now_ns() - t_start) as f64 / 1e9,
         valid_items,
         total_items,
+        requests_in: 0,
+        batches: 0,
+        prefill_tokens: 0,
+        decode_steps: 0,
+        kernel_launches: 0,
+        graph_dispatches: 0,
+        h2d_transfers: 0,
+        slo_violations: 0,
         session_hits: 0,
         session_misses: 0,
         prefill_tokens_saved: 0,
@@ -431,6 +481,12 @@ mod tests {
         assert!(report.latency.p99() >= report.service_lat.p99());
         assert!(report.summary().contains("queue_p99"));
         assert!(report.summary().contains("service_p99"));
+        // the execution-volume counters flow backend → report → summary
+        assert_eq!(report.requests_in, 30);
+        assert!(report.decode_steps > 0, "served requests must decode");
+        assert!(report.prefill_tokens > 0, "cold prompts must prefill");
+        assert!(report.summary().contains("decode_steps="));
+        assert!(report.summary().contains("slo_violations="));
         assert_eq!(report.valid_items, report.total_items);
         assert_eq!(report.session_hits + report.session_misses, 0, "cache off");
         coord.shutdown();

@@ -26,8 +26,10 @@ use crate::util::pool::Channel;
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use crate::util::sync::atomic::{
+    AtomicBool, AtomicU64, AtomicUsize, Ordering,
+};
+use crate::util::sync::{Arc, Mutex};
 use std::time::Duration;
 
 /// Request-id → the channel of the connection thread awaiting it.
@@ -73,7 +75,7 @@ impl TcpServer {
         // connection thread is alive (not merely while someone is mid-
         // request), or a request issued after the stop flag flips would
         // strand its waiter
-        let active = std::sync::atomic::AtomicUsize::new(0);
+        let active = AtomicUsize::new(0);
         // true while the accept loop may still produce connections; the
         // demux must not exit before it flips, or a connection accepted
         // in the same instant the stop flag was set would be served with
@@ -86,6 +88,12 @@ impl TcpServer {
             // queue; exits once accepting has ended and every connection
             // has closed
             s.spawn(|| loop {
+                // ordering: SeqCst — the demux-exit protocol needs a
+                // single total order over {accepting=false, active±1,
+                // these loads}: with anything weaker the demux could
+                // observe accepting=false yet miss an active increment
+                // sequenced before it, exiting while a connection still
+                // awaits a response.
                 if !accepting.load(Ordering::SeqCst)
                     && active.load(Ordering::SeqCst) == 0
                 {
@@ -99,15 +107,23 @@ impl TcpServer {
                     }
                 }
             });
+            // ordering: Relaxed — the stop flag is a plain shutdown
+            // request polled every accept tick; no data is published
+            // under it.
             while !self.stop.load(Ordering::Relaxed) {
                 match self.listener.accept() {
                     Ok((stream, _)) => {
                         let waiters = &waiters;
+                        // ordering: SeqCst — part of the demux-exit
+                        // protocol above; the increment must not be
+                        // reorderable past `accepting.store(false)`.
                         active.fetch_add(1, Ordering::SeqCst);
                         s.spawn(move || {
                             if let Err(e) = self.handle(stream, coord, waiters) {
                                 eprintln!("tcp: connection error: {e:#}");
                             }
+                            // ordering: SeqCst — demux-exit protocol
+                            // (see the demux loop's loads).
                             active.fetch_sub(1, Ordering::SeqCst);
                         });
                     }
@@ -117,11 +133,15 @@ impl TcpServer {
                     Err(e) => {
                         eprintln!("tcp: accept error: {e}");
                         // let callers polling the flag wind down too
+                        // ordering: Relaxed — advisory shutdown flag.
                         self.stop.store(true, Ordering::Relaxed);
                         break;
                     }
                 }
             }
+            // ordering: SeqCst — closes the demux-exit protocol: every
+            // `active` increment is SeqCst-before this store, so a demux
+            // that sees accepting=false also sees all live connections.
             accepting.store(false, Ordering::SeqCst);
         });
     }
@@ -189,6 +209,8 @@ impl TcpServer {
                 writeln!(w, "ERR empty prompt")?;
                 continue;
             }
+            // ordering: Relaxed — unique-id allocation only needs the
+            // RMW's atomicity, not any cross-thread visibility order.
             let id = self.next_id.fetch_add(1, Ordering::Relaxed);
             // register BEFORE submitting so the demux can never see the
             // response while no waiter exists
@@ -223,7 +245,7 @@ impl TcpServer {
     }
 }
 
-#[cfg(test)]
+#[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
     use crate::config::{ModelSpec, ServingConfig};
@@ -308,6 +330,7 @@ mod tests {
         assert!(line.starts_with("OK "), "post-STATS got {line:?}");
 
         writeln!(s, "QUIT").unwrap();
+        // ordering: Relaxed — advisory shutdown flag.
         stop.store(true, Ordering::Relaxed);
         drop(s);
         h.join().unwrap();
@@ -368,6 +391,7 @@ mod tests {
         assert!(dump.contains("{replica=\"0\"}"), "got {dump:?}");
         assert!(dump.contains("{replica=\"1\"}"), "got {dump:?}");
         writeln!(s, "QUIT").unwrap();
+        // ordering: Relaxed — advisory shutdown flag.
         stop.store(true, Ordering::Relaxed);
         drop(s);
         h.join().unwrap();
@@ -409,6 +433,7 @@ mod tests {
 
         writeln!(a, "QUIT").unwrap();
         writeln!(b, "QUIT").unwrap();
+        // ordering: Relaxed — advisory shutdown flag.
         stop.store(true, Ordering::Relaxed);
         drop(a);
         drop(b);

@@ -72,6 +72,21 @@ impl Args {
         self.bools.iter().any(|b| b == key) || self.get(key) == Some("true")
     }
 
+    /// Tri-state boolean: bare `--key` → true, `--key true|false` →
+    /// that value, absent → `default`. Unlike [`Args::flag`] this can
+    /// turn a default-on knob off (`--session-affinity false`).
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        if self.bools.iter().any(|b| b == key) {
+            return true;
+        }
+        match self.get(key) {
+            Some(v) => v.parse().unwrap_or_else(|_| {
+                panic!("--{key} wants true|false, got {v:?}")
+            }),
+            None => default,
+        }
+    }
+
     /// Comma-separated list of usize, e.g. `--bw 128,256,512`.
     pub fn usize_list_or(&self, key: &str, default: &[usize]) -> Vec<usize> {
         match self.get(key) {
@@ -128,5 +143,15 @@ mod tests {
         let a = parse("--a --b 3");
         assert!(a.flag("a"));
         assert_eq!(a.usize_or("b", 0), 3);
+    }
+
+    #[test]
+    fn bool_or_tristate() {
+        let a = parse("--on --off false --yes true");
+        assert!(a.bool_or("on", false), "bare flag is true");
+        assert!(!a.bool_or("off", true), "explicit false beats default");
+        assert!(a.bool_or("yes", false));
+        assert!(a.bool_or("missing", true), "absent keeps default");
+        assert!(!a.bool_or("missing2", false));
     }
 }

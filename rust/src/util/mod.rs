@@ -9,6 +9,7 @@ pub mod clockmap;
 pub mod pool;
 pub mod prop;
 pub mod heap;
+pub mod sync;
 
 /// Monotonic wall-clock in nanoseconds since an arbitrary epoch.
 pub fn now_ns() -> u64 {

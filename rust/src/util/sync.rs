@@ -1,0 +1,175 @@
+//! Concurrency-primitive shim: the single import point for atomics and
+//! the lock types backing every lock-free / shared structure in the
+//! crate (trace rings, sharded counters, channel, demux registry,
+//! scheduler backlog). Normal builds re-export `std`; under
+//! `RUSTFLAGS="--cfg loom"` the same names resolve to [loom]'s
+//! model-checked doubles, so the loom models in each module exercise the
+//! *production* types, not copies. `cargo xtask lint` rejects
+//! `std::sync::atomic` imports anywhere else in the tree, which is what
+//! keeps loom coverage from rotting as modules are added.
+//!
+//! [loom]: https://docs.rs/loom
+//!
+//! What to import from here:
+//!
+//! * `atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering}`
+//! * `Arc`, `Mutex`, `Condvar`, `RwLock` — for structures with loom
+//!   models (other modules may keep `std::sync` locks; only atomics are
+//!   confined by the linter)
+//! * [`UnsafeCell`] — loom-shaped (`with`/`with_mut` closures instead of
+//!   `get()`), so loom can track every raw access to the trace ring
+//! * [`StaticCounter`] — for process-global `static` counters: loom
+//!   atomics have no `const fn new` and model state cannot live in
+//!   statics, so this one is *always* std (documented exception)
+
+#[cfg(not(loom))]
+pub use std::sync::{Arc, Condvar, Mutex, MutexGuard, RwLock};
+
+#[cfg(loom)]
+pub use loom::sync::{Arc, Condvar, Mutex, MutexGuard, RwLock};
+
+/// Atomic integer/bool types plus `Ordering`, std- or loom-backed.
+#[cfg(not(loom))]
+pub mod atomic {
+    pub use std::sync::atomic::{
+        AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering,
+    };
+}
+
+#[cfg(loom)]
+pub mod atomic {
+    pub use loom::sync::atomic::{
+        AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering,
+    };
+}
+
+/// `UnsafeCell` with loom's closure-based access API. Loom's cell
+/// tracks every `with`/`with_mut` and panics the model on concurrent
+/// mutable access — this is how the trace-ring models catch torn reads.
+/// The std variant compiles down to the raw pointer with no overhead.
+///
+/// Like `std::cell::UnsafeCell` this type is `!Sync`; a container that
+/// hands out references across threads must justify its own
+/// `unsafe impl Sync` (see `metrics::trace::Shard`).
+#[cfg(not(loom))]
+#[derive(Debug, Default)]
+pub struct UnsafeCell<T>(std::cell::UnsafeCell<T>);
+
+#[cfg(not(loom))]
+impl<T> UnsafeCell<T> {
+    pub fn new(v: T) -> Self {
+        UnsafeCell(std::cell::UnsafeCell::new(v))
+    }
+
+    /// Shared access: the closure gets a `*const T`. The caller's
+    /// `unsafe` dereference carries the aliasing proof obligation.
+    #[inline]
+    pub fn with<R>(&self, f: impl FnOnce(*const T) -> R) -> R {
+        f(self.0.get())
+    }
+
+    /// Exclusive access: the closure gets a `*mut T`. The caller must
+    /// guarantee no concurrent access for the closure's duration.
+    #[inline]
+    pub fn with_mut<R>(&self, f: impl FnOnce(*mut T) -> R) -> R {
+        f(self.0.get())
+    }
+}
+
+#[cfg(loom)]
+pub use loom::cell::UnsafeCell;
+
+/// Saturating decrement of a relaxed telemetry counter (load/CAS loop —
+/// written out instead of `fetch_update` so the exact same code runs
+/// under loom). Used for per-replica `outstanding` load estimates: a
+/// double-completion race must floor at zero, never wrap to u64::MAX
+/// and make a replica look infinitely loaded.
+pub fn saturating_dec(a: &atomic::AtomicU64) {
+    use atomic::Ordering;
+    // ordering: Relaxed — the value is an advisory load estimate read
+    // by placement/steal heuristics; only the RMW's atomicity matters,
+    // no other memory is published under it.
+    let mut cur = a.load(Ordering::Relaxed);
+    loop {
+        let next = cur.saturating_sub(1);
+        // ordering: Relaxed — see above; failure re-reads the counter.
+        match a.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed)
+        {
+            Ok(_) => return,
+            Err(v) => cur = v,
+        }
+    }
+}
+
+/// A process-global monotonic counter for `static` use. Always
+/// std-backed — loom atomics cannot be constructed in `const` context
+/// and model state cannot outlive one model execution, so globals like
+/// `metrics::GAUGE_UNDERFLOWS` sit outside loom's view by design (their
+/// single `fetch_add`/`load` pair has no ordering-sensitive protocol to
+/// check). Relaxed everywhere: the count is telemetry, never
+/// synchronizes other memory.
+#[derive(Debug)]
+pub struct StaticCounter(std::sync::atomic::AtomicU64);
+
+impl StaticCounter {
+    pub const fn new(v: u64) -> Self {
+        StaticCounter(std::sync::atomic::AtomicU64::new(v))
+    }
+
+    #[inline]
+    pub fn add(&self, v: u64) {
+        // ordering: Relaxed — independent telemetry tally; readers want
+        // an eventually-consistent count, no other memory is published.
+        self.0.fetch_add(v, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn get(&self) -> u64 {
+        // ordering: Relaxed — see `add`; a snapshot read suffices.
+        self.0.load(std::sync::atomic::Ordering::Relaxed)
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn static_counter_counts() {
+        static C: StaticCounter = StaticCounter::new(5);
+        C.add(2);
+        assert!(C.get() >= 7, "monotone from the const seed");
+    }
+
+    #[test]
+    fn saturating_dec_floors_at_zero() {
+        let a = atomic::AtomicU64::new(1);
+        saturating_dec(&a);
+        saturating_dec(&a);
+        // ordering: Relaxed — single-threaded readback.
+        assert_eq!(a.load(atomic::Ordering::Relaxed), 0);
+    }
+}
+
+#[cfg(all(test, loom))]
+mod loom_tests {
+    use super::*;
+
+    /// Two racing decrements of a count of 1 must floor at zero in every
+    /// interleaving — a wrap to `u64::MAX` would make a replica look
+    /// infinitely loaded to the router forever.
+    #[test]
+    fn loom_saturating_dec_never_wraps() {
+        loom::model(|| {
+            let a = Arc::new(atomic::AtomicU64::new(1));
+            let t = {
+                let a = a.clone();
+                loom::thread::spawn(move || saturating_dec(&a))
+            };
+            saturating_dec(&a);
+            t.join().unwrap();
+            // ordering: Relaxed — post-join readback.
+            assert_eq!(a.load(atomic::Ordering::Relaxed), 0);
+        });
+    }
+}

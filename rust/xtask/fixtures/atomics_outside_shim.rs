@@ -1,0 +1,9 @@
+//! Fixture: imports the raw atomics module instead of going through
+//! `crate::util::sync::atomic`. Must trip `atomics-confined` anywhere
+//! except `src/util/sync.rs` itself.
+
+use std::sync::atomic::AtomicU64;
+
+pub struct Direct {
+    pub n: AtomicU64,
+}

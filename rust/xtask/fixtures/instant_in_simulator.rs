@@ -1,0 +1,10 @@
+//! Fixture: wall-clock reads. Under `src/simulator/` the two `now()`
+//! lines must trip `sim-deterministic`; outside it they are legal.
+
+use std::time::Instant;
+
+pub fn leak_wall_clock(start: Instant) -> u64 {
+    let mono = Instant::now();
+    let _wall = std::time::SystemTime::now();
+    mono.duration_since(start).as_nanos() as u64
+}

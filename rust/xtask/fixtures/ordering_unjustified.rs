@@ -1,0 +1,15 @@
+//! Fixture: one justified and one unjustified `Ordering::` use site.
+//! The unjustified `store` must trip the `ordering-justified` rule;
+//! the justified `load` must not.
+
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+
+pub fn bump(c: &AtomicU64) {
+    // no justification comment anywhere near this line
+    c.store(1, Ordering::Relaxed);
+}
+
+pub fn read(c: &AtomicU64) -> u64 {
+    // ordering: Relaxed — advisory read, no payload is published.
+    c.load(Ordering::Relaxed)
+}

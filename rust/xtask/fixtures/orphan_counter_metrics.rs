@@ -1,0 +1,36 @@
+//! Fixture: a miniature telemetry chain (Counters struct + every
+//! surface the `counters-wired` rule checks, bundled in one file).
+//! `requests_done` is wired everywhere; `ghost_counter` is declared in
+//! the struct but never folded, merged, exported or summarized — the
+//! rule must report it once per missing surface.
+
+pub struct Counters {
+    pub requests_done: AtomicU64,
+    pub ghost_counter: AtomicU64,
+}
+
+impl Counters {
+    pub fn fold_into(&self, into: &Counters) {
+        add!(requests_done);
+    }
+}
+
+impl BackendStats {
+    pub fn from_counters(c: &Counters) -> Self {
+        BackendStats { requests_done: g(&c.requests_done) }
+    }
+
+    pub fn merge(&mut self, o: &BackendStats) {
+        self.requests_done += o.requests_done;
+    }
+
+    fn emit_prometheus(&self, out: &mut String, labels: &str) {
+        counter!(requests_done);
+    }
+}
+
+impl ReplayReport {
+    pub fn summary(&self) -> String {
+        format!("completed={}", self.completed)
+    }
+}

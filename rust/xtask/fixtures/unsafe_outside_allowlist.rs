@@ -1,0 +1,9 @@
+//! Fixture: an `unsafe` block (and an `allow(unsafe_code)` escape)
+//! outside the allowlist. The word "unsafe" in this comment must NOT
+//! count — only the code below.
+
+#![allow(unsafe_code)]
+
+pub fn read_first(v: &[u8]) -> u8 {
+    unsafe { *v.as_ptr() }
+}

@@ -1,0 +1,46 @@
+//! Fixture: a miniature `ServingConfig` for the `config-wired` rule.
+//! `good_knob` is wired through all four surfaces; `good_flag` is a
+//! bool (exempt from `validate`); `mystery_knob` is parsed and has a
+//! CLI flag but is missing from `to_json` and `validate` — the rule
+//! must report exactly those two gaps.
+
+pub struct ServingConfig {
+    pub good_knob: usize,
+    pub mystery_knob: usize,
+    pub good_flag: bool,
+}
+
+impl ServingConfig {
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut c = ServingConfig::default();
+        for (k, v) in j.as_obj().unwrap() {
+            match k.as_str() {
+                "good_knob" => c.good_knob = v.as_usize().unwrap(),
+                "mystery_knob" => c.mystery_knob = v.as_usize().unwrap(),
+                "good_flag" => c.good_flag = v.as_bool().unwrap(),
+                _ => panic!("unknown key"),
+            }
+        }
+        Ok(c)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("good_knob", Json::num(self.good_knob as f64)),
+            ("good_flag", Json::Bool(self.good_flag)),
+        ])
+    }
+
+    pub fn apply_args(&mut self, a: &Args) {
+        self.good_knob = a.usize_or("good-knob", self.good_knob);
+        self.mystery_knob = a.usize_or("mystery-knob", self.mystery_knob);
+        self.good_flag = a.bool_or("good-flag", self.good_flag);
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.good_knob == 0 {
+            return Err(anyhow!("good_knob must be positive"));
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,34 @@
+use std::path::Path;
+use std::process::exit;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("lint") => {
+            // xtask lives at <crate root>/xtask
+            let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+                .parent()
+                .expect("xtask sits inside the crate root");
+            let violations = match xtask::lint_tree(root) {
+                Ok(v) => v,
+                Err(e) => {
+                    eprintln!("xtask lint: cannot walk {}: {e}", root.display());
+                    exit(2);
+                }
+            };
+            if violations.is_empty() {
+                println!("xtask lint: clean");
+                return;
+            }
+            for v in &violations {
+                println!("{v}");
+            }
+            eprintln!("xtask lint: {} violation(s)", violations.len());
+            exit(1);
+        }
+        _ => {
+            eprintln!("usage: cargo xtask lint");
+            exit(2);
+        }
+    }
+}
