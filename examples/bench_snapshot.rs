@@ -1,0 +1,275 @@
+//! Deterministic DES performance snapshot + self-hosted regression gate
+//! (the engine behind `cargo xtask bench`).
+//!
+//! Runs a fixed set of DES sweeps derived from the fig13/fig18/fig19
+//! harness configurations — every sweep uses `calibrate::analytic` host
+//! costs, so the numbers are a pure function of trace + config and are
+//! byte-stable across machines and runs — and renders an `xgr-bench-v1`
+//! JSON snapshot: per-sweep throughput, p50/p99 latency, per-phase
+//! critical-path shares (from the attribution module, on simulated
+//! time), and counter totals.
+//!
+//!     cargo run --release --example bench_snapshot -- --out BENCH_8.json
+//!     cargo run --release --example bench_snapshot -- --compare BENCH_8.json
+//!
+//! `--compare <baseline>` exits nonzero when any gated metric regresses
+//! past `--tolerance-pct` (default 5): throughput down, or p50/p99 up.
+//! Because the DES is deterministic, the tolerance only absorbs genuine
+//! behavior changes — an intentional perf change is recorded by
+//! regenerating the baseline with `--out`. A baseline carrying
+//! `"bootstrap": true` skips the numeric gate (schema is still checked)
+//! so the gate can be committed before the first trusted snapshot is
+//! recorded by CI hardware.
+
+use xgr::config::{HardwareProfile, ModelSpec, ServingConfig};
+use xgr::metrics::SpanPhase;
+use xgr::simulator::{calibrate, simulate, DesConfig, DesResult, EngineKind};
+use xgr::util::cli::Args;
+use xgr::util::json::Json;
+use xgr::workload::AmazonLike;
+
+fn sweep_json(r: &DesResult) -> Json {
+    let a = r.attribution();
+    let mut shares: Vec<(&str, Json)> = SpanPhase::REQUEST_PHASES
+        .iter()
+        .enumerate()
+        .map(|(i, p)| (p.name(), Json::num(a.phase_share(i))))
+        .collect();
+    shares.push(("unattributed", Json::num(a.unattributed_share())));
+    Json::obj(vec![
+        ("throughput_rps", Json::num(r.throughput_rps())),
+        ("p50_ms", Json::num(r.latency.p50() as f64 / 1e6)),
+        ("p99_ms", Json::num(r.p99_ms())),
+        ("mean_ms", Json::num(r.mean_ms())),
+        ("completed", Json::num(r.completed as f64)),
+        ("rejected", Json::num(r.rejected as f64)),
+        ("slo_violations", Json::num(r.slo_violations as f64)),
+        ("phase_share", Json::obj(shares)),
+        (
+            "counters",
+            Json::obj(vec![
+                ("batches", Json::num(r.batches as f64)),
+                ("prefill_chunks", Json::num(r.prefill_chunks as f64)),
+                ("stage_ticks", Json::num(r.stage_ticks as f64)),
+                ("session_hits", Json::num(r.session_hits as f64)),
+                ("pool_hits", Json::num(r.pool_hits as f64)),
+                ("batch_steals", Json::num(r.batch_steals as f64)),
+                ("kv_block_copies", Json::num(r.kv_block_copies as f64)),
+            ]),
+        ),
+    ])
+}
+
+/// One sweep: trace + config, both fully deterministic (fixed seed,
+/// analytic host model).
+fn run_sweep(
+    hw: &HardwareProfile,
+    model: &ModelSpec,
+    engine: EngineKind,
+    rps: f64,
+    n: usize,
+    revisit: f64,
+    tune: impl Fn(&mut ServingConfig),
+) -> DesResult {
+    let bw = 128;
+    let mut workload = AmazonLike::for_seq_bucket(model.seq);
+    if revisit > 0.0 {
+        workload = workload.with_revisit(revisit).with_revisit_skew(6.0);
+    }
+    let trace = workload.generate_lengths(n, rps, 42);
+    let mut serving = ServingConfig::default();
+    serving.beam_width = bw;
+    serving.top_k = bw;
+    // spans on simulated time feed the per-phase share columns
+    serving.trace_sample = 1.0;
+    tune(&mut serving);
+    let cfg = DesConfig {
+        hw: hw.clone(),
+        model: model.clone(),
+        serving,
+        engine,
+        // NEVER `calibrate::calibrate` here: measured host costs vary
+        // by machine and would make the gate flap
+        host: calibrate::analytic(bw, bw, model.vocab),
+    };
+    simulate(&trace, &cfg)
+}
+
+/// Compare `fresh` against `baseline`; returns human-readable failures.
+/// Gated per sweep: throughput may not drop, p50/p99 may not rise, by
+/// more than `tol_pct` percent. Sweeps present in the baseline but
+/// missing from the fresh run always fail (a silently dropped sweep is
+/// not a pass).
+fn gate(baseline: &Json, fresh: &Json, tol_pct: f64) -> Vec<String> {
+    let mut fails = Vec::new();
+    let Some(base_sweeps) = baseline.get("sweeps").and_then(Json::as_obj)
+    else {
+        return vec!["baseline has no `sweeps` object".into()];
+    };
+    for (name, base) in base_sweeps {
+        let Some(new) = fresh
+            .get("sweeps")
+            .and_then(|s| s.get(name))
+        else {
+            fails.push(format!("sweep `{name}` missing from fresh run"));
+            continue;
+        };
+        // (metric, true when larger-is-better)
+        for (metric, larger_is_better) in [
+            ("throughput_rps", true),
+            ("p50_ms", false),
+            ("p99_ms", false),
+        ] {
+            let (Some(old_v), Some(new_v)) = (
+                base.get(metric).and_then(Json::as_f64),
+                new.get(metric).and_then(Json::as_f64),
+            ) else {
+                fails.push(format!("sweep `{name}`: metric `{metric}` missing"));
+                continue;
+            };
+            if old_v < 1e-9 {
+                continue; // nothing meaningful to regress from
+            }
+            let pct = (new_v - old_v) / old_v * 100.0;
+            let regressed = if larger_is_better {
+                pct < -tol_pct
+            } else {
+                pct > tol_pct
+            };
+            if regressed {
+                fails.push(format!(
+                    "sweep `{name}`: {metric} {old_v:.3} -> {new_v:.3} \
+                     ({pct:+.1}% vs tolerance {tol_pct}%)"
+                ));
+            }
+        }
+    }
+    fails
+}
+
+fn main() -> xgr::Result<()> {
+    let args = Args::from_env();
+    let out_path = args.str_or("out", "");
+    let compare = args.str_or("compare", "");
+    let tol = args.f64_or("tolerance-pct", 5.0);
+    let n = args.usize_or("requests", 400);
+
+    println!(
+        "bench_snapshot: deterministic DES sweeps (analytic host costs), \
+         {n} requests per sweep"
+    );
+    let ascend = HardwareProfile::ascend_910b();
+    let h800 = HardwareProfile::h800();
+    let qwen = ModelSpec::qwen3_0_6b();
+    let onerec = ModelSpec::onerec_0_1b();
+
+    let mut sweeps: Vec<(&str, Json)> = Vec::new();
+    let mut run = |name: &'static str, r: DesResult| {
+        println!(
+            "  {name}: thru={:.1} rps p50={:.2} ms p99={:.2} ms completed={}",
+            r.throughput_rps(),
+            r.latency.p50() as f64 / 1e6,
+            r.p99_ms(),
+            r.completed
+        );
+        sweeps.push((name, sweep_json(&r)));
+    };
+
+    // fig13 shape: xGR vs the vLLM-like baseline at a moderate rate
+    run(
+        "fig13 qwen3-0.6b amazon xgr rps100",
+        run_sweep(&ascend, &qwen, EngineKind::Xgr, 100.0, n, 0.0, |_| {}),
+    );
+    run(
+        "fig13 qwen3-0.6b amazon vllm rps100",
+        run_sweep(&ascend, &qwen, EngineKind::VllmLike, 100.0, n, 0.0, |_| {}),
+    );
+    // fig18 shape: scheduling ablation endpoints + staged interleaving
+    run(
+        "fig18 onerec-0.1b noopts rps400",
+        run_sweep(&ascend, &onerec, EngineKind::Xgr, 400.0, n, 0.0, |s| {
+            s.features.multi_stream = false;
+            s.features.graph_dispatch = false;
+            s.features.overlap = false;
+        }),
+    );
+    run(
+        "fig18 onerec-0.1b full rps400",
+        run_sweep(&ascend, &onerec, EngineKind::Xgr, 400.0, n, 0.0, |_| {}),
+    );
+    run(
+        "fig18 onerec-0.1b staged256 rps400",
+        run_sweep(&ascend, &onerec, EngineKind::Xgr, 400.0, n, 0.0, |s| {
+            s.prefill_chunk_tokens = 256;
+        }),
+    );
+    // fig19 shape: portability (H800) + a pooled two-replica cluster
+    run(
+        "fig19 qwen3-0.6b h800 xgr rps64",
+        run_sweep(&h800, &qwen, EngineKind::Xgr, 64.0, n, 0.0, |_| {}),
+    );
+    run(
+        "fig19 onerec-0.1b cluster2 pool rps600",
+        run_sweep(&ascend, &onerec, EngineKind::Xgr, 600.0, n, 0.7, |s| {
+            s.num_streams = 2;
+            s.session_cache = true;
+            s.session_affinity = true;
+            s.max_batch_requests = 8;
+            s.cluster_replicas = 2;
+            s.pool_bytes = 512 << 20;
+        }),
+    );
+
+    let doc = Json::obj(vec![
+        ("schema", Json::str("xgr-bench-v1")),
+        ("requests_per_sweep", Json::num(n as f64)),
+        ("tolerance_pct", Json::num(tol)),
+        ("sweeps", Json::obj(sweeps)),
+    ]);
+
+    if !out_path.is_empty() {
+        std::fs::write(&out_path, format!("{doc}\n"))?;
+        println!("bench_snapshot: wrote snapshot to {out_path}");
+    }
+
+    if !compare.is_empty() {
+        // resolve as given, falling back to the repo root (one level
+        // above the crate) so CI can pass the committed baseline's name
+        let repo_root = concat!(env!("CARGO_MANIFEST_DIR"), "/..");
+        let text = std::fs::read_to_string(&compare).or_else(|_| {
+            std::fs::read_to_string(format!("{repo_root}/{compare}"))
+        })?;
+        let base = Json::parse(&text)?;
+        if base.get("schema").and_then(Json::as_str) != Some("xgr-bench-v1") {
+            eprintln!("bench_snapshot: baseline {compare} is not xgr-bench-v1");
+            std::process::exit(1);
+        }
+        if base.get("bootstrap").and_then(Json::as_bool) == Some(true) {
+            println!(
+                "bench_snapshot: baseline {compare} is a bootstrap \
+                 placeholder — schema checked, numeric gate skipped. \
+                 Record a real snapshot with `--out` to arm the gate."
+            );
+            return Ok(());
+        }
+        let tol = base
+            .get("tolerance_pct")
+            .and_then(Json::as_f64)
+            .unwrap_or(tol);
+        let fails = gate(&base, &doc, tol);
+        if !fails.is_empty() {
+            eprintln!(
+                "bench_snapshot: {} regression(s) vs {compare}:",
+                fails.len()
+            );
+            for f in &fails {
+                eprintln!("  {f}");
+            }
+            std::process::exit(1);
+        }
+        println!(
+            "bench_snapshot: no regressions vs {compare} (tolerance {tol}%)"
+        );
+    }
+    Ok(())
+}

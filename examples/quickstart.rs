@@ -169,6 +169,19 @@ fn main() -> xgr::Result<()> {
             println!("    … {} more", wf.len() - 8);
         }
     }
+    // Critical-path attribution answers what the raw waterfall cannot:
+    // *where did the time go?* A boundary sweep charges every instant of
+    // each request's window to exactly one phase (the most recently
+    // started active span), so overlapping spans never double-count and
+    // uncovered time lands in an explicit `unattributed` bucket. The
+    // rollup keeps share-of-latency histograms plus the slowest requests
+    // as full-timeline "p99 exemplars". The same code runs on the DES's
+    // simulated spans (`DesResult::attribution()`), and
+    // `trace_replay --attribution-out` writes it as a schema-versioned
+    // `xgr-attribution-v1` JSON document — so sim-vs-real phase-share
+    // drift is a plain document diff.
+    let attr = xgr::metrics::Attribution::from_spans(&spans, 2);
+    println!("{}", attr.summary().trim_start());
     coord.shutdown();
 
     // 6. cluster mode: N replicas behind the cache-aware router with a
@@ -257,6 +270,21 @@ fn main() -> xgr::Result<()> {
             .find(|l| l.contains("replica"))
             .unwrap_or_default()
     );
+    // 7. rate & SLO burn windows: the TCP front-end samples
+    // `backend_stats()` every `serving.stats_window_us` into a bounded
+    // snapshot ring; STATS then carries xgr_window_* rate gauges and
+    // xgr_slo_burn_rate (violation rate over the window divided by the
+    // 1% error budget — burn > 1 means the SLO budget is being spent
+    // faster than it accrues), and the `WATCH [n]` verb streams one
+    // digest line per window. The ring is plain library code, so the
+    // same digest works in-process:
+    let ring = xgr::server::SnapshotRing::new(2_000); // 2ms demo window
+    ring.push(&stats);
+    std::thread::sleep(Duration::from_millis(4));
+    ring.push(&cluster.backend_stats());
+    if let Some(w) = ring.latest() {
+        println!("burn window: {}", w.watch_line());
+    }
     cluster.shutdown();
     println!("quickstart OK");
     Ok(())

@@ -6,8 +6,12 @@
 //!
 //! Observability: `--trace-sample 1.0` turns the phase tracer on
 //! (sampled per request; the summary then includes per-phase p50/p99),
-//! and `--trace-out xgr.trace.json` exports the xGR run's spans as a
-//! Chrome `trace_event` file for `chrome://tracing` / Perfetto.
+//! `--trace-out xgr.trace.json` exports the xGR run's spans as a
+//! Chrome `trace_event` file for `chrome://tracing` / Perfetto, and
+//! `--attribution-out xgr.attr.json` writes the xGR run's critical-path
+//! attribution (`xgr-attribution-v1`: per-phase latency shares,
+//! blocking-phase tallies, p99 exemplar timelines — the same schema the
+//! DES emits on simulated time).
 
 use std::sync::Arc;
 use xgr::baselines;
@@ -27,6 +31,7 @@ fn main() -> xgr::Result<()> {
     let rps = args.f64_or("rps", 40.0);
     let trace_sample = args.f64_or("trace-sample", 0.0);
     let trace_out = args.str_or("trace-out", "");
+    let attribution_out = args.str_or("attribution-out", "");
     let use_mock = args.flag("mock")
         || Manifest::load(&artifacts, "onerec-tiny").is_err();
 
@@ -98,6 +103,14 @@ fn main() -> xgr::Result<()> {
             println!(
                 "{name}: wrote {} spans to {trace_out} (chrome://tracing)",
                 r.spans.len()
+            );
+        }
+        if !attribution_out.is_empty() && name == "xGR" {
+            std::fs::write(&attribution_out, r.attribution.to_json().to_string())?;
+            println!(
+                "{name}: wrote attribution for {} sampled requests to \
+                 {attribution_out} (xgr-attribution-v1)",
+                r.attribution.requests
             );
         }
         table.push(

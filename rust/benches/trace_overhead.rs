@@ -68,6 +68,28 @@ fn main() {
     });
     t.push(Row::new("now_ns (per phase boundary)").col("ns_per_op", clock_ns));
 
+    // attribution assembly: offline (post-drain) cost of the boundary
+    // sweep, amortised per span — this runs on the reporting path, not
+    // the serving hot path, and must stay a small multiple of a record
+    let spans = {
+        let g = Tracer::new_local();
+        g.configure(1.0);
+        let mut start = 0u64;
+        for req in 1..=200u64 {
+            for ph in SpanPhase::REQUEST_PHASES {
+                g.record(req, ph, start, 1_000, [0; 3]);
+                start += 1_200;
+            }
+        }
+        g.take()
+    };
+    let attr_ns = ns_per_op(200, || {
+        std::hint::black_box(
+            xgr::metrics::Attribution::from_spans(&spans, 8).requests,
+        );
+    }) / spans.len() as f64;
+    t.push(Row::new("attribution (per span, offline)").col("ns_per_op", attr_ns));
+
     t.emit();
     println!(
         "dropped on the sampled run: {} (0 expected — the bench drains)",

@@ -100,6 +100,9 @@ pub struct ClusterCoordinator {
     /// replica)
     steal_stop: Arc<AtomicBool>,
     steal_thread: Mutex<Option<JoinHandle<()>>>,
+    /// rate/burn sampling window handed to the TCP front-end
+    /// (`ServingConfig::stats_window_us`)
+    stats_window_us: u64,
 }
 
 /// One pass of the work-stealing loop. Reads per-replica queued-work
@@ -357,6 +360,7 @@ impl ClusterCoordinator {
             streams_per_replica,
             steal_stop,
             steal_thread: Mutex::new(steal_thread),
+            stats_window_us: serving.stats_window_us,
         })
     }
 
@@ -809,5 +813,9 @@ impl ServingBackend for ClusterCoordinator {
 
     fn backend_stats(&self) -> BackendStats {
         ClusterCoordinator::backend_stats(self)
+    }
+
+    fn stats_window_us(&self) -> u64 {
+        self.stats_window_us
     }
 }

@@ -117,6 +117,14 @@ pub struct ServingConfig {
     /// The `XGR_TRACE_SAMPLE` environment variable overrides this at
     /// `Coordinator::start`. Never changes recommendation bytes.
     pub trace_sample: f64,
+    /// rate/burn telemetry: length of one stats snapshot window in
+    /// microseconds. The TCP front-end samples `BackendStats` once per
+    /// window into a bounded snapshot ring, from which the `STATS` verb
+    /// derives rates (requests/s, decode steps/s) and a rolling SLO
+    /// burn-rate, and the `WATCH` verb streams one line per window.
+    /// 0 disables the sampler (STATS then reports cumulative counters
+    /// only).
+    pub stats_window_us: u64,
     pub features: Features,
 }
 
@@ -145,6 +153,7 @@ impl Default for ServingConfig {
             prefill_chunk_tokens: 0,
             batch_inbox_tokens: 0,
             trace_sample: 0.0,
+            stats_window_us: 1_000_000,
             features: Features::all_on(),
         }
     }
@@ -180,6 +189,7 @@ impl ServingConfig {
                 "prefill_chunk_tokens" => c.prefill_chunk_tokens = v.as_usize().ok_or_else(|| anyhow!("prefill_chunk_tokens"))?,
                 "batch_inbox_tokens" => c.batch_inbox_tokens = v.as_usize().ok_or_else(|| anyhow!("batch_inbox_tokens"))?,
                 "trace_sample" => c.trace_sample = v.as_f64().ok_or_else(|| anyhow!("trace_sample"))?,
+                "stats_window_us" => c.stats_window_us = v.as_f64().ok_or_else(|| anyhow!("stats_window_us"))? as u64,
                 "valid_filter" => c.features.valid_filter = v.as_bool().ok_or_else(|| anyhow!("valid_filter"))?,
                 "graph_dispatch" => c.features.graph_dispatch = v.as_bool().ok_or_else(|| anyhow!("graph_dispatch"))?,
                 "multi_stream" => c.features.multi_stream = v.as_bool().ok_or_else(|| anyhow!("multi_stream"))?,
@@ -218,6 +228,7 @@ impl ServingConfig {
             ("prefill_chunk_tokens", Json::num(self.prefill_chunk_tokens as f64)),
             ("batch_inbox_tokens", Json::num(self.batch_inbox_tokens as f64)),
             ("trace_sample", Json::num(self.trace_sample)),
+            ("stats_window_us", Json::num(self.stats_window_us as f64)),
             ("valid_filter", Json::Bool(self.features.valid_filter)),
             ("graph_dispatch", Json::Bool(self.features.graph_dispatch)),
             ("multi_stream", Json::Bool(self.features.multi_stream)),
@@ -265,6 +276,8 @@ impl ServingConfig {
         self.batch_inbox_tokens =
             a.usize_or("batch-inbox-tokens", self.batch_inbox_tokens);
         self.trace_sample = a.f64_or("trace-sample", self.trace_sample);
+        self.stats_window_us =
+            a.u64_or("stats-window-us", self.stats_window_us);
         self.features.valid_filter =
             a.bool_or("valid-filter", self.features.valid_filter);
         self.features.graph_dispatch =
@@ -331,6 +344,13 @@ impl ServingConfig {
         if !(0.0..=1.0).contains(&self.trace_sample) {
             // NaN also fails the range test, which is what we want
             return Err(anyhow!("trace_sample must be in [0, 1]"));
+        }
+        if self.stats_window_us != 0
+            && !(1_000..=60_000_000).contains(&self.stats_window_us)
+        {
+            return Err(anyhow!(
+                "stats_window_us must be 0 (sampler off) or in 1ms..=60s"
+            ));
         }
         if self.batch_inbox_tokens > 0
             && self.batch_inbox_tokens < self.max_batch_tokens
@@ -568,6 +588,25 @@ mod tests {
     }
 
     #[test]
+    fn stats_window_knob_parses_and_validates() {
+        let j = Json::parse(r#"{"stats_window_us": 250000}"#).unwrap();
+        let c = ServingConfig::from_json(&j).unwrap();
+        assert_eq!(c.stats_window_us, 250_000);
+        // 0 = sampler off is valid
+        let j = Json::parse(r#"{"stats_window_us": 0}"#).unwrap();
+        assert!(ServingConfig::from_json(&j).is_ok());
+        // sub-millisecond windows would make WATCH a busy loop
+        let j = Json::parse(r#"{"stats_window_us": 500}"#).unwrap();
+        assert!(ServingConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"stats_window_us": 61000000}"#).unwrap();
+        assert!(ServingConfig::from_json(&j).is_err());
+        // default: 1s windows, valid
+        let d = ServingConfig::default();
+        assert_eq!(d.stats_window_us, 1_000_000);
+        d.validate().unwrap();
+    }
+
+    #[test]
     fn to_json_round_trips_through_text() {
         // a config with every field off its default
         let mut c = ServingConfig::default();
@@ -593,6 +632,7 @@ mod tests {
         c.prefill_chunk_tokens = 64;
         c.batch_inbox_tokens = 16 * 1024;
         c.trace_sample = 0.5;
+        c.stats_window_us = 250_000;
         c.features.valid_filter = false;
         c.features.graph_dispatch = false;
         c.features.multi_stream = false;
@@ -621,6 +661,7 @@ mod tests {
             "--prefix-ttl-us", "100000", "--steal-threshold", "4",
             "--steal-max-batches", "3", "--prefill-chunk", "32",
             "--batch-inbox-tokens", "8192", "--trace-sample", "0.1",
+            "--stats-window-us", "500000",
             "--valid-filter", "false", "--graph-dispatch", "false",
             "--multi-stream", "false", "--overlap", "false",
         ];
@@ -650,6 +691,7 @@ mod tests {
         assert_eq!(c.prefill_chunk_tokens, 32);
         assert_eq!(c.batch_inbox_tokens, 8192);
         assert_eq!(c.trace_sample, 0.1);
+        assert_eq!(c.stats_window_us, 500_000);
         assert!(!c.features.valid_filter);
         assert!(!c.features.graph_dispatch);
         assert!(!c.features.multi_stream);

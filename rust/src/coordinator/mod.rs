@@ -236,73 +236,103 @@ impl BackendStats {
         self.per_replica_hit_rates.extend(o.per_replica_hit_rates.iter().copied());
     }
 
-    fn emit_prometheus(&self, out: &mut String, labels: &str) {
+    /// Append every stats series in Prometheus exposition form: one
+    /// contiguous block per series — `# HELP`, `# TYPE`, the cluster
+    /// aggregate sample, then one `{replica="i"}` sample per shard in
+    /// `per_replica` — the grouping the text format requires. Monotone
+    /// counters export with the conventional `_total` suffix; peaks and
+    /// rates export as gauges under their raw names.
+    fn emit_prometheus(&self, out: &mut String) {
         use std::fmt::Write as _;
-        macro_rules! counter {
-            ($($f:ident),* $(,)?) => {
-                $(let _ = writeln!(
-                    out,
-                    concat!("xgr_", stringify!($f), "{} {}"),
-                    labels,
-                    self.$f,
-                );)*
+        macro_rules! series {
+            (counter, $f:ident, $help:expr) => {
+                series!(@emit concat!("xgr_", stringify!($f), "_total"),
+                        "counter", $help, $f);
             };
+            (gauge, $f:ident, $help:expr) => {
+                series!(@emit concat!("xgr_", stringify!($f)),
+                        "gauge", $help, $f);
+            };
+            (@emit $name:expr, $kind:expr, $help:expr, $f:ident) => {{
+                let name = $name;
+                let _ = writeln!(out, "# HELP {name} {}", $help);
+                let _ = writeln!(out, "# TYPE {name} {}", $kind);
+                let _ = writeln!(out, "{name} {}", self.$f);
+                for (i, r) in self.per_replica.iter().enumerate() {
+                    let _ =
+                        writeln!(out, "{name}{{replica=\"{i}\"}} {}", r.$f);
+                }
+            }};
         }
-        counter!(
-            requests_in,
-            requests_done,
-            requests_rejected,
-            batches,
-            prefill_tokens,
-            decode_steps,
-            kernel_launches,
-            graph_dispatches,
-            h2d_transfers,
-            slo_violations,
-            session_hits,
-            session_misses,
-            session_swap_ins,
-            session_evictions,
-            prefill_tokens_saved,
-            session_peak_hbm_bytes,
-            session_peak_dram_bytes,
-            affinity_spills,
-            affinity_spills_warm,
-            affinity_repairs,
-            pool_hits,
-            pool_misses,
-            pool_ttl_expirations,
-            pool_epoch_drops,
-            pool_peak_bytes,
-            batch_steals,
-            steal_tokens_saved,
-            steal_aborts,
-            prefill_chunks,
-            stage_ticks,
-            stage_occupancy_sum,
-            mask_lane_fallbacks,
-            batch_rejects,
-            trace_drops,
-            gauge_underflows,
-        );
-        let _ = writeln!(
-            out,
-            "xgr_session_hit_rate{} {:.6}",
-            labels,
-            self.session_hit_rate()
-        );
+        series!(counter, requests_in, "Requests admitted into a scheduler's batchers.");
+        series!(counter, requests_done, "Requests completed with a response.");
+        series!(counter, requests_rejected, "Requests that errored inside a worker.");
+        series!(counter, batches, "Batches taken off stream queues by workers.");
+        series!(counter, prefill_tokens, "Prompt tokens actually prefilled (after cache/pool savings).");
+        series!(counter, decode_steps, "Beam decode steps executed.");
+        series!(counter, kernel_launches, "Executor kernel launches (mock or real).");
+        series!(counter, graph_dispatches, "Whole-graph dispatches (graph mode folds per-step launches).");
+        series!(counter, h2d_transfers, "Host-to-device mask/state uploads.");
+        series!(counter, slo_violations, "Responses whose end-to-end latency exceeded the configured SLO.");
+        series!(counter, session_hits, "Session prefix-cache hits.");
+        series!(counter, session_misses, "Session prefix-cache misses.");
+        series!(counter, session_swap_ins, "Session entries swapped in from DRAM tier.");
+        series!(counter, session_evictions, "Session entries evicted from the cache.");
+        series!(counter, prefill_tokens_saved, "Prompt tokens the session cache spared from prefill.");
+        series!(gauge, session_peak_hbm_bytes, "Peak HBM bytes held by the session cache.");
+        series!(gauge, session_peak_dram_bytes, "Peak DRAM bytes held by the session cache.");
+        series!(counter, affinity_spills, "Requests routed off their affinity stream.");
+        series!(counter, affinity_spills_warm, "Affinity spills that still found a warm cache.");
+        series!(counter, affinity_repairs, "Affinity routes repaired back to the home stream.");
+        series!(counter, pool_hits, "Shared prefix-pool hits.");
+        series!(counter, pool_misses, "Shared prefix-pool misses.");
+        series!(counter, pool_ttl_expirations, "Prefix-pool entries expired by TTL sweeps.");
+        series!(counter, pool_epoch_drops, "Prefix-pool entries dropped on epoch bumps.");
+        series!(gauge, pool_peak_bytes, "Peak bytes held by the shared prefix pool.");
+        series!(counter, batch_steals, "Whole queued batches migrated between replicas by work stealing.");
+        series!(counter, steal_tokens_saved, "Prompt tokens the pool handoff spares stolen requests from re-prefilling.");
+        series!(counter, steal_aborts, "Steal attempts that migrated nothing (empty drain or full thief).");
+        series!(counter, prefill_chunks, "Prompt chunks fed by the staged engine (zero in sequential mode).");
+        series!(counter, stage_ticks, "Iteration-level stage ticks the staged engine drove.");
+        series!(counter, stage_occupancy_sum, "Sum of in-flight requests over stage ticks (divide by stage ticks for mean occupancy).");
+        series!(counter, mask_lane_fallbacks, "Mask jobs computed inline because an overlap-lane worker died.");
+        series!(counter, batch_rejects, "Requests shed at batcher admission by the queued-token cap.");
+        series!(counter, trace_drops, "Trace spans dropped on a full per-thread ring (process-global).");
+        series!(counter, gauge_underflows, "Saturated gauge decrements (process-global).");
+        // computed rate: same contiguous-block layout, by hand
+        let name = "xgr_session_hit_rate";
+        let _ = writeln!(out, "# HELP {name} Session cache hit rate (hits / lookups).");
+        let _ = writeln!(out, "# TYPE {name} gauge");
+        let _ = writeln!(out, "{name} {:.6}", self.session_hit_rate());
+        for (i, r) in self.per_replica.iter().enumerate() {
+            let _ = writeln!(
+                out,
+                "{name}{{replica=\"{i}\"}} {:.6}",
+                r.session_hit_rate()
+            );
+        }
     }
 
-    /// Render as Prometheus-style plaintext: one `xgr_<counter>` line per
-    /// field, repeated with `{replica="i"}` labels for every shard in
-    /// `per_replica`, terminated by a `# EOF` line so a line-oriented
-    /// client knows where the exposition ends (the TCP `STATS` verb).
+    /// Render as Prometheus-style plaintext: a `# HELP`/`# TYPE`-headed
+    /// block per series, with `{replica="i"}`-labelled samples for every
+    /// shard in `per_replica`, a scrape-timestamp gauge, and a final
+    /// `# EOF` line so a line-oriented client knows where the exposition
+    /// ends (the TCP `STATS` verb).
     pub fn to_prometheus(&self) -> String {
+        use std::fmt::Write as _;
         let mut out = String::new();
-        self.emit_prometheus(&mut out, "");
-        for (i, r) in self.per_replica.iter().enumerate() {
-            r.emit_prometheus(&mut out, &format!("{{replica=\"{i}\"}}"));
-        }
+        self.emit_prometheus(&mut out);
+        // scrape timestamp so dashboards can detect a stale exposition
+        let ts = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs_f64())
+            .unwrap_or(0.0);
+        let _ = writeln!(
+            out,
+            "# HELP xgr_scrape_timestamp_seconds Unix time this exposition was rendered.\n\
+             # TYPE xgr_scrape_timestamp_seconds gauge\n\
+             xgr_scrape_timestamp_seconds {ts:.3}"
+        );
         out.push_str("# EOF\n");
         out
     }
@@ -361,18 +391,96 @@ mod tests {
             BackendStats { requests_done: 4, ..Default::default() },
         ];
         let text = s.to_prometheus();
-        assert!(text.contains("xgr_requests_done 10\n"));
-        assert!(text.contains("xgr_requests_done{replica=\"0\"} 6\n"));
-        assert!(text.contains("xgr_requests_done{replica=\"1\"} 4\n"));
+        // counters carry the conventional `_total` suffix, replicas are
+        // labelled samples of the same series
+        assert!(text.contains("xgr_requests_done_total 10\n"), "{text}");
+        assert!(text.contains("xgr_requests_done_total{replica=\"0\"} 6\n"));
+        assert!(text.contains("xgr_requests_done_total{replica=\"1\"} 4\n"));
+        assert!(text.contains("# TYPE xgr_requests_done_total counter\n"));
+        assert!(text.contains("# HELP xgr_requests_done_total "));
         assert!(text.contains("xgr_session_hit_rate 0.000000\n"));
+        assert!(text.contains("# TYPE xgr_session_hit_rate gauge\n"));
+        assert!(text.contains("# TYPE xgr_pool_peak_bytes gauge\n"));
+        assert!(text.contains("xgr_scrape_timestamp_seconds "), "{text}");
         assert!(text.ends_with("# EOF\n"));
-        // every line is `name[{labels}] value` or the terminator
+        // every line is a sample, a metadata comment, or the terminator
         for line in text.lines() {
             assert!(
-                line.starts_with("xgr_") || line == "# EOF",
+                line.starts_with("xgr_")
+                    || line.starts_with("# HELP xgr_")
+                    || line.starts_with("# TYPE xgr_")
+                    || line == "# EOF",
                 "malformed line: {line}"
             );
         }
+    }
+
+    /// Round-trip the exposition through a strict line parser: every
+    /// sample must parse as `name[{labels}] float`, every series must
+    /// have exactly one `# TYPE` and one `# HELP` emitted before its
+    /// first sample, and counter-typed series must end in `_total`.
+    #[test]
+    fn prometheus_exposition_round_trips_through_a_parser() {
+        use std::collections::{HashMap, HashSet};
+        let mut s = BackendStats {
+            requests_done: 7,
+            slo_violations: 2,
+            pool_peak_bytes: 4096,
+            ..Default::default()
+        };
+        s.per_replica = vec![BackendStats::default()];
+        let text = s.to_prometheus();
+
+        let mut typed: HashMap<String, String> = HashMap::new();
+        let mut helped: HashSet<String> = HashSet::new();
+        let mut samples = 0usize;
+        let mut saw_eof = false;
+        for line in text.lines() {
+            assert!(!saw_eof, "line after the terminator: {line}");
+            if let Some(rest) = line.strip_prefix("# TYPE ") {
+                let (name, kind) =
+                    rest.split_once(' ').expect("TYPE has name + kind");
+                assert!(
+                    kind == "counter" || kind == "gauge",
+                    "unknown kind: {line}"
+                );
+                let prev = typed.insert(name.to_string(), kind.to_string());
+                assert!(prev.is_none(), "duplicate TYPE for {name}");
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix("# HELP ") {
+                let (name, help) =
+                    rest.split_once(' ').expect("HELP has name + text");
+                assert!(!help.is_empty(), "empty help: {line}");
+                assert!(helped.insert(name.to_string()), "dup HELP {name}");
+                continue;
+            }
+            if line == "# EOF" {
+                saw_eof = true;
+                continue;
+            }
+            // a sample: name{labels} value — name must be declared first
+            let (series, value) =
+                line.rsplit_once(' ').expect("sample has name + value");
+            let name = series.split('{').next().unwrap();
+            let kind = typed
+                .get(name)
+                .unwrap_or_else(|| panic!("sample before TYPE: {line}"));
+            assert!(helped.contains(name), "sample before HELP: {line}");
+            if kind == "counter" {
+                assert!(name.ends_with("_total"), "counter name: {name}");
+            }
+            let v: f64 = value.parse().expect("sample value parses");
+            assert!(v.is_finite(), "non-finite sample: {line}");
+            samples += 1;
+        }
+        assert!(saw_eof, "missing # EOF terminator");
+        // one aggregate + one replica sample per declared series
+        assert_eq!(
+            samples,
+            2 * typed.len() - 1,
+            "scrape timestamp has no replica sample"
+        );
     }
 }
 
@@ -390,4 +498,10 @@ pub trait ServingBackend: Sync {
     fn recv_timeout(&self, dur: std::time::Duration) -> Option<RecResponse>;
     /// Aggregate serving statistics (session cache, pool, routing).
     fn backend_stats(&self) -> BackendStats;
+    /// Stats sampling window for the TCP front-end's rate/burn snapshot
+    /// ring, microseconds (`ServingConfig::stats_window_us`; 0 disables
+    /// the sampler and the `WATCH` verb).
+    fn stats_window_us(&self) -> u64 {
+        1_000_000
+    }
 }

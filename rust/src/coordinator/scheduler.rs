@@ -294,6 +294,9 @@ pub struct Coordinator {
     /// shared prefix pool, when configured (owned here for stats; the
     /// engines hold clones via `EngineConfig::session_pool`)
     pool: Option<Arc<crate::sessioncache::PrefixPool>>,
+    /// rate/burn sampling window handed to the TCP front-end
+    /// (`ServingConfig::stats_window_us`)
+    stats_window_us: u64,
 }
 
 impl Coordinator {
@@ -712,6 +715,7 @@ impl Coordinator {
             counters,
             shards,
             pool,
+            stats_window_us: serving.stats_window_us,
         })
     }
 
@@ -861,6 +865,10 @@ impl super::ServingBackend for Coordinator {
         s.trace_drops = crate::metrics::trace::tracer().dropped();
         s.gauge_underflows = crate::metrics::gauge_underflows();
         s
+    }
+
+    fn stats_window_us(&self) -> u64 {
+        self.stats_window_us
     }
 }
 

@@ -1,0 +1,536 @@
+//! Critical-path latency attribution over recorded phase spans.
+//!
+//! [`super::trace`] gives raw per-phase intervals; this module answers
+//! the question the raw spans cannot: *where did this request's time
+//! go?* Each sampled request's spans are assembled into a causal
+//! timeline (queue → prefill chunks → mask submit/wait → decode
+//! iterations → sort/rank), per-phase **exclusive** time is computed by
+//! a boundary sweep (at any instant exactly one phase — the most
+//! recently started active span — is charged, so overlapping or nested
+//! spans can never double-count), and the per-request results roll up
+//! into share-of-latency histograms plus "p99 exemplars": the K
+//! slowest requests with their full timelines preserved.
+//!
+//! Degradation is explicit, never a panic:
+//!
+//! * time inside a request window that no span covers (ring-overflow
+//!   drops, scheduler slack) lands in the `unattributed` bucket;
+//! * requests missing the terminal [`SpanPhase::Sort`] span (aborted
+//!   mid-flight, or the tail of their spans dropped) count as
+//!   `incomplete`;
+//! * requests that completed but were never sampled are tallied as
+//!   `unsampled` via [`Attribution::set_population`].
+//!
+//! The same code runs on real spans (`ReplayReport`) and on the DES's
+//! simulated-time spans (`DesResult::attribution`), so sim-vs-real
+//! phase-share drift is a single JSON diff of two
+//! `xgr-attribution-v1` documents.
+
+use super::hist::Histogram;
+use super::trace::{Span, SpanPhase};
+use crate::util::json::Json;
+
+/// Number of per-request phases ([`SpanPhase::REQUEST_PHASES`]).
+pub const N_PHASES: usize = SpanPhase::REQUEST_PHASES.len();
+
+/// Default number of slowest-request exemplar timelines kept by the
+/// replay driver, the DES, and `trace_replay --attribution-out`.
+pub const DEFAULT_EXEMPLARS: usize = 8;
+
+/// Index of a request phase in [`SpanPhase::REQUEST_PHASES`] order
+/// (`None` for [`SpanPhase::Tick`], which is not a request phase).
+pub fn phase_index(p: SpanPhase) -> Option<usize> {
+    SpanPhase::REQUEST_PHASES.iter().position(|&q| q == p)
+}
+
+/// One request's assembled causal timeline.
+#[derive(Clone, Debug)]
+pub struct RequestTimeline {
+    pub req_id: u64,
+    /// earliest span start (batcher admission for sampled requests)
+    pub start_ns: u64,
+    /// latest span end
+    pub end_ns: u64,
+    /// per-phase exclusive time, [`SpanPhase::REQUEST_PHASES`] order
+    pub exclusive_ns: [u64; N_PHASES],
+    /// window time no span claims (dropped spans, scheduler slack)
+    pub unattributed_ns: u64,
+    /// saw the terminal sort/rank span — false for aborted requests or
+    /// requests whose span tail was dropped on a full ring
+    pub complete: bool,
+    /// the request's spans, start-sorted (kept for exemplar export)
+    pub spans: Vec<Span>,
+}
+
+impl RequestTimeline {
+    /// Assemble one request's timeline from its spans (all must share
+    /// `req_id`; order does not matter). Returns `None` on empty input.
+    pub fn from_spans(spans: &[Span]) -> Option<RequestTimeline> {
+        if spans.is_empty() {
+            return None;
+        }
+        let mut sp: Vec<Span> = spans.to_vec();
+        sp.sort_by_key(|s| (s.start_ns, s.dur_ns));
+        let start_ns = sp[0].start_ns;
+        let end_ns = sp
+            .iter()
+            .map(|s| s.start_ns.saturating_add(s.dur_ns))
+            .max()
+            .unwrap_or(start_ns);
+
+        // Boundary sweep: between two consecutive boundaries exactly one
+        // span (the most recently started active one — the blocking
+        // phase at that instant) is charged, so overlap cannot
+        // double-count and gaps fall out as unattributed time.
+        let mut bounds: Vec<u64> = Vec::with_capacity(sp.len() * 2);
+        for s in &sp {
+            bounds.push(s.start_ns);
+            bounds.push(s.start_ns.saturating_add(s.dur_ns));
+        }
+        bounds.sort_unstable();
+        bounds.dedup();
+
+        let mut exclusive_ns = [0u64; N_PHASES];
+        let mut unattributed_ns = 0u64;
+        for w in bounds.windows(2) {
+            let (t0, t1) = (w[0], w[1]);
+            let dt = t1 - t0;
+            // active span with the latest start wins; ties (same start)
+            // resolve to the shorter span, matching the sort above
+            let active = sp
+                .iter()
+                .filter(|s| {
+                    s.start_ns <= t0 && s.start_ns.saturating_add(s.dur_ns) >= t1
+                })
+                .max_by_key(|s| s.start_ns);
+            match active.and_then(|s| phase_index(s.phase)) {
+                Some(i) => exclusive_ns[i] += dt,
+                None => unattributed_ns += dt,
+            }
+        }
+
+        let complete = sp.iter().any(|s| s.phase == SpanPhase::Queue)
+            && sp.iter().any(|s| s.phase == SpanPhase::Sort);
+        Some(RequestTimeline {
+            req_id: sp[0].req_id,
+            start_ns,
+            end_ns,
+            exclusive_ns,
+            unattributed_ns,
+            complete,
+            spans: sp,
+        })
+    }
+
+    /// Wall window covered by the timeline (admission → last span end).
+    pub fn total_ns(&self) -> u64 {
+        self.end_ns - self.start_ns
+    }
+
+    /// Σ per-phase exclusive time (excludes the unattributed bucket).
+    pub fn attributed_ns(&self) -> u64 {
+        self.exclusive_ns.iter().sum()
+    }
+
+    /// The dominant (most-blocking) phase: largest exclusive share.
+    /// Later phases win ties so a pure-queue tie still reports work.
+    pub fn blocking(&self) -> SpanPhase {
+        let mut best = 0usize;
+        for i in 1..N_PHASES {
+            if self.exclusive_ns[i] >= self.exclusive_ns[best] {
+                best = i;
+            }
+        }
+        SpanPhase::REQUEST_PHASES[best]
+    }
+
+    fn to_json(&self) -> Json {
+        let mut phases: Vec<(&str, Json)> = Vec::with_capacity(N_PHASES);
+        for (i, p) in SpanPhase::REQUEST_PHASES.iter().enumerate() {
+            phases.push((p.name(), Json::num(self.exclusive_ns[i] as f64)));
+        }
+        let spans: Vec<Json> = self
+            .spans
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("phase", Json::str(s.phase.name())),
+                    ("stream", Json::num(s.stream as f64)),
+                    ("start_ns", Json::num(s.start_ns as f64)),
+                    ("dur_ns", Json::num(s.dur_ns as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("req_id", Json::num(self.req_id as f64)),
+            ("start_ns", Json::num(self.start_ns as f64)),
+            ("total_ns", Json::num(self.total_ns() as f64)),
+            ("unattributed_ns", Json::num(self.unattributed_ns as f64)),
+            ("complete", Json::Bool(self.complete)),
+            ("blocking", Json::str(self.blocking().name())),
+            ("exclusive_ns", Json::obj(phases)),
+            ("spans", Json::arr(spans)),
+        ])
+    }
+}
+
+/// Aggregated critical-path attribution over a span drain.
+pub struct Attribution {
+    /// sampled requests assembled (≥1 span each)
+    pub requests: u64,
+    /// requests with the full queue→sort waterfall observed
+    pub complete: u64,
+    /// aborted or tail-dropped requests (no terminal sort span)
+    pub incomplete: u64,
+    /// completed requests with no spans at all (sampling skipped them);
+    /// filled by [`Attribution::set_population`]
+    pub unsampled: u64,
+    /// Σ per-request exclusive time, [`SpanPhase::REQUEST_PHASES`] order
+    pub phase_exclusive_ns: [u64; N_PHASES],
+    /// Σ per-request unattributed time
+    pub unattributed_ns: u64,
+    /// Σ per-request wall windows
+    pub total_ns: u64,
+    /// requests whose dominant phase is i
+    pub blocking_requests: [u64; N_PHASES],
+    /// per-request share-of-latency histograms, in basis points
+    /// (0..=10000) so the log-bucketed histogram keeps resolution
+    pub share_bp: [Histogram; N_PHASES],
+    /// the K slowest sampled requests, full timelines preserved
+    pub exemplars: Vec<RequestTimeline>,
+}
+
+impl Default for Attribution {
+    /// An empty document — what tracing-off runs report.
+    fn default() -> Self {
+        Attribution::from_spans(&[], DEFAULT_EXEMPLARS)
+    }
+}
+
+impl Attribution {
+    /// Assemble attribution from a raw span drain (real or simulated
+    /// time). Tick spans (`req_id == 0`) are engine-wide and skipped.
+    /// `exemplars` bounds the number of slowest-request timelines kept.
+    pub fn from_spans(spans: &[Span], exemplars: usize) -> Attribution {
+        let mut by_req: Vec<Span> =
+            spans.iter().filter(|s| s.req_id != 0).copied().collect();
+        by_req.sort_by_key(|s| (s.req_id, s.start_ns, s.dur_ns));
+
+        let mut a = Attribution {
+            requests: 0,
+            complete: 0,
+            incomplete: 0,
+            unsampled: 0,
+            phase_exclusive_ns: [0; N_PHASES],
+            unattributed_ns: 0,
+            total_ns: 0,
+            blocking_requests: [0; N_PHASES],
+            share_bp: Default::default(),
+            exemplars: Vec::new(),
+        };
+        let mut timelines: Vec<RequestTimeline> = Vec::new();
+        let mut i = 0;
+        while i < by_req.len() {
+            let id = by_req[i].req_id;
+            let mut j = i;
+            while j < by_req.len() && by_req[j].req_id == id {
+                j += 1;
+            }
+            if let Some(t) = RequestTimeline::from_spans(&by_req[i..j]) {
+                a.requests += 1;
+                if t.complete {
+                    a.complete += 1;
+                } else {
+                    a.incomplete += 1;
+                }
+                let total = t.total_ns();
+                a.total_ns += total;
+                a.unattributed_ns += t.unattributed_ns;
+                for (p, &ns) in t.exclusive_ns.iter().enumerate() {
+                    a.phase_exclusive_ns[p] += ns;
+                    if total > 0 {
+                        // ~0.01% resolution; u128 avoids overflow at
+                        // large ns values
+                        let bp = (ns as u128 * 10_000 / total as u128) as u64;
+                        a.share_bp[p].record(bp);
+                    }
+                }
+                a.blocking_requests
+                    [phase_index(t.blocking()).expect("request phase")] += 1;
+                timelines.push(t);
+            }
+            i = j;
+        }
+        // p99 exemplars: keep the K slowest with full timelines
+        timelines.sort_by_key(|t| std::cmp::Reverse(t.total_ns()));
+        timelines.truncate(exemplars);
+        a.exemplars = timelines;
+        a
+    }
+
+    /// Record the true completed-request population so requests the
+    /// sampler skipped show up as an explicit `unsampled` bucket
+    /// instead of silently vanishing from the denominator.
+    pub fn set_population(&mut self, completed: u64) {
+        self.unsampled = completed.saturating_sub(self.requests);
+    }
+
+    /// Fraction of all attributed+unattributed request time spent in
+    /// phase `i` ([`SpanPhase::REQUEST_PHASES`] order), in [0, 1].
+    pub fn phase_share(&self, i: usize) -> f64 {
+        if self.total_ns == 0 {
+            0.0
+        } else {
+            self.phase_exclusive_ns[i] as f64 / self.total_ns as f64
+        }
+    }
+
+    /// Fraction of request time no span claimed, in [0, 1].
+    pub fn unattributed_share(&self) -> f64 {
+        if self.total_ns == 0 {
+            0.0
+        } else {
+            self.unattributed_ns as f64 / self.total_ns as f64
+        }
+    }
+
+    /// The fleet-wide dominant phase (largest aggregate exclusive time).
+    pub fn blocking(&self) -> SpanPhase {
+        let mut best = 0usize;
+        for i in 1..N_PHASES {
+            if self.phase_exclusive_ns[i] >= self.phase_exclusive_ns[best] {
+                best = i;
+            }
+        }
+        SpanPhase::REQUEST_PHASES[best]
+    }
+
+    /// One-line digest for `ReplayReport::summary`.
+    pub fn summary(&self) -> String {
+        let mut s = String::from(" attribution:");
+        for (i, p) in SpanPhase::REQUEST_PHASES.iter().enumerate() {
+            s.push_str(&format!(
+                " {}={:.0}%",
+                p.name(),
+                self.phase_share(i) * 100.0
+            ));
+        }
+        s.push_str(&format!(
+            " unattributed={:.0}% blocking={} sampled={} complete={} \
+             incomplete={} unsampled={}",
+            self.unattributed_share() * 100.0,
+            self.blocking().name(),
+            self.requests,
+            self.complete,
+            self.incomplete,
+            self.unsampled,
+        ));
+        if let Some(worst) = self.exemplars.first() {
+            s.push_str(&format!(
+                " p99_exemplar=req{}({},{}-bound)",
+                worst.req_id,
+                crate::util::fmt_ns(worst.total_ns()),
+                worst.blocking().name(),
+            ));
+        }
+        s
+    }
+
+    /// Schema-versioned JSON document (`xgr-attribution-v1`). The DES
+    /// emits the identical schema on simulated time, so sim-vs-real
+    /// drift is a plain document diff.
+    pub fn to_json(&self) -> Json {
+        let mut phases: Vec<(&str, Json)> = Vec::with_capacity(N_PHASES);
+        for (i, p) in SpanPhase::REQUEST_PHASES.iter().enumerate() {
+            phases.push((
+                p.name(),
+                Json::obj(vec![
+                    (
+                        "exclusive_ns",
+                        Json::num(self.phase_exclusive_ns[i] as f64),
+                    ),
+                    ("share", Json::num(self.phase_share(i))),
+                    (
+                        "blocking_requests",
+                        Json::num(self.blocking_requests[i] as f64),
+                    ),
+                    ("share_p50_bp", Json::num(self.share_bp[i].p50() as f64)),
+                    ("share_p99_bp", Json::num(self.share_bp[i].p99() as f64)),
+                ]),
+            ));
+        }
+        Json::obj(vec![
+            ("schema", Json::str("xgr-attribution-v1")),
+            ("sampled_requests", Json::num(self.requests as f64)),
+            ("complete_requests", Json::num(self.complete as f64)),
+            ("incomplete_requests", Json::num(self.incomplete as f64)),
+            ("unsampled_requests", Json::num(self.unsampled as f64)),
+            ("total_ns", Json::num(self.total_ns as f64)),
+            ("unattributed_ns", Json::num(self.unattributed_ns as f64)),
+            ("unattributed_share", Json::num(self.unattributed_share())),
+            ("blocking", Json::str(self.blocking().name())),
+            ("phases", Json::obj(phases)),
+            (
+                "exemplars",
+                Json::arr(self.exemplars.iter().map(|t| t.to_json()).collect()),
+            ),
+        ])
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+
+    fn span(req_id: u64, phase: SpanPhase, start_ns: u64, dur_ns: u64) -> Span {
+        Span {
+            req_id,
+            stream: 0,
+            phase,
+            start_ns,
+            dur_ns,
+            args: [0; 3],
+        }
+    }
+
+    /// A clean waterfall: exclusive times equal span durations, no
+    /// unattributed residue, the dominant phase is the longest one.
+    #[test]
+    fn waterfall_attributes_exactly() {
+        let spans = vec![
+            span(7, SpanPhase::Queue, 0, 100),
+            span(7, SpanPhase::Prefill, 100, 300),
+            span(7, SpanPhase::Mask, 400, 50),
+            span(7, SpanPhase::Decode, 450, 500),
+            span(7, SpanPhase::Sort, 950, 50),
+        ];
+        let t = RequestTimeline::from_spans(&spans).unwrap();
+        assert_eq!(t.total_ns(), 1000);
+        assert_eq!(t.exclusive_ns, [100, 300, 50, 500, 50]);
+        assert_eq!(t.unattributed_ns, 0);
+        assert_eq!(t.attributed_ns(), 1000);
+        assert!(t.complete);
+        assert_eq!(t.blocking(), SpanPhase::Decode);
+    }
+
+    /// Overlap never double-counts: the most recently started span is
+    /// the blocking phase, the enclosing span keeps only its exclusive
+    /// remainder, and the parts still sum to the window.
+    #[test]
+    fn overlap_charges_the_most_recent_phase_once() {
+        let spans = vec![
+            span(1, SpanPhase::Queue, 0, 10),
+            span(1, SpanPhase::Decode, 10, 100), // decode iteration...
+            span(1, SpanPhase::Mask, 40, 20),    // ...with a nested mask wait
+            span(1, SpanPhase::Sort, 110, 10),
+        ];
+        let t = RequestTimeline::from_spans(&spans).unwrap();
+        assert_eq!(t.total_ns(), 120);
+        let qi = phase_index(SpanPhase::Queue).unwrap();
+        let di = phase_index(SpanPhase::Decode).unwrap();
+        let mi = phase_index(SpanPhase::Mask).unwrap();
+        assert_eq!(t.exclusive_ns[qi], 10);
+        assert_eq!(t.exclusive_ns[mi], 20, "nested mask wait is exclusive");
+        assert_eq!(t.exclusive_ns[di], 80, "decode keeps the remainder");
+        assert_eq!(t.attributed_ns() + t.unattributed_ns, t.total_ns());
+    }
+
+    /// Gaps (dropped spans mid-request) degrade to the unattributed
+    /// bucket; a missing sort tail marks the request incomplete.
+    #[test]
+    fn gaps_and_missing_tail_degrade_not_panic() {
+        let spans = vec![
+            span(3, SpanPhase::Queue, 0, 100),
+            // prefill span dropped on a full ring: 100..400 is a hole
+            span(3, SpanPhase::Decode, 400, 200),
+            // aborted before sort
+        ];
+        let t = RequestTimeline::from_spans(&spans).unwrap();
+        assert_eq!(t.total_ns(), 600);
+        assert_eq!(t.unattributed_ns, 300);
+        assert!(!t.complete);
+        let a = Attribution::from_spans(&spans, 4);
+        assert_eq!(a.requests, 1);
+        assert_eq!(a.incomplete, 1);
+        assert_eq!(a.complete, 0);
+        assert_eq!(a.unattributed_ns, 300);
+    }
+
+    /// Aggregation: tick spans are skipped, populations reconcile, the
+    /// exemplar list keeps the slowest requests in order.
+    #[test]
+    fn aggregate_rolls_up_and_ranks_exemplars() {
+        let mut spans = Vec::new();
+        // req 1: 1000ns decode-bound; req 2: 400ns queue-bound
+        spans.push(span(1, SpanPhase::Queue, 0, 100));
+        spans.push(span(1, SpanPhase::Sort, 100, 900));
+        spans.push(span(2, SpanPhase::Queue, 0, 300));
+        spans.push(span(2, SpanPhase::Sort, 300, 100));
+        // engine-wide tick track must not become a request
+        spans.push(span(0, SpanPhase::Tick, 0, 50));
+        let mut a = Attribution::from_spans(&spans, 1);
+        assert_eq!(a.requests, 2);
+        assert_eq!(a.complete, 2);
+        assert_eq!(a.exemplars.len(), 1, "K bounds the exemplar list");
+        assert_eq!(a.exemplars[0].req_id, 1, "slowest request first");
+        assert_eq!(a.total_ns, 1400);
+        a.set_population(5);
+        assert_eq!(a.unsampled, 3, "unsampled = completed - sampled");
+        let qi = phase_index(SpanPhase::Queue).unwrap();
+        let si = phase_index(SpanPhase::Sort).unwrap();
+        assert_eq!(a.phase_exclusive_ns[qi], 400);
+        assert_eq!(a.phase_exclusive_ns[si], 1000);
+        assert_eq!(a.blocking(), SpanPhase::Sort);
+        // blocking tallies: req1 sort-bound, req2 queue-bound
+        assert_eq!(a.blocking_requests[si], 1);
+        assert_eq!(a.blocking_requests[qi], 1);
+        // share histograms saw one sample per request per phase
+        assert_eq!(a.share_bp[qi].count(), 2);
+        let s = a.summary();
+        assert!(s.contains("blocking=sort"), "{s}");
+        assert!(s.contains("unsampled=3"), "{s}");
+        assert!(s.contains("p99_exemplar=req1"), "{s}");
+    }
+
+    /// Empty input (tracing off) produces an empty, JSON-serializable
+    /// document rather than an error.
+    #[test]
+    fn empty_drain_is_well_formed() {
+        let a = Attribution::from_spans(&[], 8);
+        assert_eq!(a.requests, 0);
+        assert_eq!(a.total_ns, 0);
+        assert_eq!(a.phase_share(0), 0.0);
+        let j = a.to_json();
+        assert_eq!(
+            j.get("schema").and_then(|s| s.as_str()),
+            Some("xgr-attribution-v1")
+        );
+        assert_eq!(j.get("sampled_requests").and_then(|n| n.as_f64()), Some(0.0));
+    }
+
+    /// The JSON document round-trips through the parser and carries the
+    /// exemplar timelines with per-span detail.
+    #[test]
+    fn json_document_round_trips() {
+        let spans = vec![
+            span(9, SpanPhase::Queue, 0, 10),
+            span(9, SpanPhase::Prefill, 10, 40),
+            span(9, SpanPhase::Decode, 50, 40),
+            span(9, SpanPhase::Sort, 90, 10),
+        ];
+        let a = Attribution::from_spans(&spans, 2);
+        let text = a.to_json().to_string();
+        let j = Json::parse(&text).expect("attribution JSON parses");
+        assert_eq!(
+            j.at("phases.decode.exclusive_ns").and_then(|n| n.as_f64()),
+            Some(40.0)
+        );
+        let ex = j.get("exemplars").and_then(|e| e.as_arr()).unwrap();
+        assert_eq!(ex.len(), 1);
+        assert_eq!(ex[0].get("req_id").and_then(|n| n.as_f64()), Some(9.0));
+        assert_eq!(
+            ex[0].get("spans").and_then(|s| s.as_arr()).map(|s| s.len()),
+            Some(4)
+        );
+    }
+}

@@ -45,11 +45,32 @@
 //! [`gauge_underflows`] (a [`Gauge::sub`] went below zero and saturated)
 //! and [`trace::Tracer::dropped`] (spans dropped on a full trace ring).
 //! Both surface in `ReplayReport::summary` and the TCP `STATS` verb.
+//!
+//! # Phases reference
+//!
+//! Every [`SpanPhase`] a request's latency can be attributed to, in
+//! waterfall order (see [`attribution`] for how exclusive time and the
+//! blocking phase are computed from recorded spans):
+//!
+//! | phase | covers | recorded by |
+//! |---|---|---|
+//! | `queue` | batcher admission → engine start | engine `begin_request` |
+//! | `prefill` | prompt prefill (whole-prompt sequential, per-chunk staged) | engine `begin_request` / `advance_prefill` |
+//! | `mask` | validity-mask build/apply and mask-lane wait | engine `prepare_masks` / decode loop |
+//! | `decode` | device forward + KV append of one decode iteration | engine decode loop |
+//! | `sort` | beam selection/reorder and the final ranking sort | engine decode loop / `finish_request` |
+//! | `tick` | one staged stage tick (per-stream track, `req_id = 0`) | staged driver |
+//!
+//! Time inside a request window no span covers — ring-overflow drops,
+//! scheduler slack — lands in [`attribution`]'s `unattributed` bucket;
+//! requests the sampler skipped are tallied `unsampled`.
 
+pub mod attribution;
 pub mod hist;
 pub mod report;
 pub mod trace;
 
+pub use attribution::{Attribution, RequestTimeline};
 pub use hist::Histogram;
 pub use report::{
     affinity_spill_rate, mean_stage_occupancy, session_hit_rate, Row, Table,

@@ -1,0 +1,311 @@
+//! Rate & SLO burn-rate telemetry: a bounded ring of periodic
+//! [`BackendStats`] snapshots, from which the TCP front-end derives
+//! per-window rates (requests/s, decode steps/s, prefill tokens/s) and
+//! a rolling **SLO burn-rate** — how fast the deployment is consuming
+//! its error budget (`violations / completed` in the window, divided by
+//! the budget fraction). Burn 1.0 = spending the budget exactly; > 1 =
+//! on track to blow the SLO; 0 = clean window.
+//!
+//! One snapshot is pushed per `ServingConfig::stats_window_us` by the
+//! TCP server's sampler thread; the `STATS` verb appends the derived
+//! gauges before its `# EOF` terminator and the `WATCH` verb streams
+//! one line per window. The ring is the input the ROADMAP's per-tick
+//! SLO admission item needs: a scheduler can shed on burn > 1 instead
+//! of waiting for cumulative violation counts to look bad.
+
+use crate::coordinator::BackendStats;
+use crate::util::now_ns;
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::Mutex;
+use std::collections::VecDeque;
+
+/// SLO error budget the burn rate is measured against: the paper's P99
+/// latency constraint tolerates 1% of responses over the deadline.
+pub const SLO_BUDGET_FRACTION: f64 = 0.01;
+
+/// Snapshots retained. Rates need two; the rest give `ring_rates` a
+/// longer rolling horizon (64 windows ≈ 1 min at the 1 s default).
+pub const RING_CAP: usize = 64;
+
+/// The counter subset a window snapshot keeps (deltas of monotone
+/// counters; everything else is derivable from `STATS` directly).
+#[derive(Clone, Copy, Debug)]
+struct Snap {
+    t_ns: u64,
+    completed: u64,
+    violations: u64,
+    rejects: u64,
+    decode_steps: u64,
+    prefill_tokens: u64,
+}
+
+impl Snap {
+    fn of(st: &BackendStats) -> Snap {
+        Snap {
+            t_ns: now_ns(),
+            completed: st.requests_done,
+            violations: st.slo_violations,
+            rejects: st.batch_rejects + st.requests_rejected,
+            decode_steps: st.decode_steps,
+            prefill_tokens: st.prefill_tokens,
+        }
+    }
+}
+
+/// Rates derived from the delta between two snapshots.
+#[derive(Clone, Copy, Debug)]
+pub struct WindowRates {
+    /// sequence number of the newer snapshot (WATCH dedup key)
+    pub seq: u64,
+    /// measured wall span between the two snapshots, seconds
+    pub window_s: f64,
+    /// responses completed in the window
+    pub completed: u64,
+    /// SLO violations in the window
+    pub violations: u64,
+    /// requests shed (inbox cap) or errored in the window
+    pub rejects: u64,
+    pub requests_per_s: f64,
+    pub decode_steps_per_s: f64,
+    pub prefill_tokens_per_s: f64,
+    /// `(violations / completed) / SLO_BUDGET_FRACTION`; 0 for an idle
+    /// window
+    pub burn_rate: f64,
+}
+
+impl WindowRates {
+    fn between(older: &Snap, newer: &Snap, seq: u64) -> WindowRates {
+        let window_s =
+            (newer.t_ns.saturating_sub(older.t_ns)) as f64 / 1e9;
+        let per_s = |d: u64| if window_s > 0.0 { d as f64 / window_s } else { 0.0 };
+        let completed = newer.completed.saturating_sub(older.completed);
+        let violations = newer.violations.saturating_sub(older.violations);
+        let burn_rate = if completed == 0 {
+            0.0
+        } else {
+            (violations as f64 / completed as f64) / SLO_BUDGET_FRACTION
+        };
+        WindowRates {
+            seq,
+            window_s,
+            completed,
+            violations,
+            rejects: newer.rejects.saturating_sub(older.rejects),
+            requests_per_s: per_s(completed),
+            decode_steps_per_s: per_s(
+                newer.decode_steps.saturating_sub(older.decode_steps),
+            ),
+            prefill_tokens_per_s: per_s(
+                newer.prefill_tokens.saturating_sub(older.prefill_tokens),
+            ),
+            burn_rate,
+        }
+    }
+
+    /// One self-describing `WATCH` stream line.
+    pub fn watch_line(&self) -> String {
+        format!(
+            "W seq={} window_s={:.3} completed={} violations={} rejects={} \
+             rps={:.1} decode_sps={:.1} prefill_tps={:.1} burn={:.2}",
+            self.seq,
+            self.window_s,
+            self.completed,
+            self.violations,
+            self.rejects,
+            self.requests_per_s,
+            self.decode_steps_per_s,
+            self.prefill_tokens_per_s,
+            self.burn_rate,
+        )
+    }
+}
+
+/// Bounded ring of periodic snapshots. One producer (the TCP server's
+/// sampler thread) and any number of reader connections.
+pub struct SnapshotRing {
+    window_us: u64,
+    ring: Mutex<VecDeque<Snap>>,
+    /// snapshots pushed to date; WATCH waits on this to emit exactly
+    /// one line per window
+    seq: AtomicU64,
+}
+
+impl SnapshotRing {
+    pub fn new(window_us: u64) -> SnapshotRing {
+        SnapshotRing {
+            window_us,
+            ring: Mutex::new(VecDeque::with_capacity(RING_CAP)),
+            seq: AtomicU64::new(0),
+        }
+    }
+
+    /// Configured window length, microseconds.
+    pub fn window_us(&self) -> u64 {
+        self.window_us
+    }
+
+    /// Snapshots pushed to date.
+    pub fn seq(&self) -> u64 {
+        // ordering: Relaxed — the seq is a change-detection ticket for
+        // WATCH polls; the snapshot data itself is published under the
+        // ring mutex, which readers take anyway.
+        self.seq.load(Ordering::Relaxed)
+    }
+
+    /// Sample the backend's cumulative stats into the ring (called once
+    /// per window by the sampler thread).
+    pub fn push(&self, st: &BackendStats) {
+        let mut r = self.ring.lock().unwrap();
+        if r.len() == RING_CAP {
+            r.pop_front();
+        }
+        r.push_back(Snap::of(st));
+        drop(r);
+        // ordering: Relaxed — see `seq`; the mutex above already
+        // publishes the snapshot before any reader can observe the bump
+        // and go looking for it.
+        self.seq.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Rates over the most recent window (the last two snapshots).
+    pub fn latest(&self) -> Option<WindowRates> {
+        let r = self.ring.lock().unwrap();
+        if r.len() < 2 {
+            return None;
+        }
+        Some(WindowRates::between(
+            &r[r.len() - 2],
+            &r[r.len() - 1],
+            self.seq(),
+        ))
+    }
+
+    /// Rates over the whole retained ring (oldest → newest snapshot) —
+    /// a longer rolling horizon that smooths bursty windows.
+    pub fn ring_rates(&self) -> Option<WindowRates> {
+        let r = self.ring.lock().unwrap();
+        if r.len() < 2 {
+            return None;
+        }
+        Some(WindowRates::between(&r[0], &r[r.len() - 1], self.seq()))
+    }
+
+    /// Prometheus gauge block for the `STATS` verb (inserted before the
+    /// `# EOF` terminator). Empty until two snapshots exist.
+    pub fn prometheus_rates(&self) -> String {
+        let Some(w) = self.latest() else {
+            return String::new();
+        };
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let mut gauge = |name: &str, help: &str, v: f64| {
+            let _ = writeln!(out, "# HELP xgr_{name} {help}");
+            let _ = writeln!(out, "# TYPE xgr_{name} gauge");
+            let _ = writeln!(out, "xgr_{name} {v:.6}");
+        };
+        gauge(
+            "window_requests_per_s",
+            "Completed responses per second over the last stats window.",
+            w.requests_per_s,
+        );
+        gauge(
+            "window_decode_steps_per_s",
+            "Beam decode steps per second over the last stats window.",
+            w.decode_steps_per_s,
+        );
+        gauge(
+            "window_prefill_tokens_per_s",
+            "Prompt tokens prefilled per second over the last stats window.",
+            w.prefill_tokens_per_s,
+        );
+        gauge(
+            "slo_burn_rate",
+            "Error-budget burn over the last stats window \
+             (violation fraction / 1% budget; >1 = burning too fast).",
+            w.burn_rate,
+        );
+        if let Some(rw) = self.ring_rates() {
+            gauge(
+                "slo_burn_rate_ring",
+                "Error-budget burn over the whole retained snapshot ring.",
+                rw.burn_rate,
+            );
+        }
+        out
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+
+    fn stats(done: u64, violations: u64, decode: u64) -> BackendStats {
+        BackendStats {
+            requests_done: done,
+            slo_violations: violations,
+            decode_steps: decode,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn rates_and_burn_come_from_window_deltas() {
+        let ring = SnapshotRing::new(1_000);
+        assert!(ring.latest().is_none(), "one snapshot is not a window");
+        ring.push(&stats(100, 1, 5_000));
+        assert!(ring.latest().is_none());
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        ring.push(&stats(300, 5, 15_000));
+        let w = ring.latest().expect("two snapshots make a window");
+        assert_eq!(w.completed, 200);
+        assert_eq!(w.violations, 4);
+        assert!(w.window_s > 0.0);
+        assert!(w.requests_per_s > 0.0);
+        assert!(w.decode_steps_per_s > w.requests_per_s);
+        // 4 violations / 200 completed = 2% of responses; against the
+        // 1% budget that is a burn of 2
+        assert!((w.burn_rate - 2.0).abs() < 1e-9, "burn={}", w.burn_rate);
+        assert_eq!(ring.seq(), 2);
+        let line = w.watch_line();
+        assert!(line.starts_with("W seq=2 "), "{line}");
+        assert!(line.contains("burn=2.00"), "{line}");
+    }
+
+    #[test]
+    fn idle_window_burns_nothing_and_ring_is_bounded() {
+        let ring = SnapshotRing::new(1_000);
+        for _ in 0..(RING_CAP + 8) {
+            ring.push(&stats(50, 50, 0)); // no deltas at all
+        }
+        let w = ring.latest().unwrap();
+        assert_eq!(w.completed, 0);
+        assert_eq!(w.burn_rate, 0.0, "idle windows must not divide by zero");
+        assert_eq!(ring.ring.lock().unwrap().len(), RING_CAP);
+        // the ring-wide horizon spans RING_CAP-1 windows, still burn 0
+        assert_eq!(ring.ring_rates().unwrap().burn_rate, 0.0);
+    }
+
+    #[test]
+    fn prometheus_block_is_typed_and_parseable() {
+        let ring = SnapshotRing::new(1_000);
+        assert!(ring.prometheus_rates().is_empty(), "no window yet");
+        ring.push(&stats(0, 0, 0));
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        ring.push(&stats(100, 2, 400));
+        let text = ring.prometheus_rates();
+        assert!(text.contains("# TYPE xgr_slo_burn_rate gauge"), "{text}");
+        assert!(text.contains("# HELP xgr_window_requests_per_s"), "{text}");
+        for line in text.lines() {
+            assert!(
+                line.starts_with("# HELP xgr_")
+                    || line.starts_with("# TYPE xgr_")
+                    || line.starts_with("xgr_"),
+                "malformed line: {line}"
+            );
+        }
+        // every emitted gauge carries exactly one TYPE and one sample
+        let samples =
+            text.lines().filter(|l| l.starts_with("xgr_slo_burn_rate ")).count();
+        assert_eq!(samples, 1);
+    }
+}

@@ -6,7 +6,8 @@
 //! trace through the same harness.
 
 use crate::coordinator::{BackendStats, RecRequest, ServingBackend};
-use crate::metrics::{session_hit_rate, Histogram, Span, SpanPhase};
+use crate::metrics::attribution::DEFAULT_EXEMPLARS;
+use crate::metrics::{session_hit_rate, Attribution, Histogram, Span, SpanPhase};
 use crate::util::{fmt_bytes, fmt_ns, now_ns};
 use crate::workload::Trace;
 use std::time::Duration;
@@ -112,6 +113,10 @@ pub struct ReplayReport {
     pub spans: Vec<Span>,
     /// per-phase latency histograms distilled from `spans`
     pub phases: PhaseLatencies,
+    /// critical-path attribution assembled from `spans`: per-phase
+    /// exclusive time shares, blocking-phase tallies, p99 exemplars
+    /// (empty with tracing off)
+    pub attribution: Attribution,
     /// spans dropped on full trace rings (process-global)
     pub trace_drops: u64,
     /// saturated gauge underflows (process-global, a bug signal)
@@ -224,6 +229,9 @@ impl ReplayReport {
                 pq(&self.phases.decode),
                 pq(&self.phases.sort),
             ));
+        }
+        if self.attribution.requests > 0 {
+            s.push_str(&self.attribution.summary());
         }
         // engine-health segment — always printed, zeros are a signal too
         s.push_str(&format!(
@@ -428,6 +436,7 @@ pub fn replay_trace<B: ServingBackend>(
         per_replica_hit_rates: Vec::new(),
         spans: Vec::new(),
         phases: PhaseLatencies::default(),
+        attribution: Attribution::default(),
         trace_drops: 0,
         gauge_underflows: 0,
         per_replica: Vec::new(),
@@ -437,6 +446,8 @@ pub fn replay_trace<B: ServingBackend>(
     // tracing is off, so this is free in the default configuration
     report.spans = crate::metrics::trace::tracer().take();
     report.phases = PhaseLatencies::from_spans(&report.spans);
+    report.attribution = Attribution::from_spans(&report.spans, DEFAULT_EXEMPLARS);
+    report.attribution.set_population(report.completed);
     report
 }
 

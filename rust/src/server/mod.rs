@@ -1,8 +1,10 @@
 //! Serving front-ends: an in-process trace driver (open/closed loop) and
 //! a small TCP line-protocol server for interactive use.
 
+pub mod burn;
 pub mod driver;
 pub mod tcp;
 
+pub use burn::{SnapshotRing, WindowRates};
 pub use driver::{replay_trace, PhaseLatencies, ReplayReport};
 pub use tcp::TcpServer;

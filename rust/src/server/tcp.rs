@@ -10,7 +10,18 @@
 //!                             (`xgr_*` lines, terminated by `# EOF`) —
 //!                             point a scraper or `nc` at it for live
 //!                             metrics; cluster backends include
-//!                             `{replica="i"}`-labelled shards
+//!                             `{replica="i"}`-labelled shards. When the
+//!                             stats sampler is on (`stats_window_us >
+//!                             0`) the dump also carries rolling window
+//!                             rates and the SLO burn-rate gauges,
+//!                             inserted before `# EOF`
+//!   `WATCH [n]`             → streams one rate/burn line per completed
+//!                             stats window (`W seq=… rps=… burn=…`);
+//!                             with a count it stops after `n` lines and
+//!                             the connection resumes the command loop,
+//!                             without one it streams until the client
+//!                             disconnects or the server stops. Answers
+//!                             `ERR` when the sampler is off
 //!   `QUIT`                  → closes the connection
 //! Errors answer `ERR <reason>`.
 //!
@@ -20,6 +31,7 @@
 //! arriving after its request timed out is dropped for *that* waiter
 //! only instead of stealing some other connection's response.
 
+use super::burn::SnapshotRing;
 use crate::coordinator::{RecRequest, RecResponse, ServingBackend};
 use crate::util::now_ns;
 use crate::util::pool::Channel;
@@ -71,6 +83,13 @@ impl TcpServer {
     /// the same line protocol.
     pub fn serve<B: ServingBackend>(&self, coord: &B) {
         let waiters: Waiters = Mutex::new(HashMap::new());
+        // rate/burn telemetry: one BackendStats snapshot per configured
+        // window, pushed by a dedicated sampler thread into a bounded
+        // ring that STATS/WATCH read from (window 0 = sampler off)
+        let ring = match coord.stats_window_us() {
+            0 => None,
+            w => Some(SnapshotRing::new(w)),
+        };
         // open-connection count: the demux must keep draining while ANY
         // connection thread is alive (not merely while someone is mid-
         // request), or a request issued after the stop flag flips would
@@ -84,6 +103,32 @@ impl TcpServer {
         std::thread::scope(|s| {
             let active = &active;
             let accepting = &accepting;
+            if let Some(ring) = ring.as_ref() {
+                // sampler: pushes one snapshot per window; sleeps in
+                // short slices so shutdown stays prompt even at the
+                // 60 s window ceiling
+                s.spawn(move || {
+                    // ordering: Relaxed — advisory shutdown flag polled
+                    // between sleep slices; no data is published under
+                    // it.
+                    let stopped = || self.stop.load(Ordering::Relaxed);
+                    let window = Duration::from_micros(ring.window_us());
+                    ring.push(&coord.backend_stats());
+                    while !stopped() {
+                        let mut left = window;
+                        while left > Duration::ZERO && !stopped() {
+                            let slice = left.min(Duration::from_millis(10));
+                            std::thread::sleep(slice);
+                            left -= slice;
+                        }
+                        if stopped() {
+                            return;
+                        }
+                        ring.push(&coord.backend_stats());
+                    }
+                });
+            }
+            let ring = ring.as_ref();
             // demux: the only consumer of the coordinator's response
             // queue; exits once accepting has ended and every connection
             // has closed
@@ -119,7 +164,9 @@ impl TcpServer {
                         // reorderable past `accepting.store(false)`.
                         active.fetch_add(1, Ordering::SeqCst);
                         s.spawn(move || {
-                            if let Err(e) = self.handle(stream, coord, waiters) {
+                            if let Err(e) =
+                                self.handle(stream, coord, waiters, ring)
+                            {
                                 eprintln!("tcp: connection error: {e:#}");
                             }
                             // ordering: SeqCst — demux-exit protocol
@@ -151,6 +198,7 @@ impl TcpServer {
         stream: TcpStream,
         coord: &B,
         waiters: &Waiters,
+        ring: Option<&SnapshotRing>,
     ) -> crate::Result<()> {
         stream.set_nonblocking(false)?;
         let mut reader = BufReader::new(stream.try_clone()?);
@@ -175,7 +223,35 @@ impl TcpServer {
             if line == "STATS" {
                 // live metrics export: fold the backend's counters and
                 // render them Prometheus-style (ends with `# EOF`)
-                w.write_all(coord.backend_stats().to_prometheus().as_bytes())?;
+                let mut dump = coord.backend_stats().to_prometheus();
+                if let Some(ring) = ring {
+                    // rolling rates & SLO burn go just before the
+                    // terminator, so clients keep parsing until `# EOF`
+                    let rates = ring.prometheus_rates();
+                    if !rates.is_empty() {
+                        let at = dump.rfind("# EOF").unwrap_or(dump.len());
+                        dump.insert_str(at, &rates);
+                    }
+                }
+                w.write_all(dump.as_bytes())?;
+                continue;
+            }
+            if line == "WATCH" || line.starts_with("WATCH ") {
+                let Some(ring) = ring else {
+                    writeln!(w, "ERR stats sampler off (stats_window_us = 0)")?;
+                    continue;
+                };
+                let n = match line.strip_prefix("WATCH ") {
+                    None => None,
+                    Some(arg) => match arg.trim().parse::<u64>() {
+                        Ok(n) => Some(n),
+                        Err(_) => {
+                            writeln!(w, "ERR bad WATCH count")?;
+                            continue;
+                        }
+                    },
+                };
+                self.watch(&mut w, ring, n)?;
                 continue;
             }
             let Some(rest) = line.strip_prefix("REC") else {
@@ -243,6 +319,43 @@ impl TcpServer {
             }
         }
     }
+
+    /// Stream one rate/burn line per completed stats window: wait for
+    /// the sampler's next push, then write the freshly derived rates.
+    /// `n` bounds the line count (`None` = until the client disconnects
+    /// or the server stops). The first line needs two snapshots in the
+    /// ring, so a cold `WATCH 1` answers after about two windows.
+    fn watch(
+        &self,
+        w: &mut TcpStream,
+        ring: &SnapshotRing,
+        n: Option<u64>,
+    ) -> crate::Result<()> {
+        let mut seen = ring.seq();
+        let mut sent = 0u64;
+        // ordering: Relaxed — advisory shutdown flag polled between
+        // sleep slices; no data is published under it.
+        let stopped = || self.stop.load(Ordering::Relaxed);
+        while !stopped() {
+            if n.is_some_and(|n| sent >= n) {
+                return Ok(());
+            }
+            if ring.seq() == seen {
+                std::thread::sleep(Duration::from_millis(5));
+                continue;
+            }
+            seen = ring.seq();
+            if let Some(rates) = ring.latest() {
+                if writeln!(w, "{}", rates.watch_line()).is_err() {
+                    // client went away mid-stream: end the stream; the
+                    // caller's next read_line sees EOF and closes
+                    return Ok(());
+                }
+                sent += 1;
+            }
+        }
+        Ok(())
+    }
 }
 
 #[cfg(all(test, not(loom)))]
@@ -254,6 +367,12 @@ mod tests {
     use crate::runtime::MockExecutor;
 
     fn start_server() -> (String, Arc<AtomicBool>, std::thread::JoinHandle<()>) {
+        start_server_with(ServingConfig::default().stats_window_us)
+    }
+
+    fn start_server_with(
+        stats_window_us: u64,
+    ) -> (String, Arc<AtomicBool>, std::thread::JoinHandle<()>) {
         let mut spec = ModelSpec::onerec_tiny();
         spec.vocab = 64;
         spec.beam_width = 4;
@@ -261,6 +380,7 @@ mod tests {
         let trie = Arc::new(ItemTrie::build(&catalog));
         let mut serving = ServingConfig::default();
         serving.batch_wait_us = 100;
+        serving.stats_window_us = stats_window_us;
         let factory: crate::coordinator::ExecutorFactory = {
             let spec = spec.clone();
             Arc::new(move || Ok(Box::new(MockExecutor::new(spec.clone())) as _))
@@ -390,6 +510,94 @@ mod tests {
         }
         assert!(dump.contains("{replica=\"0\"}"), "got {dump:?}");
         assert!(dump.contains("{replica=\"1\"}"), "got {dump:?}");
+        writeln!(s, "QUIT").unwrap();
+        // ordering: Relaxed — advisory shutdown flag.
+        stop.store(true, Ordering::Relaxed);
+        drop(s);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn watch_streams_one_line_per_window_and_stats_gains_rates() {
+        // 20 ms windows so the test completes in a few window lengths
+        let (addr, stop, h) = start_server_with(20_000);
+        let mut s = TcpStream::connect(&addr).unwrap();
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        let mut line = String::new();
+
+        // a couple of requests so the windows have deltas to rate
+        for i in 0..3 {
+            line.clear();
+            writeln!(s, "REC 1,2,{}", 3 + i).unwrap();
+            r.read_line(&mut line).unwrap();
+            assert!(line.starts_with("OK "), "got {line:?}");
+        }
+
+        // bounded WATCH: exactly n self-describing lines, then the
+        // connection resumes the command loop
+        writeln!(s, "WATCH 2").unwrap();
+        for i in 0..2 {
+            line.clear();
+            r.read_line(&mut line).unwrap();
+            assert!(line.starts_with("W seq="), "line {i} got {line:?}");
+            assert!(line.contains(" burn="), "line {i} got {line:?}");
+            assert!(line.contains(" rps="), "line {i} got {line:?}");
+        }
+        line.clear();
+        writeln!(s, "PING").unwrap();
+        r.read_line(&mut line).unwrap();
+        assert_eq!(line.trim(), "PONG", "command loop must resume");
+
+        line.clear();
+        writeln!(s, "WATCH nope").unwrap();
+        r.read_line(&mut line).unwrap();
+        assert!(line.starts_with("ERR"), "got {line:?}");
+
+        // by now at least two snapshots exist, so STATS carries the
+        // derived gauges — still terminated by `# EOF`
+        writeln!(s, "STATS").unwrap();
+        let mut dump = String::new();
+        loop {
+            line.clear();
+            r.read_line(&mut line).unwrap();
+            dump.push_str(&line);
+            if line.trim() == "# EOF" {
+                break;
+            }
+        }
+        assert!(dump.contains("xgr_slo_burn_rate"), "got {dump:?}");
+        assert!(dump.contains("xgr_window_requests_per_s"), "got {dump:?}");
+        assert!(dump.trim_end().ends_with("# EOF"), "got {dump:?}");
+
+        writeln!(s, "QUIT").unwrap();
+        // ordering: Relaxed — advisory shutdown flag.
+        stop.store(true, Ordering::Relaxed);
+        drop(s);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn watch_requires_the_sampler() {
+        let (addr, stop, h) = start_server_with(0);
+        let mut s = TcpStream::connect(&addr).unwrap();
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        let mut line = String::new();
+        writeln!(s, "WATCH").unwrap();
+        r.read_line(&mut line).unwrap();
+        assert!(line.starts_with("ERR"), "got {line:?}");
+        // STATS still answers, just without the window gauges
+        writeln!(s, "STATS").unwrap();
+        let mut dump = String::new();
+        loop {
+            line.clear();
+            r.read_line(&mut line).unwrap();
+            dump.push_str(&line);
+            if line.trim() == "# EOF" {
+                break;
+            }
+        }
+        assert!(dump.contains("xgr_requests_done"), "got {dump:?}");
+        assert!(!dump.contains("xgr_slo_burn_rate"), "got {dump:?}");
         writeln!(s, "QUIT").unwrap();
         // ordering: Relaxed — advisory shutdown flag.
         stop.store(true, Ordering::Relaxed);

@@ -237,6 +237,19 @@ impl DesResult {
     pub fn mean_stage_occupancy(&self) -> f64 {
         crate::metrics::mean_stage_occupancy(self.stage_occupancy_sum, self.stage_ticks)
     }
+
+    /// Critical-path attribution over the simulated-time spans — the
+    /// exact code and `xgr-attribution-v1` schema the real replay
+    /// driver uses, so sim-vs-real phase-share drift is a single JSON
+    /// diff. Empty unless `serving.trace_sample > 0`.
+    pub fn attribution(&self) -> crate::metrics::Attribution {
+        let mut a = crate::metrics::Attribution::from_spans(
+            &self.spans,
+            crate::metrics::attribution::DEFAULT_EXEMPLARS,
+        );
+        a.set_population(self.completed);
+        a
+    }
 }
 
 #[derive(PartialEq)]

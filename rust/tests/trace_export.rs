@@ -17,8 +17,9 @@ use xgr::coordinator::{
     Coordinator, EngineConfig, ExecutorFactory, RecRequest,
 };
 use xgr::itemspace::{Catalog, ItemTrie};
+use xgr::metrics::attribution::phase_index;
 use xgr::metrics::trace::{self, SpanPhase};
-use xgr::metrics::Span;
+use xgr::metrics::{Attribution, RequestTimeline, Span};
 use xgr::runtime::MockExecutor;
 use xgr::util::json::Json;
 use xgr::util::now_ns;
@@ -146,6 +147,74 @@ fn trace_export_end_to_end() {
             "exported trace has no {ph:?} event"
         );
     }
+
+    // ---- attribution property: the boundary sweep tiles each request
+    // window exactly (Σ exclusive + unattributed == window), and the
+    // engine-phase exclusive total tracks the reported service time ----
+    let attr = Attribution::from_spans(&spans, 4);
+    assert_eq!(attr.requests, 20, "all 20 sampled requests assembled");
+    assert_eq!(attr.complete, 20, "full queue→sort waterfall for each");
+    assert_eq!(attr.exemplars.len(), 4, "exemplar cap respected");
+    let queue_i = phase_index(SpanPhase::Queue).unwrap();
+    let mut windows = 0u64;
+    for id in 1..=20u64 {
+        let ss: Vec<Span> =
+            spans.iter().filter(|s| s.req_id == id).copied().collect();
+        let tl = RequestTimeline::from_spans(&ss).expect("request sampled");
+        assert!(tl.complete, "request {id} saw queue and sort spans");
+        assert_eq!(
+            tl.attributed_ns() + tl.unattributed_ns,
+            tl.total_ns(),
+            "request {id}: exclusive phase times must tile the window"
+        );
+        let engine_excl: u64 = tl
+            .exclusive_ns
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| *i != queue_i)
+            .map(|(_, &ns)| ns)
+            .sum();
+        let svc = service_ns[&id];
+        assert!(
+            engine_excl <= svc + 2_000_000,
+            "request {id}: exclusive engine time ({engine_excl}ns) \
+             exceeds service ({svc}ns)"
+        );
+        assert!(
+            engine_excl + 2_000_000 >= svc / 2,
+            "request {id}: exclusive engine time ({engine_excl}ns) \
+             covers too little of service ({svc}ns)"
+        );
+        windows += tl.total_ns();
+    }
+    assert_eq!(
+        attr.total_ns, windows,
+        "aggregate total is the sum of per-request windows"
+    );
+    // the schema-versioned document round-trips through the parser
+    let doc = Json::parse(&attr.to_json().to_string()).unwrap();
+    assert_eq!(
+        doc.get("schema").and_then(Json::as_str),
+        Some("xgr-attribution-v1")
+    );
+    assert_eq!(
+        doc.at("sampled_requests").and_then(Json::as_f64),
+        Some(20.0)
+    );
+    for ph in SpanPhase::REQUEST_PHASES {
+        let share = doc
+            .at(&format!("phases.{}.share", ph.name()))
+            .and_then(Json::as_f64)
+            .unwrap_or(-1.0);
+        assert!(
+            (0.0..=1.0).contains(&share),
+            "{ph:?} share out of range: {share}"
+        );
+    }
+    assert_eq!(
+        doc.get("exemplars").and_then(Json::as_arr).map(Vec::len),
+        Some(4)
+    );
 
     // ---- phase 2: the replay harness folds spans into phase p50/p99
     // and surfaces the tracer health counters in its summary ----

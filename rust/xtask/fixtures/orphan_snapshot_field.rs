@@ -1,0 +1,50 @@
+//! Lint fixture: a mini `src/coordinator/mod.rs` whose `BackendStats`
+//! declares `ghost_gauge` and fills it in `from_counters`, but never
+//! merges or exports it — the snapshot-wired leg must fire for the
+//! merge and exposition surfaces, and only for the ghost.
+
+pub struct BackendStats {
+    pub requests_done: u64,
+    pub ghost_gauge: u64,
+    pub per_replica_hit_rates: Vec<f64>,
+    pub per_replica: Vec<BackendStats>,
+}
+
+impl BackendStats {
+    pub fn session_hit_rate(&self) -> f64 {
+        0.0
+    }
+
+    pub fn from_counters(c: &Counters) -> Self {
+        BackendStats {
+            requests_done: c.requests_done.get(),
+            ghost_gauge: 0,
+            per_replica_hit_rates: vec![0.0],
+            per_replica: Vec::new(),
+        }
+    }
+
+    pub fn merge(&mut self, o: &BackendStats) {
+        self.requests_done += o.requests_done;
+        self.per_replica_hit_rates
+            .extend(o.per_replica_hit_rates.iter().copied());
+    }
+
+    fn emit_prometheus(&self, out: &mut String) {
+        out.push_str(&format!(
+            "xgr_requests_done_total {}\n",
+            self.requests_done
+        ));
+        out.push_str(&format!(
+            "xgr_session_hit_rate {:.6}\n",
+            self.session_hit_rate()
+        ));
+    }
+
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        self.emit_prometheus(&mut out);
+        out.push_str("# EOF\n");
+        out
+    }
+}

@@ -16,7 +16,11 @@
 //!   `fold_into`, `BackendStats::from_counters`, `BackendStats::merge`,
 //!   the Prometheus emitter, and `ReplayReport::summary`; a field
 //!   present in the struct but absent from any surface is a silently
-//!   dropped metric.
+//!   dropped metric. The **snapshot-wired** leg extends the same chain
+//!   to every `BackendStats` field: `from_counters` → `merge` → the
+//!   Prometheus exposition (`emit_prometheus`/`to_prometheus`), so a
+//!   snapshot-only field (pool peaks, trace drops, burn-rate inputs)
+//!   cannot be dropped at the cluster-merge or export hop either.
 //! * **R4 config-wired** — every `ServingConfig` field must appear in
 //!   `from_json`, `to_json` and `apply_args`, and (for non-bool knobs)
 //!   in `validate`; a knob missing a surface is unreachable from
@@ -513,6 +517,93 @@ pub fn check_counters(
     surface("fn summary", "src/server/driver.rs", driver, &d_mask, true, true, out);
 }
 
+/// The Prometheus exposition exports some snapshot fields under derived
+/// series names rather than the raw field identifier.
+fn snapshot_aliases(field: &str) -> &'static [&'static str] {
+    match field {
+        // exported per replica as the derived `xgr_session_hit_rate`
+        "per_replica_hit_rates" => &["session_hit_rate"],
+        _ => &[],
+    }
+}
+
+/// R3 (snapshot leg): every `BackendStats` field must flow from
+/// `from_counters` through cluster `merge` to the Prometheus exposition
+/// (`emit_prometheus` + `to_prometheus`, raw bodies combined — series
+/// names may live in string literals). A field present in the snapshot
+/// struct but absent from a surface is a metric that silently vanishes
+/// at that hop. `coordinator` is the contents of
+/// `src/coordinator/mod.rs`.
+pub fn check_snapshot(coordinator: &str, out: &mut Vec<Violation>) {
+    let mask = mask_source(coordinator);
+    let file = "src/coordinator/mod.rs";
+    let miss = |decl: &str, out: &mut Vec<Violation>| {
+        out.push(Violation {
+            file: file.into(),
+            line: 0,
+            rule: "snapshot-wired",
+            msg: format!("could not find `{decl}`"),
+        });
+    };
+
+    let fields =
+        match extract_block(coordinator, &mask, "pub struct BackendStats") {
+            Some((_, body)) => struct_fields(body),
+            None => {
+                miss("pub struct BackendStats", out);
+                return;
+            }
+        };
+
+    let from_counters = extract_block(coordinator, &mask, "fn from_counters");
+    let merge = extract_block(coordinator, &mask, "fn merge");
+    let emit = extract_block(coordinator, &mask, "fn emit_prometheus");
+    let render = extract_block(coordinator, &mask, "fn to_prometheus");
+    for (decl, found) in [
+        ("fn from_counters", from_counters.is_some()),
+        ("fn merge", merge.is_some()),
+        ("fn emit_prometheus", emit.is_some()),
+        ("fn to_prometheus", render.is_some()),
+    ] {
+        if !found {
+            miss(decl, out);
+        }
+    }
+    let (Some(fc), Some(mg), Some(em), Some(rd)) =
+        (from_counters, merge, emit, render)
+    else {
+        return;
+    };
+    let exposition = format!("{}\n{}", em.0, rd.0);
+
+    for f in &fields {
+        // cluster-structural: only the cluster aggregator fills the
+        // per-replica shard list, and `merge` must never adopt it
+        if f.as_str() == "per_replica" {
+            continue;
+        }
+        let expo_hit = contains_word(&exposition, f)
+            || snapshot_aliases(f).iter().any(|a| exposition.contains(a));
+        let surfaces = [
+            ("fn from_counters", contains_word(fc.1, f)),
+            ("fn merge", contains_word(mg.1, f)),
+            ("fn emit_prometheus/to_prometheus", expo_hit),
+        ];
+        for (decl, hit) in surfaces {
+            if !hit {
+                out.push(Violation {
+                    file: file.into(),
+                    line: 0,
+                    rule: "snapshot-wired",
+                    msg: format!(
+                        "BackendStats field `{f}` missing from `{decl}`"
+                    ),
+                });
+            }
+        }
+    }
+}
+
 /// R4: every `ServingConfig` knob reachable and bounded. `serving` is
 /// the contents of `src/config/serving.rs`.
 pub fn check_config(serving: &str, out: &mut Vec<Violation>) {
@@ -637,6 +728,15 @@ pub fn lint_tree(root: &Path) -> io::Result<Vec<Violation>> {
             msg: "telemetry chain files missing (metrics/coordinator/driver)".into(),
         }),
     }
+    match &coordinator {
+        Some(c) => check_snapshot(c, &mut out),
+        None => out.push(Violation {
+            file: "src/coordinator/mod.rs".into(),
+            line: 0,
+            rule: "snapshot-wired",
+            msg: "src/coordinator/mod.rs missing".into(),
+        }),
+    }
     match &serving {
         Some(s) => check_config(s, &mut out),
         None => out.push(Violation {
@@ -744,6 +844,37 @@ mod tests {
         // the wired field is not reported
         assert!(
             !v.iter().any(|x| x.msg.contains("`requests_done`")),
+            "{v:?}"
+        );
+    }
+
+    #[test]
+    fn fixture_orphan_snapshot_field_fires() {
+        let src = include_str!("../fixtures/orphan_snapshot_field.rs");
+        let mut v = Vec::new();
+        check_snapshot(src, &mut v);
+        // the ghost is filled by from_counters but dropped at the merge
+        // and exposition hops
+        assert!(
+            v.iter().any(|x| x.rule == "snapshot-wired"
+                && x.msg.contains("ghost_gauge")
+                && x.msg.contains("fn merge")),
+            "{v:?}"
+        );
+        assert!(
+            v.iter().any(|x| x.msg.contains("ghost_gauge")
+                && x.msg.contains("emit_prometheus")),
+            "{v:?}"
+        );
+        assert!(
+            !v.iter().any(|x| x.msg.contains("ghost_gauge")
+                && x.msg.contains("from_counters")),
+            "{v:?}"
+        );
+        // the wired field and the aliased hit-rate vector pass clean
+        assert!(!v.iter().any(|x| x.msg.contains("`requests_done`")), "{v:?}");
+        assert!(
+            !v.iter().any(|x| x.msg.contains("per_replica")),
             "{v:?}"
         );
     }

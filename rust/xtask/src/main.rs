@@ -26,8 +26,35 @@ fn main() {
             eprintln!("xtask lint: {} violation(s)", violations.len());
             exit(1);
         }
+        Some("bench") => {
+            // The sweeps link against the xgr crate, which this std-only
+            // lint crate cannot, so the perf gate lives in the
+            // `bench_snapshot` example; forward every remaining flag
+            // (`--out`, `--compare`, `--tolerance-pct`, `--requests`).
+            let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+                .parent()
+                .expect("xtask sits inside the crate root");
+            let status = std::process::Command::new("cargo")
+                .arg("run")
+                .arg("--quiet")
+                .arg("--release")
+                .arg("--manifest-path")
+                .arg(root.join("Cargo.toml"))
+                .arg("--example")
+                .arg("bench_snapshot")
+                .arg("--")
+                .args(&args[1..])
+                .status();
+            match status {
+                Ok(s) => exit(s.code().unwrap_or(2)),
+                Err(e) => {
+                    eprintln!("xtask bench: cannot spawn cargo: {e}");
+                    exit(2);
+                }
+            }
+        }
         _ => {
-            eprintln!("usage: cargo xtask lint");
+            eprintln!("usage: cargo xtask lint | cargo xtask bench [--out F] [--compare F] [--tolerance-pct N] [--requests N]");
             exit(2);
         }
     }
