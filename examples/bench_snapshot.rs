@@ -9,8 +9,8 @@
 //! critical-path shares (from the attribution module, on simulated
 //! time), and counter totals.
 //!
-//!     cargo run --release --example bench_snapshot -- --out BENCH_8.json
-//!     cargo run --release --example bench_snapshot -- --compare BENCH_8.json
+//!     cargo run --release --example bench_snapshot -- --out BENCH_9.json
+//!     cargo run --release --example bench_snapshot -- --compare BENCH_9.json
 //!
 //! `--compare <baseline>` exits nonzero when any gated metric regresses
 //! past `--tolerance-pct` (default 5): throughput down, or p50/p99 up.
@@ -55,6 +55,8 @@ fn sweep_json(r: &DesResult) -> Json {
                 ("pool_hits", Json::num(r.pool_hits as f64)),
                 ("batch_steals", Json::num(r.batch_steals as f64)),
                 ("kv_block_copies", Json::num(r.kv_block_copies as f64)),
+                ("tick_admissions", Json::num(r.tick_admissions as f64)),
+                ("tick_sheds", Json::num(r.tick_sheds as f64)),
             ]),
         ),
     ])
@@ -201,6 +203,23 @@ fn main() -> xgr::Result<()> {
         "fig18 onerec-0.1b staged256 rps400",
         run_sweep(&ascend, &onerec, EngineKind::Xgr, 400.0, n, 0.0, |s| {
             s.prefill_chunk_tokens = 256;
+        }),
+    );
+    // fig18c shape: continuous tick-boundary admission over the same
+    // staged config, alone and with the burn-driven shed controller
+    run(
+        "fig18 onerec-0.1b continuous256 rps400",
+        run_sweep(&ascend, &onerec, EngineKind::Xgr, 400.0, n, 0.0, |s| {
+            s.prefill_chunk_tokens = 256;
+            s.continuous_batching = true;
+        }),
+    );
+    run(
+        "fig18 onerec-0.1b continuous256 shed rps2000",
+        run_sweep(&ascend, &onerec, EngineKind::Xgr, 2000.0, n, 0.0, |s| {
+            s.prefill_chunk_tokens = 256;
+            s.continuous_batching = true;
+            s.tick_slo_admission = true;
         }),
     );
     // fig19 shape: portability (H800) + a pooled two-replica cluster

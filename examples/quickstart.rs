@@ -73,6 +73,37 @@ fn main() -> xgr::Result<()> {
     // one decode iteration's worth of prompt work: too small pays per-
     // chunk launch overhead, too large re-serializes the prompt.
     serving.prefill_chunk_tokens = 64;
+    // Continuous batching: instead of draining each formed batch to
+    // completion, the worker runs ONE persistent staged loop — every
+    // tick it retires finished requests and pulls newly arrived ones
+    // into the live set at the tick boundary, bounded by the
+    // `max_batch_tokens` / `max_batch_requests` live budget. A request
+    // arriving mid-flight starts its prefill on the very next tick
+    // rather than waiting for the whole current batch to finish.
+    // Requires chunking (chunk 0 has no tick boundary to admit at);
+    // results stay byte-identical — admission timing is a free variable
+    // of the staged invariant. Watch `tick_admissions` in
+    // `backend_stats`; `XGR_CONTINUOUS_BATCHING=1` force-enables it
+    // without a rebuild.
+    serving.continuous_batching = true;
+    // Two controllers ride the tick loop:
+    //   * `tick_slo_admission` — per-tick SLO admission control. While
+    //     the burn window (violations over recent completions vs the 1%
+    //     error budget) stays below 1, admit aggressively; once burn ≥ 1
+    //     a request whose estimated completion (queue age + predicted
+    //     ticks at the observed tick rate) already overshoots `slo_ms`
+    //     is shed at admission (`tick_sheds`, also in `batch_rejects`)
+    //     instead of burning device time on a hopeless response. Off
+    //     here: the quickstart should answer everything.
+    //   * `chunk_autotune` — stop hand-picking the chunk size: steer
+    //     per-tick device time toward `tick_budget_us` by halving the
+    //     chunk when ticks run long and doubling when they run short
+    //     (EWMA + deadband + cooldown, so it doesn't chase jitter).
+    //     Retunes count `chunk_retunes`; the tick budget bounds decode
+    //     stall — a decode-phase request waits at most one tick budget
+    //     for its next step regardless of prompt mix.
+    serving.chunk_autotune = true;
+    serving.tick_budget_us = 2_000;
     // Admission stays bounded end to end: `batch_inbox_tokens` caps the
     // queued-token backlog per batcher (0 = unlimited); overflow is
     // shed at admission and counted in `batch_rejects`.
@@ -132,6 +163,10 @@ fn main() -> xgr::Result<()> {
             stats.prefill_chunks,
             stats.stage_ticks,
             stats.mean_stage_occupancy()
+        );
+        println!(
+            "continuous loop: {} tick admissions, {} sheds, {} chunk retunes",
+            stats.tick_admissions, stats.tick_sheds, stats.chunk_retunes
         );
     }
 

@@ -101,6 +101,36 @@ pub struct ServingConfig {
     /// block a batch). 0 = sequential request-at-a-time execution (the
     /// ablation baseline). Results are byte-identical either way.
     pub prefill_chunk_tokens: usize,
+    /// continuous batching: turn the staged loop persistent — workers
+    /// pull newly arrived requests from their stream queue into the live
+    /// in-flight set at every tick boundary (bounded by the
+    /// `max_batch_tokens` / `max_batch_requests` live budget) and retire
+    /// finished requests' KV/beam slots immediately, instead of draining
+    /// one formed batch to completion. Requires `prefill_chunk_tokens >
+    /// 0` to take effect (ticks are the staged engine's clock; with
+    /// chunking off this knob is inert). The `XGR_CONTINUOUS_BATCHING`
+    /// environment variable force-enables it at `Coordinator::start`.
+    /// Results stay byte-identical per request.
+    pub continuous_batching: bool,
+    /// per-tick SLO admission control (continuous mode): each tick
+    /// boundary the worker compares every candidate's remaining work
+    /// (prefill tokens left + decode steps left, priced at the measured
+    /// per-unit tick time) against its deadline. While the rolling SLO
+    /// burn rate is < 1 every candidate is admitted; once burn reaches 1
+    /// the controller sheds candidates that can no longer make their
+    /// deadline (counted in `tick_sheds` AND `batch_rejects` — the
+    /// unified shed chain). Inert without `continuous_batching`.
+    pub tick_slo_admission: bool,
+    /// chunk-size autotuning (continuous mode): replace the static
+    /// `prefill_chunk_tokens` with a measured controller that halves or
+    /// doubles the chunk to steer per-tick device time toward
+    /// `tick_budget_us` (resizes counted in `chunk_retunes`). Chunk
+    /// partition is a free variable of the staged invariant, so results
+    /// never change. Inert without `continuous_batching`.
+    pub chunk_autotune: bool,
+    /// target per-tick device time for the chunk autotuner, in
+    /// microseconds. Only consulted when `chunk_autotune` is on.
+    pub tick_budget_us: u64,
     /// batcher admission backpressure: max queued prompt tokens per
     /// batcher before new requests are shed (counted in
     /// `batch_rejects`). 0 = unlimited (the legacy unbounded inbox).
@@ -151,6 +181,10 @@ impl Default for ServingConfig {
             steal_threshold: 0,
             steal_max_batches: 4,
             prefill_chunk_tokens: 0,
+            continuous_batching: false,
+            tick_slo_admission: false,
+            chunk_autotune: false,
+            tick_budget_us: 2_000,
             batch_inbox_tokens: 0,
             trace_sample: 0.0,
             stats_window_us: 1_000_000,
@@ -187,6 +221,10 @@ impl ServingConfig {
                 "steal_threshold" => c.steal_threshold = v.as_usize().ok_or_else(|| anyhow!("steal_threshold"))?,
                 "steal_max_batches" => c.steal_max_batches = v.as_usize().ok_or_else(|| anyhow!("steal_max_batches"))?,
                 "prefill_chunk_tokens" => c.prefill_chunk_tokens = v.as_usize().ok_or_else(|| anyhow!("prefill_chunk_tokens"))?,
+                "continuous_batching" => c.continuous_batching = v.as_bool().ok_or_else(|| anyhow!("continuous_batching"))?,
+                "tick_slo_admission" => c.tick_slo_admission = v.as_bool().ok_or_else(|| anyhow!("tick_slo_admission"))?,
+                "chunk_autotune" => c.chunk_autotune = v.as_bool().ok_or_else(|| anyhow!("chunk_autotune"))?,
+                "tick_budget_us" => c.tick_budget_us = v.as_f64().ok_or_else(|| anyhow!("tick_budget_us"))? as u64,
                 "batch_inbox_tokens" => c.batch_inbox_tokens = v.as_usize().ok_or_else(|| anyhow!("batch_inbox_tokens"))?,
                 "trace_sample" => c.trace_sample = v.as_f64().ok_or_else(|| anyhow!("trace_sample"))?,
                 "stats_window_us" => c.stats_window_us = v.as_f64().ok_or_else(|| anyhow!("stats_window_us"))? as u64,
@@ -226,6 +264,10 @@ impl ServingConfig {
             ("steal_threshold", Json::num(self.steal_threshold as f64)),
             ("steal_max_batches", Json::num(self.steal_max_batches as f64)),
             ("prefill_chunk_tokens", Json::num(self.prefill_chunk_tokens as f64)),
+            ("continuous_batching", Json::Bool(self.continuous_batching)),
+            ("tick_slo_admission", Json::Bool(self.tick_slo_admission)),
+            ("chunk_autotune", Json::Bool(self.chunk_autotune)),
+            ("tick_budget_us", Json::num(self.tick_budget_us as f64)),
             ("batch_inbox_tokens", Json::num(self.batch_inbox_tokens as f64)),
             ("trace_sample", Json::num(self.trace_sample)),
             ("stats_window_us", Json::num(self.stats_window_us as f64)),
@@ -273,6 +315,12 @@ impl ServingConfig {
             a.usize_or("steal-max-batches", self.steal_max_batches);
         self.prefill_chunk_tokens =
             a.usize_or("prefill-chunk", self.prefill_chunk_tokens);
+        self.continuous_batching =
+            a.bool_or("continuous-batching", self.continuous_batching);
+        self.tick_slo_admission =
+            a.bool_or("tick-slo-admission", self.tick_slo_admission);
+        self.chunk_autotune = a.bool_or("chunk-autotune", self.chunk_autotune);
+        self.tick_budget_us = a.u64_or("tick-budget-us", self.tick_budget_us);
         self.batch_inbox_tokens =
             a.usize_or("batch-inbox-tokens", self.batch_inbox_tokens);
         self.trace_sample = a.f64_or("trace-sample", self.trace_sample);
@@ -340,6 +388,12 @@ impl ServingConfig {
         }
         if self.prefill_chunk_tokens > 1 << 20 {
             return Err(anyhow!("prefill_chunk_tokens must be <= 2^20"));
+        }
+        if !(10..=10_000_000).contains(&self.tick_budget_us) {
+            return Err(anyhow!(
+                "tick_budget_us must be in 10us..=10s (the chunk autotuner's \
+                 per-tick device-time target)"
+            ));
         }
         if !(0.0..=1.0).contains(&self.trace_sample) {
             // NaN also fails the range test, which is what we want
@@ -563,6 +617,37 @@ mod tests {
     }
 
     #[test]
+    fn continuous_knobs_parse_and_validate() {
+        let j = Json::parse(
+            r#"{"prefill_chunk_tokens": 64, "continuous_batching": true,
+                "tick_slo_admission": true, "chunk_autotune": true,
+                "tick_budget_us": 1500}"#,
+        )
+        .unwrap();
+        let c = ServingConfig::from_json(&j).unwrap();
+        assert!(c.continuous_batching);
+        assert!(c.tick_slo_admission);
+        assert!(c.chunk_autotune);
+        assert_eq!(c.tick_budget_us, 1_500);
+        // defaults: everything off, a sane tick budget, valid
+        let d = ServingConfig::default();
+        assert!(!d.continuous_batching);
+        assert!(!d.tick_slo_admission);
+        assert!(!d.chunk_autotune);
+        assert_eq!(d.tick_budget_us, 2_000);
+        d.validate().unwrap();
+        // continuous without chunking is inert but never an error (the
+        // env override forces it suite-wide over sequential configs)
+        let j = Json::parse(r#"{"continuous_batching": true}"#).unwrap();
+        assert!(ServingConfig::from_json(&j).is_ok());
+        // absurd tick budgets fail loudly
+        let j = Json::parse(r#"{"tick_budget_us": 5}"#).unwrap();
+        assert!(ServingConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"tick_budget_us": 20000000}"#).unwrap();
+        assert!(ServingConfig::from_json(&j).is_err());
+    }
+
+    #[test]
     fn trace_sample_knob_parses_and_validates() {
         let j = Json::parse(r#"{"trace_sample": 0.25}"#).unwrap();
         let c = ServingConfig::from_json(&j).unwrap();
@@ -630,6 +715,10 @@ mod tests {
         c.steal_threshold = 5;
         c.steal_max_batches = 2;
         c.prefill_chunk_tokens = 64;
+        c.continuous_batching = true;
+        c.tick_slo_admission = true;
+        c.chunk_autotune = true;
+        c.tick_budget_us = 5_000;
         c.batch_inbox_tokens = 16 * 1024;
         c.trace_sample = 0.5;
         c.stats_window_us = 250_000;
@@ -660,6 +749,8 @@ mod tests {
             "900", "--replicas", "2", "--pool-bytes", "33554432",
             "--prefix-ttl-us", "100000", "--steal-threshold", "4",
             "--steal-max-batches", "3", "--prefill-chunk", "32",
+            "--continuous-batching", "--tick-slo-admission",
+            "--chunk-autotune", "--tick-budget-us", "4000",
             "--batch-inbox-tokens", "8192", "--trace-sample", "0.1",
             "--stats-window-us", "500000",
             "--valid-filter", "false", "--graph-dispatch", "false",
@@ -689,6 +780,10 @@ mod tests {
         assert_eq!(c.steal_threshold, 4);
         assert_eq!(c.steal_max_batches, 3);
         assert_eq!(c.prefill_chunk_tokens, 32);
+        assert!(c.continuous_batching);
+        assert!(c.tick_slo_admission);
+        assert!(c.chunk_autotune);
+        assert_eq!(c.tick_budget_us, 4_000);
         assert_eq!(c.batch_inbox_tokens, 8192);
         assert_eq!(c.trace_sample, 0.1);
         assert_eq!(c.stats_window_us, 500_000);

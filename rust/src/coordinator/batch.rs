@@ -9,6 +9,16 @@
 use super::RecRequest;
 use std::collections::VecDeque;
 
+/// Token cost of one request for every budget decision in this module
+/// (and for the worker's live-set budget in continuous mode). A
+/// zero-token request still occupies a KV slot and a decode lane, so it
+/// costs 1 — using `tokens.len()` raw in some places and `.max(1)` in
+/// others let zero-token floods slip under the inbox cap while still
+/// filling batches.
+pub(crate) fn req_tokens(r: &RecRequest) -> usize {
+    r.tokens.len().max(1)
+}
+
 /// A formed batch.
 #[derive(Debug, Default)]
 pub struct Batch {
@@ -26,6 +36,11 @@ pub struct Batcher {
     inbox_token_cap: usize,
     queue: VecDeque<RecRequest>,
     queued_tokens: usize,
+    /// Token sum of the head window (first `min(queue.len(),
+    /// max_requests)` requests) maintained incrementally so
+    /// [`Batcher::budget_full`] — polled every tick in continuous mode —
+    /// is O(1) instead of rescanning the queue.
+    head_tokens: usize,
 }
 
 impl Batcher {
@@ -37,6 +52,7 @@ impl Batcher {
             inbox_token_cap: 0,
             queue: VecDeque::new(),
             queued_tokens: 0,
+            head_tokens: 0,
         }
     }
 
@@ -54,7 +70,7 @@ impl Batcher {
     pub fn push(&mut self, r: RecRequest) -> Result<(), RecRequest> {
         if self.inbox_token_cap > 0
             && !self.queue.is_empty()
-            && self.queued_tokens + r.tokens.len() > self.inbox_token_cap
+            && self.queued_tokens + req_tokens(&r) > self.inbox_token_cap
         {
             return Err(r);
         }
@@ -66,7 +82,11 @@ impl Batcher {
     /// repair, steal hand-backs) where shedding would lose a request the
     /// system already accepted.
     pub fn requeue(&mut self, r: RecRequest) {
-        self.queued_tokens += r.tokens.len();
+        let l = req_tokens(&r);
+        self.queued_tokens += l;
+        if self.queue.len() < self.max_requests {
+            self.head_tokens += l; // lands inside the head window
+        }
         self.queue.push_back(r);
     }
 
@@ -92,22 +112,26 @@ impl Batcher {
         now_ns.saturating_sub(oldest) >= self.wait_quota_ns
     }
 
+    /// O(1): all costs are positive, so "some prefix of the head window
+    /// reaches `max_tokens`" is equivalent to "the whole head-window sum
+    /// reaches it", and that sum is maintained incrementally.
     fn budget_full(&self) -> bool {
-        if self.queue.len() >= self.max_requests {
-            return true;
+        self.queue.len() >= self.max_requests || self.head_tokens >= self.max_tokens
+    }
+
+    /// Pop the head request, keeping `queued_tokens` and the head-window
+    /// sum consistent: the popped cost leaves the window and, if the
+    /// queue is still deeper than the window, the request sliding into
+    /// the window's last slot enters it.
+    fn pop_front_accounted(&mut self) -> Option<RecRequest> {
+        let r = self.queue.pop_front()?;
+        let l = req_tokens(&r);
+        self.queued_tokens -= l;
+        self.head_tokens -= l;
+        if self.max_requests > 0 && self.queue.len() >= self.max_requests {
+            self.head_tokens += req_tokens(&self.queue[self.max_requests - 1]);
         }
-        // enough tokens queued that the head batch is full
-        let mut tokens = 0;
-        for (i, r) in self.queue.iter().enumerate() {
-            if i >= self.max_requests {
-                return true;
-            }
-            tokens += r.tokens.len().max(1);
-            if tokens >= self.max_tokens {
-                return true;
-            }
-        }
-        false
+        Some(r)
     }
 
     /// Remove and return the next batch (greedy head-of-line within the
@@ -118,19 +142,30 @@ impl Batcher {
         }
         let mut b = Batch::default();
         while let Some(front) = self.queue.front() {
-            let l = front.tokens.len().max(1);
+            let l = req_tokens(front);
             if !b.requests.is_empty()
                 && (b.requests.len() + 1 > self.max_requests
                     || b.total_tokens + l > self.max_tokens)
             {
                 break;
             }
-            let r = self.queue.pop_front().unwrap();
-            self.queued_tokens -= r.tokens.len();
+            let r = self.pop_front_accounted().unwrap();
             b.total_tokens += l;
             b.requests.push(r);
         }
         Some(b)
+    }
+
+    /// Tick-granularity pull (continuous batching): pop the head request
+    /// immediately as a single-request batch. Continuous mode replaces
+    /// the wait-quota clock with the worker's tick boundary — a queued
+    /// request is ready the moment a stream can take it, and token/slot
+    /// admission happens at the worker against the *live* in-flight set
+    /// rather than against a batch being formed here.
+    pub fn take_one(&mut self) -> Option<Batch> {
+        let r = self.pop_front_accounted()?;
+        let total_tokens = req_tokens(&r);
+        Some(Batch { requests: vec![r], total_tokens })
     }
 
     /// Time (ns) of the oldest queued arrival (for quota timers).
@@ -254,5 +289,86 @@ mod tests {
             b.push(req(i, 50, 0)).unwrap();
         }
         assert_eq!(b.queued_requests(), 100);
+    }
+
+    #[test]
+    fn zero_token_requests_cost_one_everywhere() {
+        // regression: queued_tokens used to sum `tokens.len()` raw while
+        // take_batch/budget_full used `.max(1)`, so a zero-token flood
+        // queued "for free" under the inbox cap
+        let mut b = Batcher::new(100, 1000, 0).with_inbox_cap(3);
+        for i in 0..3 {
+            b.push(req(i, 0, 0)).unwrap();
+        }
+        assert_eq!(b.queued_tokens(), 3, "zero-token requests cost 1 each");
+        assert!(b.push(req(3, 0, 0)).is_err(), "cap must see that cost");
+        // and draining restores the ledger to exactly zero
+        while b.take_batch().is_some() {
+            if b.queued_requests() == 0 {
+                break;
+            }
+        }
+        assert_eq!(b.queued_tokens(), 0);
+    }
+
+    #[test]
+    fn budget_full_matches_reference_scan_under_churn() {
+        // the O(1) incremental head-window sum must agree with the
+        // original O(n) rescan after any interleaving of push/requeue/
+        // take_batch/take_one
+        let reference = |b: &Batcher| -> bool {
+            if b.queue.len() >= b.max_requests {
+                return true;
+            }
+            let mut tokens = 0;
+            for r in b.queue.iter().take(b.max_requests) {
+                tokens += req_tokens(r);
+                if tokens >= b.max_tokens {
+                    return true;
+                }
+            }
+            false
+        };
+        let mut b = Batcher::new(64, 4, 0);
+        let mut state = 0x2545f491_4f6cdd1du64; // xorshift, deterministic
+        for i in 0..500u64 {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            match state % 5 {
+                0 | 1 => b.requeue(req(i, (state >> 8) as usize % 40, 0)),
+                2 => {
+                    let _ = b.push(req(i, (state >> 8) as usize % 40, 0));
+                }
+                3 => {
+                    let _ = b.take_batch();
+                }
+                _ => {
+                    let _ = b.take_one();
+                }
+            }
+            assert_eq!(
+                b.budget_full(),
+                reference(&b),
+                "incremental head sum diverged at op {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn take_one_pops_single_requests_in_fifo_order() {
+        let mut b = Batcher::new(100, 10, u64::MAX);
+        for i in 0..3 {
+            b.push(req(i, 10, i)).unwrap();
+        }
+        let one = b.take_one().unwrap();
+        assert_eq!(one.requests.len(), 1);
+        assert_eq!(one.requests[0].id, 0);
+        assert_eq!(one.total_tokens, 10);
+        assert_eq!(b.take_one().unwrap().requests[0].id, 1);
+        assert_eq!(b.queued_tokens(), 10);
+        assert_eq!(b.take_one().unwrap().requests[0].id, 2);
+        assert!(b.take_one().is_none());
+        assert_eq!(b.queued_tokens(), 0);
     }
 }

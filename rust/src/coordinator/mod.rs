@@ -14,6 +14,10 @@
 //!   With `prefill_chunk_tokens > 0` a worker drives each batch through
 //!   the iteration-level **staged** loop ([`staged`]): mixed
 //!   prefill-chunk + decode-step ticks instead of request-at-a-time.
+//!   With `continuous_batching` on top, the loop turns persistent: new
+//!   requests join the live set at tick boundaries (continuous
+//!   batching) under burn-driven SLO admission control, and the prefill
+//!   chunk can autotune toward a tick-duration budget.
 //!   [`overlap`] provides the keyed host/device overlap lane (mask
 //!   generation concurrent with the forward pass).
 
@@ -121,8 +125,17 @@ pub struct BackendStats {
     pub stage_occupancy_sum: u64,
     /// mask jobs computed inline because an overlap-lane worker died
     pub mask_lane_fallbacks: u64,
-    /// requests shed at batcher admission by the queued-token cap
+    /// requests shed at batcher admission by the queued-token cap, plus
+    /// continuous-mode SLO sheds (the unified shed chain)
     pub batch_rejects: u64,
+    /// requests pulled into a continuous worker's live set at a tick
+    /// boundary (zero outside continuous mode)
+    pub tick_admissions: u64,
+    /// requests the burn-driven SLO controller shed at a tick boundary
+    /// (subset of `batch_rejects`)
+    pub tick_sheds: u64,
+    /// prefill-chunk resizes applied by the chunk autotuner
+    pub chunk_retunes: u64,
     /// trace spans dropped on a full per-thread ring (process-global)
     pub trace_drops: u64,
     /// saturated `Gauge::sub` underflows (process-global)
@@ -182,6 +195,9 @@ impl BackendStats {
             stage_occupancy_sum: g(&c.stage_occupancy_sum),
             mask_lane_fallbacks: g(&c.mask_lane_fallbacks),
             batch_rejects: g(&c.batch_rejects),
+            tick_admissions: g(&c.tick_admissions),
+            tick_sheds: g(&c.tick_sheds),
+            chunk_retunes: g(&c.chunk_retunes),
             trace_drops: 0,
             gauge_underflows: 0,
             per_replica_hit_rates: vec![crate::metrics::session_hit_rate(
@@ -226,6 +242,9 @@ impl BackendStats {
         self.stage_occupancy_sum += o.stage_occupancy_sum;
         self.mask_lane_fallbacks += o.mask_lane_fallbacks;
         self.batch_rejects += o.batch_rejects;
+        self.tick_admissions += o.tick_admissions;
+        self.tick_sheds += o.tick_sheds;
+        self.chunk_retunes += o.chunk_retunes;
         // pool-global fields (TTL expirations, peak) come from the single
         // shared pool, not per-replica sums — take the max, not the sum
         self.pool_ttl_expirations = self.pool_ttl_expirations.max(o.pool_ttl_expirations);
@@ -296,7 +315,10 @@ impl BackendStats {
         series!(counter, stage_ticks, "Iteration-level stage ticks the staged engine drove.");
         series!(counter, stage_occupancy_sum, "Sum of in-flight requests over stage ticks (divide by stage ticks for mean occupancy).");
         series!(counter, mask_lane_fallbacks, "Mask jobs computed inline because an overlap-lane worker died.");
-        series!(counter, batch_rejects, "Requests shed at batcher admission by the queued-token cap.");
+        series!(counter, batch_rejects, "Requests shed at batcher admission by the queued-token cap, plus continuous-mode SLO sheds.");
+        series!(counter, tick_admissions, "Requests pulled into a continuous worker's live set at a tick boundary.");
+        series!(counter, tick_sheds, "Requests shed by the burn-driven SLO admission controller (subset of batch_rejects).");
+        series!(counter, chunk_retunes, "Prefill-chunk resizes applied by the chunk autotuner.");
         series!(counter, trace_drops, "Trace spans dropped on a full per-thread ring (process-global).");
         series!(counter, gauge_underflows, "Saturated gauge decrements (process-global).");
         // computed rate: same contiguous-block layout, by hand

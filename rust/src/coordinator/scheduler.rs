@@ -33,12 +33,21 @@
 //!   entries one at a time (entries touched since their last sweep get a
 //!   second chance) instead of clearing every user's stickiness at once.
 //!
+//! With `continuous_batching` on (or `XGR_CONTINUOUS_BATCHING=1`, and
+//! chunking enabled), dispatch drops to arrival granularity: every
+//! queued request leaves the batcher immediately as a single-request
+//! batch ([`Batcher::take_one`]) and the worker's persistent staged
+//! loop admits it at the next tick boundary — batch formation stops
+//! being the admission boundary (see `coordinator/worker.rs`). All the
+//! routing machinery above (affinity, spill, repair, steal) applies
+//! unchanged; only the dispatch grain shrinks.
+//!
 //! `Coordinator` is the process-wide serving object: `submit` requests,
 //! `recv` responses, `shutdown` to drain.
 
 use super::batch::Batcher;
 use super::engine::EngineConfig;
-use super::worker::Workers;
+use super::worker::{WorkerOptions, Workers};
 use super::{Batch, RecRequest, RecResponse};
 use crate::config::ServingConfig;
 use crate::itemspace::ItemTrie;
@@ -316,6 +325,16 @@ impl Coordinator {
             .and_then(|v| v.parse::<f64>().ok())
             .unwrap_or(serving.trace_sample);
         crate::metrics::trace::tracer().configure(trace_sample);
+        // continuous batching: like tracing, the env var force-enables
+        // the knob so CI and deployed binaries can flip the loop without
+        // a config edit. Chunking is a prerequisite either way — with
+        // `prefill_chunk_tokens == 0` there are no ticks to admit at,
+        // and the sequential ablation baseline must stay sequential.
+        let continuous = (serving.continuous_batching
+            || std::env::var("XGR_CONTINUOUS_BATCHING")
+                .ok()
+                .is_some_and(|v| !v.is_empty() && v != "0"))
+            && serving.prefill_chunk_tokens > 0;
         let num_streams = if serving.features.multi_stream {
             serving.num_streams
         } else {
@@ -373,8 +392,16 @@ impl Coordinator {
             stream_queues.clone(),
             responses.clone(),
             shards.clone(),
-            serving.prefill_chunk_tokens,
-            serving.slo_ns(),
+            WorkerOptions {
+                prefill_chunk_tokens: serving.prefill_chunk_tokens,
+                slo_ns: serving.slo_ns(),
+                continuous,
+                tick_slo_admission: serving.tick_slo_admission,
+                chunk_autotune: serving.chunk_autotune,
+                tick_budget_us: serving.tick_budget_us,
+                max_batch_tokens: serving.max_batch_tokens,
+                max_batch_requests: serving.max_batch_requests,
+            },
         );
 
         let ctl: Channel<SchedCtl> = Channel::bounded(4);
@@ -675,10 +702,25 @@ impl Coordinator {
                                     }
                                 }
                             }
-                            while batchers[bi].should_dispatch(now_ns()) {
-                                let Some(b) = batchers[bi].take_batch() else {
+                            // continuous mode dispatches at arrival
+                            // granularity: every queued request leaves as
+                            // its own single-request batch immediately —
+                            // the worker re-aggregates at tick boundaries,
+                            // so the batcher's quota wait no longer gates
+                            // admission. Batch mode keeps the formed-batch
+                            // dispatch policy (budget full or quota aged).
+                            loop {
+                                if !continuous
+                                    && !batchers[bi].should_dispatch(now_ns())
+                                {
                                     break;
+                                }
+                                let b = if continuous {
+                                    batchers[bi].take_one()
+                                } else {
+                                    batchers[bi].take_batch()
                                 };
+                                let Some(b) = b else { break };
                                 match deliver(&queues, &mut rr_pick, target, b) {
                                     Delivery::Done => {
                                         Counters::inc(&counters.graph_dispatches)
@@ -959,6 +1001,60 @@ mod tests {
         // with 30 requests and tiny batches, >1 stream should get work
         assert!(streams.len() > 1, "streams used: {streams:?}");
         c.shutdown();
+    }
+
+    #[test]
+    fn continuous_coordinator_serves_trickled_arrivals() {
+        // continuous mode end-to-end: requests trickle in one at a time
+        // (so formed batches would mostly be singletons anyway, but the
+        // point is the pipeline: take_one dispatch → persistent worker
+        // loop → tick-boundary admission); everything completes exactly
+        // once and every request shows up as a tick admission
+        let mut spec = ModelSpec::onerec_tiny();
+        spec.vocab = 64;
+        spec.beam_width = 4;
+        let catalog = Catalog::generate(64, 400, 2);
+        let trie = Arc::new(ItemTrie::build(&catalog));
+        let mut serving = ServingConfig::default();
+        serving.num_streams = 2;
+        serving.batch_wait_us = 200;
+        serving.max_batch_requests = 4;
+        serving.prefill_chunk_tokens = 4;
+        serving.continuous_batching = true;
+        let factory: ExecutorFactory = {
+            let spec = spec.clone();
+            Arc::new(move || Ok(Box::new(MockExecutor::new(spec.clone())) as _))
+        };
+        let c = Coordinator::start(&serving, EngineConfig::default(), trie, factory)
+            .unwrap();
+        for i in 0..16u64 {
+            c.submit_blocking(RecRequest {
+                id: i,
+                tokens: (0..(3 + i as u32 % 6)).map(|t| (t * 5 + i as u32) % 60).collect(),
+                arrival_ns: now_ns(),
+                user_id: i,
+            })
+            .unwrap();
+            if i % 4 == 0 {
+                // let ticks start so later submissions arrive mid-flight
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+        let mut got = std::collections::HashSet::new();
+        while got.len() < 16 {
+            let r = c
+                .recv_timeout(Duration::from_secs(10))
+                .expect("continuous mode must serve every arrival");
+            assert!(!r.items.is_empty());
+            assert!(got.insert(r.id), "duplicate response {}", r.id);
+        }
+        let agg = c.aggregate_counters();
+        assert_eq!(Counters::get(&agg.tick_admissions), 16);
+        assert_eq!(Counters::get(&agg.requests_done), 16);
+        assert!(Counters::get(&agg.stage_ticks) > 0, "continuous runs staged ticks");
+        assert_eq!(Counters::get(&agg.tick_sheds), 0, "no SLO pressure → no sheds");
+        let rest = c.shutdown();
+        assert!(rest.is_empty());
     }
 
     #[test]

@@ -14,12 +14,12 @@
 //!
 //! # How
 //!
-//! [`run_batch`] drives the whole batch through per-request lifecycle
-//! state machines ([`Phase`]`::Prefilling{offset} → Decoding{step} →
-//! Done`, owned by [`InflightReq`]). Each **tick** assembles one mixed
-//! stage:
+//! The unit of execution is one **tick** ([`run_tick`]): a mixed stage
+//! over an open-ended *live set* of per-request lifecycle state
+//! machines ([`Phase`]`::Prefilling{offset} → Decoding{step} → Done`,
+//! owned by [`InflightReq`]):
 //!
-//! 1. **prefill stage** — up to `prefill_chunk_tokens` prompt tokens are
+//! 1. **prefill stage** — up to `chunk_tokens` prompt tokens are
 //!    streamed into requests still prefilling, fair-shared per round so
 //!    one long prompt cannot absorb every tick's budget (executor
 //!    chunked-prefill API; the separated KV accounts the shared region
@@ -28,23 +28,50 @@
 //!    prefill (mask jobs for all of them are pre-submitted to the
 //!    keyed overlap lane, so mask generation for request B hides behind
 //!    request A's forward);
-//! 3. **retire stage** — finished requests produce responses
-//!    immediately, so short requests exit without waiting for the long
-//!    prompt that arrived alongside them.
+//! 3. **retire stage** — finished requests leave the live set and
+//!    produce responses immediately, freeing their KV/beam slots, so
+//!    short requests exit without waiting for the long prompt that
+//!    arrived alongside them.
+//!
+//! Two drivers compose ticks:
+//!
+//! - [`run_batch`] — closed-world: admit one batch, tick until the live
+//!    set drains (the PR 5 model, kept for the scheduler's batch path
+//!    and for the invariant harness);
+//! - the worker's **persistent continuous loop**
+//!    (`coordinator/worker.rs`, `continuous_batching` on) — open-world:
+//!    the live set never needs to drain. Each tick boundary retires
+//!    finished requests, then pulls newly arrived requests from the
+//!    stream queue into the live set within the token/slot budget, with
+//!    SLO-burn-driven admission control deciding whether a late request
+//!    is worth admitting at all. Batch formation stops being the
+//!    admission boundary — a request arriving one tick after its peers
+//!    joins the very next tick instead of waiting out the batch tail.
 //!
 //! Decode iterations therefore stay full while long prompts amortize
 //! across ticks — the paper's staged computation over the separated KV
-//! cache, reconstructed at the scheduling layer.
+//! cache, reconstructed at the scheduling layer and extended to
+//! iteration-level (vLLM/Orca-style) admission.
+//!
+//! When `chunk_autotune` is on, [`ChunkAutotuner`] replaces the static
+//! `prefill_chunk_tokens` with a measured controller: per-tick device
+//! time (the same telemetry that feeds `stage_ticks` /
+//! `stage_occupancy_sum`) is steered toward a configurable tick-duration
+//! budget by multiplicatively growing or halving the chunk size.
 //!
 //! # Invariant
 //!
-//! Staged mode is **byte-identical** to the sequential loop: both
-//! compose the same resumable [`Engine`] phase methods, chunked prefill
-//! is contractually chunk-boundary-invariant, and each request's decode
-//! depends only on its own slot + beam state. `prefill_chunk_tokens =
-//! 0` selects the sequential path (kept for ablation); the
-//! `staged_invariant` property test proves the equality across random
-//! prompt lengths, chunk sizes, batch mixes and cache states.
+//! Staged mode — batch or continuous, autotuned or static — is
+//! **byte-identical** to the sequential loop: both compose the same
+//! resumable [`Engine`] phase methods, chunked prefill is contractually
+//! chunk-boundary-invariant, and each request's decode depends only on
+//! its own slot + beam state. Admission timing and chunk partition are
+//! therefore free variables: a request admitted mid-flight computes the
+//! same bytes it would have computed in its own batch.
+//! `prefill_chunk_tokens = 0` selects the sequential path (kept for
+//! ablation); the `staged_invariant` property test proves the equality
+//! across random prompt lengths, chunk sizes, batch mixes, cache states
+//! and mid-flight arrival schedules.
 
 use super::engine::{Engine, InflightReq, Phase};
 use super::{RecRequest, RecResponse};
@@ -79,76 +106,79 @@ pub fn run_batch(
             Err(e) => out.push((req.id, Err(e))),
         }
     }
+    while !live.is_empty() {
+        out.extend(run_tick(engine, &mut live, stream, chunk_tokens, counters).retired);
+    }
+    out
+}
+
+/// What one tick did — enough for the continuous loop's controllers
+/// (chunk autotune wants the prefill volume, the SLO admission
+/// controller wants the work rate) without re-deriving it from counters.
+pub struct TickOutcome {
+    /// Requests that finished (or failed) this tick, in retire order.
+    pub retired: Vec<(u64, Result<RecResponse>)>,
+    /// Prompt tokens actually streamed this tick (≤ `chunk_tokens`).
+    pub prefill_tokens: usize,
+    /// Requests that took a decode step this tick.
+    pub decode_width: u64,
+}
+
+/// Advance every request in `live` by one mixed prefill/decode stage and
+/// retire the finished ones (see the module doc's stage list). The live
+/// set shrinks by exactly the retired/failed requests; callers own
+/// admission — [`run_batch`] admits once up front, the continuous worker
+/// loop admits at every tick boundary. `counters` receives
+/// `prefill_chunks` / `stage_ticks` / `stage_occupancy_sum`.
+pub fn run_tick(
+    engine: &mut Engine,
+    live: &mut Vec<InflightReq>,
+    stream: usize,
+    chunk_tokens: usize,
+    counters: &Counters,
+) -> TickOutcome {
+    assert!(chunk_tokens > 0, "staged mode needs a positive chunk budget");
+    let mut out: Vec<(u64, Result<RecResponse>)> = Vec::new();
     // tick spans ride the tracer's req_id 0 track (whole-engine events,
     // not tied to any one request's sampling decision)
     let trace_ticks = trace::tracer().enabled();
-    while !live.is_empty() {
-        let tick_start = if trace_ticks { now_ns() } else { 0 };
-        let occupancy = live.len() as u64;
-        Counters::inc(&counters.stage_ticks);
-        Counters::add(&counters.stage_occupancy_sum, occupancy);
-        // ---- prefill stage: stream up to chunk_tokens prompt tokens,
-        // FAIR-SHARED across the requests still prefilling. A greedy
-        // admission-order fill would let one long prompt absorb every
-        // tick's budget and starve later arrivals' prefills — exactly
-        // the head-of-line blocking this driver exists to remove; the
-        // per-round fair share keeps short prompts flowing into decode
-        // while the long one amortizes. ----
-        let mut budget = chunk_tokens;
-        loop {
-            let n_pref = live
-                .iter()
-                .filter(|r| matches!(r.phase(), Phase::Prefilling { .. }))
-                .count();
-            if n_pref == 0 || budget == 0 {
-                break;
-            }
-            let fair = (budget / n_pref).max(1);
-            let mut consumed_any = false;
-            let mut i = 0;
-            while i < live.len() && budget > 0 {
-                if !matches!(live[i].phase(), Phase::Prefilling { .. }) {
-                    i += 1;
-                    continue;
-                }
-                match engine.advance_prefill(&mut live[i], fair.min(budget)) {
-                    Ok(n) => {
-                        budget -= n;
-                        consumed_any = consumed_any || n > 0;
-                        if n > 0 {
-                            Counters::inc(&counters.prefill_chunks);
-                        }
-                        i += 1;
-                    }
-                    Err(e) => {
-                        let r = live.remove(i);
-                        let id = r.id;
-                        engine.abort_request(r);
-                        out.push((id, Err(e)));
-                    }
-                }
-            }
-            if !consumed_any {
-                break;
-            }
+    let tick_start = if trace_ticks { now_ns() } else { 0 };
+    let occupancy = live.len() as u64;
+    Counters::inc(&counters.stage_ticks);
+    Counters::add(&counters.stage_occupancy_sum, occupancy);
+    // ---- prefill stage: stream up to chunk_tokens prompt tokens,
+    // FAIR-SHARED across the requests still prefilling. A greedy
+    // admission-order fill would let one long prompt absorb every
+    // tick's budget and starve later arrivals' prefills — exactly
+    // the head-of-line blocking this driver exists to remove; the
+    // per-round fair share keeps short prompts flowing into decode
+    // while the long one amortizes. ----
+    let mut budget = chunk_tokens;
+    loop {
+        let n_pref = live
+            .iter()
+            .filter(|r| matches!(r.phase(), Phase::Prefilling { .. }))
+            .count();
+        if n_pref == 0 || budget == 0 {
+            break;
         }
-        // ---- decode stage: one iteration for every request past
-        // prefill. Mask jobs are queued for ALL of them first, so the
-        // overlap lane computes request B's masks while request A's
-        // forward occupies the executor. ----
-        for r in live.iter() {
-            engine.prepare_masks(r);
-        }
-        let mut decode_width = 0u64;
+        let fair = (budget / n_pref).max(1);
+        let mut consumed_any = false;
         let mut i = 0;
-        while i < live.len() {
-            if !matches!(live[i].phase(), Phase::Decoding { .. }) {
+        while i < live.len() && budget > 0 {
+            if !matches!(live[i].phase(), Phase::Prefilling { .. }) {
                 i += 1;
                 continue;
             }
-            decode_width += 1;
-            match engine.advance_decode(&mut live[i]) {
-                Ok(()) => i += 1,
+            match engine.advance_prefill(&mut live[i], fair.min(budget)) {
+                Ok(n) => {
+                    budget -= n;
+                    consumed_any = consumed_any || n > 0;
+                    if n > 0 {
+                        Counters::inc(&counters.prefill_chunks);
+                    }
+                    i += 1;
+                }
                 Err(e) => {
                     let r = live.remove(i);
                     let id = r.id;
@@ -157,44 +187,151 @@ pub fn run_batch(
                 }
             }
         }
-        // ---- retire stage: finished requests respond immediately ----
-        let mut i = 0;
-        while i < live.len() {
-            if live[i].phase() != Phase::Done {
-                i += 1;
-                continue;
-            }
-            let r = live.remove(i);
-            let id = r.id;
-            let (arrival_ns, t0) = r.stamps();
-            let eo = engine.finish_request(r);
-            let done = now_ns();
-            let queue_ns = t0.saturating_sub(arrival_ns);
-            let service_ns = done.saturating_sub(t0);
-            out.push((
-                id,
-                Ok(RecResponse {
-                    id: eo.id,
-                    items: eo.items,
-                    latency_ns: queue_ns + service_ns,
-                    queue_ns,
-                    service_ns,
-                    valid_items: eo.valid_items,
-                    stream,
-                }),
-            ));
-        }
-        if trace_ticks {
-            trace::tracer().record(
-                0,
-                SpanPhase::Tick,
-                tick_start,
-                now_ns().saturating_sub(tick_start),
-                [occupancy, (chunk_tokens - budget) as u64, decode_width],
-            );
+        if !consumed_any {
+            break;
         }
     }
-    out
+    // ---- decode stage: one iteration for every request past
+    // prefill. Mask jobs are queued for ALL of them first, so the
+    // overlap lane computes request B's masks while request A's
+    // forward occupies the executor. ----
+    for r in live.iter() {
+        engine.prepare_masks(r);
+    }
+    let mut decode_width = 0u64;
+    let mut i = 0;
+    while i < live.len() {
+        if !matches!(live[i].phase(), Phase::Decoding { .. }) {
+            i += 1;
+            continue;
+        }
+        decode_width += 1;
+        match engine.advance_decode(&mut live[i]) {
+            Ok(()) => i += 1,
+            Err(e) => {
+                let r = live.remove(i);
+                let id = r.id;
+                engine.abort_request(r);
+                out.push((id, Err(e)));
+            }
+        }
+    }
+    // ---- retire stage: finished requests respond immediately ----
+    let mut i = 0;
+    while i < live.len() {
+        if live[i].phase() != Phase::Done {
+            i += 1;
+            continue;
+        }
+        let r = live.remove(i);
+        let id = r.id;
+        let (arrival_ns, t0) = r.stamps();
+        let eo = engine.finish_request(r);
+        let done = now_ns();
+        let queue_ns = t0.saturating_sub(arrival_ns);
+        let service_ns = done.saturating_sub(t0);
+        out.push((
+            id,
+            Ok(RecResponse {
+                id: eo.id,
+                items: eo.items,
+                latency_ns: queue_ns + service_ns,
+                queue_ns,
+                service_ns,
+                valid_items: eo.valid_items,
+                stream,
+            }),
+        ));
+    }
+    if trace_ticks {
+        trace::tracer().record(
+            0,
+            SpanPhase::Tick,
+            tick_start,
+            now_ns().saturating_sub(tick_start),
+            [occupancy, (chunk_tokens - budget) as u64, decode_width],
+        );
+    }
+    TickOutcome {
+        retired: out,
+        prefill_tokens: chunk_tokens - budget,
+        decode_width,
+    }
+}
+
+/// Measured replacement for a static `prefill_chunk_tokens`
+/// (`chunk_autotune` knob): steer per-tick device time toward
+/// `target_ns` by multiplicatively halving the chunk when ticks run
+/// long and doubling it when they run short. An EWMA over tick
+/// durations plus a retune cooldown and a ±25% deadband keep the
+/// controller from chasing jitter; every applied change counts
+/// `chunk_retunes`. Chunk partition is a free variable of the staged
+/// invariant, so retuning mid-flight never changes result bytes.
+pub struct ChunkAutotuner {
+    target_ns: u64,
+    chunk: usize,
+    ewma_ns: u64,
+    ticks_since_retune: u32,
+}
+
+impl ChunkAutotuner {
+    pub const MIN_CHUNK: usize = 16;
+    pub const MAX_CHUNK: usize = 16_384;
+    /// Ticks between retune decisions — long enough for the EWMA to
+    /// reflect the previous change before the next one.
+    const COOLDOWN_TICKS: u32 = 8;
+
+    /// `target_ns = 0` disables the controller (chunk stays `initial`).
+    pub fn new(initial: usize, target_ns: u64) -> Self {
+        ChunkAutotuner {
+            target_ns,
+            chunk: initial.max(1),
+            ewma_ns: 0,
+            ticks_since_retune: 0,
+        }
+    }
+
+    /// Current chunk budget to hand [`run_tick`].
+    pub fn chunk(&self) -> usize {
+        self.chunk
+    }
+
+    /// Feed one tick's measured duration. Ticks that streamed no prefill
+    /// are ignored — decode-only ticks don't respond to chunk size, so
+    /// they carry no signal about it.
+    pub fn observe(
+        &mut self,
+        tick_dur_ns: u64,
+        prefill_tokens: usize,
+        counters: &Counters,
+    ) {
+        if self.target_ns == 0 || prefill_tokens == 0 {
+            return;
+        }
+        self.ewma_ns = if self.ewma_ns == 0 {
+            tick_dur_ns
+        } else {
+            (3 * self.ewma_ns + tick_dur_ns) / 4
+        };
+        self.ticks_since_retune += 1;
+        if self.ticks_since_retune < Self::COOLDOWN_TICKS {
+            return;
+        }
+        let hi = self.target_ns + self.target_ns / 4;
+        let lo = self.target_ns - self.target_ns / 4;
+        let next = if self.ewma_ns > hi && self.chunk > Self::MIN_CHUNK {
+            (self.chunk / 2).max(Self::MIN_CHUNK)
+        } else if self.ewma_ns < lo && self.chunk < Self::MAX_CHUNK {
+            (self.chunk * 2).min(Self::MAX_CHUNK)
+        } else {
+            self.chunk
+        };
+        if next != self.chunk {
+            self.chunk = next;
+            self.ticks_since_retune = 0;
+            Counters::inc(&counters.chunk_retunes);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -311,5 +448,102 @@ mod tests {
         assert_eq!(fails, vec![1]);
         // no leaks from the aborted request
         assert_eq!(e.kv_manager().current_bytes(), 0);
+    }
+
+    #[test]
+    fn mid_flight_admission_is_byte_identical_to_sequential() {
+        // drive run_tick directly as the continuous loop does: admit one
+        // long request, tick a few times, then admit short requests into
+        // the live set mid-prefill — results must match the sequential
+        // baseline byte for byte, and the late shorts must retire first
+        let rs = {
+            let mut rs = reqs(4, 4);
+            rs.insert(
+                0,
+                RecRequest {
+                    id: 99,
+                    tokens: (0..80).map(|t| (t * 5) % 60).collect(),
+                    arrival_ns: crate::util::now_ns(),
+                    user_id: 99,
+                },
+            );
+            rs
+        };
+        let mut seq = engine(SelectorKind::XBeam, false);
+        let mut want = std::collections::HashMap::new();
+        for r in &rs {
+            want.insert(r.id, seq.run_request(r).unwrap().items);
+        }
+        let mut e = engine(SelectorKind::XBeam, false);
+        let counters = Counters::new();
+        let mut live = vec![e.begin_request(&rs[0], true).unwrap()];
+        let mut order = Vec::new();
+        let mut pending = rs[1..].to_vec();
+        let mut tick = 0;
+        while !live.is_empty() {
+            // stagger arrivals: one new request every other tick
+            if tick >= 2 && tick % 2 == 0 && !pending.is_empty() {
+                live.push(e.begin_request(&pending.remove(0), true).unwrap());
+            }
+            let o = run_tick(&mut e, &mut live, 0, 8, &counters);
+            for (id, res) in o.retired {
+                assert_eq!(
+                    want[&id],
+                    res.unwrap().items,
+                    "request {id} diverged under mid-flight admission"
+                );
+                order.push(id);
+            }
+            tick += 1;
+        }
+        assert!(pending.is_empty(), "every arrival was admitted");
+        assert_eq!(order.len(), rs.len());
+        assert_eq!(
+            *order.last().unwrap(),
+            99,
+            "late shorts must retire before the early long prompt: {order:?}"
+        );
+    }
+
+    #[test]
+    fn autotuner_halves_long_ticks_and_doubles_short_ones() {
+        let counters = Counters::new();
+        let mut t = ChunkAutotuner::new(256, 1_000_000); // 1ms target
+        // consistently long ticks: chunk must shrink (after the cooldown)
+        for _ in 0..32 {
+            t.observe(4_000_000, 10, &counters);
+        }
+        assert!(t.chunk() < 256, "long ticks must shrink the chunk");
+        let shrunk = t.chunk();
+        // consistently short ticks: chunk must grow back
+        for _ in 0..64 {
+            t.observe(100_000, 10, &counters);
+        }
+        assert!(t.chunk() > shrunk, "short ticks must grow the chunk");
+        assert!(Counters::get(&counters.chunk_retunes) >= 2);
+        // bounds hold under sustained pressure
+        for _ in 0..1000 {
+            t.observe(100_000, 10, &counters);
+        }
+        assert!(t.chunk() <= ChunkAutotuner::MAX_CHUNK);
+        for _ in 0..1000 {
+            t.observe(u64::MAX / 4, 10, &counters);
+        }
+        assert!(t.chunk() >= ChunkAutotuner::MIN_CHUNK);
+    }
+
+    #[test]
+    fn autotuner_ignores_decode_only_ticks_and_zero_target() {
+        let counters = Counters::new();
+        let mut t = ChunkAutotuner::new(64, 0);
+        for _ in 0..100 {
+            t.observe(u64::MAX / 4, 10, &counters);
+        }
+        assert_eq!(t.chunk(), 64, "target 0 disables the controller");
+        let mut t = ChunkAutotuner::new(64, 1_000);
+        for _ in 0..100 {
+            t.observe(u64::MAX / 4, 0, &counters); // decode-only ticks
+        }
+        assert_eq!(t.chunk(), 64, "no prefill volume → no signal");
     }
 }

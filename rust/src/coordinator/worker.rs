@@ -3,27 +3,329 @@
 //! Every worker drains its *own* batch queue — the scheduler routes
 //! batches to queues either by load (idle-stream balancing) or by
 //! session affinity, so a returning user's batch reaches the engine
-//! whose cache holds their prefix KV. With `prefill_chunk_tokens > 0`
-//! each batch runs through the iteration-level staged driver
-//! ([`super::staged`]): prompts stream in chunks interleaved with every
-//! in-flight request's decode steps, so one long prompt no longer
-//! head-of-line-blocks the batch (0 keeps the sequential
-//! request-at-a-time loop, the ablation baseline). Each worker owns a
-//! private [`Counters`] shard (folding its engine's session-cache and
-//! overlap-lane deltas after every batch); `backend_stats` folds the
-//! shards into the aggregate and keeps them around for the per-stream /
-//! per-replica breakdown — no cross-stream cache-line contention on the
-//! hot counting paths.
+//! whose cache holds their prefix KV.
+//!
+//! Two execution loops share the retire/accounting plumbing:
+//!
+//! * **batch loop** (default) — take a formed batch, run it to
+//!   completion, repeat. With `prefill_chunk_tokens > 0` the batch runs
+//!   through the iteration-level staged driver ([`super::staged`]):
+//!   prompts stream in chunks interleaved with every in-flight
+//!   request's decode steps, so one long prompt no longer
+//!   head-of-line-blocks the batch (0 keeps the sequential
+//!   request-at-a-time loop, the ablation baseline). Batch formation is
+//!   still the admission boundary: a request arriving one tick after
+//!   its peers waits out the whole batch.
+//! * **continuous loop** (`WorkerOptions::continuous`, requires
+//!   chunking) — the staged live set never drains between batches.
+//!   Each [`super::staged::run_tick`] boundary retires finished
+//!   requests (their KV/beam slots are freed inside the tick), then
+//!   pulls newly delivered requests from the stream queue into the
+//!   live set, bounded by the live token/slot budget
+//!   (`max_batch_tokens` / `max_batch_requests` — the same knobs that
+//!   bound batch formation, applied to the in-flight mix instead).
+//!   Admissions count `tick_admissions`. With `tick_slo_admission` on,
+//!   a worker-local [`BurnController`] tracks the rolling SLO burn over
+//!   recent retirements: while burn < 1 every arrival is admitted;
+//!   once the error budget is burning, arrivals that cannot make their
+//!   deadline anyway (estimated completion past `slo_ns`, using the
+//!   measured per-tick time) are shed instead of admitted — counted in
+//!   `tick_sheds` *and* `batch_rejects` so reject-aware drivers keep
+//!   their accounting. `chunk_autotune` replaces the static chunk with
+//!   a [`super::staged::ChunkAutotuner`] steering per-tick device time
+//!   toward `tick_budget_us`. Both loops are byte-identical to the
+//!   sequential baseline (the staged invariant: admission timing and
+//!   chunk partition are free variables).
+//!
+//! Each worker owns a private [`Counters`] shard (folding its engine's
+//! session-cache and overlap-lane deltas after every batch/tick);
+//! `backend_stats` folds the shards into the aggregate and keeps them
+//! around for the per-stream / per-replica breakdown — no cross-stream
+//! cache-line contention on the hot counting paths.
 
-use super::engine::{Engine, EngineConfig};
+use super::engine::{Engine, EngineConfig, InflightReq};
 use super::scheduler::ExecutorFactory;
-use super::{Batch, RecResponse};
+use super::{Batch, RecRequest, RecResponse};
 use crate::itemspace::ItemTrie;
 use crate::metrics::Counters;
+use crate::server::burn::BurnController;
 use crate::sessioncache::SessionSnapshot;
+use crate::util::now_ns;
 use crate::util::pool::Channel;
+use std::collections::{HashMap, VecDeque};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+
+/// Per-worker policy knobs, resolved by the scheduler from
+/// `ServingConfig` (plus the `XGR_CONTINUOUS_BATCHING` env override).
+#[derive(Clone, Debug)]
+pub struct WorkerOptions {
+    /// Staged prefill chunk budget; 0 = sequential request-at-a-time
+    /// (which also disables the continuous loop).
+    pub prefill_chunk_tokens: usize,
+    /// End-to-end latency SLO for violation counting; 0 disables.
+    pub slo_ns: u64,
+    /// Persistent continuous loop instead of batch-at-a-time (inert
+    /// without chunking).
+    pub continuous: bool,
+    /// Burn-driven shed of hopeless arrivals at the tick boundary
+    /// (continuous loop only).
+    pub tick_slo_admission: bool,
+    /// Steer the chunk budget toward `tick_budget_us` per tick
+    /// (continuous loop only).
+    pub chunk_autotune: bool,
+    /// Target tick duration for the autotuner, microseconds.
+    pub tick_budget_us: u64,
+    /// Live-set token budget (same knob that bounds batch formation).
+    pub max_batch_tokens: usize,
+    /// Live-set request-slot budget.
+    pub max_batch_requests: usize,
+}
+
+impl Default for WorkerOptions {
+    fn default() -> WorkerOptions {
+        WorkerOptions {
+            prefill_chunk_tokens: 0,
+            slo_ns: 0,
+            continuous: false,
+            tick_slo_admission: false,
+            chunk_autotune: false,
+            tick_budget_us: 2_000,
+            max_batch_tokens: 4_096,
+            max_batch_requests: 64,
+        }
+    }
+}
+
+/// Paper's ND (`num_decode` = 3): every admitted request owes this many
+/// decode iterations after prefill. Used only by the shed-time
+/// estimator — an estimate, never a correctness input.
+const EST_DECODE_TICKS: u64 = 3;
+
+/// Delta-folds an engine's privately counted session-cache and
+/// overlap-lane activity into the worker's counter shard (called after
+/// every batch / tick; the engine counts cumulatively, the shard wants
+/// increments).
+struct DeltaFold {
+    sess_prev: SessionSnapshot,
+    lane_prev: u64,
+}
+
+impl DeltaFold {
+    fn new() -> DeltaFold {
+        DeltaFold { sess_prev: SessionSnapshot::default(), lane_prev: 0 }
+    }
+
+    fn fold(&mut self, engine: &Engine, counters: &Counters) {
+        if let Some(sc) = engine.session_cache() {
+            let s = sc.snapshot();
+            let p = &self.sess_prev;
+            Counters::add(&counters.session_hits, s.hits - p.hits);
+            Counters::add(&counters.session_misses, s.misses - p.misses);
+            Counters::add(&counters.session_swap_ins, s.swap_ins - p.swap_ins);
+            Counters::add(&counters.session_evictions, s.evictions - p.evictions);
+            Counters::add(&counters.prefill_tokens_saved, s.tokens_saved - p.tokens_saved);
+            Counters::add(&counters.pool_hits, s.pool_hits - p.pool_hits);
+            Counters::add(&counters.pool_misses, s.pool_misses - p.pool_misses);
+            Counters::add(&counters.pool_epoch_drops, s.pool_epoch_drops - p.pool_epoch_drops);
+            Counters::max(&counters.session_peak_hbm_bytes, s.peak_hbm_bytes);
+            Counters::max(&counters.session_peak_dram_bytes, s.peak_dram_bytes);
+            self.sess_prev = s;
+        }
+        // overlap-lane degradation delta (0 while the lane worker lives)
+        let lf = engine.mask_lane_fallbacks();
+        Counters::add(&counters.mask_lane_fallbacks, lf - self.lane_prev);
+        self.lane_prev = lf;
+    }
+}
+
+/// Account one retired request (done/violation counters, burn sample,
+/// response send). Returns `false` when the response channel is closed
+/// — the process is tearing down and the worker should exit.
+fn respond(
+    id: u64,
+    res: crate::Result<RecResponse>,
+    responses: &Channel<RecResponse>,
+    counters: &Counters,
+    stream: usize,
+    slo_ns: u64,
+    burn: Option<&mut BurnController>,
+) -> bool {
+    match res {
+        Ok(resp) => {
+            Counters::inc(&counters.requests_done);
+            let violated = slo_ns > 0 && resp.latency_ns > slo_ns;
+            if violated {
+                Counters::inc(&counters.slo_violations);
+            }
+            if let Some(b) = burn {
+                b.record(violated);
+            }
+            responses.send(resp).is_ok()
+        }
+        Err(e) => {
+            eprintln!("worker {stream}: request {id} failed: {e:#}");
+            Counters::inc(&counters.requests_rejected);
+            true
+        }
+    }
+}
+
+/// The default loop: take a formed batch, run it to completion, repeat.
+fn batch_loop(
+    engine: &mut Engine,
+    queue: &Channel<Batch>,
+    responses: &Channel<RecResponse>,
+    counters: &Counters,
+    stream: usize,
+    opts: &WorkerOptions,
+) {
+    let mut fold = DeltaFold::new();
+    while let Some(batch) = queue.recv() {
+        Counters::inc(&counters.batches);
+        if opts.prefill_chunk_tokens > 0 {
+            // staged: the whole batch interleaves at iteration
+            // granularity
+            let results = super::staged::run_batch(
+                engine,
+                &batch.requests,
+                stream,
+                opts.prefill_chunk_tokens,
+                counters,
+            );
+            for (id, res) in results {
+                if !respond(id, res, responses, counters, stream, opts.slo_ns, None) {
+                    return;
+                }
+            }
+        } else {
+            for req in &batch.requests {
+                let res = engine.process(req, stream);
+                if !respond(req.id, res, responses, counters, stream, opts.slo_ns, None) {
+                    return;
+                }
+            }
+        }
+        fold.fold(engine, counters);
+    }
+}
+
+/// The continuous loop: a persistent staged live set with tick-boundary
+/// admission (see the module doc). Exits when the stream queue is
+/// closed and everything delivered has retired.
+fn continuous_loop(
+    engine: &mut Engine,
+    queue: &Channel<Batch>,
+    responses: &Channel<RecResponse>,
+    counters: &Counters,
+    stream: usize,
+    opts: &WorkerOptions,
+) {
+    let mut live: Vec<InflightReq> = Vec::new();
+    // admission-budget accounting for the live set: token cost per live
+    // request id (run_tick retires by id, not by index)
+    let mut cost: HashMap<u64, usize> = HashMap::new();
+    let mut live_tokens: usize = 0;
+    // delivered but not yet admitted (waiting for budget)
+    let mut pending: VecDeque<RecRequest> = VecDeque::new();
+    let mut burn = BurnController::new();
+    let mut tuner = super::staged::ChunkAutotuner::new(
+        opts.prefill_chunk_tokens,
+        if opts.chunk_autotune { opts.tick_budget_us.saturating_mul(1_000) } else { 0 },
+    );
+    // EWMA of measured tick duration: the shed estimator's clock
+    let mut tick_ewma_ns: u64 = 0;
+    let mut fold = DeltaFold::new();
+    loop {
+        // ---- intake: block when idle, poll at tick boundaries ----
+        if live.is_empty() && pending.is_empty() {
+            match queue.recv() {
+                Some(b) => {
+                    Counters::inc(&counters.batches);
+                    pending.extend(b.requests);
+                }
+                None => return, // closed and fully drained
+            }
+        }
+        while let Some(b) = queue.try_recv() {
+            Counters::inc(&counters.batches);
+            pending.extend(b.requests);
+        }
+        // ---- tick-boundary admission, bounded by the live budget ----
+        let slot_cap = opts.max_batch_requests.max(1);
+        while live.len() < slot_cap {
+            let Some(front) = pending.front() else { break };
+            let c = super::batch::req_tokens(front);
+            // a single oversized request is admitted alone (liveness):
+            // the token budget bounds the mix, not the largest prompt
+            if !live.is_empty() && live_tokens + c > opts.max_batch_tokens.max(1) {
+                break;
+            }
+            let r = pending.pop_front().expect("front was Some");
+            // burn-driven SLO admission: only shed when the error
+            // budget is already burning AND the request cannot make its
+            // deadline even if admitted right now — it would retire as
+            // one more violation while displacing work that can still
+            // make it
+            if opts.tick_slo_admission
+                && opts.slo_ns > 0
+                && tick_ewma_ns > 0
+                && burn.burn() >= 1.0
+            {
+                let chunk = tuner.chunk().max(1) as u64;
+                let ticks_est = (c as u64).div_ceil(chunk) + EST_DECODE_TICKS;
+                let eta_ns = now_ns()
+                    .saturating_sub(r.arrival_ns)
+                    .saturating_add(ticks_est.saturating_mul(tick_ewma_ns));
+                if eta_ns > opts.slo_ns {
+                    // the shed flows into batch_rejects too so
+                    // reject-aware drivers (replay's tail wait) see it
+                    Counters::inc(&counters.tick_sheds);
+                    Counters::inc(&counters.batch_rejects);
+                    continue;
+                }
+            }
+            match engine.begin_request(&r, true) {
+                Ok(ir) => {
+                    live_tokens += c;
+                    cost.insert(ir.id, c);
+                    live.push(ir);
+                    Counters::inc(&counters.tick_admissions);
+                }
+                Err(e) => {
+                    eprintln!("worker {stream}: request {} failed: {e:#}", r.id);
+                    Counters::inc(&counters.requests_rejected);
+                }
+            }
+        }
+        if live.is_empty() {
+            // everything at the head was shed or failed admission;
+            // loop back (and idle-block if nothing else is pending)
+            continue;
+        }
+        // ---- one staged tick over the live set ----
+        let t0 = now_ns();
+        let outcome =
+            super::staged::run_tick(engine, &mut live, stream, tuner.chunk(), counters);
+        let tick_ns = now_ns().saturating_sub(t0);
+        tick_ewma_ns = if tick_ewma_ns == 0 {
+            tick_ns
+        } else {
+            (3 * tick_ewma_ns + tick_ns) / 4
+        };
+        tuner.observe(tick_ns, outcome.prefill_tokens, counters);
+        // ---- retire: run_tick already freed the KV/beam slots;
+        // release the admission budget and answer immediately ----
+        for (id, res) in outcome.retired {
+            live_tokens = live_tokens.saturating_sub(cost.remove(&id).unwrap_or(0));
+            if !respond(id, res, responses, counters, stream, opts.slo_ns, Some(&mut burn))
+            {
+                return;
+            }
+        }
+        fold.fold(engine, counters);
+    }
+}
 
 pub struct Workers {
     handles: Vec<JoinHandle<()>>,
@@ -31,10 +333,10 @@ pub struct Workers {
 
 impl Workers {
     /// Spawn one worker per queue in `queues` (queue i == stream i),
-    /// each counting into its own shard `shards[i]`.
-    /// `prefill_chunk_tokens > 0` selects the staged batch driver.
-    /// `slo_ns > 0` counts responses over that end-to-end latency into
-    /// `slo_violations` (0 disables the check).
+    /// each counting into its own shard `shards[i]`. `opts` selects the
+    /// loop: `continuous` (with chunking) runs the persistent
+    /// tick-boundary loop, `prefill_chunk_tokens > 0` alone the staged
+    /// batch driver, neither the sequential baseline.
     pub fn spawn(
         factory: ExecutorFactory,
         trie: Arc<ItemTrie>,
@@ -42,8 +344,7 @@ impl Workers {
         queues: Vec<Channel<Batch>>,
         responses: Channel<RecResponse>,
         shards: Vec<Arc<Counters>>,
-        prefill_chunk_tokens: usize,
-        slo_ns: u64,
+        opts: WorkerOptions,
     ) -> Workers {
         assert_eq!(shards.len(), queues.len(), "one counter shard per stream");
         let handles = (0..queues.len())
@@ -55,6 +356,7 @@ impl Workers {
                 let engine_cfg = engine_cfg.clone();
                 let responses = responses.clone();
                 let counters = shards[stream].clone();
+                let opts = opts.clone();
                 std::thread::Builder::new()
                     .name(format!("xgr-worker-{stream}"))
                     .spawn(move || {
@@ -88,82 +390,14 @@ impl Workers {
                             }
                         };
                         let mut engine = Engine::new(exec, trie, engine_cfg);
-                        let mut sess_prev = SessionSnapshot::default();
-                        let mut lane_prev = 0u64;
-                        while let Some(batch) = queue.recv() {
-                            Counters::inc(&counters.batches);
-                            if prefill_chunk_tokens > 0 {
-                                // staged: the whole batch interleaves at
-                                // iteration granularity
-                                let results = super::staged::run_batch(
-                                    &mut engine,
-                                    &batch.requests,
-                                    stream,
-                                    prefill_chunk_tokens,
-                                    &counters,
-                                );
-                                for (id, res) in results {
-                                    match res {
-                                        Ok(resp) => {
-                                            Counters::inc(&counters.requests_done);
-                                            if slo_ns > 0 && resp.latency_ns > slo_ns {
-                                                Counters::inc(&counters.slo_violations);
-                                            }
-                                            if responses.send(resp).is_err() {
-                                                return;
-                                            }
-                                        }
-                                        Err(e) => {
-                                            eprintln!(
-                                                "worker {stream}: request {id} failed: {e:#}"
-                                            );
-                                            Counters::inc(&counters.requests_rejected);
-                                        }
-                                    }
-                                }
-                            } else {
-                                for req in &batch.requests {
-                                    match engine.process(req, stream) {
-                                        Ok(resp) => {
-                                            Counters::inc(&counters.requests_done);
-                                            if slo_ns > 0 && resp.latency_ns > slo_ns {
-                                                Counters::inc(&counters.slo_violations);
-                                            }
-                                            if responses.send(resp).is_err() {
-                                                return;
-                                            }
-                                        }
-                                        Err(e) => {
-                                            eprintln!(
-                                                "worker {stream}: request {} failed: {e:#}",
-                                                req.id
-                                            );
-                                            Counters::inc(&counters.requests_rejected);
-                                        }
-                                    }
-                                }
-                            }
-                            // fold this engine's session-cache activity into
-                            // the shared counters (delta since last batch)
-                            if let Some(sc) = engine.session_cache() {
-                                let s = sc.snapshot();
-                                Counters::add(&counters.session_hits, s.hits - sess_prev.hits);
-                                Counters::add(&counters.session_misses, s.misses - sess_prev.misses);
-                                Counters::add(&counters.session_swap_ins, s.swap_ins - sess_prev.swap_ins);
-                                Counters::add(&counters.session_evictions, s.evictions - sess_prev.evictions);
-                                Counters::add(&counters.prefill_tokens_saved, s.tokens_saved - sess_prev.tokens_saved);
-                                Counters::add(&counters.pool_hits, s.pool_hits - sess_prev.pool_hits);
-                                Counters::add(&counters.pool_misses, s.pool_misses - sess_prev.pool_misses);
-                                Counters::add(&counters.pool_epoch_drops, s.pool_epoch_drops - sess_prev.pool_epoch_drops);
-                                Counters::max(&counters.session_peak_hbm_bytes, s.peak_hbm_bytes);
-                                Counters::max(&counters.session_peak_dram_bytes, s.peak_dram_bytes);
-                                sess_prev = s;
-                            }
-                            // overlap-lane degradation delta (0 while the
-                            // lane worker lives)
-                            let lf = engine.mask_lane_fallbacks();
-                            Counters::add(&counters.mask_lane_fallbacks, lf - lane_prev);
-                            lane_prev = lf;
+                        if opts.continuous && opts.prefill_chunk_tokens > 0 {
+                            continuous_loop(
+                                &mut engine, &queue, &responses, &counters, stream, &opts,
+                            );
+                        } else {
+                            batch_loop(
+                                &mut engine, &queue, &responses, &counters, stream, &opts,
+                            );
                         }
                     })
                     .expect("spawn worker")
@@ -179,7 +413,7 @@ impl Workers {
     }
 }
 
-#[cfg(test)]
+#[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
     use crate::config::ModelSpec;
@@ -188,7 +422,10 @@ mod tests {
     use crate::runtime::MockExecutor;
     use crate::util::now_ns;
 
-    fn drain_with_chunk(prefill_chunk_tokens: usize) -> Counters {
+    fn harness(
+        streams: usize,
+    ) -> (ExecutorFactory, Arc<ItemTrie>, Vec<Channel<Batch>>, Channel<RecResponse>, Vec<Arc<Counters>>)
+    {
         let mut spec = ModelSpec::onerec_tiny();
         spec.vocab = 64;
         spec.beam_width = 4;
@@ -199,10 +436,15 @@ mod tests {
             Arc::new(move || Ok(Box::new(MockExecutor::new(spec.clone())) as _))
         };
         let queues: Vec<Channel<Batch>> =
-            (0..2).map(|_| Channel::bounded(8)).collect();
+            (0..streams).map(|_| Channel::bounded(8)).collect();
         let responses: Channel<RecResponse> = Channel::bounded(64);
         let shards: Vec<Arc<Counters>> =
-            (0..2).map(|_| Arc::new(Counters::new())).collect();
+            (0..streams).map(|_| Arc::new(Counters::new())).collect();
+        (factory, trie, queues, responses, shards)
+    }
+
+    fn drain_with_chunk(prefill_chunk_tokens: usize) -> Counters {
+        let (factory, trie, queues, responses, shards) = harness(2);
         let w = Workers::spawn(
             factory,
             trie,
@@ -210,8 +452,11 @@ mod tests {
             queues.clone(),
             responses.clone(),
             shards.clone(),
-            prefill_chunk_tokens,
-            0, // no SLO accounting in this harness
+            WorkerOptions {
+                prefill_chunk_tokens,
+                // no SLO accounting in this harness
+                ..WorkerOptions::default()
+            },
         );
         for b in 0..4 {
             let reqs = (0..3)
@@ -261,5 +506,170 @@ mod tests {
         let c = drain_with_chunk(2);
         assert!(Counters::get(&c.stage_ticks) > 0, "staged mode ticks");
         assert!(Counters::get(&c.prefill_chunks) > 0);
+    }
+
+    #[test]
+    fn continuous_workers_admit_trickled_arrivals_at_tick_boundaries() {
+        // single-request batches trickle into a live worker: the
+        // persistent loop must admit each at a tick boundary (never
+        // waiting for a formed batch) and answer everything
+        let (factory, trie, queues, responses, shards) = harness(1);
+        let w = Workers::spawn(
+            factory,
+            trie,
+            EngineConfig::default(),
+            queues.clone(),
+            responses.clone(),
+            shards.clone(),
+            WorkerOptions {
+                prefill_chunk_tokens: 2,
+                continuous: true,
+                max_batch_tokens: 16,
+                max_batch_requests: 3,
+                ..WorkerOptions::default()
+            },
+        );
+        for i in 0..12u64 {
+            let tokens: Vec<u32> = (0..(3 + i as u32 % 5)).map(|t| (t * 7 + i as u32) % 60).collect();
+            let total_tokens = tokens.len();
+            queues[0]
+                .send(Batch {
+                    requests: vec![RecRequest { id: i, tokens, arrival_ns: now_ns(), user_id: i }],
+                    total_tokens,
+                })
+                .unwrap();
+            if i % 3 == 0 {
+                // let the worker start ticking so later sends arrive
+                // genuinely mid-flight
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+        }
+        queues[0].close();
+        w.join();
+        responses.close();
+        let mut got = std::collections::HashSet::new();
+        while let Some(r) = responses.recv() {
+            assert!(!r.items.is_empty());
+            assert!(got.insert(r.id), "duplicate response {}", r.id);
+        }
+        assert_eq!(got.len(), 12, "every arrival admitted exactly once");
+        assert_eq!(Counters::get(&shards[0].tick_admissions), 12);
+        assert_eq!(Counters::get(&shards[0].requests_done), 12);
+        assert!(Counters::get(&shards[0].stage_ticks) > 0);
+        assert_eq!(Counters::get(&shards[0].tick_sheds), 0, "no SLO → no sheds");
+    }
+
+    #[test]
+    fn continuous_workers_shed_hopeless_arrivals_once_burn_ignites() {
+        // slo_ns = 1: the first retirement is a violation, igniting the
+        // burn controller (burn = 100 ≥ 1); every later arrival is
+        // hopeless by construction (eta > 1ns) so it must shed — into
+        // tick_sheds AND batch_rejects — instead of retiring as one
+        // more violation
+        let (factory, trie, queues, responses, shards) = harness(1);
+        let w = Workers::spawn(
+            factory,
+            trie,
+            EngineConfig::default(),
+            queues.clone(),
+            responses.clone(),
+            shards.clone(),
+            WorkerOptions {
+                prefill_chunk_tokens: 2,
+                slo_ns: 1,
+                continuous: true,
+                tick_slo_admission: true,
+                ..WorkerOptions::default()
+            },
+        );
+        let send_one = |id: u64| {
+            queues[0]
+                .send(Batch {
+                    requests: vec![RecRequest {
+                        id,
+                        tokens: vec![1, 2, (id % 60) as u32],
+                        arrival_ns: now_ns(),
+                        user_id: id,
+                    }],
+                    total_tokens: 3,
+                })
+                .unwrap();
+        };
+        // first request retires (burn 0 at its admission)…
+        send_one(0);
+        let first = responses.recv().expect("first request must be served");
+        assert_eq!(first.id, 0);
+        // …and only then the rest arrive, against a burning budget
+        for id in 1..8u64 {
+            send_one(id);
+        }
+        queues[0].close();
+        w.join();
+        responses.close();
+        assert!(responses.recv().is_none(), "hopeless arrivals must not be served");
+        assert_eq!(Counters::get(&shards[0].requests_done), 1);
+        assert_eq!(Counters::get(&shards[0].tick_sheds), 7);
+        assert_eq!(
+            Counters::get(&shards[0].batch_rejects),
+            7,
+            "every shed must surface to reject-aware drivers"
+        );
+        assert_eq!(Counters::get(&shards[0].slo_violations), 1);
+    }
+}
+
+/// Loom model of the continuous loop's tick-boundary pull. Run with
+/// `RUSTFLAGS="--cfg loom" cargo test --release --lib loom_`.
+#[cfg(all(test, loom))]
+mod loom_tests {
+    use crate::util::pool::Channel;
+
+    /// The tick-boundary pull racing the steal protocol: a producer
+    /// delivers single-request batches (ids), the worker try_recv-pulls
+    /// at two tick boundaries — admitting even ids, shedding odd ones —
+    /// while a thief `drain_tail`s the queue tail. Every request must
+    /// end up admitted XOR shed XOR stolen XOR still-queued: none lost,
+    /// none double-admitted.
+    #[test]
+    fn loom_tick_pull_vs_steal_partitions_requests_exactly_once() {
+        loom::model(|| {
+            let q: Channel<u64> = Channel::bounded(4);
+            let producer = {
+                let q = q.clone();
+                loom::thread::spawn(move || {
+                    for id in 0..3u64 {
+                        q.try_send(id).unwrap();
+                    }
+                })
+            };
+            let thief = {
+                let q = q.clone();
+                loom::thread::spawn(move || q.drain_tail(1))
+            };
+            // the worker's pull loop, two tick boundaries
+            let mut admitted = Vec::new();
+            let mut shed = Vec::new();
+            for _ in 0..2 {
+                while let Some(id) = q.try_recv() {
+                    if id % 2 == 1 {
+                        shed.push(id);
+                    } else {
+                        admitted.push(id);
+                    }
+                }
+            }
+            producer.join().unwrap();
+            let stolen = thief.join().unwrap();
+            // whatever is still queued belongs to a future tick — owned
+            // by the queue, not lost
+            let mut all = admitted;
+            all.extend(shed);
+            all.extend(stolen);
+            while let Some(id) = q.try_recv() {
+                all.push(id);
+            }
+            all.sort_unstable();
+            assert_eq!(all, vec![0, 1, 2], "request lost or double-admitted");
+        });
     }
 }

@@ -39,7 +39,10 @@
 //! | `stage_ticks` | staged engine, per iteration-level tick |
 //! | `stage_occupancy_sum` | staged engine, Σ in-flight per tick |
 //! | `mask_lane_fallbacks` | worker, inline mask after lane death fold |
-//! | `batch_rejects` | scheduler, request shed by inbox backpressure |
+//! | `batch_rejects` | scheduler, request shed by inbox backpressure; continuous worker, SLO shed |
+//! | `tick_admissions` | continuous worker, request pulled into the live set at a tick boundary |
+//! | `tick_sheds` | continuous worker, hopeless request shed by the burn-driven SLO controller |
+//! | `chunk_retunes` | chunk autotuner, applied prefill-chunk resize |
 //!
 //! Two process-global counters live outside `Counters`:
 //! [`gauge_underflows`] (a [`Gauge::sub`] went below zero and saturated)
@@ -148,8 +151,20 @@ pub struct Counters {
     /// lane's worker died (degraded, never poisoned)
     pub mask_lane_fallbacks: AtomicU64,
     /// requests shed at batcher admission by the queued-token
-    /// backpressure cap (`batch_inbox_tokens`)
+    /// backpressure cap (`batch_inbox_tokens`), plus — in continuous
+    /// mode — requests shed by the burn-driven SLO admission controller
+    /// (every `tick_sheds` bump also lands here so the replay tail-wait
+    /// accounting sees one unified shed chain)
     pub batch_rejects: AtomicU64,
+    /// requests pulled into a continuous worker's live set at a tick
+    /// boundary (zero outside continuous mode)
+    pub tick_admissions: AtomicU64,
+    /// requests the per-tick SLO admission controller declined because
+    /// burn ≥ 1 and the deadline math said they could no longer make
+    /// their SLO (subset of `batch_rejects`)
+    pub tick_sheds: AtomicU64,
+    /// prefill-chunk resizes applied by the chunk autotuner
+    pub chunk_retunes: AtomicU64,
 }
 
 // loom's atomics have no `const fn new` and no `Default`, so the
@@ -189,6 +204,9 @@ impl Default for Counters {
             stage_occupancy_sum: AtomicU64::new(0),
             mask_lane_fallbacks: AtomicU64::new(0),
             batch_rejects: AtomicU64::new(0),
+            tick_admissions: AtomicU64::new(0),
+            tick_sheds: AtomicU64::new(0),
+            chunk_retunes: AtomicU64::new(0),
         }
     }
 }
@@ -274,6 +292,9 @@ impl Counters {
             stage_occupancy_sum,
             mask_lane_fallbacks,
             batch_rejects,
+            tick_admissions,
+            tick_sheds,
+            chunk_retunes,
         );
         fold_max!(
             pool_ttl_expirations,

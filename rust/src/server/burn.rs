@@ -235,6 +235,81 @@ impl SnapshotRing {
     }
 }
 
+/// Completions a [`BurnController`] remembers. 256 retirements is a few
+/// ticks of a busy worker — long enough that one unlucky request does
+/// not read as a budget fire, short enough to react within a window.
+pub const BURN_WINDOW: usize = 256;
+
+/// Worker-local rolling SLO burn estimate over the last
+/// [`BURN_WINDOW`] completions, for the per-tick admission controller.
+///
+/// The [`SnapshotRing`] above measures burn for *operators* on the
+/// sampler thread's cadence (one snapshot per `stats_window_us`); a
+/// worker deciding whether to shed at a tick boundary cannot wait a
+/// whole stats window for the signal. This controller is the same
+/// `violations / completed / SLO_BUDGET_FRACTION` quotient, but fed
+/// one retirement at a time by the worker that owns it — no atomics,
+/// no locks, no clock.
+pub struct BurnController {
+    /// circular buffer of outcomes: `true` = retired past its deadline
+    window: [bool; BURN_WINDOW],
+    /// live entries (saturates at `BURN_WINDOW`)
+    len: usize,
+    /// next overwrite slot
+    next: usize,
+    /// violations among the live entries (maintained incrementally)
+    violations: usize,
+}
+
+impl Default for BurnController {
+    fn default() -> BurnController {
+        BurnController::new()
+    }
+}
+
+impl BurnController {
+    pub fn new() -> BurnController {
+        BurnController {
+            window: [false; BURN_WINDOW],
+            len: 0,
+            next: 0,
+            violations: 0,
+        }
+    }
+
+    /// Record one retired request's outcome.
+    pub fn record(&mut self, violated: bool) {
+        if self.len == BURN_WINDOW {
+            if self.window[self.next] {
+                self.violations -= 1;
+            }
+        } else {
+            self.len += 1;
+        }
+        self.window[self.next] = violated;
+        if violated {
+            self.violations += 1;
+        }
+        self.next = (self.next + 1) % BURN_WINDOW;
+    }
+
+    /// Completions currently in the window.
+    pub fn completed(&self) -> usize {
+        self.len
+    }
+
+    /// Burn over the window: violation fraction divided by the 1%
+    /// budget. 0 while the window is empty (no evidence is not a
+    /// fire), 1.0 = spending the budget exactly, > 1 = shedding
+    /// territory.
+    pub fn burn(&self) -> f64 {
+        if self.len == 0 {
+            return 0.0;
+        }
+        (self.violations as f64 / self.len as f64) / SLO_BUDGET_FRACTION
+    }
+}
+
 #[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
@@ -283,6 +358,63 @@ mod tests {
         assert_eq!(ring.ring.lock().unwrap().len(), RING_CAP);
         // the ring-wide horizon spans RING_CAP-1 windows, still burn 0
         assert_eq!(ring.ring_rates().unwrap().burn_rate, 0.0);
+    }
+
+    #[test]
+    fn seq_stays_monotone_and_windows_stay_fresh_across_ring_overwrite() {
+        // A WATCH client that disconnects and reconnects dedups on
+        // `seq`; once the ring wraps and starts overwriting, the seq
+        // must keep counting pushes (not ring slots) and `latest()`
+        // must always describe the newest two snapshots.
+        let ring = SnapshotRing::new(1_000);
+        let mut last_seq = 0u64;
+        let total = RING_CAP + 17;
+        for i in 0..total {
+            // monotone counters: i completions per push, every 4th a
+            // violation
+            ring.push(&stats(i as u64 * 10, i as u64 / 4, i as u64 * 100));
+            let seq = ring.seq();
+            assert!(seq > last_seq, "seq regressed: {last_seq} -> {seq}");
+            assert_eq!(seq, i as u64 + 1, "seq counts pushes, not slots");
+            last_seq = seq;
+        }
+        assert_eq!(ring.ring.lock().unwrap().len(), RING_CAP);
+        // latest() spans exactly the last two pushes: 10 completions,
+        // and carries the final seq so a reconnecting WATCH client
+        // resumes without replaying or skipping a window
+        let w = ring.latest().unwrap();
+        assert_eq!(w.seq, total as u64);
+        assert_eq!(w.completed, 10);
+        assert!(w.watch_line().starts_with(&format!("W seq={total} ")));
+        // ring_rates spans the retained horizon only: RING_CAP
+        // snapshots = RING_CAP-1 windows of 10 completions each
+        let rw = ring.ring_rates().unwrap();
+        assert_eq!(rw.completed, (RING_CAP as u64 - 1) * 10);
+    }
+
+    #[test]
+    fn burn_controller_rolls_off_old_violations() {
+        let mut bc = BurnController::new();
+        assert_eq!(bc.burn(), 0.0, "empty window is not a fire");
+        // 1 violation in 100 completions = exactly the 1% budget
+        bc.record(true);
+        for _ in 0..99 {
+            bc.record(false);
+        }
+        assert_eq!(bc.completed(), 100);
+        assert!((bc.burn() - 1.0).abs() < 1e-9, "burn={}", bc.burn());
+        // a violation burst pushes burn well past 1
+        for _ in 0..9 {
+            bc.record(true);
+        }
+        assert!(bc.burn() > 5.0, "burn={}", bc.burn());
+        // ...and rolls fully off after BURN_WINDOW clean completions,
+        // exercising wraparound of the circular buffer twice over
+        for _ in 0..(2 * BURN_WINDOW) {
+            bc.record(false);
+        }
+        assert_eq!(bc.completed(), BURN_WINDOW);
+        assert_eq!(bc.burn(), 0.0, "old violations must age out");
     }
 
     #[test]

@@ -104,8 +104,14 @@ pub struct ReplayReport {
     pub stage_occupancy_sum: u64,
     /// overlap-lane inline degradations (zero while lane workers live)
     pub mask_lane_fallbacks: u64,
-    /// requests shed by the batcher's queued-token cap
+    /// requests shed by the batcher's queued-token cap (plus
+    /// continuous-mode SLO sheds — one unified shed chain)
     pub batch_rejects: u64,
+    /// continuous batching activity (zero outside continuous mode):
+    /// tick-boundary admissions, burn-driven SLO sheds, chunk retunes
+    pub tick_admissions: u64,
+    pub tick_sheds: u64,
+    pub chunk_retunes: u64,
     /// session hit rate per replica (one element for a single engine)
     pub per_replica_hit_rates: Vec<f64>,
     /// phase spans drained from the tracer at the end of the replay
@@ -198,6 +204,12 @@ impl ReplayReport {
                 self.prefill_chunks,
                 self.stage_ticks,
                 self.mean_stage_occupancy()
+            ));
+        }
+        if self.tick_admissions + self.tick_sheds + self.chunk_retunes > 0 {
+            s.push_str(&format!(
+                " tick_admissions={} tick_sheds={} chunk_retunes={}",
+                self.tick_admissions, self.tick_sheds, self.chunk_retunes
             ));
         }
         // execution-volume segment (zero only when nothing decoded, e.g.
@@ -304,6 +316,9 @@ impl ReplayReport {
         self.stage_occupancy_sum = st.stage_occupancy_sum;
         self.mask_lane_fallbacks = st.mask_lane_fallbacks;
         self.batch_rejects = st.batch_rejects;
+        self.tick_admissions = st.tick_admissions;
+        self.tick_sheds = st.tick_sheds;
+        self.chunk_retunes = st.chunk_retunes;
         self.per_replica_hit_rates = st.per_replica_hit_rates.clone();
         self.trace_drops = st.trace_drops;
         self.gauge_underflows = st.gauge_underflows;
@@ -433,6 +448,9 @@ pub fn replay_trace<B: ServingBackend>(
         stage_occupancy_sum: 0,
         mask_lane_fallbacks: 0,
         batch_rejects: 0,
+        tick_admissions: 0,
+        tick_sheds: 0,
+        chunk_retunes: 0,
         per_replica_hit_rates: Vec::new(),
         spans: Vec::new(),
         phases: PhaseLatencies::default(),

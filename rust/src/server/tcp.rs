@@ -577,6 +577,67 @@ mod tests {
     }
 
     #[test]
+    fn watch_seq_stays_monotone_for_a_reconnecting_client() {
+        // a dashboard that disconnects and comes back after the bounded
+        // ring has overwritten everything it saw must observe strictly
+        // larger seq values — seq counts pushes, not ring slots, so
+        // overwrite never rewinds the stream's clock
+        let (addr, stop, h) = start_server_with(2_000);
+        let seq_of = |line: &str| -> u64 {
+            line.strip_prefix("W seq=")
+                .and_then(|rest| rest.split_whitespace().next())
+                .and_then(|v| v.parse().ok())
+                .unwrap_or_else(|| panic!("unparseable watch line {line:?}"))
+        };
+        let watch = |n: usize| -> Vec<u64> {
+            let mut s = TcpStream::connect(&addr).unwrap();
+            let mut r = BufReader::new(s.try_clone().unwrap());
+            writeln!(s, "WATCH {n}").unwrap();
+            let mut seqs = Vec::with_capacity(n);
+            let mut line = String::new();
+            for _ in 0..n {
+                line.clear();
+                r.read_line(&mut line).unwrap();
+                seqs.push(seq_of(line.trim()));
+            }
+            writeln!(s, "QUIT").unwrap();
+            seqs
+        };
+        let first = watch(2);
+        assert!(first.windows(2).all(|w| w[1] > w[0]), "got {first:?}");
+        // reconnect and stream until the seq horizon passes everything
+        // the ring held when the first client left — by then every slot
+        // that client saw has been overwritten, yet each line's seq must
+        // still climb (no sleep calibration: slow samplers just make
+        // this read longer, never wrong)
+        let target =
+            first[1] + crate::server::burn::RING_CAP as u64 + 8;
+        let mut s = TcpStream::connect(&addr).unwrap();
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        writeln!(s, "WATCH 10000").unwrap();
+        let mut line = String::new();
+        let mut prev = first[1];
+        loop {
+            line.clear();
+            r.read_line(&mut line).unwrap();
+            let seq = seq_of(line.trim());
+            assert!(
+                seq > prev,
+                "seq rewound across reconnect/overwrite: {prev} then {seq}"
+            );
+            prev = seq;
+            if seq >= target {
+                break;
+            }
+        }
+        drop(r);
+        drop(s); // mid-stream disconnect: the server ends the WATCH
+        // ordering: Relaxed — advisory shutdown flag.
+        stop.store(true, Ordering::Relaxed);
+        h.join().unwrap();
+    }
+
+    #[test]
     fn watch_requires_the_sampler() {
         let (addr, stop, h) = start_server_with(0);
         let mut s = TcpStream::connect(&addr).unwrap();

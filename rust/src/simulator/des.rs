@@ -52,6 +52,20 @@
 //!   the serving stream (the router `note_placed` analogue) and the
 //!   tokens their lookup reuses count as `steal_tokens_saved` — so
 //!   fig19's steal frontier can sweep the threshold at cluster RPS.
+//! * `continuous_batching` (xGR + chunking, routing-independent arm) —
+//!   tick-boundary admission on simulated time: dispatch stops gating
+//!   on the batcher's budget-full / wait-quota policy and admits
+//!   whatever is queued the moment a stream frees (the mix present at
+//!   the tick boundary IS the batch, exactly like the worker's
+//!   persistent loop), counting `tick_admissions`. With
+//!   `tick_slo_admission` on top, a clock-free
+//!   [`crate::server::burn::BurnController`] fed by completion
+//!   outcomes sheds front-of-queue requests whose estimated completion
+//!   (EWMA of recent batch service times) already overshoots the SLO —
+//!   but only while burn ≥ 1, so sheds stay bounded by the burn
+//!   controller (`tick_sheds`, also counted in `rejected`). The
+//!   affinity arm keeps batch-formation admission: its routing model
+//!   is calibrated against the scheduler's formed-batch policy.
 
 use super::calibrate::HostCosts;
 use super::kernels::{
@@ -165,6 +179,14 @@ pub struct DesResult {
     pub stage_ticks: u64,
     /// staged engine: Σ in-flight requests over those ticks
     pub stage_occupancy_sum: u64,
+    /// continuous batching: requests admitted at a tick boundary
+    /// instead of through batch formation (zero when
+    /// `continuous_batching` is off)
+    pub tick_admissions: u64,
+    /// continuous batching: hopeless requests shed by the burn-driven
+    /// admission controller (also counted in `rejected`; zero unless
+    /// `tick_slo_admission` is on and burn reached 1)
+    pub tick_sheds: u64,
     // ---- session prefix cache (zero when disabled) ----
     pub session_hits: u64,
     pub session_misses: u64,
@@ -686,6 +708,23 @@ pub fn simulate(trace: &Trace, cfg: &DesConfig) -> DesResult {
 
     let quota_s = cfg.serving.batch_wait_us as f64 / 1e6;
 
+    // continuous batching: tick-boundary admission on simulated time.
+    // Mirrors the worker gate exactly — xGR engine with chunked prefill
+    // (chunk-0 configs have no tick boundary to admit at). The burn
+    // controller is the worker's own clock-free window, fed here by
+    // simulated completion outcomes.
+    let continuous_on = cfg.serving.continuous_batching
+        && cfg.serving.prefill_chunk_tokens > 0
+        && matches!(cfg.engine, EngineKind::Xgr);
+    let shed_on = continuous_on && cfg.serving.tick_slo_admission;
+    let slo_s = cfg.serving.slo_ns() as f64 / 1e9;
+    let mut burn = crate::server::burn::BurnController::new();
+    // EWMA of recent batch service times — the shed estimator's stand-in
+    // for the worker's tick_ewma_ns
+    let mut service_ewma_s = 0.0f64;
+    let mut tick_admissions = 0u64;
+    let mut tick_sheds = 0u64;
+
     // span emission on simulated time (same schema + sampling as the
     // live tracer; `trace_sample = 0` keeps this completely inert)
     let trace_on = cfg.serving.trace_sample > 0.0;
@@ -938,8 +977,32 @@ pub fn simulate(trace: &Trace, cfg: &DesConfig) -> DesResult {
                 if sfree > $now {
                     break;
                 }
+                // burn-driven admission control: once the error budget is
+                // burning (burn ≥ 1), shed front-of-queue requests whose
+                // estimated completion already overshoots the SLO. FIFO
+                // means the front is the most hopeless — the first keeper
+                // proves every younger request is a keeper too.
+                if shed_on && slo_s > 0.0 && service_ewma_s > 0.0 && burn.burn() >= 1.0
+                {
+                    while let Some(&ri) = queue.front() {
+                        let waited =
+                            $now - trace.requests[ri].arrival_ns as f64 / 1e9;
+                        if waited + service_ewma_s > slo_s {
+                            queue.pop_front();
+                            rejected += 1;
+                            tick_sheds += 1;
+                        } else {
+                            break;
+                        }
+                    }
+                    if queue.is_empty() {
+                        break;
+                    }
+                }
                 // batch-forming policy: dispatch when token budget filled
-                // or oldest request exceeded the wait quota
+                // or oldest request exceeded the wait quota — unless
+                // continuous batching is on, where a free stream IS the
+                // tick boundary and whatever is queued ships now
                 let oldest_t =
                     trace.requests[*queue.front().unwrap()].arrival_ns as f64 / 1e9;
                 let mut tokens = 0usize;
@@ -956,7 +1019,7 @@ pub fn simulate(trace: &Trace, cfg: &DesConfig) -> DesResult {
                 }
                 let budget_full = count >= cfg.serving.max_batch_requests
                     || tokens as f64 >= 0.95 * cfg.serving.max_batch_tokens as f64;
-                let quota_hit = $now - oldest_t >= quota_s;
+                let quota_hit = continuous_on || $now - oldest_t >= quota_s;
                 if count == 0 || (!budget_full && !quota_hit) {
                     break;
                 }
@@ -990,6 +1053,9 @@ pub fn simulate(trace: &Trace, cfg: &DesConfig) -> DesResult {
                 let count = fit;
                 // form the batch
                 let req_idx: Vec<usize> = queue.drain(..count).collect();
+                if continuous_on {
+                    tick_admissions += req_idx.len() as u64;
+                }
                 let lens: Vec<usize> = req_idx
                     .iter()
                     .map(|&ri| trace.requests[ri].prompt_len.max(1))
@@ -1047,6 +1113,15 @@ pub fn simulate(trace: &Trace, cfg: &DesConfig) -> DesResult {
                 let done = start + timing.device_s;
                 device_busy += timing.device_s;
                 stream_free[si] = done;
+                if continuous_on {
+                    // shed estimator: EWMA of batch service time, the
+                    // sim analogue of the worker's tick_ewma_ns
+                    service_ewma_s = if service_ewma_s == 0.0 {
+                        timing.device_s
+                    } else {
+                        (3.0 * service_ewma_s + timing.device_s) / 4.0
+                    };
+                }
                 batches += 1;
                 prefill_chunks += timing.prefill_chunks;
                 stage_ticks += timing.stage_ticks;
@@ -1167,8 +1242,12 @@ pub fn simulate(trace: &Trace, cfg: &DesConfig) -> DesResult {
                     let arr = trace.requests[ri].arrival_ns as f64 / 1e9;
                     let lat_ns = ((now - arr) * 1e9) as u64;
                     latency.record(lat_ns);
-                    if lat_ns > cfg.serving.slo_ns() {
+                    let violated = lat_ns > cfg.serving.slo_ns();
+                    if violated {
                         slo_violations += 1;
+                    }
+                    if continuous_on {
+                        burn.record(violated);
                     }
                     completed += 1;
                     kv.free(h);
@@ -1238,6 +1317,8 @@ pub fn simulate(trace: &Trace, cfg: &DesConfig) -> DesResult {
         prefill_chunks,
         stage_ticks,
         stage_occupancy_sum,
+        tick_admissions,
+        tick_sheds,
         session_hits: session.iter().map(|s| s.stats.hits).sum(),
         session_misses: session.iter().map(|s| s.stats.misses).sum(),
         session_swap_ins: session.iter().map(|s| s.stats.swap_ins).sum(),
@@ -1749,6 +1830,100 @@ mod tests {
         vc.serving.prefill_chunk_tokens = 128;
         let v = simulate(&t, &vc);
         assert_eq!(v.stage_ticks, 0);
+    }
+
+    #[test]
+    fn continuous_admission_dispatches_at_tick_granularity() {
+        // sparse arrivals: batch mode holds every request for the wait
+        // quota (2 ms by default) before dispatching; continuous mode
+        // admits at the arrival tick, so the quota saving shows up as a
+        // strict mean-latency gap
+        let t = trace(200, 20.0);
+        let mut c_batch = cfg(EngineKind::Xgr, 128);
+        c_batch.serving.prefill_chunk_tokens = 128;
+        let batch = simulate(&t, &c_batch);
+        let mut c_cont = c_batch.clone();
+        c_cont.serving.continuous_batching = true;
+        let cont = simulate(&t, &c_cont);
+        assert_eq!(cont.completed, 200);
+        assert_eq!(cont.rejected, 0);
+        assert_eq!(cont.tick_admissions, 200, "every request tick-admitted");
+        assert_eq!(cont.tick_sheds, 0, "no sheds without tick_slo_admission");
+        assert_eq!(batch.tick_admissions, 0, "batch mode never tick-admits");
+        assert!(cont.stage_ticks > 0, "continuous mode still stages");
+        assert!(
+            cont.mean_ms() < batch.mean_ms(),
+            "continuous mean {} must beat batch mean {}",
+            cont.mean_ms(),
+            batch.mean_ms()
+        );
+        let again = simulate(&t, &c_cont);
+        assert_eq!(again.latency.p99(), cont.latency.p99(), "deterministic");
+        assert_eq!(again.tick_admissions, cont.tick_admissions);
+    }
+
+    #[test]
+    fn continuous_vs_batch_sweep_holds_tail_at_high_arrival_rates() {
+        // under load both modes form multi-request batches from backlog;
+        // continuous removes the residual quota stalls, so its tail must
+        // be no worse while completing the identical request set
+        let t = trace(400, 600.0);
+        let mut c_batch = cfg(EngineKind::Xgr, 128);
+        c_batch.serving.prefill_chunk_tokens = 128;
+        let batch = simulate(&t, &c_batch);
+        let mut c_cont = c_batch.clone();
+        c_cont.serving.continuous_batching = true;
+        let cont = simulate(&t, &c_cont);
+        assert_eq!(cont.completed, batch.completed);
+        assert_eq!(cont.rejected, 0);
+        assert_eq!(cont.tick_admissions, cont.completed);
+        assert_eq!(cont.tick_sheds, 0);
+        assert!(
+            cont.p99_ms() <= batch.p99_ms() * 1.05,
+            "continuous p99 {} vs batch p99 {}",
+            cont.p99_ms(),
+            batch.p99_ms()
+        );
+        assert!(
+            cont.mean_ms() <= batch.mean_ms() * 1.05,
+            "continuous mean {} vs batch mean {}",
+            cont.mean_ms(),
+            batch.mean_ms()
+        );
+    }
+
+    #[test]
+    fn burn_driven_sheds_bound_hopeless_tail_under_overload() {
+        // far past capacity: without admission control every request is
+        // served arbitrarily late; with tick_slo_admission the burn
+        // controller ignites and hopeless arrivals are shed instead,
+        // which must not lose requests and must not hurt the surviving
+        // tail
+        let t = trace(400, 5000.0);
+        let mut c_open = cfg(EngineKind::Xgr, 128);
+        c_open.serving.prefill_chunk_tokens = 128;
+        c_open.serving.continuous_batching = true;
+        let open = simulate(&t, &c_open);
+        let mut c_shed = c_open.clone();
+        c_shed.serving.tick_slo_admission = true;
+        let shed = simulate(&t, &c_shed);
+        assert_eq!(open.tick_sheds, 0, "no sheds without the controller");
+        assert!(shed.tick_sheds > 0, "overload must ignite the burn controller");
+        assert_eq!(shed.rejected, shed.tick_sheds, "all rejects are sheds here");
+        assert_eq!(
+            shed.completed + shed.rejected,
+            400,
+            "no request lost or double-counted"
+        );
+        assert!(
+            shed.p99_ms() <= open.p99_ms(),
+            "shed p99 {} vs open p99 {}",
+            shed.p99_ms(),
+            open.p99_ms()
+        );
+        let again = simulate(&t, &c_shed);
+        assert_eq!(again.tick_sheds, shed.tick_sheds, "deterministic sheds");
+        assert_eq!(again.latency.p99(), shed.latency.p99());
     }
 
     #[test]

@@ -138,6 +138,114 @@ fn staged_is_byte_identical_to_sequential_property() {
     });
 }
 
+#[test]
+fn mid_flight_arrivals_are_byte_identical_to_sequential_property() {
+    // the continuous loop's free variable on top of run_batch's: WHEN a
+    // request joins the live set. A random arrival schedule admits
+    // requests at random tick boundaries into a set that is already
+    // mid-prefill / mid-decode — results must still match the
+    // request-at-a-time loop byte for byte, whatever the interleaving.
+    let catalog = Catalog::generate(64, 600, 5);
+    let trie = Arc::new(ItemTrie::build(&catalog));
+    prop::check("mid-flight arrivals == sequential", 24, |rng: &mut Pcg| {
+        let selector = if rng.below(2) == 0 {
+            SelectorKind::XBeam
+        } else {
+            SelectorKind::Naive
+        };
+        let use_cache = rng.below(2) == 0;
+        let session = |on: bool| {
+            on.then(|| xgr::sessioncache::SessionCacheConfig {
+                hbm_bytes: 256 << 10,
+                dram_bytes: 512 << 10,
+            })
+        };
+        let mut seq = Engine::new(
+            Box::new(MockExecutor::new(spec())),
+            trie.clone(),
+            EngineConfig {
+                selector,
+                session_cache: session(use_cache),
+                ..Default::default()
+            },
+        );
+        let mut stg = Engine::new(
+            Box::new(MockExecutor::new(spec())),
+            trie.clone(),
+            EngineConfig {
+                selector,
+                session_cache: session(use_cache),
+                ..Default::default()
+            },
+        );
+        let n = 4 + rng.below(8) as usize;
+        let users = 1 + rng.below(4);
+        let reqs: Vec<RecRequest> = (0..n)
+            .map(|i| {
+                let len = 1 + rng.below(90) as usize;
+                RecRequest {
+                    id: i as u64,
+                    tokens: (0..len).map(|_| rng.below(60) as u32).collect(),
+                    arrival_ns: now_ns(),
+                    user_id: rng.below(users),
+                }
+            })
+            .collect();
+        let mut want: HashMap<u64, Vec<([u32; 3], f32)>> = HashMap::new();
+        for r in &reqs {
+            let out = seq
+                .run_request(r)
+                .map_err(|e| format!("sequential failed: {e:#}"))?;
+            want.insert(r.id, out.items);
+        }
+        // randomized arrival schedule: request i joins at tick arrive[i]
+        // (sorted — FIFO admission order, random gaps between joins)
+        let mut arrive: Vec<u64> = (0..n).map(|_| rng.below(12)).collect();
+        arrive.sort_unstable();
+        let chunk = 1 + rng.below(33) as usize;
+        let counters = Counters::new();
+        let mut live = Vec::new();
+        let mut next = 0usize;
+        let mut got = 0usize;
+        let mut tick = 0u64;
+        while got < n {
+            while next < n && arrive[next] <= tick {
+                match stg.begin_request(&reqs[next], true) {
+                    Ok(r) => live.push(r),
+                    Err(e) => return Err(format!("admission failed: {e:#}")),
+                }
+                next += 1;
+            }
+            if live.is_empty() {
+                // schedule gap with nothing in flight: jump to next join
+                tick += 1;
+                continue;
+            }
+            for (id, res) in
+                staged::run_tick(&mut stg, &mut live, 0, chunk, &counters).retired
+            {
+                let items = res
+                    .map_err(|e| format!("staged request {id} failed: {e:#}"))?
+                    .items;
+                prop_assert!(
+                    want[&id] == items,
+                    "request {id} diverged under mid-flight admission \
+                     (selector {selector:?}, chunk {chunk}, cache {use_cache})"
+                );
+                got += 1;
+            }
+            tick += 1;
+        }
+        prop_assert_eq!(got, n);
+        prop_assert!(live.is_empty(), "nothing may linger past retirement");
+        prop_assert!(
+            Counters::get(&counters.stage_ticks) > 0,
+            "staged mode must tick"
+        );
+        Ok(())
+    });
+}
+
 fn run_coordinator(chunk: usize) -> (HashMap<u64, Vec<[u32; 3]>>, xgr::coordinator::BackendStats) {
     let spec = spec();
     let catalog = Catalog::generate(64, 600, 5);
