@@ -9,8 +9,8 @@
 //! critical-path shares (from the attribution module, on simulated
 //! time), and counter totals.
 //!
-//!     cargo run --release --example bench_snapshot -- --out BENCH_9.json
-//!     cargo run --release --example bench_snapshot -- --compare BENCH_9.json
+//!     cargo run --release --example bench_snapshot -- --out BENCH_10.json
+//!     cargo run --release --example bench_snapshot -- --compare BENCH_10.json
 //!
 //! `--compare <baseline>` exits nonzero when any gated metric regresses
 //! past `--tolerance-pct` (default 5): throughput down, or p50/p99 up.
@@ -57,6 +57,9 @@ fn sweep_json(r: &DesResult) -> Json {
                 ("kv_block_copies", Json::num(r.kv_block_copies as f64)),
                 ("tick_admissions", Json::num(r.tick_admissions as f64)),
                 ("tick_sheds", Json::num(r.tick_sheds as f64)),
+                ("spec_drafts", Json::num(r.spec_drafts as f64)),
+                ("spec_accepts", Json::num(r.spec_accepts as f64)),
+                ("spec_steps_saved", Json::num(r.spec_steps_saved as f64)),
             ]),
         ),
     ])
@@ -220,6 +223,26 @@ fn main() -> xgr::Result<()> {
             s.prefill_chunk_tokens = 256;
             s.continuous_batching = true;
             s.tick_slo_admission = true;
+        }),
+    );
+    // fig13c shape: trie-constrained speculation over the continuous
+    // config — the acceptance model must keep counters and the latency
+    // tradeoff stable across the default and a wide draft budget
+    run(
+        "fig13 onerec-0.1b continuous256 spec rps400",
+        run_sweep(&ascend, &onerec, EngineKind::Xgr, 400.0, n, 0.0, |s| {
+            s.prefill_chunk_tokens = 256;
+            s.continuous_batching = true;
+            s.spec_decode = true;
+        }),
+    );
+    run(
+        "fig13 onerec-0.1b continuous256 spec draft256 rps400",
+        run_sweep(&ascend, &onerec, EngineKind::Xgr, 400.0, n, 0.0, |s| {
+            s.prefill_chunk_tokens = 256;
+            s.continuous_batching = true;
+            s.spec_decode = true;
+            s.spec_draft_len = 256;
         }),
     );
     // fig19 shape: portability (H800) + a pooled two-replica cluster

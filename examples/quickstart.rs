@@ -104,6 +104,23 @@ fn main() -> xgr::Result<()> {
     //     for its next step regardless of prompt mix.
     serving.chunk_autotune = true;
     serving.tick_budget_us = 2_000;
+    // Trie-constrained speculative decoding: semantic-ID suffixes are
+    // only a few levels deep and the item trie prunes most of the vocab
+    // at every level, so the engine drafts the remaining levels from
+    // per-level token popularity (built once at catalog load, immutable
+    // like the trie itself) and verifies the whole tree of drafted
+    // continuations in ONE widened forward (`decode_multi`). Accepted
+    // levels advance the beam several steps per probe; a level whose
+    // survivors weren't all drafted falls back to the sequential step,
+    // so recommendations are BYTE-IDENTICAL to spec-off — the draft only
+    // decides how many forwards it takes to compute them.
+    // `spec_draft_len` caps drafted tokens per level (budget ≥ vocab ⇒
+    // every probe accepts in full); executors that cannot verify tree
+    // drafts exactly (the PJRT path today) degrade to sequential decode.
+    // Watch `spec_drafts` / `spec_accepts` / `spec_steps_saved` in
+    // `backend_stats`; `XGR_SPEC_DECODE=1` force-enables without a
+    // rebuild.
+    serving.spec_decode = true;
     // Admission stays bounded end to end: `batch_inbox_tokens` caps the
     // queued-token backlog per batcher (0 = unlimited); overflow is
     // shed at admission and counted in `batch_rejects`.
@@ -167,6 +184,11 @@ fn main() -> xgr::Result<()> {
         println!(
             "continuous loop: {} tick admissions, {} sheds, {} chunk retunes",
             stats.tick_admissions, stats.tick_sheds, stats.chunk_retunes
+        );
+        println!(
+            "speculation: {} tree probes accepted {} future levels \
+             ({} sequential forwards saved)",
+            stats.spec_drafts, stats.spec_accepts, stats.spec_steps_saved
         );
     }
 

@@ -69,6 +69,55 @@ pub fn rps_sweep(
     best
 }
 
+/// Speculation frontier: sweep the trie-draft budget at a fixed load
+/// and emit latency, throughput, and acceptance per point. Budget 0
+/// means speculation off — the sequential reference the other rows
+/// trade probe width against. Only xGR runs here: the baselines have
+/// no device-resident tree verify, so the knob is inert for them.
+pub fn spec_frontier(
+    title: &str,
+    hw: &HardwareProfile,
+    model: &ModelSpec,
+    dataset: &str,
+    bw: usize,
+    rps: usize,
+    n: usize,
+    budgets: &[usize],
+) {
+    let mut table = Table::new(title.to_string());
+    let trace = make_trace(dataset, model.seq, n, rps as f64, 42);
+    for &d in budgets {
+        let mut serving = ServingConfig::default();
+        serving.beam_width = bw;
+        serving.top_k = bw;
+        serving.spec_decode = d > 0;
+        if d > 0 {
+            serving.spec_draft_len = d;
+        }
+        let cfg = DesConfig {
+            hw: hw.clone(),
+            model: model.clone(),
+            serving,
+            engine: EngineKind::Xgr,
+            host: calibrate::analytic(bw, bw, model.vocab),
+        };
+        let r = simulate(&trace, &cfg);
+        let label = if d == 0 {
+            "spec-off".to_string()
+        } else {
+            format!("draft{d}")
+        };
+        table.push(
+            Row::new(label)
+                .col("mean_ms", r.mean_ms())
+                .col("p99_ms", r.p99_ms())
+                .col("thru_rps", r.throughput_rps())
+                .col("steps_saved", r.spec_steps_saved as f64),
+        );
+    }
+    table.emit();
+}
+
 /// Print the headline throughput ratio of xGR vs the best baseline.
 pub fn headline(best: &[(EngineKind, f64)]) {
     let xgr = best

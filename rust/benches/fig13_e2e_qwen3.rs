@@ -9,7 +9,7 @@
 #[path = "des_common/mod.rs"]
 mod des_common;
 
-use des_common::{headline, rps_sweep};
+use des_common::{headline, rps_sweep, spec_frontier};
 use xgr::config::{HardwareProfile, ModelSpec};
 use xgr::simulator::EngineKind;
 
@@ -51,4 +51,16 @@ fn main() {
         );
         headline(&best);
     }
+    // speculation frontier: trie-draft budget vs latency/acceptance at
+    // a mid-load operating point (budget 0 = sequential reference)
+    spec_frontier(
+        "fig13: qwen3-0.6b / amazon / BW=128 speculation frontier @rps100",
+        &hw,
+        &ModelSpec::qwen3_0_6b(),
+        "amazon",
+        128,
+        100,
+        n,
+        &[0, 4, 16, 64, 256],
+    );
 }

@@ -6,7 +6,7 @@
 #[path = "des_common/mod.rs"]
 mod des_common;
 
-use des_common::{headline, rps_sweep};
+use des_common::{headline, rps_sweep, spec_frontier};
 use xgr::config::{HardwareProfile, ModelSpec};
 use xgr::simulator::EngineKind;
 
@@ -46,5 +46,22 @@ fn main() {
             200.0,
         );
         headline(&best);
+    }
+    // speculation frontier on both datasets: semantic-ID decode is only
+    // 3 levels deep, so the whole remaining suffix fits in one probe
+    for dataset in ["amazon", "jd"] {
+        spec_frontier(
+            &format!(
+                "fig14: onerec-0.1b / {dataset} / BW=128 speculation \
+                 frontier @rps200"
+            ),
+            &hw,
+            &ModelSpec::onerec_0_1b(),
+            dataset,
+            128,
+            200,
+            n,
+            &[0, 4, 16, 64, 256],
+        );
     }
 }

@@ -23,6 +23,8 @@ pub fn vllm_like_engine_config() -> EngineConfig {
         session_cache: None, // no cross-request prefix reuse
         session_pool: None,
         overlap_lane: false, // vLLM-like: host masks inline, no lane
+        spec_decode: false,  // no trie-constrained speculation tier
+        spec_draft_len: 0,
     }
 }
 

@@ -16,6 +16,8 @@ pub fn xllm_like_engine_config() -> EngineConfig {
         session_cache: None, // no cross-request prefix reuse
         session_pool: None,
         overlap_lane: false, // xLLM-like has no mask/forward overlap
+        spec_decode: false,  // no trie-constrained speculation tier
+        spec_draft_len: 0,
     }
 }
 

@@ -131,6 +131,24 @@ pub struct ServingConfig {
     /// target per-tick device time for the chunk autotuner, in
     /// microseconds. Only consulted when `chunk_autotune` is on.
     pub tick_budget_us: u64,
+    /// trie-constrained speculative decoding (NEZHA-style draft/verify):
+    /// the engine drafts the remaining semantic-ID suffix per beam from
+    /// item-popularity statistics over the valid-path trie and verifies
+    /// every position in one batched forward, advancing multiple decode
+    /// steps per iteration when the draft covers the true selection.
+    /// Zero-sacrifice: results are byte-identical on or off (rejected
+    /// drafts fall back to the sequential step), and the engine only
+    /// speculates on executors that guarantee exact tree verification
+    /// (`ModelExecutor::supports_tree_spec`) with valid-path filtering
+    /// on. The `XGR_SPEC_DECODE` environment variable force-enables it
+    /// at `Coordinator::start`. Telemetry: `spec_drafts` /
+    /// `spec_accepts` / `spec_steps_saved`.
+    pub spec_decode: bool,
+    /// speculative draft budget: how many of the most item-dense tokens
+    /// the proposer drafts per future decode level. Wider drafts raise
+    /// the acceptance rate at the cost of a bigger verify grid. Only
+    /// consulted when `spec_decode` is on.
+    pub spec_draft_len: usize,
     /// batcher admission backpressure: max queued prompt tokens per
     /// batcher before new requests are shed (counted in
     /// `batch_rejects`). 0 = unlimited (the legacy unbounded inbox).
@@ -185,6 +203,8 @@ impl Default for ServingConfig {
             tick_slo_admission: false,
             chunk_autotune: false,
             tick_budget_us: 2_000,
+            spec_decode: false,
+            spec_draft_len: 64,
             batch_inbox_tokens: 0,
             trace_sample: 0.0,
             stats_window_us: 1_000_000,
@@ -225,6 +245,8 @@ impl ServingConfig {
                 "tick_slo_admission" => c.tick_slo_admission = v.as_bool().ok_or_else(|| anyhow!("tick_slo_admission"))?,
                 "chunk_autotune" => c.chunk_autotune = v.as_bool().ok_or_else(|| anyhow!("chunk_autotune"))?,
                 "tick_budget_us" => c.tick_budget_us = v.as_f64().ok_or_else(|| anyhow!("tick_budget_us"))? as u64,
+                "spec_decode" => c.spec_decode = v.as_bool().ok_or_else(|| anyhow!("spec_decode"))?,
+                "spec_draft_len" => c.spec_draft_len = v.as_usize().ok_or_else(|| anyhow!("spec_draft_len"))?,
                 "batch_inbox_tokens" => c.batch_inbox_tokens = v.as_usize().ok_or_else(|| anyhow!("batch_inbox_tokens"))?,
                 "trace_sample" => c.trace_sample = v.as_f64().ok_or_else(|| anyhow!("trace_sample"))?,
                 "stats_window_us" => c.stats_window_us = v.as_f64().ok_or_else(|| anyhow!("stats_window_us"))? as u64,
@@ -268,6 +290,8 @@ impl ServingConfig {
             ("tick_slo_admission", Json::Bool(self.tick_slo_admission)),
             ("chunk_autotune", Json::Bool(self.chunk_autotune)),
             ("tick_budget_us", Json::num(self.tick_budget_us as f64)),
+            ("spec_decode", Json::Bool(self.spec_decode)),
+            ("spec_draft_len", Json::num(self.spec_draft_len as f64)),
             ("batch_inbox_tokens", Json::num(self.batch_inbox_tokens as f64)),
             ("trace_sample", Json::num(self.trace_sample)),
             ("stats_window_us", Json::num(self.stats_window_us as f64)),
@@ -321,6 +345,9 @@ impl ServingConfig {
             a.bool_or("tick-slo-admission", self.tick_slo_admission);
         self.chunk_autotune = a.bool_or("chunk-autotune", self.chunk_autotune);
         self.tick_budget_us = a.u64_or("tick-budget-us", self.tick_budget_us);
+        self.spec_decode = a.bool_or("spec-decode", self.spec_decode);
+        self.spec_draft_len =
+            a.usize_or("spec-draft-len", self.spec_draft_len);
         self.batch_inbox_tokens =
             a.usize_or("batch-inbox-tokens", self.batch_inbox_tokens);
         self.trace_sample = a.f64_or("trace-sample", self.trace_sample);
@@ -393,6 +420,12 @@ impl ServingConfig {
             return Err(anyhow!(
                 "tick_budget_us must be in 10us..=10s (the chunk autotuner's \
                  per-tick device-time target)"
+            ));
+        }
+        if self.spec_draft_len == 0 || self.spec_draft_len > 1 << 16 {
+            return Err(anyhow!(
+                "spec_draft_len must be in 1..=65536 (the per-level draft \
+                 budget; turn speculation off via spec_decode instead)"
             ));
         }
         if !(0.0..=1.0).contains(&self.trace_sample) {
@@ -648,6 +681,28 @@ mod tests {
     }
 
     #[test]
+    fn spec_knobs_parse_and_validate() {
+        let j = Json::parse(
+            r#"{"spec_decode": true, "spec_draft_len": 16}"#,
+        )
+        .unwrap();
+        let c = ServingConfig::from_json(&j).unwrap();
+        assert!(c.spec_decode);
+        assert_eq!(c.spec_draft_len, 16);
+        // defaults: speculation off, a usable draft budget, valid
+        let d = ServingConfig::default();
+        assert!(!d.spec_decode);
+        assert_eq!(d.spec_draft_len, 64);
+        d.validate().unwrap();
+        // a zero or absurd draft budget fails loudly even with
+        // speculation off — the knob must always hold a usable value
+        let j = Json::parse(r#"{"spec_draft_len": 0}"#).unwrap();
+        assert!(ServingConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"spec_draft_len": 100000}"#).unwrap();
+        assert!(ServingConfig::from_json(&j).is_err());
+    }
+
+    #[test]
     fn trace_sample_knob_parses_and_validates() {
         let j = Json::parse(r#"{"trace_sample": 0.25}"#).unwrap();
         let c = ServingConfig::from_json(&j).unwrap();
@@ -719,6 +774,8 @@ mod tests {
         c.tick_slo_admission = true;
         c.chunk_autotune = true;
         c.tick_budget_us = 5_000;
+        c.spec_decode = true;
+        c.spec_draft_len = 32;
         c.batch_inbox_tokens = 16 * 1024;
         c.trace_sample = 0.5;
         c.stats_window_us = 250_000;
@@ -751,6 +808,7 @@ mod tests {
             "--steal-max-batches", "3", "--prefill-chunk", "32",
             "--continuous-batching", "--tick-slo-admission",
             "--chunk-autotune", "--tick-budget-us", "4000",
+            "--spec-decode", "--spec-draft-len", "32",
             "--batch-inbox-tokens", "8192", "--trace-sample", "0.1",
             "--stats-window-us", "500000",
             "--valid-filter", "false", "--graph-dispatch", "false",
@@ -784,6 +842,8 @@ mod tests {
         assert!(c.tick_slo_admission);
         assert!(c.chunk_autotune);
         assert_eq!(c.tick_budget_us, 4_000);
+        assert!(c.spec_decode);
+        assert_eq!(c.spec_draft_len, 32);
         assert_eq!(c.batch_inbox_tokens, 8192);
         assert_eq!(c.trace_sample, 0.1);
         assert_eq!(c.stats_window_us, 500_000);

@@ -27,7 +27,7 @@ use super::overlap::MaskLane;
 use super::{RecRequest, RecResponse};
 use crate::beam::pool::{BeamState, StatePool};
 use crate::beam::{BeamSelector, NaiveBeam, Selection, XBeam};
-use crate::itemspace::{ItemTrie, MaskWorkspace};
+use crate::itemspace::{DraftProposer, ItemTrie, MaskWorkspace};
 use crate::kvcache::{KvManager, ReqHandle, SeparatedKv};
 use crate::metrics::trace::{self, SpanPhase};
 use crate::metrics::Counters;
@@ -67,6 +67,18 @@ pub struct EngineConfig {
     /// materializes mask rows, so this is a no-op for the full-xGR
     /// engine.
     pub overlap_lane: bool,
+    /// trie-constrained speculative decoding (ROADMAP item 4 / NEZHA):
+    /// draft the remaining semantic-ID suffix from item-popularity
+    /// statistics and verify every position in one batched
+    /// `decode_multi` probe. Zero-sacrifice: only engaged on executors
+    /// whose [`ModelExecutor::supports_tree_spec`] guarantees
+    /// byte-identical grid scoring, and rejected drafts fall back to
+    /// the sequential step — results are byte-identical on or off.
+    pub spec_decode: bool,
+    /// per-level draft budget: how many of the most item-dense tokens
+    /// the proposer covers at each future position (wider = higher
+    /// acceptance, bigger verify grid)
+    pub spec_draft_len: usize,
 }
 
 impl Default for EngineConfig {
@@ -80,6 +92,8 @@ impl Default for EngineConfig {
             session_cache: None,
             session_pool: None,
             overlap_lane: false,
+            spec_decode: false,
+            spec_draft_len: 64,
         }
     }
 }
@@ -157,6 +171,10 @@ pub struct Engine {
     session: Option<SessionCache>,
     /// keyed host/device overlap lane (mask gen ∥ forward), when enabled
     lane: Option<MaskLane>,
+    /// speculative-decode draft proposer — built once per engine when
+    /// every static gate holds (`spec_decode` on, filtering on, executor
+    /// guarantees tree-spec byte-identity); `None` disables speculation
+    draft: Option<Arc<DraftProposer>>,
     sel: Selection,
     prefix_scratch: Vec<Vec<u32>>,
     temp_u32: Vec<u32>,
@@ -192,8 +210,21 @@ impl Engine {
         } else {
             None
         };
+        // speculation needs the valid-path constraint (drafts are trie
+        // token sets) and an executor whose tree probe is exact; the
+        // proposer shares the trie's immutability contract, so one build
+        // at engine construction serves the engine's whole lifetime
+        let draft = if cfg.spec_decode
+            && cfg.valid_filter
+            && exec.supports_tree_spec()
+        {
+            Some(Arc::new(DraftProposer::build(&trie)))
+        } else {
+            None
+        };
         Engine {
             lane,
+            draft,
             masks: MaskWorkspace::new(&trie, bw),
             xbeam: XBeam::new(bw, k, spec.vocab),
             naive: NaiveBeam::new(),
@@ -494,25 +525,36 @@ impl Engine {
         }
     }
 
-    /// Run one decode iteration of a [`Phase::Decoding`] request: KV
-    /// reorder + forward, masking, selection, beam-state update. The
-    /// last step (or a fully-masked selection) flips it to
-    /// [`Phase::Done`].
-    pub fn advance_decode(&mut self, r: &mut InflightReq) -> Result<()> {
+    /// Advance a [`Phase::Decoding`] request: one decode iteration (KV
+    /// reorder + forward, masking, selection, beam-state update), or —
+    /// when speculation is armed — as many iterations as one drafted
+    /// verify probe covers. Returns the number of decode steps
+    /// advanced (0 for a request not decoding; ≥ 2 only on an accepted
+    /// speculation run). The last step (or a fully-masked selection)
+    /// flips the request to [`Phase::Done`].
+    pub fn advance_decode(&mut self, r: &mut InflightReq) -> Result<usize> {
         let Phase::Decoding { step } = r.phase else {
-            return Ok(());
+            return Ok(0);
         };
-        let (bw, nd, v) = {
+        let nd = self.exec.spec().num_decode;
+        // speculate only when ≥ 2 steps remain: a draft that covers no
+        // *future* position is just a slower sequential step
+        if self.draft.is_some() && nd - step >= 2 {
+            self.advance_decode_spec(r, step)
+        } else {
+            self.decode_one(r, step).map(|()| 1)
+        }
+    }
+
+    /// One sequential decode iteration of step `step` (the pre-
+    /// speculation `advance_decode` body).
+    fn decode_one(&mut self, r: &mut InflightReq, step: usize) -> Result<()> {
+        let (bw, v) = {
             let s = self.exec.spec();
-            (s.beam_width, s.num_decode, s.vocab)
+            (s.beam_width, s.vocab)
         };
-        let k = if self.cfg.top_k == 0 { bw } else { self.cfg.top_k };
         let traced = r.traced;
         let t_fwd = if traced { now_ns() } else { 0 };
-        // device-resident filtering (the xGR path): selection walks the
-        // trie-valid token lists directly — no per-beam mask rows are
-        // materialized at all. The naive/baseline path filters the host
-        // way: dense/sparse mask rows added onto logits.
         let device_filter =
             self.cfg.valid_filter && self.cfg.selector == SelectorKind::XBeam;
         // per-beam prefixes of this step (host masks AND device lists).
@@ -556,11 +598,76 @@ impl Engine {
         let t_fwd_end = if traced { now_ns() } else { 0 };
         let mut t_mask_end = t_fwd_end;
 
-        // ---- masking + selection ----
         self.logits_scratch.clear();
         if step == 0 {
             // all beams share the BOS state: expand from row 0
             self.logits_scratch.extend_from_slice(&logits[..v]);
+        } else {
+            self.logits_scratch.extend_from_slice(&logits);
+        }
+        self.mask_select_apply(r, step, use_lane, &mut t_mask_end);
+        if traced {
+            let t_end = now_ns();
+            let tr = trace::tracer();
+            tr.record(
+                r.id,
+                SpanPhase::Decode,
+                t_fwd,
+                t_fwd_end.saturating_sub(t_fwd),
+                [bw as u64, step as u64, 0],
+            );
+            tr.record(
+                r.id,
+                SpanPhase::Mask,
+                t_fwd_end,
+                t_mask_end.saturating_sub(t_fwd_end),
+                [bw as u64, step as u64, 0],
+            );
+            tr.record(
+                r.id,
+                SpanPhase::Sort,
+                t_mask_end,
+                t_end.saturating_sub(t_mask_end),
+                [self.sel.len() as u64, step as u64, 0],
+            );
+        }
+        Ok(())
+    }
+
+    /// Masking + selection + beam-state update of decode step `step`,
+    /// over the logits rows already staged in `self.logits_scratch`
+    /// (`[vocab]` at step 0, `[bw·vocab]` after). Shared verbatim
+    /// between [`decode_one`](Self::decode_one) and the speculative
+    /// verify loop so the two paths *cannot* produce different
+    /// selections from the same logits. Sets the request's next phase;
+    /// returns whether the beam advanced (`false` = fully masked, the
+    /// request is [`Phase::Done`] with an empty frontier).
+    fn mask_select_apply(
+        &mut self,
+        r: &mut InflightReq,
+        step: usize,
+        use_lane: bool,
+        t_mask_end: &mut u64,
+    ) -> bool {
+        let (bw, nd, v) = {
+            let s = self.exec.spec();
+            (s.beam_width, s.num_decode, s.vocab)
+        };
+        let k = if self.cfg.top_k == 0 { bw } else { self.cfg.top_k };
+        let traced = r.traced;
+        // device-resident filtering (the xGR path): selection walks the
+        // trie-valid token lists directly — no per-beam mask rows are
+        // materialized at all. The naive/baseline path filters the host
+        // way: dense/sparse mask rows added onto logits.
+        let device_filter =
+            self.cfg.valid_filter && self.cfg.selector == SelectorKind::XBeam;
+        if self.cfg.valid_filter && step > 0 {
+            for b in 0..bw {
+                self.prefix_scratch[b].clear();
+                self.prefix_scratch[b].extend_from_slice(r.state.prefix(b));
+            }
+        }
+        if step == 0 {
             let scores = [0.0f32];
             if device_filter {
                 let lists = [self.trie.valid_roots()];
@@ -573,12 +680,11 @@ impl Engine {
                     self.masks.apply_root(&mut self.logits_scratch);
                 }
                 if traced {
-                    t_mask_end = now_ns();
+                    *t_mask_end = now_ns();
                 }
                 self.select(&scores, v, k, bw);
             }
         } else {
-            self.logits_scratch.extend_from_slice(&logits);
             let scores = r.state.scores.clone();
             if device_filter {
                 let lists: Vec<&[u32]> = (0..bw)
@@ -610,46 +716,16 @@ impl Engine {
                     }
                 }
                 if traced {
-                    t_mask_end = now_ns();
+                    *t_mask_end = now_ns();
                 }
                 self.select(&scores, v, k, bw);
             }
         }
-        macro_rules! record_step_spans {
-            () => {
-                if traced {
-                    let t_end = now_ns();
-                    let tr = trace::tracer();
-                    tr.record(
-                        r.id,
-                        SpanPhase::Decode,
-                        t_fwd,
-                        t_fwd_end.saturating_sub(t_fwd),
-                        [bw as u64, step as u64, 0],
-                    );
-                    tr.record(
-                        r.id,
-                        SpanPhase::Mask,
-                        t_fwd_end,
-                        t_mask_end.saturating_sub(t_fwd_end),
-                        [bw as u64, step as u64, 0],
-                    );
-                    tr.record(
-                        r.id,
-                        SpanPhase::Sort,
-                        t_mask_end,
-                        t_end.saturating_sub(t_mask_end),
-                        [self.sel.len() as u64, step as u64, 0],
-                    );
-                }
-            };
-        }
         if self.sel.is_empty() {
             // fully masked — no valid continuation (can only happen with
             // filtering off catalogs; fail soft with an empty item list)
-            record_step_spans!();
             r.phase = Phase::Done;
-            return Ok(());
+            return false;
         }
         // pad selection up to BW by repeating the best candidate
         // (keeps executor shapes static, mirrors real engines)
@@ -666,13 +742,183 @@ impl Engine {
             &mut self.temp_u32,
         );
         r.beam_tokens.copy_from_slice(&self.sel.tokens);
-        record_step_spans!();
         r.phase = if step + 1 == nd {
             Phase::Done
         } else {
             Phase::Decoding { step: step + 1 }
         };
-        Ok(())
+        true
+    }
+
+    /// The speculative decode path (NEZHA's draft → verify split): one
+    /// [`ModelExecutor::decode_multi`] probe scores the remaining
+    /// suffix — position 0 carries the exact current beam chain, every
+    /// future position a *cross-product grid* of all beam rows × the
+    /// proposer's draft token set for that level — then the verify loop
+    /// replays the sequential selection per position from the probed
+    /// logits. A position is accepted when every token the (exact)
+    /// selection picked is inside the draft set, i.e. its true logits
+    /// row was already probed; the first uncovered position stops the
+    /// run and the request resumes sequentially from there. Because the
+    /// selection code is shared (`mask_select_apply`) and accepted rows
+    /// are probed, not approximated, results are byte-identical to the
+    /// sequential path regardless of acceptance.
+    fn advance_decode_spec(
+        &mut self,
+        r: &mut InflightReq,
+        step: usize,
+    ) -> Result<usize> {
+        let (bw, nd, v) = {
+            let s = self.exec.spec();
+            (s.beam_width, s.num_decode, s.vocab)
+        };
+        let draft =
+            self.draft.clone().expect("spec path gated on a built proposer");
+        let budget = self.cfg.spec_draft_len.max(1);
+        let np = nd - step;
+        let traced = r.traced;
+
+        // ---- draft: assemble the verify grid ----
+        let mut toks: Vec<Vec<u32>> = Vec::with_capacity(np);
+        let mut pars: Vec<Vec<usize>> = Vec::with_capacity(np);
+        // position 0 is this step's known chain (step 0 reads only
+        // logits row 0 — all beams share the BOS state)
+        if step == 0 {
+            toks.push(vec![r.beam_tokens[0]]);
+            pars.push(vec![0]);
+        } else {
+            toks.push(r.beam_tokens.clone());
+            pars.push((0..bw).collect());
+        }
+        let mut set_lens = Vec::with_capacity(np - 1);
+        for p in 1..np {
+            let set = draft.draft(step + p, budget);
+            if set.is_empty() {
+                // no statistics at this level (degenerate catalog):
+                // nothing coverable — run the plain sequential step
+                return self.decode_one(r, step).map(|()| 1);
+            }
+            // cross-product: every beam row × the level's draft set, so
+            // acceptance is a set-membership question per selected
+            // token, independent of which beam row it lands on
+            let mut t_rows = Vec::with_capacity(bw * set.len());
+            let mut p_rows = Vec::with_capacity(bw * set.len());
+            for b in 0..bw {
+                for &t in set {
+                    t_rows.push(t);
+                    p_rows.push(b);
+                }
+            }
+            set_lens.push(set.len());
+            toks.push(t_rows);
+            pars.push(p_rows);
+        }
+
+        // ---- verify probe: one batched forward over the whole grid ----
+        let t_probe = if traced { now_ns() } else { 0 };
+        let probe = match self.exec.decode_multi(r.slot, step, &toks, &pars) {
+            Ok(rows) => rows,
+            Err(e) => {
+                // reclaim a pre-submitted mask job before bailing
+                if let Some(lane) = self.lane.as_mut() {
+                    lane.discard(r.id);
+                }
+                return Err(e);
+            }
+        };
+        Counters::inc(&self.counters.spec_drafts);
+
+        // ---- accept loop: replay the exact per-step selection ----
+        let mut advanced = 0usize;
+        for p in 0..np {
+            let s = step + p;
+            if p > 0 {
+                // acceptance test: every beam token the previous
+                // position selected must be inside this level's draft
+                // set — otherwise its true logits row was never probed
+                let set_len = set_lens[p - 1];
+                if !r
+                    .beam_tokens
+                    .iter()
+                    .all(|&t| draft.covered(s, t, set_len))
+                {
+                    break;
+                }
+                Counters::inc(&self.counters.spec_accepts);
+                Counters::inc(&self.counters.spec_steps_saved);
+            }
+            let t_start = if traced { now_ns() } else { 0 };
+            // assemble this step's true logits rows from the probe
+            self.logits_scratch.clear();
+            if p == 0 {
+                self.logits_scratch.extend_from_slice(&probe[0]);
+            } else {
+                let set_len = set_lens[p - 1];
+                for b in 0..bw {
+                    let rank = draft
+                        .rank(s, r.beam_tokens[b])
+                        .expect("coverage checked above");
+                    let i = b * set_len + rank;
+                    self.logits_scratch
+                        .extend_from_slice(&probe[p][i * v..(i + 1) * v]);
+                }
+            }
+            // same accounting order as the sequential step: the logical
+            // forward of step `s` lands, then KV advances by the
+            // parents as of entry to the step
+            Counters::inc(&self.counters.decode_steps);
+            self.kv.decode_step(r.kvh, s, &r.state.parents);
+            let t_asm_end = if traced { now_ns() } else { 0 };
+            let mut t_mask_end = t_asm_end;
+            // a mask job pre-submitted by `prepare_masks` is for this
+            // entry step's prefixes — collect it here; later positions
+            // compute masks inline (byte-identical by the lane contract)
+            let use_lane = p == 0
+                && step > 0
+                && self
+                    .lane
+                    .as_ref()
+                    .is_some_and(|l| l.has_job(r.id));
+            let live = self.mask_select_apply(r, s, use_lane, &mut t_mask_end);
+            advanced += 1;
+            if traced {
+                let t_end = now_ns();
+                let tr = trace::tracer();
+                // the probe forward is attributed to the first verified
+                // position's Decode span; later accepted positions cost
+                // only row assembly
+                let (d_start, d_dur) = if p == 0 {
+                    (t_probe, t_asm_end.saturating_sub(t_probe))
+                } else {
+                    (t_start, t_asm_end.saturating_sub(t_start))
+                };
+                tr.record(
+                    r.id,
+                    SpanPhase::Decode,
+                    d_start,
+                    d_dur,
+                    [bw as u64, s as u64, 0],
+                );
+                tr.record(
+                    r.id,
+                    SpanPhase::Mask,
+                    t_asm_end,
+                    t_mask_end.saturating_sub(t_asm_end),
+                    [bw as u64, s as u64, 0],
+                );
+                tr.record(
+                    r.id,
+                    SpanPhase::Sort,
+                    t_mask_end,
+                    t_end.saturating_sub(t_mask_end),
+                    [self.sel.len() as u64, s as u64, 0],
+                );
+            }
+            if !live || r.phase == Phase::Done {
+                break;
+            }
+        }
+        Ok(advanced)
     }
 
     /// Retire a [`Phase::Done`] request: collect + rank its items,

@@ -136,6 +136,12 @@ pub struct BackendStats {
     pub tick_sheds: u64,
     /// prefill-chunk resizes applied by the chunk autotuner
     pub chunk_retunes: u64,
+    /// tree-draft probes issued by the speculative decode path
+    pub spec_drafts: u64,
+    /// drafted future positions accepted by tree verification
+    pub spec_accepts: u64,
+    /// sequential decode forwards avoided by accepted speculation
+    pub spec_steps_saved: u64,
     /// trace spans dropped on a full per-thread ring (process-global)
     pub trace_drops: u64,
     /// saturated `Gauge::sub` underflows (process-global)
@@ -198,6 +204,9 @@ impl BackendStats {
             tick_admissions: g(&c.tick_admissions),
             tick_sheds: g(&c.tick_sheds),
             chunk_retunes: g(&c.chunk_retunes),
+            spec_drafts: g(&c.spec_drafts),
+            spec_accepts: g(&c.spec_accepts),
+            spec_steps_saved: g(&c.spec_steps_saved),
             trace_drops: 0,
             gauge_underflows: 0,
             per_replica_hit_rates: vec![crate::metrics::session_hit_rate(
@@ -245,6 +254,9 @@ impl BackendStats {
         self.tick_admissions += o.tick_admissions;
         self.tick_sheds += o.tick_sheds;
         self.chunk_retunes += o.chunk_retunes;
+        self.spec_drafts += o.spec_drafts;
+        self.spec_accepts += o.spec_accepts;
+        self.spec_steps_saved += o.spec_steps_saved;
         // pool-global fields (TTL expirations, peak) come from the single
         // shared pool, not per-replica sums — take the max, not the sum
         self.pool_ttl_expirations = self.pool_ttl_expirations.max(o.pool_ttl_expirations);
@@ -319,6 +331,9 @@ impl BackendStats {
         series!(counter, tick_admissions, "Requests pulled into a continuous worker's live set at a tick boundary.");
         series!(counter, tick_sheds, "Requests shed by the burn-driven SLO admission controller (subset of batch_rejects).");
         series!(counter, chunk_retunes, "Prefill-chunk resizes applied by the chunk autotuner.");
+        series!(counter, spec_drafts, "Tree-draft probes issued by the speculative decode path.");
+        series!(counter, spec_accepts, "Drafted future positions accepted by tree verification.");
+        series!(counter, spec_steps_saved, "Sequential decode forwards avoided by accepted speculation.");
         series!(counter, trace_drops, "Trace spans dropped on a full per-thread ring (process-global).");
         series!(counter, gauge_underflows, "Saturated gauge decrements (process-global).");
         // computed rate: same contiguous-block layout, by hand

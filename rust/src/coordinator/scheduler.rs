@@ -366,6 +366,19 @@ impl Coordinator {
         // (a no-op for the device-filtered xGR selector, which never
         // materializes mask rows)
         engine_cfg.overlap_lane = serving.features.overlap;
+        // trie-constrained speculative decoding: the env override lets
+        // the CI matrix force it suite-wide, mirroring the continuous
+        // batching switch above. The engine degrades it to sequential
+        // decode when the executor can't verify tree drafts exactly.
+        engine_cfg.spec_decode = serving.spec_decode
+            || std::env::var("XGR_SPEC_DECODE")
+                .ok()
+                .is_some_and(|v| !v.is_empty() && v != "0");
+        engine_cfg.spec_draft_len = if serving.spec_draft_len == 0 {
+            64
+        } else {
+            serving.spec_draft_len
+        };
         let affinity = serving.session_cache
             && serving.session_affinity
             && engine_cfg.session_cache.is_some()

@@ -107,7 +107,10 @@ pub fn run_batch(
         }
     }
     while !live.is_empty() {
-        out.extend(run_tick(engine, &mut live, stream, chunk_tokens, counters).retired);
+        out.extend(
+            run_tick(engine, &mut live, stream, chunk_tokens, false, counters)
+                .retired,
+        );
     }
     out
 }
@@ -122,6 +125,15 @@ pub struct TickOutcome {
     pub prefill_tokens: usize,
     /// Requests that took a decode step this tick.
     pub decode_width: u64,
+    /// Decode steps actually advanced this tick — ≥ `decode_width` when
+    /// speculation lands multi-step runs, so the continuous loop's tick
+    /// budget sees the real work rate, not just the request count.
+    pub decode_steps: u64,
+    /// This tick's duration as measured for the tracer's tick span
+    /// (`None` when tracing is off) — lets the continuous loop feed the
+    /// chunk autotuner the same per-stream device time the trace
+    /// records instead of re-measuring wall clock around the call.
+    pub tick_span_ns: Option<u64>,
 }
 
 /// Advance every request in `live` by one mixed prefill/decode stage and
@@ -130,14 +142,28 @@ pub struct TickOutcome {
 /// admission — [`run_batch`] admits once up front, the continuous worker
 /// loop admits at every tick boundary. `counters` receives
 /// `prefill_chunks` / `stage_ticks` / `stage_occupancy_sum`.
+///
+/// With `edf` (the continuous loop passes `tick_slo_admission`), the
+/// live set is reordered earliest-deadline-first — oldest arrival
+/// first, request id as the deterministic tie-break — before the
+/// stages run, so the requests closest to blowing their SLO take their
+/// prefill fair-share round and decode iteration first instead of
+/// waiting out FIFO admission order. Execution order is a free
+/// variable of the staged invariant (each request's compute depends
+/// only on its own slot + beam state), so EDF never changes result
+/// bytes — only which request's latency absorbs tick-internal skew.
 pub fn run_tick(
     engine: &mut Engine,
     live: &mut Vec<InflightReq>,
     stream: usize,
     chunk_tokens: usize,
+    edf: bool,
     counters: &Counters,
 ) -> TickOutcome {
     assert!(chunk_tokens > 0, "staged mode needs a positive chunk budget");
+    if edf {
+        live.sort_by_key(|r| (r.stamps().0, r.id));
+    }
     let mut out: Vec<(u64, Result<RecResponse>)> = Vec::new();
     // tick spans ride the tracer's req_id 0 track (whole-engine events,
     // not tied to any one request's sampling decision)
@@ -199,6 +225,7 @@ pub fn run_tick(
         engine.prepare_masks(r);
     }
     let mut decode_width = 0u64;
+    let mut decode_steps = 0u64;
     let mut i = 0;
     while i < live.len() {
         if !matches!(live[i].phase(), Phase::Decoding { .. }) {
@@ -207,7 +234,10 @@ pub fn run_tick(
         }
         decode_width += 1;
         match engine.advance_decode(&mut live[i]) {
-            Ok(()) => i += 1,
+            Ok(n) => {
+                decode_steps += n as u64;
+                i += 1;
+            }
             Err(e) => {
                 let r = live.remove(i);
                 let id = r.id;
@@ -243,19 +273,28 @@ pub fn run_tick(
             }),
         ));
     }
-    if trace_ticks {
+    let tick_span_ns = if trace_ticks {
+        let span = now_ns().saturating_sub(tick_start);
+        // the third arg is decode *steps*, not width: a speculative
+        // multi-step advance is real tick work and must show up in the
+        // span the autotuner steers on
         trace::tracer().record(
             0,
             SpanPhase::Tick,
             tick_start,
-            now_ns().saturating_sub(tick_start),
-            [occupancy, (chunk_tokens - budget) as u64, decode_width],
+            span,
+            [occupancy, (chunk_tokens - budget) as u64, decode_steps],
         );
-    }
+        Some(span)
+    } else {
+        None
+    };
     TickOutcome {
         retired: out,
         prefill_tokens: chunk_tokens - budget,
         decode_width,
+        decode_steps,
+        tick_span_ns,
     }
 }
 
@@ -485,7 +524,9 @@ mod tests {
             if tick >= 2 && tick % 2 == 0 && !pending.is_empty() {
                 live.push(e.begin_request(&pending.remove(0), true).unwrap());
             }
-            let o = run_tick(&mut e, &mut live, 0, 8, &counters);
+            // edf on: deadline ordering is a free variable of the
+            // invariant, so the byte-identity assertion below covers it
+            let o = run_tick(&mut e, &mut live, 0, 8, true, &counters);
             for (id, res) in o.retired {
                 assert_eq!(
                     want[&id],

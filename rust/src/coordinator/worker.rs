@@ -303,17 +303,33 @@ fn continuous_loop(
             // loop back (and idle-block if nothing else is pending)
             continue;
         }
-        // ---- one staged tick over the live set ----
+        // ---- one staged tick over the live set (EDF-ordered when the
+        // SLO admission controller is active, so the oldest requests
+        // take their stage work first) ----
         let t0 = now_ns();
-        let outcome =
-            super::staged::run_tick(engine, &mut live, stream, tuner.chunk(), counters);
+        let outcome = super::staged::run_tick(
+            engine,
+            &mut live,
+            stream,
+            tuner.chunk(),
+            opts.tick_slo_admission,
+            counters,
+        );
         let tick_ns = now_ns().saturating_sub(t0);
         tick_ewma_ns = if tick_ewma_ns == 0 {
             tick_ns
         } else {
             (3 * tick_ewma_ns + tick_ns) / 4
         };
-        tuner.observe(tick_ns, outcome.prefill_tokens, counters);
+        // with tracing on, steer the autotuner by the tracer's own tick
+        // span — the stage work proper, excluding this loop's admission
+        // bookkeeping — so the trace and the controller agree on what a
+        // tick cost; the wall-clock measurement stays the fallback
+        tuner.observe(
+            outcome.tick_span_ns.unwrap_or(tick_ns),
+            outcome.prefill_tokens,
+            counters,
+        );
         // ---- retire: run_tick already freed the KV/beam slots;
         // release the admission budget and answer immediately ----
         for (id, res) in outcome.retired {

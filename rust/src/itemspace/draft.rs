@@ -1,0 +1,208 @@
+//! Draft proposer for trie-constrained speculative decoding (ROADMAP
+//! item 4; NEZHA, PAPERS.md: "zero-sacrifice hyperspeed decoding").
+//!
+//! NEZHA splits hyperspeed decoding into a *draft* stage (a cheap
+//! proposer guesses the remaining semantic-ID suffix) and a *verify*
+//! stage (the real model scores every drafted position in one batched
+//! forward). This module is the draft half: because the GR item space
+//! is **closed** — every servable item is a TID triplet present in
+//! [`ItemTrie`] — a draft constrained to trie tokens is valid by
+//! construction, so verification never has to reject a hallucinated
+//! token, only a *mis-ranked* one.
+//!
+//! The proposer is built once per catalog load from transition
+//! statistics over the trie (per-level token popularity: how many
+//! catalog items live under each token at each level) and is immutable
+//! afterwards — the same share-freely contract as [`ItemTrie`] itself,
+//! so one `Arc` serves every stream. Proposing is allocation-free:
+//! [`DraftProposer::draft`] returns a slice into the prebuilt
+//! popularity ranking, and acceptance checks are O(1) lookups into a
+//! vocab-sized rank table.
+//!
+//! The verify half lives in `coordinator::engine` (the speculation path
+//! of `advance_decode`) on top of `ModelExecutor::decode_multi`.
+
+use super::trie::ItemTrie;
+
+/// Per-level token statistics for drafting semantic-ID suffixes.
+///
+/// For each decode level `l` (0‥2 of the TID triplet) the proposer
+/// keeps the level's tokens ranked by *item popularity* — the number of
+/// catalog items whose level-`l` token is that token — so a draft of
+/// budget `d` is simply the `d` most item-dense tokens of the level.
+pub struct DraftProposer {
+    /// `ranked[l]` = the level's tokens, most item-dense first
+    /// (ties broken by ascending token id for determinism).
+    ranked: [Vec<u32>; 3],
+    /// `rank_of[l][t]` = position of token `t` in `ranked[l]`, or
+    /// `u32::MAX` if `t` never appears at level `l`.
+    rank_of: [Vec<u32>; 3],
+}
+
+impl DraftProposer {
+    /// Number of decode levels covered (the TID triplet depth).
+    pub const LEVELS: usize = 3;
+
+    /// Build the per-level popularity ranking by one walk over the trie.
+    ///
+    /// `count[l][t]` = number of items whose level-`l` token is `t`:
+    /// the size of the trie subtree under that token, summed across all
+    /// prefixes reaching it.
+    pub fn build(trie: &ItemTrie) -> Self {
+        let v = trie.vocab as usize;
+        let mut counts = [vec![0u64; v], vec![0u64; v], vec![0u64; v]];
+        for &t0 in trie.valid_roots() {
+            for &t1 in trie.valid_after1(t0) {
+                let leaves = trie.valid_after2(t0, t1);
+                counts[0][t0 as usize] += leaves.len() as u64;
+                counts[1][t1 as usize] += leaves.len() as u64;
+                for &t2 in leaves {
+                    counts[2][t2 as usize] += 1;
+                }
+            }
+        }
+        let mut ranked: [Vec<u32>; 3] = Default::default();
+        let mut rank_of: [Vec<u32>; 3] = Default::default();
+        for l in 0..Self::LEVELS {
+            let mut toks: Vec<u32> = (0..v as u32)
+                .filter(|&t| counts[l][t as usize] > 0)
+                .collect();
+            // most item-dense first; equal counts fall back to token id
+            // so the ranking (and thus every draft) is deterministic
+            toks.sort_by_key(|&t| (std::cmp::Reverse(counts[l][t as usize]), t));
+            let mut inv = vec![u32::MAX; v];
+            for (i, &t) in toks.iter().enumerate() {
+                inv[t as usize] = i as u32;
+            }
+            ranked[l] = toks;
+            rank_of[l] = inv;
+        }
+        DraftProposer { ranked, rank_of }
+    }
+
+    /// The draft token set for decode level `level`: the (at most)
+    /// `budget` most item-dense tokens. Allocation-free — a slice into
+    /// the prebuilt ranking.
+    pub fn draft(&self, level: usize, budget: usize) -> &[u32] {
+        let r = &self.ranked[level];
+        &r[..budget.min(r.len())]
+    }
+
+    /// Position of `token` in level `level`'s popularity ranking, or
+    /// `None` if the token never occurs at that level.
+    pub fn rank(&self, level: usize, token: u32) -> Option<usize> {
+        let r = *self.rank_of[level].get(token as usize)?;
+        (r != u32::MAX).then_some(r as usize)
+    }
+
+    /// Whether `token` is inside the budget-`budget` draft of `level`
+    /// (the verify stage's acceptance test — O(1)).
+    pub fn covered(&self, level: usize, token: u32, budget: usize) -> bool {
+        self.rank(level, token).is_some_and(|r| r < budget)
+    }
+
+    /// Number of distinct tokens occurring at `level`.
+    pub fn level_len(&self, level: usize) -> usize {
+        self.ranked[level].len()
+    }
+
+    /// Resident bytes of the ranking tables (capacity planning).
+    pub fn resident_bytes(&self) -> usize {
+        self.ranked.iter().map(|r| r.capacity() * 4).sum::<usize>()
+            + self.rank_of.iter().map(|r| r.capacity() * 4).sum::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::itemspace::Catalog;
+
+    fn proposer(vocab: u32, items: usize) -> (ItemTrie, DraftProposer) {
+        let cat = Catalog::generate(vocab, items, 7);
+        let trie = ItemTrie::build(&cat);
+        let p = DraftProposer::build(&trie);
+        (trie, p)
+    }
+
+    #[test]
+    fn ranks_descend_by_item_count_with_token_ties_ascending() {
+        let (trie, p) = proposer(64, 600);
+        for l in 0..DraftProposer::LEVELS {
+            let full = p.draft(l, usize::MAX);
+            // recompute counts independently
+            let mut counts = vec![0u64; trie.vocab as usize];
+            for &t0 in trie.valid_roots() {
+                for &t1 in trie.valid_after1(t0) {
+                    let leaves = trie.valid_after2(t0, t1);
+                    match l {
+                        0 => counts[t0 as usize] += leaves.len() as u64,
+                        1 => counts[t1 as usize] += leaves.len() as u64,
+                        _ => {
+                            for &t2 in leaves {
+                                counts[t2 as usize] += 1;
+                            }
+                        }
+                    }
+                }
+            }
+            for w in full.windows(2) {
+                let (a, b) = (w[0], w[1]);
+                let (ca, cb) = (counts[a as usize], counts[b as usize]);
+                assert!(
+                    ca > cb || (ca == cb && a < b),
+                    "level {l}: {a}(count {ca}) must sort before {b}(count {cb})"
+                );
+            }
+            // every ranked token genuinely occurs; every occurring token is ranked
+            assert!(full.iter().all(|&t| counts[t as usize] > 0));
+            assert_eq!(
+                full.len(),
+                counts.iter().filter(|&&c| c > 0).count()
+            );
+        }
+    }
+
+    #[test]
+    fn rank_of_is_the_inverse_of_ranked() {
+        let (_, p) = proposer(64, 600);
+        for l in 0..DraftProposer::LEVELS {
+            let full = p.draft(l, usize::MAX);
+            for (i, &t) in full.iter().enumerate() {
+                assert_eq!(p.rank(l, t), Some(i));
+                assert!(p.covered(l, t, i + 1));
+                assert!(!p.covered(l, t, i));
+            }
+            // absent tokens have no rank
+            for t in 0..64u32 {
+                if !full.contains(&t) {
+                    assert_eq!(p.rank(l, t), None);
+                    assert!(!p.covered(l, t, usize::MAX));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn draft_budget_caps_and_is_a_prefix_of_the_full_ranking() {
+        let (_, p) = proposer(64, 600);
+        for l in 0..DraftProposer::LEVELS {
+            let full = p.draft(l, usize::MAX);
+            assert_eq!(p.level_len(l), full.len());
+            for budget in [0usize, 1, 3, full.len(), full.len() + 10] {
+                let d = p.draft(l, budget);
+                assert_eq!(d.len(), budget.min(full.len()));
+                assert_eq!(d, &full[..d.len()]);
+            }
+        }
+    }
+
+    #[test]
+    fn drafts_are_valid_by_construction_at_the_root() {
+        let (trie, p) = proposer(64, 600);
+        // level-0 drafts must be a subset of the trie's valid roots
+        for &t in p.draft(0, usize::MAX) {
+            assert!(trie.valid_roots().contains(&t));
+        }
+    }
+}

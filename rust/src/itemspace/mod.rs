@@ -9,9 +9,11 @@
 //! additive logit masks with the paper's dense/sparse storage split.
 
 pub mod catalog;
+pub mod draft;
 pub mod trie;
 pub mod masks;
 
 pub use catalog::{Catalog, ItemId};
+pub use draft::DraftProposer;
 pub use masks::{MaskStats, MaskWorkspace, NEG_INF};
 pub use trie::ItemTrie;

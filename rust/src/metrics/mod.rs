@@ -43,6 +43,9 @@
 //! | `tick_admissions` | continuous worker, request pulled into the live set at a tick boundary |
 //! | `tick_sheds` | continuous worker, hopeless request shed by the burn-driven SLO controller |
 //! | `chunk_retunes` | chunk autotuner, applied prefill-chunk resize |
+//! | `spec_drafts` | xGR engine, tree-draft probe issued (one `decode_multi` call) |
+//! | `spec_accepts` | xGR engine, drafted future position accepted by verification |
+//! | `spec_steps_saved` | xGR engine, sequential decode forward avoided by speculation |
 //!
 //! Two process-global counters live outside `Counters`:
 //! [`gauge_underflows`] (a [`Gauge::sub`] went below zero and saturated)
@@ -165,6 +168,16 @@ pub struct Counters {
     pub tick_sheds: AtomicU64,
     /// prefill-chunk resizes applied by the chunk autotuner
     pub chunk_retunes: AtomicU64,
+    /// tree-draft probes issued by the speculative decode path (one
+    /// per `decode_multi` call covering the remaining suffix)
+    pub spec_drafts: AtomicU64,
+    /// drafted future positions whose beam survivors were all covered
+    /// by the draft set, letting the engine reuse the probed logits
+    pub spec_accepts: AtomicU64,
+    /// sequential decode forwards avoided by accepted speculation
+    /// (`decode_steps` still counts logical steps, so throughput math
+    /// stays comparable with speculation on or off)
+    pub spec_steps_saved: AtomicU64,
 }
 
 // loom's atomics have no `const fn new` and no `Default`, so the
@@ -207,6 +220,9 @@ impl Default for Counters {
             tick_admissions: AtomicU64::new(0),
             tick_sheds: AtomicU64::new(0),
             chunk_retunes: AtomicU64::new(0),
+            spec_drafts: AtomicU64::new(0),
+            spec_accepts: AtomicU64::new(0),
+            spec_steps_saved: AtomicU64::new(0),
         }
     }
 }
@@ -295,6 +311,9 @@ impl Counters {
             tick_admissions,
             tick_sheds,
             chunk_retunes,
+            spec_drafts,
+            spec_accepts,
+            spec_steps_saved,
         );
         fold_max!(
             pool_ttl_expirations,

@@ -18,8 +18,12 @@
 //! * [`SpanPhase::Sort`] — beam selection + state reorder of one decode
 //!   iteration, and the final ranking in `finish_request`;
 //! * [`SpanPhase::Tick`] — one staged-engine stage tick (`req_id = 0`;
-//!   args carry occupancy / chunk tokens / decode width). Tick spans are
-//!   a per-stream track, not part of any request's waterfall.
+//!   args carry occupancy / chunk tokens / decode steps advanced — steps,
+//!   not request width, so speculative multi-step runs register as the
+//!   work they did). Tick spans are a per-stream track, not part of any
+//!   request's waterfall; the continuous loop also hands the tick span
+//!   duration back through `TickOutcome::tick_span_ns` so the chunk
+//!   autotuner steers on the same measurement the trace records.
 //!
 //! Within one request the spans are non-overlapping and — in sequential
 //! mode, where nothing interleaves — sum to that request's `service_ns`
@@ -102,7 +106,7 @@ impl SpanPhase {
             SpanPhase::Mask => ["beams", "step", ""],
             SpanPhase::Decode => ["beams", "step", ""],
             SpanPhase::Sort => ["kept", "step", ""],
-            SpanPhase::Tick => ["occupancy", "chunk_tokens", "decode_width"],
+            SpanPhase::Tick => ["occupancy", "chunk_tokens", "decode_steps"],
         }
     }
 }

@@ -143,6 +143,51 @@ impl ModelExecutor for MockExecutor {
         Ok(out)
     }
 
+    fn supports_tree_spec(&self) -> bool {
+        // the mock's decode row is a pure function of (slot seed, step,
+        // beam row, token) — KV-free, so any candidate grid scores
+        // byte-identically to the sequential decode it replaces
+        true
+    }
+
+    fn decode_multi(
+        &mut self,
+        slot: SlotId,
+        step: usize,
+        beam_tokens_per_pos: &[Vec<u32>],
+        parents_per_pos: &[Vec<usize>],
+    ) -> Result<Vec<Vec<f32>>> {
+        let seed = *self
+            .slots
+            .get(&slot.0)
+            .ok_or_else(|| anyhow!("unknown slot"))?;
+        if let Some(d) = self.delay {
+            std::thread::sleep(d);
+        }
+        let mut out = Vec::with_capacity(beam_tokens_per_pos.len());
+        for (p, (toks, pars)) in
+            beam_tokens_per_pos.iter().zip(parents_per_pos).enumerate()
+        {
+            if toks.len() != pars.len() || toks.is_empty() {
+                return Err(anyhow!("bad candidate grid at position {p}"));
+            }
+            let mut rows = Vec::with_capacity(toks.len() * self.spec.vocab);
+            for (&t, &b) in toks.iter().zip(pars) {
+                // same seed expression as `decode` for beam row `b` at
+                // step `step + p` feeding token `t` — the byte-identity
+                // the engine's verify stage relies on
+                let s = Self::h(
+                    seed ^ ((step + p) as u64) << 32
+                        ^ (b as u64) << 16
+                        ^ t as u64,
+                );
+                Self::logits_row(s, self.spec.vocab, &mut rows);
+            }
+            out.push(rows);
+        }
+        Ok(out)
+    }
+
     fn release(&mut self, slot: SlotId) {
         self.slots.remove(&slot.0);
         self.pending.remove(&slot.0);
@@ -227,6 +272,34 @@ mod tests {
             let dc = chunked.decode(slot, 0, &[1, 2, 3, 4], &[0; 4]).unwrap();
             assert_eq!(dw, dc, "split {split}");
         }
+    }
+
+    #[test]
+    fn decode_multi_rows_match_sequential_decode() {
+        let mut a = MockExecutor::new(spec());
+        let (s, _) = a.prefill(&[9, 8, 7]).unwrap();
+        let v = a.spec().vocab;
+        // a tree-shaped grid over two future positions: position 0 holds
+        // the known beam chain, position 1 an arbitrary candidate set
+        let grid_toks = vec![vec![5u32, 6, 7, 8], vec![1u32, 2, 1, 9, 30]];
+        let grid_pars = vec![vec![0usize, 1, 2, 3], vec![0usize, 0, 3, 2, 1]];
+        let multi = a.decode_multi(s, 1, &grid_toks, &grid_pars).unwrap();
+        assert_eq!(multi.len(), 2);
+        for (p, (toks, pars)) in grid_toks.iter().zip(&grid_pars).enumerate() {
+            for (i, (&t, &b)) in toks.iter().zip(pars).enumerate() {
+                // sequential decode at step 1+p with token t in beam row b
+                let mut beam = vec![0u32; 4];
+                beam[b] = t;
+                let seq = a.decode(s, 1 + p, &beam, &[0; 4]).unwrap();
+                assert_eq!(
+                    &multi[p][i * v..(i + 1) * v],
+                    &seq[b * v..(b + 1) * v],
+                    "pos {p} candidate {i}"
+                );
+            }
+        }
+        assert!(a.decode_multi(s, 0, &[vec![1]], &[vec![]]).is_err());
+        assert!(a.supports_tree_spec());
     }
 
     #[test]

@@ -119,6 +119,55 @@ pub trait ModelExecutor {
         parents: &[usize],
     ) -> Result<Vec<f32>>;
 
+    /// Whether [`decode_multi`](Self::decode_multi) can score a
+    /// *tree-shaped* candidate grid — per position, an arbitrary set of
+    /// (beam row, token) candidates rather than one full beam-wide
+    /// chain — in a single verify pass whose per-candidate logits are
+    /// byte-identical to the sequential [`decode`](Self::decode) the
+    /// candidate would have received. The engine's speculation path
+    /// requires this guarantee ("zero-sacrifice"): executors answering
+    /// false are never speculated on.
+    fn supports_tree_spec(&self) -> bool {
+        false
+    }
+
+    /// Score several future decode positions in one call: position `p`
+    /// of the grid covers decode step `step + p`, with candidates
+    /// `(parents_per_pos[p][i], beam_tokens_per_pos[p][i])` — the beam
+    /// row the candidate occupies and the token it feeds. Returns, per
+    /// position, the candidate logits rows flattened
+    /// (`[candidates, vocab]`), in candidate order.
+    ///
+    /// The default loops over [`decode`](Self::decode), which is only
+    /// shape-compatible when every position is a full beam-wide chain
+    /// (candidate `i` *is* beam row `i`); it exists so minimal
+    /// executors keep compiling and is never reached by the engine
+    /// unless [`supports_tree_spec`](Self::supports_tree_spec) answers
+    /// true. Real batched implementations (mock; a future tree-
+    /// attention PJRT artifact) override it with one forward over the
+    /// whole grid.
+    fn decode_multi(
+        &mut self,
+        slot: SlotId,
+        step: usize,
+        beam_tokens_per_pos: &[Vec<u32>],
+        parents_per_pos: &[Vec<usize>],
+    ) -> Result<Vec<Vec<f32>>> {
+        let bw = self.spec().beam_width;
+        let mut out = Vec::with_capacity(beam_tokens_per_pos.len());
+        for (p, (toks, pars)) in
+            beam_tokens_per_pos.iter().zip(parents_per_pos).enumerate()
+        {
+            if toks.len() != bw || pars.len() != bw {
+                return Err(anyhow!(
+                    "default decode_multi requires full beam-wide chains"
+                ));
+            }
+            out.push(self.decode(slot, step + p, toks, pars)?);
+        }
+        Ok(out)
+    }
+
     fn release(&mut self, slot: SlotId);
 
     /// Live slots (for leak checks).

@@ -276,6 +276,19 @@ impl ModelExecutor for PjrtEngine {
         Ok(logits)
     }
 
+    fn supports_tree_spec(&self) -> bool {
+        // Deliberately false: decode is stateful — each step reorders
+        // the unshared KV in place by the previous selection's parents,
+        // so a future position's logits depend on the whole beam path,
+        // not just (row, token). Scoring a tree-shaped candidate grid
+        // byte-identically needs an AOT tree-attention artifact
+        // (position-indexed candidate KV, no in-place reorder); until
+        // that lands (ROADMAP item 4 follow-up) the engine must not
+        // speculate on this executor — a grid probe here would be
+        // *approximate*, violating the zero-sacrifice contract.
+        false
+    }
+
     fn release(&mut self, slot: SlotId) {
         self.slots.remove(&slot.0);
         self.pending.remove(&slot.0);

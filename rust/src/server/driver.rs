@@ -112,6 +112,11 @@ pub struct ReplayReport {
     pub tick_admissions: u64,
     pub tick_sheds: u64,
     pub chunk_retunes: u64,
+    /// speculative decoding activity (zero with `spec_decode` off):
+    /// tree-draft probes, accepted future positions, forwards avoided
+    pub spec_drafts: u64,
+    pub spec_accepts: u64,
+    pub spec_steps_saved: u64,
     /// session hit rate per replica (one element for a single engine)
     pub per_replica_hit_rates: Vec<f64>,
     /// phase spans drained from the tracer at the end of the replay
@@ -210,6 +215,12 @@ impl ReplayReport {
             s.push_str(&format!(
                 " tick_admissions={} tick_sheds={} chunk_retunes={}",
                 self.tick_admissions, self.tick_sheds, self.chunk_retunes
+            ));
+        }
+        if self.spec_drafts > 0 {
+            s.push_str(&format!(
+                " spec_drafts={} spec_accepts={} spec_steps_saved={}",
+                self.spec_drafts, self.spec_accepts, self.spec_steps_saved
             ));
         }
         // execution-volume segment (zero only when nothing decoded, e.g.
@@ -319,6 +330,9 @@ impl ReplayReport {
         self.tick_admissions = st.tick_admissions;
         self.tick_sheds = st.tick_sheds;
         self.chunk_retunes = st.chunk_retunes;
+        self.spec_drafts = st.spec_drafts;
+        self.spec_accepts = st.spec_accepts;
+        self.spec_steps_saved = st.spec_steps_saved;
         self.per_replica_hit_rates = st.per_replica_hit_rates.clone();
         self.trace_drops = st.trace_drops;
         self.gauge_underflows = st.gauge_underflows;
@@ -451,6 +465,9 @@ pub fn replay_trace<B: ServingBackend>(
         tick_admissions: 0,
         tick_sheds: 0,
         chunk_retunes: 0,
+        spec_drafts: 0,
+        spec_accepts: 0,
+        spec_steps_saved: 0,
         per_replica_hit_rates: Vec::new(),
         spans: Vec::new(),
         phases: PhaseLatencies::default(),

@@ -187,6 +187,17 @@ pub struct DesResult {
     /// admission controller (also counted in `rejected`; zero unless
     /// `tick_slo_admission` is on and burn reached 1)
     pub tick_sheds: u64,
+    /// speculative decoding: tree-draft probes issued (zero with
+    /// `spec_decode` off or a non-xGR engine — only the
+    /// device-filtered selector verifies tree drafts exactly)
+    pub spec_drafts: u64,
+    /// speculative decoding: drafted future positions accepted by
+    /// verification (the acceptance model compounds the draft-set
+    /// coverage per look-ahead level)
+    pub spec_accepts: u64,
+    /// speculative decoding: sequential decode forwards avoided
+    /// (equal to `spec_accepts` — one accepted level is one forward)
+    pub spec_steps_saved: u64,
     // ---- session prefix cache (zero when disabled) ----
     pub session_hits: u64,
     pub session_misses: u64,
@@ -315,6 +326,11 @@ struct BatchTiming {
     decode_s: f64,
     mask_s: f64,
     sort_s: f64,
+    /// tree-draft probes this batch issued (fractional request-rate;
+    /// 0 with speculation off)
+    spec_drafts_f: f64,
+    /// expected accepted look-ahead levels == forwards avoided
+    spec_saved_f: f64,
 }
 
 /// `lens` are full prompt lengths (decode attends to the whole context);
@@ -455,6 +471,57 @@ fn batch_timing(
         }
     }
 
+    // ---- trie-constrained speculative decoding (xGR only) ----
+    // One tree probe drafts every remaining semantic-ID level: exact
+    // rows for the current level plus BW·d popularity-ranked candidate
+    // rows per future level, verified in a single batched forward. A
+    // future level is accepted when every beam survivor's token sits
+    // inside the draft set; each accepted level avoids one sequential
+    // decode forward. Coverage of a budget-d draft against a trie whose
+    // per-level branching is ~vocab^(1/3) (a 3-level semantic-ID space)
+    // is d/(d+branch), compounding per look-ahead level — the same
+    // geometric acceptance frontier fig13/fig14 sweep.
+    let nd = m.num_decode;
+    let spec_on =
+        cfg.serving.spec_decode && filter && !host_beam && nd >= 2;
+    let (spec_drafts_f, spec_saved_f) = if spec_on {
+        let branch = (m.vocab as f64).cbrt().max(4.0);
+        let d_eff =
+            cfg.serving.spec_draft_len.clamp(1, m.vocab) as f64;
+        let alpha = d_eff / (d_eff + branch);
+        let mut saved_phases = 0.0;
+        for j in 1..nd {
+            saved_phases += alpha.powi(j as i32);
+        }
+        // savings: accepted levels skip their sequential forward
+        let per_phase = decode_comp / nd as f64;
+        // cost: the probe's extra candidate rows make the one forward
+        // wider, and each drafted level pays attention over BW·d rows
+        let draft_rows = bw * d_eff as usize * (nd - 1);
+        let probe_rows = b * (bw + draft_rows);
+        let probe_fwd = forward_cost(hw, m, probe_rows, cgs).time_s;
+        let fwd_base = forward_cost(hw, m, b * bw, cgs).time_s;
+        // the probe is ONE forward: its attention streams the shared
+        // prompt once and a dense buffer of drafted rows (each drafted
+        // row carries single-token own-KV — the tree holds candidate
+        // tokens, not committed beams), so one widened pass at step 0
+        // models it
+        let probe_attn = decode_attention_cost(
+            kernel, hw, m, b, draft_rows, mean_len, 0, cgs,
+        )
+        .time_s;
+        let probe_extra = (probe_fwd - fwd_base) + probe_attn;
+        // net device delta; masking/selection still run per logical
+        // step (selection code is shared with the sequential path), so
+        // only the forward/attention component shrinks
+        let delta = saved_phases * per_phase - probe_extra;
+        decode_dev = (decode_dev - delta).max(0.0);
+        decode_comp = (decode_comp - delta).max(0.0);
+        (b as f64, b as f64 * saved_phases)
+    } else {
+        (0.0, 0.0)
+    };
+
     // ---- combine the phases ----
     // Sequential: prefill then decode, strictly serialized. Staged
     // (xGR + `prefill_chunk_tokens > 0`): the batch runs as mixed
@@ -484,6 +551,8 @@ fn batch_timing(
             decode_s: decode_comp,
             mask_s: mask_comp,
             sort_s: sort_comp,
+            spec_drafts_f,
+            spec_saved_f,
         }
     } else {
         BatchTiming {
@@ -496,6 +565,8 @@ fn batch_timing(
             decode_s: decode_comp,
             mask_s: mask_comp,
             sort_s: sort_comp,
+            spec_drafts_f,
+            spec_saved_f,
         }
     }
 }
@@ -684,6 +755,10 @@ pub fn simulate(trace: &Trace, cfg: &DesConfig) -> DesResult {
     let mut prefill_chunks = 0u64;
     let mut stage_ticks = 0u64;
     let mut stage_occupancy_sum = 0u64;
+    // speculation tallies accumulate as f64 (the acceptance model is
+    // an expectation) and round once at report time
+    let mut spec_drafts_f = 0.0f64;
+    let mut spec_saved_f = 0.0f64;
     let mut in_flight = 0usize;
     // per-replica concurrency: streams split their OWN replica's CGs
     let mut in_flight_rep = vec![0usize; replicas];
@@ -920,6 +995,8 @@ pub fn simulate(trace: &Trace, cfg: &DesConfig) -> DesResult {
                         prefill_chunks += timing.prefill_chunks;
                         stage_ticks += timing.stage_ticks;
                         stage_occupancy_sum += timing.occupancy_sum;
+                        spec_drafts_f += timing.spec_drafts_f;
+                        spec_saved_f += timing.spec_saved_f;
                         in_flight += 1;
                         in_flight_rep[rep] += 1;
                         let act = (total_tokens * cfg.model.d_model * 8) as u64;
@@ -1126,6 +1203,8 @@ pub fn simulate(trace: &Trace, cfg: &DesConfig) -> DesResult {
                 prefill_chunks += timing.prefill_chunks;
                 stage_ticks += timing.stage_ticks;
                 stage_occupancy_sum += timing.occupancy_sum;
+                spec_drafts_f += timing.spec_drafts_f;
+                spec_saved_f += timing.spec_saved_f;
                 in_flight += 1;
                 in_flight_rep[rep] += 1;
                 let act = (total_tokens * cfg.model.d_model * 8) as u64;
@@ -1319,6 +1398,9 @@ pub fn simulate(trace: &Trace, cfg: &DesConfig) -> DesResult {
         stage_occupancy_sum,
         tick_admissions,
         tick_sheds,
+        spec_drafts: spec_drafts_f as u64,
+        spec_accepts: spec_saved_f as u64,
+        spec_steps_saved: spec_saved_f as u64,
         session_hits: session.iter().map(|s| s.stats.hits).sum(),
         session_misses: session.iter().map(|s| s.stats.misses).sum(),
         session_swap_ins: session.iter().map(|s| s.stats.swap_ins).sum(),
@@ -1444,6 +1526,69 @@ mod tests {
             x.p99_ms(),
             l.p99_ms()
         );
+    }
+
+    #[test]
+    fn speculation_model_counts_drafts_and_saved_steps() {
+        let t = trace(300, 50.0);
+        // off (the default): every speculation tally stays zero
+        let off = simulate(&t, &cfg(EngineKind::Xgr, 128));
+        assert_eq!(off.spec_drafts, 0);
+        assert_eq!(off.spec_accepts, 0);
+        assert_eq!(off.spec_steps_saved, 0);
+        // on: one tree probe per dispatched request, a positive
+        // expected number of accepted levels, accepts == forwards saved
+        let mut c_on = cfg(EngineKind::Xgr, 128);
+        c_on.serving.spec_decode = true;
+        let on = simulate(&t, &c_on);
+        assert!(on.spec_drafts > 0, "drafts {}", on.spec_drafts);
+        assert!(on.spec_accepts > 0, "accepts {}", on.spec_accepts);
+        assert_eq!(on.spec_accepts, on.spec_steps_saved);
+        // speculation reshapes device time, never request outcomes
+        assert_eq!(on.completed, off.completed);
+        assert_eq!(on.rejected, off.rejected);
+        // deterministic: same trace + config, same tallies and latency
+        let on2 = simulate(&t, &c_on);
+        assert_eq!(on.spec_steps_saved, on2.spec_steps_saved);
+        assert_eq!(on.latency.p99(), on2.latency.p99());
+    }
+
+    #[test]
+    fn speculation_acceptance_grows_with_draft_budget() {
+        // low load: nothing is rejected, so every run dispatches the
+        // same 300 requests and the acceptance expectation is the only
+        // moving part — steps saved must be monotone in the budget
+        let t = trace(300, 50.0);
+        let mut saved = Vec::new();
+        for d in [1usize, 8, 64, 512] {
+            let mut c = cfg(EngineKind::Xgr, 128);
+            c.serving.spec_decode = true;
+            c.serving.spec_draft_len = d;
+            let r = simulate(&t, &c);
+            assert_eq!(r.rejected, 0, "budget {d} must not shed load");
+            saved.push(r.spec_steps_saved);
+        }
+        for w in saved.windows(2) {
+            assert!(w[0] <= w[1], "steps saved not monotone: {saved:?}");
+        }
+        assert!(
+            saved[0] < saved[3],
+            "the budget sweep must move acceptance: {saved:?}"
+        );
+    }
+
+    #[test]
+    fn speculation_is_xgr_only_in_the_model() {
+        // baselines verify on the host from dense logits — no tree
+        // probe exists there, so the knob is inert outside xGR
+        let t = trace(100, 50.0);
+        for e in [EngineKind::VllmLike, EngineKind::XllmLike] {
+            let mut c = cfg(e, 128);
+            c.serving.spec_decode = true;
+            let r = simulate(&t, &c);
+            assert_eq!(r.spec_drafts, 0, "{:?}", e);
+            assert_eq!(r.spec_steps_saved, 0, "{:?}", e);
+        }
     }
 
     #[test]

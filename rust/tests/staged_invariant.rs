@@ -203,6 +203,8 @@ fn mid_flight_arrivals_are_byte_identical_to_sequential_property() {
         let mut arrive: Vec<u64> = (0..n).map(|_| rng.below(12)).collect();
         arrive.sort_unstable();
         let chunk = 1 + rng.below(33) as usize;
+        // earliest-deadline ordering is a free variable of the invariant
+        let edf = rng.below(2) == 0;
         let counters = Counters::new();
         let mut live = Vec::new();
         let mut next = 0usize;
@@ -222,7 +224,8 @@ fn mid_flight_arrivals_are_byte_identical_to_sequential_property() {
                 continue;
             }
             for (id, res) in
-                staged::run_tick(&mut stg, &mut live, 0, chunk, &counters).retired
+                staged::run_tick(&mut stg, &mut live, 0, chunk, edf, &counters)
+                    .retired
             {
                 let items = res
                     .map_err(|e| format!("staged request {id} failed: {e:#}"))?
@@ -244,6 +247,162 @@ fn mid_flight_arrivals_are_byte_identical_to_sequential_property() {
         );
         Ok(())
     });
+}
+
+#[test]
+fn speculative_decode_is_byte_identical_to_sequential_property() {
+    // the speculation path's free variables on top of run_batch's:
+    // whether the draft budget is wide enough to accept (tiny budgets
+    // force mid-grid rejections and the sequential-resume path), which
+    // selector verifies, and whether the overlap lane is live. The
+    // zero-sacrifice contract: recommendations must not move by a byte
+    // with speculation on, at ANY budget.
+    let catalog = Catalog::generate(64, 600, 5);
+    let trie = Arc::new(ItemTrie::build(&catalog));
+    prop::check("spec decode == sequential", 24, |rng: &mut Pcg| {
+        let selector = if rng.below(2) == 0 {
+            SelectorKind::XBeam
+        } else {
+            SelectorKind::Naive
+        };
+        let overlap = rng.below(2) == 0;
+        // 1..=4 rejects most drafts; up to vocab-wide accepts everything
+        let draft_len = if rng.below(2) == 0 {
+            1 + rng.below(4) as usize
+        } else {
+            8 + rng.below(57) as usize
+        };
+        let mut seq = Engine::new(
+            Box::new(MockExecutor::new(spec())),
+            trie.clone(),
+            EngineConfig { selector, ..Default::default() },
+        );
+        let mut spc = Engine::new(
+            Box::new(MockExecutor::new(spec())),
+            trie.clone(),
+            EngineConfig {
+                selector,
+                overlap_lane: overlap,
+                spec_decode: true,
+                spec_draft_len: draft_len,
+                ..Default::default()
+            },
+        );
+        let n = 4 + rng.below(8) as usize;
+        let users = 1 + rng.below(4);
+        let reqs: Vec<RecRequest> = (0..n)
+            .map(|i| {
+                let len = 1 + rng.below(90) as usize;
+                RecRequest {
+                    id: i as u64,
+                    tokens: (0..len).map(|_| rng.below(60) as u32).collect(),
+                    arrival_ns: now_ns(),
+                    user_id: rng.below(users),
+                }
+            })
+            .collect();
+        let mut want: HashMap<u64, Vec<([u32; 3], f32)>> = HashMap::new();
+        for r in &reqs {
+            let out = seq
+                .run_request(r)
+                .map_err(|e| format!("sequential failed: {e:#}"))?;
+            want.insert(r.id, out.items);
+        }
+        let chunk = 1 + rng.below(33) as usize;
+        let counters = Counters::new();
+        let mut i = 0;
+        while i < reqs.len() {
+            let take = (1 + rng.below(4) as usize).min(reqs.len() - i);
+            let results = staged::run_batch(
+                &mut spc,
+                &reqs[i..i + take],
+                0,
+                chunk,
+                &counters,
+            );
+            prop_assert_eq!(results.len(), take);
+            for (id, res) in results {
+                let items = res
+                    .map_err(|e| {
+                        format!("speculative request {id} failed: {e:#}")
+                    })?
+                    .items;
+                prop_assert!(
+                    want[&id] == items,
+                    "request {id} diverged under speculation (selector \
+                     {selector:?}, draft {draft_len}, chunk {chunk}, \
+                     lane {overlap})"
+                );
+            }
+            i += take;
+        }
+        // speculation must have probed, and the logical step count must
+        // match the sequential engine exactly — accepted drafts change
+        // HOW steps execute, never how many there are
+        prop_assert!(
+            Counters::get(&spc.counters.spec_drafts) > 0,
+            "spec engine never drafted"
+        );
+        prop_assert_eq!(
+            Counters::get(&spc.counters.decode_steps),
+            Counters::get(&seq.counters.decode_steps)
+        );
+        prop_assert_eq!(
+            Counters::get(&spc.counters.spec_accepts),
+            Counters::get(&spc.counters.spec_steps_saved)
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn wide_draft_budgets_accept_and_save_forwards() {
+    // budget == vocab covers every token with item mass at every level,
+    // and every selected beam token is a valid continuation (so it has
+    // mass) — the whole 3-level suffix verifies off one probe per
+    // request, deterministically
+    let catalog = Catalog::generate(64, 600, 5);
+    let trie = Arc::new(ItemTrie::build(&catalog));
+    let mut e = Engine::new(
+        Box::new(MockExecutor::new(spec())),
+        trie,
+        EngineConfig {
+            spec_decode: true,
+            spec_draft_len: 64,
+            ..Default::default()
+        },
+    );
+    let mut rng = Pcg::new(11);
+    for id in 0..12u64 {
+        let len = 1 + rng.below(90) as usize;
+        let req = RecRequest {
+            id,
+            tokens: (0..len).map(|_| rng.below(60) as u32).collect(),
+            arrival_ns: now_ns(),
+            user_id: id % 3,
+        };
+        let out = e.run_request(&req).unwrap();
+        assert!(!out.items.is_empty(), "request {id} got nothing");
+    }
+    assert_eq!(
+        Counters::get(&e.counters.spec_drafts),
+        12,
+        "one probe per request at full acceptance"
+    );
+    assert_eq!(
+        Counters::get(&e.counters.spec_accepts),
+        24,
+        "both future levels accepted for every request"
+    );
+    assert_eq!(
+        Counters::get(&e.counters.spec_steps_saved),
+        Counters::get(&e.counters.spec_accepts)
+    );
+    assert_eq!(
+        Counters::get(&e.counters.decode_steps),
+        36,
+        "12 requests × 3 logical steps, saved or not"
+    );
 }
 
 fn run_coordinator(chunk: usize) -> (HashMap<u64, Vec<[u32; 3]>>, xgr::coordinator::BackendStats) {

@@ -1,36 +1,52 @@
 //! Fixture: a miniature telemetry chain (Counters struct + every
 //! surface the `counters-wired` rule checks, bundled in one file).
-//! `requests_done` is wired everywhere; `ghost_counter` is declared in
-//! the struct but never folded, merged, exported or summarized — the
-//! rule must report it once per missing surface.
+//! `requests_done` and `spec_drafts` are wired everywhere;
+//! `ghost_counter` is declared in the struct but never folded, merged,
+//! exported or summarized — the rule must report it once per missing
+//! surface; `spec_steps_saved` is wired everywhere EXCEPT `merge`, so
+//! the rule must report exactly that one gap.
 
 pub struct Counters {
     pub requests_done: AtomicU64,
     pub ghost_counter: AtomicU64,
+    pub spec_drafts: AtomicU64,
+    pub spec_steps_saved: AtomicU64,
 }
 
 impl Counters {
     pub fn fold_into(&self, into: &Counters) {
         add!(requests_done);
+        add!(spec_drafts);
+        add!(spec_steps_saved);
     }
 }
 
 impl BackendStats {
     pub fn from_counters(c: &Counters) -> Self {
-        BackendStats { requests_done: g(&c.requests_done) }
+        BackendStats {
+            requests_done: g(&c.requests_done),
+            spec_drafts: g(&c.spec_drafts),
+            spec_steps_saved: g(&c.spec_steps_saved),
+        }
     }
 
     pub fn merge(&mut self, o: &BackendStats) {
         self.requests_done += o.requests_done;
+        self.spec_drafts += o.spec_drafts;
     }
 
     fn emit_prometheus(&self, out: &mut String, labels: &str) {
         counter!(requests_done);
+        counter!(spec_drafts);
+        counter!(spec_steps_saved);
     }
 }
 
 impl ReplayReport {
     pub fn summary(&self) -> String {
-        format!("completed={}", self.completed)
+        format!(
+            "completed={} spec_drafts={} spec_steps_saved={}",
+            self.completed, self.spec_drafts, self.spec_steps_saved
+        )
     }
 }

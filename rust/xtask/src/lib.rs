@@ -841,11 +841,23 @@ mod tests {
                 && x.msg.contains("ghost_counter")),
             "{v:?}"
         );
-        // the wired field is not reported
+        // the wired fields are not reported
         assert!(
             !v.iter().any(|x| x.msg.contains("`requests_done`")),
             "{v:?}"
         );
+        assert!(
+            !v.iter().any(|x| x.msg.contains("`spec_drafts`")),
+            "{v:?}"
+        );
+        // `spec_steps_saved` is wired everywhere except `merge`: the
+        // rule must name exactly that one gap
+        let gaps: Vec<_> = v
+            .iter()
+            .filter(|x| x.msg.contains("`spec_steps_saved`"))
+            .collect();
+        assert_eq!(gaps.len(), 1, "{v:?}");
+        assert!(gaps[0].msg.contains("fn merge"), "{v:?}");
     }
 
     #[test]
